@@ -1,0 +1,78 @@
+//! Quickstart — the end-to-end driver: train the HAR MLP on a synthetic
+//! data stream with full Titan (coarse filter + C-IS + pipeline), compare
+//! against random selection, and print both loss curves.
+//!
+//! This is the EXPERIMENTS.md §End-to-end run:
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use titan::config::{presets, Method};
+use titan::coordinator::{pipeline, sequential};
+use titan::util::logging;
+
+fn main() -> titan::Result<()> {
+    logging::init();
+    let rounds: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+
+    println!("== Titan quickstart: HAR MLP, {rounds} rounds, stream 100/round ==\n");
+
+    // Baseline: random selection, sequential (how the paper deploys RS).
+    let mut rs_cfg = presets::table1("mlp", Method::Rs);
+    rs_cfg.rounds = rounds;
+    rs_cfg.eval_every = (rounds / 15).max(5);
+    let (rs, _) = sequential::run(&rs_cfg)?;
+
+    // Titan: coarse filter -> C-IS -> pipelined co-execution.
+    let mut ti_cfg = presets::table1("mlp", Method::Titan);
+    ti_cfg.rounds = rounds;
+    ti_cfg.eval_every = rs_cfg.eval_every;
+    let (ti, _) = pipeline::run(&ti_cfg)?;
+
+    println!("loss/accuracy curves (test set):");
+    println!(
+        "{:>6} | {:>10} {:>8} | {:>10} {:>8}",
+        "round", "RS loss", "RS acc", "Titan loss", "T acc"
+    );
+    for (a, b) in rs.curve.iter().zip(ti.curve.iter()) {
+        println!(
+            "{:>6} | {:>10.4} {:>7.2}% | {:>10.4} {:>7.2}%",
+            a.round,
+            a.test_loss,
+            a.test_accuracy * 100.0,
+            b.test_loss,
+            b.test_accuracy * 100.0
+        );
+    }
+
+    let target = rs.final_accuracy * 0.98; // see exp::TARGET_FRAC
+    let rs_t = rs.time_to_accuracy_device(target).unwrap_or(rs.total_device_ms);
+    let ti_t = ti.time_to_accuracy_device(target).unwrap_or(ti.total_device_ms);
+    println!("\nsummary:");
+    println!(
+        "  RS    final acc {:.2}%  device time {:.1}s  energy {:.0} J",
+        rs.final_accuracy * 100.0,
+        rs.total_device_ms / 1e3,
+        rs.energy_j
+    );
+    println!(
+        "  Titan final acc {:.2}%  device time {:.1}s  energy {:.0} J",
+        ti.final_accuracy * 100.0,
+        ti.total_device_ms / 1e3,
+        ti.energy_j
+    );
+    println!(
+        "  time-to-RS-accuracy: Titan/RS = {:.2}x  (paper: 0.57-0.77x)",
+        ti_t / rs_t.max(1e-9)
+    );
+    println!(
+        "  per-sample processing delay: {:.3} ms host ({} samples)",
+        ti.processing_delay.mean_ms(),
+        ti.processing_delay.count()
+    );
+    Ok(())
+}

@@ -1,0 +1,224 @@
+"""AOT compile path: lower every model variant's functional surface to HLO
+text artifacts consumed by the Rust coordinator.
+
+Python runs ONCE, here. The interchange format is **HLO text**, not
+serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction
+ids which xla_extension 0.5.1 (what the published `xla` crate binds)
+rejects (`proto.id() <= INT_MAX`). The text parser reassigns ids and
+round-trips cleanly — see /opt/xla-example/README.md.
+
+Per variant, artifacts/<variant>/ receives:
+
+    train_step.hlo.txt        (params, x[B,D], y[B,C], w[B], lr[]) -> (params', loss)
+    features_b<k>.hlo.txt     (params, x[Bf,D])                -> (feats[Bf,Fk],)
+    importance.hlo.txt        (params, x[N,D], y[N,C], mask[N])-> (norms[N], K[N,N])
+    eval.hlo.txt              (params, x[E,D], y[E,C])         -> (loss_sum, correct)
+    init_params.bin           f32 LE initial parameters
+    meta.json                 shapes/dims contract for the Rust loader
+    golden.json               deterministic input/output pairs for the
+                              cross-language numerics integration test
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--variants mlp,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def det_input(n: int, d: int, scale: float = 1.0) -> np.ndarray:
+    """Deterministic pseudo-input reproduced bit-for-bit by the Rust tests:
+    x[i, j] = sin(0.1 * (i * d + j + 1)) * scale, computed in f64, cast f32.
+    """
+    idx = np.arange(n * d, dtype=np.float64) + 1.0
+    return (np.sin(0.1 * idx) * scale).astype(np.float32).reshape(n, d)
+
+
+def det_onehot(n: int, c: int) -> np.ndarray:
+    y = np.zeros((n, c), dtype=np.float32)
+    y[np.arange(n), np.arange(n) % c] = 1.0
+    return y
+
+
+def build_variant(mdef: M.ModelDef, out_dir: str) -> None:
+    vdir = os.path.join(out_dir, mdef.name)
+    os.makedirs(vdir, exist_ok=True)
+    flat, unravel = M.init_flat(mdef, seed=0)
+    p = int(flat.shape[0])
+    d = mdef.input_dim
+    c = mdef.num_classes
+    fdims = M.block_feature_dims(mdef)
+
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+
+    def lower_to(fname: str, fn, *shapes) -> None:
+        text = to_hlo_text(jax.jit(fn).lower(*shapes))
+        with open(os.path.join(vdir, fname), "w") as f:
+            f.write(text)
+        print(f"  {mdef.name}/{fname}: {len(text)} chars")
+
+    # train_step at the default batch plus the Fig. 2(b) comparison batch
+    step = M.make_train_step(mdef, unravel)
+    lower_to(
+        "train_step.hlo.txt", step,
+        sd((p,), f32), sd((M.TRAIN_BATCH, d), f32),
+        sd((M.TRAIN_BATCH, c), f32), sd((M.TRAIN_BATCH,), f32), sd((), f32),
+    )
+    for b in M.TRAIN_BATCHES_EXTRA:
+        lower_to(
+            f"train_step_b{b}.hlo.txt", step,
+            sd((p,), f32), sd((b, d), f32), sd((b, c), f32),
+            sd((b,), f32), sd((), f32),
+        )
+
+    # features at every trunk depth (Fig. 8 sweeps the depth)
+    for k in range(1, len(fdims) + 1):
+        feats = M.make_features(mdef, unravel, n_blocks=k)
+        lower_to(
+            f"features_b{k}.hlo.txt", feats,
+            sd((p,), f32), sd((M.FILTER_CHUNK, d), f32),
+        )
+
+    # importance (contains the L1 Pallas kernels)
+    imp = M.make_importance(mdef, unravel)
+    lower_to(
+        "importance.hlo.txt", imp,
+        sd((p,), f32), sd((M.CAND_MAX, d), f32),
+        sd((M.CAND_MAX, c), f32), sd((M.CAND_MAX,), f32),
+    )
+
+    # probe (per-candidate loss/entropy for the heuristic baselines)
+    probe = M.make_probe(mdef, unravel)
+    lower_to(
+        "probe.hlo.txt", probe,
+        sd((p,), f32), sd((M.CAND_MAX, d), f32),
+        sd((M.CAND_MAX, c), f32), sd((M.CAND_MAX,), f32),
+    )
+
+    # eval
+    ev = M.make_evaluate(mdef, unravel)
+    lower_to(
+        "eval.hlo.txt", ev,
+        sd((p,), f32), sd((M.EVAL_CHUNK, d), f32), sd((M.EVAL_CHUNK, c), f32),
+    )
+
+    # initial parameters
+    np.asarray(flat, dtype="<f4").tofile(os.path.join(vdir, "init_params.bin"))
+
+    # contract for the Rust loader
+    meta = {
+        "name": mdef.name,
+        "param_count": p,
+        "input_dim": d,
+        "input_shape": list(mdef.input_shape),
+        "num_classes": c,
+        "h_dim": mdef.h_dim,
+        "block_dims": fdims,
+        "train_batch": M.TRAIN_BATCH,
+        "train_batches": [M.TRAIN_BATCH] + M.TRAIN_BATCHES_EXTRA,
+        "filter_chunk": M.FILTER_CHUNK,
+        "cand_max": M.CAND_MAX,
+        "eval_chunk": M.EVAL_CHUNK,
+    }
+    with open(os.path.join(vdir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+
+    # golden numerics for the Rust integration test
+    golden = make_golden(mdef, flat, unravel, d, c)
+    with open(os.path.join(vdir, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=2)
+
+
+def make_golden(mdef, flat, unravel, d, c):
+    """Run the exact functions being lowered on deterministic inputs and
+    record outputs. The Rust side regenerates the same inputs and asserts
+    allclose after executing the compiled HLO."""
+    step = M.make_train_step(mdef, unravel)
+    imp = M.make_importance(mdef, unravel)
+    ev = M.make_evaluate(mdef, unravel)
+    feats1 = M.make_features(mdef, unravel, n_blocks=1)
+    probe = M.make_probe(mdef, unravel)
+
+    xb = jnp.array(det_input(M.TRAIN_BATCH, d))
+    yb = jnp.array(det_onehot(M.TRAIN_BATCH, c))
+    lr = jnp.float32(0.05)
+    wb = jnp.ones((M.TRAIN_BATCH,), jnp.float32)
+    p1, loss = step(flat, xb, yb, wb, lr)
+
+    xn = jnp.array(det_input(M.CAND_MAX, d))
+    yn = jnp.array(det_onehot(M.CAND_MAX, c))
+    mask = jnp.array((np.arange(M.CAND_MAX) < 30).astype(np.float32))
+    norms, k = imp(flat, xn, yn, mask)
+
+    xe = jnp.array(det_input(M.EVAL_CHUNK, d))
+    ye = jnp.array(det_onehot(M.EVAL_CHUNK, c))
+    ls, corr = ev(flat, xe, ye)
+
+    xf = jnp.array(det_input(M.FILTER_CHUNK, d))
+    (fb,) = feats1(flat, xf)
+
+    pl, pe = probe(flat, xn, yn, mask)
+
+    return {
+        "probe_loss_head": [float(v) for v in np.asarray(pl)[:8]],
+        "probe_entropy_head": [float(v) for v in np.asarray(pe)[:8]],
+        "lr": 0.05,
+        "mask_valid": 30,
+        "loss_step0": float(loss),
+        "params_l2_after_step": float(jnp.linalg.norm(p1)),
+        "norms_head": [float(v) for v in np.asarray(norms)[:8]],
+        "k_sum": float(jnp.sum(k)),
+        "k_trace": float(jnp.trace(k)),
+        "eval_loss_sum": float(ls),
+        "eval_correct": float(corr),
+        "feats_b1_sum": float(jnp.sum(fb)),
+        "feats_b1_head": [float(v) for v in np.asarray(fb).reshape(-1)[:8]],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--variants", default=",".join(M.VARIANTS.keys()),
+                    help="comma-separated subset of: " + ",".join(M.VARIANTS))
+    # legacy single-file mode used by the original scaffold Makefile
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir if args.out is None else os.path.dirname(args.out) or ".")
+    os.makedirs(out_dir, exist_ok=True)
+    names = [v for v in args.variants.split(",") if v]
+    for name in names:
+        if name not in M.VARIANTS:
+            sys.exit(f"unknown variant {name!r}; have {list(M.VARIANTS)}")
+        print(f"[aot] lowering {name} ...")
+        build_variant(M.VARIANTS[name], out_dir)
+    # stamp file so `make artifacts` can be a cheap no-op
+    with open(os.path.join(out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print(f"[aot] artifacts in {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

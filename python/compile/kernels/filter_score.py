@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: coarse-grained filter scoring (Rep + Div).
+
+Scores a chunk of streaming samples against the per-class running
+estimators maintained by the L3 coordinator:
+
+    score(x, y) = lam * Rep(x, y) + (1 - lam) * Div(x, y)
+    Rep(x, y)   = -||f - c_y||^2
+    Div(x, y)   =  ||f||^2 + m2_y - 2 <f, c_y>
+
+with c_y the class feature centroid and m2_y = E||f'||^2 the class mean
+squared feature norm. The class lookup is expressed as the one-hot matmuls
+`onehot @ centroids` / `onehot @ m2` so the whole scorer is a single
+MXU matmul + VPU arithmetic — no gather, which keeps the TPU lowering
+trivial (gathers are the classic Pallas-on-TPU footgun).
+
+lam is a traced [1] input (not a compile-time constant) so the same AOT
+artifact serves every filter configuration; lam = 0.5 reproduces the
+paper's degenerate unweighted sum (see DESIGN.md §Discrepancies).
+
+interpret=True as everywhere: CPU PJRT cannot run Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Streaming chunks are small (<=32); a single grid step holds everything in
+# VMEM: feats[B,F] + centroids[C,F] + outputs ~ a few KiB.
+ROW_TILE = 32
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _score_kernel(f_ref, cen_ref, m2_ref, y_ref, lam_ref, out_ref):
+    """One grid step over a row tile of the streaming chunk."""
+    f = f_ref[...]
+    y = y_ref[...]
+    c = jax.lax.dot_general(
+        y, cen_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m2 = jnp.sum(y * m2_ref[...][None, :], axis=-1)
+    fn2 = jnp.sum(f * f, axis=-1)
+    cn2 = jnp.sum(c * c, axis=-1)
+    fc = jnp.sum(f * c, axis=-1)
+    lam = lam_ref[0]
+    rep = -(fn2 - 2.0 * fc + cn2)
+    div = fn2 + m2 - 2.0 * fc
+    out_ref[...] = lam * rep + (1.0 - lam) * div
+
+
+def repdiv_score(feats, centroids, mean_norm2, onehot, lam, *, tile: int = ROW_TILE):
+    """Rep+Div scores [B] for a feature chunk [B,F] against class stats.
+
+    Args:
+      feats:      [B, F] shallow-layer features of the streaming chunk.
+      centroids:  [C, F] running class centroids (from L3 estimators).
+      mean_norm2: [C]    running class mean squared feature norm.
+      onehot:     [B, C] labels of the chunk.
+      lam:        [1]    Rep weight in [0, 1].
+    """
+    b, f = feats.shape
+    c = centroids.shape[0]
+    t = min(tile, b)
+    return pl.pallas_call(
+        _score_kernel,
+        grid=(_ceil_div(b, t),),
+        in_specs=[
+            pl.BlockSpec((t, f), lambda i: (i, 0)),
+            pl.BlockSpec((c, f), lambda i: (0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((t, c), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((t,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(
+        feats.astype(jnp.float32),
+        centroids.astype(jnp.float32),
+        mean_norm2.astype(jnp.float32),
+        onehot.astype(jnp.float32),
+        lam.astype(jnp.float32),
+    )

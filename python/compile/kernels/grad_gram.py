@@ -1,0 +1,140 @@
+"""L1 Pallas kernels: fused per-sample gradient norms + gradient Gram matrix.
+
+This is the selection hot-spot of Titan's fine-grained stage. Given the
+penultimate features `h` and logits `z` of the N candidate samples, the
+coordinator needs
+
+    norms[i]  = ||g_i||                    (intra-class sampling, Eq. 3)
+    K[i, j]   = <g_i, g_j>                 (class importance, Eq. 2; Fig. 5)
+
+where g_i is the last-layer (W, b) gradient of softmax cross-entropy. The
+factorization <g_i, g_j> = (d_i . d_j) * (1 + h_i . h_j) with
+d = softmax(z) - y turns the whole computation into two MXU-shaped matmuls
+and a VPU elementwise combine — no per-sample backprop anywhere.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the Gram kernel runs a
+2-D grid over K output tiles. Each grid step loads a row block and a column
+block of (delta | h) into VMEM via BlockSpec and performs
+
+    K_tile = (Dr @ Dc^T) * (1 + Hr @ Hc^T)
+
+which is the TPU analogue of the "one threadblock per output tile" GPU
+schedule. Delta is computed once (row-tiled pass 1) instead of being
+recomputed per Gram tile: at N=100 the recompute would be cheap, but the
+two-pass structure keeps each kernel's VMEM footprint independent of N.
+
+Kernels are lowered with interpret=True everywhere in this repo: the CPU
+PJRT plugin cannot execute Mosaic custom-calls. BlockSpecs are still real,
+so the HBM<->VMEM schedule is exercised by the interpreter.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row/column tile for the Gram grid. 64 keeps the five VMEM-resident tiles
+# (Dr, Hr, Dc, Hc, K_tile) under ~200 KiB at F<=128 while staying
+# MXU-friendly (>= 8x128 lanes after padding).
+TILE = 64
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _delta_norm_kernel(z_ref, y_ref, mask_ref, h_ref, d_ref, hn2_ref):
+    """Pass-1 grid step over row tiles: stabilized softmax -> masked delta.
+
+    Also emits ||h_i||^2 so `grad_gram` can form the norms without touching
+    diag(K) (no diagonal special case in pass 2).
+    """
+    z = z_ref[...]
+    m = jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    d_ref[...] = (p - y_ref[...]) * mask_ref[...][:, None]
+    h = h_ref[...]
+    hn2_ref[...] = jnp.sum(h * h, axis=-1)
+
+
+def _gram_kernel(d_ref, h_ref, dt_ref, ht_ref, k_ref):
+    """Pass-2 grid step (i, j): one TILE x TILE output tile of K.
+
+    d_ref/h_ref are the row blocks (grid index i), dt_ref/ht_ref the column
+    blocks (grid index j). Two matmuls on the MXU, one VPU combine.
+    """
+    dd = jax.lax.dot_general(
+        d_ref[...], dt_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    hh = jax.lax.dot_general(
+        h_ref[...], ht_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    k_ref[...] = dd * (1.0 + hh)
+
+
+def delta_and_hnorm2(logits, onehot, h, mask, *, tile: int = TILE):
+    """Pallas pass 1: masked delta [N,C] and feature norms^2 [N]."""
+    n, c = logits.shape
+    f = h.shape[1]
+    t = min(tile, n)
+    return pl.pallas_call(
+        _delta_norm_kernel,
+        grid=(_ceil_div(n, t),),
+        in_specs=[
+            pl.BlockSpec((t, c), lambda i: (i, 0)),
+            pl.BlockSpec((t, c), lambda i: (i, 0)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((t, f), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((t, c), lambda i: (i, 0)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, c), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(
+        logits.astype(jnp.float32),
+        onehot.astype(jnp.float32),
+        mask.astype(jnp.float32),
+        h.astype(jnp.float32),
+    )
+
+
+def gram(delta, h, *, tile: int = TILE):
+    """Pallas pass 2: K = (D D^T) * (1 + H H^T), tiled (tile x tile)."""
+    n, c = delta.shape
+    f = h.shape[1]
+    t = min(tile, n)
+    hf = h.astype(jnp.float32)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(_ceil_div(n, t), _ceil_div(n, t)),
+        in_specs=[
+            pl.BlockSpec((t, c), lambda i, j: (i, 0)),
+            pl.BlockSpec((t, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((t, c), lambda i, j: (j, 0)),
+            pl.BlockSpec((t, f), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, t), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(delta, hf, delta, hf)
+
+
+def grad_gram(logits, onehot, h, mask, *, tile: int = TILE):
+    """Fused entry point used by L2's `importance` graph: (norms[N], K[N,N]).
+
+    norms come from the pass-1 outputs via ||d_i||^2 * (1 + ||h_i||^2); they
+    agree with sqrt(diag K) to f32 rounding (pinned by tests).
+    """
+    delta, hn2 = delta_and_hnorm2(logits, onehot, h, mask, tile=tile)
+    dn2 = jnp.sum(delta * delta, axis=-1)
+    norms = jnp.sqrt(dn2 * (1.0 + hn2))
+    return norms, gram(delta, h, tile=tile)

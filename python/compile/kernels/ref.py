@@ -1,0 +1,87 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Everything the kernels compute is defined here in the most direct (and
+slowest) jnp form. The pytest suite asserts `assert_allclose(kernel, ref)`
+across shape/dtype sweeps — this file is the correctness ground truth.
+
+Math recap (see DESIGN.md "Key math"): for softmax cross-entropy with
+penultimate features h_i and one-hot labels y_i, the last-layer gradient of
+sample i is g_i = [delta_i (x) h_i ; delta_i] with delta_i = p_i - y_i, so
+
+    <g_i, g_j> = (delta_i . delta_j) * (1 + h_i . h_j)     (Gram matrix K)
+    ||g_i||^2  = ||delta_i||^2 * (1 + ||h_i||^2)           (norms = sqrt diag K)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def softmax(logits: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise, numerically stabilized softmax."""
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def delta_ref(logits: jnp.ndarray, onehot: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Masked softmax-CE logit gradient: (softmax(z) - y) * mask[:, None].
+
+    Masked-out rows (mask == 0) produce an all-zero delta row, which zeroes
+    the corresponding K rows/columns and norms downstream.
+    """
+    return (softmax(logits) - onehot) * mask[:, None]
+
+
+def grad_norms_ref(
+    logits: jnp.ndarray, onehot: jnp.ndarray, h: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Per-sample last-layer gradient norms ||g_i|| (weight + bias terms)."""
+    d = delta_ref(logits, onehot, mask)
+    dn2 = jnp.sum(d * d, axis=-1)
+    hn2 = jnp.sum(h * h, axis=-1)
+    return jnp.sqrt(dn2 * (1.0 + hn2))
+
+
+def gram_ref(
+    logits: jnp.ndarray, onehot: jnp.ndarray, h: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Pairwise gradient Gram matrix K[i,j] = <g_i, g_j>."""
+    d = delta_ref(logits, onehot, mask)
+    return (d @ d.T) * (1.0 + h @ h.T)
+
+
+def grad_gram_ref(logits, onehot, h, mask):
+    """(norms, K) exactly as the fused kernel pipeline returns them.
+
+    norms are taken from sqrt(diag K) so the two outputs are always
+    mutually consistent (same rounding path as the kernel contract).
+    """
+    k = gram_ref(logits, onehot, h, mask)
+    return jnp.sqrt(jnp.maximum(jnp.diagonal(k), 0.0)), k
+
+
+def repdiv_ref(
+    feats: jnp.ndarray,
+    centroids: jnp.ndarray,
+    mean_norm2: jnp.ndarray,
+    onehot: jnp.ndarray,
+    lam: jnp.ndarray,
+) -> jnp.ndarray:
+    """Coarse-filter score: lam * Rep + (1 - lam) * Div, per sample.
+
+    Rep(x,y) = -||f - c_y||^2
+    Div(x,y) =  ||f||^2 + E||f'||^2 - 2 <f, c_y>
+
+    NOTE the paper's unweighted sum (lam = 0.5, up to scale) collapses to a
+    per-class constant (E||f'||^2 - ||c_y||^2) / 2 — see DESIGN.md
+    §Discrepancies. A unit test pins this cancellation.
+    """
+    c = onehot @ centroids  # [B, F] class centroid per sample
+    m2 = onehot @ mean_norm2  # [B]   class mean feature norm^2
+    fn2 = jnp.sum(feats * feats, axis=-1)
+    cn2 = jnp.sum(c * c, axis=-1)
+    fc = jnp.sum(feats * c, axis=-1)
+    rep = -(fn2 - 2.0 * fc + cn2)
+    div = fn2 + m2 - 2.0 * fc
+    return lam * rep + (1.0 - lam) * div

@@ -1,0 +1,463 @@
+"""L2: JAX model zoo for the Titan reproduction (build-time only).
+
+Six functional model variants mirroring the paper's six rows (Table 1),
+scaled to edge/CPU size but architecturally faithful (see DESIGN.md
+§Substitutions):
+
+    mlp        - HAR  MLP 900-128-64-6            (paper: MLP)
+    tinyalex   - IC   conv5x5 stack + dense head  (paper: AlexNet)
+    mobilenet  - IC   depthwise-separable blocks  (paper: MobileNetV1)
+    squeeze    - IC   fire modules                (paper: SqueezeNet)
+    resnet_ic  - IC   residual blocks             (paper: ResNet50)
+    resnet_ar  - AR   residual blocks, 1ch input  (paper: ResNet34)
+
+Every variant exposes the same functional surface, which is all the L3
+coordinator ever sees (through the AOT artifacts):
+
+    train_step(params_flat, x, y_onehot, lr)    -> (params_flat', loss)
+    features_k(params_flat, x)                  -> block-k features  (filter)
+    importance(params_flat, x, y_onehot, mask)  -> (norms, K)        (C-IS)
+    evaluate(params_flat, x, y_onehot)          -> (loss_sum, correct)
+
+Parameters cross the Rust boundary as one flat f32 vector; the pytree
+structure lives only inside the lowered HLO (ravel_pytree's unravel closure
+is baked into the jitted function). `importance` calls the L1 Pallas
+kernels so they lower into the same HLO module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.flatten_util import ravel_pytree
+
+from .kernels.grad_gram import grad_gram
+
+Params = Dict[str, jnp.ndarray]
+
+# Batch geometry shared with the Rust side (recorded in meta.json).
+TRAIN_BATCH = 10    # |B|: paper's on-device training batch size
+TRAIN_BATCHES_EXTRA = [25]  # extra train_step lowerings (paper Fig. 2b)
+FILTER_CHUNK = 25   # streaming samples scored per features() call
+CAND_MAX = 100      # importance N (mask handles smaller candidate sets)
+EVAL_CHUNK = 200    # test-set evaluation chunk
+
+
+# --------------------------------------------------------------------------
+# Initialization helpers
+# --------------------------------------------------------------------------
+
+def _he_conv(key, out_c: int, in_c: int, kh: int, kw: int) -> jnp.ndarray:
+    """He-normal conv kernel, OIHW layout."""
+    fan_in = in_c * kh * kw
+    std = jnp.sqrt(2.0 / fan_in)
+    return jax.random.normal(key, (out_c, in_c, kh, kw), jnp.float32) * std
+
+
+def _he_dense(key, n_in: int, n_out: int) -> jnp.ndarray:
+    std = jnp.sqrt(2.0 / n_in)
+    return jax.random.normal(key, (n_in, n_out), jnp.float32) * std
+
+
+def _conv(x, w, b, stride: int = 1, padding: str = "SAME", groups: int = 1):
+    """NCHW conv + bias. groups=C_in gives a depthwise convolution."""
+    y = lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups,
+    )
+    return y + b[None, :, None, None]
+
+
+def _maxpool2(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def _gap(x):
+    """Global average pool NCHW -> [B, C]."""
+    return jnp.mean(x, axis=(2, 3))
+
+
+def _relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+# --------------------------------------------------------------------------
+# Model definitions
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    """A model variant: init + trunk. The dense head is shared logic.
+
+    trunk(params, x) returns (h, block_feats) where h is the penultimate
+    feature [B, h_dim] feeding the final dense layer, and block_feats is the
+    list of pooled per-block features [B, f_k] used by the coarse filter at
+    depth k (paper Fig. 8 sweeps k).
+    """
+
+    name: str
+    input_shape: Tuple[int, ...]  # per-sample, e.g. (3, 32, 32) or (900,)
+    num_classes: int
+    h_dim: int
+    init: Callable[[jax.Array], Params]
+    trunk: Callable[[Params, jnp.ndarray], Tuple[jnp.ndarray, List[jnp.ndarray]]]
+
+    @property
+    def input_dim(self) -> int:
+        d = 1
+        for s in self.input_shape:
+            d *= s
+        return d
+
+
+def _head_init(key, h_dim: int, num_classes: int) -> Params:
+    kw, _ = jax.random.split(key)
+    return {
+        # 0.1x-scaled head: keeps initial logits near zero (loss ~ log C)
+        # regardless of the trunk's activation scale, so softmax gradients
+        # are healthy from step 0 on every variant.
+        "head_w": _he_dense(kw, h_dim, num_classes) * 0.1,
+        "head_b": jnp.zeros((num_classes,), jnp.float32),
+    }
+
+
+def _reshape_in(mdef: ModelDef, x: jnp.ndarray) -> jnp.ndarray:
+    """Rust always ships x as [B, input_dim]; restore the tensor layout."""
+    return x.reshape((x.shape[0],) + mdef.input_shape)
+
+
+# ----- mlp (HAR) -----------------------------------------------------------
+
+def _mlp_init(key) -> Params:
+    k1, k2, kh = jax.random.split(key, 3)
+    p = {
+        "w1": _he_dense(k1, 900, 128), "b1": jnp.zeros((128,), jnp.float32),
+        "w2": _he_dense(k2, 128, 64), "b2": jnp.zeros((64,), jnp.float32),
+    }
+    p.update(_head_init(kh, 64, 6))
+    return p
+
+
+def _mlp_trunk(p: Params, x: jnp.ndarray):
+    a1 = _relu(x @ p["w1"] + p["b1"])
+    a2 = _relu(a1 @ p["w2"] + p["b2"])
+    return a2, [a1, a2]
+
+
+# ----- tinyalex (IC) -------------------------------------------------------
+
+def _tinyalex_init(key) -> Params:
+    k1, k2, k3, k4, kh = jax.random.split(key, 5)
+    p = {
+        "c1_w": _he_conv(k1, 16, 3, 5, 5), "c1_b": jnp.zeros((16,), jnp.float32),
+        "c2_w": _he_conv(k2, 32, 16, 5, 5), "c2_b": jnp.zeros((32,), jnp.float32),
+        "c3_w": _he_conv(k3, 32, 32, 3, 3), "c3_b": jnp.zeros((32,), jnp.float32),
+        "f1_w": _he_dense(k4, 32 * 4 * 4, 64), "f1_b": jnp.zeros((64,), jnp.float32),
+    }
+    p.update(_head_init(kh, 64, 10))
+    return p
+
+
+def _tinyalex_trunk(p: Params, x: jnp.ndarray):
+    b1 = _maxpool2(_relu(_conv(x, p["c1_w"], p["c1_b"])))       # 16x16x16
+    b2 = _maxpool2(_relu(_conv(b1, p["c2_w"], p["c2_b"])))      # 32x8x8
+    b3 = _maxpool2(_relu(_conv(b2, p["c3_w"], p["c3_b"])))      # 32x4x4
+    h = _relu(b3.reshape(b3.shape[0], -1) @ p["f1_w"] + p["f1_b"])
+    return h, [_gap(b1), _gap(b2), _gap(b3)]
+
+
+# ----- mobilenet (IC) ------------------------------------------------------
+
+def _dwsep_init(key, in_c: int, out_c: int, tag: str) -> Params:
+    kd, kp = jax.random.split(key)
+    return {
+        f"{tag}_dw": _he_conv(kd, in_c, 1, 3, 3),
+        f"{tag}_db": jnp.zeros((in_c,), jnp.float32),
+        f"{tag}_pw": _he_conv(kp, out_c, in_c, 1, 1),
+        f"{tag}_pb": jnp.zeros((out_c,), jnp.float32),
+    }
+
+
+def _dwsep(p: Params, x: jnp.ndarray, tag: str, stride: int = 1):
+    c = x.shape[1]
+    y = _relu(_conv(x, p[f"{tag}_dw"], p[f"{tag}_db"], stride=stride, groups=c))
+    return _relu(_conv(y, p[f"{tag}_pw"], p[f"{tag}_pb"]))
+
+
+def _mobilenet_init(key) -> Params:
+    k1, k2, k3, k4, kh = jax.random.split(key, 5)
+    p = {
+        "c1_w": _he_conv(k1, 16, 3, 3, 3), "c1_b": jnp.zeros((16,), jnp.float32),
+    }
+    p.update(_dwsep_init(k2, 16, 32, "d1"))
+    p.update(_dwsep_init(k3, 32, 64, "d2"))
+    p.update(_dwsep_init(k4, 64, 64, "d3"))
+    p.update(_head_init(kh, 64, 10))
+    return p
+
+
+def _mobilenet_trunk(p: Params, x: jnp.ndarray):
+    b1 = _relu(_conv(x, p["c1_w"], p["c1_b"], stride=2))  # 16x16x16
+    b2 = _dwsep(p, b1, "d1")                              # 32x16x16
+    b3 = _dwsep(p, b2, "d2", stride=2)                    # 64x8x8
+    b4 = _dwsep(p, b3, "d3")                              # 64x8x8
+    h = _gap(b4)
+    return h, [_gap(b1), _gap(b2), _gap(b3), h]
+
+
+# ----- squeeze (IC) --------------------------------------------------------
+
+def _fire_init(key, in_c: int, sq: int, ex: int, tag: str) -> Params:
+    ks, k1, k3 = jax.random.split(key, 3)
+    return {
+        f"{tag}_sw": _he_conv(ks, sq, in_c, 1, 1),
+        f"{tag}_sb": jnp.zeros((sq,), jnp.float32),
+        f"{tag}_e1w": _he_conv(k1, ex, sq, 1, 1),
+        f"{tag}_e1b": jnp.zeros((ex,), jnp.float32),
+        f"{tag}_e3w": _he_conv(k3, ex, sq, 3, 3),
+        f"{tag}_e3b": jnp.zeros((ex,), jnp.float32),
+    }
+
+
+def _fire(p: Params, x: jnp.ndarray, tag: str):
+    s = _relu(_conv(x, p[f"{tag}_sw"], p[f"{tag}_sb"]))
+    e1 = _relu(_conv(s, p[f"{tag}_e1w"], p[f"{tag}_e1b"]))
+    e3 = _relu(_conv(s, p[f"{tag}_e3w"], p[f"{tag}_e3b"]))
+    return jnp.concatenate([e1, e3], axis=1)
+
+
+def _squeeze_init(key) -> Params:
+    k1, k2, k3, kh = jax.random.split(key, 4)
+    p = {
+        "c1_w": _he_conv(k1, 24, 3, 3, 3), "c1_b": jnp.zeros((24,), jnp.float32),
+    }
+    p.update(_fire_init(k2, 24, 8, 16, "f1"))
+    p.update(_fire_init(k3, 32, 8, 24, "f2"))
+    p.update(_head_init(kh, 48, 10))
+    return p
+
+
+def _squeeze_trunk(p: Params, x: jnp.ndarray):
+    b1 = _relu(_conv(x, p["c1_w"], p["c1_b"], stride=2))  # 24x16x16
+    b2 = _maxpool2(_fire(p, b1, "f1"))                    # 32x8x8
+    b3 = _fire(p, b2, "f2")                               # 48x8x8
+    h = _gap(b3)
+    return h, [_gap(b1), _gap(b2), h]
+
+
+# ----- resnets -------------------------------------------------------------
+
+def _resblock_init(key, in_c: int, out_c: int, tag: str) -> Params:
+    k1, _k2, kp = jax.random.split(key, 3)
+    p = {
+        f"{tag}_w1": _he_conv(k1, out_c, in_c, 3, 3),
+        f"{tag}_b1": jnp.zeros((out_c,), jnp.float32),
+        # zero-init the residual branch's second conv: each block is the
+        # identity at init, keeping activation variance (and the initial
+        # logit scale) bounded through the residual chain — without this
+        # the 20-class audio resnet starts at loss ~20 (softmax saturated)
+        # and cannot escape.
+        f"{tag}_w2": jnp.zeros((out_c, out_c, 3, 3), jnp.float32),
+        f"{tag}_b2": jnp.zeros((out_c,), jnp.float32),
+    }
+    if in_c != out_c:
+        p[f"{tag}_pw"] = _he_conv(kp, out_c, in_c, 1, 1)
+        p[f"{tag}_pb"] = jnp.zeros((out_c,), jnp.float32)
+    return p
+
+
+def _resblock(p: Params, x: jnp.ndarray, tag: str, stride: int = 1):
+    y = _relu(_conv(x, p[f"{tag}_w1"], p[f"{tag}_b1"], stride=stride))
+    y = _conv(y, p[f"{tag}_w2"], p[f"{tag}_b2"])
+    if f"{tag}_pw" in p or stride != 1:
+        sc = _conv(x, p[f"{tag}_pw"], p[f"{tag}_pb"], stride=stride)
+    else:
+        sc = x
+    return _relu(y + sc)
+
+
+def _resnet_ic_init(key) -> Params:
+    k1, k2, k3, k4, k5, kh = jax.random.split(key, 6)
+    p = {
+        "c1_w": _he_conv(k1, 16, 3, 3, 3), "c1_b": jnp.zeros((16,), jnp.float32),
+    }
+    p.update(_resblock_init(k2, 16, 16, "r1"))
+    p.update(_resblock_init(k3, 16, 32, "r2"))
+    p.update(_resblock_init(k4, 32, 32, "r3"))
+    p.update(_resblock_init(k5, 32, 64, "r4"))
+    p.update(_head_init(kh, 64, 10))
+    return p
+
+
+def _resnet_ic_trunk(p: Params, x: jnp.ndarray):
+    b1 = _relu(_conv(x, p["c1_w"], p["c1_b"]))            # 16x32x32
+    b2 = _resblock(p, b1, "r1")                           # 16x32x32
+    b3 = _resblock(p, b2, "r2", stride=2)                 # 32x16x16
+    b4 = _resblock(p, b3, "r3")                           # 32x16x16
+    b5 = _resblock(p, b4, "r4", stride=2)                 # 64x8x8
+    h = _gap(b5)
+    return h, [_gap(b1), _gap(b2), _gap(b3), _gap(b4), h]
+
+
+def _resnet_ar_init(key) -> Params:
+    k1, k2, k3, k4, kh = jax.random.split(key, 5)
+    p = {
+        "c1_w": _he_conv(k1, 16, 1, 3, 3), "c1_b": jnp.zeros((16,), jnp.float32),
+    }
+    p.update(_resblock_init(k2, 16, 16, "r1"))
+    p.update(_resblock_init(k3, 16, 32, "r2"))
+    p.update(_resblock_init(k4, 32, 32, "r3"))
+    p.update(_head_init(kh, 32, 20))
+    return p
+
+
+def _resnet_ar_trunk(p: Params, x: jnp.ndarray):
+    b1 = _relu(_conv(x, p["c1_w"], p["c1_b"], stride=2))  # 16x20x20
+    b2 = _resblock(p, b1, "r1")                           # 16x20x20
+    b3 = _resblock(p, b2, "r2", stride=2)                 # 32x10x10
+    b4 = _resblock(p, b3, "r3")                           # 32x10x10
+    h = _gap(b4)
+    return h, [_gap(b1), _gap(b2), _gap(b3), h]
+
+
+VARIANTS: Dict[str, ModelDef] = {
+    "mlp": ModelDef("mlp", (900,), 6, 64, _mlp_init, _mlp_trunk),
+    "tinyalex": ModelDef("tinyalex", (3, 32, 32), 10, 64, _tinyalex_init, _tinyalex_trunk),
+    "mobilenet": ModelDef("mobilenet", (3, 32, 32), 10, 64, _mobilenet_init, _mobilenet_trunk),
+    "squeeze": ModelDef("squeeze", (3, 32, 32), 10, 48, _squeeze_init, _squeeze_trunk),
+    "resnet_ic": ModelDef("resnet_ic", (3, 32, 32), 10, 64, _resnet_ic_init, _resnet_ic_trunk),
+    "resnet_ar": ModelDef("resnet_ar", (1, 40, 40), 20, 32, _resnet_ar_init, _resnet_ar_trunk),
+}
+
+
+# --------------------------------------------------------------------------
+# Shared functional surface (what gets lowered to HLO)
+# --------------------------------------------------------------------------
+
+def init_flat(mdef: ModelDef, seed: int = 0) -> Tuple[jnp.ndarray, Callable]:
+    """Initialize a variant; returns (params_flat, unravel)."""
+    params = mdef.init(jax.random.PRNGKey(seed))
+    flat, unravel = ravel_pytree(params)
+    return flat.astype(jnp.float32), unravel
+
+
+def logits_and_h(mdef: ModelDef, unravel, params_flat, x):
+    p = unravel(params_flat)
+    h, _ = mdef.trunk(p, _reshape_in(mdef, x))
+    z = h @ p["head_w"] + p["head_b"]
+    return z, h
+
+
+def ce_loss(logits: jnp.ndarray, onehot: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy (stable log-softmax)."""
+    zmax = jnp.max(logits, axis=-1, keepdims=True)
+    logz = zmax + jnp.log(jnp.sum(jnp.exp(logits - zmax), axis=-1, keepdims=True))
+    ll = jnp.sum(onehot * (logits - logz), axis=-1)
+    return -jnp.mean(ll)
+
+
+def make_train_step(mdef: ModelDef, unravel) -> Callable:
+    """Weighted SGD step: (params, x[B,D], y[B,C], w[B], lr[]) -> (params', loss).
+
+    Per-sample weights implement the paper's unbiased estimator (Appendix
+    A.2 eq. (f): each selected sample is weighted by 1/(probability x
+    size)). w = ones reproduces the plain mini-batch mean.
+    """
+
+    def loss_fn(params_flat, x, y, w):
+        z, _ = logits_and_h(mdef, unravel, params_flat, x)
+        zmax = jnp.max(z, axis=-1, keepdims=True)
+        logz = zmax + jnp.log(jnp.sum(jnp.exp(z - zmax), axis=-1, keepdims=True))
+        ll = jnp.sum(y * (z - logz), axis=-1)
+        return -jnp.mean(w * ll)
+
+    def step(params_flat, x, y, w, lr):
+        loss, g = jax.value_and_grad(loss_fn)(params_flat, x, y, w)
+        return (params_flat - lr * g, loss)
+
+    return step
+
+
+def make_features(mdef: ModelDef, unravel, n_blocks: int = 1) -> Callable:
+    """Coarse-filter feature extractor: first n_blocks of the trunk.
+
+    Returns the pooled features of block n_blocks. The full trunk is traced
+    but XLA's dead-code elimination prunes everything past the requested
+    block, so the lowered module really is "the first few layers" (verified
+    by the per-depth latency spread in `exp fig8`).
+    """
+
+    def feats(params_flat, x):
+        p = unravel(params_flat)
+        _, blocks = mdef.trunk(p, _reshape_in(mdef, x))
+        k = min(n_blocks, len(blocks)) - 1
+        return (blocks[k],)
+
+    return feats
+
+
+def make_importance(mdef: ModelDef, unravel) -> Callable:
+    """Fine-grained importance: (params, x[N,D], y[N,C], mask[N]) -> (norms, K).
+
+    One shared forward pass produces h and logits; the L1 Pallas kernels
+    (grad_gram) lower into this same HLO module.
+    """
+
+    def imp(params_flat, x, y, mask):
+        z, h = logits_and_h(mdef, unravel, params_flat, x)
+        norms, k = grad_gram(z, y, h, mask)
+        return (norms, k)
+
+    return imp
+
+
+def make_probe(mdef: ModelDef, unravel) -> Callable:
+    """Per-candidate heuristic scores for the baseline selectors:
+    (params, x[N,D], y[N,C], mask[N]) -> (loss[N], entropy[N]).
+
+    loss  - per-sample softmax CE (LL / HL baselines)
+    entropy - output-distribution entropy (the "CE" baseline)
+    Masked rows return 0 for both.
+    """
+
+    def probe(params_flat, x, y, mask):
+        z, _ = logits_and_h(mdef, unravel, params_flat, x)
+        zmax = jnp.max(z, axis=-1, keepdims=True)
+        logz = zmax + jnp.log(jnp.sum(jnp.exp(z - zmax), axis=-1, keepdims=True))
+        logp = z - logz
+        loss = -jnp.sum(y * logp, axis=-1) * mask
+        p = jnp.exp(logp)
+        ent = -jnp.sum(p * logp, axis=-1) * mask
+        return (loss, ent)
+
+    return probe
+
+
+def make_evaluate(mdef: ModelDef, unravel) -> Callable:
+    """Eval chunk: (params, x[E,D], y[E,C]) -> (loss_sum, correct_count)."""
+
+    def ev(params_flat, x, y):
+        z, _ = logits_and_h(mdef, unravel, params_flat, x)
+        zmax = jnp.max(z, axis=-1, keepdims=True)
+        logz = zmax + jnp.log(jnp.sum(jnp.exp(z - zmax), axis=-1, keepdims=True))
+        ll = jnp.sum(y * (z - logz), axis=-1)
+        pred = jnp.argmax(z, axis=-1)
+        truth = jnp.argmax(y, axis=-1)
+        return (-jnp.sum(ll), jnp.sum((pred == truth).astype(jnp.float32)))
+
+    return ev
+
+
+def block_feature_dims(mdef: ModelDef) -> List[int]:
+    """Static feature dims per trunk block (for meta.json)."""
+    x = jnp.zeros((1,) + mdef.input_shape, jnp.float32)
+    params = mdef.init(jax.random.PRNGKey(0))
+    _, blocks = jax.eval_shape(lambda p, xx: mdef.trunk(p, xx), params, x)
+    return [int(b.shape[1]) for b in blocks]

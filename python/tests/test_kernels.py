@@ -1,0 +1,193 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+The hypothesis sweeps cover shapes/dtypes/magnitudes; the targeted tests
+pin the algebraic identities the coordinator relies on (K symmetry, PSD-ish
+structure, mask zeroing, norms == sqrt(diag K)).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.filter_score import repdiv_score
+from compile.kernels.grad_gram import delta_and_hnorm2, grad_gram, gram
+
+RNG = np.random.default_rng(1234)
+
+
+def _case(n, c, f, scale=1.0, mask_frac=1.0, dtype=np.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    z = (rng.normal(size=(n, c)) * scale).astype(dtype)
+    y = np.eye(c, dtype=dtype)[rng.integers(0, c, n)]
+    h = (rng.normal(size=(n, f)) * scale).astype(dtype)
+    m = (rng.random(n) < mask_frac).astype(dtype)
+    return jnp.array(z), jnp.array(y), jnp.array(h), jnp.array(m)
+
+
+# ---------------------------------------------------------------------------
+# grad_gram kernel
+# ---------------------------------------------------------------------------
+
+shape_strategy = st.tuples(
+    st.integers(min_value=1, max_value=130),  # n (crosses the 64 tile edge)
+    st.integers(min_value=2, max_value=21),   # c
+    st.integers(min_value=1, max_value=96),   # f
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    shape=shape_strategy,
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+    mask_frac=st.sampled_from([0.0, 0.5, 1.0]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_grad_gram_matches_ref(shape, scale, mask_frac, seed):
+    n, c, f = shape
+    z, y, h, m = _case(n, c, f, scale=scale, mask_frac=mask_frac, seed=seed)
+    norms, k = grad_gram(z, y, h, m)
+    rn, rk = ref.grad_gram_ref(z, y, h, m)
+    kscale = max(1.0, float(jnp.max(jnp.abs(rk))))
+    np.testing.assert_allclose(np.asarray(k), np.asarray(rk), atol=2e-4 * kscale, rtol=2e-4)
+    nscale = max(1.0, float(jnp.max(rn)))
+    np.testing.assert_allclose(np.asarray(norms), np.asarray(rn), atol=2e-4 * nscale, rtol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_gram_symmetric(shape, seed):
+    n, c, f = shape
+    z, y, h, m = _case(n, c, f, seed=seed)
+    _, k = grad_gram(z, y, h, m)
+    k = np.asarray(k)
+    np.testing.assert_allclose(k, k.T, atol=1e-5 * max(1.0, np.abs(k).max()))
+
+
+def test_norms_are_sqrt_diag_k():
+    z, y, h, m = _case(100, 10, 64, seed=7)
+    norms, k = grad_gram(z, y, h, m)
+    np.testing.assert_allclose(
+        np.asarray(norms),
+        np.sqrt(np.maximum(np.diag(np.asarray(k)), 0.0)),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+def test_mask_zeroes_rows_and_cols():
+    z, y, h, _ = _case(40, 5, 16, seed=3)
+    m = np.ones(40, np.float32)
+    m[7] = 0.0
+    m[23] = 0.0
+    norms, k = grad_gram(z, y, h, jnp.array(m))
+    k = np.asarray(k)
+    assert float(norms[7]) == 0.0 and float(norms[23]) == 0.0
+    assert np.all(k[7, :] == 0.0) and np.all(k[:, 7] == 0.0)
+    assert np.all(k[23, :] == 0.0) and np.all(k[:, 23] == 0.0)
+
+
+def test_extreme_logits_stable():
+    """Softmax must be stabilized: huge logits must not produce NaN/inf."""
+    z, y, h, m = _case(16, 4, 8, seed=5)
+    z = z * 1e4
+    norms, k = grad_gram(z, y, h, m)
+    assert np.all(np.isfinite(np.asarray(norms)))
+    assert np.all(np.isfinite(np.asarray(k)))
+
+
+def test_delta_rows_sum_to_zero():
+    """softmax(z) - onehot rows sum to 0 for unmasked samples."""
+    z, y, h, m = _case(32, 6, 8, mask_frac=1.0, seed=9)
+    d, hn2 = delta_and_hnorm2(z, y, h, m)
+    np.testing.assert_allclose(np.asarray(jnp.sum(d, axis=-1)), 0.0, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(hn2), np.asarray(jnp.sum(h * h, axis=-1)), rtol=1e-5
+    )
+
+
+def test_gram_psd_on_quadratic_forms():
+    """K is a Gram matrix: v^T K v >= 0 for any v (up to f32 noise)."""
+    z, y, h, m = _case(60, 10, 32, seed=11)
+    _, k = grad_gram(z, y, h, m)
+    k = np.asarray(k, dtype=np.float64)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        v = rng.normal(size=60)
+        q = v @ k @ v
+        assert q >= -1e-3 * max(1.0, np.abs(k).max()), q
+
+
+def test_tile_boundary_sizes():
+    """Exercise n exactly at / around the 64 tile size."""
+    for n in (63, 64, 65, 128):
+        z, y, h, m = _case(n, 7, 24, seed=n)
+        norms, k = grad_gram(z, y, h, m)
+        rn, rk = ref.grad_gram_ref(z, y, h, m)
+        np.testing.assert_allclose(np.asarray(k), np.asarray(rk), atol=1e-3, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(norms), np.asarray(rn), atol=1e-4, rtol=1e-4)
+
+
+def test_gram_standalone_matches_ref():
+    z, y, h, m = _case(50, 8, 40, seed=21)
+    d = ref.delta_ref(z, y, m)
+    k = gram(d, h)
+    rk = ref.gram_ref(z, y, h, m)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(rk), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# filter_score kernel
+# ---------------------------------------------------------------------------
+
+def _filter_case(b, c, f, seed=0):
+    rng = np.random.default_rng(seed)
+    feats = rng.normal(size=(b, f)).astype(np.float32)
+    cen = rng.normal(size=(c, f)).astype(np.float32)
+    m2 = (rng.random(c) * 10).astype(np.float32)
+    y = np.eye(c, dtype=np.float32)[rng.integers(0, c, b)]
+    return jnp.array(feats), jnp.array(cen), jnp.array(m2), jnp.array(y)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=40),
+    c=st.integers(min_value=2, max_value=20),
+    f=st.integers(min_value=1, max_value=96),
+    lam=st.sampled_from([0.0, 0.3, 0.5, 1.0]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_repdiv_matches_ref(b, c, f, lam, seed):
+    feats, cen, m2, y = _filter_case(b, c, f, seed)
+    lamv = jnp.array([lam], jnp.float32)
+    s = repdiv_score(feats, cen, m2, y, lamv)
+    rs = ref.repdiv_ref(feats, cen, m2, y, lamv[0])
+    scale = max(1.0, float(jnp.max(jnp.abs(rs))))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), atol=2e-4 * scale, rtol=2e-4)
+
+
+def test_paper_lam_half_cancels_within_class():
+    """DESIGN.md §Discrepancies: at lam=0.5 the score is a per-class
+    constant — the paper's unweighted Rep+Div cannot rank within a class."""
+    feats, cen, m2, y = _filter_case(30, 4, 16, seed=2)
+    s = np.asarray(repdiv_score(feats, cen, m2, y, jnp.array([0.5], jnp.float32)))
+    labels = np.argmax(np.asarray(y), axis=-1)
+    for cls in range(4):
+        vals = s[labels == cls]
+        if len(vals) > 1:
+            assert np.ptp(vals) < 1e-4 * max(1.0, np.abs(vals).max())
+
+
+def test_lam_extremes_are_pure_rep_and_div():
+    feats, cen, m2, y = _filter_case(12, 3, 8, seed=4)
+    s_rep = np.asarray(repdiv_score(feats, cen, m2, y, jnp.array([1.0], jnp.float32)))
+    s_div = np.asarray(repdiv_score(feats, cen, m2, y, jnp.array([0.0], jnp.float32)))
+    c = np.asarray(y) @ np.asarray(cen)
+    m2s = np.asarray(y) @ np.asarray(m2)
+    f = np.asarray(feats)
+    rep = -np.sum((f - c) ** 2, axis=-1)
+    div = np.sum(f * f, axis=-1) + m2s - 2 * np.sum(f * c, axis=-1)
+    np.testing.assert_allclose(s_rep, rep, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(s_div, div, atol=1e-4, rtol=1e-4)

@@ -1,0 +1,157 @@
+"""L2 model-zoo tests: shapes, learning signal, and the importance math
+each variant exposes to the coordinator."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+ALL_VARIANTS = list(M.VARIANTS)
+
+
+def _batch(mdef, n, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, mdef.input_dim)).astype(np.float32)
+    y = np.eye(mdef.num_classes, dtype=np.float32)[
+        rng.integers(0, mdef.num_classes, n)
+    ]
+    return jnp.array(x), jnp.array(y)
+
+
+@pytest.mark.parametrize("name", ALL_VARIANTS)
+def test_shapes_contract(name):
+    mdef = M.VARIANTS[name]
+    flat, unravel = M.init_flat(mdef)
+    x, y = _batch(mdef, 4)
+    z, h = M.logits_and_h(mdef, unravel, flat, x)
+    assert z.shape == (4, mdef.num_classes)
+    assert h.shape == (4, mdef.h_dim)
+    dims = M.block_feature_dims(mdef)
+    assert len(dims) >= 2, "filter needs at least 2 depths for Fig. 8"
+    for k in range(1, len(dims) + 1):
+        feats = M.make_features(mdef, unravel, n_blocks=k)
+        (f,) = feats(flat, x)
+        assert f.shape == (4, dims[k - 1])
+
+
+@pytest.mark.parametrize("name", ALL_VARIANTS)
+def test_train_step_reduces_loss(name):
+    """A few SGD steps on a fixed batch must reduce its loss (learning
+    signal sanity for every variant we ship)."""
+    mdef = M.VARIANTS[name]
+    flat, unravel = M.init_flat(mdef)
+    step = jax.jit(M.make_train_step(mdef, unravel))
+    x, y = _batch(mdef, M.TRAIN_BATCH, seed=3)
+    lr = jnp.float32(0.05)
+    w = jnp.ones((M.TRAIN_BATCH,), jnp.float32)
+    p = flat
+    p, loss0 = step(p, x, y, w, lr)
+    for _ in range(10):
+        p, loss = step(p, x, y, w, lr)
+    assert float(loss) < float(loss0), (float(loss0), float(loss))
+    assert np.all(np.isfinite(np.asarray(p)))
+
+
+def test_weighted_step_scales_update():
+    """Zero weights freeze the params; doubling all weights doubles the
+    (first-order) update — the unbiased-estimator contract."""
+    mdef = M.VARIANTS["mlp"]
+    flat, unravel = M.init_flat(mdef)
+    step = jax.jit(M.make_train_step(mdef, unravel))
+    x, y = _batch(mdef, M.TRAIN_BATCH, seed=11)
+    lr = jnp.float32(0.01)
+    zeros = jnp.zeros((M.TRAIN_BATCH,), jnp.float32)
+    p_frozen, loss0 = step(flat, x, y, zeros, lr)
+    np.testing.assert_allclose(np.asarray(p_frozen), np.asarray(flat))
+    assert float(loss0) == 0.0
+    ones = jnp.ones((M.TRAIN_BATCH,), jnp.float32)
+    p1, _ = step(flat, x, y, ones, lr)
+    p2, _ = step(flat, x, y, 2.0 * ones, lr)
+    d1 = np.asarray(p1) - np.asarray(flat)
+    d2 = np.asarray(p2) - np.asarray(flat)
+    np.testing.assert_allclose(d2, 2.0 * d1, rtol=1e-4, atol=1e-7)
+
+
+@pytest.mark.parametrize("name", ALL_VARIANTS)
+def test_importance_consistent_with_ref(name):
+    """The per-variant importance graph must agree with composing the
+    oracle on that variant's own (logits, h)."""
+    mdef = M.VARIANTS[name]
+    flat, unravel = M.init_flat(mdef)
+    imp = M.make_importance(mdef, unravel)
+    n = M.CAND_MAX
+    x, y = _batch(mdef, n, seed=5)
+    mask = jnp.array((np.arange(n) < 42).astype(np.float32))
+    norms, k = imp(flat, x, y, mask)
+    z, h = M.logits_and_h(mdef, unravel, flat, x)
+    rn, rk = ref.grad_gram_ref(z, y, h, mask)
+    kscale = max(1.0, float(jnp.max(jnp.abs(rk))))
+    np.testing.assert_allclose(np.asarray(k), np.asarray(rk), atol=3e-4 * kscale, rtol=3e-4)
+    np.testing.assert_allclose(np.asarray(norms), np.asarray(rn), atol=1e-3, rtol=1e-3)
+    # masked tail contributes nothing
+    assert np.all(np.asarray(norms)[42:] == 0.0)
+
+
+@pytest.mark.parametrize("name", ALL_VARIANTS)
+def test_evaluate_counts(name):
+    mdef = M.VARIANTS[name]
+    flat, unravel = M.init_flat(mdef)
+    ev = M.make_evaluate(mdef, unravel)
+    x, y = _batch(mdef, 16, seed=7)
+    ls, corr = ev(flat, x, y)
+    z, _ = M.logits_and_h(mdef, unravel, flat, x)
+    pred = np.argmax(np.asarray(z), axis=-1)
+    truth = np.argmax(np.asarray(y), axis=-1)
+    assert float(corr) == float(np.sum(pred == truth))
+    # loss_sum == 16 * mean CE
+    assert abs(float(ls) / 16.0 - float(M.ce_loss(z, y))) < 1e-4
+
+
+def test_ce_loss_matches_uniform():
+    """CE of uniform logits is log C."""
+    z = jnp.zeros((5, 10), jnp.float32)
+    y = jnp.array(np.eye(10, dtype=np.float32)[np.arange(5)])
+    assert abs(float(M.ce_loss(z, y)) - np.log(10)) < 1e-6
+
+
+def test_train_step_gradient_check_mlp():
+    """Finite-difference check of the lowered loss gradient (mlp)."""
+    mdef = M.VARIANTS["mlp"]
+    flat, unravel = M.init_flat(mdef)
+    x, y = _batch(mdef, 4, seed=9)
+
+    def loss_of(p):
+        z, _ = M.logits_and_h(mdef, unravel, p, x)
+        return M.ce_loss(z, y)
+
+    g = jax.grad(loss_of)(flat)
+    rng = np.random.default_rng(0)
+    idxs = rng.integers(0, flat.shape[0], size=5)
+    eps = 1e-3
+    for i in idxs:
+        e = np.zeros(flat.shape[0], np.float32)
+        e[i] = eps
+        num = (float(loss_of(flat + e)) - float(loss_of(flat - e))) / (2 * eps)
+        assert abs(num - float(g[i])) < 5e-3, (i, num, float(g[i]))
+
+
+def test_init_flat_deterministic():
+    mdef = M.VARIANTS["mlp"]
+    a, _ = M.init_flat(mdef, seed=0)
+    b, _ = M.init_flat(mdef, seed=0)
+    c, _ = M.init_flat(mdef, seed=1)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+@pytest.mark.parametrize("name", ALL_VARIANTS)
+def test_param_counts_edge_sized(name):
+    """Every variant stays edge-sized (< 300k params) but non-trivial."""
+    mdef = M.VARIANTS[name]
+    flat, _ = M.init_flat(mdef)
+    assert 1_000 < flat.shape[0] < 300_000, flat.shape[0]

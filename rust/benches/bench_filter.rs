@@ -1,0 +1,58 @@
+//! Bench: coarse-filter per-sample processing cost (paper Fig. 6b) —
+//! feature extraction (PJRT features artifact, chunked) + scoring +
+//! buffer maintenance, reported per streaming sample. Also benches the
+//! host-side scoring/buffer path alone (no model), which bounds the
+//! coordinator overhead.
+//!
+//! Run: `cargo bench --bench bench_filter`
+
+use titan::config::{presets, Method};
+use titan::coordinator::build_stream;
+use titan::data::Sample;
+use titan::filter::CoarseFilter;
+use titan::runtime::model::{ModelRuntime, RuntimeRole};
+use titan::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new("filter");
+
+    // host-only scoring path (no model involved)
+    {
+        let dim = 64usize;
+        let mut filt = CoarseFilter::new(10, dim, 30, 0.3);
+        let feats: Vec<Vec<f32>> = (0..100)
+            .map(|i| (0..dim).map(|j| ((i * dim + j) as f32 * 0.01).sin()).collect())
+            .collect();
+        let samples: Vec<Sample> = (0..100)
+            .map(|i| Sample::new(i as u64, (i % 10) as u32, vec![0.0; 4]))
+            .collect();
+        let mut i = 0usize;
+        b.bench("host_score_and_buffer/sample", || {
+            let k = i % 100;
+            i += 1;
+            filt.process(samples[k].clone(), &feats[k])
+        });
+    }
+
+    // full path with the PJRT features artifact (chunk of 25)
+    if std::path::Path::new("artifacts/mlp/meta.json").exists() {
+        let cfg = presets::table1("mlp", Method::Titan);
+        let (mut stream, _) = build_stream(&cfg);
+        let mut rt = ModelRuntime::load("artifacts", "mlp", RuntimeRole::Selector).expect("rt");
+        rt.ensure_features(1).expect("features");
+        let arrivals = stream.next_round(25);
+        let refs: Vec<&Sample> = arrivals.iter().collect();
+        b.bench("features_chunk25_b1/mlp", || {
+            rt.features(&refs, 1).expect("features")
+        });
+        for k in 1..=rt.set.meta.num_blocks() {
+            rt.ensure_features(k).expect("features");
+            b.bench(&format!("features_chunk25_b{k}/mlp"), || {
+                rt.features(&refs, k).expect("features")
+            });
+        }
+    } else {
+        eprintln!("skipping artifact benches: run `make artifacts` first");
+    }
+    b.finish();
+}

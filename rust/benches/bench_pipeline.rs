@@ -1,0 +1,45 @@
+//! Bench: pipelined vs sequential coordination (paper Fig. 6a) — full
+//! short runs on the host clock, plus the channel/sync machinery alone.
+//!
+//! Run: `cargo bench --bench bench_pipeline`
+
+use titan::config::{presets, Method};
+use titan::coordinator::{pipeline, sequential};
+use titan::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new("pipeline");
+
+    // sync-cost bound: round-trip a param-sized vector over a channel
+    {
+        let params = vec![0.5f32; 120_000];
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Vec<f32>>(1);
+        b.bench("param_sync_roundtrip/120k_f32", || {
+            tx.send(params.clone()).unwrap();
+            rx.recv().unwrap()
+        });
+    }
+
+    if !std::path::Path::new("artifacts/mlp/meta.json").exists() {
+        eprintln!("skipping run benches: run `make artifacts` first");
+        b.finish();
+        return;
+    }
+    let mk = |pipeline: bool| {
+        let mut cfg = presets::table1("mlp", Method::Titan);
+        cfg.rounds = 5;
+        cfg.eval_every = 0;
+        cfg.test_size = 200;
+        cfg.pipeline = pipeline;
+        cfg
+    };
+    let seq_cfg = mk(false);
+    b.bench("run5rounds/sequential", || {
+        sequential::run(&seq_cfg).expect("seq")
+    });
+    let pipe_cfg = mk(true);
+    b.bench("run5rounds/pipelined", || {
+        pipeline::run(&pipe_cfg).expect("pipe")
+    });
+    b.finish();
+}

@@ -1,0 +1,70 @@
+//! Bench: raw PJRT artifact execution — train_step / importance / probe /
+//! features / eval latency per model (the L1+L2 hot paths as seen from
+//! L3). These are the numbers the §Perf pass optimizes.
+//!
+//! Run: `cargo bench --bench bench_runtime`
+
+use titan::data::Sample;
+use titan::runtime::artifact::ArtifactSet;
+use titan::runtime::model::{ModelRuntime, RuntimeRole};
+use titan::util::bench::Bencher;
+
+fn det_samples(n: usize, d: usize, classes: usize) -> Vec<Sample> {
+    (0..n)
+        .map(|i| {
+            let x: Vec<f32> = (0..d).map(|j| ((i * d + j) as f32 * 0.01).sin()).collect();
+            Sample::new(i as u64, (i % classes) as u32, x)
+        })
+        .collect()
+}
+
+fn main() {
+    let models = ArtifactSet::list_models("artifacts");
+    if models.is_empty() {
+        eprintln!("skipping bench_runtime: run `make artifacts` first");
+        return;
+    }
+    let mut b = Bencher::new("runtime");
+    // full sweep for mlp; headline ops for the rest
+    for model in &models {
+        let mut rt = match ModelRuntime::load("artifacts", model, RuntimeRole::Full) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("skipping {model}: {e}");
+                continue;
+            }
+        };
+        let m = rt.set.meta.clone();
+        let train = det_samples(m.train_batch, m.input_dim, m.num_classes);
+        let trefs: Vec<&Sample> = train.iter().collect();
+        b.bench(&format!("train_step_b{}/{model}", m.train_batch), || {
+            rt.train_step(&trefs, 0.01).expect("train")
+        });
+        let cands = det_samples(30, m.input_dim, m.num_classes);
+        let crefs: Vec<&Sample> = cands.iter().collect();
+        b.bench(&format!("importance_n30/{model}"), || {
+            rt.importance(&crefs).expect("imp")
+        });
+        if model == "mlp" {
+            let full = det_samples(m.cand_max, m.input_dim, m.num_classes);
+            let frefs: Vec<&Sample> = full.iter().collect();
+            b.bench(&format!("importance_n{}/{model}", m.cand_max), || {
+                rt.importance(&frefs).expect("imp")
+            });
+            b.bench(&format!("probe_n{}/{model}", m.cand_max), || {
+                rt.probe(&frefs).expect("probe")
+            });
+            let chunk = det_samples(m.filter_chunk, m.input_dim, m.num_classes);
+            let chrefs: Vec<&Sample> = chunk.iter().collect();
+            rt.ensure_features(1).expect("features");
+            b.bench(&format!("features_b1_chunk{}/{model}", m.filter_chunk), || {
+                rt.features(&chrefs, 1).expect("features")
+            });
+            let test = det_samples(m.eval_chunk, m.input_dim, m.num_classes);
+            b.bench(&format!("eval_chunk{}/{model}", m.eval_chunk), || {
+                rt.evaluate(&test).expect("eval")
+            });
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,41 @@
+//! Bench: per-round selection cost per method (paper Fig. 2a / Table 1's
+//! time column, host clock). Measures the full selection round — evidence
+//! computation (importance/probe/features via the PJRT artifacts) plus the
+//! strategy itself — for each method on the mlp artifact set.
+//!
+//! Run: `cargo bench --bench bench_selection` (TITAN_BENCH_FAST=1 to smoke)
+
+use titan::config::{presets, Method};
+use titan::coordinator::{build_stream, SelectorEngine};
+use titan::util::bench::Bencher;
+
+fn main() {
+    if !std::path::Path::new("artifacts/mlp/meta.json").exists() {
+        eprintln!("skipping bench_selection: run `make artifacts` first");
+        return;
+    }
+    let mut b = Bencher::new("selection");
+    for method in [
+        Method::Rs,
+        Method::Is,
+        Method::Ll,
+        Method::Ce,
+        Method::Ocs,
+        Method::Camel,
+        Method::Cis,
+        Method::Titan,
+    ] {
+        let mut cfg = presets::table1("mlp", method);
+        cfg.rounds = 4;
+        let (mut stream, _) = build_stream(&cfg);
+        let mut sel = SelectorEngine::new(&cfg, stream.task()).expect("selector");
+        // pre-pull a fixed round of arrivals so the bench isolates selection
+        let arrivals = stream.next_round(cfg.stream_per_round);
+        let mut round = 0usize;
+        b.bench(&format!("select_round/{}", method.name()), || {
+            round += 1;
+            sel.select_round(round, arrivals.clone()).expect("select")
+        });
+    }
+    b.finish();
+}

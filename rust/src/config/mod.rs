@@ -1,0 +1,331 @@
+//! Run/experiment configuration.
+//!
+//! A [`RunConfig`] fully determines one training run: the model variant,
+//! the selection method, stream parameters, filter parameters, and the
+//! training schedule. Configs are built from presets (`presets.rs`),
+//! overridden from CLI args, and can be (de)serialized as JSON so every
+//! experiment records the exact configuration next to its results.
+
+pub mod presets;
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Which data-selection method drives the training batch choice.
+/// These are the Table-1 columns of the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Random selection (the paper's normalization baseline).
+    Rs,
+    /// Importance sampling: P(x) ∝ ‖∇l‖ over everything, allocation by
+    /// mean gradient norm (Katharopoulos & Fleuret '18).
+    Is,
+    /// Heuristic: lowest per-sample loss first (Shah et al.).
+    Ll,
+    /// Heuristic: highest per-sample loss first (selection-via-proxy).
+    Hl,
+    /// Heuristic: highest output entropy (active-learning style "CE").
+    Ce,
+    /// Heuristic: representativeness + diversity (online coreset, OCS).
+    Ocs,
+    /// Coreset by raw-input distance, greedy (Camel, SIGMOD'22).
+    Camel,
+    /// Titan's classified importance sampling (fine stage only).
+    Cis,
+    /// Full Titan: coarse filter + C-IS + pipeline.
+    Titan,
+}
+
+impl Method {
+    pub const ALL: [Method; 9] = [
+        Method::Rs,
+        Method::Is,
+        Method::Ll,
+        Method::Hl,
+        Method::Ce,
+        Method::Ocs,
+        Method::Camel,
+        Method::Cis,
+        Method::Titan,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Rs => "rs",
+            Method::Is => "is",
+            Method::Ll => "ll",
+            Method::Hl => "hl",
+            Method::Ce => "ce",
+            Method::Ocs => "ocs",
+            Method::Camel => "camel",
+            Method::Cis => "cis",
+            Method::Titan => "titan",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Method> {
+        Method::ALL
+            .iter()
+            .copied()
+            .find(|m| m.name() == s)
+            .ok_or_else(|| Error::Config(format!("unknown method {s:?}")))
+    }
+
+    /// Does this method need per-sample gradient information (the
+    /// importance artifact) on its selection path?
+    pub fn needs_importance(&self) -> bool {
+        matches!(self, Method::Is | Method::Cis | Method::Titan)
+    }
+
+    /// Does this method need a forward pass (loss/entropy) per candidate?
+    pub fn needs_forward(&self) -> bool {
+        matches!(self, Method::Ll | Method::Hl | Method::Ce)
+    }
+}
+
+/// Stream noise settings (paper Fig. 11).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NoiseKind {
+    None,
+    /// Gaussian noise added to the input features of a fraction of samples.
+    Feature { frac: f32, sigma: f32 },
+    /// Labels of a fraction of samples replaced uniformly at random.
+    Label { frac: f32 },
+}
+
+/// One run, fully specified.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Model variant (artifact directory name), e.g. "mlp".
+    pub model: String,
+    /// Selection method.
+    pub method: Method,
+    /// RNG seed for everything stochastic in the run.
+    pub seed: u64,
+    /// Number of training rounds.
+    pub rounds: usize,
+    /// Streaming samples arriving per round (paper: v = 100).
+    pub stream_per_round: usize,
+    /// Training batch size |B| (paper: 10). Must match the artifact's
+    /// train_batch (checked at load).
+    pub batch_size: usize,
+    /// Candidate buffer budget for the coarse filter (paper: 30).
+    pub candidate_size: usize,
+    /// Number of model blocks used for filter features (paper Fig. 8; 1).
+    pub filter_blocks: usize,
+    /// Rep weight λ in the filter score (see DESIGN.md §Discrepancies).
+    pub filter_lambda: f32,
+    /// Initial learning rate (paper: 0.1 light models, 0.005 large).
+    pub lr: f32,
+    /// LR decay factor applied every `lr_decay_every` rounds (paper: 0.95/100).
+    pub lr_decay: f32,
+    pub lr_decay_every: usize,
+    /// Evaluate on the held-out set every this many rounds (0 = never).
+    pub eval_every: usize,
+    /// Test-set size (generated synthetically alongside the stream).
+    pub test_size: usize,
+    /// Stream noise (Fig. 11).
+    pub noise: NoiseKind,
+    /// Run the pipelined coordinator (one-round-delay co-execution) instead
+    /// of the sequential one.
+    pub pipeline: bool,
+    /// Directory with AOT artifacts.
+    pub artifacts_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            model: "mlp".into(),
+            method: Method::Titan,
+            seed: 17,
+            rounds: 300,
+            stream_per_round: 100,
+            batch_size: 10,
+            candidate_size: 30,
+            filter_blocks: 1,
+            // Rep-dominant: pure diversity (λ→0) buffers outliers, the
+            // paper's literal λ=0.5 cancels (DESIGN.md §Discrepancies);
+            // 0.7 keeps the candidate pool representative with a diversity
+            // tail, which is what makes the C-IS stage effective.
+            filter_lambda: 0.7,
+            lr: 0.1,
+            lr_decay: 0.95,
+            lr_decay_every: 100,
+            eval_every: 20,
+            test_size: 1000,
+            noise: NoiseKind::None,
+            pipeline: true,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply CLI overrides (only the options present are touched).
+    pub fn apply_args(mut self, args: &Args) -> Result<Self> {
+        if let Some(m) = args.get("model") {
+            self.model = m.to_string();
+        }
+        if let Some(m) = args.get("method") {
+            self.method = Method::parse(m)?;
+        }
+        self.seed = args.get_u64("seed", self.seed)?;
+        self.rounds = args.get_usize("rounds", self.rounds)?;
+        self.stream_per_round = args.get_usize("stream", self.stream_per_round)?;
+        self.batch_size = args.get_usize("batch", self.batch_size)?;
+        self.candidate_size = args.get_usize("candidates", self.candidate_size)?;
+        self.filter_blocks = args.get_usize("filter-blocks", self.filter_blocks)?;
+        self.filter_lambda = args.get_f32("filter-lambda", self.filter_lambda)?;
+        self.lr = args.get_f32("lr", self.lr)?;
+        self.eval_every = args.get_usize("eval-every", self.eval_every)?;
+        self.test_size = args.get_usize("test-size", self.test_size)?;
+        if let Some(d) = args.get("artifacts") {
+            self.artifacts_dir = d.to_string();
+        }
+        if args.has_flag("sequential") {
+            self.pipeline = false;
+        }
+        if let Some(n) = args.get("feature-noise") {
+            let frac: f32 = n
+                .parse()
+                .map_err(|e| Error::Config(format!("--feature-noise={n}: {e}")))?;
+            self.noise = NoiseKind::Feature { frac, sigma: 1.0 };
+        }
+        if let Some(n) = args.get("label-noise") {
+            let frac: f32 = n
+                .parse()
+                .map_err(|e| Error::Config(format!("--label-noise={n}: {e}")))?;
+            self.noise = NoiseKind::Label { frac };
+        }
+        Ok(self)
+    }
+
+    /// Serialize for the run record next to results.
+    pub fn to_json(&self) -> Json {
+        let noise = match self.noise {
+            NoiseKind::None => Json::Str("none".into()),
+            NoiseKind::Feature { frac, sigma } => Json::obj(vec![
+                ("kind", Json::Str("feature".into())),
+                ("frac", Json::Num(frac as f64)),
+                ("sigma", Json::Num(sigma as f64)),
+            ]),
+            NoiseKind::Label { frac } => Json::obj(vec![
+                ("kind", Json::Str("label".into())),
+                ("frac", Json::Num(frac as f64)),
+            ]),
+        };
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("method", Json::Str(self.method.name().into())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("stream_per_round", Json::Num(self.stream_per_round as f64)),
+            ("batch_size", Json::Num(self.batch_size as f64)),
+            ("candidate_size", Json::Num(self.candidate_size as f64)),
+            ("filter_blocks", Json::Num(self.filter_blocks as f64)),
+            ("filter_lambda", Json::Num(self.filter_lambda as f64)),
+            ("lr", Json::Num(self.lr as f64)),
+            ("lr_decay", Json::Num(self.lr_decay as f64)),
+            ("lr_decay_every", Json::Num(self.lr_decay_every as f64)),
+            ("eval_every", Json::Num(self.eval_every as f64)),
+            ("test_size", Json::Num(self.test_size as f64)),
+            ("noise", noise),
+            ("pipeline", Json::Bool(self.pipeline)),
+            ("artifacts_dir", Json::Str(self.artifacts_dir.clone())),
+        ])
+    }
+
+    /// Sanity checks that would otherwise surface as confusing failures
+    /// deep in the pipeline.
+    pub fn validate(&self) -> Result<()> {
+        if self.batch_size == 0 {
+            return Err(Error::Config("batch_size must be > 0".into()));
+        }
+        if self.candidate_size < self.batch_size {
+            return Err(Error::Config(format!(
+                "candidate_size {} < batch_size {}",
+                self.candidate_size, self.batch_size
+            )));
+        }
+        if self.stream_per_round < self.candidate_size {
+            return Err(Error::Config(format!(
+                "stream_per_round {} < candidate_size {}",
+                self.stream_per_round, self.candidate_size
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.filter_lambda) {
+            return Err(Error::Config("filter_lambda must be in [0,1]".into()));
+        }
+        if self.rounds == 0 {
+            return Err(Error::Config("rounds must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn method_capabilities() {
+        assert!(Method::Titan.needs_importance());
+        assert!(Method::Is.needs_importance());
+        assert!(!Method::Rs.needs_importance());
+        assert!(Method::Ce.needs_forward());
+        assert!(!Method::Cis.needs_forward());
+    }
+
+    #[test]
+    fn default_validates() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = RunConfig::default();
+        c.candidate_size = 5; // < batch 10
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.batch_size = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.filter_lambda = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn args_override() {
+        let args = Args::parse(
+            ["--model", "squeeze", "--method", "is", "--rounds", "7",
+             "--label-noise", "0.4", "--sequential"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = RunConfig::default().apply_args(&args).unwrap();
+        assert_eq!(c.model, "squeeze");
+        assert_eq!(c.method, Method::Is);
+        assert_eq!(c.rounds, 7);
+        assert!(!c.pipeline);
+        assert!(matches!(c.noise, NoiseKind::Label { frac } if (frac - 0.4).abs() < 1e-6));
+    }
+
+    #[test]
+    fn json_roundtrip_fields() {
+        let j = RunConfig::default().to_json();
+        assert_eq!(j.get("model").unwrap().as_str().unwrap(), "mlp");
+        assert_eq!(j.get("method").unwrap().as_str().unwrap(), "titan");
+        assert_eq!(j.get("batch_size").unwrap().as_usize().unwrap(), 10);
+    }
+}

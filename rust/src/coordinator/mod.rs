@@ -1,0 +1,393 @@
+//! The L3 coordinator — Titan's system layer.
+//!
+//! Two engines split the paper's process placement:
+//!
+//! - [`SelectorEngine`] (GPU lane / selector process): pulls the round's
+//!   stream arrivals, runs the coarse filter + the configured selection
+//!   strategy, returns the training batch for the *next* round.
+//! - [`TrainerEngine`] (CPU lane / trainer process): applies SGD steps
+//!   with the lr schedule, evaluates on the held-out set.
+//!
+//! [`sequential`] runs both on one thread (baselines, ablations);
+//! [`pipeline`] runs them on two OS threads with one-round-delay batch
+//! handoff and per-round parameter sync — the paper's §3.4 design.
+
+pub mod pipeline;
+pub mod round;
+pub mod sequential;
+
+use crate::config::{Method, RunConfig};
+use crate::data::{Sample, StreamSource, SynthTask};
+use crate::device::idle::IdleTrace;
+use crate::device::Op;
+use crate::filter::CoarseFilter;
+use crate::runtime::model::{ModelRuntime, RuntimeRole};
+use crate::selection::{make_strategy, SelectionContext, SelectionStrategy};
+use crate::util::rng::Xoshiro256;
+use crate::util::timer::Stopwatch;
+use crate::{Error, Result};
+
+pub use round::{RoundOutcome, SelectorReport};
+
+/// A selected training batch with its unbiasedness weights (see
+/// `selection::SelectedBatch` — these are the owned samples crossing the
+/// pipeline channel).
+#[derive(Clone, Debug)]
+pub struct TrainBatch {
+    pub samples: Vec<Sample>,
+    pub weights: Vec<f32>,
+}
+
+impl TrainBatch {
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
+/// Selector process: coarse filter + fine selection.
+pub struct SelectorEngine {
+    pub rt: ModelRuntime,
+    cfg: RunConfig,
+    strategy: Box<dyn SelectionStrategy>,
+    filter: Option<CoarseFilter>,
+    /// Stream class frequencies |S_y| observed so far.
+    seen_per_class: Vec<u64>,
+    rng: Xoshiro256,
+    /// Idle-capacity trace governing the per-round candidate budget.
+    pub idle: IdleTrace,
+}
+
+impl SelectorEngine {
+    pub fn new(cfg: &RunConfig, task: &SynthTask) -> Result<SelectorEngine> {
+        let mut rt = ModelRuntime::load(&cfg.artifacts_dir, &cfg.model, RuntimeRole::Selector)?;
+        let num_classes = task.num_classes();
+        if num_classes != rt.set.meta.num_classes {
+            return Err(Error::Config(format!(
+                "task classes {} != artifact classes {}",
+                num_classes, rt.set.meta.num_classes
+            )));
+        }
+        let filter = if cfg.method == Method::Titan {
+            rt.ensure_features(cfg.filter_blocks)?;
+            Some(CoarseFilter::new(
+                num_classes,
+                rt.set.meta.feature_dim(cfg.filter_blocks),
+                cfg.candidate_size,
+                cfg.filter_lambda,
+            ))
+        } else {
+            None
+        };
+        Ok(SelectorEngine {
+            rt,
+            cfg: cfg.clone(),
+            strategy: make_strategy(cfg.method),
+            filter,
+            seen_per_class: vec![0; num_classes],
+            rng: Xoshiro256::seed_from_u64(cfg.seed ^ 0x5E1E_C70A),
+            idle: IdleTrace::Constant(1.0),
+        })
+    }
+
+    /// Process one round's arrivals and select the next training batch.
+    /// `round` indexes the idle trace. Returns the weighted batch and the
+    /// op/latency report for the device simulator + metrics.
+    pub fn select_round(
+        &mut self,
+        round: usize,
+        arrivals: Vec<Sample>,
+    ) -> Result<(TrainBatch, SelectorReport)> {
+        let mut report = SelectorReport::default();
+        let sw = Stopwatch::start();
+        for s in &arrivals {
+            self.seen_per_class[s.label as usize] += 1;
+        }
+        let meta = self.rt.set.meta.clone();
+
+        // ---- stage 1: candidate formation ---------------------------------
+        let candidates: Vec<Sample> = if let Some(filter) = self.filter.as_mut() {
+            // Titan: adapt the budget to idle capacity, then feature+score
+            // every arrival in chunks.
+            let budget = self.idle.candidate_budget(round, self.cfg.candidate_size);
+            filter.set_buffer_cap(budget);
+            let chunk = meta.filter_chunk;
+            let mut i = 0;
+            while i < arrivals.len() {
+                let end = (i + chunk).min(arrivals.len());
+                let refs: Vec<&Sample> = arrivals[i..end].iter().collect();
+                let (feats, valid) = self.rt.features(&refs, self.cfg.filter_blocks)?;
+                report.ops.push(Op::Features {
+                    chunk: valid,
+                    blocks: self.cfg.filter_blocks,
+                });
+                let fd = feats.len() / chunk.max(1);
+                for (j, s) in arrivals[i..end].iter().enumerate() {
+                    let f = &feats[j * fd..(j + 1) * fd];
+                    self.filter.as_mut().unwrap().process(s.clone(), f);
+                }
+                // re-borrow filter for the next loop iteration
+                i = end;
+            }
+            let drained = self.filter.as_mut().unwrap().drain();
+            report.candidates = drained.len();
+            drained.into_iter().map(|c| c.sample).collect()
+        } else {
+            // baselines / bare C-IS: the whole round's stream is the
+            // candidate set (capped by the artifact's N).
+            let n = arrivals.len().min(meta.cand_max);
+            report.candidates = n;
+            arrivals[..n].to_vec()
+        };
+        if candidates.is_empty() {
+            return Err(Error::Pipeline("no candidates this round".into()));
+        }
+
+        // ---- stage 2: evidence + fine selection ---------------------------
+        let refs: Vec<&Sample> = candidates.iter().collect();
+        let importance = if self.cfg.method.needs_importance() {
+            report.ops.push(Op::Importance { n: refs.len() });
+            Some(self.rt.importance(&refs)?)
+        } else {
+            None
+        };
+        let probe = if self.cfg.method.needs_forward() {
+            report.ops.push(Op::Probe { n: refs.len() });
+            Some(self.rt.probe(&refs)?)
+        } else {
+            None
+        };
+        // OCS needs features for its rep/div; reuse depth-1 features.
+        let (features, feature_dim) = if self.cfg.method == Method::Ocs {
+            let fd = meta.feature_dim(1);
+            let mut feats = Vec::with_capacity(refs.len() * fd);
+            let chunk = meta.filter_chunk;
+            let mut i = 0;
+            while i < refs.len() {
+                let end = (i + chunk).min(refs.len());
+                let (f, valid) = self.rt.features(&refs[i..end], 1)?;
+                report.ops.push(Op::Features { chunk: valid, blocks: 1 });
+                feats.extend_from_slice(&f[..valid * fd]);
+                i = end;
+            }
+            (Some(feats), fd)
+        } else {
+            (None, 0)
+        };
+        if self.cfg.method == Method::Camel {
+            report.ops.push(Op::InputDistance { n: refs.len() });
+        }
+
+        let ctx = SelectionContext {
+            samples: &refs,
+            seen_per_class: &self.seen_per_class,
+            num_classes: meta.num_classes,
+            batch: self.cfg.batch_size,
+            importance: importance.as_ref(),
+            probe: probe.as_ref(),
+            features: features.as_deref(),
+            feature_dim,
+        };
+        let sel = self.strategy.select(&ctx, &mut self.rng)?;
+        let batch: Vec<Sample> = sel.indices.iter().map(|&i| candidates[i].clone()).collect();
+        if batch.is_empty() {
+            return Err(Error::Pipeline("strategy selected empty batch".into()));
+        }
+        report.host_ms = sw.elapsed_ms();
+        report.per_sample_host_ms = report.host_ms / arrivals.len().max(1) as f64;
+        report.arrivals = arrivals.len();
+        Ok((TrainBatch { samples: batch, weights: sel.weights }, report))
+    }
+
+    /// Adopt fresh parameters from the trainer (the per-round sync).
+    pub fn sync_params(&mut self, params: Vec<f32>) -> Result<()> {
+        self.rt.set_params(params)
+    }
+
+    pub fn seen_per_class(&self) -> &[u64] {
+        &self.seen_per_class
+    }
+}
+
+/// Trainer process: SGD + eval + lr schedule.
+pub struct TrainerEngine {
+    pub rt: ModelRuntime,
+    cfg: RunConfig,
+    round: usize,
+}
+
+impl TrainerEngine {
+    pub fn new(cfg: &RunConfig) -> Result<TrainerEngine> {
+        let mut rt = ModelRuntime::load(&cfg.artifacts_dir, &cfg.model, RuntimeRole::Trainer)?;
+        if cfg.batch_size != rt.set.meta.train_batch {
+            // alternate lowered batch (e.g. 25 for Fig. 2b); errors if the
+            // artifact set has no lowering for this size
+            rt.select_train_batch(cfg.batch_size)?;
+        }
+        Ok(TrainerEngine {
+            rt,
+            cfg: cfg.clone(),
+            round: 0,
+        })
+    }
+
+    /// Current learning rate under the decay schedule.
+    pub fn lr(&self) -> f32 {
+        let decays = (self.round / self.cfg.lr_decay_every.max(1)) as i32;
+        self.cfg.lr * self.cfg.lr_decay.powi(decays)
+    }
+
+    /// One SGD step on the provided batch; returns (loss, host_ms).
+    pub fn train(&mut self, batch: &[Sample]) -> Result<(f32, f64)> {
+        let weights = vec![1.0f32; batch.len()];
+        self.train_weighted(batch, &weights)
+    }
+
+    /// One weighted SGD step (the paper's unbiased estimator).
+    pub fn train_weighted(&mut self, batch: &[Sample], weights: &[f32]) -> Result<(f32, f64)> {
+        let sw = Stopwatch::start();
+        let refs: Vec<&Sample> = batch.iter().collect();
+        let loss = self.rt.train_step_weighted(&refs, weights, self.lr())?;
+        self.round += 1;
+        Ok((loss, sw.elapsed_ms()))
+    }
+
+    /// Convenience for TrainBatch.
+    pub fn train_batch(&mut self, batch: &TrainBatch) -> Result<(f32, f64)> {
+        self.train_weighted(&batch.samples, &batch.weights)
+    }
+
+    pub fn evaluate(&self, test: &[Sample]) -> Result<crate::runtime::EvalReport> {
+        self.rt.evaluate(test)
+    }
+
+    pub fn params(&self) -> Vec<f32> {
+        self.rt.params().to_vec()
+    }
+
+    pub fn round(&self) -> usize {
+        self.round
+    }
+}
+
+/// Build the stream source + test set for a run config.
+pub fn build_stream(cfg: &RunConfig) -> (StreamSource, Vec<Sample>) {
+    let task = SynthTask::for_model(&cfg.model, cfg.seed);
+    let test = task.test_set(cfg.test_size, cfg.seed);
+    let stream = StreamSource::new(task, cfg.seed, cfg.noise);
+    (stream, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new("artifacts/mlp/meta.json").exists()
+    }
+
+    fn small_cfg(method: Method) -> RunConfig {
+        let mut c = presets::table1("mlp", method);
+        c.rounds = 3;
+        c.test_size = 200;
+        c.eval_every = 0;
+        c
+    }
+
+    #[test]
+    fn selector_roundtrip_titan() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let cfg = small_cfg(Method::Titan);
+        let (mut stream, _) = build_stream(&cfg);
+        let mut sel = SelectorEngine::new(&cfg, stream.task()).unwrap();
+        let arrivals = stream.next_round(cfg.stream_per_round);
+        let (batch, report) = sel.select_round(0, arrivals).unwrap();
+        assert_eq!(batch.len(), cfg.batch_size);
+        assert_eq!(report.candidates, cfg.candidate_size);
+        assert_eq!(report.arrivals, cfg.stream_per_round);
+        assert!(report
+            .ops
+            .iter()
+            .any(|o| matches!(o, Op::Features { .. })));
+        assert!(report
+            .ops
+            .iter()
+            .any(|o| matches!(o, Op::Importance { n } if *n == cfg.candidate_size)));
+    }
+
+    #[test]
+    fn selector_rs_uses_whole_stream() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = small_cfg(Method::Rs);
+        let (mut stream, _) = build_stream(&cfg);
+        let mut sel = SelectorEngine::new(&cfg, stream.task()).unwrap();
+        let (batch, report) = sel
+            .select_round(0, stream.next_round(cfg.stream_per_round))
+            .unwrap();
+        assert_eq!(batch.len(), cfg.batch_size);
+        assert_eq!(report.candidates, cfg.stream_per_round);
+        assert!(report.ops.is_empty(), "RS must not touch the model: {:?}", report.ops);
+    }
+
+    #[test]
+    fn trainer_reduces_loss_on_repeated_batch() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = small_cfg(Method::Rs);
+        let (mut stream, _) = build_stream(&cfg);
+        let arrivals = stream.next_round(20);
+        let batch: Vec<Sample> = arrivals[..10].to_vec();
+        let mut tr = TrainerEngine::new(&cfg).unwrap();
+        let (l0, _) = tr.train(&batch).unwrap();
+        let mut last = l0;
+        for _ in 0..8 {
+            let (l, _) = tr.train(&batch).unwrap();
+            last = l;
+        }
+        assert!(last < l0, "{last} !< {l0}");
+    }
+
+    #[test]
+    fn lr_schedule_decays() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut cfg = small_cfg(Method::Rs);
+        cfg.lr = 0.1;
+        cfg.lr_decay = 0.5;
+        cfg.lr_decay_every = 2;
+        let mut tr = TrainerEngine::new(&cfg).unwrap();
+        assert!((tr.lr() - 0.1).abs() < 1e-7);
+        let (mut stream, _) = build_stream(&cfg);
+        let batch: Vec<Sample> = stream.next_round(10);
+        tr.train(&batch).unwrap();
+        tr.train(&batch).unwrap();
+        assert!((tr.lr() - 0.05).abs() < 1e-7, "{}", tr.lr());
+    }
+
+    #[test]
+    fn params_sync_roundtrip() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = small_cfg(Method::Titan);
+        let (mut stream, _) = build_stream(&cfg);
+        let mut sel = SelectorEngine::new(&cfg, stream.task()).unwrap();
+        let mut tr = TrainerEngine::new(&cfg).unwrap();
+        let batch: Vec<Sample> = stream.next_round(10);
+        tr.train(&batch).unwrap();
+        let p = tr.params();
+        sel.sync_params(p.clone()).unwrap();
+        assert_eq!(sel.rt.params(), &p[..]);
+    }
+}

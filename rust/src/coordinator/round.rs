@@ -1,0 +1,47 @@
+//! Per-round records exchanged between the engines, the device simulator
+//! and the metrics plane.
+
+use crate::device::Op;
+
+/// What the selector did in one round (fed to the device simulator's GPU
+/// lane and the processing-delay metrics).
+#[derive(Clone, Debug, Default)]
+pub struct SelectorReport {
+    /// Simulated-device operations issued on the selection lane.
+    pub ops: Vec<Op>,
+    /// Host wall time of the whole selection round (ms).
+    pub host_ms: f64,
+    /// Host per-streaming-sample processing delay (ms).
+    pub per_sample_host_ms: f64,
+    /// Number of stream arrivals processed.
+    pub arrivals: usize,
+    /// Candidate-set size after the coarse stage.
+    pub candidates: usize,
+}
+
+/// One completed training round, as the experiment harness sees it.
+#[derive(Clone, Debug, Default)]
+pub struct RoundOutcome {
+    pub round: usize,
+    pub train_loss: f32,
+    /// Host ms spent in the trainer.
+    pub train_host_ms: f64,
+    /// Selector report for the round.
+    pub selector: SelectorReport,
+    /// Realized device wall ms for the round.
+    pub device_wall_ms: f64,
+    pub device_cpu_ms: f64,
+    pub device_gpu_ms: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_empty() {
+        let r = RoundOutcome::default();
+        assert_eq!(r.round, 0);
+        assert!(r.selector.ops.is_empty());
+    }
+}

@@ -1,0 +1,155 @@
+//! Sequential coordinator: selection and training alternate on one
+//! thread. This is how the paper's baselines deploy (no pipeline), and
+//! the ablation arm of Fig. 6(a).
+
+use crate::config::RunConfig;
+use crate::coordinator::{build_stream, RoundOutcome, SelectorEngine, TrainerEngine};
+use crate::device::{memory, DeviceSim, Lane, Op};
+use crate::metrics::{CurvePoint, RunRecord};
+use crate::util::timer::Stopwatch;
+use crate::Result;
+
+/// Run a full sequential training run; returns the run record and the
+/// per-round outcomes.
+pub fn run(cfg: &RunConfig) -> Result<(RunRecord, Vec<RoundOutcome>)> {
+    cfg.validate()?;
+    let (mut stream, test) = build_stream(cfg);
+    let mut selector = SelectorEngine::new(cfg, stream.task())?;
+    let mut trainer = TrainerEngine::new(cfg)?;
+    let mut sim = DeviceSim::new(&cfg.model);
+    let mut record = RunRecord::new(cfg.method.name(), &cfg.model);
+    let mut outcomes = Vec::with_capacity(cfg.rounds);
+    let run_sw = Stopwatch::start();
+
+    for round in 0..cfg.rounds {
+        // selection (uses current params — sequential has no delay)
+        selector.sync_params(trainer.params())?;
+        let arrivals = stream.next_round(cfg.stream_per_round);
+        let (batch, sel_report) = selector.select_round(round, arrivals)?;
+        for &op in &sel_report.ops {
+            sim.record(Lane::Gpu, op);
+        }
+        record
+            .processing_delay
+            .record_ms(sel_report.per_sample_host_ms);
+
+        // training (weighted: the paper's unbiased estimator)
+        let (loss, train_ms) = trainer.train_batch(&batch)?;
+        sim.record(Lane::Cpu, Op::TrainStep { batch: batch.len() });
+        let timing = sim.end_round(false); // sequential: lanes serialize
+
+        record.round_device_ms.push(timing.wall_ms);
+        record.round_host_ms.push(sel_report.host_ms + train_ms);
+        outcomes.push(RoundOutcome {
+            round,
+            train_loss: loss,
+            train_host_ms: train_ms,
+            selector: sel_report,
+            device_wall_ms: timing.wall_ms,
+            device_cpu_ms: timing.cpu_ms,
+            device_gpu_ms: timing.gpu_ms,
+        });
+
+        // periodic eval (instrumentation; not charged to the device clock)
+        if cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0 {
+            let rep = trainer.evaluate(&test)?;
+            record.curve.push(CurvePoint {
+                round: round + 1,
+                device_ms: sim.total_ms(),
+                host_ms: run_sw.elapsed_ms(),
+                train_loss: loss as f64,
+                test_loss: rep.loss,
+                test_accuracy: rep.accuracy,
+            });
+        }
+    }
+
+    let final_eval = trainer.evaluate(&test)?;
+    record.final_accuracy = final_eval.accuracy;
+    record.total_device_ms = sim.total_ms();
+    record.total_host_ms = run_sw.elapsed_ms();
+    record.energy_j = sim.energy().energy_j();
+    record.avg_power_w = sim.energy().avg_power_w();
+    let meta = &trainer.rt.set.meta;
+    record.peak_memory_bytes = memory::estimate(
+        meta.param_count,
+        memory::act_mult_for(&cfg.model),
+        cfg.batch_size,
+        meta.input_dim,
+        cfg.candidate_size,
+        meta.cand_max,
+        meta.feature_dim(cfg.filter_blocks),
+        meta.filter_chunk,
+        false,
+    )
+    .total();
+    Ok((record, outcomes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, Method};
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new("artifacts/mlp/meta.json").exists()
+    }
+
+    fn tiny(method: Method) -> RunConfig {
+        let mut c = presets::table1("mlp", method);
+        c.rounds = 6;
+        c.test_size = 200;
+        c.eval_every = 3;
+        c.pipeline = false;
+        c
+    }
+
+    #[test]
+    fn sequential_run_all_methods_smoke() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        for method in [Method::Rs, Method::Is, Method::Hl, Method::Ce, Method::Camel, Method::Cis] {
+            let (record, outcomes) = run(&tiny(method)).unwrap();
+            assert_eq!(outcomes.len(), 6, "{method:?}");
+            assert_eq!(record.curve.len(), 2, "{method:?}");
+            assert!(record.final_accuracy >= 0.0 && record.final_accuracy <= 1.0);
+            assert!(record.total_device_ms > 0.0);
+            assert!(record.energy_j > 0.0);
+            assert!(outcomes.iter().all(|o| o.train_loss.is_finite()));
+        }
+    }
+
+    #[test]
+    fn titan_sequential_uses_filter() {
+        if !have_artifacts() {
+            return;
+        }
+        let (record, outcomes) = run(&tiny(Method::Titan)).unwrap();
+        assert!(outcomes[0].selector.candidates <= 30);
+        assert!(record.total_device_ms > 0.0);
+        // Titan's GPU lane (filter+importance-on-30) must be cheaper than
+        // IS's (importance-on-100)
+        let (_, is_outcomes) = run(&tiny(Method::Is)).unwrap();
+        assert!(
+            outcomes[0].device_gpu_ms < is_outcomes[0].device_gpu_ms,
+            "titan {} vs is {}",
+            outcomes[0].device_gpu_ms,
+            is_outcomes[0].device_gpu_ms
+        );
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        if !have_artifacts() {
+            return;
+        }
+        let (r1, _) = run(&tiny(Method::Cis)).unwrap();
+        let (r2, _) = run(&tiny(Method::Cis)).unwrap();
+        assert_eq!(r1.final_accuracy, r2.final_accuracy);
+        let c1: Vec<f64> = r1.curve.iter().map(|p| p.test_loss).collect();
+        let c2: Vec<f64> = r2.curve.iter().map(|p| p.test_loss).collect();
+        assert_eq!(c1, c2);
+    }
+}

@@ -1,0 +1,174 @@
+//! Capped priority candidate buffer — the coarse filter's output.
+//!
+//! Keeps the top-`cap` samples by filter score (a min-heap on score: the
+//! worst retained candidate sits at the top and is evicted first). The
+//! fine-grained stage drains the buffer once per round.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::data::sample::Sample;
+
+/// A buffered candidate: sample + its coarse-filter score.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub sample: Sample,
+    pub score: f64,
+}
+
+// Min-heap ordering on score (reverse of natural), tie-broken by id so the
+// ordering is total and deterministic.
+impl PartialEq for Candidate {
+    fn eq(&self, other: &Self) -> bool {
+        self.score == other.score && self.sample.id == other.sample.id
+    }
+}
+impl Eq for Candidate {}
+impl PartialOrd for Candidate {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Candidate {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: smaller score = "greater" for the BinaryHeap max-heap,
+        // so the heap top is the WORST candidate.
+        other
+            .score
+            .partial_cmp(&self.score)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.sample.id.cmp(&self.sample.id))
+    }
+}
+
+/// Capped priority buffer.
+#[derive(Debug)]
+pub struct CandidateBuffer {
+    heap: BinaryHeap<Candidate>,
+    cap: usize,
+}
+
+impl CandidateBuffer {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "buffer cap must be positive");
+        Self {
+            heap: BinaryHeap::with_capacity(cap + 1),
+            cap,
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Offer a scored sample. Returns true if retained (possibly evicting
+    /// the current worst).
+    pub fn offer(&mut self, sample: Sample, score: f64) -> bool {
+        if self.heap.len() < self.cap {
+            self.heap.push(Candidate { sample, score });
+            return true;
+        }
+        // full: compare with the worst retained
+        if let Some(worst) = self.heap.peek() {
+            if score > worst.score {
+                self.heap.pop();
+                self.heap.push(Candidate { sample, score });
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Current worst retained score (None if empty).
+    pub fn worst_score(&self) -> Option<f64> {
+        self.heap.peek().map(|c| c.score)
+    }
+
+    /// Drain all candidates, best-score-first.
+    pub fn drain_sorted(&mut self) -> Vec<Candidate> {
+        let mut v: Vec<Candidate> = std::mem::take(&mut self.heap).into_vec();
+        v.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap_or(Ordering::Equal)
+                .then_with(|| a.sample.id.cmp(&b.sample.id))
+        });
+        v
+    }
+
+    /// Peek at the retained candidates (unsorted).
+    pub fn iter(&self) -> impl Iterator<Item = &Candidate> {
+        self.heap.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(id: u64) -> Sample {
+        Sample::new(id, 0, vec![0.0])
+    }
+
+    #[test]
+    fn keeps_top_k() {
+        let mut b = CandidateBuffer::new(3);
+        for (id, score) in [(0, 1.0), (1, 5.0), (2, 3.0), (3, 4.0), (4, 0.5)] {
+            b.offer(s(id), score);
+        }
+        let drained = b.drain_sorted();
+        let ids: Vec<u64> = drained.iter().map(|c| c.sample.id).collect();
+        assert_eq!(ids, vec![1, 3, 2]); // scores 5, 4, 3
+    }
+
+    #[test]
+    fn rejects_below_worst_when_full() {
+        let mut b = CandidateBuffer::new(2);
+        assert!(b.offer(s(0), 2.0));
+        assert!(b.offer(s(1), 3.0));
+        assert!(!b.offer(s(2), 1.0));
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.worst_score(), Some(2.0));
+    }
+
+    #[test]
+    fn eviction_updates_worst() {
+        let mut b = CandidateBuffer::new(2);
+        b.offer(s(0), 1.0);
+        b.offer(s(1), 2.0);
+        assert!(b.offer(s(2), 5.0)); // evicts score 1.0
+        assert_eq!(b.worst_score(), Some(2.0));
+    }
+
+    #[test]
+    fn deterministic_tiebreak_by_id() {
+        let mut b = CandidateBuffer::new(2);
+        b.offer(s(5), 1.0);
+        b.offer(s(3), 1.0);
+        b.offer(s(4), 1.0); // equal score: not better than worst -> rejected
+        let ids: Vec<u64> = b.drain_sorted().iter().map(|c| c.sample.id).collect();
+        assert_eq!(ids, vec![3, 5]);
+    }
+
+    #[test]
+    fn drain_empties() {
+        let mut b = CandidateBuffer::new(4);
+        b.offer(s(0), 1.0);
+        assert_eq!(b.drain_sorted().len(), 1);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_cap_panics() {
+        CandidateBuffer::new(0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Data plane: sample types, synthetic task generators (the stand-ins for
+//! CIFAR-10 / Speech Commands / HARBOX — see DESIGN.md §Substitutions),
+//! the streaming source with noise injection, the class-indexed sample
+//! store and the capped candidate priority buffer.
+
+pub mod buffer;
+pub mod sample;
+pub mod store;
+pub mod stream;
+pub mod synth;
+
+pub use buffer::CandidateBuffer;
+pub use sample::Sample;
+pub use store::ClassStore;
+pub use stream::{StreamSource, StreamStats};
+pub use synth::{SynthTask, TaskSpec};

@@ -1,0 +1,61 @@
+//! The unit of the data plane: one labelled sample.
+
+use std::sync::Arc;
+
+/// One labelled training sample. `x` is the flattened input in the exact
+/// layout the AOT artifacts expect ([input_dim] f32, row-major). Inputs are
+//  shared behind `Arc` — samples are cloned freely between the filter,
+/// the candidate buffer, and the trainer without copying the payload.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// Monotone id assigned by the stream source (unique per run).
+    pub id: u64,
+    /// Class label in [0, num_classes).
+    pub label: u32,
+    /// Flattened input features.
+    pub x: Arc<Vec<f32>>,
+    /// True label before noise injection (for noise-robustness analysis;
+    /// equals `label` on clean streams).
+    pub clean_label: u32,
+}
+
+impl Sample {
+    pub fn new(id: u64, label: u32, x: Vec<f32>) -> Self {
+        Self {
+            id,
+            label,
+            clean_label: label,
+            x: Arc::new(x),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    /// Whether the label was corrupted by noise injection.
+    pub fn label_is_noisy(&self) -> bool {
+        self.label != self.clean_label
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_cheap_clone() {
+        let s = Sample::new(7, 2, vec![1.0, 2.0, 3.0]);
+        assert_eq!(s.dim(), 3);
+        assert!(!s.label_is_noisy());
+        let t = s.clone();
+        assert!(Arc::ptr_eq(&s.x, &t.x), "clone must share the payload");
+    }
+
+    #[test]
+    fn noisy_label_flag() {
+        let mut s = Sample::new(1, 0, vec![0.0]);
+        s.label = 3;
+        assert!(s.label_is_noisy());
+    }
+}

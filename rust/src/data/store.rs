@@ -1,0 +1,144 @@
+//! Class-indexed sample store — the on-device storage `S` with per-class
+//! shards `S_y` from the paper's formulation. Bounded capacity with
+//! reservoir-style eviction (devices cannot keep the whole stream).
+
+use crate::data::sample::Sample;
+use crate::util::rng::Xoshiro256;
+
+/// Bounded, class-indexed sample store.
+///
+/// `|S_y|` counts track *all* samples ever offered per class (the stream
+/// frequencies the C-IS allocation uses), while the retained samples are a
+/// uniform reservoir per class — matching the paper's setting where
+/// storage holds a subset but class frequencies are observable.
+#[derive(Debug)]
+pub struct ClassStore {
+    per_class: Vec<Vec<Sample>>,
+    seen_per_class: Vec<u64>,
+    cap_per_class: usize,
+    rng: Xoshiro256,
+}
+
+impl ClassStore {
+    pub fn new(num_classes: usize, cap_per_class: usize, seed: u64) -> Self {
+        Self {
+            per_class: vec![Vec::new(); num_classes],
+            seen_per_class: vec![0; num_classes],
+            cap_per_class,
+            rng: Xoshiro256::seed_from_u64(seed ^ 0x5708_E0),
+        }
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.per_class.len()
+    }
+
+    /// Offer a sample; reservoir-evict if the class shard is full.
+    pub fn offer(&mut self, s: Sample) {
+        let y = s.label as usize;
+        assert!(y < self.per_class.len(), "label {y} out of range");
+        self.seen_per_class[y] += 1;
+        let shard = &mut self.per_class[y];
+        if shard.len() < self.cap_per_class {
+            shard.push(s);
+        } else {
+            // classic reservoir: replace with prob cap/seen
+            let seen = self.seen_per_class[y];
+            let j = self.rng.next_below(seen);
+            if (j as usize) < self.cap_per_class {
+                shard[j as usize] = s;
+            }
+        }
+    }
+
+    /// Samples currently stored for class y.
+    pub fn class(&self, y: usize) -> &[Sample] {
+        &self.per_class[y]
+    }
+
+    /// Total samples ever seen for class y (the |S_y| of Eq. 2).
+    pub fn seen(&self, y: usize) -> u64 {
+        self.seen_per_class[y]
+    }
+
+    pub fn stored_total(&self) -> usize {
+        self.per_class.iter().map(|v| v.len()).sum()
+    }
+
+    /// All stored samples, flattened (class-major order).
+    pub fn all(&self) -> Vec<&Sample> {
+        self.per_class.iter().flatten().collect()
+    }
+
+    /// Memory footprint of the stored payloads in bytes (for Fig. 6c).
+    pub fn payload_bytes(&self) -> usize {
+        self.per_class
+            .iter()
+            .flatten()
+            .map(|s| s.dim() * std::mem::size_of::<f32>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(id: u64, label: u32) -> Sample {
+        Sample::new(id, label, vec![id as f32; 4])
+    }
+
+    #[test]
+    fn fills_then_reservoir_evicts() {
+        let mut st = ClassStore::new(2, 5, 1);
+        for i in 0..50 {
+            st.offer(sample(i, 0));
+        }
+        assert_eq!(st.class(0).len(), 5);
+        assert_eq!(st.seen(0), 50);
+        assert_eq!(st.class(1).len(), 0);
+        // reservoir keeps a spread, not just the first 5
+        assert!(
+            st.class(0).iter().any(|s| s.id >= 5),
+            "no late sample retained: {:?}",
+            st.class(0).iter().map(|s| s.id).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn reservoir_is_roughly_uniform() {
+        // each of 100 offered ids should be retained ~ cap/100 of the time
+        let mut hits = vec![0usize; 100];
+        for seed in 0..300 {
+            let mut st = ClassStore::new(1, 10, seed);
+            for i in 0..100 {
+                st.offer(sample(i, 0));
+            }
+            for s in st.class(0) {
+                hits[s.id as usize] += 1;
+            }
+        }
+        // expected 30 hits per id (300 trials * 10/100); allow wide slack
+        for (i, &h) in hits.iter().enumerate() {
+            assert!((5..80).contains(&h), "id {i}: {h} retentions");
+        }
+    }
+
+    #[test]
+    fn totals_and_payload() {
+        let mut st = ClassStore::new(3, 4, 2);
+        for i in 0..6 {
+            st.offer(sample(i, (i % 3) as u32));
+        }
+        assert_eq!(st.stored_total(), 6);
+        assert_eq!(st.all().len(), 6);
+        assert_eq!(st.payload_bytes(), 6 * 4 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_bad_label() {
+        let mut st = ClassStore::new(2, 4, 3);
+        st.offer(sample(0, 9));
+    }
+}

@@ -1,0 +1,100 @@
+//! Fluctuating idle-resource traces (paper §3.4 + Fig. 9 / Appendix B).
+//!
+//! Co-running apps occupy a varying share of the selection lane. Titan
+//! adapts by letting the coarse filter keep however many candidates the
+//! idle capacity managed to evaluate that round, instead of a fixed size.
+//! A trace maps round -> available fraction of the GPU lane; the
+//! coordinator converts that into this round's effective candidate budget.
+
+use crate::util::rng::Xoshiro256;
+
+/// A per-round idle-capacity trace in [min_frac, 1].
+#[derive(Clone, Debug)]
+pub enum IdleTrace {
+    /// Constant capacity (the default fixed-budget experiments).
+    Constant(f64),
+    /// Sinusoid with period (rounds) — diurnal-style load.
+    Sine { min: f64, max: f64, period: f64 },
+    /// Bounded random walk — bursty co-running apps.
+    RandomWalk { min: f64, max: f64, step: f64, seed: u64 },
+}
+
+impl IdleTrace {
+    /// Available fraction of the selection lane in `round`.
+    pub fn fraction(&self, round: usize) -> f64 {
+        match self {
+            IdleTrace::Constant(f) => f.clamp(0.05, 1.0),
+            IdleTrace::Sine { min, max, period } => {
+                let phase = round as f64 / period * std::f64::consts::TAU;
+                let mid = (min + max) / 2.0;
+                let amp = (max - min) / 2.0;
+                (mid + amp * phase.sin()).clamp(0.05, 1.0)
+            }
+            IdleTrace::RandomWalk { min, max, step, seed } => {
+                // stateless: regenerate the walk up to `round` (rounds are
+                // small; determinism beats carrying state through threads)
+                let mut rng = Xoshiro256::seed_from_u64(*seed ^ 0x1D1E);
+                let mut x = (min + max) / 2.0;
+                for _ in 0..=round {
+                    x += (rng.next_f64() * 2.0 - 1.0) * step;
+                    x = x.clamp(*min, *max);
+                }
+                x.clamp(0.05, 1.0)
+            }
+        }
+    }
+
+    /// Effective candidate budget for the round given the configured
+    /// maximum: the filter can only score/buffer what the idle share of
+    /// the lane gets through (paper: "evaluated samples naturally become
+    /// candidate data ... without a predefined size").
+    pub fn candidate_budget(&self, round: usize, max_candidates: usize) -> usize {
+        let b = (self.fraction(round) * max_candidates as f64).round() as usize;
+        b.clamp(1, max_candidates)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_trace() {
+        let t = IdleTrace::Constant(0.5);
+        assert_eq!(t.fraction(0), 0.5);
+        assert_eq!(t.candidate_budget(3, 100), 50);
+    }
+
+    #[test]
+    fn sine_oscillates_in_bounds() {
+        let t = IdleTrace::Sine { min: 0.2, max: 1.0, period: 50.0 };
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for r in 0..200 {
+            let f = t.fraction(r);
+            assert!((0.05..=1.0).contains(&f));
+            lo = lo.min(f);
+            hi = hi.max(f);
+        }
+        assert!(lo < 0.3 && hi > 0.9, "range [{lo}, {hi}]");
+    }
+
+    #[test]
+    fn random_walk_deterministic_and_bounded() {
+        let t = IdleTrace::RandomWalk { min: 0.15, max: 1.0, step: 0.1, seed: 3 };
+        for r in [0usize, 7, 31] {
+            let a = t.fraction(r);
+            let b = t.fraction(r);
+            assert_eq!(a, b);
+            assert!((0.05..=1.0).contains(&a));
+        }
+    }
+
+    #[test]
+    fn budget_clamped() {
+        let t = IdleTrace::Constant(0.001);
+        assert_eq!(t.candidate_budget(0, 30), 2); // 0.05 floor * 30, min 1
+        let t = IdleTrace::Constant(1.0);
+        assert_eq!(t.candidate_budget(0, 30), 30);
+    }
+}

@@ -1,0 +1,81 @@
+//! Fig. 10 / Appendix B — federated learning: 50 devices, non-IID local
+//! streams (5 classes each), 20% participation, 3 local iterations,
+//! FedAvg. Compares global-model convergence under per-device selection
+//! methods (RS / IS / C-IS-as-Titan's-fine-stage).
+
+use crate::config::{presets, Method};
+use crate::fl::{self, FlConfig};
+use crate::metrics::{render_table, write_result};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::Result;
+
+pub fn run(args: &Args) -> Result<()> {
+    let models = super::models_from_args(args, &["mlp"]);
+    let methods = [Method::Rs, Method::Is, Method::Cis];
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    let fast = args.has_flag("fast");
+    for model in &models {
+        let mut rs_rounds_to: Option<usize> = None;
+        let mut rs_target = 0.0;
+        for &method in &methods {
+            let mut base = super::tune(presets::table1(model, method), args)?;
+            base.pipeline = false;
+            let mut cfg = FlConfig::paper_default(base);
+            if fast {
+                cfg.num_devices = 10;
+                cfg.comm_rounds = 10;
+                cfg.base.eval_every = 2;
+            }
+            cfg.comm_rounds = args.get_usize("comm-rounds", cfg.comm_rounds)?;
+            let rec = fl::run(&cfg)?;
+            if method == Method::Rs {
+                rs_target = rec.final_accuracy;
+                rs_rounds_to = rec.rounds_to_accuracy(rs_target);
+            }
+            let rounds_to = rec.rounds_to_accuracy(rs_target);
+            let speedup = match (rs_rounds_to, rounds_to) {
+                (Some(a), Some(b)) if b > 0 => format!("{:.2}x", a as f64 / b as f64),
+                _ => "-".into(),
+            };
+            rows.push(vec![
+                model.clone(),
+                method.name().to_string(),
+                format!("{:.1}", rec.final_accuracy * 100.0),
+                rounds_to.map(|r| r.to_string()).unwrap_or("-".into()),
+                speedup,
+            ]);
+            let curve: Vec<Json> = rec
+                .curve
+                .iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("round", Json::Num(p.round as f64)),
+                        ("test_accuracy", Json::Num(p.test_accuracy)),
+                    ])
+                })
+                .collect();
+            out.push(Json::obj(vec![
+                ("model", Json::Str(model.clone())),
+                ("method", Json::Str(method.name().into())),
+                ("final_accuracy", Json::Num(rec.final_accuracy)),
+                (
+                    "rounds_to_rs_target",
+                    rounds_to.map(|r| Json::Num(r as f64)).unwrap_or(Json::Null),
+                ),
+                ("curve", Json::Arr(curve)),
+            ]));
+        }
+    }
+    println!(
+        "{}",
+        render_table(
+            &["model", "method", "final_acc_%", "rounds_to_target", "speedup"],
+            &rows
+        )
+    );
+    let path = write_result("fig10", &Json::Arr(out))?;
+    println!("results -> {}", path.display());
+    Ok(())
+}

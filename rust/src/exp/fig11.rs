@@ -1,0 +1,60 @@
+//! Fig. 11 / Appendix B — noisy data streams: feature noise (Gaussian on
+//! 40% of inputs) and label noise (40% of labels flipped). Titan should
+//! stay ahead of RS/IS in both settings, and degrade more under label
+//! noise than feature noise (label noise corrupts the gradient evidence).
+
+use crate::config::{presets, Method};
+use crate::metrics::{render_table, write_result};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::Result;
+
+pub fn run(args: &Args) -> Result<()> {
+    let models = super::models_from_args(args, &["mlp"]);
+    let methods = [Method::Rs, Method::Is, Method::Camel, Method::Titan];
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for model in &models {
+        for (noise_name, label_noise) in [("feature", false), ("label", true)] {
+            let mut rs_time = 0.0f64;
+            let mut target = 0.0f64;
+            for &method in &methods {
+                let cfg = super::tune(presets::noisy(model, method, label_noise), args)?;
+                let record = super::run_config(&cfg)?;
+                if method == Method::Rs {
+                    target = record.final_accuracy * super::TARGET_FRAC;
+                    rs_time = record
+                        .time_to_accuracy_device(target)
+                        .unwrap_or(record.total_device_ms);
+                }
+                let tta = record
+                    .time_to_accuracy_device(target)
+                    .unwrap_or(record.total_device_ms);
+                rows.push(vec![
+                    model.clone(),
+                    noise_name.to_string(),
+                    method.name().to_string(),
+                    format!("{:.1}", record.final_accuracy * 100.0),
+                    super::norm(tta, rs_time),
+                ]);
+                out.push(Json::obj(vec![
+                    ("model", Json::Str(model.clone())),
+                    ("noise", Json::Str(noise_name.into())),
+                    ("method", Json::Str(method.name().into())),
+                    ("final_accuracy", Json::Num(record.final_accuracy)),
+                    ("norm_tta", Json::Num(tta / rs_time.max(1e-9))),
+                ]));
+            }
+        }
+    }
+    println!(
+        "{}",
+        render_table(
+            &["model", "noise", "method", "final_acc_%", "norm_tta"],
+            &rows
+        )
+    );
+    let path = write_result("fig11", &Json::Arr(out))?;
+    println!("results -> {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Fig. 2 — the motivating comparison of cloud-side selection methods on
+//! device:
+//!
+//! (a) per-round training time of each method (the importance-computation
+//!     blowup: IS/HDS/CS up to ~7× training-only);
+//! (b) training curves at batch sizes 10 and 25 (HDS degrades at small
+//!     batch; RS is surprisingly strong).
+
+use crate::config::{presets, Method};
+use crate::coordinator::sequential;
+use crate::metrics::{render_table, write_result};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Fig. 2(a): mean per-round device time per method (normalized to RS).
+pub fn run_a(args: &Args) -> Result<()> {
+    let models = super::models_from_args(args, &["mlp"]);
+    let methods = super::table1_methods();
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for model in &models {
+        let mut rs_time = 0.0f64;
+        for &method in &methods {
+            let mut cfg = super::tune(presets::table1(model, method), args)?;
+            cfg.rounds = cfg.rounds.min(12); // timing stabilizes quickly
+            cfg.eval_every = 0;
+            cfg.pipeline = false; // (a) isolates the selection cost
+            let (record, _) = sequential::run(&cfg)?;
+            let per_round =
+                record.total_device_ms / cfg.rounds as f64;
+            if method == Method::Rs {
+                rs_time = per_round;
+            }
+            rows.push(vec![
+                model.clone(),
+                method.name().to_string(),
+                format!("{per_round:.0}"),
+                super::norm(per_round, rs_time),
+            ]);
+            out.push(Json::obj(vec![
+                ("model", Json::Str(model.clone())),
+                ("method", Json::Str(method.name().into())),
+                ("per_round_device_ms", Json::Num(per_round)),
+                ("vs_rs", Json::Num(if rs_time > 0.0 { per_round / rs_time } else { 0.0 })),
+            ]));
+        }
+    }
+    println!(
+        "{}",
+        render_table(&["model", "method", "round_ms(dev)", "xRS"], &rows)
+    );
+    let path = write_result("fig2a", &Json::Arr(out))?;
+    println!("results -> {}", path.display());
+    Ok(())
+}
+
+/// Fig. 2(b): training curves at batch 10 vs 25 for RS and the heuristics.
+pub fn run_b(args: &Args) -> Result<()> {
+    let models = super::models_from_args(args, &["mlp"]);
+    let methods = [Method::Rs, Method::Ll, Method::Ce, Method::Camel, Method::Is];
+    let mut out = Vec::new();
+    let mut rows = Vec::new();
+    for model in &models {
+        for &batch in &[10usize, 25] {
+            for &method in &methods {
+                let mut cfg = super::tune(presets::table1(model, method), args)?;
+                cfg.batch_size = batch;
+                cfg.candidate_size = cfg.candidate_size.max(batch + 5);
+                cfg.pipeline = false;
+                let (record, _) = sequential::run(&cfg)?;
+                let curve: Vec<Json> = record
+                    .curve
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("round", Json::Num(p.round as f64)),
+                            ("test_accuracy", Json::Num(p.test_accuracy)),
+                        ])
+                    })
+                    .collect();
+                rows.push(vec![
+                    model.clone(),
+                    format!("{batch}"),
+                    method.name().to_string(),
+                    format!("{:.1}", record.final_accuracy * 100.0),
+                ]);
+                out.push(Json::obj(vec![
+                    ("model", Json::Str(model.clone())),
+                    ("batch", Json::Num(batch as f64)),
+                    ("method", Json::Str(method.name().into())),
+                    ("final_accuracy", Json::Num(record.final_accuracy)),
+                    ("curve", Json::Arr(curve)),
+                ]));
+            }
+        }
+    }
+    println!(
+        "{}",
+        render_table(&["model", "batch", "method", "final_acc_%"], &rows)
+    );
+    let path = write_result("fig2b", &Json::Arr(out))?;
+    println!("results -> {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,328 @@
+//! Fig. 5 — the preliminary analyses backing Titan's design:
+//!
+//! (a) batch-gradient variance of RS / IS / C-IS across batch sizes
+//!     (C-IS optimal, the IS gap widening at small batch);
+//! (b) coarse-filter ablation: how much of C-IS's variance reduction
+//!     survives when the filter keeps only 30% of the stream;
+//! (c) importance (gradient-norm) stability across consecutive rounds
+//!     (the one-round-delay justification).
+
+use crate::config::{presets, Method};
+use crate::coordinator::{build_stream, SelectorEngine, TrainerEngine};
+use crate::data::Sample;
+use crate::filter::CoarseFilter;
+use crate::metrics::{render_table, write_result};
+use crate::selection::variance::fig5_variances;
+use crate::selection::cis::class_summaries;
+use crate::selection::variance::{spec_cis, theorem2_variance};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Draw one stream round and compute its ImportanceOut under a lightly
+/// trained model (so gradients are informative, not random-init noise).
+fn trained_candidates(
+    model: &str,
+    args: &Args,
+    warmup_rounds: usize,
+) -> Result<(Vec<Sample>, crate::runtime::model::ImportanceOut, usize)> {
+    let mut cfg = super::tune(presets::table1(model, Method::Cis), args)?;
+    cfg.pipeline = false;
+    let (mut stream, _) = build_stream(&cfg);
+    let mut trainer = TrainerEngine::new(&cfg)?;
+    let mut sel = SelectorEngine::new(&cfg, stream.task())?;
+    let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(cfg.seed);
+    for _ in 0..warmup_rounds {
+        let arrivals = stream.next_round(cfg.stream_per_round);
+        let picks = rng.sample_indices(arrivals.len(), cfg.batch_size);
+        let batch: Vec<Sample> = picks.iter().map(|&i| arrivals[i].clone()).collect();
+        trainer.train(&batch)?;
+    }
+    sel.sync_params(trainer.params())?;
+    let arrivals = stream.next_round(cfg.stream_per_round);
+    let refs: Vec<&Sample> = arrivals.iter().collect();
+    let imp = sel.rt.importance(&refs)?;
+    let classes = sel.rt.set.meta.num_classes;
+    Ok((arrivals, imp, classes))
+}
+
+/// Fig. 5(a).
+pub fn run_a(args: &Args) -> Result<()> {
+    let models = super::models_from_args(args, &["mlp"]);
+    let batches = [2usize, 5, 10, 25, 50];
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for model in &models {
+        let (arrivals, imp, classes) = trained_candidates(model, args, 10)?;
+        let labels: Vec<u32> = arrivals.iter().map(|s| s.label).collect();
+        for &b in &batches {
+            let (rs, is, cis) = fig5_variances(&labels, &imp, classes, b)?;
+            rows.push(vec![
+                model.clone(),
+                format!("{b}"),
+                format!("{rs:.4}"),
+                format!("{is:.4}"),
+                format!("{cis:.4}"),
+            ]);
+            out.push(Json::obj(vec![
+                ("model", Json::Str(model.clone())),
+                ("batch", Json::Num(b as f64)),
+                ("var_rs", Json::Num(rs)),
+                ("var_is", Json::Num(is)),
+                ("var_cis", Json::Num(cis)),
+            ]));
+        }
+    }
+    println!(
+        "{}",
+        render_table(&["model", "batch", "V[RS]", "V[IS]", "V[C-IS]"], &rows)
+    );
+    let path = write_result("fig5a", &Json::Arr(out))?;
+    println!("results -> {}", path.display());
+    Ok(())
+}
+
+/// Fig. 5(b): candidate filters (random / rep-only / div-only / Rep+Div)
+/// feeding C-IS, vs the ideal of C-IS on the whole stream. Metric: the
+/// retained fraction of the ideal variance *reduction* relative to RS.
+pub fn run_b(args: &Args) -> Result<()> {
+    let models = super::models_from_args(args, &["mlp"]);
+    let keep = 30usize;
+    let batch = 10usize;
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for model in &models {
+        let (arrivals, imp_all, classes) = trained_candidates(model, args, 10)?;
+        let labels_all: Vec<u32> = arrivals.iter().map(|s| s.label).collect();
+        let (rs_all, _, cis_all) = fig5_variances(&labels_all, &imp_all, classes, batch)?;
+        let ideal_reduction = (rs_all - cis_all).max(1e-12);
+
+        // filter schemes -> candidate index subsets
+        let mut schemes: Vec<(&str, Vec<usize>)> = Vec::new();
+        // random keep
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(7);
+        schemes.push(("random", rng.sample_indices(arrivals.len(), keep)));
+        for (name, lam) in [("rep_only", 1.0f32), ("div_only", 0.0), ("rep+div", 0.3)] {
+            // score via the coarse filter machinery on raw-input "features"
+            // of the candidates themselves (filter-feature geometry mirrors
+            // input geometry for the synthetic tasks)
+            let dim = 16.min(arrivals[0].dim());
+            let mut filt = CoarseFilter::new(classes, dim, keep, lam);
+            for s in &arrivals {
+                let feat: Vec<f32> = s.x[..dim].to_vec();
+                filt.process(s.clone(), &feat);
+            }
+            let kept: Vec<usize> = filt
+                .drain()
+                .into_iter()
+                .map(|c| arrivals.iter().position(|s| s.id == c.sample.id).unwrap())
+                .collect();
+            schemes.push((name, kept));
+        }
+
+        for (name, subset) in schemes {
+            // MSE of C-IS restricted to the subset = Theorem-2 variance on
+            // the sub-Gram + the subset-selection bias ‖ḡ_S − ḡ_F‖²
+            // (the batch estimates the FULL stream's gradient; a filtered
+            // candidate pool whose mean drifts from the stream mean pays
+            // that drift as bias even if its internal variance is small)
+            let sub_labels: Vec<u32> = subset.iter().map(|&i| labels_all[i]).collect();
+            let sub_imp = sub_importance(&imp_all, &subset);
+            let summaries = class_summaries(&sub_labels, &sub_imp, classes);
+            let spec = spec_cis(&summaries, &sub_imp, batch);
+            // two metrics: pure estimator variance on the candidate pool
+            // (the paper's "gradient variance reduction degree") and the
+            // stricter MSE that charges the pool's drift from the full
+            // stream mean as bias (our addition — see EXPERIMENTS.md)
+            let var_only = theorem2_variance(&summaries, &sub_imp, &spec);
+            let mse = var_only + subset_bias2(&imp_all, &subset);
+            let ret_var = ((rs_all - var_only) / ideal_reduction).max(0.0);
+            let ret_mse = ((rs_all - mse) / ideal_reduction).max(0.0);
+            rows.push(vec![
+                model.clone(),
+                name.to_string(),
+                format!("{var_only:.4}"),
+                format!("{:.1}", ret_var * 100.0),
+                format!("{:.1}", ret_mse * 100.0),
+            ]);
+            out.push(Json::obj(vec![
+                ("model", Json::Str(model.clone())),
+                ("filter", Json::Str(name.into())),
+                ("variance", Json::Num(var_only)),
+                ("mse", Json::Num(mse)),
+                ("retained_var_pct", Json::Num(ret_var * 100.0)),
+                ("retained_mse_pct", Json::Num(ret_mse * 100.0)),
+            ]));
+        }
+        rows.push(vec![
+            model.clone(),
+            "ideal(all)".into(),
+            format!("{cis_all:.4}"),
+            "100.0".into(),
+            "100.0".into(),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            &["model", "filter", "V[C-IS]", "retained_var_%", "retained_mse_%"],
+            &rows
+        )
+    );
+    let path = write_result("fig5b", &Json::Arr(out))?;
+    println!("results -> {}", path.display());
+    Ok(())
+}
+
+/// ‖ḡ_S − ḡ_F‖²: squared distance between the subset's mean gradient and
+/// the full candidate set's, computed from the Gram matrix.
+fn subset_bias2(imp: &crate::runtime::model::ImportanceOut, subset: &[usize]) -> f64 {
+    let nf = imp.valid;
+    let ns = subset.len();
+    if ns == 0 || nf == 0 {
+        return 0.0;
+    }
+    let mut ss = 0.0f64; // Σ_{i,j∈S} K
+    for &i in subset {
+        for &j in subset {
+            ss += imp.k_at(i, j) as f64;
+        }
+    }
+    let mut sf = 0.0f64; // Σ_{i∈S, j∈F} K
+    for &i in subset {
+        for j in 0..nf {
+            sf += imp.k_at(i, j) as f64;
+        }
+    }
+    let mut ff = 0.0f64; // Σ_{i,j∈F} K
+    for i in 0..nf {
+        for j in 0..nf {
+            ff += imp.k_at(i, j) as f64;
+        }
+    }
+    (ss / (ns * ns) as f64 - 2.0 * sf / (ns * nf) as f64 + ff / (nf * nf) as f64).max(0.0)
+}
+
+/// Restrict an ImportanceOut to a candidate subset.
+fn sub_importance(
+    imp: &crate::runtime::model::ImportanceOut,
+    subset: &[usize],
+) -> crate::runtime::model::ImportanceOut {
+    let m = subset.len();
+    let mut k = vec![0.0f32; m * m];
+    for (a, &i) in subset.iter().enumerate() {
+        for (b, &j) in subset.iter().enumerate() {
+            k[a * m + b] = imp.k_at(i, j);
+        }
+    }
+    crate::runtime::model::ImportanceOut {
+        norms: subset.iter().map(|&i| imp.norms[i]).collect(),
+        k,
+        n_total: m,
+        valid: m,
+    }
+}
+
+/// Fig. 5(c): Pearson correlation of per-sample gradient norms between
+/// rounds separated by a gap (fixed probe set).
+pub fn run_c(args: &Args) -> Result<()> {
+    let models = super::models_from_args(args, &["mlp"]);
+    let gaps = [1usize, 2, 5, 10];
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for model in &models {
+        let mut cfg = super::tune(presets::table1(model, Method::Rs), args)?;
+        cfg.pipeline = false;
+        let rounds = cfg.rounds.min(40);
+        let (mut stream, _) = build_stream(&cfg);
+        let mut trainer = TrainerEngine::new(&cfg)?;
+        let mut sel = SelectorEngine::new(&cfg, stream.task())?;
+        // fixed probe set
+        let probe: Vec<Sample> = stream.next_round(cfg.stream_per_round);
+        let probe_refs: Vec<&Sample> = probe.iter().collect();
+        let mut norm_history: Vec<Vec<f32>> = Vec::new();
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(cfg.seed ^ 0xF16C);
+        for _ in 0..rounds {
+            sel.sync_params(trainer.params())?;
+            norm_history.push(sel.rt.importance(&probe_refs)?.norms);
+            let arrivals = stream.next_round(cfg.stream_per_round);
+            let picks = rng.sample_indices(arrivals.len(), cfg.batch_size);
+            let batch: Vec<Sample> = picks.iter().map(|&i| arrivals[i].clone()).collect();
+            trainer.train(&batch)?;
+        }
+        for &gap in &gaps {
+            let mut cors = Vec::new();
+            for t in 0..norm_history.len().saturating_sub(gap) {
+                cors.push(pearson(&norm_history[t], &norm_history[t + gap]));
+            }
+            let mean_cor = crate::util::stats::mean(&cors);
+            rows.push(vec![
+                model.clone(),
+                format!("{gap}"),
+                format!("{mean_cor:.3}"),
+            ]);
+            out.push(Json::obj(vec![
+                ("model", Json::Str(model.clone())),
+                ("gap", Json::Num(gap as f64)),
+                ("mean_pearson", Json::Num(mean_cor)),
+            ]));
+        }
+    }
+    println!(
+        "{}",
+        render_table(&["model", "round_gap", "norm_correlation"], &rows)
+    );
+    let path = write_result("fig5c", &Json::Arr(out))?;
+    println!("results -> {}", path.display());
+    Ok(())
+}
+
+/// Pearson correlation of two f32 series.
+fn pearson(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len().min(b.len());
+    if n < 2 {
+        return 0.0;
+    }
+    let ma = a[..n].iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+    let mb = b[..n].iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for i in 0..n {
+        let da = a[i] as f64 - ma;
+        let db = b[i] as f64 - mb;
+        cov += da * db;
+        va += da * da;
+        vb += db * db;
+    }
+    if va <= 0.0 || vb <= 0.0 {
+        0.0
+    } else {
+        cov / (va.sqrt() * vb.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_basics() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let up = [2.0f32, 4.0, 6.0, 8.0];
+        let down = [4.0f32, 3.0, 2.0, 1.0];
+        assert!((pearson(&a, &up) - 1.0).abs() < 1e-9);
+        assert!((pearson(&a, &down) + 1.0).abs() < 1e-9);
+        assert_eq!(pearson(&a[..1], &up[..1]), 0.0);
+    }
+
+    #[test]
+    fn sub_importance_extracts_block() {
+        use crate::selection::testutil::importance_from_grads;
+        let imp = importance_from_grads(&[(1.0, 0.0), (0.0, 1.0), (2.0, 0.0)]);
+        let sub = sub_importance(&imp, &[0, 2]);
+        assert_eq!(sub.valid, 2);
+        assert!((sub.k_at(0, 1) - 2.0).abs() < 1e-5); // <(1,0),(2,0)> = 2
+        assert_eq!(sub.norms.len(), 2);
+    }
+}

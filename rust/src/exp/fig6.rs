@@ -1,0 +1,194 @@
+//! Fig. 6 — system-overhead analysis:
+//!
+//! (a) per-round time: train-only vs sequential (train+select) vs the
+//!     pipeline (co-execution) — the pipeline's sync cost is negligible;
+//! (b) per-streaming-sample processing delay (Titan: 4–13 ms device /
+//!     sub-ms host);
+//! (c) peak memory footprint breakdown (pipeline adds <10% for conv nets);
+//! (d) average device power and total energy vs RS.
+
+use crate::config::{presets, Method};
+use crate::coordinator::{pipeline, sequential};
+use crate::device::{memory, CostModel, Op};
+use crate::metrics::{render_table, write_result};
+use crate::runtime::artifact::ArtifactSet;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Fig. 6(a).
+pub fn run_a(args: &Args) -> Result<()> {
+    let models = super::models_from_args(args, &["mlp"]);
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for model in &models {
+        let mut cfg = super::tune(presets::table1(model, Method::Titan), args)?;
+        cfg.rounds = cfg.rounds.min(12);
+        cfg.eval_every = 0;
+
+        // train-only: the device cost of just the SGD step
+        let costs = CostModel::for_model(model);
+        let train_only = costs.cost_ms(Op::TrainStep { batch: cfg.batch_size });
+
+        let mut seq_cfg = cfg.clone();
+        seq_cfg.pipeline = false;
+        let (seq_rec, _) = sequential::run(&seq_cfg)?;
+        let seq_ms = seq_rec.total_device_ms / seq_cfg.rounds as f64;
+
+        let (pipe_rec, _) = pipeline::run(&cfg)?;
+        let pipe_ms = pipe_rec.total_device_ms / cfg.rounds as f64;
+
+        rows.push(vec![
+            model.clone(),
+            format!("{train_only:.0}"),
+            format!("{seq_ms:.0}"),
+            format!("{pipe_ms:.0}"),
+            format!("{:.1}%", (pipe_ms / train_only - 1.0) * 100.0),
+        ]);
+        out.push(Json::obj(vec![
+            ("model", Json::Str(model.clone())),
+            ("train_only_ms", Json::Num(train_only)),
+            ("sequential_ms", Json::Num(seq_ms)),
+            ("pipeline_ms", Json::Num(pipe_ms)),
+        ]));
+    }
+    println!(
+        "{}",
+        render_table(
+            &["model", "train_only", "sequential", "pipeline", "pipe_overhead"],
+            &rows
+        )
+    );
+    let path = write_result("fig6a", &Json::Arr(out))?;
+    println!("results -> {}", path.display());
+    Ok(())
+}
+
+/// Fig. 6(b): per-streaming-sample processing delay. Device-model delay
+/// (block-1 forward per sample) + measured host delay from a Titan run.
+pub fn run_b(args: &Args) -> Result<()> {
+    let models = super::models_from_args(args, &["mlp"]);
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for model in &models {
+        let mut cfg = super::tune(presets::table1(model, Method::Titan), args)?;
+        cfg.rounds = cfg.rounds.min(10);
+        cfg.eval_every = 0;
+        let (rec, _) = pipeline::run(&cfg)?;
+        let costs = CostModel::for_model(model);
+        let device_ms = costs.cost_ms(Op::Features { chunk: 1, blocks: cfg.filter_blocks });
+        rows.push(vec![
+            model.clone(),
+            format!("{device_ms:.1}"),
+            format!("{:.3}", rec.processing_delay.mean_ms()),
+            format!("{:.3}", rec.processing_delay.percentile_ms(99.0)),
+        ]);
+        out.push(Json::obj(vec![
+            ("model", Json::Str(model.clone())),
+            ("device_per_sample_ms", Json::Num(device_ms)),
+            ("host_per_sample_ms_mean", Json::Num(rec.processing_delay.mean_ms())),
+            ("host_per_sample_ms_p99", Json::Num(rec.processing_delay.percentile_ms(99.0))),
+        ]));
+    }
+    println!(
+        "{}",
+        render_table(
+            &["model", "device_ms/sample", "host_ms/sample", "host_p99"],
+            &rows
+        )
+    );
+    let path = write_result("fig6b", &Json::Arr(out))?;
+    println!("results -> {}", path.display());
+    Ok(())
+}
+
+/// Fig. 6(c): memory breakdown.
+pub fn run_c(args: &Args) -> Result<()> {
+    let models = super::models_from_args(args, &["mlp"]);
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for model in &models {
+        let cfg = super::tune(presets::table1(model, Method::Titan), args)?;
+        let set = ArtifactSet::discover(&cfg.artifacts_dir, model)?;
+        let m = &set.meta;
+        let br = memory::estimate(
+            m.param_count,
+            memory::act_mult_for(model),
+            cfg.batch_size,
+            m.input_dim,
+            cfg.candidate_size,
+            m.cand_max,
+            m.feature_dim(cfg.filter_blocks),
+            m.filter_chunk,
+            true,
+        );
+        let mb = |b: usize| format!("{:.2}", b as f64 / (1024.0 * 1024.0));
+        rows.push(vec![
+            model.clone(),
+            mb(br.params_trainer + br.train_activations),
+            mb(br.params_selector),
+            mb(br.candidate_buffer + br.selection_workspace),
+            format!("{:.1}%", br.overhead_frac() * 100.0),
+        ]);
+        out.push(Json::obj(vec![
+            ("model", Json::Str(model.clone())),
+            ("training_mb", Json::Num((br.params_trainer + br.train_activations) as f64 / 1048576.0)),
+            ("selector_params_mb", Json::Num(br.params_selector as f64 / 1048576.0)),
+            ("selection_mb", Json::Num((br.candidate_buffer + br.selection_workspace) as f64 / 1048576.0)),
+            ("overhead_frac", Json::Num(br.overhead_frac())),
+        ]));
+    }
+    println!(
+        "{}",
+        render_table(
+            &["model", "train_MB", "replica_MB", "selection_MB", "overhead"],
+            &rows
+        )
+    );
+    let path = write_result("fig6c", &Json::Arr(out))?;
+    println!("results -> {}", path.display());
+    Ok(())
+}
+
+/// Fig. 6(d): power / energy, Titan vs RS.
+pub fn run_d(args: &Args) -> Result<()> {
+    let models = super::models_from_args(args, &["mlp"]);
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for model in &models {
+        let mut rs_cfg = super::tune(presets::table1(model, Method::Rs), args)?;
+        rs_cfg.rounds = rs_cfg.rounds.min(20);
+        rs_cfg.eval_every = 0;
+        let (rs, _) = sequential::run(&rs_cfg)?;
+        let mut ti_cfg = super::tune(presets::table1(model, Method::Titan), args)?;
+        ti_cfg.rounds = ti_cfg.rounds.min(20);
+        ti_cfg.eval_every = 0;
+        let (ti, _) = pipeline::run(&ti_cfg)?;
+        rows.push(vec![
+            model.clone(),
+            format!("{:.2}", rs.avg_power_w),
+            format!("{:.2}", ti.avg_power_w),
+            format!("{:.2}x", ti.avg_power_w / rs.avg_power_w.max(1e-9)),
+            format!("{:.2}x", ti.total_device_ms / rs.total_device_ms.max(1e-9)),
+            format!("{:.2}x", ti.energy_j / rs.energy_j.max(1e-9)),
+        ]);
+        out.push(Json::obj(vec![
+            ("model", Json::Str(model.clone())),
+            ("rs_power_w", Json::Num(rs.avg_power_w)),
+            ("titan_power_w", Json::Num(ti.avg_power_w)),
+            ("power_ratio", Json::Num(ti.avg_power_w / rs.avg_power_w.max(1e-9))),
+            ("time_ratio", Json::Num(ti.total_device_ms / rs.total_device_ms.max(1e-9))),
+            ("energy_ratio", Json::Num(ti.energy_j / rs.energy_j.max(1e-9))),
+        ]));
+    }
+    println!(
+        "{}",
+        render_table(
+            &["model", "P(RS) W", "P(Titan) W", "power_x", "time_x", "energy_x"],
+            &rows
+        )
+    );
+    let path = write_result("fig6d", &Json::Arr(out))?;
+    println!("results -> {}", path.display());
+    Ok(())
+}

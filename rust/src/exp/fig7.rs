@@ -1,0 +1,68 @@
+//! Fig. 7 — component study: training curves of every selection method
+//! (the fine-grained C-IS ablation). Curves land in results/fig7.json;
+//! the stdout table summarizes rounds-to-target and final accuracy.
+
+use crate::config::presets;
+use crate::metrics::{render_table, write_result};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::Result;
+
+pub fn run(args: &Args) -> Result<()> {
+    let models = super::models_from_args(args, &["mlp"]);
+    let methods = super::table1_methods();
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for model in &models {
+        // target accuracy = RS final (as in the paper's horizontal line)
+        let rs_cfg = super::tune(presets::table1(model, crate::config::Method::Rs), args)?;
+        let rs = super::run_config(&rs_cfg)?;
+        let target = rs.final_accuracy * super::TARGET_FRAC;
+        for &method in &methods {
+            let record = if method == crate::config::Method::Rs {
+                rs.clone()
+            } else {
+                let cfg = super::tune(presets::table1(model, method), args)?;
+                super::run_config(&cfg)?
+            };
+            let rounds_to = record
+                .rounds_to_accuracy(target)
+                .map(|r| r.to_string())
+                .unwrap_or_else(|| "-".into());
+            rows.push(vec![
+                model.clone(),
+                method.name().to_string(),
+                rounds_to,
+                format!("{:.1}", record.final_accuracy * 100.0),
+            ]);
+            let curve: Vec<Json> = record
+                .curve
+                .iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("round", Json::Num(p.round as f64)),
+                        ("test_accuracy", Json::Num(p.test_accuracy)),
+                        ("test_loss", Json::Num(p.test_loss)),
+                    ])
+                })
+                .collect();
+            out.push(Json::obj(vec![
+                ("model", Json::Str(model.clone())),
+                ("method", Json::Str(method.name().into())),
+                ("target", Json::Num(target)),
+                ("final_accuracy", Json::Num(record.final_accuracy)),
+                ("curve", Json::Arr(curve)),
+            ]));
+        }
+    }
+    println!(
+        "{}",
+        render_table(
+            &["model", "method", "rounds_to_target", "final_acc_%"],
+            &rows
+        )
+    );
+    let path = write_result("fig7", &Json::Arr(out))?;
+    println!("results -> {}", path.display());
+    Ok(())
+}

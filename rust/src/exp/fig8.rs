@@ -1,0 +1,80 @@
+//! Fig. 8 — impact of the coarse filter's feature depth: processing delay
+//! and final accuracy of Titan with n model blocks for feature extraction,
+//! compared against bare C-IS on the whole stream (the ideal).
+//!
+//! Paper findings reproduced here: block-1 features are 6.5–94× faster
+//! than full C-IS with ≤0.4% accuracy drop; deeper blocks cost more and
+//! gradually *hurt* accuracy (deep features are too concentrated for
+//! diversity filtering).
+
+use crate::config::{presets, Method};
+use crate::coordinator::{pipeline, sequential};
+use crate::device::{CostModel, Op};
+use crate::metrics::{render_table, write_result};
+use crate::runtime::artifact::ArtifactSet;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::Result;
+
+pub fn run(args: &Args) -> Result<()> {
+    let models = super::models_from_args(args, &["mlp"]);
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for model in &models {
+        let set = ArtifactSet::discover("artifacts", model)?;
+        let n_blocks = set.meta.num_blocks();
+        let costs = CostModel::for_model(model);
+
+        // ideal: C-IS over the whole stream, no filter
+        let mut cis_cfg = super::tune(presets::table1(model, Method::Cis), args)?;
+        cis_cfg.pipeline = false;
+        let (cis_rec, _) = sequential::run(&cis_cfg)?;
+        let cis_delay = costs.cost_ms(Op::Importance { n: 1 });
+        rows.push(vec![
+            model.clone(),
+            "C-IS(all)".into(),
+            format!("{cis_delay:.1}"),
+            format!("{:.1}", cis_rec.final_accuracy * 100.0),
+            "-".into(),
+        ]);
+        out.push(Json::obj(vec![
+            ("model", Json::Str(model.clone())),
+            ("config", Json::Str("cis_all".into())),
+            ("device_per_sample_ms", Json::Num(cis_delay)),
+            ("final_accuracy", Json::Num(cis_rec.final_accuracy)),
+        ]));
+
+        for k in 1..=n_blocks {
+            let mut cfg = super::tune(presets::table1(model, Method::Titan), args)?;
+            cfg.filter_blocks = k;
+            let (rec, _) = pipeline::run(&cfg)?;
+            let delay = costs.cost_ms(Op::Features { chunk: 1, blocks: k });
+            let speedup = cis_delay / delay.max(1e-9);
+            rows.push(vec![
+                model.clone(),
+                format!("Titan-{k}"),
+                format!("{delay:.1}"),
+                format!("{:.1}", rec.final_accuracy * 100.0),
+                format!("{speedup:.1}x"),
+            ]);
+            out.push(Json::obj(vec![
+                ("model", Json::Str(model.clone())),
+                ("config", Json::Str(format!("titan_b{k}"))),
+                ("blocks", Json::Num(k as f64)),
+                ("device_per_sample_ms", Json::Num(delay)),
+                ("final_accuracy", Json::Num(rec.final_accuracy)),
+                ("speedup_vs_cis", Json::Num(speedup)),
+            ]));
+        }
+    }
+    println!(
+        "{}",
+        render_table(
+            &["model", "config", "delay_ms/sample", "final_acc_%", "speedup"],
+            &rows
+        )
+    );
+    let path = write_result("fig8", &Json::Arr(out))?;
+    println!("results -> {}", path.display());
+    Ok(())
+}

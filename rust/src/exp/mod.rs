@@ -1,0 +1,187 @@
+//! Experiment harness: one module per paper table/figure (see DESIGN.md's
+//! experiment index). Each experiment
+//!
+//!   1. builds its preset configs (honoring `--fast` and `--models`),
+//!   2. runs the coordinator (sequential or pipelined as the paper does),
+//!   3. prints the paper-shaped rows/series to stdout, and
+//!   4. writes machine-readable results under `results/<id>.json`.
+//!
+//! `titan exp <id> [--fast] [--models a,b] [--seed N]` from the CLI.
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod fig10;
+pub mod fig11;
+pub mod table1;
+
+use crate::config::{Method, RunConfig};
+use crate::coordinator::{pipeline, sequential};
+use crate::metrics::RunRecord;
+use crate::util::cli::Args;
+use crate::{Error, Result};
+
+/// All experiment ids, in paper order.
+pub const ALL: &[(&str, &str)] = &[
+    ("fig1", "motivation: accuracy & time vs data utilization"),
+    ("fig2a", "per-round training time per selection method"),
+    ("fig2b", "training curves at batch 10 vs 25"),
+    ("fig5a", "batch-gradient variance: RS vs IS vs C-IS"),
+    ("fig5b", "coarse filter vs C-IS variance-reduction retention"),
+    ("fig5c", "importance stability across rounds"),
+    ("table1", "time-to-accuracy + final accuracy, all methods x models"),
+    ("fig6a", "per-round time: train-only vs sequential vs pipeline"),
+    ("fig6b", "per-streaming-sample processing delay"),
+    ("fig6c", "peak memory footprint breakdown"),
+    ("fig6d", "device power and total energy vs RS"),
+    ("fig7", "training curves of all methods (component study)"),
+    ("fig8", "filter depth vs delay and accuracy"),
+    ("fig9", "fluctuant idle resources / candidate budgets"),
+    ("fig10", "federated learning with 50 devices"),
+    ("fig11", "noisy data streams (feature/label noise)"),
+];
+
+/// Dispatch an experiment by id.
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "fig1" => fig1::run(args),
+        "fig2a" => fig2::run_a(args),
+        "fig2b" => fig2::run_b(args),
+        "fig5a" => fig5::run_a(args),
+        "fig5b" => fig5::run_b(args),
+        "fig5c" => fig5::run_c(args),
+        "table1" => table1::run(args),
+        "fig6a" => fig6::run_a(args),
+        "fig6b" => fig6::run_b(args),
+        "fig6c" => fig6::run_c(args),
+        "fig6d" => fig6::run_d(args),
+        "fig7" => fig7::run(args),
+        "fig8" => fig8::run(args),
+        "fig9" => fig9::run(args),
+        "fig10" => fig10::run(args),
+        "fig11" => fig11::run(args),
+        "all" => {
+            for (id, _) in ALL {
+                println!("\n===== exp {id} =====");
+                run(id, args)?;
+            }
+            Ok(())
+        }
+        other => Err(Error::Config(format!(
+            "unknown experiment {other:?}; known: {}",
+            ALL.iter().map(|(i, _)| *i).collect::<Vec<_>>().join(", ")
+        ))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared helpers
+// ---------------------------------------------------------------------------
+
+/// Models requested on the CLI (default: just mlp for tractable runs;
+/// pass --models all for the full paper set).
+pub fn models_from_args(args: &Args, default: &[&str]) -> Vec<String> {
+    let requested = args.get_list("models", default);
+    if requested.len() == 1 && requested[0] == "all" {
+        crate::config::presets::TABLE1_MODELS
+            .iter()
+            .map(|(m, _)| m.to_string())
+            .collect()
+    } else {
+        requested
+    }
+}
+
+/// Apply --fast/--seed/--rounds overrides to a preset config.
+pub fn tune(mut cfg: RunConfig, args: &Args) -> Result<RunConfig> {
+    cfg = crate::config::presets::fast(cfg, args.has_flag("fast"));
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.rounds = args.get_usize("rounds", cfg.rounds)?;
+    if let Some(d) = args.get("artifacts") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    Ok(cfg)
+}
+
+/// Run one config with the coordinator the paper would use for it
+/// (pipelined for Titan, sequential otherwise).
+pub fn run_config(cfg: &RunConfig) -> Result<RunRecord> {
+    let (record, _) = if cfg.pipeline {
+        pipeline::run(cfg)?
+    } else {
+        sequential::run(cfg)?
+    };
+    Ok(record)
+}
+
+/// Time-to-accuracy target as a fraction of RS's final accuracy.
+///
+/// The paper uses RS's final accuracy verbatim; on our synthetic tasks all
+/// methods *plateau* within the round budget (unlike CIFAR-10 at the
+/// paper's budgets), so the verbatim target sits on the plateau and
+/// time-to-target becomes seed noise. 98% of RS-final sits just below the
+/// plateau knee and recovers the paper's intended measurement. Recorded in
+/// EXPERIMENTS.md §Deviations.
+pub const TARGET_FRAC: f64 = 0.98;
+
+/// Format helper: normalized value with 2 decimals.
+pub fn norm(v: f64, base: f64) -> String {
+    if base <= 0.0 {
+        "-".into()
+    } else {
+        format!("{:.2}", v / base)
+    }
+}
+
+/// The methods of Table 1, in the paper's column order.
+pub fn table1_methods() -> Vec<Method> {
+    vec![
+        Method::Rs,
+        Method::Is,
+        Method::Ll,
+        Method::Hl,
+        Method::Ce,
+        Method::Ocs,
+        Method::Camel,
+        Method::Titan,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_unique() {
+        let mut ids: Vec<&str> = ALL.iter().map(|(i, _)| *i).collect();
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        let args = Args::parse(Vec::<String>::new()).unwrap();
+        assert!(run("nope", &args).is_err());
+    }
+
+    #[test]
+    fn models_expansion() {
+        let args = Args::parse(["--models", "all"].iter().map(|s| s.to_string())).unwrap();
+        let m = models_from_args(&args, &["mlp"]);
+        assert_eq!(m.len(), 6);
+        let args = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(models_from_args(&args, &["mlp"]), vec!["mlp"]);
+    }
+
+    #[test]
+    fn norm_formatting() {
+        assert_eq!(norm(5.0, 10.0), "0.50");
+        assert_eq!(norm(5.0, 0.0), "-");
+    }
+}

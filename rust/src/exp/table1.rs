@@ -1,0 +1,85 @@
+//! Table 1 — the headline result: normalized time-to-accuracy and final
+//! accuracy for all 8 methods across the 6 (task, model) rows.
+//!
+//! Target accuracy per the paper: the final accuracy of RS. Times are on
+//! the simulated device clock, normalized to RS's time-to-target.
+//! Methods that never reach the target report their total run time
+//! (like the paper's footnote).
+
+use crate::config::presets;
+use crate::metrics::{render_table, write_csv, write_result};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::Result;
+
+pub fn run(args: &Args) -> Result<()> {
+    let models = super::models_from_args(args, &["mlp"]);
+    let methods = super::table1_methods();
+    let mut rows = Vec::new();
+    let mut csv_rows = Vec::new();
+    let mut out = Vec::new();
+
+    for model in &models {
+        // RS first: it defines the target accuracy + the time normalizer
+        let rs_cfg = super::tune(presets::table1(model, crate::config::Method::Rs), args)?;
+        let rs_record = super::run_config(&rs_cfg)?;
+        let target = rs_record.final_accuracy * super::TARGET_FRAC;
+        let rs_time = rs_record
+            .time_to_accuracy_device(target)
+            .unwrap_or(rs_record.total_device_ms)
+            .max(1e-9);
+
+        for &method in &methods {
+            let record = if method == crate::config::Method::Rs {
+                rs_record.clone()
+            } else {
+                let cfg = super::tune(presets::table1(model, method), args)?;
+                super::run_config(&cfg)?
+            };
+            let (tta, reached) = match record.time_to_accuracy_device(target) {
+                Some(t) => (t, true),
+                None => (record.total_device_ms, false),
+            };
+            let norm_t = tta / rs_time;
+            rows.push(vec![
+                model.clone(),
+                method.name().to_string(),
+                format!("{}{:.2}", if reached { "" } else { ">" }, norm_t),
+                format!("{:.1}", record.final_accuracy * 100.0),
+            ]);
+            csv_rows.push(vec![
+                model.clone(),
+                method.name().to_string(),
+                format!("{norm_t:.4}"),
+                format!("{}", reached),
+                format!("{:.4}", record.final_accuracy),
+            ]);
+            out.push(Json::obj(vec![
+                ("model", Json::Str(model.clone())),
+                ("method", Json::Str(method.name().into())),
+                ("target_accuracy", Json::Num(target)),
+                ("norm_time_to_accuracy", Json::Num(norm_t)),
+                ("reached_target", Json::Bool(reached)),
+                ("final_accuracy", Json::Num(record.final_accuracy)),
+                ("total_device_ms", Json::Num(record.total_device_ms)),
+                ("total_host_ms", Json::Num(record.total_host_ms)),
+            ]));
+        }
+    }
+
+    println!(
+        "{}",
+        render_table(
+            &["model", "method", "norm_time_to_acc", "final_acc_%"],
+            &rows
+        )
+    );
+    write_csv(
+        "table1",
+        &["model", "method", "norm_tta", "reached", "final_acc"],
+        &csv_rows,
+    )?;
+    let path = write_result("table1", &Json::Arr(out))?;
+    println!("results -> {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! # Titan — two-stage data selection for on-device training
+//!
+//! Rust L3 coordinator reproducing *"A Two-Stage Data Selection Framework
+//! for Data-Efficient Model Training on Edge Devices"* (KDD '25).
+//!
+//! The crate owns everything on the request path: the streaming source,
+//! the coarse-grained filter, the fine-grained C-IS selector, the training
+//! pipeline, the device/energy simulator, the federated orchestrator, the
+//! metrics plane, and the experiment harness that regenerates every table
+//! and figure of the paper. Model compute (training steps, feature
+//! extraction, importance scoring) executes AOT-compiled XLA artifacts
+//! produced once by the python build path (`python/compile/aot.py`) via
+//! the PJRT CPU client — python is never on this path.
+//!
+//! Layout:
+//! - [`util`] — substrates replacing unavailable crates (PRNG, JSON, CLI,
+//!   stats, micro-bench, mini property testing, logging).
+//! - [`config`] — experiment/run configuration.
+//! - [`data`] — synthetic tasks, streaming source, stores and buffers.
+//! - [`runtime`] — PJRT artifact loading and typed model execution.
+//! - [`selection`] — C-IS and all paper baselines (RS/IS/LL/HL/CE/OCS/Camel).
+//! - [`filter`] — the coarse-grained first stage.
+//! - [`coordinator`] — pipelined / sequential training loops.
+//! - [`device`] — edge-device timing, memory and energy simulation.
+//! - [`fl`] — federated-learning orchestration (paper Appendix B).
+//! - [`metrics`] — trackers and result emission.
+//! - [`exp`] — one module per paper table/figure.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod exp;
+pub mod filter;
+pub mod fl;
+pub mod metrics;
+pub mod runtime;
+pub mod selection;
+pub mod util;
+
+pub use config::RunConfig;
+
+/// Crate-wide error type. Everything fallible funnels into this.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("I/O error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("XLA/PJRT error: {0}")]
+    Xla(String),
+    #[error("JSON error: {0}")]
+    Json(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    #[error("pipeline error: {0}")]
+    Pipeline(String),
+    #[error("{0}")]
+    Other(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,210 @@
+//! `titan` — CLI for the Titan on-device data-selection framework.
+//!
+//! Subcommands:
+//!   run      one training run (model/method/rounds configurable)
+//!   exp      regenerate a paper table/figure (see `titan exp list`)
+//!   fl       federated-learning run (paper Appendix B)
+//!   models   list artifact sets available under --artifacts
+//!   verify   execute every artifact against its golden.json
+//!
+//! Examples:
+//!   titan run --model mlp --method titan --rounds 200
+//!   titan exp table1 --models all
+//!   titan exp fig5a --fast
+//!   titan verify
+
+use titan::config::{presets, Method, RunConfig};
+use titan::coordinator::{pipeline, sequential};
+use titan::exp;
+use titan::metrics::write_result;
+use titan::runtime::artifact::ArtifactSet;
+use titan::util::cli::Args;
+use titan::util::logging;
+use titan::Result;
+
+fn main() {
+    logging::init();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(args),
+        Some("exp") => cmd_exp(args),
+        Some("fl") => cmd_fl(args),
+        Some("models") => cmd_models(args),
+        Some("verify") => cmd_verify(args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!("titan — two-stage data selection for on-device training (KDD'25 reproduction)");
+    println!();
+    println!("usage: titan <run|exp|fl|models|verify> [options]");
+    println!();
+    println!("  run     --model <m> --method <rs|is|ll|hl|ce|ocs|camel|cis|titan>");
+    println!("          --rounds N --batch N --candidates N --seed N [--sequential]");
+    println!("          [--feature-noise F | --label-noise F]");
+    println!("  exp     <id> [--fast] [--models a,b|all] [--seed N]   (exp list: ids)");
+    println!("  fl      --model <m> --method <m> [--fast]");
+    println!("  models  [--artifacts DIR]");
+    println!("  verify  [--artifacts DIR]   cross-check artifacts vs golden.json");
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg: RunConfig = presets::base(&args.get_str("model", "mlp")).apply_args(args)?;
+    cfg.validate()?;
+    println!("config: {}", cfg.to_json().to_string_compact());
+    let (record, outcomes) = if cfg.pipeline && cfg.method == Method::Titan {
+        pipeline::run(&cfg)?
+    } else {
+        let mut c = cfg.clone();
+        c.pipeline = false;
+        sequential::run(&c)?
+    };
+    println!(
+        "finished {} rounds: final_acc={:.2}% device_time={:.1}s host_time={:.1}s",
+        outcomes.len(),
+        record.final_accuracy * 100.0,
+        record.total_device_ms / 1e3,
+        record.total_host_ms / 1e3,
+    );
+    for p in &record.curve {
+        println!(
+            "  round {:>5}  loss {:.4}  acc {:.2}%  device {:.1}s",
+            p.round,
+            p.test_loss,
+            p.test_accuracy * 100.0,
+            p.device_ms / 1e3
+        );
+    }
+    let name = format!("run_{}_{}", cfg.model, cfg.method.name());
+    let path = write_result(&name, &record.to_json())?;
+    println!("record -> {}", path.display());
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("list");
+    if id == "list" {
+        println!("experiments:");
+        for (id, desc) in exp::ALL {
+            println!("  {id:<8} {desc}");
+        }
+        return Ok(());
+    }
+    exp::run(id, args)
+}
+
+fn cmd_fl(args: &Args) -> Result<()> {
+    exp::fig10::run(args)
+}
+
+fn cmd_models(args: &Args) -> Result<()> {
+    let dir = args.get_str("artifacts", "artifacts");
+    let models = ArtifactSet::list_models(&dir);
+    if models.is_empty() {
+        println!("no artifacts under {dir:?} — run `make artifacts`");
+        return Ok(());
+    }
+    for m in models {
+        let set = ArtifactSet::discover(&dir, &m)?;
+        let meta = &set.meta;
+        println!(
+            "{:<10} params={:<7} input={:?} classes={} blocks={:?}",
+            meta.name, meta.param_count, meta.input_shape, meta.num_classes, meta.block_dims
+        );
+    }
+    Ok(())
+}
+
+/// Execute every artifact set against its golden.json — the operational
+/// cross-language numerics check (`titan verify`).
+fn cmd_verify(args: &Args) -> Result<()> {
+    use titan::data::Sample;
+    use titan::runtime::model::{ModelRuntime, RuntimeRole};
+
+    let dir = args.get_str("artifacts", "artifacts");
+    let models = ArtifactSet::list_models(&dir);
+    if models.is_empty() {
+        return Err(titan::Error::Artifact(format!(
+            "no artifacts under {dir:?} — run `make artifacts`"
+        )));
+    }
+    let det_input = |n: usize, d: usize| -> Vec<Sample> {
+        (0..n)
+            .map(|i| {
+                let x: Vec<f32> = (0..d)
+                    .map(|j| ((0.1 * ((i * d + j) as f64 + 1.0)).sin()) as f32)
+                    .collect();
+                Sample::new(i as u64, 0, x)
+            })
+            .collect()
+    };
+    let mut failures = 0;
+    for model in &models {
+        let mut rt = ModelRuntime::load(&dir, model, RuntimeRole::Full)?;
+        let golden = rt.set.golden()?;
+        let m = rt.set.meta.clone();
+        // train_step
+        let mut samples = det_input(m.train_batch, m.input_dim);
+        for (i, s) in samples.iter_mut().enumerate() {
+            s.label = (i % m.num_classes) as u32;
+        }
+        let refs: Vec<&Sample> = samples.iter().collect();
+        let lr = golden.get("lr")?.as_f64()? as f32;
+        let loss = rt.train_step(&refs, lr)? as f64;
+        let want = golden.get("loss_step0")?.as_f64()?;
+        let ok = (loss - want).abs() < 1e-3 * want.abs().max(1.0);
+        println!(
+            "{model:<10} train_step loss {loss:.6} vs golden {want:.6}  [{}]",
+            if ok { "OK" } else { "FAIL" }
+        );
+        if !ok {
+            failures += 1;
+        }
+        // importance
+        rt.reset_params()?;
+        let valid = golden.get("mask_valid")?.as_usize()?;
+        let mut cands = det_input(m.cand_max, m.input_dim);
+        for (i, s) in cands.iter_mut().enumerate() {
+            s.label = (i % m.num_classes) as u32;
+        }
+        let crefs: Vec<&Sample> = cands.iter().take(valid).collect();
+        let imp = rt.importance(&crefs)?;
+        let ksum: f64 = imp.k.iter().map(|&v| v as f64).sum();
+        let want_k = golden.get("k_sum")?.as_f64()?;
+        let ok = (ksum - want_k).abs() < 2e-2 * want_k.abs().max(1.0);
+        println!(
+            "{model:<10} importance k_sum {ksum:.4} vs golden {want_k:.4}  [{}]",
+            if ok { "OK" } else { "FAIL" }
+        );
+        if !ok {
+            failures += 1;
+        }
+    }
+    if failures > 0 {
+        Err(titan::Error::Other(format!("{failures} golden checks failed")))
+    } else {
+        println!("all golden checks passed ({} models)", models.len());
+        Ok(())
+    }
+}

@@ -1,0 +1,234 @@
+//! Metrics plane: per-run trackers (loss/accuracy curves, time-to-accuracy
+//! on both the host clock and the simulated device clock, processing
+//! latency) and result emission as JSON/CSV under `results/`.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::util::timer::LatencyRecorder;
+
+/// One point of the training curve.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    pub round: usize,
+    /// Simulated device wall-clock at this point (ms).
+    pub device_ms: f64,
+    /// Host wall-clock at this point (ms).
+    pub host_ms: f64,
+    pub train_loss: f64,
+    pub test_loss: f64,
+    pub test_accuracy: f64,
+}
+
+/// Full record of one training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunRecord {
+    pub method: String,
+    pub model: String,
+    pub curve: Vec<CurvePoint>,
+    /// Per-streaming-sample processing delay (host ms).
+    pub processing_delay: LatencyRecorder,
+    /// Per-round realized wall time (device ms).
+    pub round_device_ms: Vec<f64>,
+    /// Per-round host wall time (ms).
+    pub round_host_ms: Vec<f64>,
+    pub final_accuracy: f64,
+    pub total_device_ms: f64,
+    pub total_host_ms: f64,
+    pub energy_j: f64,
+    pub avg_power_w: f64,
+    pub peak_memory_bytes: usize,
+}
+
+impl RunRecord {
+    pub fn new(method: &str, model: &str) -> Self {
+        Self {
+            method: method.to_string(),
+            model: model.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Device-clock time to first reach `target` accuracy (ms), if ever.
+    pub fn time_to_accuracy_device(&self, target: f64) -> Option<f64> {
+        self.curve
+            .iter()
+            .find(|p| p.test_accuracy >= target)
+            .map(|p| p.device_ms)
+    }
+
+    /// Round index at which `target` accuracy is first reached.
+    pub fn rounds_to_accuracy(&self, target: f64) -> Option<usize> {
+        self.curve
+            .iter()
+            .find(|p| p.test_accuracy >= target)
+            .map(|p| p.round)
+    }
+
+    /// Best accuracy along the curve (robust "final" metric for short runs).
+    pub fn best_accuracy(&self) -> f64 {
+        self.curve
+            .iter()
+            .map(|p| p.test_accuracy)
+            .fold(0.0, f64::max)
+            .max(self.final_accuracy)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let curve = Json::Arr(
+            self.curve
+                .iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("round", Json::Num(p.round as f64)),
+                        ("device_ms", Json::Num(p.device_ms)),
+                        ("host_ms", Json::Num(p.host_ms)),
+                        ("train_loss", Json::Num(p.train_loss)),
+                        ("test_loss", Json::Num(p.test_loss)),
+                        ("test_accuracy", Json::Num(p.test_accuracy)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("method", Json::Str(self.method.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("curve", curve),
+            ("final_accuracy", Json::Num(self.final_accuracy)),
+            ("best_accuracy", Json::Num(self.best_accuracy())),
+            ("total_device_ms", Json::Num(self.total_device_ms)),
+            ("total_host_ms", Json::Num(self.total_host_ms)),
+            (
+                "processing_delay_ms",
+                Json::obj(vec![
+                    ("mean", Json::Num(self.processing_delay.mean_ms())),
+                    ("p50", Json::Num(self.processing_delay.percentile_ms(50.0))),
+                    ("p99", Json::Num(self.processing_delay.percentile_ms(99.0))),
+                    ("count", Json::Num(self.processing_delay.count() as f64)),
+                ]),
+            ),
+            ("energy_j", Json::Num(self.energy_j)),
+            ("avg_power_w", Json::Num(self.avg_power_w)),
+            ("peak_memory_bytes", Json::Num(self.peak_memory_bytes as f64)),
+        ])
+    }
+}
+
+/// Write a JSON value under results/, creating the directory.
+pub fn write_result(name: &str, value: &Json) -> crate::Result<std::path::PathBuf> {
+    let dir = Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, value.to_string_pretty())?;
+    Ok(path)
+}
+
+/// Write simple CSV rows (first row = header) under results/.
+pub fn write_csv(name: &str, header: &[&str], rows: &[Vec<String>]) -> crate::Result<std::path::PathBuf> {
+    let dir = Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.csv"));
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(path)
+}
+
+/// Render an aligned text table (for stdout experiment summaries).
+pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let header_cells: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&header_cells, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record_with_curve() -> RunRecord {
+        let mut r = RunRecord::new("titan", "mlp");
+        for i in 0..5 {
+            r.curve.push(CurvePoint {
+                round: i * 10,
+                device_ms: i as f64 * 100.0,
+                host_ms: i as f64 * 10.0,
+                train_loss: 2.0 - i as f64 * 0.3,
+                test_loss: 2.0 - i as f64 * 0.25,
+                test_accuracy: 0.2 + i as f64 * 0.15,
+            });
+        }
+        r.final_accuracy = 0.8;
+        r
+    }
+
+    #[test]
+    fn time_to_accuracy() {
+        let r = record_with_curve();
+        // accuracy hits 0.5 at i=2 (0.2+0.3)
+        assert_eq!(r.time_to_accuracy_device(0.5), Some(200.0));
+        assert_eq!(r.rounds_to_accuracy(0.5), Some(20));
+        assert_eq!(r.time_to_accuracy_device(0.99), None);
+        assert!((r.best_accuracy() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_has_curve() {
+        let j = record_with_curve().to_json();
+        assert_eq!(j.get("curve").unwrap().as_arr().unwrap().len(), 5);
+        assert_eq!(j.get("method").unwrap().as_str().unwrap(), "titan");
+    }
+
+    #[test]
+    fn table_rendering_aligns() {
+        let t = render_table(
+            &["method", "acc"],
+            &[
+                vec!["rs".into(), "0.71".into()],
+                vec!["titan".into(), "0.754".into()],
+            ],
+        );
+        assert!(t.contains("method"));
+        assert!(t.lines().count() >= 4);
+    }
+
+    #[test]
+    fn write_outputs() {
+        let dir = std::env::temp_dir().join("titan_metrics_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let old = std::env::current_dir().unwrap();
+        std::env::set_current_dir(&dir).unwrap();
+        let p = write_result("unit", &Json::Num(1.0)).unwrap();
+        assert!(p.exists());
+        let p = write_csv("unit", &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        assert!(p.exists());
+        std::env::set_current_dir(old).unwrap();
+    }
+}

@@ -1,0 +1,176 @@
+//! Artifact discovery and the meta.json contract between the python AOT
+//! path and the Rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Parsed `artifacts/<model>/meta.json` — the shape contract every
+/// executable in the artifact set adheres to.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub param_count: usize,
+    pub input_dim: usize,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub h_dim: usize,
+    /// Pooled feature dim per trunk block (filter depth k uses block_dims[k-1]).
+    pub block_dims: Vec<usize>,
+    pub train_batch: usize,
+    pub filter_chunk: usize,
+    pub cand_max: usize,
+    pub eval_chunk: usize,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path) -> Result<ArtifactMeta> {
+        let j = Json::parse_file(&dir.join("meta.json"))?;
+        Ok(ArtifactMeta {
+            name: j.get("name")?.as_str()?.to_string(),
+            param_count: j.get("param_count")?.as_usize()?,
+            input_dim: j.get("input_dim")?.as_usize()?,
+            input_shape: j.get("input_shape")?.usize_list()?,
+            num_classes: j.get("num_classes")?.as_usize()?,
+            h_dim: j.get("h_dim")?.as_usize()?,
+            block_dims: j.get("block_dims")?.usize_list()?,
+            train_batch: j.get("train_batch")?.as_usize()?,
+            filter_chunk: j.get("filter_chunk")?.as_usize()?,
+            cand_max: j.get("cand_max")?.as_usize()?,
+            eval_chunk: j.get("eval_chunk")?.as_usize()?,
+        })
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.block_dims.len()
+    }
+
+    /// Feature dim at filter depth `k` (1-based, clamped like the python side).
+    pub fn feature_dim(&self, k: usize) -> usize {
+        let idx = k.clamp(1, self.num_blocks()) - 1;
+        self.block_dims[idx]
+    }
+}
+
+/// Paths of one model's artifact set.
+#[derive(Clone, Debug)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub meta: ArtifactMeta,
+}
+
+impl ArtifactSet {
+    /// Discover and validate `artifacts_dir/<model>/`.
+    pub fn discover(artifacts_dir: &str, model: &str) -> Result<ArtifactSet> {
+        let dir = PathBuf::from(artifacts_dir).join(model);
+        if !dir.is_dir() {
+            return Err(Error::Artifact(format!(
+                "artifact dir {} missing — run `make artifacts`",
+                dir.display()
+            )));
+        }
+        let meta = ArtifactMeta::load(&dir)?;
+        for f in ["train_step.hlo.txt", "importance.hlo.txt", "eval.hlo.txt", "init_params.bin"] {
+            if !dir.join(f).exists() {
+                return Err(Error::Artifact(format!("{} missing {f}", dir.display())));
+            }
+        }
+        Ok(ArtifactSet { dir, meta })
+    }
+
+    pub fn hlo_path(&self, stem: &str) -> PathBuf {
+        self.dir.join(format!("{stem}.hlo.txt"))
+    }
+
+    pub fn features_path(&self, k: usize) -> PathBuf {
+        self.dir.join(format!("features_b{k}.hlo.txt"))
+    }
+
+    /// Load the f32 LE initial parameter vector.
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(self.dir.join("init_params.bin"))?;
+        if bytes.len() != self.meta.param_count * 4 {
+            return Err(Error::Artifact(format!(
+                "init_params.bin has {} bytes, expected {}",
+                bytes.len(),
+                self.meta.param_count * 4
+            )));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Parsed golden.json (cross-language numerics check).
+    pub fn golden(&self) -> Result<Json> {
+        Json::parse_file(&self.dir.join("golden.json"))
+    }
+
+    /// List models available under an artifacts dir.
+    pub fn list_models(artifacts_dir: &str) -> Vec<String> {
+        let mut out = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(artifacts_dir) {
+            for e in entries.flatten() {
+                let p = e.path();
+                if p.is_dir() && p.join("meta.json").exists() {
+                    if let Some(name) = p.file_name().and_then(|n| n.to_str()) {
+                        out.push(name.to_string());
+                    }
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> String {
+        // tests run from the crate root
+        "artifacts".to_string()
+    }
+
+    fn have_artifacts() -> bool {
+        Path::new(&artifacts_root()).join("mlp/meta.json").exists()
+    }
+
+    #[test]
+    fn meta_parses_and_is_consistent() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let set = ArtifactSet::discover(&artifacts_root(), "mlp").unwrap();
+        let m = &set.meta;
+        assert_eq!(m.name, "mlp");
+        assert_eq!(m.input_dim, 900);
+        assert_eq!(m.num_classes, 6);
+        assert_eq!(m.input_shape.iter().product::<usize>(), m.input_dim);
+        assert!(m.num_blocks() >= 2);
+        assert_eq!(m.feature_dim(1), m.block_dims[0]);
+        assert_eq!(m.feature_dim(99), *m.block_dims.last().unwrap());
+        let params = set.init_params().unwrap();
+        assert_eq!(params.len(), m.param_count);
+        assert!(params.iter().all(|p| p.is_finite()));
+    }
+
+    #[test]
+    fn discover_rejects_missing() {
+        let err = ArtifactSet::discover("artifacts", "no_such_model").unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)));
+    }
+
+    #[test]
+    fn list_models_contains_built() {
+        if !have_artifacts() {
+            return;
+        }
+        let models = ArtifactSet::list_models(&artifacts_root());
+        assert!(models.contains(&"mlp".to_string()), "{models:?}");
+    }
+}

@@ -1,0 +1,104 @@
+//! Thread-local compiled-executable cache.
+//!
+//! The experiment harness constructs many engines per process (Table 1
+//! alone runs 8 methods × N models, each building Selector/Trainer
+//! runtimes), and PJRT compilation of the same HLO artifact dominates
+//! engine startup. `PjRtLoadedExecutable` is `!Send` (the client is
+//! Rc-based), so the cache is thread-local: one shared CPU client per
+//! thread plus a path+mtime-keyed map of compiled executables. Same-thread
+//! reloads become map hits; the pipeline's selector thread builds its own
+//! cache on first use.
+//!
+//! Measured impact is recorded in EXPERIMENTS.md §Perf (engine
+//! construction drops from PJRT-compile-bound to file-stat-bound).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::SystemTime;
+
+use crate::Result;
+
+thread_local! {
+    static CLIENT: RefCell<Option<Rc<xla::PjRtClient>>> = const { RefCell::new(None) };
+    static EXES: RefCell<HashMap<(PathBuf, SystemTime), Rc<xla::PjRtLoadedExecutable>>> =
+        RefCell::new(HashMap::new());
+}
+
+/// The calling thread's shared PJRT CPU client (created on first use).
+pub fn thread_client() -> Result<Rc<xla::PjRtClient>> {
+    CLIENT.with(|c| {
+        let mut slot = c.borrow_mut();
+        if let Some(client) = slot.as_ref() {
+            return Ok(client.clone());
+        }
+        let client = Rc::new(xla::PjRtClient::cpu()?);
+        *slot = Some(client.clone());
+        Ok(client)
+    })
+}
+
+/// Compile `path` (HLO text) on the thread client, reusing a cached
+/// executable when the file is unchanged (path + mtime key).
+pub fn compile_cached(path: &Path) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+    let mtime = std::fs::metadata(path)?.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+    let key = (path.to_path_buf(), mtime);
+    if let Some(hit) = EXES.with(|m| m.borrow().get(&key).cloned()) {
+        return Ok(hit);
+    }
+    let client = thread_client()?;
+    let proto = xla::HloModuleProto::from_text_file(path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = Rc::new(client.compile(&comp)?);
+    EXES.with(|m| m.borrow_mut().insert(key, exe.clone()));
+    Ok(exe)
+}
+
+/// Cache statistics for the calling thread (entries currently held).
+pub fn cached_count() -> usize {
+    EXES.with(|m| m.borrow().len())
+}
+
+/// Drop all cached executables on this thread (tests / memory pressure).
+pub fn clear() {
+    EXES.with(|m| m.borrow_mut().clear());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Path::new("artifacts/mlp/meta.json").exists()
+    }
+
+    #[test]
+    fn cache_hits_same_path() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        clear();
+        let p = Path::new("artifacts/mlp/eval.hlo.txt");
+        let a = compile_cached(p).unwrap();
+        let n1 = cached_count();
+        let b = compile_cached(p).unwrap();
+        assert!(Rc::ptr_eq(&a, &b), "second compile must be a cache hit");
+        assert_eq!(cached_count(), n1);
+        clear();
+        assert_eq!(cached_count(), 0);
+    }
+
+    #[test]
+    fn thread_client_is_shared() {
+        let a = thread_client().unwrap();
+        let b = thread_client().unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(compile_cached(Path::new("artifacts/nope.hlo.txt")).is_err());
+    }
+}

@@ -1,0 +1,128 @@
+//! Conversions between the coordinator's `Vec<f32>` world and `xla`
+//! `Literal`s, plus batch-assembly helpers (padding, one-hot).
+
+use crate::data::sample::Sample;
+use crate::{Error, Result};
+
+/// Build a rank-2 f32 literal [rows, cols] from a flat slice.
+pub fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    if data.len() != rows * cols {
+        return Err(Error::Other(format!(
+            "literal_2d: {} elements for [{rows},{cols}]",
+            data.len()
+        )));
+    }
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Build a rank-1 f32 literal.
+pub fn literal_1d(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Build a rank-0 (scalar) f32 literal.
+pub fn literal_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read back a literal into Vec<f32>.
+pub fn to_f32s(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Assemble a fixed-size input batch from samples, padding by repeating the
+/// last sample (padded rows are masked or ignored downstream). Returns the
+/// flat [batch * dim] buffer.
+pub fn batch_inputs(samples: &[&Sample], batch: usize, dim: usize) -> Result<Vec<f32>> {
+    if samples.is_empty() {
+        return Err(Error::Other("batch_inputs: empty sample set".into()));
+    }
+    let mut out = Vec::with_capacity(batch * dim);
+    for i in 0..batch {
+        let s = samples[i.min(samples.len() - 1)];
+        if s.dim() != dim {
+            return Err(Error::Other(format!(
+                "sample dim {} != expected {dim}",
+                s.dim()
+            )));
+        }
+        out.extend_from_slice(&s.x);
+    }
+    Ok(out)
+}
+
+/// One-hot label matrix [batch, classes] with the same padding rule.
+pub fn batch_onehot(samples: &[&Sample], batch: usize, classes: usize) -> Result<Vec<f32>> {
+    if samples.is_empty() {
+        return Err(Error::Other("batch_onehot: empty sample set".into()));
+    }
+    let mut out = vec![0.0f32; batch * classes];
+    for i in 0..batch {
+        let s = samples[i.min(samples.len() - 1)];
+        let y = s.label as usize;
+        if y >= classes {
+            return Err(Error::Other(format!("label {y} >= classes {classes}")));
+        }
+        out[i * classes + y] = 1.0;
+    }
+    Ok(out)
+}
+
+/// Validity mask [n]: 1.0 for the first `valid` rows, 0.0 for padding.
+pub fn mask(n: usize, valid: usize) -> Vec<f32> {
+    (0..n).map(|i| if i < valid { 1.0 } else { 0.0 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(id: u64, label: u32, dim: usize) -> Sample {
+        Sample::new(id, label, vec![id as f32; dim])
+    }
+
+    #[test]
+    fn batch_pads_by_repeating_last() {
+        let a = s(1, 0, 3);
+        let b = s(2, 1, 3);
+        let refs = vec![&a, &b];
+        let x = batch_inputs(&refs, 4, 3).unwrap();
+        assert_eq!(x.len(), 12);
+        assert_eq!(&x[0..3], &[1.0, 1.0, 1.0]);
+        assert_eq!(&x[6..9], &[2.0, 2.0, 2.0]); // padded with last
+        assert_eq!(&x[9..12], &[2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn onehot_layout() {
+        let a = s(1, 2, 2);
+        let refs = vec![&a];
+        let y = batch_onehot(&refs, 2, 4).unwrap();
+        assert_eq!(y, vec![0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn errors_on_mismatch() {
+        let a = s(1, 9, 3);
+        let refs = vec![&a];
+        assert!(batch_onehot(&refs, 1, 4).is_err()); // label out of range
+        assert!(batch_inputs(&refs, 1, 5).is_err()); // dim mismatch
+        let empty: Vec<&Sample> = vec![];
+        assert!(batch_inputs(&empty, 1, 3).is_err());
+    }
+
+    #[test]
+    fn mask_shape() {
+        assert_eq!(mask(4, 2), vec![1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(mask(2, 5), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        // requires a working XLA install; cheap enough to always run
+        let lit = literal_2d(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3).unwrap();
+        let back = to_f32s(&lit).unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(literal_2d(&[1.0], 2, 3).is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the coordinator's hot
+//! path. Python never runs here.
+//!
+//! Thread model: the `xla` crate's `PjRtClient` is `Rc`-based and
+//! therefore `!Send`. Each pipeline thread constructs its *own*
+//! [`ModelRuntime`] over the same artifact files (the trainer thread
+//! compiles `train_step` + `eval`; the selector thread compiles
+//! `features` + `importance`). Model parameters cross threads as plain
+//! `Vec<f32>` once per round — exactly the paper's "synchronize model
+//! parameters once per model update" pipeline cost.
+
+pub mod artifact;
+pub mod cache;
+pub mod literal;
+pub mod model;
+
+pub use artifact::ArtifactMeta;
+pub use model::{EvalReport, ModelRuntime, RuntimeRole};

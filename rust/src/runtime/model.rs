@@ -1,0 +1,571 @@
+//! Typed model runtime: compile the artifact set on a PJRT CPU client and
+//! expose the four operations the coordinator uses. Owns the parameter
+//! state for the trainer role.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::data::sample::Sample;
+use crate::runtime::artifact::ArtifactSet;
+use crate::runtime::literal as lit;
+use crate::{Error, Result};
+
+/// Which executables a runtime instance compiles. Pipeline threads each
+/// own one runtime with just the executables their role needs (the client
+/// is !Send, see runtime module docs), halving redundant compile work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RuntimeRole {
+    /// train_step + eval (the model-update process).
+    Trainer,
+    /// features (all depths on demand) + importance (the selection process).
+    Selector,
+    /// Everything (sequential coordinator, tests, benches).
+    Full,
+}
+
+/// Evaluation summary over the held-out set.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalReport {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub n: usize,
+}
+
+/// Compiled model runtime.
+pub struct ModelRuntime {
+    pub set: ArtifactSet,
+    train_exe: Option<Rc<xla::PjRtLoadedExecutable>>,
+    eval_exe: Option<Rc<xla::PjRtLoadedExecutable>>,
+    importance_exe: Option<Rc<xla::PjRtLoadedExecutable>>,
+    probe_exe: Option<Rc<xla::PjRtLoadedExecutable>>,
+    /// feature executables by depth k (compiled on demand).
+    feature_exes: BTreeMap<usize, Rc<xla::PjRtLoadedExecutable>>,
+    /// Current model parameters (trainer role owns the authoritative copy).
+    params: Vec<f32>,
+    /// Active training batch size (defaults to meta.train_batch; can be
+    /// switched to another lowered size, e.g. 25 for the Fig. 2b study).
+    train_batch: usize,
+}
+
+impl ModelRuntime {
+    /// Load artifacts for `model` and compile the executables `role` needs.
+    pub fn load(artifacts_dir: &str, model: &str, role: RuntimeRole) -> Result<ModelRuntime> {
+        let set = ArtifactSet::discover(artifacts_dir, model)?;
+        let params = set.init_params()?;
+        let mut rt = ModelRuntime {
+            set,
+            train_exe: None,
+            eval_exe: None,
+            importance_exe: None,
+            probe_exe: None,
+            feature_exes: BTreeMap::new(),
+            params,
+            train_batch: 0,
+        };
+        rt.train_batch = rt.set.meta.train_batch;
+        match role {
+            RuntimeRole::Trainer => {
+                rt.train_exe = Some(rt.compile_stem("train_step")?);
+                rt.eval_exe = Some(rt.compile_stem("eval")?);
+            }
+            RuntimeRole::Selector => {
+                rt.importance_exe = Some(rt.compile_stem("importance")?);
+            }
+            RuntimeRole::Full => {
+                rt.train_exe = Some(rt.compile_stem("train_step")?);
+                rt.eval_exe = Some(rt.compile_stem("eval")?);
+                rt.importance_exe = Some(rt.compile_stem("importance")?);
+            }
+        }
+        Ok(rt)
+    }
+
+    fn compile_stem(&self, stem: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let path = self.set.hlo_path(stem);
+        self.compile_path(&path)
+    }
+
+    /// All compilation funnels through the thread-local executable cache
+    /// (runtime::cache) — repeated engine construction over the same
+    /// artifacts is a map hit, not a PJRT compile.
+    fn compile_path(&self, path: &std::path::Path) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        crate::runtime::cache::compile_cached(path)
+    }
+
+    /// Switch to an alternate lowered training batch size (e.g. 25 for
+    /// Fig. 2b). The default size uses `train_step.hlo.txt`; others use
+    /// `train_step_b<B>.hlo.txt` and must have been lowered by aot.py.
+    pub fn select_train_batch(&mut self, batch: usize) -> Result<()> {
+        if batch == self.train_batch {
+            return Ok(());
+        }
+        let path = if batch == self.set.meta.train_batch {
+            self.set.hlo_path("train_step")
+        } else {
+            self.set.hlo_path(&format!("train_step_b{batch}"))
+        };
+        if !path.exists() {
+            return Err(Error::Artifact(format!(
+                "no train_step artifact for batch {batch} ({})",
+                path.display()
+            )));
+        }
+        self.train_exe = Some(self.compile_path(&path)?);
+        self.train_batch = batch;
+        Ok(())
+    }
+
+    /// Active training batch size.
+    pub fn train_batch(&self) -> usize {
+        self.train_batch
+    }
+
+    /// Ensure the features executable for depth k exists (compiles lazily).
+    pub fn ensure_features(&mut self, k: usize) -> Result<()> {
+        let k = k.clamp(1, self.set.meta.num_blocks());
+        if !self.feature_exes.contains_key(&k) {
+            let path = self.set.features_path(k);
+            if !path.exists() {
+                return Err(Error::Artifact(format!("{} missing", path.display())));
+            }
+            let exe = self.compile_path(&path)?;
+            self.feature_exes.insert(k, exe);
+        }
+        Ok(())
+    }
+
+    // ---- parameter state ---------------------------------------------------
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    pub fn set_params(&mut self, p: Vec<f32>) -> Result<()> {
+        if p.len() != self.set.meta.param_count {
+            return Err(Error::Other(format!(
+                "set_params: {} != param_count {}",
+                p.len(),
+                self.set.meta.param_count
+            )));
+        }
+        self.params = p;
+        Ok(())
+    }
+
+    pub fn reset_params(&mut self) -> Result<()> {
+        self.params = self.set.init_params()?;
+        Ok(())
+    }
+
+    // ---- operations ----------------------------------------------------------
+
+    /// One SGD step on a batch of samples; updates internal params and
+    /// returns the batch loss. Pads short batches by repeating the last
+    /// sample with ZERO weight (the real samples are re-scaled so the
+    /// effective batch mean is preserved). Unit weights reproduce the
+    /// plain mini-batch mean.
+    pub fn train_step(&mut self, samples: &[&Sample], lr: f32) -> Result<f32> {
+        let ones = vec![1.0f32; samples.len()];
+        self.train_step_weighted(samples, &ones, lr)
+    }
+
+    /// Weighted SGD step (the paper's unbiased estimator — Appendix A.2).
+    pub fn train_step_weighted(
+        &mut self,
+        samples: &[&Sample],
+        weights: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        if weights.len() != samples.len() {
+            return Err(Error::Other(format!(
+                "weights {} != samples {}",
+                weights.len(),
+                samples.len()
+            )));
+        }
+        let m = &self.set.meta;
+        let b = self.train_batch;
+        let x = lit::batch_inputs(samples, b, m.input_dim)?;
+        let y = lit::batch_onehot(samples, b, m.num_classes)?;
+        // pad weights with zeros; rescale the valid entries so the batch
+        // mean over b rows equals the mean over the valid rows
+        let valid = samples.len().min(b);
+        let scale = b as f32 / valid as f32;
+        let mut w = vec![0.0f32; b];
+        for i in 0..valid {
+            w[i] = weights[i] * scale;
+        }
+        let exe = self
+            .train_exe
+            .as_ref()
+            .ok_or_else(|| Error::Other("train_step not compiled for this role".into()))?;
+        let args = [
+            lit::literal_1d(&self.params),
+            lit::literal_2d(&x, b, m.input_dim)?,
+            lit::literal_2d(&y, b, m.num_classes)?,
+            lit::literal_1d(&w),
+            lit::literal_scalar(lr),
+        ];
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != 2 {
+            return Err(Error::Other(format!("train_step returned {} outputs", outs.len())));
+        }
+        self.params = lit::to_f32s(&outs[0])?;
+        let loss = outs[1].to_vec::<f32>()?[0];
+        Ok(loss)
+    }
+
+    /// Shallow features (depth k) for up to `filter_chunk` samples.
+    /// Returns (features row-major, rows_valid).
+    pub fn features(&mut self, samples: &[&Sample], k: usize) -> Result<(Vec<f32>, usize)> {
+        let m = self.set.meta.clone();
+        let valid = samples.len().min(m.filter_chunk);
+        self.ensure_features(k)?;
+        let x = lit::batch_inputs(&samples[..valid], m.filter_chunk, m.input_dim)?;
+        let exe = &self.feature_exes[&k.clamp(1, m.num_blocks())];
+        let args = [
+            lit::literal_1d(&self.params),
+            lit::literal_2d(&x, m.filter_chunk, m.input_dim)?,
+        ];
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let feats = lit::to_f32s(&result.to_tuple1()?)?;
+        Ok((feats, valid))
+    }
+
+    /// Importance of up to `cand_max` candidates: per-sample last-layer
+    /// gradient norms and the pairwise gradient Gram matrix K.
+    /// Rows past `samples.len()` are masked out (zero norms, zero K rows).
+    pub fn importance(&self, samples: &[&Sample]) -> Result<ImportanceOut> {
+        let m = &self.set.meta;
+        let valid = samples.len().min(m.cand_max);
+        let x = lit::batch_inputs(&samples[..valid], m.cand_max, m.input_dim)?;
+        let y = lit::batch_onehot(&samples[..valid], m.cand_max, m.num_classes)?;
+        let mask = lit::mask(m.cand_max, valid);
+        let exe = self
+            .importance_exe
+            .as_ref()
+            .ok_or_else(|| Error::Other("importance not compiled for this role".into()))?;
+        let args = [
+            lit::literal_1d(&self.params),
+            lit::literal_2d(&x, m.cand_max, m.input_dim)?,
+            lit::literal_2d(&y, m.cand_max, m.num_classes)?,
+            lit::literal_1d(&mask),
+        ];
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != 2 {
+            return Err(Error::Other(format!("importance returned {} outputs", outs.len())));
+        }
+        let norms = lit::to_f32s(&outs[0])?;
+        let k = lit::to_f32s(&outs[1])?;
+        Ok(ImportanceOut {
+            norms: norms[..valid].to_vec(),
+            k,
+            n_total: m.cand_max,
+            valid,
+        })
+    }
+
+    /// Per-candidate probe scores (loss + entropy) for the heuristic
+    /// baselines. Compiled lazily — only the heuristic methods pay for it.
+    pub fn probe(&mut self, samples: &[&Sample]) -> Result<crate::selection::ProbeOut> {
+        let m = self.set.meta.clone();
+        let valid = samples.len().min(m.cand_max);
+        if self.probe_exe.is_none() {
+            self.probe_exe = Some(self.compile_stem("probe")?);
+        }
+        let x = lit::batch_inputs(&samples[..valid], m.cand_max, m.input_dim)?;
+        let y = lit::batch_onehot(&samples[..valid], m.cand_max, m.num_classes)?;
+        let mask = lit::mask(m.cand_max, valid);
+        let exe = self.probe_exe.as_ref().unwrap();
+        let args = [
+            lit::literal_1d(&self.params),
+            lit::literal_2d(&x, m.cand_max, m.input_dim)?,
+            lit::literal_2d(&y, m.cand_max, m.num_classes)?,
+            lit::literal_1d(&mask),
+        ];
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != 2 {
+            return Err(Error::Other(format!("probe returned {} outputs", outs.len())));
+        }
+        let loss = lit::to_f32s(&outs[0])?;
+        let entropy = lit::to_f32s(&outs[1])?;
+        Ok(crate::selection::ProbeOut {
+            loss: loss[..valid].to_vec(),
+            entropy: entropy[..valid].to_vec(),
+        })
+    }
+
+    /// Evaluate on a test set (chunked to the artifact's eval_chunk).
+    /// Remainder samples that don't fill a chunk are dropped — keep
+    /// `test.len()` a multiple of `eval_chunk` for exact counts.
+    pub fn evaluate(&self, test: &[Sample]) -> Result<EvalReport> {
+        let m = &self.set.meta;
+        let exe = self
+            .eval_exe
+            .as_ref()
+            .ok_or_else(|| Error::Other("eval not compiled for this role".into()))?;
+        let chunks = test.len() / m.eval_chunk;
+        if chunks == 0 {
+            return Err(Error::Other(format!(
+                "test set {} smaller than eval_chunk {}",
+                test.len(),
+                m.eval_chunk
+            )));
+        }
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        for ci in 0..chunks {
+            let chunk: Vec<&Sample> =
+                test[ci * m.eval_chunk..(ci + 1) * m.eval_chunk].iter().collect();
+            let x = lit::batch_inputs(&chunk, m.eval_chunk, m.input_dim)?;
+            let y = lit::batch_onehot(&chunk, m.eval_chunk, m.num_classes)?;
+            let args = [
+                lit::literal_1d(&self.params),
+                lit::literal_2d(&x, m.eval_chunk, m.input_dim)?,
+                lit::literal_2d(&y, m.eval_chunk, m.num_classes)?,
+            ];
+            let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            let outs = result.to_tuple()?;
+            loss_sum += outs[0].to_vec::<f32>()?[0] as f64;
+            correct += outs[1].to_vec::<f32>()?[0] as f64;
+        }
+        let n = chunks * m.eval_chunk;
+        Ok(EvalReport {
+            loss: loss_sum / n as f64,
+            accuracy: correct / n as f64,
+            n,
+        })
+    }
+}
+
+/// Output of the importance executable.
+#[derive(Clone, Debug)]
+pub struct ImportanceOut {
+    /// ‖g_i‖ for the `valid` candidates (padding rows stripped).
+    pub norms: Vec<f32>,
+    /// Full K matrix [n_total * n_total] row-major (padding rows are zero).
+    pub k: Vec<f32>,
+    pub n_total: usize,
+    pub valid: usize,
+}
+
+impl ImportanceOut {
+    /// K[i, j] accessor over the valid region.
+    pub fn k_at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.valid && j < self.valid);
+        self.k[i * self.n_total + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Golden-numerics integration tests: execute the compiled artifacts on
+    //! the deterministic inputs from `aot.det_input` and compare with
+    //! golden.json. These are THE cross-language correctness signal.
+    use super::*;
+
+    fn have(model: &str) -> bool {
+        std::path::Path::new("artifacts").join(model).join("meta.json").exists()
+    }
+
+    /// Reimplementation of aot.det_input: x[i] = sin(0.1 * (i+1)) as f32.
+    fn det_input(n: usize, d: usize) -> Vec<Sample> {
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let x: Vec<f32> = (0..d)
+                .map(|j| ((0.1 * ((i * d + j) as f64 + 1.0)).sin()) as f32)
+                .collect();
+            out.push(Sample::new(i as u64, 0, x));
+        }
+        out
+    }
+
+    fn det_labels(mut samples: Vec<Sample>, c: usize) -> Vec<Sample> {
+        for (i, s) in samples.iter_mut().enumerate() {
+            s.label = (i % c) as u32;
+            s.clean_label = s.label;
+        }
+        samples
+    }
+
+    #[test]
+    fn golden_train_step_matches() {
+        if !have("mlp") {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let mut rt = ModelRuntime::load("artifacts", "mlp", RuntimeRole::Trainer).unwrap();
+        let golden = rt.set.golden().unwrap();
+        let m = rt.set.meta.clone();
+        let samples = det_labels(det_input(m.train_batch, m.input_dim), m.num_classes);
+        let refs: Vec<&Sample> = samples.iter().collect();
+        let lr = golden.get("lr").unwrap().as_f64().unwrap() as f32;
+        let loss = rt.train_step(&refs, lr).unwrap();
+        let want = golden.get("loss_step0").unwrap().as_f64().unwrap();
+        assert!((loss as f64 - want).abs() < 1e-3, "loss {loss} vs golden {want}");
+        let l2: f64 = rt.params().iter().map(|&p| (p as f64) * (p as f64)).sum::<f64>().sqrt();
+        let want_l2 = golden.get("params_l2_after_step").unwrap().as_f64().unwrap();
+        assert!((l2 - want_l2).abs() < 1e-2, "l2 {l2} vs golden {want_l2}");
+    }
+
+    #[test]
+    fn golden_importance_matches() {
+        if !have("mlp") {
+            return;
+        }
+        let rt = ModelRuntime::load("artifacts", "mlp", RuntimeRole::Selector).unwrap();
+        let golden = rt.set.golden().unwrap();
+        let m = rt.set.meta.clone();
+        let valid = golden.get("mask_valid").unwrap().as_usize().unwrap();
+        let samples = det_labels(det_input(m.cand_max, m.input_dim), m.num_classes);
+        let refs: Vec<&Sample> = samples.iter().take(valid).collect();
+        let out = rt.importance(&refs).unwrap();
+        assert_eq!(out.valid, valid);
+        let want_norms = golden.get("norms_head").unwrap().f64_list().unwrap();
+        for (i, w) in want_norms.iter().enumerate() {
+            assert!(
+                (out.norms[i] as f64 - w).abs() < 1e-3,
+                "norm[{i}] {} vs {w}",
+                out.norms[i]
+            );
+        }
+        let ksum: f64 = out.k.iter().map(|&v| v as f64).sum();
+        let want_ksum = golden.get("k_sum").unwrap().as_f64().unwrap();
+        assert!(
+            (ksum - want_ksum).abs() < 1e-2 * want_ksum.abs().max(1.0),
+            "k_sum {ksum} vs {want_ksum}"
+        );
+        // masked region must be zero
+        for i in valid..out.n_total {
+            for j in 0..out.n_total {
+                assert_eq!(out.k[i * out.n_total + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn golden_eval_and_features_match() {
+        if !have("mlp") {
+            return;
+        }
+        let mut rt = ModelRuntime::load("artifacts", "mlp", RuntimeRole::Full).unwrap();
+        let golden = rt.set.golden().unwrap();
+        let m = rt.set.meta.clone();
+        // eval
+        let samples = det_labels(det_input(m.eval_chunk, m.input_dim), m.num_classes);
+        let rep = rt.evaluate(&samples).unwrap();
+        let want_loss = golden.get("eval_loss_sum").unwrap().as_f64().unwrap() / m.eval_chunk as f64;
+        let want_corr = golden.get("eval_correct").unwrap().as_f64().unwrap();
+        assert!((rep.loss - want_loss).abs() < 1e-3, "{} vs {want_loss}", rep.loss);
+        assert!(
+            (rep.accuracy * rep.n as f64 - want_corr).abs() < 0.5,
+            "{} vs {want_corr}",
+            rep.accuracy * rep.n as f64
+        );
+        // features depth 1
+        let fsamples = det_input(m.filter_chunk, m.input_dim);
+        let refs: Vec<&Sample> = fsamples.iter().collect();
+        let (feats, valid) = rt.features(&refs, 1).unwrap();
+        assert_eq!(valid, m.filter_chunk);
+        assert_eq!(feats.len(), m.filter_chunk * m.feature_dim(1));
+        let fsum: f64 = feats.iter().map(|&v| v as f64).sum();
+        let want_fsum = golden.get("feats_b1_sum").unwrap().as_f64().unwrap();
+        assert!(
+            (fsum - want_fsum).abs() < 1e-2 * want_fsum.abs().max(1.0),
+            "{fsum} vs {want_fsum}"
+        );
+        let head = golden.get("feats_b1_head").unwrap().f64_list().unwrap();
+        for (i, w) in head.iter().enumerate() {
+            assert!((feats[i] as f64 - w).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn golden_probe_matches() {
+        if !have("mlp") {
+            return;
+        }
+        let mut rt = ModelRuntime::load("artifacts", "mlp", RuntimeRole::Selector).unwrap();
+        let golden = rt.set.golden().unwrap();
+        let m = rt.set.meta.clone();
+        let valid = golden.get("mask_valid").unwrap().as_usize().unwrap();
+        let samples = det_labels(det_input(m.cand_max, m.input_dim), m.num_classes);
+        let refs: Vec<&Sample> = samples.iter().take(valid).collect();
+        let probe = rt.probe(&refs).unwrap();
+        let want_loss = golden.get("probe_loss_head").unwrap().f64_list().unwrap();
+        let want_ent = golden.get("probe_entropy_head").unwrap().f64_list().unwrap();
+        for i in 0..want_loss.len() {
+            assert!((probe.loss[i] as f64 - want_loss[i]).abs() < 1e-3);
+            assert!((probe.entropy[i] as f64 - want_ent[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn role_gating() {
+        if !have("mlp") {
+            return;
+        }
+        let rt = ModelRuntime::load("artifacts", "mlp", RuntimeRole::Selector).unwrap();
+        let m = rt.set.meta.clone();
+        let samples = det_input(2, m.input_dim);
+        let refs: Vec<&Sample> = samples.iter().collect();
+        // selector role must not have train/eval
+        let mut rt2 = rt;
+        assert!(rt2.train_step(&refs, 0.1).is_err());
+        assert!(rt2.evaluate(&samples).is_err());
+    }
+
+    #[test]
+    fn set_params_roundtrip() {
+        if !have("mlp") {
+            return;
+        }
+        let mut rt = ModelRuntime::load("artifacts", "mlp", RuntimeRole::Selector).unwrap();
+        let n = rt.set.meta.param_count;
+        let p: Vec<f32> = (0..n).map(|i| (i % 7) as f32 * 0.1).collect();
+        rt.set_params(p.clone()).unwrap();
+        assert_eq!(rt.params(), &p[..]);
+        assert!(rt.set_params(vec![0.0; 3]).is_err());
+        rt.reset_params().unwrap();
+        assert_ne!(rt.params(), &p[..]);
+    }
+
+    /// Same golden check for every other built variant's importance path
+    /// (cheaper than per-variant train checks, still catches contract rot).
+    #[test]
+    fn golden_all_variants_importance() {
+        let models = crate::runtime::artifact::ArtifactSet::list_models("artifacts");
+        for model in models.iter().filter(|m| m.as_str() != "mlp") {
+            let rt = match ModelRuntime::load("artifacts", model, RuntimeRole::Selector) {
+                Ok(rt) => rt,
+                Err(e) => {
+                    eprintln!("skipping {model}: {e}");
+                    continue;
+                }
+            };
+            let golden = rt.set.golden().unwrap();
+            let m = rt.set.meta.clone();
+            let valid = golden.get("mask_valid").unwrap().as_usize().unwrap();
+            let samples = det_labels(det_input(m.cand_max, m.input_dim), m.num_classes);
+            let refs: Vec<&Sample> = samples.iter().take(valid).collect();
+            let out = rt.importance(&refs).unwrap();
+            let want_norms = golden.get("norms_head").unwrap().f64_list().unwrap();
+            for (i, w) in want_norms.iter().enumerate() {
+                assert!(
+                    (out.norms[i] as f64 - w).abs() < 2e-3 * w.abs().max(1.0),
+                    "{model} norm[{i}] {} vs {w}",
+                    out.norms[i]
+                );
+            }
+            let ksum: f64 = out.k.iter().map(|&v| v as f64).sum();
+            let want_ksum = golden.get("k_sum").unwrap().as_f64().unwrap();
+            assert!(
+                (ksum - want_ksum).abs() < 2e-2 * want_ksum.abs().max(1.0),
+                "{model} k_sum {ksum} vs {want_ksum}"
+            );
+        }
+    }
+}

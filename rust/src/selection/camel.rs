@@ -1,0 +1,159 @@
+//! Camel (SIGMOD '22) — coreset selection that upper-bounds the gradient
+//! distance by the *raw-input* distance to avoid backpropagation: greedily
+//! pick the sample minimizing the input-space distance between the
+//! selected batch and the full candidate set (k-medoids-style facility
+//! location on raw inputs).
+//!
+//! The paper's critique (§2.3): raw input distance is a poor proxy for
+//! gradient distance under modern models, so Camel is efficient but loses
+//! the theoretical guarantee — our Fig. 2(b)/Table 1 reproductions show
+//! the same.
+
+use super::{SelectedBatch, SelectionContext, SelectionStrategy};
+use crate::util::rng::Xoshiro256;
+use crate::util::stats;
+use crate::Result;
+
+pub struct CamelCoreset;
+
+impl SelectionStrategy for CamelCoreset {
+    fn name(&self) -> &'static str {
+        "camel"
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, _rng: &mut Xoshiro256) -> Result<SelectedBatch> {
+        let n = ctx.n();
+        let k = ctx.batch.min(n);
+        // Facility-location greedy: maximize coverage = Σ_u max_{s∈S} sim(u, s),
+        // with sim = -dist². Precompute the pairwise distance matrix once
+        // (n ≤ cand_max = 100, cheap).
+        let mut d2 = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = stats::dist2(&ctx.samples[i].x, &ctx.samples[j].x);
+                d2[i * n + j] = v;
+                d2[j * n + i] = v;
+            }
+        }
+        let mut chosen: Vec<usize> = Vec::with_capacity(k);
+        // best coverage distance per candidate so far (∞ = uncovered)
+        let mut best_cover = vec![f64::INFINITY; n];
+        for _ in 0..k {
+            let mut best_i = usize::MAX;
+            let mut best_gain = f64::NEG_INFINITY;
+            for i in 0..n {
+                if chosen.contains(&i) {
+                    continue;
+                }
+                // gain of adding i: reduction in Σ_u min-dist
+                let mut gain = 0.0;
+                for u in 0..n {
+                    let du = d2[i * n + u];
+                    if du < best_cover[u] {
+                        gain += (best_cover[u] - du).min(1e18);
+                    }
+                }
+                if gain > best_gain {
+                    best_gain = gain;
+                    best_i = i;
+                }
+            }
+            chosen.push(best_i);
+            for u in 0..n {
+                let du = d2[best_i * n + u];
+                if du < best_cover[u] {
+                    best_cover[u] = du;
+                }
+            }
+        }
+        Ok(SelectedBatch::unweighted(chosen))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Sample;
+    use crate::selection::testutil::assert_valid_batch;
+
+    fn sample_at(id: u64, x: Vec<f32>) -> Sample {
+        Sample::new(id, 0, x)
+    }
+
+    #[test]
+    fn covers_clusters() {
+        // three tight clusters; k=3 must pick one sample per cluster
+        let mut samples = Vec::new();
+        for (c, center) in [0.0f32, 10.0, 20.0].iter().enumerate() {
+            for j in 0..4 {
+                samples.push(sample_at(
+                    (c * 4 + j) as u64,
+                    vec![center + j as f32 * 0.01, 0.0],
+                ));
+            }
+        }
+        let refs: Vec<&_> = samples.iter().collect();
+        let seen = vec![12u64];
+        let ctx = SelectionContext {
+            samples: &refs,
+            seen_per_class: &seen,
+            num_classes: 1,
+            batch: 3,
+            importance: None,
+            probe: None,
+            features: None,
+            feature_dim: 0,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let picks = CamelCoreset.select(&ctx, &mut rng).unwrap();
+        assert_valid_batch(&picks, 12, 3);
+        let mut clusters: Vec<usize> = picks.indices.iter().map(|&i| i / 4).collect();
+        clusters.sort_unstable();
+        clusters.dedup();
+        assert_eq!(clusters.len(), 3, "one pick per cluster: {picks:?}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let samples: Vec<Sample> = (0..10)
+            .map(|i| sample_at(i, vec![(i as f32 * 1.37).sin(), (i as f32).cos()]))
+            .collect();
+        let refs: Vec<&_> = samples.iter().collect();
+        let seen = vec![10u64];
+        let ctx = SelectionContext {
+            samples: &refs,
+            seen_per_class: &seen,
+            num_classes: 1,
+            batch: 4,
+            importance: None,
+            probe: None,
+            features: None,
+            feature_dim: 0,
+        };
+        let mut r1 = Xoshiro256::seed_from_u64(2);
+        let mut r2 = Xoshiro256::seed_from_u64(99);
+        let a = CamelCoreset.select(&ctx, &mut r1).unwrap();
+        let b = CamelCoreset.select(&ctx, &mut r2).unwrap();
+        assert_eq!(a.indices, b.indices, "camel must not depend on the RNG");
+    }
+
+    #[test]
+    fn k_geq_n() {
+        let samples: Vec<Sample> = (0..3).map(|i| sample_at(i, vec![i as f32])).collect();
+        let refs: Vec<&_> = samples.iter().collect();
+        let seen = vec![3u64];
+        let ctx = SelectionContext {
+            samples: &refs,
+            seen_per_class: &seen,
+            num_classes: 1,
+            batch: 10,
+            importance: None,
+            probe: None,
+            features: None,
+            feature_dim: 0,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let picks = CamelCoreset.select(&ctx, &mut rng).unwrap();
+        assert_valid_batch(&picks, 3, 10);
+    }
+}

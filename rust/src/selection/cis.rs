@@ -1,0 +1,354 @@
+//! C-IS — classified importance sampling, the paper's fine-grained
+//! selection strategy (§3.2, Lemma 2) and the core of Titan.
+//!
+//! Two stages:
+//!
+//! 1. **Inter-class batch-size allocation** — slots per class proportional
+//!    to the class importance
+//!
+//!    `I_t(y) = |S_y| * sqrt( V[∇l] - V[‖∇l‖] )`            (Eq. 2)
+//!
+//!    which, expanded (see Lemma 2's proof: β*_y − γ_y), equals
+//!
+//!    `I_t(y) = |S_y| * sqrt( (E‖g‖)² − ‖E g‖² )`
+//!
+//!    — both moments estimated from the candidates of class y via the
+//!    Gram matrix K: `E‖g‖ = mean(sqrt(K_ii))`, `‖E g‖² = Σ_ij K_ij / n²`.
+//!
+//! 2. **Intra-class selection** — within class y, sample `|B_y|` items
+//!    without replacement with probability ∝ ‖∇l‖ (Eq. 3), i.e. IS
+//!    restricted to the class.
+//!
+//! The difference from plain IS is exactly the allocation: IS spends
+//! slots on classes with large gradient *norms*; C-IS spends them on
+//! classes whose gradients are *diverse but uniformly sized* (Fig. 4).
+//! Finite-sample guardrails: the variance difference is clamped at 0 and
+//! an all-zero importance vector falls back to candidate-count-
+//! proportional allocation (DESIGN.md §Discrepancies #2).
+
+use super::{make_weights, SelectedBatch, SelectionContext, SelectionStrategy};
+use crate::runtime::model::ImportanceOut;
+use crate::util::rng::{allocate_proportional_det, Xoshiro256};
+use crate::Result;
+
+/// Per-class summary extracted from K (also used by variance.rs and the
+/// Fig. 5 experiments).
+#[derive(Clone, Debug)]
+pub struct ClassSummary {
+    /// Candidate indices of this class.
+    pub indices: Vec<usize>,
+    /// mean ‖g‖ over the class candidates.
+    pub mean_norm: f64,
+    /// mean ‖g‖² (= mean K_ii).
+    pub mean_norm2: f64,
+    /// ‖mean g‖² (= Σ_ij K_ij / n²).
+    pub mean_grad_norm2: f64,
+}
+
+impl ClassSummary {
+    /// V[∇l] — gradient variance of the class candidates.
+    pub fn grad_variance(&self) -> f64 {
+        (self.mean_norm2 - self.mean_grad_norm2).max(0.0)
+    }
+
+    /// V[‖∇l‖] — gradient-*norm* variance.
+    pub fn norm_variance(&self) -> f64 {
+        (self.mean_norm2 - self.mean_norm * self.mean_norm).max(0.0)
+    }
+
+    /// The Eq. 2 inner term, clamped: V[∇l] − V[‖∇l‖] = (E‖g‖)² − ‖Eg‖².
+    pub fn diversity(&self) -> f64 {
+        (self.mean_norm * self.mean_norm - self.mean_grad_norm2).max(0.0)
+    }
+}
+
+/// Summarize the candidate classes from the importance output.
+pub fn class_summaries(
+    ctx_labels: &[u32],
+    imp: &ImportanceOut,
+    num_classes: usize,
+) -> Vec<ClassSummary> {
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); num_classes];
+    for (i, &y) in ctx_labels.iter().enumerate().take(imp.valid) {
+        by_class[y as usize].push(i);
+    }
+    by_class
+        .into_iter()
+        .map(|indices| {
+            let n = indices.len();
+            if n == 0 {
+                return ClassSummary {
+                    indices,
+                    mean_norm: 0.0,
+                    mean_norm2: 0.0,
+                    mean_grad_norm2: 0.0,
+                };
+            }
+            let mut sum_norm = 0.0f64;
+            let mut sum_diag = 0.0f64;
+            let mut sum_all = 0.0f64;
+            for (a, &i) in indices.iter().enumerate() {
+                sum_norm += imp.norms[i] as f64;
+                sum_diag += imp.k_at(i, i) as f64;
+                // off-diagonal: use symmetry, accumulate full sum
+                sum_all += imp.k_at(i, i) as f64;
+                for &j in &indices[a + 1..] {
+                    sum_all += 2.0 * imp.k_at(i, j) as f64;
+                }
+            }
+            let nf = n as f64;
+            ClassSummary {
+                indices,
+                mean_norm: sum_norm / nf,
+                mean_norm2: sum_diag / nf,
+                mean_grad_norm2: sum_all / (nf * nf),
+            }
+        })
+        .collect()
+}
+
+/// Class importance I_t(y) per Eq. 2 given the stream frequencies |S_y|.
+pub fn class_importances(summaries: &[ClassSummary], seen_per_class: &[u64]) -> Vec<f64> {
+    summaries
+        .iter()
+        .enumerate()
+        .map(|(y, s)| {
+            if s.indices.is_empty() {
+                0.0
+            } else {
+                seen_per_class.get(y).copied().unwrap_or(0) as f64 * s.diversity().sqrt()
+            }
+        })
+        .collect()
+}
+
+pub struct ClassifiedImportanceSampling;
+
+impl SelectionStrategy for ClassifiedImportanceSampling {
+    fn name(&self) -> &'static str {
+        "cis"
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, rng: &mut Xoshiro256) -> Result<SelectedBatch> {
+        let imp = ctx.require_importance()?;
+        let labels: Vec<u32> = ctx.samples.iter().map(|s| s.label).collect();
+        let summaries = class_summaries(&labels, imp, ctx.num_classes);
+        let importances = class_importances(&summaries, ctx.seen_per_class);
+        let caps: Vec<usize> = summaries.iter().map(|s| s.indices.len()).collect();
+        // Inter-class allocation (largest-remainder, caps = candidates/class;
+        // zero-importance vectors fall back to caps-proportional inside).
+        let alloc = allocate_proportional_det(&importances, &caps, ctx.batch);
+        // Intra-class IS without replacement + per-sample unbiasedness
+        // weights: w_i = B / (n · |B_y| · P_y(i)), P_y(i) = norm_i/Σ_y norms
+        // (Appendix A.2 eq. (f), with the candidate set standing in for S).
+        let n = ctx.n() as f64;
+        let b = ctx.batch as f64;
+        let mut picks = Vec::with_capacity(ctx.batch);
+        let mut inv = Vec::with_capacity(ctx.batch);
+        for (y, &take) in alloc.iter().enumerate() {
+            if take == 0 {
+                continue;
+            }
+            let s = &summaries[y];
+            let probs: Vec<f64> = s
+                .indices
+                .iter()
+                .map(|&i| (imp.norms[i] as f64).max(0.0))
+                .collect();
+            let class_total: f64 = probs.iter().sum();
+            for local in rng.weighted_sample_without_replacement(&probs, take) {
+                picks.push(s.indices[local]);
+                inv.push(if class_total > 0.0 && probs[local] > 0.0 {
+                    b * class_total / (n * take as f64 * probs[local])
+                } else {
+                    1.0
+                });
+            }
+        }
+        Ok(SelectedBatch {
+            weights: make_weights(&inv),
+            indices: picks,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::testutil::{assert_valid_batch, candidates, importance_from_grads};
+    use crate::selection::SelectionContext;
+
+    /// Build the paper's Fig. 4 scenario: class 0 has diverse gradients of
+    /// equal norm (high importance), class 1 has identical gradients (zero
+    /// diversity), equal average norms.
+    fn fig4_importance(n_per_class: usize) -> (Vec<(f64, f64)>, usize) {
+        let mut grads = Vec::new();
+        for i in 0..n_per_class {
+            // class 0: unit vectors fanned over the circle — ‖g‖=1, diverse
+            let th = i as f64 / n_per_class as f64 * std::f64::consts::PI;
+            grads.push((th.cos(), th.sin()));
+        }
+        for _ in 0..n_per_class {
+            // class 1: all identical unit vectors — same mean norm, no diversity
+            grads.push((1.0, 0.0));
+        }
+        (grads, n_per_class)
+    }
+
+    #[test]
+    fn class_summaries_match_hand_computation() {
+        let (grads, npc) = fig4_importance(8);
+        let imp = importance_from_grads(&grads);
+        let labels: Vec<u32> = (0..16).map(|i| (i / npc) as u32).collect();
+        let s = class_summaries(&labels, &imp, 2);
+        // class 0: all norms 1
+        assert!((s[0].mean_norm - 1.0).abs() < 1e-5, "{}", s[0].mean_norm);
+        assert!((s[0].mean_norm2 - 1.0).abs() < 1e-5);
+        assert!(s[0].mean_grad_norm2 < 0.7, "diverse class: ‖Eg‖² small");
+        assert!(s[0].diversity() > 0.3);
+        // class 1: identical gradients -> ‖Eg‖² = 1, diversity 0
+        assert!((s[1].mean_grad_norm2 - 1.0).abs() < 1e-4);
+        assert!(s[1].diversity() < 1e-6);
+        // variance identities
+        assert!((s[1].grad_variance()).abs() < 1e-5);
+        assert!((s[0].norm_variance()).abs() < 1e-5, "equal norms");
+    }
+
+    #[test]
+    fn fig4_allocation_prefers_diverse_class() {
+        // THE paper's key qualitative claim (Fig. 4): C-IS sends more slots
+        // to the diverse class; IS would split evenly (equal norms).
+        let (grads, npc) = fig4_importance(10);
+        let imp = importance_from_grads(&grads);
+        let cands = candidates(20, 2, 11);
+        let refs: Vec<&_> = cands.iter().collect();
+        // relabel candidates to match grads: first npc class 0, rest class 1
+        let mut owned: Vec<_> = cands.clone();
+        for (i, s) in owned.iter_mut().enumerate() {
+            s.label = (i / npc) as u32;
+        }
+        let refs2: Vec<&_> = owned.iter().collect();
+        let _ = refs;
+        let seen = vec![100u64, 100u64];
+        let ctx = SelectionContext {
+            samples: &refs2,
+            seen_per_class: &seen,
+            num_classes: 2,
+            batch: 10,
+            importance: Some(&imp),
+            probe: None,
+            features: None,
+            feature_dim: 0,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(12);
+        let mut strat = ClassifiedImportanceSampling;
+        let mut class0 = 0usize;
+        let mut total = 0usize;
+        for _ in 0..50 {
+            let picks = strat.select(&ctx, &mut rng).unwrap();
+            assert_valid_batch(&picks, 20, 10);
+            class0 += picks.indices.iter().filter(|&&i| owned[i].label == 0).count();
+            total += picks.indices.len();
+        }
+        let frac = class0 as f64 / total as f64;
+        assert!(frac > 0.8, "diverse-class fraction {frac}");
+    }
+
+    #[test]
+    fn zero_importance_falls_back_to_proportional() {
+        // all classes zero diversity -> proportional to candidate counts
+        let grads: Vec<(f64, f64)> = (0..12).map(|_| (1.0, 0.0)).collect();
+        let imp = importance_from_grads(&grads);
+        let mut owned = candidates(12, 3, 13);
+        for (i, s) in owned.iter_mut().enumerate() {
+            s.label = (i % 3) as u32;
+        }
+        let refs: Vec<&_> = owned.iter().collect();
+        let seen = vec![10u64; 3];
+        let ctx = SelectionContext {
+            samples: &refs,
+            seen_per_class: &seen,
+            num_classes: 3,
+            batch: 6,
+            importance: Some(&imp),
+            probe: None,
+            features: None,
+            feature_dim: 0,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(14);
+        let picks = ClassifiedImportanceSampling.select(&ctx, &mut rng).unwrap();
+        assert_valid_batch(&picks, 12, 6);
+        let mut per_class = [0usize; 3];
+        for &i in &picks.indices {
+            per_class[owned[i].label as usize] += 1;
+        }
+        assert_eq!(per_class, [2, 2, 2], "{per_class:?}");
+    }
+
+    #[test]
+    fn importance_scales_with_stream_frequency() {
+        let (grads, _) = fig4_importance(5);
+        let imp = importance_from_grads(&grads);
+        let labels: Vec<u32> = (0..10).map(|i| (i / 5) as u32).collect();
+        let summaries = class_summaries(&labels, &imp, 2);
+        let i_small = class_importances(&summaries, &[10, 10]);
+        let i_big = class_importances(&summaries, &[100, 10]);
+        assert!(i_big[0] > i_small[0] * 5.0);
+        assert_eq!(i_small[1], 0.0, "zero-diversity class has zero importance");
+    }
+
+    #[test]
+    fn respects_class_caps() {
+        // class 0 has 2 candidates but huge importance — allocation must
+        // not exceed the cap and must fill the rest from class 1
+        let mut grads: Vec<(f64, f64)> = vec![(0.0, 1.0), (1.0, 0.0)]; // diverse
+        grads.extend((0..8).map(|_| (0.5, 0.0))); // identical
+        let imp = importance_from_grads(&grads);
+        let mut owned = candidates(10, 2, 15);
+        for (i, s) in owned.iter_mut().enumerate() {
+            s.label = if i < 2 { 0 } else { 1 };
+        }
+        let refs: Vec<&_> = owned.iter().collect();
+        let seen = vec![1000u64, 10u64];
+        let ctx = SelectionContext {
+            samples: &refs,
+            seen_per_class: &seen,
+            num_classes: 2,
+            batch: 6,
+            importance: Some(&imp),
+            probe: None,
+            features: None,
+            feature_dim: 0,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(16);
+        let picks = ClassifiedImportanceSampling.select(&ctx, &mut rng).unwrap();
+        assert_valid_batch(&picks, 10, 6);
+        let c0 = picks.indices.iter().filter(|&&i| owned[i].label == 0).count();
+        assert_eq!(c0, 2, "cap bound");
+    }
+
+    #[test]
+    fn empty_class_handled() {
+        let grads: Vec<(f64, f64)> = (0..6).map(|i| (i as f64 * 0.3, 1.0)).collect();
+        let imp = importance_from_grads(&grads);
+        let mut owned = candidates(6, 2, 17);
+        for s in owned.iter_mut() {
+            s.label = 0; // class 1 empty
+        }
+        let refs: Vec<&_> = owned.iter().collect();
+        let seen = vec![10u64, 10u64];
+        let ctx = SelectionContext {
+            samples: &refs,
+            seen_per_class: &seen,
+            num_classes: 2,
+            batch: 4,
+            importance: Some(&imp),
+            probe: None,
+            features: None,
+            feature_dim: 0,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(18);
+        let picks = ClassifiedImportanceSampling.select(&ctx, &mut rng).unwrap();
+        assert_valid_batch(&picks, 6, 4);
+    }
+}

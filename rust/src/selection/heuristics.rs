@@ -1,0 +1,266 @@
+//! HDS — heuristic data-selection baselines (§2.3 of the paper):
+//!
+//! - [`LossBased`] `high: true` = **HL** (highest per-sample loss,
+//!   selection-via-proxy style) / `high: false` = **LL** (lowest loss,
+//!   robust-SGD style).
+//! - [`EntropyBased`] = **CE** (highest output-distribution entropy, the
+//!   classic active-learning uncertainty score).
+//! - [`RepDiv`] = **OCS** (representativeness + diversity in feature
+//!   space, online-coreset style).
+//!
+//! These optimize proxy objectives, not the training-performance objective
+//! — the paper's point is precisely that they underperform at small batch
+//! sizes. They are deterministic top-k selectors (as deployed in their
+//! source papers).
+
+use super::{SelectedBatch, SelectionContext, SelectionStrategy};
+use crate::util::rng::Xoshiro256;
+use crate::util::stats;
+use crate::Result;
+
+/// Deterministic top-k by score (desc), tie-broken by index for
+/// reproducibility. NaN scores (e.g. probe loss on a diverged model) sort
+/// last — `total_cmp` keeps the comparator a total order.
+fn top_k_by(scores: &[f64], k: usize) -> Vec<usize> {
+    let sane = |s: f64| if s.is_nan() { f64::NEG_INFINITY } else { s };
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| {
+        sane(scores[b])
+            .total_cmp(&sane(scores[a]))
+            .then_with(|| a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// LL / HL.
+pub struct LossBased {
+    pub high: bool,
+}
+
+impl SelectionStrategy for LossBased {
+    fn name(&self) -> &'static str {
+        if self.high {
+            "hl"
+        } else {
+            "ll"
+        }
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, _rng: &mut Xoshiro256) -> Result<SelectedBatch> {
+        let probe = ctx.require_probe()?;
+        let scores: Vec<f64> = probe.loss[..ctx.n()]
+            .iter()
+            .map(|&l| if self.high { l as f64 } else { -(l as f64) })
+            .collect();
+        Ok(SelectedBatch::unweighted(top_k_by(&scores, ctx.batch)))
+    }
+}
+
+/// CE — output entropy.
+pub struct EntropyBased;
+
+impl SelectionStrategy for EntropyBased {
+    fn name(&self) -> &'static str {
+        "ce"
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, _rng: &mut Xoshiro256) -> Result<SelectedBatch> {
+        let probe = ctx.require_probe()?;
+        let scores: Vec<f64> = probe.entropy[..ctx.n()].iter().map(|&e| e as f64).collect();
+        Ok(SelectedBatch::unweighted(top_k_by(&scores, ctx.batch)))
+    }
+}
+
+/// OCS — representativeness + diversity over features.
+///
+/// Greedy: repeatedly add the candidate maximizing
+/// `closeness-to-class-centroid + distance-to-already-selected`, the
+/// standard rep/div trade-off of online coreset selection.
+pub struct RepDiv;
+
+impl SelectionStrategy for RepDiv {
+    fn name(&self) -> &'static str {
+        "ocs"
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, _rng: &mut Xoshiro256) -> Result<SelectedBatch> {
+        let n = ctx.n();
+        let d = ctx.feature_dim;
+        let feats = ctx
+            .features
+            .ok_or_else(|| crate::Error::Other("ocs requires features".into()))?;
+        // per-class centroids over the candidates
+        let by_class = ctx.class_indices();
+        let mut centroids: Vec<Vec<f32>> = Vec::with_capacity(by_class.len());
+        for idxs in &by_class {
+            let mut c = vec![0.0f32; d];
+            if !idxs.is_empty() {
+                for &i in idxs {
+                    for (cc, &v) in c.iter_mut().zip(&feats[i * d..(i + 1) * d]) {
+                        *cc += v / idxs.len() as f32;
+                    }
+                }
+            }
+            centroids.push(c);
+        }
+        let rep: Vec<f64> = (0..n)
+            .map(|i| {
+                let y = ctx.samples[i].label as usize;
+                -stats::dist2(&feats[i * d..(i + 1) * d], &centroids[y])
+            })
+            .collect();
+        // normalize rep to unit scale so rep and div are commensurate
+        let rep_scale = rep.iter().map(|r| r.abs()).fold(0.0f64, f64::max).max(1e-9);
+        let mut chosen: Vec<usize> = Vec::with_capacity(ctx.batch);
+        let mut remaining: Vec<usize> = (0..n).collect();
+        while chosen.len() < ctx.batch.min(n) {
+            let mut best = remaining[0];
+            let mut best_score = f64::NEG_INFINITY;
+            for &i in &remaining {
+                let div = if chosen.is_empty() {
+                    0.0
+                } else {
+                    let mut dsum = 0.0;
+                    for &j in &chosen {
+                        dsum += stats::dist2(
+                            &feats[i * d..(i + 1) * d],
+                            &feats[j * d..(j + 1) * d],
+                        );
+                    }
+                    dsum / chosen.len() as f64
+                };
+                let div_scale = rep_scale; // same normalization
+                let score = rep[i] / rep_scale + div / div_scale;
+                if score > best_score {
+                    best_score = score;
+                    best = i;
+                }
+            }
+            chosen.push(best);
+            remaining.retain(|&i| i != best);
+        }
+        Ok(SelectedBatch::unweighted(chosen))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::testutil::{assert_valid_batch, candidates};
+    use crate::selection::ProbeOut;
+
+    fn ctx_with_probe<'a>(
+        refs: &'a [&'a crate::data::Sample],
+        probe: &'a ProbeOut,
+        seen: &'a [u64],
+        batch: usize,
+    ) -> SelectionContext<'a> {
+        SelectionContext {
+            samples: refs,
+            seen_per_class: seen,
+            num_classes: 6,
+            batch,
+            importance: None,
+            probe: Some(probe),
+            features: None,
+            feature_dim: 0,
+        }
+    }
+
+    #[test]
+    fn hl_and_ll_pick_opposite_ends() {
+        let cands = candidates(10, 2, 21);
+        let refs: Vec<&_> = cands.iter().collect();
+        let probe = ProbeOut {
+            loss: (0..10).map(|i| i as f32).collect(),
+            entropy: vec![0.0; 10],
+        };
+        let seen = vec![5u64; 6];
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let hl = LossBased { high: true }
+            .select(&ctx_with_probe(&refs, &probe, &seen, 3), &mut rng)
+            .unwrap();
+        assert_eq!(hl.indices, vec![9, 8, 7]);
+        let ll = LossBased { high: false }
+            .select(&ctx_with_probe(&refs, &probe, &seen, 3), &mut rng)
+            .unwrap();
+        assert_eq!(ll.indices, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn entropy_picks_most_uncertain() {
+        let cands = candidates(6, 2, 22);
+        let refs: Vec<&_> = cands.iter().collect();
+        let probe = ProbeOut {
+            loss: vec![0.0; 6],
+            entropy: vec![0.1, 0.9, 0.5, 0.95, 0.2, 0.3],
+        };
+        let seen = vec![5u64; 6];
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let picks = EntropyBased
+            .select(&ctx_with_probe(&refs, &probe, &seen, 2), &mut rng)
+            .unwrap();
+        assert_eq!(picks.indices, vec![3, 1]);
+    }
+
+    #[test]
+    fn repdiv_selects_spread_batch() {
+        // features on a line; greedy rep+div must not pick near-duplicates
+        let cands = candidates(6, 1, 23);
+        let mut owned = cands.clone();
+        for s in owned.iter_mut() {
+            s.label = 0;
+        }
+        let refs: Vec<&_> = owned.iter().collect();
+        let feats: Vec<f32> = vec![
+            0.0, 0.0, // 0
+            0.1, 0.0, // 1 (near 0)
+            5.0, 0.0, // 2
+            5.1, 0.0, // 3 (near 2)
+            2.5, 0.0, // 4 (center => representative)
+            2.6, 0.0, // 5
+        ];
+        let seen = vec![6u64];
+        let ctx = SelectionContext {
+            samples: &refs,
+            seen_per_class: &seen,
+            num_classes: 1,
+            batch: 3,
+            importance: None,
+            probe: None,
+            features: Some(&feats),
+            feature_dim: 2,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let picks = RepDiv.select(&ctx, &mut rng).unwrap();
+        assert_valid_batch(&picks, 6, 3);
+        // no two picks from the same near-duplicate pair
+        let pair = |i: usize| i / 2;
+        let mut pairs: Vec<usize> = picks.indices.iter().map(|&i| pair(i)).collect();
+        pairs.sort_unstable();
+        pairs.dedup();
+        assert_eq!(pairs.len(), 3, "picked near-duplicates: {picks:?}");
+    }
+
+    #[test]
+    fn missing_evidence_errors() {
+        let cands = candidates(4, 2, 24);
+        let refs: Vec<&_> = cands.iter().collect();
+        let seen = vec![2u64; 6];
+        let ctx = SelectionContext {
+            samples: &refs,
+            seen_per_class: &seen,
+            num_classes: 6,
+            batch: 2,
+            importance: None,
+            probe: None,
+            features: None,
+            feature_dim: 0,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        assert!(LossBased { high: true }.select(&ctx, &mut rng).is_err());
+        assert!(EntropyBased.select(&ctx, &mut rng).is_err());
+        assert!(RepDiv.select(&ctx, &mut rng).is_err());
+    }
+}

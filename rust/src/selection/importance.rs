@@ -1,0 +1,110 @@
+//! IS — importance sampling (Katharopoulos & Fleuret '18; Zhao & Zhang
+//! '15). Selects each sample with probability proportional to its
+//! last-layer gradient norm, jointly over the whole candidate set.
+//!
+//! This is the strategy Lemma 1 shows to be optimal for *sample-level*
+//! selection but sub-optimal at *batch level*: allocating by gradient norm
+//! alone ignores the class-variance term γ_y that C-IS restores (Thm. 2).
+
+use super::{make_weights, SelectedBatch, SelectionContext, SelectionStrategy};
+use crate::util::rng::Xoshiro256;
+use crate::Result;
+
+pub struct ImportanceSampling;
+
+impl SelectionStrategy for ImportanceSampling {
+    fn name(&self) -> &'static str {
+        "is"
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, rng: &mut Xoshiro256) -> Result<SelectedBatch> {
+        let imp = ctx.require_importance()?;
+        let probs: Vec<f64> = imp.norms.iter().map(|&n| n.max(0.0) as f64).collect();
+        let total: f64 = probs.iter().sum();
+        let indices = rng.weighted_sample_without_replacement(&probs, ctx.batch);
+        // unbiasedness: w_i = 1/(n·P(i)) with P(i) = norm_i / Σnorms
+        let n = ctx.n() as f64;
+        let inv: Vec<f64> = indices
+            .iter()
+            .map(|&i| {
+                if total > 0.0 && probs[i] > 0.0 {
+                    total / (n * probs[i])
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        Ok(SelectedBatch {
+            weights: make_weights(&inv),
+            indices,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::testutil::{assert_valid_batch, candidates, importance_from_grads};
+
+    #[test]
+    fn prefers_high_norm_samples() {
+        let cands = candidates(20, 2, 5);
+        let refs: Vec<&_> = cands.iter().collect();
+        // samples 0..10 have tiny gradients, 10..20 large
+        let grads: Vec<(f64, f64)> = (0..20)
+            .map(|i| if i < 10 { (0.01, 0.0) } else { (5.0, 1.0) })
+            .collect();
+        let imp = importance_from_grads(&grads);
+        let seen = vec![10u64; 6];
+        let ctx = SelectionContext {
+            samples: &refs,
+            seen_per_class: &seen,
+            num_classes: 6,
+            batch: 5,
+            importance: Some(&imp),
+            probe: None,
+            features: None,
+            feature_dim: 0,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let mut strat = ImportanceSampling;
+        let mut high = 0usize;
+        let mut total = 0usize;
+        for _ in 0..200 {
+            let sel = strat.select(&ctx, &mut rng).unwrap();
+            assert_valid_batch(&sel, 20, 5);
+            // rarely-picked low-norm samples get up-weighted when they do
+            // appear; high-norm picks get down-weighted
+            for (k, &i) in sel.indices.iter().enumerate() {
+                if i < 10 {
+                    assert!(sel.weights[k] >= 1.0, "{:?}", sel.weights);
+                }
+            }
+            high += sel.indices.iter().filter(|&&i| i >= 10).count();
+            total += sel.indices.len();
+        }
+        assert!(
+            high as f64 / total as f64 > 0.9,
+            "high-norm fraction {high}/{total}"
+        );
+    }
+
+    #[test]
+    fn errors_without_importance_evidence() {
+        let cands = candidates(5, 2, 7);
+        let refs: Vec<&_> = cands.iter().collect();
+        let seen = vec![1u64; 6];
+        let ctx = SelectionContext {
+            samples: &refs,
+            seen_per_class: &seen,
+            num_classes: 6,
+            batch: 2,
+            importance: None,
+            probe: None,
+            features: None,
+            feature_dim: 0,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        assert!(ImportanceSampling.select(&ctx, &mut rng).is_err());
+    }
+}

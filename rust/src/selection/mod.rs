@@ -1,0 +1,209 @@
+//! Fine-grained data-selection strategies: Titan's C-IS and every baseline
+//! the paper compares against (Table 1 columns).
+//!
+//! A strategy sees one round's *candidate set* plus whatever model-derived
+//! evidence its method needs (gradient norms + Gram matrix from the
+//! `importance` artifact, per-sample loss/entropy from the `probe`
+//! artifact, shallow features), and returns the indices of the training
+//! batch. All strategies are deterministic under the round RNG.
+
+pub mod camel;
+pub mod cis;
+pub mod heuristics;
+pub mod importance;
+pub mod random;
+pub mod variance;
+
+use crate::config::Method;
+use crate::data::sample::Sample;
+use crate::runtime::model::ImportanceOut;
+use crate::util::rng::Xoshiro256;
+use crate::{Error, Result};
+
+/// Per-candidate probe scores (from the `probe` artifact).
+#[derive(Clone, Debug, Default)]
+pub struct ProbeOut {
+    /// Per-sample softmax CE loss.
+    pub loss: Vec<f32>,
+    /// Per-sample output entropy.
+    pub entropy: Vec<f32>,
+}
+
+/// Everything a strategy may look at for one selection round.
+pub struct SelectionContext<'a> {
+    /// The candidate samples (post coarse filter, or the whole round's
+    /// stream for un-filtered baselines).
+    pub samples: &'a [&'a Sample],
+    /// Stream class frequencies |S_y| (counts seen so far, per class).
+    pub seen_per_class: &'a [u64],
+    pub num_classes: usize,
+    /// Target batch size |B|.
+    pub batch: usize,
+    /// Gradient evidence (norms + K), if the method requires it.
+    pub importance: Option<&'a ImportanceOut>,
+    /// Probe evidence (loss/entropy), if the method requires it.
+    pub probe: Option<&'a ProbeOut>,
+    /// Shallow features [n * feature_dim] row-major, if available.
+    pub features: Option<&'a [f32]>,
+    pub feature_dim: usize,
+}
+
+impl<'a> SelectionContext<'a> {
+    pub fn n(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Candidate indices grouped by class label.
+    pub fn class_indices(&self) -> Vec<Vec<usize>> {
+        let mut by_class = vec![Vec::new(); self.num_classes];
+        for (i, s) in self.samples.iter().enumerate() {
+            by_class[s.label as usize].push(i);
+        }
+        by_class
+    }
+
+    fn require_importance(&self) -> Result<&'a ImportanceOut> {
+        self.importance
+            .ok_or_else(|| Error::Other("strategy requires importance evidence".into()))
+    }
+
+    fn require_probe(&self) -> Result<&'a ProbeOut> {
+        self.probe
+            .ok_or_else(|| Error::Other("strategy requires probe evidence".into()))
+    }
+}
+
+/// A selected batch: candidate indices plus per-sample loss weights.
+///
+/// Weights implement the paper's unbiasedness correction (Appendix A.2
+/// eq. (f): each sample weighted by 1/(probability × size)). Deterministic
+/// strategies (RS, the heuristics, Camel) use 1.0 — RS because uniform
+/// sampling is already unbiased, the heuristics because their source
+/// papers deploy them unweighted (that bias is exactly the paper's §2.3
+/// critique). Weights are clipped and mean-normalized (see `make_weights`)
+/// to keep the effective learning rate comparable across methods.
+#[derive(Clone, Debug)]
+pub struct SelectedBatch {
+    pub indices: Vec<usize>,
+    pub weights: Vec<f32>,
+}
+
+impl SelectedBatch {
+    pub fn unweighted(indices: Vec<usize>) -> Self {
+        let weights = vec![1.0; indices.len()];
+        Self { indices, weights }
+    }
+}
+
+/// Build clipped, mean-normalized inverse-probability weights.
+/// `inv_prob[i]` is the raw 1/(P·size) factor for the i-th pick.
+pub fn make_weights(inv_prob: &[f64]) -> Vec<f32> {
+    if inv_prob.is_empty() {
+        return Vec::new();
+    }
+    const CLIP_LO: f64 = 0.2;
+    const CLIP_HI: f64 = 5.0;
+    let clipped: Vec<f64> = inv_prob
+        .iter()
+        .map(|&w| {
+            if !w.is_finite() || w <= 0.0 {
+                1.0
+            } else {
+                w.clamp(CLIP_LO, CLIP_HI)
+            }
+        })
+        .collect();
+    let mean: f64 = clipped.iter().sum::<f64>() / clipped.len() as f64;
+    clipped.iter().map(|&w| (w / mean) as f32).collect()
+}
+
+/// A batch-selection strategy.
+pub trait SelectionStrategy: Send {
+    fn name(&self) -> &'static str;
+    /// Pick `ctx.batch` candidate indices (fewer only if n < batch) with
+    /// their unbiasedness weights.
+    fn select(&mut self, ctx: &SelectionContext, rng: &mut Xoshiro256)
+        -> Result<SelectedBatch>;
+}
+
+/// Instantiate the strategy for a method. `Titan` uses the same fine
+/// stage as `Cis` (the two differ in the coarse stage + pipeline, which
+/// live in the coordinator).
+pub fn make_strategy(method: Method) -> Box<dyn SelectionStrategy> {
+    match method {
+        Method::Rs => Box::new(random::RandomSelection),
+        Method::Is => Box::new(importance::ImportanceSampling),
+        Method::Ll => Box::new(heuristics::LossBased { high: false }),
+        Method::Hl => Box::new(heuristics::LossBased { high: true }),
+        Method::Ce => Box::new(heuristics::EntropyBased),
+        Method::Ocs => Box::new(heuristics::RepDiv),
+        Method::Camel => Box::new(camel::CamelCoreset),
+        Method::Cis | Method::Titan => Box::new(cis::ClassifiedImportanceSampling),
+    }
+}
+
+/// Shared post-condition checks used by strategy tests.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::data::synth::{SynthTask, TaskSpec};
+
+    /// Deterministic candidate set with varied labels.
+    pub fn candidates(n: usize, classes: usize, seed: u64) -> Vec<Sample> {
+        let task = SynthTask::new(TaskSpec::Har, seed, 0.3, 0.1);
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..n)
+            .map(|i| task.draw_class(i as u64, (i % classes.min(6)) as u32, &mut rng))
+            .collect()
+    }
+
+    /// Synthetic ImportanceOut with controllable per-sample gradient
+    /// geometry: gradients g_i are 2-D vectors; K_ij = <g_i, g_j>.
+    pub fn importance_from_grads(grads: &[(f64, f64)]) -> ImportanceOut {
+        let n = grads.len();
+        let mut k = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                k[i * n + j] =
+                    (grads[i].0 * grads[j].0 + grads[i].1 * grads[j].1) as f32;
+            }
+        }
+        let norms: Vec<f32> = grads
+            .iter()
+            .map(|g| ((g.0 * g.0 + g.1 * g.1) as f32).sqrt())
+            .collect();
+        ImportanceOut {
+            norms,
+            k,
+            n_total: n,
+            valid: n,
+        }
+    }
+
+    pub fn assert_valid_batch(sel: &super::SelectedBatch, n: usize, batch: usize) {
+        let picks = &sel.indices;
+        assert_eq!(picks.len(), batch.min(n), "batch size");
+        assert_eq!(sel.weights.len(), picks.len(), "weights length");
+        let mut sorted = picks.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), picks.len(), "duplicates in batch: {picks:?}");
+        assert!(picks.iter().all(|&i| i < n), "index out of range");
+        assert!(
+            sel.weights.iter().all(|&w| w.is_finite() && w > 0.0),
+            "bad weights: {:?}",
+            sel.weights
+        );
+    }
+
+    #[test]
+    fn make_weights_clips_and_normalizes() {
+        let w = super::make_weights(&[0.001, 1.0, 1_000.0, f64::NAN]);
+        assert_eq!(w.len(), 4);
+        let mean: f32 = w.iter().sum::<f32>() / 4.0;
+        assert!((mean - 1.0).abs() < 1e-5, "{w:?}");
+        assert!(w[0] < w[1] && w[1] < w[2], "{w:?}");
+        assert!(w.iter().all(|&x| x > 0.0));
+        assert!(super::make_weights(&[]).is_empty());
+    }
+}

@@ -1,0 +1,77 @@
+//! RS — random selection. The paper's normalization baseline (Table 1
+//! times are reported relative to it).
+
+use super::{SelectedBatch, SelectionContext, SelectionStrategy};
+use crate::util::rng::Xoshiro256;
+use crate::Result;
+
+pub struct RandomSelection;
+
+impl SelectionStrategy for RandomSelection {
+    fn name(&self) -> &'static str {
+        "rs"
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, rng: &mut Xoshiro256) -> Result<SelectedBatch> {
+        // uniform sampling is already unbiased: unit weights
+        Ok(SelectedBatch::unweighted(
+            rng.sample_indices(ctx.n(), ctx.batch),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::testutil::{assert_valid_batch, candidates};
+
+    #[test]
+    fn picks_valid_batches() {
+        let cands = candidates(30, 6, 1);
+        let refs: Vec<&_> = cands.iter().collect();
+        let seen = vec![10u64; 6];
+        let ctx = SelectionContext {
+            samples: &refs,
+            seen_per_class: &seen,
+            num_classes: 6,
+            batch: 10,
+            importance: None,
+            probe: None,
+            features: None,
+            feature_dim: 0,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let mut strat = RandomSelection;
+        for _ in 0..20 {
+            let sel = strat.select(&ctx, &mut rng).unwrap();
+            assert_valid_batch(&sel, 30, 10);
+            assert!(sel.weights.iter().all(|&w| w == 1.0));
+        }
+    }
+
+    #[test]
+    fn covers_all_candidates_over_many_rounds() {
+        let cands = candidates(15, 3, 2);
+        let refs: Vec<&_> = cands.iter().collect();
+        let seen = vec![5u64; 6];
+        let ctx = SelectionContext {
+            samples: &refs,
+            seen_per_class: &seen,
+            num_classes: 6,
+            batch: 5,
+            importance: None,
+            probe: None,
+            features: None,
+            feature_dim: 0,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let mut hit = vec![false; 15];
+        let mut strat = RandomSelection;
+        for _ in 0..100 {
+            for i in strat.select(&ctx, &mut rng).unwrap().indices {
+                hit[i] = true;
+            }
+        }
+        assert!(hit.iter().all(|&h| h), "{hit:?}");
+    }
+}

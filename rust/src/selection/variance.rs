@@ -1,0 +1,319 @@
+//! Batch-gradient variance analysis (Theorem 2) — the measurement behind
+//! Fig. 5 and the property tests pinning C-IS's optimality.
+//!
+//! Theorem 2 decomposes the variance of the batch gradient estimator under
+//! a (class allocation, intra-class distribution) strategy:
+//!
+//!   V_B[∇L(B)] = Σ_y α_y (β_y − γ_y),      α_y = |S_y|² / (|S|² |B_y|)
+//!   β_y = Σ_{x∈S_y} ‖∇l(x)‖² / (|S_y|² P_y(x)),   γ_y = ‖mean_y ∇l‖²
+//!
+//! All quantities are computable from the Gram matrix K and the candidate
+//! labels. We evaluate the decomposition for RS / IS / C-IS allocations to
+//! regenerate Fig. 5(a) and to verify (by property test) that the Lemma-2
+//! strategy minimizes the expression over random alternatives.
+
+use crate::runtime::model::ImportanceOut;
+use crate::selection::cis::{class_importances, class_summaries, ClassSummary};
+use crate::Result;
+
+/// One strategy's (allocation, intra-class distribution) for analysis.
+#[derive(Clone, Debug)]
+pub struct StrategySpec {
+    /// Fractional slots per class (need not be integral — expectation).
+    pub alloc: Vec<f64>,
+    /// Per class y: P_y(x) over that class's candidate list (sums to 1).
+    pub probs: Vec<Vec<f64>>,
+}
+
+/// Evaluate Theorem 2's variance for a strategy over the candidates
+/// summarized by `summaries` (from [`class_summaries`]).
+pub fn theorem2_variance(
+    summaries: &[ClassSummary],
+    imp: &ImportanceOut,
+    spec: &StrategySpec,
+) -> f64 {
+    let total: f64 = summaries.iter().map(|s| s.indices.len() as f64).sum();
+    if total == 0.0 {
+        return 0.0;
+    }
+    let mut v = 0.0;
+    for (y, s) in summaries.iter().enumerate() {
+        let ny = s.indices.len() as f64;
+        if s.indices.is_empty() || spec.alloc[y] <= 0.0 {
+            continue;
+        }
+        let alpha = (ny * ny) / (total * total * spec.alloc[y]);
+        let mut beta = 0.0;
+        for (local, &i) in s.indices.iter().enumerate() {
+            let p = spec.probs[y][local].max(1e-12);
+            let g2 = imp.k_at(i, i) as f64;
+            beta += g2 / (ny * ny * p);
+        }
+        let gamma = s.mean_grad_norm2;
+        v += alpha * (beta - gamma);
+    }
+    v
+}
+
+/// RS: allocation ∝ class candidate count, uniform within class.
+pub fn spec_rs(summaries: &[ClassSummary], batch: usize) -> StrategySpec {
+    let total: f64 = summaries.iter().map(|s| s.indices.len() as f64).sum();
+    let alloc = summaries
+        .iter()
+        .map(|s| batch as f64 * s.indices.len() as f64 / total.max(1.0))
+        .collect();
+    let probs = summaries
+        .iter()
+        .map(|s| {
+            let n = s.indices.len().max(1);
+            vec![1.0 / n as f64; s.indices.len()]
+        })
+        .collect();
+    StrategySpec { alloc, probs }
+}
+
+/// IS: P(x) ∝ ‖g‖ globally; expected class allocation = B · Σ_{x∈y} P(x);
+/// within class, P_y(x) ∝ ‖g‖ (the conditional of the global draw).
+pub fn spec_is(summaries: &[ClassSummary], imp: &ImportanceOut, batch: usize) -> StrategySpec {
+    let total_norm: f64 = summaries
+        .iter()
+        .flat_map(|s| s.indices.iter())
+        .map(|&i| imp.norms[i] as f64)
+        .sum();
+    let mut alloc = Vec::with_capacity(summaries.len());
+    let mut probs = Vec::with_capacity(summaries.len());
+    for s in summaries {
+        let class_norm: f64 = s.indices.iter().map(|&i| imp.norms[i] as f64).sum();
+        alloc.push(if total_norm > 0.0 {
+            batch as f64 * class_norm / total_norm
+        } else {
+            batch as f64 * s.indices.len() as f64
+                / summaries.iter().map(|t| t.indices.len()).sum::<usize>().max(1) as f64
+        });
+        let p: Vec<f64> = if class_norm > 0.0 {
+            s.indices
+                .iter()
+                .map(|&i| imp.norms[i] as f64 / class_norm)
+                .collect()
+        } else {
+            let n = s.indices.len().max(1);
+            vec![1.0 / n as f64; s.indices.len()]
+        };
+        probs.push(p);
+    }
+    StrategySpec { alloc, probs }
+}
+
+/// C-IS: allocation ∝ I_t(y) (Eq. 2, estimated on the candidates, with
+/// the candidate counts standing in for |S_y| so the comparison against
+/// RS/IS is apples-to-apples on the same finite set); P_y(x) ∝ ‖g‖.
+pub fn spec_cis(summaries: &[ClassSummary], imp: &ImportanceOut, batch: usize) -> StrategySpec {
+    // NOTE this is the paper's *continuous* Lemma-2 optimum: Theorem 2's
+    // variance expression models |B_y| draws from P_y with replacement, so
+    // the allocation here is NOT capped by candidate counts (the runtime
+    // C-IS, which samples without replacement, does cap — see cis.rs).
+    let seen: Vec<u64> = summaries.iter().map(|s| s.indices.len() as u64).collect();
+    let imps = class_importances(summaries, &seen);
+    let mass: f64 = imps.iter().sum();
+    let alloc: Vec<f64> = if mass > 0.0 {
+        imps.iter().map(|&i| batch as f64 * i / mass).collect()
+    } else {
+        spec_rs(summaries, batch).alloc
+    };
+    let probs = summaries
+        .iter()
+        .map(|s| {
+            let class_norm: f64 = s.indices.iter().map(|&i| imp.norms[i] as f64).sum();
+            if class_norm > 0.0 {
+                s.indices
+                    .iter()
+                    .map(|&i| imp.norms[i] as f64 / class_norm)
+                    .collect()
+            } else {
+                let n = s.indices.len().max(1);
+                vec![1.0 / n as f64; s.indices.len()]
+            }
+        })
+        .collect();
+    StrategySpec { alloc, probs }
+}
+
+/// Convenience: variance for the three Fig. 5(a) strategies at one batch
+/// size. Returns (rs, is, cis).
+pub fn fig5_variances(
+    labels: &[u32],
+    imp: &ImportanceOut,
+    num_classes: usize,
+    batch: usize,
+) -> Result<(f64, f64, f64)> {
+    let summaries = class_summaries(labels, imp, num_classes);
+    let rs = theorem2_variance(&summaries, imp, &spec_rs(&summaries, batch));
+    let is = theorem2_variance(&summaries, imp, &spec_is(&summaries, imp, batch));
+    let cis = theorem2_variance(&summaries, imp, &spec_cis(&summaries, imp, batch));
+    Ok((rs, is, cis))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::testutil::importance_from_grads;
+    use crate::util::prop::{forall, gen};
+    use crate::util::rng::Xoshiro256;
+
+    /// Random gradient geometry: n samples over c classes with per-class
+    /// diversity/scale drawn at random.
+    fn random_geometry(
+        rng: &mut Xoshiro256,
+        n: usize,
+        c: usize,
+    ) -> (Vec<u32>, crate::runtime::model::ImportanceOut) {
+        let mut grads = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        let scales: Vec<f64> = (0..c).map(|_| 0.2 + rng.next_f64() * 3.0).collect();
+        let spreads: Vec<f64> = (0..c).map(|_| rng.next_f64() * std::f64::consts::PI).collect();
+        for i in 0..n {
+            let y = i % c;
+            let th = spreads[y] * rng.next_f64();
+            let r = scales[y] * (0.5 + rng.next_f64());
+            grads.push((r * th.cos(), r * th.sin()));
+            labels.push(y as u32);
+        }
+        (labels, importance_from_grads(&grads))
+    }
+
+    #[test]
+    fn cis_leq_is_leq_some_rs_on_structured_geometry() {
+        // Geometry with one diverse-equal-norm class and one concentrated
+        // class — where the IS/C-IS gap is provable (Fig. 4 / Fig. 5a).
+        let mut grads = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..20 {
+            let th = i as f64 / 20.0 * 2.0 * std::f64::consts::PI;
+            grads.push((th.cos(), th.sin())); // class 0: diverse, ‖g‖=1
+            labels.push(0u32);
+        }
+        for _ in 0..20 {
+            grads.push((1.0, 0.0)); // class 1: identical, ‖g‖=1
+            labels.push(1u32);
+        }
+        let imp = importance_from_grads(&grads);
+        for batch in [4usize, 10, 20] {
+            let (rs, is, cis) = fig5_variances(&labels, &imp, 2, batch).unwrap();
+            assert!(cis <= is + 1e-9, "batch {batch}: cis {cis} > is {is}");
+            assert!(cis <= rs + 1e-9, "batch {batch}: cis {cis} > rs {rs}");
+        }
+        // gap widens at smaller batch (the paper's small-batch claim)
+        let (_, is4, cis4) = fig5_variances(&labels, &imp, 2, 4).unwrap();
+        let (_, is20, cis20) = fig5_variances(&labels, &imp, 2, 20).unwrap();
+        assert!(
+            (is4 - cis4) > (is20 - cis20),
+            "gap small batch {} vs large {}",
+            is4 - cis4,
+            is20 - cis20
+        );
+    }
+
+    #[test]
+    fn property_cis_minimizes_among_random_allocations() {
+        // Lemma 2: on random geometries, no random (allocation, IS-probs)
+        // alternative beats the C-IS allocation under Theorem 2.
+        forall(
+            42,
+            40,
+            |rng| gen::f64_vec(rng, 3, 3, 0.0, 1.0), // only drives case variety
+            |seedvec| {
+                let mut rng =
+                    Xoshiro256::seed_from_u64((seedvec.iter().sum::<f64>() * 1e6) as u64 + 1);
+                let c = 2 + rng.index(3);
+                let n = c * (4 + rng.index(8));
+                let (labels, imp) = random_geometry(&mut rng, n, c);
+                let summaries = class_summaries(&labels, &imp, c);
+                let batch = 2 + rng.index(n / 2);
+                let cis_spec = spec_cis(&summaries, &imp, batch);
+                let v_cis = theorem2_variance(&summaries, &imp, &cis_spec);
+                // random alternative allocations with the same total mass
+                for _ in 0..20 {
+                    let mut alloc: Vec<f64> =
+                        (0..c).map(|_| 0.05 + rng.next_f64()).collect();
+                    let mass: f64 = alloc.iter().sum();
+                    for a in alloc.iter_mut() {
+                        *a *= batch as f64 / mass;
+                    }
+                    let alt = StrategySpec {
+                        alloc,
+                        probs: cis_spec.probs.clone(),
+                    };
+                    let v_alt = theorem2_variance(&summaries, &imp, &alt);
+                    if v_alt < v_cis - 1e-6 * v_cis.abs().max(1e-12) {
+                        return Err(format!(
+                            "random allocation beat C-IS: {v_alt} < {v_cis}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_is_probs_minimize_beta() {
+        // Lemma 1 / Cauchy-Schwarz: within a class, P ∝ ‖g‖ minimizes β_y
+        // against random intra-class distributions.
+        forall(
+            7,
+            40,
+            |rng| gen::f64_vec(rng, 4, 16, 0.1, 5.0),
+            |norms| {
+                let grads: Vec<(f64, f64)> = norms.iter().map(|&r| (r, 0.0)).collect();
+                let imp = importance_from_grads(&grads);
+                let labels = vec![0u32; norms.len()];
+                let summaries = class_summaries(&labels, &imp, 1);
+                let beta = |probs: &[f64]| {
+                    let spec = StrategySpec {
+                        alloc: vec![1.0],
+                        probs: vec![probs.to_vec()],
+                    };
+                    theorem2_variance(&summaries, &imp, &spec)
+                };
+                let total: f64 = norms.iter().sum();
+                let p_is: Vec<f64> = norms.iter().map(|&x| x / total).collect();
+                let v_is = beta(&p_is);
+                let mut rng = Xoshiro256::seed_from_u64(
+                    (norms.iter().map(|x| x * 17.0).sum::<f64>() * 1e3) as u64,
+                );
+                for _ in 0..20 {
+                    let mut p: Vec<f64> = (0..norms.len())
+                        .map(|_| 0.01 + rng.next_f64())
+                        .collect();
+                    let m: f64 = p.iter().sum();
+                    for v in p.iter_mut() {
+                        *v /= m;
+                    }
+                    if beta(&p) < v_is - 1e-9 * v_is.abs().max(1e-12) {
+                        return Err(format!("random probs beat IS within class"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn variance_decreases_with_batch_size() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let (labels, imp) = random_geometry(&mut rng, 40, 4);
+        let (rs2, _, cis2) = fig5_variances(&labels, &imp, 4, 2).unwrap();
+        let (rs20, _, cis20) = fig5_variances(&labels, &imp, 4, 20).unwrap();
+        assert!(rs20 < rs2);
+        assert!(cis20 < cis2);
+    }
+
+    #[test]
+    fn empty_class_is_skipped() {
+        let grads = vec![(1.0, 0.0), (0.0, 1.0)];
+        let imp = importance_from_grads(&grads);
+        let labels = vec![0u32, 0u32];
+        let (rs, is, cis) = fig5_variances(&labels, &imp, 3, 1).unwrap();
+        assert!(rs.is_finite() && is.is_finite() && cis.is_finite());
+    }
+}

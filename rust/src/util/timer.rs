@@ -1,0 +1,123 @@
+//! Wall-clock instrumentation: stopwatch + latency histogram. Used by the
+//! coordinator's metrics plane and the micro-bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch around `Instant`.
+#[derive(Clone, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+/// Latency recorder: keeps raw samples (experiments are small enough) and
+/// summarizes to mean/percentiles.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyRecorder {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_ms.push(d.as_secs_f64() * 1e3);
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        crate::util::stats::mean(&self.samples_ms)
+    }
+
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        crate::util::stats::percentile(&self.samples_ms, p)
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.samples_ms.iter().sum()
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples_ms
+    }
+
+    /// "mean p50 p99" one-liner for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.3}ms p50={:.3}ms p99={:.3}ms",
+            self.count(),
+            self.mean_ms(),
+            self.percentile_ms(50.0),
+            self.percentile_ms(99.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.elapsed_ms() >= 1.0);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, secs) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn recorder_summary() {
+        let mut r = LatencyRecorder::new();
+        for ms in [1.0, 2.0, 3.0] {
+            r.record_ms(ms);
+        }
+        assert_eq!(r.count(), 3);
+        assert!((r.mean_ms() - 2.0).abs() < 1e-12);
+        assert_eq!(r.percentile_ms(100.0), 3.0);
+        assert_eq!(r.total_ms(), 6.0);
+        assert!(r.summary().contains("n=3"));
+    }
+}

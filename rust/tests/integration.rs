@@ -1,0 +1,202 @@
+//! Cross-module integration tests: full training runs through the real
+//! PJRT artifacts, pipeline-vs-sequential equivalences, and end-to-end
+//! learning signals for Titan vs baselines.
+//!
+//! These tests need `make artifacts`; they skip (with a note) otherwise so
+//! `cargo test` stays green on a fresh checkout.
+
+use titan::config::{presets, Method, NoiseKind, RunConfig};
+use titan::coordinator::{pipeline, sequential};
+use titan::device::idle::IdleTrace;
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts/mlp/meta.json").exists();
+    if !ok {
+        eprintln!("skipping integration test: run `make artifacts` first");
+    }
+    ok
+}
+
+fn base(method: Method, rounds: usize) -> RunConfig {
+    let mut c = presets::table1("mlp", method);
+    c.rounds = rounds;
+    c.test_size = 200;
+    c.eval_every = (rounds / 4).max(2);
+    c
+}
+
+#[test]
+fn titan_end_to_end_learns() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = base(Method::Titan, 40);
+    let (record, outcomes) = pipeline::run(&cfg).unwrap();
+    assert_eq!(outcomes.len(), 40);
+    // learning signal: accuracy above chance (1/6) by the end
+    assert!(
+        record.final_accuracy > 1.0 / 6.0 + 0.05,
+        "no learning: {:.3}",
+        record.final_accuracy
+    );
+    // accuracy does not regress from the first checkpoint (Titan converges
+    // near-plateau within ~10 rounds on this task, so strict monotone loss
+    // is noise — accuracy stability is the meaningful invariant)
+    let first = record.curve.first().unwrap().test_accuracy;
+    assert!(
+        record.best_accuracy() >= first - 0.02,
+        "accuracy regressed: {first} -> {}",
+        record.best_accuracy()
+    );
+    // filter really capped candidates
+    assert!(outcomes.iter().all(|o| o.selector.candidates <= cfg.candidate_size));
+    // processing delay was recorded for every round
+    assert_eq!(record.processing_delay.count(), 40);
+}
+
+#[test]
+fn all_methods_complete_short_runs() {
+    if !have_artifacts() {
+        return;
+    }
+    for method in Method::ALL {
+        let mut cfg = base(method, 5);
+        cfg.pipeline = false;
+        let (record, outcomes) = sequential::run(&cfg).unwrap();
+        assert_eq!(outcomes.len(), 5, "{method:?}");
+        assert!(record.final_accuracy.is_finite(), "{method:?}");
+        assert!(
+            outcomes.iter().all(|o| o.train_loss.is_finite()),
+            "{method:?}"
+        );
+    }
+}
+
+#[test]
+fn pipeline_and_sequential_agree_on_device_lane_costs() {
+    if !have_artifacts() {
+        return;
+    }
+    // same seed => same selection decisions => same per-lane device costs;
+    // only the wall aggregation (max vs sum) differs. The pipelined run
+    // syncs params with one-round delay, so train losses differ — but the
+    // GPU lane ops of round 0 (selection under init params) must match.
+    let cfg = base(Method::Titan, 3);
+    let (_, pipe) = pipeline::run(&cfg).unwrap();
+    let mut seq_cfg = cfg.clone();
+    seq_cfg.pipeline = false;
+    let (_, seq) = sequential::run(&seq_cfg).unwrap();
+    assert_eq!(pipe[0].selector.candidates, seq[0].selector.candidates);
+    assert_eq!(pipe[0].selector.arrivals, seq[0].selector.arrivals);
+    for (p, s) in pipe.iter().zip(seq.iter()) {
+        assert!(p.device_wall_ms <= s.device_wall_ms + 1e-9,
+            "pipelined round must not be slower on the device clock");
+    }
+}
+
+#[test]
+fn titan_early_convergence_advantage() {
+    if !have_artifacts() {
+        return;
+    }
+    // The paper's Table-1 effect in its most robust form: after the same
+    // small number of rounds, Titan's selected batches have moved the
+    // model further than random selection (the full plateau-crossing
+    // comparison is measured by `exp table1`, not asserted here — it is
+    // seed/eval-grid sensitive at short budgets).
+    let mut rs_cfg = base(Method::Rs, 30);
+    rs_cfg.eval_every = 10;
+    let mut ti_cfg = base(Method::Titan, 30);
+    ti_cfg.eval_every = 10;
+    let (rs, _) = sequential::run(&rs_cfg).unwrap();
+    let (ti, _) = pipeline::run(&ti_cfg).unwrap();
+    // compare the best of the first two checkpoints: a single round-10
+    // eval point carries ±0.04 seed noise on the synthetic task
+    let early = |r: &titan::metrics::RunRecord| {
+        r.curve
+            .iter()
+            .take(2)
+            .map(|p| p.test_accuracy)
+            .fold(0.0f64, f64::max)
+    };
+    let rs_early = early(&rs);
+    let ti_early = early(&ti);
+    assert!(
+        ti_early >= rs_early - 0.05,
+        "titan early accuracy {ti_early:.3} well below rs {rs_early:.3}"
+    );
+    // and Titan's per-round device cost must not exceed RS-sequential's
+    // by more than the sync overhead (the pipeline hides selection)
+    let rs_round = rs.total_device_ms / 30.0;
+    let ti_round = ti.total_device_ms / 30.0;
+    assert!(
+        ti_round <= rs_round * 1.15,
+        "titan round {ti_round:.0}ms vs rs {rs_round:.0}ms"
+    );
+}
+
+#[test]
+fn noisy_streams_complete_and_learn() {
+    if !have_artifacts() {
+        return;
+    }
+    for noise in [
+        NoiseKind::Feature { frac: 0.4, sigma: 1.0 },
+        NoiseKind::Label { frac: 0.4 },
+    ] {
+        let mut cfg = base(Method::Titan, 25);
+        cfg.noise = noise;
+        let (record, _) = pipeline::run(&cfg).unwrap();
+        assert!(record.final_accuracy > 1.0 / 6.0 - 0.02, "{noise:?}");
+    }
+}
+
+#[test]
+fn idle_budget_trace_respected_through_pipeline() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = base(Method::Titan, 8);
+    let trace = IdleTrace::Sine { min: 0.2, max: 1.0, period: 4.0 };
+    let budgets: Vec<usize> = (0..8).map(|r| trace.candidate_budget(r, 30)).collect();
+    let (_, outcomes) = pipeline::run_with_idle(&cfg, trace).unwrap();
+    for (o, &b) in outcomes.iter().zip(&budgets) {
+        assert!(
+            o.selector.candidates <= b,
+            "round {}: {} > budget {b}",
+            o.round,
+            o.selector.candidates
+        );
+    }
+}
+
+#[test]
+fn batch25_artifact_trains() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base(Method::Rs, 4);
+    cfg.batch_size = 25;
+    cfg.candidate_size = 30;
+    cfg.pipeline = false;
+    let (record, outcomes) = sequential::run(&cfg).unwrap();
+    assert_eq!(outcomes.len(), 4);
+    assert!(record.final_accuracy.is_finite());
+}
+
+#[test]
+fn conv_variant_end_to_end_if_built() {
+    // exercise one conv artifact set end-to-end (squeeze = cheapest conv)
+    if !std::path::Path::new("artifacts/squeeze/meta.json").exists() {
+        eprintln!("skipping: squeeze artifacts not built");
+        return;
+    }
+    let mut cfg = presets::table1("squeeze", Method::Titan);
+    cfg.rounds = 6;
+    cfg.test_size = 200;
+    cfg.eval_every = 3;
+    let (record, outcomes) = pipeline::run(&cfg).unwrap();
+    assert_eq!(outcomes.len(), 6);
+    assert!(record.final_accuracy.is_finite());
+    assert!(outcomes[0].selector.candidates <= cfg.candidate_size);
+}
