@@ -4,6 +4,12 @@
 //! host-side scoring/buffer path alone (no model), which bounds the
 //! coordinator overhead.
 //!
+//! The `score_{ref,chunk}_n*` pairs compare the pre-optimization scalar
+//! scorer (fresh centroid `Vec` + `‖c‖²` recompute per sample) against
+//! the zero-alloc chunked path at realistic candidate sizes; divide the
+//! per-iteration time by `n` for ns/sample (scripts/bench_report.py does
+//! this when emitting BENCH_filter.json).
+//!
 //! Run: `cargo bench --bench bench_filter`
 
 use titan::config::{presets, Method};
@@ -31,6 +37,40 @@ fn main() {
             let k = i % 100;
             i += 1;
             filt.process(samples[k].clone(), &feats[k])
+        });
+    }
+
+    // old-vs-new scoring at realistic candidate sizes: the scalar
+    // reference path allocates a centroid per sample; the chunked path is
+    // zero-alloc (one reused output buffer per chunk)
+    for n in [64usize, 256, 1024] {
+        let dim = 64usize;
+        let classes = 10usize;
+        let mut filt = CoarseFilter::new(classes, dim, 30, 0.3);
+        let feats: Vec<f32> = (0..n * dim).map(|i| ((i as f32) * 0.01).sin()).collect();
+        let samples: Vec<Sample> = (0..n)
+            .map(|i| Sample::new(i as u64, (i % classes) as u32, vec![0.0; 4]))
+            .collect();
+        for (i, s) in samples.iter().enumerate() {
+            filt.estimators.update(s.label, &feats[i * dim..(i + 1) * dim]);
+        }
+        b.bench(&format!("score_chunk_ref_n{n}/chunk"), || {
+            let mut acc = 0.0f64;
+            for (i, s) in samples.iter().enumerate() {
+                acc += filt.score_ref(s.label, &feats[i * dim..(i + 1) * dim]);
+            }
+            acc
+        });
+        let mut out: Vec<f64> = Vec::with_capacity(n);
+        b.bench(&format!("score_chunk_n{n}/chunk"), || {
+            filt.score_chunk_into(&samples, &feats, &mut out);
+            out.iter().sum::<f64>()
+        });
+        // the full streaming path (update + score + offer), chunked
+        let mut stream_filt = CoarseFilter::new(classes, dim, 30, 0.3);
+        b.bench(&format!("process_chunk_n{n}/chunk"), || {
+            stream_filt.process_chunk(&samples, &feats);
+            stream_filt.processed()
         });
     }
 

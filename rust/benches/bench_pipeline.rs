@@ -3,20 +3,33 @@
 //!
 //! Run: `cargo bench --bench bench_pipeline`
 
+use std::sync::Arc;
+
 use titan::config::{presets, Method};
 use titan::coordinator::{pipeline, sequential};
 use titan::util::bench::Bencher;
+use titan::util::sync::Latest;
 
 fn main() {
     let mut b = Bencher::new("pipeline");
 
-    // sync-cost bound: round-trip a param-sized vector over a channel
+    // sync-cost bound, old vs new: a cloned Vec over a channel (the
+    // pre-optimization handoff) vs an Arc snapshot through the latest-only
+    // slot (the shipping handoff — refcount bump, no payload copy)
     {
         let params = vec![0.5f32; 120_000];
         let (tx, rx) = std::sync::mpsc::sync_channel::<Vec<f32>>(1);
-        b.bench("param_sync_roundtrip/120k_f32", || {
+        b.bench("param_sync_clone_channel/120k_f32", || {
             tx.send(params.clone()).unwrap();
             rx.recv().unwrap()
+        });
+    }
+    {
+        let params = Arc::new(vec![0.5f32; 120_000]);
+        let slot: Latest<Arc<Vec<f32>>> = Latest::new();
+        b.bench("param_sync_latest_slot/120k_f32", || {
+            slot.publish(Arc::clone(&params));
+            slot.take().unwrap()
         });
     }
 

@@ -40,6 +40,10 @@ fn main() {
         b.bench(&format!("train_step_b{}/{model}", m.train_batch), || {
             rt.train_step(&trefs, 0.01).expect("train")
         });
+        // param snapshot cost, old vs new: full Vec clone vs Arc bump —
+        // this is what the pipeline pays per round to sync the selector
+        b.bench(&format!("params_to_vec/{model}"), || rt.params().to_vec());
+        b.bench(&format!("params_share_arc/{model}"), || rt.share_params());
         let cands = det_samples(30, m.input_dim, m.num_classes);
         let crefs: Vec<&Sample> = cands.iter().collect();
         b.bench(&format!("importance_n30/{model}"), || {

@@ -3,18 +3,67 @@
 //! computation (importance/probe/features via the PJRT artifacts) plus the
 //! strategy itself — for each method on the mlp artifact set.
 //!
+//! The `class_summaries{,_ref}_n*` pairs compare the single-pass Gram
+//! triangle sweep against the per-class nested `k_at` reference at
+//! realistic candidate sizes (host-only: synthetic K, no artifacts
+//! needed); divide per-iteration time by `n` for ns/sample.
+//!
 //! Run: `cargo bench --bench bench_selection` (TITAN_BENCH_FAST=1 to smoke)
 
 use titan::config::{presets, Method};
 use titan::coordinator::{build_stream, SelectorEngine};
+use titan::runtime::model::ImportanceOut;
+use titan::selection::cis::{class_summaries, class_summaries_ref};
 use titan::util::bench::Bencher;
 
+/// Synthetic ImportanceOut: low-rank-ish symmetric K from 2-D gradients.
+fn synth_importance(n: usize) -> ImportanceOut {
+    let grads: Vec<(f64, f64)> = (0..n)
+        .map(|i| {
+            let th = i as f64 * 0.37;
+            let r = 0.5 + (i % 7) as f64 * 0.25;
+            (r * th.cos(), r * th.sin())
+        })
+        .collect();
+    let mut k = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            k[i * n + j] = (grads[i].0 * grads[j].0 + grads[i].1 * grads[j].1) as f32;
+        }
+    }
+    let norms: Vec<f32> = grads
+        .iter()
+        .map(|g| ((g.0 * g.0 + g.1 * g.1) as f32).sqrt())
+        .collect();
+    ImportanceOut {
+        norms,
+        k,
+        n_total: n,
+        valid: n,
+    }
+}
+
 fn main() {
+    let mut b = Bencher::new("selection");
+
+    // single-pass Gram reduction vs the per-class nested reference
+    let classes = 10usize;
+    for n in [64usize, 256, 1024] {
+        let imp = synth_importance(n);
+        let labels: Vec<u32> = (0..n).map(|i| (i % classes) as u32).collect();
+        b.bench(&format!("class_summaries_ref_n{n}"), || {
+            class_summaries_ref(&labels, &imp, classes)
+        });
+        b.bench(&format!("class_summaries_n{n}"), || {
+            class_summaries(&labels, &imp, classes)
+        });
+    }
+
     if !std::path::Path::new("artifacts/mlp/meta.json").exists() {
-        eprintln!("skipping bench_selection: run `make artifacts` first");
+        eprintln!("skipping artifact benches: run `make artifacts` first");
+        b.finish();
         return;
     }
-    let mut b = Bencher::new("selection");
     for method in [
         Method::Rs,
         Method::Is,

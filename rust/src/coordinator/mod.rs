@@ -16,6 +16,8 @@ pub mod pipeline;
 pub mod round;
 pub mod sequential;
 
+use std::sync::Arc;
+
 use crate::config::{Method, RunConfig};
 use crate::data::{Sample, StreamSource, SynthTask};
 use crate::device::idle::IdleTrace;
@@ -111,10 +113,12 @@ impl SelectorEngine {
         // ---- stage 1: candidate formation ---------------------------------
         let candidates: Vec<Sample> = if let Some(filter) = self.filter.as_mut() {
             // Titan: adapt the budget to idle capacity, then feature+score
-            // every arrival in chunks.
+            // every arrival in chunks (process_chunk: one batched pass per
+            // feature chunk, zero per-sample allocation).
             let budget = self.idle.candidate_budget(round, self.cfg.candidate_size);
             filter.set_buffer_cap(budget);
             let chunk = meta.filter_chunk;
+            let fd = meta.feature_dim(self.cfg.filter_blocks);
             let mut i = 0;
             while i < arrivals.len() {
                 let end = (i + chunk).min(arrivals.len());
@@ -124,12 +128,11 @@ impl SelectorEngine {
                     chunk: valid,
                     blocks: self.cfg.filter_blocks,
                 });
-                let fd = feats.len() / chunk.max(1);
-                for (j, s) in arrivals[i..end].iter().enumerate() {
-                    let f = &feats[j * fd..(j + 1) * fd];
-                    self.filter.as_mut().unwrap().process(s.clone(), f);
-                }
-                // re-borrow filter for the next loop iteration
+                // re-borrow the filter (self.rt.features above needed &mut self)
+                self.filter
+                    .as_mut()
+                    .unwrap()
+                    .process_chunk(&arrivals[i..end], &feats[..valid * fd]);
                 i = end;
             }
             let drained = self.filter.as_mut().unwrap().drain();
@@ -203,8 +206,9 @@ impl SelectorEngine {
     }
 
     /// Adopt fresh parameters from the trainer (the per-round sync).
-    pub fn sync_params(&mut self, params: Vec<f32>) -> Result<()> {
-        self.rt.set_params(params)
+    /// Takes the trainer's shared snapshot — a refcount bump, no copy.
+    pub fn sync_params(&mut self, params: Arc<Vec<f32>>) -> Result<()> {
+        self.rt.set_params_shared(params)
     }
 
     pub fn seen_per_class(&self) -> &[u64] {
@@ -264,8 +268,16 @@ impl TrainerEngine {
         self.rt.evaluate(test)
     }
 
+    /// Owned copy of the current parameters (tests/analysis only — the
+    /// hot paths use [`TrainerEngine::share_params`]).
     pub fn params(&self) -> Vec<f32> {
         self.rt.params().to_vec()
+    }
+
+    /// Zero-copy snapshot of the current parameters for the per-round
+    /// sync (refcount bump, no `Vec` clone).
+    pub fn share_params(&self) -> Arc<Vec<f32>> {
+        self.rt.share_params()
     }
 
     pub fn round(&self) -> usize {
@@ -386,8 +398,8 @@ mod tests {
         let mut tr = TrainerEngine::new(&cfg).unwrap();
         let batch: Vec<Sample> = stream.next_round(10);
         tr.train(&batch).unwrap();
-        let p = tr.params();
-        sel.sync_params(p.clone()).unwrap();
+        let p = tr.share_params();
+        sel.sync_params(Arc::clone(&p)).unwrap();
         assert_eq!(sel.rt.params(), &p[..]);
     }
 }

@@ -12,12 +12,25 @@
 //! The "one-round-delay" scheme falls out of the channel topology: while
 //! the trainer updates `w_t` with batch `B_t` (chosen under `w_{t-1}`),
 //! the selector is already choosing `B_{t+1}` under `w_{t-1}`/`w_t` —
-//! whichever sync arrived last. Each `ModelRuntime` is thread-local
-//! (PJRT client is !Send); only `Vec<f32>` params and `Vec<Sample>`
-//! batches cross the channels, which is exactly the sync cost the paper
-//! budgets per round.
+//! whichever sync arrived last.
+//!
+//! Handoff is zero-copy in both directions. Each `ModelRuntime` is
+//! thread-local (PJRT client is !Send), so only ownership crosses
+//! threads:
+//!
+//! - **params** (trainer → selector): an `Arc<Vec<f32>>` snapshot through
+//!   a latest-only slot ([`crate::util::sync::Latest`]) — bounded with
+//!   overwrite semantics, so a lagging selector never queues stale
+//!   parameter copies (the old unbounded `mpsc::channel` grew with the
+//!   lag) and never costs the trainer a `Vec` clone per round.
+//! - **batches** (selector → trainer): the `TrainBatch` is *moved* over a
+//!   `sync_channel(1)`. Batches — unlike params — must all be consumed in
+//!   round order (the one-round-delay contract), so a bounded channel, not
+//!   a latest-only slot, is the right shape; the samples' payloads are
+//!   `Arc`-shared so the move is pointer-sized per sample.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread;
 
 use crate::config::RunConfig;
@@ -25,6 +38,7 @@ use crate::coordinator::{build_stream, RoundOutcome, SelectorEngine, SelectorRep
 use crate::device::idle::IdleTrace;
 use crate::device::{memory, DeviceSim, Lane, Op};
 use crate::metrics::{CurvePoint, RunRecord};
+use crate::util::sync::Latest;
 use crate::util::timer::Stopwatch;
 use crate::{Error, Result};
 
@@ -43,9 +57,11 @@ pub fn run_with_idle(cfg: &RunConfig, idle: IdleTrace) -> Result<(RunRecord, Vec
     let task = stream.task().clone();
     let rounds = cfg.rounds;
 
-    // channels: batches forward, params backward
+    // batches forward over a bounded channel (round-ordered, moved);
+    // params backward through a latest-only slot (Arc snapshot, overwrite)
     let (batch_tx, batch_rx) = mpsc::sync_channel::<Result<SelectedBatch>>(1);
-    let (param_tx, param_rx) = mpsc::channel::<Vec<f32>>();
+    let param_slot: Arc<Latest<Arc<Vec<f32>>>> = Arc::new(Latest::new());
+    let selector_params = Arc::clone(&param_slot);
 
     // ---- selector thread ----------------------------------------------------
     let sel_cfg = cfg.clone();
@@ -58,12 +74,9 @@ pub fn run_with_idle(cfg: &RunConfig, idle: IdleTrace) -> Result<(RunRecord, Vec
             // round r is selected during round r-1's training window)
             for round in 0..rounds {
                 // adopt the freshest params the trainer has shipped
-                // (non-blocking: one-round-delay tolerates staleness)
-                let mut latest: Option<Vec<f32>> = None;
-                while let Ok(p) = param_rx.try_recv() {
-                    latest = Some(p);
-                }
-                if let Some(p) = latest {
+                // (non-blocking: one-round-delay tolerates staleness; the
+                // slot holds at most the newest snapshot, no drain loop)
+                if let Some(p) = selector_params.take() {
                     selector.sync_params(p)?;
                 }
                 let arrivals = stream.next_round(sel_cfg.stream_per_round);
@@ -103,9 +116,9 @@ pub fn run_with_idle(cfg: &RunConfig, idle: IdleTrace) -> Result<(RunRecord, Vec
         sim.record(Lane::Gpu, Op::Sync); // params + batch handoff
         let timing = sim.end_round(true); // pipelined: lanes overlap
 
-        // ship fresh params to the selector (ignore send failure at the
-        // final round when the selector already exited)
-        let _ = param_tx.send(trainer.params());
+        // ship a zero-copy param snapshot to the selector (overwrite any
+        // unconsumed one — the selector only ever wants the newest)
+        param_slot.publish(trainer.share_params());
 
         record.round_device_ms.push(timing.wall_ms);
         record.round_host_ms.push(train_ms.max(sel.report.host_ms));
@@ -132,7 +145,6 @@ pub fn run_with_idle(cfg: &RunConfig, idle: IdleTrace) -> Result<(RunRecord, Vec
         }
     }
     drop(batch_rx);
-    drop(param_tx);
     selector_handle
         .join()
         .map_err(|_| Error::Pipeline("selector thread panicked".into()))??;

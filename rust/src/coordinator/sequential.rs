@@ -22,8 +22,9 @@ pub fn run(cfg: &RunConfig) -> Result<(RunRecord, Vec<RoundOutcome>)> {
     let run_sw = Stopwatch::start();
 
     for round in 0..cfg.rounds {
-        // selection (uses current params — sequential has no delay)
-        selector.sync_params(trainer.params())?;
+        // selection (uses current params — sequential has no delay);
+        // share_params: refcount bump, not a param-vector clone
+        selector.sync_params(trainer.share_params())?;
         let arrivals = stream.next_round(cfg.stream_per_round);
         let (batch, sel_report) = selector.select_round(round, arrivals)?;
         for &op in &sel_report.ops {

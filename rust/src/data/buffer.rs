@@ -61,6 +61,20 @@ impl CandidateBuffer {
         self.cap
     }
 
+    /// Re-cap the buffer **in place** (idle-resource adaptation happens
+    /// every round, so this must not reallocate). Shrinking pops the worst
+    /// retained candidates straight off the heap — O((len−cap)·log len),
+    /// no drain/re-offer churn; growing just raises the limit. Score ties
+    /// at the cut follow [`CandidateBuffer::offer`]'s eviction order
+    /// (smallest id evicted first).
+    pub fn set_cap(&mut self, cap: usize) {
+        assert!(cap > 0, "buffer cap must be positive");
+        while self.heap.len() > cap {
+            self.heap.pop(); // heap top is the worst retained candidate
+        }
+        self.cap = cap;
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -170,5 +184,37 @@ mod tests {
     #[should_panic(expected = "positive")]
     fn zero_cap_panics() {
         CandidateBuffer::new(0);
+    }
+
+    #[test]
+    fn set_cap_shrinks_to_best_in_place() {
+        let mut b = CandidateBuffer::new(5);
+        for (id, score) in [(0, 1.0), (1, 5.0), (2, 3.0), (3, 4.0), (4, 0.5)] {
+            b.offer(s(id), score);
+        }
+        b.set_cap(2);
+        assert_eq!(b.cap(), 2);
+        assert_eq!(b.len(), 2);
+        let ids: Vec<u64> = b.drain_sorted().iter().map(|c| c.sample.id).collect();
+        assert_eq!(ids, vec![1, 3]); // scores 5, 4 survive
+    }
+
+    #[test]
+    fn set_cap_grow_keeps_entries_and_accepts_more() {
+        let mut b = CandidateBuffer::new(2);
+        b.offer(s(0), 1.0);
+        b.offer(s(1), 2.0);
+        assert!(!b.offer(s(2), 0.5));
+        b.set_cap(3);
+        assert_eq!(b.len(), 2);
+        assert!(b.offer(s(3), 0.25)); // room again
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn set_cap_zero_panics() {
+        let mut b = CandidateBuffer::new(2);
+        b.set_cap(0);
     }
 }

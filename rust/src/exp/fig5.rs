@@ -38,7 +38,7 @@ fn trained_candidates(
         let batch: Vec<Sample> = picks.iter().map(|&i| arrivals[i].clone()).collect();
         trainer.train(&batch)?;
     }
-    sel.sync_params(trainer.params())?;
+    sel.sync_params(trainer.share_params())?;
     let arrivals = stream.next_round(cfg.stream_per_round);
     let refs: Vec<&Sample> = arrivals.iter().collect();
     let imp = sel.rt.importance(&refs)?;
@@ -134,7 +134,7 @@ pub fn run_b(args: &Args) -> Result<()> {
             // (the paper's "gradient variance reduction degree") and the
             // stricter MSE that charges the pool's drift from the full
             // stream mean as bias (our addition — see EXPERIMENTS.md)
-            let var_only = theorem2_variance(&summaries, &sub_imp, &spec);
+            let var_only = theorem2_variance(&summaries, &spec);
             let mse = var_only + subset_bias2(&imp_all, &subset);
             let ret_var = ((rs_all - var_only) / ideal_reduction).max(0.0);
             let ret_mse = ((rs_all - mse) / ideal_reduction).max(0.0);
@@ -243,7 +243,7 @@ pub fn run_c(args: &Args) -> Result<()> {
         let mut norm_history: Vec<Vec<f32>> = Vec::new();
         let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(cfg.seed ^ 0xF16C);
         for _ in 0..rounds {
-            sel.sync_params(trainer.params())?;
+            sel.sync_params(trainer.share_params())?;
             norm_history.push(sel.rt.importance(&probe_refs)?.norms);
             let arrivals = stream.next_round(cfg.stream_per_round);
             let picks = rng.sample_indices(arrivals.len(), cfg.batch_size);

@@ -47,9 +47,20 @@ impl ClassEstimators {
         self.norm2[label as usize].count()
     }
 
-    /// Current class centroid (zeros before any observation).
+    /// Current class centroid (zeros before any observation). Allocates;
+    /// hot paths should use [`ClassEstimators::centroid_ref`] instead.
     pub fn centroid(&self, label: u32) -> Vec<f32> {
         self.centroid[label as usize].mean_f32()
+    }
+
+    /// Borrowed view of the current class centroid — zero allocation.
+    pub fn centroid_ref(&self, label: u32) -> &[f32] {
+        self.centroid[label as usize].mean_slice()
+    }
+
+    /// Cached `‖centroid‖²` — zero allocation, no O(dim) recompute.
+    pub fn centroid_norm2(&self, label: u32) -> f64 {
+        self.centroid[label as usize].mean_norm2()
     }
 
     /// Current class mean squared feature norm.
@@ -80,7 +91,27 @@ impl CoarseFilter {
     /// estimators (the Rust mirror of the `filter_score` Pallas kernel —
     /// used on the host path; the kernel-backed path scores feature chunks
     /// inside the importance graph pipeline).
+    ///
+    /// Zero heap allocations per call: the centroid is borrowed from the
+    /// running estimator and `‖c‖²` comes from its cache, so the only
+    /// O(dim) work left is the `⟨f, c⟩` dot product. Bit-identical to
+    /// [`CoarseFilter::score_ref`].
     pub fn score(&self, label: u32, feat: &[f32]) -> f64 {
+        let c = self.estimators.centroid_ref(label);
+        let cn2 = self.estimators.centroid_norm2(label);
+        let m2 = self.estimators.mean_norm2(label);
+        let fn2 = crate::util::stats::norm2(feat);
+        let fc = crate::util::stats::dot(feat, c);
+        let rep = -(fn2 - 2.0 * fc + cn2);
+        let div = fn2 + m2 - 2.0 * fc;
+        self.lambda * rep + (1.0 - self.lambda) * div
+    }
+
+    /// Scalar reference scorer: materializes the centroid and recomputes
+    /// `‖c‖²` from scratch on every call (the pre-optimization path). Kept
+    /// as the equivalence oracle for property tests and the old-vs-new
+    /// benches; not for production use.
+    pub fn score_ref(&self, label: u32, feat: &[f32]) -> f64 {
         let c = self.estimators.centroid(label);
         let m2 = self.estimators.mean_norm2(label);
         let fn2 = crate::util::stats::norm2(feat);
@@ -89,6 +120,30 @@ impl CoarseFilter {
         let rep = -(fn2 - 2.0 * fc + cn2);
         let div = fn2 + m2 - 2.0 * fc;
         self.lambda * rep + (1.0 - self.lambda) * div
+    }
+
+    /// Score a chunk of samples in one pass against the **current**
+    /// estimator state (no updates). `feats` is row-major
+    /// `[samples.len() × feature_dim]`. Scores are appended to `out`
+    /// (cleared first) so a reusable buffer makes the whole pass
+    /// allocation-free.
+    pub fn score_chunk_into(&self, samples: &[Sample], feats: &[f32], out: &mut Vec<f64>) {
+        let dim = self.estimators.dim();
+        debug_assert!(feats.len() >= samples.len() * dim, "feature rows short");
+        out.clear();
+        out.reserve(samples.len());
+        for (i, s) in samples.iter().enumerate() {
+            out.push(self.score(s.label, &feats[i * dim..(i + 1) * dim]));
+        }
+    }
+
+    /// Allocating convenience wrapper over
+    /// [`CoarseFilter::score_chunk_into`]: one `Vec` per chunk, never per
+    /// sample.
+    pub fn score_chunk(&self, samples: &[Sample], feats: &[f32]) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.score_chunk_into(samples, feats, &mut out);
+        out
     }
 
     /// Process one streaming sample given its extracted features:
@@ -103,6 +158,25 @@ impl CoarseFilter {
         score
     }
 
+    /// Process a whole feature chunk in one pass: for each sample,
+    /// update-then-score-then-offer, exactly the semantics of calling
+    /// [`CoarseFilter::process`] per sample (each arrival contributes to
+    /// its class stats before being scored) but with no per-sample heap
+    /// allocation — sample clones only share the `Arc` payload. `feats` is
+    /// row-major `[samples.len() × feature_dim]`. This is the coordinator's
+    /// streaming entry point.
+    pub fn process_chunk(&mut self, samples: &[Sample], feats: &[f32]) {
+        let dim = self.estimators.dim();
+        debug_assert!(feats.len() >= samples.len() * dim, "feature rows short");
+        for (i, s) in samples.iter().enumerate() {
+            let f = &feats[i * dim..(i + 1) * dim];
+            self.estimators.update(s.label, f);
+            let score = self.score(s.label, f);
+            self.buffer.offer(s.clone(), score);
+        }
+        self.processed += samples.len() as u64;
+    }
+
     pub fn processed(&self) -> u64 {
         self.processed
     }
@@ -114,17 +188,10 @@ impl CoarseFilter {
 
     /// Re-cap the buffer for the next round (idle-resource adaptation,
     /// §3.4: the effective candidate budget follows the idle capacity).
-    /// Keeps the best `cap` current entries if shrinking.
+    /// Keeps the best `cap` current entries if shrinking. In-place: no
+    /// drain/reallocate/re-offer churn per idle-budget change.
     pub fn set_buffer_cap(&mut self, cap: usize) {
-        if cap == self.buffer.cap() {
-            return;
-        }
-        let mut kept = self.buffer.drain_sorted();
-        kept.truncate(cap);
-        self.buffer = CandidateBuffer::new(cap);
-        for c in kept {
-            self.buffer.offer(c.sample, c.score);
-        }
+        self.buffer.set_cap(cap);
     }
 }
 
@@ -196,6 +263,131 @@ mod tests {
         let ids: Vec<u64> = drained.iter().map(|c| c.sample.id).collect();
         assert!(ids.contains(&9), "{ids:?}");
         assert!(ids.contains(&8), "{ids:?}");
+    }
+
+    /// Deterministic pseudo-random feature rows for the equivalence tests.
+    fn rand_feats(rng: &mut crate::util::rng::Xoshiro256, n: usize, dim: usize) -> Vec<f32> {
+        (0..n * dim).map(|_| (rng.next_f64() * 4.0 - 2.0) as f32).collect()
+    }
+
+    #[test]
+    fn property_score_matches_scalar_reference() {
+        // the zero-alloc cached path must agree with the allocating
+        // from-scratch reference within 1e-12 on arbitrary streams
+        crate::util::prop::forall(
+            101,
+            30,
+            |rng| crate::util::prop::gen::f64_vec(rng, 3, 3, 0.0, 1.0),
+            |seedvec| {
+                let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(
+                    (seedvec.iter().sum::<f64>() * 1e6) as u64 + 3,
+                );
+                let classes = 1 + rng.index(4);
+                let dim = 1 + rng.index(32);
+                let mut f = CoarseFilter::new(classes, dim, 8, rng.next_f64() as f32);
+                for step in 0..60 {
+                    let label = rng.index(classes) as u32;
+                    let feat = rand_feats(&mut rng, 1, dim);
+                    f.estimators.update(label, &feat);
+                    if step % 3 == 0 {
+                        let probe = rand_feats(&mut rng, 1, dim);
+                        let fast = f.score(label, &probe);
+                        let slow = f.score_ref(label, &probe);
+                        if (fast - slow).abs() > 1e-12 * slow.abs().max(1.0) {
+                            return Err(format!("score {fast} != ref {slow}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_score_chunk_matches_scalar_path() {
+        crate::util::prop::forall(
+            102,
+            30,
+            |rng| crate::util::prop::gen::f64_vec(rng, 3, 3, 0.0, 1.0),
+            |seedvec| {
+                let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(
+                    (seedvec.iter().sum::<f64>() * 1e6) as u64 + 7,
+                );
+                let classes = 1 + rng.index(4);
+                let dim = 1 + rng.index(16);
+                let n = 1 + rng.index(40);
+                let mut f = CoarseFilter::new(classes, dim, 8, rng.next_f64() as f32);
+                // warm estimators with an independent prefix stream
+                for _ in 0..30 {
+                    let label = rng.index(classes) as u32;
+                    f.estimators.update(label, &rand_feats(&mut rng, 1, dim));
+                }
+                let samples: Vec<Sample> = (0..n)
+                    .map(|i| feat_sample(i as u64, rng.index(classes) as u32))
+                    .collect();
+                let feats = rand_feats(&mut rng, n, dim);
+                let chunked = f.score_chunk(&samples, &feats);
+                for (i, s) in samples.iter().enumerate() {
+                    let scalar = f.score_ref(s.label, &feats[i * dim..(i + 1) * dim]);
+                    if (chunked[i] - scalar).abs() > 1e-12 * scalar.abs().max(1.0) {
+                        return Err(format!("chunk[{i}] {} != scalar {scalar}", chunked[i]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn process_chunk_matches_sequential_process() {
+        // same samples through process() one-by-one vs process_chunk():
+        // identical buffer contents, scores, estimator state
+        let classes = 3;
+        let dim = 8;
+        let n = 50;
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(55);
+        let samples: Vec<Sample> = (0..n)
+            .map(|i| feat_sample(i as u64, rng.index(classes) as u32))
+            .collect();
+        let feats = rand_feats(&mut rng, n, dim);
+        let mut seq = CoarseFilter::new(classes, dim, 10, 0.3);
+        let mut chunked = CoarseFilter::new(classes, dim, 10, 0.3);
+        for chunk in samples.chunks(7).zip(feats.chunks(7 * dim)) {
+            chunked.process_chunk(chunk.0, chunk.1);
+        }
+        for (i, s) in samples.iter().enumerate() {
+            seq.process(s.clone(), &feats[i * dim..(i + 1) * dim]);
+        }
+        assert_eq!(seq.processed(), chunked.processed());
+        for y in 0..classes as u32 {
+            assert_eq!(seq.estimators.count(y), chunked.estimators.count(y));
+            assert_eq!(seq.estimators.centroid_ref(y), chunked.estimators.centroid_ref(y));
+            assert_eq!(seq.estimators.mean_norm2(y), chunked.estimators.mean_norm2(y));
+        }
+        let a = seq.drain();
+        let b = chunked.drain();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.sample.id, y.sample.id);
+            assert_eq!(x.score, y.score);
+        }
+    }
+
+    #[test]
+    fn set_buffer_cap_keeps_best_in_place() {
+        let mut f = CoarseFilter::new(1, 1, 8, 0.0);
+        for _ in 0..10 {
+            f.estimators.update(0, &[0.0]);
+        }
+        for i in 0..8 {
+            let feat = [i as f32];
+            f.process(feat_sample(i as u64, 0), &feat);
+        }
+        f.set_buffer_cap(3);
+        assert_eq!(f.buffer.cap(), 3);
+        let ids: Vec<u64> = f.drain().iter().map(|c| c.sample.id).collect();
+        assert_eq!(ids.len(), 3);
+        assert!(ids.contains(&7), "{ids:?}");
     }
 
     #[test]

@@ -4,6 +4,7 @@
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::data::sample::Sample;
 use crate::runtime::artifact::ArtifactSet;
@@ -40,8 +41,12 @@ pub struct ModelRuntime {
     probe_exe: Option<Rc<xla::PjRtLoadedExecutable>>,
     /// feature executables by depth k (compiled on demand).
     feature_exes: BTreeMap<usize, Rc<xla::PjRtLoadedExecutable>>,
-    /// Current model parameters (trainer role owns the authoritative copy).
-    params: Vec<f32>,
+    /// Current model parameters (trainer role owns the authoritative
+    /// copy). `Arc`-backed so the pipeline can hand a snapshot to the
+    /// selector with a refcount bump instead of a full `Vec<f32>` clone —
+    /// train steps replace the whole `Arc` (fresh vector from PJRT), they
+    /// never mutate in place, so shared snapshots stay immutable.
+    params: Arc<Vec<f32>>,
     /// Active training batch size (defaults to meta.train_batch; can be
     /// switched to another lowered size, e.g. 25 for the Fig. 2b study).
     train_batch: usize,
@@ -51,7 +56,7 @@ impl ModelRuntime {
     /// Load artifacts for `model` and compile the executables `role` needs.
     pub fn load(artifacts_dir: &str, model: &str, role: RuntimeRole) -> Result<ModelRuntime> {
         let set = ArtifactSet::discover(artifacts_dir, model)?;
-        let params = set.init_params()?;
+        let params = Arc::new(set.init_params()?);
         let mut rt = ModelRuntime {
             set,
             train_exe: None,
@@ -140,7 +145,18 @@ impl ModelRuntime {
         &self.params
     }
 
+    /// Zero-copy snapshot of the current parameters (refcount bump only).
+    /// This is what crosses the pipeline's parameter-sync slot.
+    pub fn share_params(&self) -> Arc<Vec<f32>> {
+        Arc::clone(&self.params)
+    }
+
     pub fn set_params(&mut self, p: Vec<f32>) -> Result<()> {
+        self.set_params_shared(Arc::new(p))
+    }
+
+    /// Adopt a shared parameter snapshot without copying the payload.
+    pub fn set_params_shared(&mut self, p: Arc<Vec<f32>>) -> Result<()> {
         if p.len() != self.set.meta.param_count {
             return Err(Error::Other(format!(
                 "set_params: {} != param_count {}",
@@ -153,7 +169,7 @@ impl ModelRuntime {
     }
 
     pub fn reset_params(&mut self) -> Result<()> {
-        self.params = self.set.init_params()?;
+        self.params = Arc::new(self.set.init_params()?);
         Ok(())
     }
 
@@ -211,7 +227,7 @@ impl ModelRuntime {
         if outs.len() != 2 {
             return Err(Error::Other(format!("train_step returned {} outputs", outs.len())));
         }
-        self.params = lit::to_f32s(&outs[0])?;
+        self.params = Arc::new(lit::to_f32s(&outs[0])?);
         let loss = outs[1].to_vec::<f32>()?[0];
         Ok(loss)
     }
@@ -357,6 +373,93 @@ impl ImportanceOut {
     pub fn k_at(&self, i: usize, j: usize) -> f32 {
         debug_assert!(i < self.valid && j < self.valid);
         self.k[i * self.n_total + j]
+    }
+
+    /// All per-class Gram aggregates in **one sweep over K's upper
+    /// triangle** — O(n²/2) contiguous row reads instead of the O(C·n²)
+    /// per-class `k_at` loops it replaces. For every class this yields the
+    /// diagonal sum, the norm sum, and the full block sums
+    /// `Σ_{i∈a, j∈b} K_ij` for every class pair (using K's symmetry, so
+    /// the within-class block is `K_ii + 2·Σ_{i<j} K_ij`).
+    ///
+    /// Per-class accumulators receive their terms in exactly the order the
+    /// old nested per-class loops produced them (ascending i, then
+    /// ascending j within the row), so downstream summaries are
+    /// bit-identical to the reference path.
+    pub fn gram_class_sums(&self, labels: &[u32], num_classes: usize) -> GramClassSums {
+        let n = self.valid.min(labels.len());
+        let c = num_classes;
+        let mut indices: Vec<Vec<usize>> = vec![Vec::new(); c];
+        let mut sum_norm = vec![0.0f64; c];
+        let mut sum_diag = vec![0.0f64; c];
+        let mut block = vec![0.0f64; c * c];
+        let mut diag = Vec::with_capacity(n);
+        for (i, &y) in labels.iter().enumerate().take(n) {
+            indices[y as usize].push(i);
+            sum_norm[y as usize] += self.norms[i] as f64;
+        }
+        for i in 0..n {
+            let yi = labels[i] as usize;
+            let row = &self.k[i * self.n_total..i * self.n_total + n];
+            let d = row[i] as f64;
+            diag.push(d);
+            sum_diag[yi] += d;
+            block[yi * c + yi] += d;
+            for (j, &kij) in row.iter().enumerate().skip(i + 1) {
+                let yj = labels[j] as usize;
+                let v = kij as f64;
+                if yi == yj {
+                    block[yi * c + yi] += 2.0 * v;
+                } else {
+                    block[yi * c + yj] += v;
+                    block[yj * c + yi] += v;
+                }
+            }
+        }
+        GramClassSums {
+            num_classes: c,
+            indices,
+            sum_norm,
+            sum_diag,
+            block,
+            diag,
+        }
+    }
+}
+
+/// Per-class aggregates of one `ImportanceOut`, produced by
+/// [`ImportanceOut::gram_class_sums`] in a single triangle sweep.
+/// `selection::cis::class_summaries` consumes the within-class blocks
+/// (and forwards the diagonal to the Theorem-2 variance analysis via
+/// `ClassSummary::diag`); the cross-class blocks cost two extra adds per
+/// off-class pair in the same sweep and are exposed for inter-class
+/// analyses (subset bias, class-confusion geometry) so those never need a
+/// second O(n²) pass over K. Consumers divide by counts themselves.
+#[derive(Clone, Debug)]
+pub struct GramClassSums {
+    pub num_classes: usize,
+    /// Candidate indices per class (ascending within each class).
+    pub indices: Vec<Vec<usize>>,
+    /// `Σ norms[i]` per class.
+    pub sum_norm: Vec<f64>,
+    /// `Σ K_ii` per class.
+    pub sum_diag: Vec<f64>,
+    /// Full class-pair block sums `Σ_{i∈a, j∈b} K_ij`, row-major `[a*C+b]`.
+    /// Symmetric; the diagonal entries are the within-class full sums.
+    pub block: Vec<f64>,
+    /// `K_ii` per valid candidate (global candidate order).
+    pub diag: Vec<f64>,
+}
+
+impl GramClassSums {
+    /// Within-class full block sum `Σ_{i,j∈y} K_ij`.
+    pub fn within(&self, y: usize) -> f64 {
+        self.block[y * self.num_classes + y]
+    }
+
+    /// Cross-class block sum `Σ_{i∈a, j∈b} K_ij`.
+    pub fn between(&self, a: usize, b: usize) -> f64 {
+        self.block[a * self.num_classes + b]
     }
 }
 
@@ -516,6 +619,38 @@ mod tests {
         let mut rt2 = rt;
         assert!(rt2.train_step(&refs, 0.1).is_err());
         assert!(rt2.evaluate(&samples).is_err());
+    }
+
+    #[test]
+    fn gram_class_sums_hand_computed() {
+        // 3 candidates, classes [0, 1, 0], K from 1-D "gradients" [1, 2, 3]
+        // (so K_ij = g_i * g_j), one padding row to exercise n_total > valid
+        let g = [1.0f32, 2.0, 3.0];
+        let n_total = 4;
+        let mut k = vec![0.0f32; n_total * n_total];
+        for i in 0..3 {
+            for j in 0..3 {
+                k[i * n_total + j] = g[i] * g[j];
+            }
+        }
+        let imp = ImportanceOut {
+            norms: g.to_vec(),
+            k,
+            n_total,
+            valid: 3,
+        };
+        let labels = [0u32, 1, 0];
+        let sums = imp.gram_class_sums(&labels, 2);
+        assert_eq!(sums.indices, vec![vec![0, 2], vec![1]]);
+        assert_eq!(sums.diag, vec![1.0, 4.0, 9.0]);
+        assert_eq!(sums.sum_diag, vec![10.0, 4.0]); // 1+9, 4
+        assert_eq!(sums.sum_norm, vec![4.0, 2.0]); // 1+3, 2
+        // within class 0: 1 + 9 + 2*3 = 16 = (1+3)^2; within class 1: 4
+        assert_eq!(sums.within(0), 16.0);
+        assert_eq!(sums.within(1), 4.0);
+        // between: (1+3)*2 = 8, symmetric
+        assert_eq!(sums.between(0, 1), 8.0);
+        assert_eq!(sums.between(1, 0), 8.0);
     }
 
     #[test]

@@ -37,6 +37,10 @@ use crate::Result;
 pub struct ClassSummary {
     /// Candidate indices of this class.
     pub indices: Vec<usize>,
+    /// `K_ii = ‖g_i‖²` per candidate, aligned with `indices` — carried so
+    /// the Theorem-2 variance analysis reads the diagonal from the summary
+    /// instead of re-walking K.
+    pub diag: Vec<f64>,
     /// mean ‖g‖ over the class candidates.
     pub mean_norm: f64,
     /// mean ‖g‖² (= mean K_ii).
@@ -63,7 +67,57 @@ impl ClassSummary {
 }
 
 /// Summarize the candidate classes from the importance output.
+///
+/// Built on [`ImportanceOut::gram_class_sums`]: ONE sweep over K's upper
+/// triangle yields every class's diagonal/norm/block sums simultaneously,
+/// replacing the old per-class nested `k_at` loops (O(C·n²) scalar reads,
+/// cache-hostile). Numerically the per-class accumulation order is
+/// unchanged, so results are bit-identical to [`class_summaries_ref`].
 pub fn class_summaries(
+    ctx_labels: &[u32],
+    imp: &ImportanceOut,
+    num_classes: usize,
+) -> Vec<ClassSummary> {
+    let sums = imp.gram_class_sums(ctx_labels, num_classes);
+    let crate::runtime::model::GramClassSums {
+        num_classes: c,
+        indices,
+        sum_norm,
+        sum_diag,
+        block,
+        diag,
+    } = sums;
+    indices
+        .into_iter()
+        .enumerate()
+        .map(|(y, indices)| {
+            let n = indices.len();
+            if n == 0 {
+                return ClassSummary {
+                    indices,
+                    diag: Vec::new(),
+                    mean_norm: 0.0,
+                    mean_norm2: 0.0,
+                    mean_grad_norm2: 0.0,
+                };
+            }
+            let nf = n as f64;
+            let class_diag: Vec<f64> = indices.iter().map(|&i| diag[i]).collect();
+            ClassSummary {
+                indices,
+                diag: class_diag,
+                mean_norm: sum_norm[y] / nf,
+                mean_norm2: sum_diag[y] / nf,
+                mean_grad_norm2: block[y * c + y] / (nf * nf),
+            }
+        })
+        .collect()
+}
+
+/// Scalar reference implementation of [`class_summaries`] — the original
+/// per-class nested `k_at` loops. Kept as the equivalence oracle for the
+/// property tests and the old-vs-new benches; not for production use.
+pub fn class_summaries_ref(
     ctx_labels: &[u32],
     imp: &ImportanceOut,
     num_classes: usize,
@@ -79,6 +133,7 @@ pub fn class_summaries(
             if n == 0 {
                 return ClassSummary {
                     indices,
+                    diag: Vec::new(),
                     mean_norm: 0.0,
                     mean_norm2: 0.0,
                     mean_grad_norm2: 0.0,
@@ -87,9 +142,11 @@ pub fn class_summaries(
             let mut sum_norm = 0.0f64;
             let mut sum_diag = 0.0f64;
             let mut sum_all = 0.0f64;
+            let mut diag = Vec::with_capacity(n);
             for (a, &i) in indices.iter().enumerate() {
                 sum_norm += imp.norms[i] as f64;
                 sum_diag += imp.k_at(i, i) as f64;
+                diag.push(imp.k_at(i, i) as f64);
                 // off-diagonal: use symmetry, accumulate full sum
                 sum_all += imp.k_at(i, i) as f64;
                 for &j in &indices[a + 1..] {
@@ -99,6 +156,7 @@ pub fn class_summaries(
             let nf = n as f64;
             ClassSummary {
                 indices,
+                diag,
                 mean_norm: sum_norm / nf,
                 mean_norm2: sum_diag / nf,
                 mean_grad_norm2: sum_all / (nf * nf),
@@ -212,6 +270,87 @@ mod tests {
         // variance identities
         assert!((s[1].grad_variance()).abs() < 1e-5);
         assert!((s[0].norm_variance()).abs() < 1e-5, "equal norms");
+    }
+
+    /// Assert two summary vectors agree within `tol` (relative).
+    fn assert_summaries_close(a: &[ClassSummary], b: &[ClassSummary], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (y, (x, r)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.indices, r.indices, "class {y} indices");
+            assert_eq!(x.diag.len(), r.diag.len(), "class {y} diag len");
+            for (d, e) in x.diag.iter().zip(&r.diag) {
+                assert!((d - e).abs() <= tol * e.abs().max(1.0), "class {y} diag {d} vs {e}");
+            }
+            for (name, u, v) in [
+                ("mean_norm", x.mean_norm, r.mean_norm),
+                ("mean_norm2", x.mean_norm2, r.mean_norm2),
+                ("mean_grad_norm2", x.mean_grad_norm2, r.mean_grad_norm2),
+            ] {
+                assert!(
+                    (u - v).abs() <= tol * v.abs().max(1.0),
+                    "class {y} {name}: {u} vs {v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn property_single_pass_matches_reference() {
+        // the single-pass triangle sweep must agree with the per-class
+        // nested reference within 1e-12 on random geometries (in fact the
+        // accumulation order is identical, so they match bit-for-bit)
+        crate::util::prop::forall(
+            61,
+            40,
+            |rng| crate::util::prop::gen::f64_vec(rng, 3, 3, 0.0, 1.0),
+            |seedvec| {
+                let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(
+                    (seedvec.iter().sum::<f64>() * 1e6) as u64 + 11,
+                );
+                let c = 1 + rng.index(5);
+                let n = 1 + rng.index(40);
+                let grads: Vec<(f64, f64)> = (0..n)
+                    .map(|_| (rng.next_f64() * 4.0 - 2.0, rng.next_f64() * 4.0 - 2.0))
+                    .collect();
+                let labels: Vec<u32> = (0..n).map(|_| rng.index(c) as u32).collect();
+                let imp = importance_from_grads(&grads);
+                let fast = class_summaries(&labels, &imp, c);
+                let slow = class_summaries_ref(&labels, &imp, c);
+                for (y, (x, r)) in fast.iter().zip(&slow).enumerate() {
+                    if x.indices != r.indices || x.diag != r.diag {
+                        return Err(format!("class {y} indices/diag diverged"));
+                    }
+                    for (u, v) in [
+                        (x.mean_norm, r.mean_norm),
+                        (x.mean_norm2, r.mean_norm2),
+                        (x.mean_grad_norm2, r.mean_grad_norm2),
+                    ] {
+                        if (u - v).abs() > 1e-12 * v.abs().max(1.0) {
+                            return Err(format!("class {y}: {u} vs {v}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn regression_fig4_summaries_unchanged() {
+        // the Fig. 4 scenario must produce the exact same summaries through
+        // the single-pass path as through the original reference path
+        let (grads, npc) = fig4_importance(10);
+        let imp = importance_from_grads(&grads);
+        let labels: Vec<u32> = (0..20).map(|i| (i / npc) as u32).collect();
+        let fast = class_summaries(&labels, &imp, 2);
+        let slow = class_summaries_ref(&labels, &imp, 2);
+        assert_summaries_close(&fast, &slow, 1e-12);
+        // and the derived quantities the allocation consumes are unchanged
+        let i_fast = class_importances(&fast, &[100, 100]);
+        let i_slow = class_importances(&slow, &[100, 100]);
+        for (a, b) in i_fast.iter().zip(&i_slow) {
+            assert!((a - b).abs() <= 1e-12 * b.abs().max(1.0), "{a} vs {b}");
+        }
     }
 
     #[test]

@@ -26,12 +26,11 @@ pub struct StrategySpec {
 }
 
 /// Evaluate Theorem 2's variance for a strategy over the candidates
-/// summarized by `summaries` (from [`class_summaries`]).
-pub fn theorem2_variance(
-    summaries: &[ClassSummary],
-    imp: &ImportanceOut,
-    spec: &StrategySpec,
-) -> f64 {
+/// summarized by `summaries` (from [`class_summaries`]). Everything the
+/// decomposition needs — the per-candidate diagonal `‖g‖²` included — is
+/// carried by the summaries, so no re-walk of the Gram matrix happens
+/// here.
+pub fn theorem2_variance(summaries: &[ClassSummary], spec: &StrategySpec) -> f64 {
     let total: f64 = summaries.iter().map(|s| s.indices.len() as f64).sum();
     if total == 0.0 {
         return 0.0;
@@ -44,9 +43,8 @@ pub fn theorem2_variance(
         }
         let alpha = (ny * ny) / (total * total * spec.alloc[y]);
         let mut beta = 0.0;
-        for (local, &i) in s.indices.iter().enumerate() {
+        for (local, &g2) in s.diag.iter().enumerate() {
             let p = spec.probs[y][local].max(1e-12);
-            let g2 = imp.k_at(i, i) as f64;
             beta += g2 / (ny * ny * p);
         }
         let gamma = s.mean_grad_norm2;
@@ -147,9 +145,9 @@ pub fn fig5_variances(
     batch: usize,
 ) -> Result<(f64, f64, f64)> {
     let summaries = class_summaries(labels, imp, num_classes);
-    let rs = theorem2_variance(&summaries, imp, &spec_rs(&summaries, batch));
-    let is = theorem2_variance(&summaries, imp, &spec_is(&summaries, imp, batch));
-    let cis = theorem2_variance(&summaries, imp, &spec_cis(&summaries, imp, batch));
+    let rs = theorem2_variance(&summaries, &spec_rs(&summaries, batch));
+    let is = theorem2_variance(&summaries, &spec_is(&summaries, imp, batch));
+    let cis = theorem2_variance(&summaries, &spec_cis(&summaries, imp, batch));
     Ok((rs, is, cis))
 }
 
@@ -230,7 +228,7 @@ mod tests {
                 let summaries = class_summaries(&labels, &imp, c);
                 let batch = 2 + rng.index(n / 2);
                 let cis_spec = spec_cis(&summaries, &imp, batch);
-                let v_cis = theorem2_variance(&summaries, &imp, &cis_spec);
+                let v_cis = theorem2_variance(&summaries, &cis_spec);
                 // random alternative allocations with the same total mass
                 for _ in 0..20 {
                     let mut alloc: Vec<f64> =
@@ -243,7 +241,7 @@ mod tests {
                         alloc,
                         probs: cis_spec.probs.clone(),
                     };
-                    let v_alt = theorem2_variance(&summaries, &imp, &alt);
+                    let v_alt = theorem2_variance(&summaries, &alt);
                     if v_alt < v_cis - 1e-6 * v_cis.abs().max(1e-12) {
                         return Err(format!(
                             "random allocation beat C-IS: {v_alt} < {v_cis}"
@@ -273,7 +271,7 @@ mod tests {
                         alloc: vec![1.0],
                         probs: vec![probs.to_vec()],
                     };
-                    theorem2_variance(&summaries, &imp, &spec)
+                    theorem2_variance(&summaries, &spec)
                 };
                 let total: f64 = norms.iter().sum();
                 let p_is: Vec<f64> = norms.iter().map(|&x| x / total).collect();

@@ -81,10 +81,22 @@ impl Welford {
 }
 
 /// Streaming mean over f32 vectors (running class centroid).
+///
+/// Besides the f64 running mean, the struct maintains an f32 cast of the
+/// mean and its squared L2 norm **incrementally on every push**, so hot
+/// readers ([`VecMean::mean_slice`], [`VecMean::mean_norm2`]) are
+/// zero-allocation and O(1) — this is what lets the coarse filter score
+/// each streaming sample without materializing a centroid vector.
 #[derive(Clone, Debug)]
 pub struct VecMean {
     n: u64,
     mean: Vec<f64>,
+    /// f32 cast of `mean`, kept in lockstep (what scoring consumes).
+    mean_f32: Vec<f32>,
+    /// `norm2(&mean_f32)`, refreshed inside the push loop with the same
+    /// left-to-right summation as [`norm2`] so cached and from-scratch
+    /// values agree bit-for-bit.
+    mean_norm2: f64,
 }
 
 impl VecMean {
@@ -92,6 +104,8 @@ impl VecMean {
         Self {
             n: 0,
             mean: vec![0.0; dim],
+            mean_f32: vec![0.0; dim],
+            mean_norm2: 0.0,
         }
     }
 
@@ -99,9 +113,16 @@ impl VecMean {
         assert_eq!(x.len(), self.mean.len());
         self.n += 1;
         let inv = 1.0 / self.n as f64;
-        for (m, &v) in self.mean.iter_mut().zip(x) {
+        // fused: one pass updates the f64 mean, its f32 cast, and the
+        // cached ‖mean_f32‖² (left-to-right accumulation, the same order
+        // as `norm2`, so the cache matches a from-scratch norm bit-for-bit)
+        let mut n2 = 0.0f64;
+        for ((m, c), &v) in self.mean.iter_mut().zip(self.mean_f32.iter_mut()).zip(x) {
             *m += (v as f64 - *m) * inv;
+            *c = *m as f32;
+            n2 += *c as f64 * *c as f64;
         }
+        self.mean_norm2 = n2;
     }
 
     pub fn count(&self) -> u64 {
@@ -109,7 +130,18 @@ impl VecMean {
     }
 
     pub fn mean_f32(&self) -> Vec<f32> {
-        self.mean.iter().map(|&m| m as f32).collect()
+        self.mean_f32.clone()
+    }
+
+    /// Borrowed view of the current mean (f32 cast) — no allocation.
+    pub fn mean_slice(&self) -> &[f32] {
+        &self.mean_f32
+    }
+
+    /// Cached `‖mean‖²` of the f32-cast mean — no allocation, no O(dim)
+    /// recompute. Identical to `norm2(&self.mean_f32())`.
+    pub fn mean_norm2(&self) -> f64 {
+        self.mean_norm2
     }
 }
 
@@ -209,6 +241,26 @@ mod tests {
         vm.push(&[3.0, 0.0, 4.0]);
         let m = vm.mean_f32();
         assert_eq!(m, vec![2.0, 0.0, 3.0]);
+        assert_eq!(vm.mean_slice(), &m[..]);
+    }
+
+    #[test]
+    fn vec_mean_cached_norm2_is_bit_identical() {
+        // the cached norm must equal a from-scratch norm2 over the f32 cast
+        // EXACTLY (same summation order), not just approximately
+        let mut vm = VecMean::new(5);
+        assert_eq!(vm.mean_norm2(), 0.0);
+        let mut state = 1u64;
+        for _ in 0..200 {
+            let x: Vec<f32> = (0..5)
+                .map(|_| {
+                    state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    ((state >> 33) as f32 / 2.0e9f32) - 1.0
+                })
+                .collect();
+            vm.push(&x);
+            assert_eq!(vm.mean_norm2(), norm2(&vm.mean_f32()));
+        }
     }
 
     #[test]

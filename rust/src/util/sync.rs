@@ -1,0 +1,108 @@
+//! Minimal cross-thread handoff primitives for the pipeline coordinator
+//! (the vendor set has no `crossbeam`/`arc-swap`; std only).
+
+use std::sync::Mutex;
+
+/// A latest-only slot: a capacity-1 cell with **overwrite** semantics.
+///
+/// `publish` replaces any unconsumed value; `take` removes the freshest
+/// one. Both are non-blocking, so a producer can keep publishing while the
+/// consumer lags and memory stays bounded at one value — exactly the
+/// parameter-sync contract of the §3.4 pipeline (the selector only ever
+/// wants the *newest* weights; stale intermediates are worthless).
+///
+/// Contrast with the two alternatives it replaced:
+/// - `mpsc::channel` (unbounded): a lagging consumer queues every stale
+///   snapshot — memory grows with the lag.
+/// - `mpsc::sync_channel(1)` (bounded, blocking): the producer stalls on a
+///   full slot — the trainer would wait on the selector, defeating the
+///   lane overlap.
+#[derive(Debug)]
+pub struct Latest<T> {
+    slot: Mutex<Option<T>>,
+}
+
+impl<T> Default for Latest<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Latest<T> {
+    pub fn new() -> Self {
+        Self {
+            slot: Mutex::new(None),
+        }
+    }
+
+    /// Publish a value, overwriting any unconsumed one. Returns `true` if
+    /// an unconsumed value was dropped (the consumer is lagging).
+    pub fn publish(&self, value: T) -> bool {
+        let mut slot = self.slot.lock().unwrap_or_else(|e| e.into_inner());
+        slot.replace(value).is_some()
+    }
+
+    /// Take the latest value, leaving the slot empty. Non-blocking.
+    pub fn take(&self) -> Option<T> {
+        self.slot.lock().unwrap_or_else(|e| e.into_inner()).take()
+    }
+
+    /// Whether a value is currently waiting.
+    pub fn is_empty(&self) -> bool {
+        self.slot
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn publish_take_roundtrip() {
+        let s: Latest<u32> = Latest::new();
+        assert!(s.is_empty());
+        assert!(s.take().is_none());
+        assert!(!s.publish(1));
+        assert!(!s.is_empty());
+        assert_eq!(s.take(), Some(1));
+        assert!(s.take().is_none());
+    }
+
+    #[test]
+    fn overwrite_keeps_only_latest() {
+        let s: Latest<u32> = Latest::new();
+        assert!(!s.publish(1));
+        assert!(s.publish(2), "must report the dropped stale value");
+        assert!(s.publish(3));
+        assert_eq!(s.take(), Some(3));
+    }
+
+    #[test]
+    fn bounded_under_producer_burst() {
+        // a lagging consumer must see exactly one (the newest) value no
+        // matter how many were published — the unbounded-channel regression
+        let s: Latest<Arc<Vec<f32>>> = Latest::new();
+        for i in 0..1000 {
+            s.publish(Arc::new(vec![i as f32]));
+        }
+        assert_eq!(s.take().unwrap()[0], 999.0);
+        assert!(s.take().is_none());
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let s = Arc::new(Latest::<u64>::new());
+        let p = Arc::clone(&s);
+        let h = std::thread::spawn(move || {
+            for i in 0..100u64 {
+                p.publish(i);
+            }
+        });
+        h.join().unwrap();
+        assert_eq!(s.take(), Some(99));
+    }
+}

@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Emit BENCH_<group>.json trajectory files from the bench harness output.
+
+The Rust bench harness (`titan::util::bench::Bencher`) writes raw
+per-iteration summaries to ``rust/results/bench_<group>.json``. This script
+post-processes the groups that track the data-plane hot paths into compact
+repo-root files (``BENCH_filter.json``, ``BENCH_selection.json``) so future
+PRs can diff throughput numbers without re-parsing harness output.
+
+Per entry it reports:
+
+- ``mean_ns`` / ``p50_ns``  — straight from the harness;
+- ``n``                     — batch size parsed from a ``_n<digits>`` name
+                              suffix (1 if absent);
+- ``ns_per_sample``         — ``mean_ns / n``, the headline number;
+- ``throughput_msps``       — million samples per second.
+
+For old-vs-new pairs (``*_ref_n<k>`` vs the optimized name) it also emits a
+``speedups`` map, e.g. ``{"score_chunk_n1024": 2.7}`` meaning the optimized
+path is 2.7x the reference at n=1024.
+
+Usage: python3 scripts/bench_report.py  (run from anywhere; paths are
+repo-relative to this file)
+"""
+
+import json
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+RESULTS = REPO / "rust" / "results"
+GROUPS = ("filter", "selection")
+
+N_SUFFIX = re.compile(r"_n(\d+)(?:/|$)")
+
+
+def batch_size(name: str) -> int:
+    m = N_SUFFIX.search(name)
+    return int(m.group(1)) if m else 1
+
+
+def load(group: str):
+    path = RESULTS / f"bench_{group}.json"
+    if not path.exists():
+        return None
+    with path.open() as f:
+        return json.load(f)
+
+
+def report(group: str, entries) -> dict:
+    rows = []
+    by_name = {}
+    for e in entries:
+        n = batch_size(e["name"])
+        row = {
+            "name": e["name"],
+            "n": n,
+            "mean_ns": e["mean_ns"],
+            "p50_ns": e["p50_ns"],
+            "ns_per_sample": e["mean_ns"] / n,
+            "throughput_msps": (1e3 / (e["mean_ns"] / n)) if e["mean_ns"] > 0 else 0.0,
+        }
+        rows.append(row)
+        by_name[e["name"]] = row
+
+    # old-vs-new speedups: every *_ref* entry vs its optimized sibling
+    # (same name with the "_ref" marker stripped)
+    speedups = {}
+    for name, row in by_name.items():
+        if "_ref" not in name:
+            continue
+        fast_name = name.replace("_ref", "", 1)
+        fast = by_name.get(fast_name)
+        if fast and fast["mean_ns"] > 0:
+            speedups[fast_name] = round(row["mean_ns"] / fast["mean_ns"], 3)
+
+    return {"group": group, "entries": rows, "speedups": speedups}
+
+
+def main() -> int:
+    wrote = 0
+    for group in GROUPS:
+        entries = load(group)
+        if entries is None:
+            print(f"skipping {group}: no rust/results/bench_{group}.json "
+                  f"(run scripts/bench_smoke.sh first)", file=sys.stderr)
+            continue
+        out = REPO / f"BENCH_{group}.json"
+        with out.open("w") as f:
+            json.dump(report(group, entries), f, indent=2)
+            f.write("\n")
+        print(f"wrote {out}")
+        wrote += 1
+    return 0 if wrote else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Bench smoke: run every bench target in fast mode so CI catches bench
+# bit-rot (compile errors, panics, missing artifacts handled gracefully)
+# without paying the full measurement windows.
+#
+# The bench targets use `harness = false` with the in-repo harness
+# (`titan::util::bench`), so "test mode" is its TITAN_BENCH_FAST env knob:
+# ~50ms warmup + ~200ms measure per bench instead of 300ms + 2s. Each run
+# still writes rust/results/bench_<group>.json; those are then piped
+# through scripts/bench_report.py to refresh the BENCH_*.json trajectory
+# files at the repo root.
+#
+# Usage: scripts/bench_smoke.sh [bench ...]   (default: all four)
+set -euo pipefail
+script_dir="$(cd "$(dirname "$0")" && pwd)"
+repo_root="$(dirname "$script_dir")"
+cd "$repo_root/rust"
+
+benches=("$@")
+if [ ${#benches[@]} -eq 0 ]; then
+  benches=(bench_filter bench_selection bench_pipeline bench_runtime)
+fi
+
+export TITAN_BENCH_FAST=1
+for bench in "${benches[@]}"; do
+  echo "== smoke: $bench =="
+  cargo bench --bench "$bench"
+done
+
+echo "== emitting BENCH_*.json =="
+python3 "$script_dir/bench_report.py" || true
