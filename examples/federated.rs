@@ -7,7 +7,8 @@
 //! ```
 
 use titan::config::{presets, Method};
-use titan::fl::{self, FlConfig};
+use titan::coordinator::session::observers::ProgressLog;
+use titan::fl::{FlBuilder, FlConfig};
 use titan::metrics::render_table;
 use titan::util::logging;
 
@@ -28,7 +29,8 @@ fn main() -> titan::Result<()> {
         base.test_size = 600;
         let mut cfg = FlConfig::paper_default(base);
         cfg.comm_rounds = comm_rounds;
-        let rec = fl::run(&cfg)?;
+        // builder-driven FL: per-device DataSources + comm-round observers
+        let rec = FlBuilder::new(cfg).observe(ProgressLog::every(5)).run()?;
         if method == Method::Rs {
             rs_target = rec.final_accuracy;
             rs_rounds = rec.rounds_to_accuracy(rs_target);

@@ -8,7 +8,7 @@
 //! ```
 
 use titan::config::{presets, Method};
-use titan::coordinator::{pipeline, sequential};
+use titan::coordinator::SessionBuilder;
 use titan::metrics::render_table;
 use titan::util::logging;
 
@@ -34,7 +34,7 @@ fn main() -> titan::Result<()> {
     let mut rs_cfg = presets::table1("mlp", Method::Rs);
     rs_cfg.rounds = rounds;
     rs_cfg.eval_every = (rounds / 10).max(5);
-    let (rs, _) = sequential::run(&rs_cfg)?;
+    let (rs, _) = SessionBuilder::new(rs_cfg.clone()).sequential().run()?;
     let target = rs.final_accuracy * 0.98; // see exp::TARGET_FRAC
     let rs_time = rs.time_to_accuracy_device(target).unwrap_or(rs.total_device_ms);
 
@@ -46,11 +46,8 @@ fn main() -> titan::Result<()> {
             let mut cfg = presets::table1("mlp", method);
             cfg.rounds = rounds;
             cfg.eval_every = rs_cfg.eval_every;
-            if cfg.pipeline {
-                pipeline::run(&cfg)?.0
-            } else {
-                sequential::run(&cfg)?.0
-            }
+            // the session backend follows the preset's pipeline flag
+            SessionBuilder::new(cfg).run()?.0
         };
         let (tta, reached) = match record.time_to_accuracy_device(target) {
             Some(t) => (t, true),

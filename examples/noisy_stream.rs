@@ -8,7 +8,7 @@
 //! ```
 
 use titan::config::{presets, Method};
-use titan::coordinator::{pipeline, sequential};
+use titan::coordinator::SessionBuilder;
 use titan::metrics::render_table;
 use titan::util::logging;
 
@@ -25,11 +25,8 @@ fn main() -> titan::Result<()> {
             let mut cfg = presets::noisy("mlp", method, label_noise);
             cfg.rounds = rounds;
             cfg.eval_every = (rounds / 8).max(5);
-            let (record, _) = if cfg.pipeline {
-                pipeline::run(&cfg)?
-            } else {
-                sequential::run(&cfg)?
-            };
+            // the session backend follows the preset's pipeline flag
+            let (record, _) = SessionBuilder::new(cfg).run()?;
             rows.push(vec![
                 noise_name.to_string(),
                 method.name().to_string(),

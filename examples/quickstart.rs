@@ -9,7 +9,7 @@
 //! ```
 
 use titan::config::{presets, Method};
-use titan::coordinator::{pipeline, sequential};
+use titan::coordinator::SessionBuilder;
 use titan::util::logging;
 
 fn main() -> titan::Result<()> {
@@ -25,13 +25,13 @@ fn main() -> titan::Result<()> {
     let mut rs_cfg = presets::table1("mlp", Method::Rs);
     rs_cfg.rounds = rounds;
     rs_cfg.eval_every = (rounds / 15).max(5);
-    let (rs, _) = sequential::run(&rs_cfg)?;
+    let (rs, _) = SessionBuilder::new(rs_cfg.clone()).sequential().run()?;
 
     // Titan: coarse filter -> C-IS -> pipelined co-execution.
     let mut ti_cfg = presets::table1("mlp", Method::Titan);
     ti_cfg.rounds = rounds;
     ti_cfg.eval_every = rs_cfg.eval_every;
-    let (ti, _) = pipeline::run(&ti_cfg)?;
+    let (ti, _) = SessionBuilder::new(ti_cfg).run()?; // cfg.pipeline picks the backend
 
     println!("loss/accuracy curves (test set):");
     println!(

@@ -6,7 +6,8 @@
 use std::sync::Arc;
 
 use titan::config::{presets, Method};
-use titan::coordinator::{pipeline, sequential};
+use titan::coordinator::SessionBuilder;
+use titan::device::idle::IdleTrace;
 use titan::util::bench::Bencher;
 use titan::util::sync::Latest;
 
@@ -48,11 +49,17 @@ fn main() {
     };
     let seq_cfg = mk(false);
     b.bench("run5rounds/sequential", || {
-        sequential::run(&seq_cfg).expect("seq")
+        SessionBuilder::new(seq_cfg.clone())
+            .sequential()
+            .run()
+            .expect("seq")
     });
     let pipe_cfg = mk(true);
     b.bench("run5rounds/pipelined", || {
-        pipeline::run(&pipe_cfg).expect("pipe")
+        SessionBuilder::new(pipe_cfg.clone())
+            .pipelined(IdleTrace::Constant(1.0))
+            .run()
+            .expect("pipe")
     });
     b.finish();
 }

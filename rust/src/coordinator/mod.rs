@@ -8,13 +8,25 @@
 //! - [`TrainerEngine`] (CPU lane / trainer process): applies SGD steps
 //!   with the lr schedule, evaluates on the held-out set.
 //!
-//! [`sequential`] runs both on one thread (baselines, ablations);
-//! [`pipeline`] runs them on two OS threads with one-round-delay batch
-//! handoff and per-round parameter sync — the paper's §3.4 design.
+//! Runs are driven by the [`session`] API: a [`SessionBuilder`] assembles
+//! one [`Session`] — config, [`crate::data::DataSource`], execution
+//! backend, observers — and [`Session::run`] executes the single
+//! canonical round loop (device-sim recording, `RunRecord` bookkeeping,
+//! eval cadence, memory estimation, param sync). The [`ExecBackend`]
+//! chooses *how* the loop executes:
+//!
+//! - `Sequential` — both engines alternate on one thread (baselines,
+//!   ablations);
+//! - `Pipelined` — two OS threads with one-round-delay batch handoff and
+//!   per-round parameter sync, the paper's §3.4 design.
+//!
+//! [`sequential`] and [`pipeline`] remain as deprecated thin shims over
+//! the session API so pre-session call sites keep compiling.
 
 pub mod pipeline;
 pub mod round;
 pub mod sequential;
+pub mod session;
 
 use std::sync::Arc;
 
@@ -30,17 +42,41 @@ use crate::util::timer::Stopwatch;
 use crate::{Error, Result};
 
 pub use round::{RoundOutcome, SelectorReport};
+pub use session::{Control, ExecBackend, RoundObserver, Session, SessionBuilder};
 
 /// A selected training batch with its unbiasedness weights (see
 /// `selection::SelectedBatch` — these are the owned samples crossing the
 /// pipeline channel).
+///
+/// The samples/weights pairing is an invariant, so the fields are private
+/// and construction goes through the checked [`TrainBatch::new`].
 #[derive(Clone, Debug)]
 pub struct TrainBatch {
-    pub samples: Vec<Sample>,
-    pub weights: Vec<f32>,
+    samples: Vec<Sample>,
+    weights: Vec<f32>,
 }
 
 impl TrainBatch {
+    /// Checked constructor: every sample carries exactly one weight.
+    pub fn new(samples: Vec<Sample>, weights: Vec<f32>) -> Result<TrainBatch> {
+        if samples.len() != weights.len() {
+            return Err(Error::Pipeline(format!(
+                "TrainBatch: {} samples vs {} weights",
+                samples.len(),
+                weights.len()
+            )));
+        }
+        Ok(TrainBatch { samples, weights })
+    }
+
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        &self.weights
+    }
+
     pub fn len(&self) -> usize {
         self.samples.len()
     }
@@ -202,7 +238,7 @@ impl SelectorEngine {
         report.host_ms = sw.elapsed_ms();
         report.per_sample_host_ms = report.host_ms / arrivals.len().max(1) as f64;
         report.arrivals = arrivals.len();
-        Ok((TrainBatch { samples: batch, weights: sel.weights }, report))
+        Ok((TrainBatch::new(batch, sel.weights)?, report))
     }
 
     /// Adopt fresh parameters from the trainer (the per-round sync).
@@ -252,6 +288,13 @@ impl TrainerEngine {
 
     /// One weighted SGD step (the paper's unbiased estimator).
     pub fn train_weighted(&mut self, batch: &[Sample], weights: &[f32]) -> Result<(f32, f64)> {
+        if batch.len() != weights.len() {
+            return Err(Error::Pipeline(format!(
+                "train_weighted: {} samples vs {} weights",
+                batch.len(),
+                weights.len()
+            )));
+        }
         let sw = Stopwatch::start();
         let refs: Vec<&Sample> = batch.iter().collect();
         let loss = self.rt.train_step_weighted(&refs, weights, self.lr())?;
@@ -261,7 +304,7 @@ impl TrainerEngine {
 
     /// Convenience for TrainBatch.
     pub fn train_batch(&mut self, batch: &TrainBatch) -> Result<(f32, f64)> {
-        self.train_weighted(&batch.samples, &batch.weights)
+        self.train_weighted(batch.samples(), batch.weights())
     }
 
     pub fn evaluate(&self, test: &[Sample]) -> Result<crate::runtime::EvalReport> {
@@ -285,11 +328,12 @@ impl TrainerEngine {
     }
 }
 
-/// Build the stream source + test set for a run config.
+/// Build the default stream source + test set for a run config (engine-
+/// level helper for analyses that bypass the session loop; sessions use
+/// [`session::default_source`] and the `DataSource` seam instead).
 pub fn build_stream(cfg: &RunConfig) -> (StreamSource, Vec<Sample>) {
-    let task = SynthTask::for_model(&cfg.model, cfg.seed);
-    let test = task.test_set(cfg.test_size, cfg.seed);
-    let stream = StreamSource::new(task, cfg.seed, cfg.noise);
+    let stream = session::default_source(cfg);
+    let test = stream.task().test_set(cfg.test_size, cfg.seed);
     (stream, test)
 }
 
@@ -385,6 +429,27 @@ mod tests {
         tr.train(&batch).unwrap();
         tr.train(&batch).unwrap();
         assert!((tr.lr() - 0.05).abs() < 1e-7, "{}", tr.lr());
+    }
+
+    #[test]
+    fn train_batch_checks_length_invariant() {
+        let s = vec![Sample::new(0, 0, vec![0.0]), Sample::new(1, 1, vec![1.0])];
+        assert!(TrainBatch::new(s.clone(), vec![1.0, 1.0]).is_ok());
+        assert!(TrainBatch::new(s, vec![1.0]).is_err());
+        assert!(TrainBatch::new(Vec::new(), Vec::new()).unwrap().is_empty());
+    }
+
+    #[test]
+    fn train_weighted_rejects_length_mismatch() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = small_cfg(Method::Rs);
+        let (mut stream, _) = build_stream(&cfg);
+        let batch: Vec<Sample> = stream.next_round(10);
+        let mut tr = TrainerEngine::new(&cfg).unwrap();
+        assert!(tr.train_weighted(&batch, &[1.0; 4]).is_err());
+        assert!(tr.train_weighted(&batch, &[1.0; 10]).is_ok());
     }
 
     #[test]

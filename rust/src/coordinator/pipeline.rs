@@ -1,183 +1,38 @@
-//! Pipelined coordinator — the paper's §3.4 design.
+//! Pipelined coordinator — **deprecated thin shims** over the session
+//! API ([`crate::coordinator::session`]).
 //!
-//! Two OS threads model the two device compute lanes:
-//!
-//! - **selector thread** (the paper's GPU processes 1+2): pulls the
-//!   stream, runs the coarse filter + fine selection, ships the batch for
-//!   the NEXT round over a channel.
-//! - **trainer thread** (the paper's CPU process 3, here the caller's
-//!   thread): trains on the batch selected in the PREVIOUS round, ships
-//!   fresh parameters back.
-//!
-//! The "one-round-delay" scheme falls out of the channel topology: while
-//! the trainer updates `w_t` with batch `B_t` (chosen under `w_{t-1}`),
-//! the selector is already choosing `B_{t+1}` under `w_{t-1}`/`w_t` —
-//! whichever sync arrived last.
-//!
-//! Handoff is zero-copy in both directions. Each `ModelRuntime` is
-//! thread-local (PJRT client is !Send), so only ownership crosses
-//! threads:
-//!
-//! - **params** (trainer → selector): an `Arc<Vec<f32>>` snapshot through
-//!   a latest-only slot ([`crate::util::sync::Latest`]) — bounded with
-//!   overwrite semantics, so a lagging selector never queues stale
-//!   parameter copies (the old unbounded `mpsc::channel` grew with the
-//!   lag) and never costs the trainer a `Vec` clone per round.
-//! - **batches** (selector → trainer): the `TrainBatch` is *moved* over a
-//!   `sync_channel(1)`. Batches — unlike params — must all be consumed in
-//!   round order (the one-round-delay contract), so a bounded channel, not
-//!   a latest-only slot, is the right shape; the samples' payloads are
-//!   `Arc`-shared so the move is pointer-sized per sample.
-
-use std::sync::mpsc;
-use std::sync::Arc;
-use std::thread;
+//! The paper's §3.4 design (two OS threads, one-round-delay batch
+//! handoff over a bounded channel, zero-copy `Arc` parameter snapshots
+//! through a latest-only slot) now lives in the session module's
+//! `ExecBackend::Pipelined` backend; see its docs for the handoff
+//! topology. These shims pin that backend for pre-session call sites.
 
 use crate::config::RunConfig;
-use crate::coordinator::{build_stream, RoundOutcome, SelectorEngine, SelectorReport, TrainerEngine};
+use crate::coordinator::session::SessionBuilder;
+use crate::coordinator::RoundOutcome;
 use crate::device::idle::IdleTrace;
-use crate::device::{memory, DeviceSim, Lane, Op};
-use crate::metrics::{CurvePoint, RunRecord};
-use crate::util::sync::Latest;
-use crate::util::timer::Stopwatch;
-use crate::{Error, Result};
-
-/// Message from the selector thread to the trainer per round.
-struct SelectedBatch {
-    round: usize,
-    batch: crate::coordinator::TrainBatch,
-    report: SelectorReport,
-}
+use crate::metrics::RunRecord;
+use crate::Result;
 
 /// Run a pipelined training run; returns the run record and per-round
 /// outcomes. `idle` governs the per-round candidate budget (Fig. 9).
+#[deprecated(note = "use coordinator::session::SessionBuilder::new(cfg).pipelined(idle).run()")]
 pub fn run_with_idle(cfg: &RunConfig, idle: IdleTrace) -> Result<(RunRecord, Vec<RoundOutcome>)> {
-    cfg.validate()?;
-    let (mut stream, test) = build_stream(cfg);
-    let task = stream.task().clone();
-    let rounds = cfg.rounds;
-
-    // batches forward over a bounded channel (round-ordered, moved);
-    // params backward through a latest-only slot (Arc snapshot, overwrite)
-    let (batch_tx, batch_rx) = mpsc::sync_channel::<Result<SelectedBatch>>(1);
-    let param_slot: Arc<Latest<Arc<Vec<f32>>>> = Arc::new(Latest::new());
-    let selector_params = Arc::clone(&param_slot);
-
-    // ---- selector thread ----------------------------------------------------
-    let sel_cfg = cfg.clone();
-    let selector_handle = thread::Builder::new()
-        .name("titan-selector".into())
-        .spawn(move || -> Result<()> {
-            let mut selector = SelectorEngine::new(&sel_cfg, &task)?;
-            selector.idle = idle;
-            // select one batch per round, rounds+0..rounds (the batch for
-            // round r is selected during round r-1's training window)
-            for round in 0..rounds {
-                // adopt the freshest params the trainer has shipped
-                // (non-blocking: one-round-delay tolerates staleness; the
-                // slot holds at most the newest snapshot, no drain loop)
-                if let Some(p) = selector_params.take() {
-                    selector.sync_params(p)?;
-                }
-                let arrivals = stream.next_round(sel_cfg.stream_per_round);
-                let out = selector
-                    .select_round(round, arrivals)
-                    .map(|(batch, report)| SelectedBatch { round, batch, report });
-                let failed = out.is_err();
-                if batch_tx.send(out).is_err() || failed {
-                    break; // trainer hung up or selection failed
-                }
-            }
-            Ok(())
-        })
-        .map_err(|e| Error::Pipeline(format!("spawn selector: {e}")))?;
-
-    // ---- trainer (this thread) ------------------------------------------------
-    let mut trainer = TrainerEngine::new(cfg)?;
-    let mut sim = DeviceSim::new(&cfg.model);
-    let mut record = RunRecord::new(cfg.method.name(), &cfg.model);
-    let mut outcomes = Vec::with_capacity(rounds);
-    let run_sw = Stopwatch::start();
-
-    for round in 0..rounds {
-        let sel = batch_rx
-            .recv()
-            .map_err(|_| Error::Pipeline("selector thread terminated".into()))??;
-        debug_assert_eq!(sel.round, round);
-        for &op in &sel.report.ops {
-            sim.record(Lane::Gpu, op);
-        }
-        record
-            .processing_delay
-            .record_ms(sel.report.per_sample_host_ms);
-
-        let (loss, train_ms) = trainer.train_batch(&sel.batch)?;
-        sim.record(Lane::Cpu, Op::TrainStep { batch: sel.batch.len() });
-        sim.record(Lane::Gpu, Op::Sync); // params + batch handoff
-        let timing = sim.end_round(true); // pipelined: lanes overlap
-
-        // ship a zero-copy param snapshot to the selector (overwrite any
-        // unconsumed one — the selector only ever wants the newest)
-        param_slot.publish(trainer.share_params());
-
-        record.round_device_ms.push(timing.wall_ms);
-        record.round_host_ms.push(train_ms.max(sel.report.host_ms));
-        outcomes.push(RoundOutcome {
-            round,
-            train_loss: loss,
-            train_host_ms: train_ms,
-            selector: sel.report,
-            device_wall_ms: timing.wall_ms,
-            device_cpu_ms: timing.cpu_ms,
-            device_gpu_ms: timing.gpu_ms,
-        });
-
-        if cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0 {
-            let rep = trainer.evaluate(&test)?;
-            record.curve.push(CurvePoint {
-                round: round + 1,
-                device_ms: sim.total_ms(),
-                host_ms: run_sw.elapsed_ms(),
-                train_loss: loss as f64,
-                test_loss: rep.loss,
-                test_accuracy: rep.accuracy,
-            });
-        }
-    }
-    drop(batch_rx);
-    selector_handle
-        .join()
-        .map_err(|_| Error::Pipeline("selector thread panicked".into()))??;
-
-    let final_eval = trainer.evaluate(&test)?;
-    record.final_accuracy = final_eval.accuracy;
-    record.total_device_ms = sim.total_ms();
-    record.total_host_ms = run_sw.elapsed_ms();
-    record.energy_j = sim.energy().energy_j();
-    record.avg_power_w = sim.energy().avg_power_w();
-    let meta = &trainer.rt.set.meta;
-    record.peak_memory_bytes = memory::estimate(
-        meta.param_count,
-        memory::act_mult_for(&cfg.model),
-        cfg.batch_size,
-        meta.input_dim,
-        cfg.candidate_size,
-        meta.cand_max,
-        meta.feature_dim(cfg.filter_blocks),
-        meta.filter_chunk,
-        true,
-    )
-    .total();
-    Ok((record, outcomes))
+    SessionBuilder::new(cfg.clone()).pipelined(idle).run()
 }
 
 /// Run with a constant full idle capacity (the default).
+#[deprecated(note = "use coordinator::session::SessionBuilder::new(cfg).pipelined(...).run()")]
 pub fn run(cfg: &RunConfig) -> Result<(RunRecord, Vec<RoundOutcome>)> {
-    run_with_idle(cfg, IdleTrace::Constant(1.0))
+    SessionBuilder::new(cfg.clone())
+        .pipelined(IdleTrace::Constant(1.0))
+        .run()
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)]
+
     use super::*;
     use crate::config::{presets, Method};
 

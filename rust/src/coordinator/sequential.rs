@@ -1,94 +1,28 @@
-//! Sequential coordinator: selection and training alternate on one
-//! thread. This is how the paper's baselines deploy (no pipeline), and
-//! the ablation arm of Fig. 6(a).
+//! Sequential coordinator — **deprecated thin shim** over the session
+//! API ([`crate::coordinator::session`]).
+//!
+//! Selection and training alternate on one thread: how the paper's
+//! baselines deploy (no pipeline), and the ablation arm of Fig. 6(a).
+//! The round loop itself lives in [`crate::coordinator::session::Session`];
+//! this module only pins the backend to `ExecBackend::Sequential`.
 
 use crate::config::RunConfig;
-use crate::coordinator::{build_stream, RoundOutcome, SelectorEngine, TrainerEngine};
-use crate::device::{memory, DeviceSim, Lane, Op};
-use crate::metrics::{CurvePoint, RunRecord};
-use crate::util::timer::Stopwatch;
+use crate::coordinator::session::SessionBuilder;
+use crate::coordinator::RoundOutcome;
+use crate::metrics::RunRecord;
 use crate::Result;
 
 /// Run a full sequential training run; returns the run record and the
 /// per-round outcomes.
+#[deprecated(note = "use coordinator::session::SessionBuilder::new(cfg).sequential().run()")]
 pub fn run(cfg: &RunConfig) -> Result<(RunRecord, Vec<RoundOutcome>)> {
-    cfg.validate()?;
-    let (mut stream, test) = build_stream(cfg);
-    let mut selector = SelectorEngine::new(cfg, stream.task())?;
-    let mut trainer = TrainerEngine::new(cfg)?;
-    let mut sim = DeviceSim::new(&cfg.model);
-    let mut record = RunRecord::new(cfg.method.name(), &cfg.model);
-    let mut outcomes = Vec::with_capacity(cfg.rounds);
-    let run_sw = Stopwatch::start();
-
-    for round in 0..cfg.rounds {
-        // selection (uses current params — sequential has no delay);
-        // share_params: refcount bump, not a param-vector clone
-        selector.sync_params(trainer.share_params())?;
-        let arrivals = stream.next_round(cfg.stream_per_round);
-        let (batch, sel_report) = selector.select_round(round, arrivals)?;
-        for &op in &sel_report.ops {
-            sim.record(Lane::Gpu, op);
-        }
-        record
-            .processing_delay
-            .record_ms(sel_report.per_sample_host_ms);
-
-        // training (weighted: the paper's unbiased estimator)
-        let (loss, train_ms) = trainer.train_batch(&batch)?;
-        sim.record(Lane::Cpu, Op::TrainStep { batch: batch.len() });
-        let timing = sim.end_round(false); // sequential: lanes serialize
-
-        record.round_device_ms.push(timing.wall_ms);
-        record.round_host_ms.push(sel_report.host_ms + train_ms);
-        outcomes.push(RoundOutcome {
-            round,
-            train_loss: loss,
-            train_host_ms: train_ms,
-            selector: sel_report,
-            device_wall_ms: timing.wall_ms,
-            device_cpu_ms: timing.cpu_ms,
-            device_gpu_ms: timing.gpu_ms,
-        });
-
-        // periodic eval (instrumentation; not charged to the device clock)
-        if cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0 {
-            let rep = trainer.evaluate(&test)?;
-            record.curve.push(CurvePoint {
-                round: round + 1,
-                device_ms: sim.total_ms(),
-                host_ms: run_sw.elapsed_ms(),
-                train_loss: loss as f64,
-                test_loss: rep.loss,
-                test_accuracy: rep.accuracy,
-            });
-        }
-    }
-
-    let final_eval = trainer.evaluate(&test)?;
-    record.final_accuracy = final_eval.accuracy;
-    record.total_device_ms = sim.total_ms();
-    record.total_host_ms = run_sw.elapsed_ms();
-    record.energy_j = sim.energy().energy_j();
-    record.avg_power_w = sim.energy().avg_power_w();
-    let meta = &trainer.rt.set.meta;
-    record.peak_memory_bytes = memory::estimate(
-        meta.param_count,
-        memory::act_mult_for(&cfg.model),
-        cfg.batch_size,
-        meta.input_dim,
-        cfg.candidate_size,
-        meta.cand_max,
-        meta.feature_dim(cfg.filter_blocks),
-        meta.filter_chunk,
-        false,
-    )
-    .total();
-    Ok((record, outcomes))
+    SessionBuilder::new(cfg.clone()).sequential().run()
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)]
+
     use super::*;
     use crate::config::{presets, Method};
 
@@ -152,5 +86,20 @@ mod tests {
         let c1: Vec<f64> = r1.curve.iter().map(|p| p.test_loss).collect();
         let c2: Vec<f64> = r2.curve.iter().map(|p| p.test_loss).collect();
         assert_eq!(c1, c2);
+    }
+
+    /// The shim must be exactly a Session with the Sequential backend.
+    #[test]
+    fn shim_matches_session_builder() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = tiny(Method::Cis);
+        let (shim, _) = run(&cfg).unwrap();
+        let (sess, _) = SessionBuilder::new(cfg).sequential().run().unwrap();
+        assert_eq!(shim.final_accuracy, sess.final_accuracy);
+        let a: Vec<f64> = shim.curve.iter().map(|p| p.test_loss).collect();
+        let b: Vec<f64> = sess.curve.iter().map(|p| p.test_loss).collect();
+        assert_eq!(a, b);
     }
 }

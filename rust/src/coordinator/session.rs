@@ -1,0 +1,715 @@
+//! The unified session API — one canonical round loop for every
+//! deployment shape.
+//!
+//! A [`Session`] owns the full round-accounting core that `sequential.rs`
+//! and `pipeline.rs` used to duplicate: device-sim op recording,
+//! [`RunRecord`] bookkeeping, the eval cadence, peak-memory estimation and
+//! the per-round parameter sync. Execution strategy is delegated to an
+//! [`ExecBackend`]:
+//!
+//! - [`ExecBackend::Sequential`] — selection and training alternate on
+//!   one thread (the paper's baseline deployment, Fig. 6(a) ablation).
+//! - [`ExecBackend::Pipelined`] — the §3.4 design: the selector runs on
+//!   its own OS thread, batches cross a bounded `sync_channel(1)` in
+//!   round order, and parameters flow back through a latest-only slot
+//!   ([`crate::util::sync::Latest`]) as `Arc` snapshots. The one-round
+//!   delay falls out of the channel topology: while the trainer updates
+//!   `w_t` with batch `B_t` (chosen under `w_{t-1}`), the selector is
+//!   already choosing `B_{t+1}` under the freshest params it has seen.
+//!
+//! Both backends drive the *same* loop body, so on the same
+//! `RunConfig` + seed they produce identical selection/training streams
+//! whenever selection is parameter-independent (e.g. `Method::Rs`), and
+//! differ only by the documented one-round parameter delay otherwise. The
+//! device clock still differs by construction (lanes overlap when
+//! pipelined, plus the per-round `Op::Sync`); `RunRecord.curve`'s
+//! loss/accuracy fields are the byte-identical part.
+//!
+//! Two extension seams keep the loop closed while letting deployments
+//! compose around it:
+//!
+//! - [`DataSource`] (data plane) — where arrivals come from. Defaults to
+//!   the synthetic [`StreamSource`]; replay buffers and non-IID federated
+//!   device streams plug in without touching the loop.
+//! - [`RoundObserver`] — per-round / per-eval hooks that can log
+//!   progress, audit budgets, or stop the run early by returning
+//!   [`Control::Stop`].
+//!
+//! ```no_run
+//! use titan::config::{presets, Method};
+//! use titan::coordinator::session::{observers, SessionBuilder};
+//! use titan::device::idle::IdleTrace;
+//!
+//! let cfg = presets::table1("mlp", Method::Titan);
+//! let (record, outcomes) = SessionBuilder::new(cfg)
+//!     .pipelined(IdleTrace::Sine { min: 0.2, max: 1.0, period: 50.0 })
+//!     .observe(observers::ProgressLog::every(10))
+//!     .run()?;
+//! # Ok::<(), titan::Error>(())
+//! ```
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+
+use crate::config::RunConfig;
+use crate::coordinator::{RoundOutcome, SelectorEngine, SelectorReport, TrainBatch, TrainerEngine};
+use crate::data::{DataSource, StreamSource, SynthTask};
+use crate::device::idle::IdleTrace;
+use crate::device::{memory, DeviceSim, Lane, Op};
+use crate::metrics::{CurvePoint, RunRecord};
+use crate::util::sync::Latest;
+use crate::util::timer::Stopwatch;
+use crate::{Error, Result};
+
+/// How a session executes the round loop.
+#[derive(Clone, Debug)]
+pub enum ExecBackend {
+    /// Selection and training alternate on one thread.
+    Sequential,
+    /// Selector and trainer on two OS threads with one-round-delay batch
+    /// handoff; `idle` governs the per-round candidate budget (Fig. 9).
+    Pipelined { idle: IdleTrace },
+}
+
+impl ExecBackend {
+    /// The default pipelined backend (constant full idle capacity).
+    pub fn pipelined_default() -> ExecBackend {
+        ExecBackend::Pipelined { idle: IdleTrace::Constant(1.0) }
+    }
+
+    /// Backend a config asks for (`cfg.pipeline` flag).
+    pub fn for_config(cfg: &RunConfig) -> ExecBackend {
+        if cfg.pipeline {
+            ExecBackend::pipelined_default()
+        } else {
+            ExecBackend::Sequential
+        }
+    }
+
+    pub fn is_pipelined(&self) -> bool {
+        matches!(self, ExecBackend::Pipelined { .. })
+    }
+}
+
+/// Loop control returned by observer hooks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Control {
+    /// Keep running.
+    #[default]
+    Continue,
+    /// Finish the current round's bookkeeping, then end the run (final
+    /// eval and totals still happen).
+    Stop,
+}
+
+/// Per-round / per-eval hooks into the session loop.
+///
+/// Observers run on the trainer thread after the round's accounting is
+/// done, so they see exactly what the run record sees and cannot perturb
+/// selection. Returning [`Control::Stop`] from either hook ends the run
+/// after the current round.
+pub trait RoundObserver {
+    /// Called once per completed round.
+    fn on_round(&mut self, _outcome: &RoundOutcome) -> Control {
+        Control::Continue
+    }
+
+    /// Called at every eval-cadence checkpoint with the new curve point.
+    fn on_eval(&mut self, _point: &CurvePoint) -> Control {
+        Control::Continue
+    }
+}
+
+/// Built-in observers: progress logging, early stopping, budget audits.
+pub mod observers {
+    use std::sync::{Arc, Mutex};
+
+    use super::{Control, RoundObserver};
+    use crate::coordinator::RoundOutcome;
+    use crate::metrics::CurvePoint;
+
+    /// Logs round loss and eval checkpoints at debug level via the `log`
+    /// facade, without touching stdout — experiment tables stay clean.
+    pub struct ProgressLog {
+        every: usize,
+    }
+
+    impl ProgressLog {
+        /// Log every `every` rounds (0 = only eval checkpoints).
+        pub fn every(every: usize) -> ProgressLog {
+            ProgressLog { every }
+        }
+    }
+
+    impl RoundObserver for ProgressLog {
+        fn on_round(&mut self, o: &RoundOutcome) -> Control {
+            if self.every > 0 && (o.round + 1) % self.every == 0 {
+                // 1-based round, matching on_eval and RunRecord.curve.
+                // Selector/device fields only when a selector actually ran
+                // this round (FL synthesizes outcomes with train_loss only).
+                if o.selector.arrivals > 0 {
+                    log::debug!(
+                        "round {:>5}: loss {:.4} candidates {} wall {:.0}ms",
+                        o.round + 1,
+                        o.train_loss,
+                        o.selector.candidates,
+                        o.device_wall_ms
+                    );
+                } else {
+                    log::debug!("round {:>5}: loss {:.4}", o.round + 1, o.train_loss);
+                }
+            }
+            Control::Continue
+        }
+
+        fn on_eval(&mut self, p: &CurvePoint) -> Control {
+            log::debug!(
+                "eval @ round {:>5}: test_loss {:.4} acc {:.2}%",
+                p.round,
+                p.test_loss,
+                p.test_accuracy * 100.0
+            );
+            Control::Continue
+        }
+    }
+
+    /// Stops the run at the first eval checkpoint reaching the target
+    /// accuracy — time-to-accuracy runs without paying for the plateau.
+    pub struct EarlyStop {
+        target_accuracy: f64,
+    }
+
+    impl EarlyStop {
+        pub fn at_accuracy(target_accuracy: f64) -> EarlyStop {
+            EarlyStop { target_accuracy }
+        }
+    }
+
+    impl RoundObserver for EarlyStop {
+        fn on_eval(&mut self, p: &CurvePoint) -> Control {
+            if p.test_accuracy >= self.target_accuracy {
+                Control::Stop
+            } else {
+                Control::Continue
+            }
+        }
+    }
+
+    /// Records each round's realized candidate-set size (the Fig. 9
+    /// budget audit). The shared handle outlives the session, which takes
+    /// the observer by value.
+    pub struct CandidateAudit {
+        log: Arc<Mutex<Vec<usize>>>,
+    }
+
+    impl CandidateAudit {
+        pub fn new() -> (CandidateAudit, Arc<Mutex<Vec<usize>>>) {
+            let log = Arc::new(Mutex::new(Vec::new()));
+            (CandidateAudit { log: Arc::clone(&log) }, log)
+        }
+    }
+
+    impl RoundObserver for CandidateAudit {
+        fn on_round(&mut self, o: &RoundOutcome) -> Control {
+            self.log
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .push(o.selector.candidates);
+            Control::Continue
+        }
+    }
+}
+
+/// Builder for a [`Session`]. Configure, then [`SessionBuilder::run`].
+pub struct SessionBuilder {
+    cfg: RunConfig,
+    backend: Option<ExecBackend>,
+    source: Option<Box<dyn DataSource>>,
+    observers: Vec<Box<dyn RoundObserver>>,
+}
+
+impl SessionBuilder {
+    pub fn new(cfg: RunConfig) -> SessionBuilder {
+        SessionBuilder {
+            cfg,
+            backend: None,
+            source: None,
+            observers: Vec::new(),
+        }
+    }
+
+    /// Explicit backend choice; overrides `cfg.pipeline`.
+    pub fn backend(mut self, backend: ExecBackend) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Shorthand for [`ExecBackend::Sequential`].
+    pub fn sequential(self) -> Self {
+        self.backend(ExecBackend::Sequential)
+    }
+
+    /// Shorthand for [`ExecBackend::Pipelined`] with an idle trace.
+    pub fn pipelined(self, idle: IdleTrace) -> Self {
+        self.backend(ExecBackend::Pipelined { idle })
+    }
+
+    /// Replace the default synthetic stream with a custom data source.
+    pub fn source(mut self, source: impl DataSource + 'static) -> Self {
+        self.source = Some(Box::new(source));
+        self
+    }
+
+    /// Attach an observer; repeatable, invoked in attach order.
+    pub fn observe(mut self, observer: impl RoundObserver + 'static) -> Self {
+        self.observers.push(Box::new(observer));
+        self
+    }
+
+    /// Validate the config and assemble the session.
+    pub fn build(self) -> Result<Session> {
+        let SessionBuilder { cfg, backend, source, observers } = self;
+        cfg.validate()?;
+        let backend = backend.unwrap_or_else(|| ExecBackend::for_config(&cfg));
+        let source: Box<dyn DataSource> = match source {
+            Some(s) => s,
+            None => Box::new(default_source(&cfg)),
+        };
+        Ok(Session { cfg, backend, source, observers })
+    }
+
+    /// Build and run in one step.
+    pub fn run(self) -> Result<(RunRecord, Vec<RoundOutcome>)> {
+        self.build()?.run()
+    }
+}
+
+/// The default data source for a config: the synthetic stream the paper
+/// evaluates on (same seeding as the original `build_stream`).
+pub fn default_source(cfg: &RunConfig) -> StreamSource {
+    let task = SynthTask::for_model(&cfg.model, cfg.seed);
+    StreamSource::new(task, cfg.seed, cfg.noise)
+}
+
+/// A fully configured run: one data source, one backend, the canonical
+/// accounting loop. Consumed by [`Session::run`].
+pub struct Session {
+    cfg: RunConfig,
+    backend: ExecBackend,
+    source: Box<dyn DataSource>,
+    observers: Vec<Box<dyn RoundObserver>>,
+}
+
+/// Message from the selector side to the trainer per round.
+struct SelectedBatch {
+    round: usize,
+    batch: TrainBatch,
+    report: SelectorReport,
+}
+
+/// How the loop obtains each round's selected batch. `Sequential` runs
+/// the selector inline (sync params, pull arrivals, select); `Pipelined`
+/// receives from the selector thread and ships params back.
+enum BatchFeed {
+    Sequential {
+        selector: SelectorEngine,
+        source: Box<dyn DataSource>,
+        stream_per_round: usize,
+    },
+    Pipelined {
+        rx: mpsc::Receiver<Result<SelectedBatch>>,
+        params: Arc<Latest<Arc<Vec<f32>>>>,
+        handle: thread::JoinHandle<Result<()>>,
+    },
+}
+
+impl BatchFeed {
+    /// Produce round `round`'s batch + report.
+    fn next(&mut self, round: usize, trainer: &TrainerEngine) -> Result<(TrainBatch, SelectorReport)> {
+        match self {
+            BatchFeed::Sequential { selector, source, stream_per_round } => {
+                // sequential has no delay: selection sees current params
+                // (share_params is a refcount bump, not a Vec clone)
+                selector.sync_params(trainer.share_params())?;
+                let arrivals = source.next_round(*stream_per_round);
+                selector.select_round(round, arrivals)
+            }
+            BatchFeed::Pipelined { rx, .. } => {
+                let sel = rx
+                    .recv()
+                    .map_err(|_| Error::Pipeline("selector thread terminated".into()))??;
+                debug_assert_eq!(sel.round, round);
+                Ok((sel.batch, sel.report))
+            }
+        }
+    }
+
+    /// Post-train hook: the pipelined backend ships a zero-copy param
+    /// snapshot to the selector (overwriting any unconsumed one — the
+    /// selector only ever wants the newest).
+    fn after_train(&mut self, trainer: &TrainerEngine) {
+        if let BatchFeed::Pipelined { params, .. } = self {
+            params.publish(trainer.share_params());
+        }
+    }
+
+    /// Tear down: hang up the channel so the selector thread unblocks,
+    /// then join it and surface its error, if any.
+    fn finish(self) -> Result<()> {
+        match self {
+            BatchFeed::Sequential { .. } => Ok(()),
+            BatchFeed::Pipelined { rx, params, handle } => {
+                drop(rx);
+                drop(params);
+                handle
+                    .join()
+                    .map_err(|_| Error::Pipeline("selector thread panicked".into()))?
+            }
+        }
+    }
+}
+
+impl Session {
+    pub fn run(self) -> Result<(RunRecord, Vec<RoundOutcome>)> {
+        let Session { cfg, backend, source, mut observers } = self;
+        let pipelined = backend.is_pipelined();
+        let rounds = cfg.rounds;
+        let test = source.test_set(cfg.test_size, cfg.seed);
+
+        let mut feed = match backend {
+            ExecBackend::Sequential => BatchFeed::Sequential {
+                selector: SelectorEngine::new(&cfg, source.task())?,
+                source,
+                stream_per_round: cfg.stream_per_round,
+            },
+            ExecBackend::Pipelined { idle } => {
+                // batches forward over a bounded channel (round-ordered,
+                // moved); params backward through a latest-only slot
+                let (batch_tx, batch_rx) = mpsc::sync_channel::<Result<SelectedBatch>>(1);
+                let param_slot: Arc<Latest<Arc<Vec<f32>>>> = Arc::new(Latest::new());
+                let selector_params = Arc::clone(&param_slot);
+                let sel_cfg = cfg.clone();
+                let mut sel_source = source;
+                let handle = thread::Builder::new()
+                    .name("titan-selector".into())
+                    .spawn(move || -> Result<()> {
+                        let mut selector = SelectorEngine::new(&sel_cfg, sel_source.task())?;
+                        selector.idle = idle;
+                        // the batch for round r is selected during round
+                        // r-1's training window
+                        for round in 0..rounds {
+                            // adopt the freshest params the trainer has
+                            // shipped (non-blocking; one-round-delay
+                            // tolerates staleness)
+                            if let Some(p) = selector_params.take() {
+                                selector.sync_params(p)?;
+                            }
+                            let arrivals = sel_source.next_round(sel_cfg.stream_per_round);
+                            let out = selector
+                                .select_round(round, arrivals)
+                                .map(|(batch, report)| SelectedBatch { round, batch, report });
+                            let failed = out.is_err();
+                            if batch_tx.send(out).is_err() || failed {
+                                break; // trainer hung up or selection failed
+                            }
+                        }
+                        Ok(())
+                    })
+                    .map_err(|e| Error::Pipeline(format!("spawn selector: {e}")))?;
+                BatchFeed::Pipelined { rx: batch_rx, params: param_slot, handle }
+            }
+        };
+
+        let mut trainer = TrainerEngine::new(&cfg)?;
+        let mut sim = DeviceSim::new(&cfg.model);
+        let mut record = RunRecord::new(cfg.method.name(), &cfg.model);
+        let mut outcomes = Vec::with_capacity(rounds);
+        let run_sw = Stopwatch::start();
+
+        for round in 0..rounds {
+            let (batch, report) = feed.next(round, &trainer)?;
+            for &op in &report.ops {
+                sim.record(Lane::Gpu, op);
+            }
+            record.processing_delay.record_ms(report.per_sample_host_ms);
+
+            // training (weighted: the paper's unbiased estimator)
+            let (loss, train_ms) = trainer.train_batch(&batch)?;
+            sim.record(Lane::Cpu, Op::TrainStep { batch: batch.len() });
+            if pipelined {
+                sim.record(Lane::Gpu, Op::Sync); // params + batch handoff
+            }
+            let timing = sim.end_round(pipelined);
+            feed.after_train(&trainer);
+
+            record.round_device_ms.push(timing.wall_ms);
+            // pipelined lanes overlap on the host too; sequential serializes
+            record.round_host_ms.push(if pipelined {
+                train_ms.max(report.host_ms)
+            } else {
+                report.host_ms + train_ms
+            });
+            let outcome = RoundOutcome {
+                round,
+                train_loss: loss,
+                train_host_ms: train_ms,
+                selector: report,
+                device_wall_ms: timing.wall_ms,
+                device_cpu_ms: timing.cpu_ms,
+                device_gpu_ms: timing.gpu_ms,
+            };
+            let mut stop = false;
+            for obs in observers.iter_mut() {
+                stop |= obs.on_round(&outcome) == Control::Stop;
+            }
+            outcomes.push(outcome);
+
+            // periodic eval (instrumentation; not charged to the device clock)
+            if cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0 {
+                let rep = trainer.evaluate(&test)?;
+                let point = CurvePoint {
+                    round: round + 1,
+                    device_ms: sim.total_ms(),
+                    host_ms: run_sw.elapsed_ms(),
+                    train_loss: loss as f64,
+                    test_loss: rep.loss,
+                    test_accuracy: rep.accuracy,
+                };
+                for obs in observers.iter_mut() {
+                    stop |= obs.on_eval(&point) == Control::Stop;
+                }
+                record.curve.push(point);
+            }
+            if stop {
+                break;
+            }
+        }
+        feed.finish()?;
+
+        let final_eval = trainer.evaluate(&test)?;
+        record.final_accuracy = final_eval.accuracy;
+        record.total_device_ms = sim.total_ms();
+        record.total_host_ms = run_sw.elapsed_ms();
+        record.energy_j = sim.energy().energy_j();
+        record.avg_power_w = sim.energy().avg_power_w();
+        let meta = &trainer.rt.set.meta;
+        record.peak_memory_bytes = memory::estimate(
+            meta.param_count,
+            memory::act_mult_for(&cfg.model),
+            cfg.batch_size,
+            meta.input_dim,
+            cfg.candidate_size,
+            meta.cand_max,
+            meta.feature_dim(cfg.filter_blocks),
+            meta.filter_chunk,
+            pipelined,
+        )
+        .total();
+        Ok((record, outcomes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::observers::{CandidateAudit, EarlyStop};
+    use super::*;
+    use crate::config::{presets, Method};
+    use crate::data::ReplaySource;
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new("artifacts/mlp/meta.json").exists()
+    }
+
+    fn small_cfg(method: Method) -> RunConfig {
+        let mut c = presets::table1("mlp", method);
+        c.rounds = 6;
+        c.test_size = 200;
+        c.eval_every = 3;
+        c
+    }
+
+    #[test]
+    fn backend_follows_config_flag() {
+        let mut cfg = small_cfg(Method::Titan);
+        cfg.pipeline = true;
+        assert!(ExecBackend::for_config(&cfg).is_pipelined());
+        cfg.pipeline = false;
+        assert!(!ExecBackend::for_config(&cfg).is_pipelined());
+    }
+
+    #[test]
+    fn builder_rejects_invalid_config() {
+        let mut cfg = small_cfg(Method::Rs);
+        cfg.candidate_size = 5; // < batch_size 10
+        assert!(SessionBuilder::new(cfg).build().is_err());
+    }
+
+    #[test]
+    fn early_stop_observer_fires_on_target() {
+        let mut obs = EarlyStop::at_accuracy(0.5);
+        let mut p = CurvePoint {
+            round: 1,
+            device_ms: 0.0,
+            host_ms: 0.0,
+            train_loss: 0.0,
+            test_loss: 0.0,
+            test_accuracy: 0.4,
+        };
+        assert_eq!(obs.on_eval(&p), Control::Continue);
+        p.test_accuracy = 0.6;
+        assert_eq!(obs.on_eval(&p), Control::Stop);
+    }
+
+    #[test]
+    fn candidate_audit_records_rounds() {
+        let (mut audit, log) = CandidateAudit::new();
+        for c in [30usize, 15, 22] {
+            let o = RoundOutcome {
+                selector: SelectorReport { candidates: c, ..Default::default() },
+                ..Default::default()
+            };
+            assert_eq!(audit.on_round(&o), Control::Continue);
+        }
+        assert_eq!(*log.lock().unwrap(), vec![30, 15, 22]);
+    }
+
+    // ---- artifact-gated end-to-end pins ---------------------------------
+
+    /// RS selection is parameter-independent, so both backends must make
+    /// identical decisions and the learning-relevant record fields must
+    /// match byte-for-byte (the device/host clocks legitimately differ).
+    #[test]
+    fn backends_agree_for_parameter_independent_selection() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let cfg = small_cfg(Method::Rs);
+        let (seq, seq_out) = SessionBuilder::new(cfg.clone()).sequential().run().unwrap();
+        let (pipe, pipe_out) = SessionBuilder::new(cfg)
+            .pipelined(IdleTrace::Constant(1.0))
+            .run()
+            .unwrap();
+        assert_eq!(seq.final_accuracy, pipe.final_accuracy);
+        assert_eq!(seq.curve.len(), pipe.curve.len());
+        for (a, b) in seq.curve.iter().zip(&pipe.curve) {
+            assert_eq!(a.round, b.round);
+            assert_eq!(a.train_loss, b.train_loss);
+            assert_eq!(a.test_loss, b.test_loss);
+            assert_eq!(a.test_accuracy, b.test_accuracy);
+        }
+        // selector reports: identical ops, arrivals and candidate counts
+        // (the Sync op is charged by the loop, not the selector report)
+        assert_eq!(seq_out.len(), pipe_out.len());
+        for (a, b) in seq_out.iter().zip(&pipe_out) {
+            assert_eq!(a.selector.ops, b.selector.ops);
+            assert_eq!(a.selector.arrivals, b.selector.arrivals);
+            assert_eq!(a.selector.candidates, b.selector.candidates);
+            assert_eq!(a.train_loss, b.train_loss);
+        }
+    }
+
+    /// SelectorReport ops must be what the session charges to the GPU
+    /// lane: per-round device_gpu_ms == Σ cost(op) (+ sync when pipelined).
+    #[test]
+    fn selector_report_ops_drive_gpu_lane_accounting() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = small_cfg(Method::Titan);
+        let costs = crate::device::CostModel::for_model(&cfg.model);
+        let (_, seq_out) = SessionBuilder::new(cfg.clone()).sequential().run().unwrap();
+        for o in &seq_out {
+            let expect: f64 = o.selector.ops.iter().map(|&op| costs.cost_ms(op)).sum();
+            assert!(
+                (o.device_gpu_ms - expect).abs() < 1e-9,
+                "round {}: gpu lane {} != op sum {}",
+                o.round,
+                o.device_gpu_ms,
+                expect
+            );
+        }
+        let (_, pipe_out) = SessionBuilder::new(cfg)
+            .pipelined(IdleTrace::Constant(1.0))
+            .run()
+            .unwrap();
+        let sync = costs.cost_ms(Op::Sync);
+        for o in &pipe_out {
+            let expect: f64 =
+                o.selector.ops.iter().map(|&op| costs.cost_ms(op)).sum::<f64>() + sync;
+            assert!(
+                (o.device_gpu_ms - expect).abs() < 1e-9,
+                "round {}: gpu lane {} != op sum {}",
+                o.round,
+                o.device_gpu_ms,
+                expect
+            );
+        }
+    }
+
+    /// The pipelined backend is method-agnostic: a non-Titan method runs
+    /// through the selector thread unchanged (the old coordinator only
+    /// ever pipelined Titan).
+    #[test]
+    fn pipelined_backend_is_method_agnostic() {
+        if !have_artifacts() {
+            return;
+        }
+        for method in [Method::Cis, Method::Camel] {
+            let (record, outcomes) = SessionBuilder::new(small_cfg(method))
+                .pipelined(IdleTrace::Constant(1.0))
+                .run()
+                .unwrap();
+            assert_eq!(outcomes.len(), 6, "{method:?}");
+            assert!(record.final_accuracy.is_finite());
+            // lanes overlap on the device clock
+            for o in &outcomes {
+                assert!(o.device_wall_ms >= o.device_cpu_ms.max(o.device_gpu_ms) - 1e-9);
+            }
+        }
+    }
+
+    /// Custom source + early-stop observer through the full loop: the
+    /// session trains from a replay pool and stops at the first eval.
+    #[test]
+    fn replay_source_and_early_stop_through_session() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut cfg = small_cfg(Method::Rs);
+        cfg.rounds = 20;
+        cfg.eval_every = 2;
+        let mut stream = default_source(&cfg);
+        let replay =
+            ReplaySource::capture(&mut stream, cfg.stream_per_round * 2).unwrap();
+        let (record, outcomes) = SessionBuilder::new(cfg)
+            .sequential()
+            .source(replay)
+            .observe(EarlyStop::at_accuracy(0.0)) // any accuracy stops
+            .run()
+            .unwrap();
+        assert_eq!(outcomes.len(), 2, "stopped at the first eval checkpoint");
+        assert_eq!(record.curve.len(), 1);
+        assert!(record.final_accuracy.is_finite());
+    }
+
+    /// Observer ordering: audit sees every round exactly once, in order.
+    #[test]
+    fn audit_observer_sees_every_round() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = small_cfg(Method::Titan);
+        let (audit, log) = CandidateAudit::new();
+        let (_, outcomes) = SessionBuilder::new(cfg)
+            .pipelined(IdleTrace::Constant(0.5))
+            .observe(audit)
+            .run()
+            .unwrap();
+        let seen = log.lock().unwrap().clone();
+        assert_eq!(seen.len(), outcomes.len());
+        // budget = 0.5 * 30 = 15
+        assert!(seen.iter().all(|&c| c <= 15), "{seen:?}");
+    }
+}

@@ -1,16 +1,19 @@
 //! Data plane: sample types, synthetic task generators (the stand-ins for
 //! CIFAR-10 / Speech Commands / HARBOX — see DESIGN.md §Substitutions),
 //! the streaming source with noise injection, the class-indexed sample
-//! store and the capped candidate priority buffer.
+//! store, the capped candidate priority buffer, and the object-safe
+//! [`DataSource`] seam the coordinator session pulls rounds through.
 
 pub mod buffer;
 pub mod sample;
+pub mod source;
 pub mod store;
 pub mod stream;
 pub mod synth;
 
 pub use buffer::CandidateBuffer;
 pub use sample::Sample;
+pub use source::{ClassSubsetSource, DataSource, ReplaySource};
 pub use store::ClassStore;
 pub use stream::{StreamSource, StreamStats};
 pub use synth::{SynthTask, TaskSpec};

@@ -1,0 +1,235 @@
+//! Pluggable round-based data sources — the seam between the data plane
+//! and the coordinator session loop.
+//!
+//! The paper evaluates Titan against one deployment shape (a synthetic
+//! stream at fixed velocity), but the selection machinery only ever needs
+//! three things from its data: the task geometry, one round of arrivals,
+//! and a held-out test set. [`DataSource`] is that contract, object-safe
+//! so a session can own `Box<dyn DataSource>` and ship it across the
+//! pipeline's selector thread.
+//!
+//! Implementations here:
+//! - [`StreamSource`] (in `stream.rs`) — the default velocity-controlled
+//!   synthetic stream with noise injection.
+//! - [`ReplaySource`] — cyclic replay of a captured sample pool (the
+//!   "to store or not" on-device store shape: a bounded buffer replayed
+//!   across rounds instead of fresh arrivals).
+//! - [`ClassSubsetSource`] — a non-IID stream restricted to a class
+//!   subset (the federated Appendix-B device shape).
+
+use crate::data::sample::Sample;
+use crate::data::stream::StreamSource;
+use crate::data::synth::SynthTask;
+use crate::util::rng::Xoshiro256;
+use crate::{Error, Result};
+
+/// A round-based data source feeding one training run.
+///
+/// Object-safe: sessions hold `Box<dyn DataSource>` and the pipelined
+/// backend moves it onto the selector thread, hence the `Send` bound.
+pub trait DataSource: Send {
+    /// The synthetic task this source draws from. Fixes input dims and
+    /// class count; the engines validate artifact compatibility against
+    /// it at session start.
+    fn task(&self) -> &SynthTask;
+
+    /// Pull one round's worth of arrivals (`v` samples).
+    fn next_round(&mut self, v: usize) -> Vec<Sample>;
+
+    /// Deterministic held-out test set (drawn from the clean
+    /// distribution, on an RNG stream independent of the arrivals).
+    fn test_set(&self, n: usize, seed: u64) -> Vec<Sample>;
+}
+
+impl DataSource for StreamSource {
+    fn task(&self) -> &SynthTask {
+        StreamSource::task(self)
+    }
+
+    fn next_round(&mut self, v: usize) -> Vec<Sample> {
+        StreamSource::next_round(self, v)
+    }
+
+    fn test_set(&self, n: usize, seed: u64) -> Vec<Sample> {
+        StreamSource::task(self).test_set(n, seed)
+    }
+}
+
+/// Cyclic replay over a fixed sample pool.
+///
+/// Models the on-device store deployment: a bounded set of retained
+/// samples is replayed round after round (data-scarce regime), instead of
+/// fresh stream arrivals. Deterministic: round `r` starts where round
+/// `r-1`'s cursor stopped, wrapping over the pool.
+pub struct ReplaySource {
+    task: SynthTask,
+    pool: Vec<Sample>,
+    cursor: usize,
+}
+
+impl ReplaySource {
+    /// Build from an explicit pool. Errors on an empty pool.
+    pub fn new(task: SynthTask, pool: Vec<Sample>) -> Result<ReplaySource> {
+        if pool.is_empty() {
+            return Err(Error::Config("ReplaySource needs a non-empty pool".into()));
+        }
+        Ok(ReplaySource { task, pool, cursor: 0 })
+    }
+
+    /// Capture `n` samples from another source into a replay pool.
+    pub fn capture(source: &mut dyn DataSource, n: usize) -> Result<ReplaySource> {
+        let pool = source.next_round(n);
+        ReplaySource::new(source.task().clone(), pool)
+    }
+
+    pub fn pool_len(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+impl DataSource for ReplaySource {
+    fn task(&self) -> &SynthTask {
+        &self.task
+    }
+
+    fn next_round(&mut self, v: usize) -> Vec<Sample> {
+        (0..v)
+            .map(|_| {
+                let s = self.pool[self.cursor].clone();
+                self.cursor = (self.cursor + 1) % self.pool.len();
+                s
+            })
+            .collect()
+    }
+
+    fn test_set(&self, n: usize, seed: u64) -> Vec<Sample> {
+        self.task.test_set(n, seed)
+    }
+}
+
+/// Non-IID stream restricted to a class subset — one federated device's
+/// local distribution (paper Appendix B: each device sees 5 of C classes).
+///
+/// Draw order per sample (pick class, then draw from it, one shared RNG)
+/// matches the original FL orchestrator's device streams bit-for-bit, so
+/// migrating `fl::run` onto this source preserved its results.
+pub struct ClassSubsetSource {
+    task: SynthTask,
+    classes: Vec<u32>,
+    rng: Xoshiro256,
+    next_id: u64,
+}
+
+impl ClassSubsetSource {
+    /// `seed` is used verbatim (no internal xor) so callers control the
+    /// exact RNG stream.
+    pub fn new(task: SynthTask, classes: Vec<u32>, seed: u64) -> Result<ClassSubsetSource> {
+        if classes.is_empty() {
+            return Err(Error::Config("ClassSubsetSource needs >= 1 class".into()));
+        }
+        let c = task.num_classes() as u32;
+        if let Some(&bad) = classes.iter().find(|&&y| y >= c) {
+            return Err(Error::Config(format!(
+                "ClassSubsetSource class {bad} out of range (task has {c} classes)"
+            )));
+        }
+        Ok(ClassSubsetSource {
+            task,
+            classes,
+            rng: Xoshiro256::seed_from_u64(seed),
+            next_id: 0,
+        })
+    }
+}
+
+impl DataSource for ClassSubsetSource {
+    fn task(&self) -> &SynthTask {
+        &self.task
+    }
+
+    fn next_round(&mut self, v: usize) -> Vec<Sample> {
+        (0..v)
+            .map(|_| {
+                let y = self.classes[self.rng.index(self.classes.len())];
+                let id = self.next_id;
+                self.next_id += 1;
+                self.task.draw_class(id, y, &mut self.rng)
+            })
+            .collect()
+    }
+
+    fn test_set(&self, n: usize, seed: u64) -> Vec<Sample> {
+        self.task.test_set(n, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NoiseKind;
+    use crate::data::synth::TaskSpec;
+
+    fn task() -> SynthTask {
+        SynthTask::new(TaskSpec::Har, 3, 0.2, 0.1)
+    }
+
+    #[test]
+    fn stream_source_is_a_data_source() {
+        let mut boxed: Box<dyn DataSource> =
+            Box::new(StreamSource::new(task(), 5, NoiseKind::None));
+        let round = boxed.next_round(20);
+        assert_eq!(round.len(), 20);
+        assert_eq!(boxed.task().num_classes(), 6);
+        // trait test_set matches the task's directly
+        let a = boxed.test_set(10, 5);
+        let b = task().test_set(10, 5);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(*a[3].x, *b[3].x);
+    }
+
+    #[test]
+    fn replay_cycles_deterministically() {
+        let mut stream = StreamSource::new(task(), 7, NoiseKind::None);
+        let mut replay = ReplaySource::capture(&mut stream, 5).unwrap();
+        assert_eq!(replay.pool_len(), 5);
+        let r1 = replay.next_round(7); // wraps: ids 0..5 then 0,1
+        assert_eq!(r1.len(), 7);
+        assert_eq!(r1[0].id, r1[5].id);
+        assert_eq!(r1[1].id, r1[6].id);
+        // the cursor persists across rounds
+        let r2 = replay.next_round(3); // continues at pool index 2
+        assert_eq!(r2[0].id, r1[2].id);
+    }
+
+    #[test]
+    fn replay_rejects_empty_pool() {
+        assert!(ReplaySource::new(task(), Vec::new()).is_err());
+    }
+
+    #[test]
+    fn class_subset_only_emits_its_classes() {
+        let mut src = ClassSubsetSource::new(task(), vec![1, 4], 42).unwrap();
+        for s in src.next_round(200) {
+            assert!(s.label == 1 || s.label == 4, "label {}", s.label);
+        }
+    }
+
+    #[test]
+    fn class_subset_deterministic_under_seed() {
+        let mut a = ClassSubsetSource::new(task(), vec![0, 2, 3], 9).unwrap();
+        let mut b = ClassSubsetSource::new(task(), vec![0, 2, 3], 9).unwrap();
+        let (ra, rb) = (a.next_round(30), b.next_round(30));
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.label, y.label);
+            assert_eq!(*x.x, *y.x);
+        }
+    }
+
+    #[test]
+    fn class_subset_validates_classes() {
+        assert!(ClassSubsetSource::new(task(), vec![], 1).is_err());
+        assert!(ClassSubsetSource::new(task(), vec![6], 1).is_err());
+        assert!(ClassSubsetSource::new(task(), vec![5], 1).is_ok());
+    }
+}

@@ -4,7 +4,8 @@
 //! methods (RS / IS / C-IS-as-Titan's-fine-stage).
 
 use crate::config::{presets, Method};
-use crate::fl::{self, FlConfig};
+use crate::coordinator::session::observers::ProgressLog;
+use crate::fl::{FlBuilder, FlConfig};
 use crate::metrics::{render_table, write_result};
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -29,7 +30,9 @@ pub fn run(args: &Args) -> Result<()> {
                 cfg.base.eval_every = 2;
             }
             cfg.comm_rounds = args.get_usize("comm-rounds", cfg.comm_rounds)?;
-            let rec = fl::run(&cfg)?;
+            let rec = FlBuilder::new(cfg)
+                .observe(ProgressLog::every(5))
+                .run()?;
             if method == Method::Rs {
                 rs_target = rec.final_accuracy;
                 rs_rounds_to = rec.rounds_to_accuracy(rs_target);

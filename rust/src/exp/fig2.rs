@@ -7,7 +7,7 @@
 //!     batch; RS is surprisingly strong).
 
 use crate::config::{presets, Method};
-use crate::coordinator::sequential;
+use crate::coordinator::SessionBuilder;
 use crate::metrics::{render_table, write_result};
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -26,7 +26,7 @@ pub fn run_a(args: &Args) -> Result<()> {
             cfg.rounds = cfg.rounds.min(12); // timing stabilizes quickly
             cfg.eval_every = 0;
             cfg.pipeline = false; // (a) isolates the selection cost
-            let (record, _) = sequential::run(&cfg)?;
+            let (record, _) = SessionBuilder::new(cfg.clone()).sequential().run()?;
             let per_round =
                 record.total_device_ms / cfg.rounds as f64;
             if method == Method::Rs {
@@ -68,7 +68,7 @@ pub fn run_b(args: &Args) -> Result<()> {
                 cfg.batch_size = batch;
                 cfg.candidate_size = cfg.candidate_size.max(batch + 5);
                 cfg.pipeline = false;
-                let (record, _) = sequential::run(&cfg)?;
+                let (record, _) = SessionBuilder::new(cfg.clone()).sequential().run()?;
                 let curve: Vec<Json> = record
                     .curve
                     .iter()

@@ -8,7 +8,8 @@
 //! (d) average device power and total energy vs RS.
 
 use crate::config::{presets, Method};
-use crate::coordinator::{pipeline, sequential};
+use crate::coordinator::SessionBuilder;
+use crate::device::idle::IdleTrace;
 use crate::device::{memory, CostModel, Op};
 use crate::metrics::{render_table, write_result};
 use crate::runtime::artifact::ArtifactSet;
@@ -32,10 +33,12 @@ pub fn run_a(args: &Args) -> Result<()> {
 
         let mut seq_cfg = cfg.clone();
         seq_cfg.pipeline = false;
-        let (seq_rec, _) = sequential::run(&seq_cfg)?;
+        let (seq_rec, _) = SessionBuilder::new(seq_cfg.clone()).sequential().run()?;
         let seq_ms = seq_rec.total_device_ms / seq_cfg.rounds as f64;
 
-        let (pipe_rec, _) = pipeline::run(&cfg)?;
+        let (pipe_rec, _) = SessionBuilder::new(cfg.clone())
+            .pipelined(IdleTrace::Constant(1.0))
+            .run()?;
         let pipe_ms = pipe_rec.total_device_ms / cfg.rounds as f64;
 
         rows.push(vec![
@@ -74,7 +77,9 @@ pub fn run_b(args: &Args) -> Result<()> {
         let mut cfg = super::tune(presets::table1(model, Method::Titan), args)?;
         cfg.rounds = cfg.rounds.min(10);
         cfg.eval_every = 0;
-        let (rec, _) = pipeline::run(&cfg)?;
+        let (rec, _) = SessionBuilder::new(cfg.clone())
+            .pipelined(IdleTrace::Constant(1.0))
+            .run()?;
         let costs = CostModel::for_model(model);
         let device_ms = costs.cost_ms(Op::Features { chunk: 1, blocks: cfg.filter_blocks });
         rows.push(vec![
@@ -159,11 +164,13 @@ pub fn run_d(args: &Args) -> Result<()> {
         let mut rs_cfg = super::tune(presets::table1(model, Method::Rs), args)?;
         rs_cfg.rounds = rs_cfg.rounds.min(20);
         rs_cfg.eval_every = 0;
-        let (rs, _) = sequential::run(&rs_cfg)?;
+        let (rs, _) = SessionBuilder::new(rs_cfg).sequential().run()?;
         let mut ti_cfg = super::tune(presets::table1(model, Method::Titan), args)?;
         ti_cfg.rounds = ti_cfg.rounds.min(20);
         ti_cfg.eval_every = 0;
-        let (ti, _) = pipeline::run(&ti_cfg)?;
+        let (ti, _) = SessionBuilder::new(ti_cfg)
+            .pipelined(IdleTrace::Constant(1.0))
+            .run()?;
         rows.push(vec![
             model.clone(),
             format!("{:.2}", rs.avg_power_w),

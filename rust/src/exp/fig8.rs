@@ -8,7 +8,8 @@
 //! diversity filtering).
 
 use crate::config::{presets, Method};
-use crate::coordinator::{pipeline, sequential};
+use crate::coordinator::SessionBuilder;
+use crate::device::idle::IdleTrace;
 use crate::device::{CostModel, Op};
 use crate::metrics::{render_table, write_result};
 use crate::runtime::artifact::ArtifactSet;
@@ -28,7 +29,7 @@ pub fn run(args: &Args) -> Result<()> {
         // ideal: C-IS over the whole stream, no filter
         let mut cis_cfg = super::tune(presets::table1(model, Method::Cis), args)?;
         cis_cfg.pipeline = false;
-        let (cis_rec, _) = sequential::run(&cis_cfg)?;
+        let (cis_rec, _) = SessionBuilder::new(cis_cfg).sequential().run()?;
         let cis_delay = costs.cost_ms(Op::Importance { n: 1 });
         rows.push(vec![
             model.clone(),
@@ -47,7 +48,9 @@ pub fn run(args: &Args) -> Result<()> {
         for k in 1..=n_blocks {
             let mut cfg = super::tune(presets::table1(model, Method::Titan), args)?;
             cfg.filter_blocks = k;
-            let (rec, _) = pipeline::run(&cfg)?;
+            let (rec, _) = SessionBuilder::new(cfg)
+                .pipelined(IdleTrace::Constant(1.0))
+                .run()?;
             let delay = costs.cost_ms(Op::Features { chunk: 1, blocks: k });
             let speedup = cis_delay / delay.max(1e-9);
             rows.push(vec![

@@ -3,7 +3,8 @@
 //! the idle capacity (constant budgets 15..100 plus a fluctuating trace).
 
 use crate::config::{presets, Method};
-use crate::coordinator::{pipeline, sequential};
+use crate::coordinator::session::observers::CandidateAudit;
+use crate::coordinator::SessionBuilder;
 use crate::device::idle::IdleTrace;
 use crate::metrics::{render_table, write_result};
 use crate::util::cli::Args;
@@ -18,7 +19,7 @@ pub fn run(args: &Args) -> Result<()> {
     for model in &models {
         // RS reference for time reduction
         let rs_cfg = super::tune(presets::table1(model, Method::Rs), args)?;
-        let (rs, _) = sequential::run(&rs_cfg)?;
+        let (rs, _) = SessionBuilder::new(rs_cfg).sequential().run()?;
         let target = rs.final_accuracy * super::TARGET_FRAC;
         let rs_time = rs
             .time_to_accuracy_device(target)
@@ -30,12 +31,25 @@ pub fn run(args: &Args) -> Result<()> {
         let mut run_one = |label: String, cand: usize, trace: IdleTrace| -> Result<()> {
             let mut accs = Vec::new();
             let mut reds = Vec::new();
+            let mut realized = Vec::new();
             for &ds in &seeds {
                 let mut cfg = super::tune(presets::table1(model, Method::Titan), args)?;
                 cfg.seed ^= ds.wrapping_mul(0x9E37);
                 cfg.candidate_size = cand;
                 cfg.stream_per_round = cfg.stream_per_round.max(cand);
-                let (rec, _) = pipeline::run_with_idle(&cfg, trace.clone())?;
+                // the audit observer records each round's realized
+                // candidate count — the budget the idle trace actually
+                // granted, reported next to the configured maximum
+                let (audit, audit_log) = CandidateAudit::new();
+                let (rec, _) = SessionBuilder::new(cfg)
+                    .pipelined(trace.clone())
+                    .observe(audit)
+                    .run()?;
+                let counts = audit_log.lock().unwrap_or_else(|e| e.into_inner());
+                realized.push(
+                    counts.iter().sum::<usize>() as f64 / counts.len().max(1) as f64,
+                );
+                drop(counts);
                 let tta = rec
                     .time_to_accuracy_device(target)
                     .unwrap_or(rec.total_device_ms);
@@ -44,15 +58,18 @@ pub fn run(args: &Args) -> Result<()> {
             }
             let acc = crate::util::stats::mean(&accs);
             let reduction = crate::util::stats::mean(&reds);
+            let mean_realized = crate::util::stats::mean(&realized);
             rows.push(vec![
                 model.clone(),
                 label.clone(),
+                format!("{mean_realized:.1}"),
                 format!("{:.1}", acc * 100.0),
                 format!("{reduction:.0}%"),
             ]);
             out.push(Json::obj(vec![
                 ("model", Json::Str(model.clone())),
                 ("budget", Json::Str(label)),
+                ("mean_realized_candidates", Json::Num(mean_realized)),
                 ("final_accuracy", Json::Num(acc)),
                 ("time_reduction_pct", Json::Num(reduction)),
             ]));
@@ -72,7 +89,7 @@ pub fn run(args: &Args) -> Result<()> {
     println!(
         "{}",
         render_table(
-            &["model", "candidates", "final_acc_%", "time_reduction"],
+            &["model", "candidates", "realized", "final_acc_%", "time_reduction"],
             &rows
         )
     );

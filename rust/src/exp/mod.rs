@@ -2,7 +2,8 @@
 //! experiment index). Each experiment
 //!
 //!   1. builds its preset configs (honoring `--fast` and `--models`),
-//!   2. runs the coordinator (sequential or pipelined as the paper does),
+//!   2. runs a coordinator session (`SessionBuilder`; sequential or
+//!      pipelined as the paper does),
 //!   3. prints the paper-shaped rows/series to stdout, and
 //!   4. writes machine-readable results under `results/<id>.json`.
 //!
@@ -20,7 +21,7 @@ pub mod fig11;
 pub mod table1;
 
 use crate::config::{Method, RunConfig};
-use crate::coordinator::{pipeline, sequential};
+use crate::coordinator::SessionBuilder;
 use crate::metrics::RunRecord;
 use crate::util::cli::Args;
 use crate::{Error, Result};
@@ -107,14 +108,10 @@ pub fn tune(mut cfg: RunConfig, args: &Args) -> Result<RunConfig> {
     Ok(cfg)
 }
 
-/// Run one config with the coordinator the paper would use for it
-/// (pipelined for Titan, sequential otherwise).
+/// Run one config with the backend the paper would use for it (the
+/// config's `pipeline` flag picks the session backend).
 pub fn run_config(cfg: &RunConfig) -> Result<RunRecord> {
-    let (record, _) = if cfg.pipeline {
-        pipeline::run(cfg)?
-    } else {
-        sequential::run(cfg)?
-    };
+    let (record, _) = SessionBuilder::new(cfg.clone()).run()?;
     Ok(record)
 }
 

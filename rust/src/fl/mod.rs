@@ -6,12 +6,22 @@
 //! Each device runs the configured data-selection method locally over its
 //! own stream before training — Titan's selection plugs in per-device.
 //!
+//! Built on the session API's extension seams: every device pulls its
+//! arrivals through an object-safe [`DataSource`] (default:
+//! [`ClassSubsetSource`], the Appendix-B non-IID shape; replay buffers or
+//! custom streams swap in via [`FlBuilder::device_sources`]), and
+//! [`RoundObserver`]s hook each communication round — progress logging
+//! and early stopping without touching the FedAvg loop. [`FlBuilder`]
+//! mirrors `SessionBuilder` for the federated deployment shape.
+//!
 //! Implementation note: devices share one `ModelRuntime` (Full role) and
 //! swap parameter vectors in/out — functionally identical to 50 separate
 //! processes, and the only tractable layout on a one-core host.
 
 use crate::config::RunConfig;
-use crate::data::{Sample, SynthTask};
+use crate::coordinator::session::{Control, RoundObserver};
+use crate::coordinator::RoundOutcome;
+use crate::data::{ClassSubsetSource, DataSource, Sample, SynthTask};
 use crate::metrics::{CurvePoint, RunRecord};
 use crate::runtime::model::{ModelRuntime, RuntimeRole};
 use crate::selection::{make_strategy, SelectionContext};
@@ -48,135 +58,224 @@ impl FlConfig {
     }
 }
 
-/// One simulated device.
+/// One simulated device: its data source plus local stream statistics.
 struct FlDevice {
-    /// Class subset this device's stream draws from (non-IID).
-    classes: Vec<u32>,
+    source: Box<dyn DataSource>,
+    /// Stream class frequencies |S_y| observed so far (Eq. 2's input).
     seen_per_class: Vec<u64>,
-    rng: Xoshiro256,
-    next_id: u64,
 }
 
 impl FlDevice {
-    fn stream_round(&mut self, task: &SynthTask, v: usize) -> Vec<Sample> {
-        (0..v)
-            .map(|_| {
-                let y = self.classes[self.rng.index(self.classes.len())];
-                let id = self.next_id;
-                self.next_id += 1;
-                let s = task.draw_class(id, y, &mut self.rng);
-                self.seen_per_class[y as usize] += 1;
-                s
-            })
-            .collect()
+    fn stream_round(&mut self, v: usize) -> Vec<Sample> {
+        let arrivals = self.source.next_round(v);
+        for s in &arrivals {
+            self.seen_per_class[s.label as usize] += 1;
+        }
+        arrivals
     }
 }
 
-/// Run the FL experiment; returns the global-model run record.
+/// Builder for a federated run — the FL counterpart of the coordinator's
+/// `SessionBuilder`: pluggable per-device data sources and per-comm-round
+/// observers around one canonical FedAvg loop.
+pub struct FlBuilder {
+    cfg: FlConfig,
+    sources: Option<Vec<Box<dyn DataSource>>>,
+    observers: Vec<Box<dyn RoundObserver>>,
+}
+
+impl FlBuilder {
+    pub fn new(cfg: FlConfig) -> FlBuilder {
+        FlBuilder {
+            cfg,
+            sources: None,
+            observers: Vec::new(),
+        }
+    }
+
+    /// Replace the default non-IID device partition with explicit
+    /// per-device sources (must provide exactly `num_devices` of them).
+    pub fn device_sources(mut self, sources: Vec<Box<dyn DataSource>>) -> Self {
+        self.sources = Some(sources);
+        self
+    }
+
+    /// Attach a per-communication-round observer. `on_round` fires each
+    /// comm round (train-loss only — there is no device sim in FL),
+    /// `on_eval` at each eval checkpoint; `Control::Stop` ends the run.
+    pub fn observe(mut self, observer: impl RoundObserver + 'static) -> Self {
+        self.observers.push(Box::new(observer));
+        self
+    }
+
+    /// Run the federated experiment; returns the global-model run record.
+    pub fn run(self) -> Result<RunRecord> {
+        let FlBuilder { cfg, sources, mut observers } = self;
+        let base = &cfg.base;
+        let task = SynthTask::for_model(&base.model, base.seed);
+        let test = task.test_set(base.test_size, base.seed);
+        let num_classes = task.num_classes();
+
+        // device sources: explicit, or the paper's non-IID partition
+        // (device d sees classes {d, d+1, .., d+k-1} mod C)
+        let sources: Vec<Box<dyn DataSource>> = match sources {
+            Some(s) => {
+                if s.len() != cfg.num_devices {
+                    return Err(Error::Config(format!(
+                        "{} device sources for {} devices",
+                        s.len(),
+                        cfg.num_devices
+                    )));
+                }
+                for (d, src) in s.iter().enumerate() {
+                    if src.task().num_classes() != num_classes {
+                        return Err(Error::Config(format!(
+                            "device {d} source has {} classes, task has {num_classes}",
+                            src.task().num_classes()
+                        )));
+                    }
+                }
+                s
+            }
+            None => {
+                if cfg.classes_per_device > num_classes {
+                    return Err(Error::Config(format!(
+                        "classes_per_device {} > classes {}",
+                        cfg.classes_per_device, num_classes
+                    )));
+                }
+                (0..cfg.num_devices)
+                    .map(|d| {
+                        let classes: Vec<u32> = (0..cfg.classes_per_device)
+                            .map(|i| ((d + i) % num_classes) as u32)
+                            .collect();
+                        // seed layout matches the pre-session orchestrator,
+                        // so default runs reproduce bit-for-bit
+                        ClassSubsetSource::new(
+                            task.clone(),
+                            classes,
+                            base.seed ^ (0xD0 + d as u64),
+                        )
+                        .map(|s| Box::new(s) as Box<dyn DataSource>)
+                    })
+                    .collect::<Result<Vec<_>>>()?
+            }
+        };
+
+        let mut rt = ModelRuntime::load(&base.artifacts_dir, &base.model, RuntimeRole::Full)?;
+        let mut global = rt.set.init_params()?;
+        let mut strategy = make_strategy(base.method);
+        let mut orchestrator_rng = Xoshiro256::seed_from_u64(base.seed ^ 0xF1_F1);
+
+        let mut devices: Vec<FlDevice> = sources
+            .into_iter()
+            .map(|source| FlDevice {
+                source,
+                seen_per_class: vec![0; num_classes],
+            })
+            .collect();
+
+        let mut record = RunRecord::new(base.method.name(), &base.model);
+        let sw = Stopwatch::start();
+        let per_round = (cfg.num_devices as f64 * cfg.participation).round().max(1.0) as usize;
+
+        for round in 0..cfg.comm_rounds {
+            let chosen = orchestrator_rng.sample_indices(cfg.num_devices, per_round);
+            let mut acc: Vec<f64> = vec![0.0; global.len()];
+            let mut last_loss = 0.0f32;
+            for &d in &chosen {
+                let dev = &mut devices[d];
+                let arrivals = dev.stream_round(base.stream_per_round);
+                // local selection over the device's stream
+                let n = arrivals.len().min(rt.set.meta.cand_max);
+                let refs: Vec<&Sample> = arrivals[..n].iter().collect();
+                rt.set_params(global.clone())?;
+                let importance = if base.method.needs_importance() {
+                    Some(rt.importance(&refs)?)
+                } else {
+                    None
+                };
+                let probe = if base.method.needs_forward() {
+                    Some(rt.probe(&refs)?)
+                } else {
+                    None
+                };
+                let ctx = SelectionContext {
+                    samples: &refs,
+                    seen_per_class: &dev.seen_per_class,
+                    num_classes,
+                    batch: base.batch_size,
+                    importance: importance.as_ref(),
+                    probe: probe.as_ref(),
+                    features: None,
+                    feature_dim: 0,
+                };
+                let sel = strategy.select(&ctx, &mut orchestrator_rng)?;
+                let batch: Vec<&Sample> = sel.indices.iter().map(|&i| refs[i]).collect();
+                // local training (weighted: unbiased estimator)
+                for _ in 0..cfg.local_iters {
+                    last_loss = rt.train_step_weighted(&batch, &sel.weights, base.lr)?;
+                }
+                for (a, &p) in acc.iter_mut().zip(rt.params()) {
+                    *a += p as f64;
+                }
+            }
+            // FedAvg
+            for (g, a) in global.iter_mut().zip(&acc) {
+                *g = (a / chosen.len() as f64) as f32;
+            }
+
+            let mut stop = false;
+            let outcome = RoundOutcome {
+                round,
+                train_loss: last_loss,
+                ..Default::default()
+            };
+            for obs in observers.iter_mut() {
+                stop |= obs.on_round(&outcome) == Control::Stop;
+            }
+
+            if base.eval_every > 0 && (round + 1) % base.eval_every == 0 {
+                rt.set_params(global.clone())?;
+                let rep = rt.evaluate(&test)?;
+                let point = CurvePoint {
+                    round: round + 1,
+                    device_ms: 0.0,
+                    host_ms: sw.elapsed_ms(),
+                    train_loss: last_loss as f64,
+                    test_loss: rep.loss,
+                    test_accuracy: rep.accuracy,
+                };
+                for obs in observers.iter_mut() {
+                    stop |= obs.on_eval(&point) == Control::Stop;
+                }
+                record.curve.push(point);
+            }
+            if stop {
+                break;
+            }
+        }
+
+        rt.set_params(global)?;
+        let final_eval = rt.evaluate(&test)?;
+        record.final_accuracy = final_eval.accuracy;
+        record.total_host_ms = sw.elapsed_ms();
+        Ok(record)
+    }
+}
+
+/// Run the FL experiment with the paper's default device partition;
+/// returns the global-model run record.
 pub fn run(cfg: &FlConfig) -> Result<RunRecord> {
-    let base = &cfg.base;
-    let task = SynthTask::for_model(&base.model, base.seed);
-    let test = task.test_set(base.test_size, base.seed);
-    let num_classes = task.num_classes();
-    if cfg.classes_per_device > num_classes {
-        return Err(Error::Config(format!(
-            "classes_per_device {} > classes {}",
-            cfg.classes_per_device, num_classes
-        )));
-    }
-
-    let mut rt = ModelRuntime::load(&base.artifacts_dir, &base.model, RuntimeRole::Full)?;
-    let mut global = rt.set.init_params()?;
-    let mut strategy = make_strategy(base.method);
-    let mut orchestrator_rng = Xoshiro256::seed_from_u64(base.seed ^ 0xF1_F1);
-
-    // non-IID partition: device d sees classes {d, d+1, .., d+k-1} mod C
-    let mut devices: Vec<FlDevice> = (0..cfg.num_devices)
-        .map(|d| FlDevice {
-            classes: (0..cfg.classes_per_device)
-                .map(|i| ((d + i) % num_classes) as u32)
-                .collect(),
-            seen_per_class: vec![0; num_classes],
-            rng: Xoshiro256::seed_from_u64(base.seed ^ (0xD0 + d as u64)),
-            next_id: 0,
-        })
-        .collect();
-
-    let mut record = RunRecord::new(base.method.name(), &base.model);
-    let sw = Stopwatch::start();
-    let per_round = (cfg.num_devices as f64 * cfg.participation).round().max(1.0) as usize;
-
-    for round in 0..cfg.comm_rounds {
-        let chosen = orchestrator_rng.sample_indices(cfg.num_devices, per_round);
-        let mut acc: Vec<f64> = vec![0.0; global.len()];
-        let mut last_loss = 0.0f32;
-        for &d in &chosen {
-            let dev = &mut devices[d];
-            let arrivals = dev.stream_round(&task, base.stream_per_round);
-            // local selection over the device's stream
-            let n = arrivals.len().min(rt.set.meta.cand_max);
-            let refs: Vec<&Sample> = arrivals[..n].iter().collect();
-            rt.set_params(global.clone())?;
-            let importance = if base.method.needs_importance() {
-                Some(rt.importance(&refs)?)
-            } else {
-                None
-            };
-            let probe = if base.method.needs_forward() {
-                Some(rt.probe(&refs)?)
-            } else {
-                None
-            };
-            let ctx = SelectionContext {
-                samples: &refs,
-                seen_per_class: &dev.seen_per_class,
-                num_classes,
-                batch: base.batch_size,
-                importance: importance.as_ref(),
-                probe: probe.as_ref(),
-                features: None,
-                feature_dim: 0,
-            };
-            let sel = strategy.select(&ctx, &mut orchestrator_rng)?;
-            let batch: Vec<&Sample> = sel.indices.iter().map(|&i| refs[i]).collect();
-            // local training (weighted: unbiased estimator)
-            for _ in 0..cfg.local_iters {
-                last_loss = rt.train_step_weighted(&batch, &sel.weights, base.lr)?;
-            }
-            for (a, &p) in acc.iter_mut().zip(rt.params()) {
-                *a += p as f64;
-            }
-        }
-        // FedAvg
-        for (g, a) in global.iter_mut().zip(&acc) {
-            *g = (a / chosen.len() as f64) as f32;
-        }
-
-        if base.eval_every > 0 && (round + 1) % base.eval_every == 0 {
-            rt.set_params(global.clone())?;
-            let rep = rt.evaluate(&test)?;
-            record.curve.push(CurvePoint {
-                round: round + 1,
-                device_ms: 0.0,
-                host_ms: sw.elapsed_ms(),
-                train_loss: last_loss as f64,
-                test_loss: rep.loss,
-                test_accuracy: rep.accuracy,
-            });
-        }
-    }
-
-    rt.set_params(global)?;
-    let final_eval = rt.evaluate(&test)?;
-    record.final_accuracy = final_eval.accuracy;
-    record.total_host_ms = sw.elapsed_ms();
-    Ok(record)
+    FlBuilder::new(cfg.clone()).run()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::{presets, Method};
+    use crate::coordinator::session::observers::EarlyStop;
+    use crate::data::ReplaySource;
 
     fn have_artifacts() -> bool {
         std::path::Path::new("artifacts/mlp/meta.json").exists()
@@ -229,13 +328,87 @@ mod tests {
         assert!(covered.iter().all(|&c| c));
     }
 
+    // source/partition validation precedes artifact loading, so these
+    // two need no artifact gate
     #[test]
     fn rejects_bad_partition() {
-        if !have_artifacts() {
-            return;
-        }
         let mut cfg = tiny_fl(Method::Rs);
         cfg.classes_per_device = 99;
         assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_source_count() {
+        let cfg = tiny_fl(Method::Rs);
+        let task = SynthTask::for_model("mlp", cfg.base.seed);
+        let one: Vec<Box<dyn DataSource>> = vec![Box::new(
+            ClassSubsetSource::new(task, vec![0], 1).unwrap(),
+        )];
+        assert!(FlBuilder::new(cfg).device_sources(one).run().is_err());
+    }
+
+    /// Custom per-device data sources through the FL loop: each device
+    /// replays a small captured pool (non-default `DataSource` impl).
+    #[test]
+    fn fl_with_replay_device_sources() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = tiny_fl(Method::Rs);
+        let task = SynthTask::for_model("mlp", cfg.base.seed);
+        let sources: Vec<Box<dyn DataSource>> = (0..cfg.num_devices)
+            .map(|d| {
+                let mut sub = ClassSubsetSource::new(
+                    task.clone(),
+                    vec![(d % 6) as u32, ((d + 1) % 6) as u32],
+                    100 + d as u64,
+                )
+                .unwrap();
+                let replay =
+                    ReplaySource::capture(&mut sub, cfg.base.stream_per_round).unwrap();
+                Box::new(replay) as Box<dyn DataSource>
+            })
+            .collect();
+        let rec = FlBuilder::new(cfg)
+            .device_sources(sources)
+            .run()
+            .unwrap();
+        assert_eq!(rec.curve.len(), 2);
+        assert!(rec.final_accuracy.is_finite());
+    }
+
+    /// Observers hook the comm-round loop: an early stop at the first
+    /// eval checkpoint halves the run.
+    #[test]
+    fn fl_observer_early_stop() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = tiny_fl(Method::Rs); // eval_every = 2, comm_rounds = 4
+        let rec = FlBuilder::new(cfg)
+            .observe(EarlyStop::at_accuracy(0.0))
+            .run()
+            .unwrap();
+        assert_eq!(rec.curve.len(), 1, "stopped at the first checkpoint");
+        assert!(rec.final_accuracy.is_finite());
+    }
+
+    /// The default partition must match the pre-builder orchestrator's
+    /// device streams (seed layout preserved): first arrivals of device 0
+    /// come from classes {0,1,2} with the documented RNG stream.
+    #[test]
+    fn default_partition_streams_are_deterministic() {
+        let cfg = tiny_fl(Method::Rs);
+        let task = SynthTask::for_model("mlp", cfg.base.seed);
+        let mut a =
+            ClassSubsetSource::new(task.clone(), vec![0, 1, 2], cfg.base.seed ^ 0xD0).unwrap();
+        let mut b =
+            ClassSubsetSource::new(task, vec![0, 1, 2], cfg.base.seed ^ 0xD0).unwrap();
+        let (ra, rb) = (a.next_round(20), b.next_round(20));
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(*x.x, *y.x);
+        }
+        assert!(ra.iter().all(|s| s.label < 3));
     }
 }

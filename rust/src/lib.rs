@@ -14,17 +14,22 @@
 //!
 //! Layout:
 //! - [`util`] — substrates replacing unavailable crates (PRNG, JSON, CLI,
-//!   stats, micro-bench, mini property testing, logging).
+//!   stats, micro-bench, mini property testing, logging, sync cells).
 //! - [`config`] — experiment/run configuration.
-//! - [`data`] — synthetic tasks, streaming source, stores and buffers.
+//! - [`data`] — synthetic tasks, the pluggable [`data::DataSource`] seam
+//!   (stream / replay / non-IID class-subset sources), stores and buffers.
 //! - [`runtime`] — PJRT artifact loading and typed model execution.
 //! - [`selection`] — C-IS and all paper baselines (RS/IS/LL/HL/CE/OCS/Camel).
 //! - [`filter`] — the coarse-grained first stage.
-//! - [`coordinator`] — pipelined / sequential training loops.
+//! - [`coordinator`] — the session API: `SessionBuilder` → `Session`
+//!   drives one canonical round loop over a sequential or pipelined
+//!   `ExecBackend`, with `RoundObserver` hooks; `sequential`/`pipeline`
+//!   remain as deprecated shims.
 //! - [`device`] — edge-device timing, memory and energy simulation.
-//! - [`fl`] — federated-learning orchestration (paper Appendix B).
+//! - [`fl`] — federated-learning orchestration (paper Appendix B), built
+//!   on the same data-source/observer seams via `fl::FlBuilder`.
 //! - [`metrics`] — trackers and result emission.
-//! - [`exp`] — one module per paper table/figure.
+//! - [`exp`] — one module per paper table/figure, all driving sessions.
 
 pub mod config;
 pub mod coordinator;

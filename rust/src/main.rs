@@ -13,8 +13,8 @@
 //!   titan exp fig5a --fast
 //!   titan verify
 
-use titan::config::{presets, Method, RunConfig};
-use titan::coordinator::{pipeline, sequential};
+use titan::config::{presets, RunConfig};
+use titan::coordinator::{ExecBackend, SessionBuilder};
 use titan::exp;
 use titan::metrics::write_result;
 use titan::runtime::artifact::ArtifactSet;
@@ -59,6 +59,7 @@ fn print_usage() {
     println!("  run     --model <m> --method <rs|is|ll|hl|ce|ocs|camel|cis|titan>");
     println!("          --rounds N --batch N --candidates N --seed N [--sequential]");
     println!("          [--feature-noise F | --label-noise F]");
+    println!("          (any method may run pipelined; --sequential opts out)");
     println!("  exp     <id> [--fast] [--models a,b|all] [--seed N]   (exp list: ids)");
     println!("  fl      --model <m> --method <m> [--fast]");
     println!("  models  [--artifacts DIR]");
@@ -68,14 +69,16 @@ fn print_usage() {
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg: RunConfig = presets::base(&args.get_str("model", "mlp")).apply_args(args)?;
     cfg.validate()?;
+    // pipelining is method-agnostic: any selection method runs through
+    // the pipelined backend when requested (pass --sequential to opt out;
+    // the old CLI silently downgraded non-Titan methods to sequential)
+    let backend = ExecBackend::for_config(&cfg);
     println!("config: {}", cfg.to_json().to_string_compact());
-    let (record, outcomes) = if cfg.pipeline && cfg.method == Method::Titan {
-        pipeline::run(&cfg)?
-    } else {
-        let mut c = cfg.clone();
-        c.pipeline = false;
-        sequential::run(&c)?
-    };
+    println!(
+        "backend: {}",
+        if backend.is_pipelined() { "pipelined" } else { "sequential" }
+    );
+    let (record, outcomes) = SessionBuilder::new(cfg.clone()).backend(backend).run()?;
     println!(
         "finished {} rounds: final_acc={:.2}% device_time={:.1}s host_time={:.1}s",
         outcomes.len(),

@@ -105,4 +105,67 @@ mod tests {
         h.join().unwrap();
         assert_eq!(s.take(), Some(99));
     }
+
+    /// Overwrite under contention: several producers race a consumer.
+    /// Every observed value must be one somebody published, values from a
+    /// single producer must be observed in publish order (a later take
+    /// never yields an older value from the same producer), and once all
+    /// producers finish, the slot holds exactly one final value.
+    #[test]
+    fn overwrite_under_contention() {
+        const PRODUCERS: u64 = 4;
+        const PER_PRODUCER: u64 = 500;
+        let s = Arc::new(Latest::<(u64, u64)>::new()); // (producer, seq)
+        let handles: Vec<_> = (0..PRODUCERS)
+            .map(|p| {
+                let slot = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    for i in 0..PER_PRODUCER {
+                        slot.publish((p, i));
+                    }
+                })
+            })
+            .collect();
+        // consume concurrently, tracking the last seq seen per producer
+        let mut last_seq = [None::<u64>; PRODUCERS as usize];
+        let mut observed = 0usize;
+        while handles.iter().any(|h| !h.is_finished()) {
+            if let Some((p, i)) = s.take() {
+                assert!(p < PRODUCERS && i < PER_PRODUCER, "({p},{i})");
+                if let Some(prev) = last_seq[p as usize] {
+                    assert!(i > prev, "producer {p} went backwards: {prev} -> {i}");
+                }
+                last_seq[p as usize] = Some(i);
+                observed += 1;
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // after the burst: at most the single freshest value remains
+        let final_v = s.take();
+        assert!(final_v.is_some() || observed > 0, "nothing ever observed");
+        assert!(s.take().is_none(), "slot must hold at most one value");
+        assert!(s.is_empty());
+    }
+
+    /// The slot is storage, not a channel: a value published by a sender
+    /// that has since dropped (its thread gone, its Arc released) is still
+    /// takeable.
+    #[test]
+    fn take_after_sender_drop() {
+        let s = Arc::new(Latest::<Vec<u32>>::new());
+        {
+            let p = Arc::clone(&s);
+            std::thread::spawn(move || {
+                p.publish(vec![1, 2, 3]);
+                // p dropped here: the producer's handle on the slot is gone
+            })
+            .join()
+            .unwrap();
+        }
+        assert_eq!(Arc::strong_count(&s), 1, "sender fully dropped");
+        assert_eq!(s.take(), Some(vec![1, 2, 3]));
+        assert!(s.take().is_none());
+    }
 }

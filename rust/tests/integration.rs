@@ -1,12 +1,15 @@
 //! Cross-module integration tests: full training runs through the real
 //! PJRT artifacts, pipeline-vs-sequential equivalences, and end-to-end
-//! learning signals for Titan vs baselines.
+//! learning signals for Titan vs baselines — all driven through the
+//! session API (`SessionBuilder`), with one pin on the deprecated shims.
 //!
 //! These tests need `make artifacts`; they skip (with a note) otherwise so
 //! `cargo test` stays green on a fresh checkout.
 
 use titan::config::{presets, Method, NoiseKind, RunConfig};
-use titan::coordinator::{pipeline, sequential};
+use titan::coordinator::session::observers::EarlyStop;
+use titan::coordinator::SessionBuilder;
+use titan::data::{DataSource, ReplaySource, StreamSource, SynthTask};
 use titan::device::idle::IdleTrace;
 
 fn have_artifacts() -> bool {
@@ -25,13 +28,24 @@ fn base(method: Method, rounds: usize) -> RunConfig {
     c
 }
 
+fn run_pipelined(cfg: &RunConfig) -> (titan::metrics::RunRecord, Vec<titan::coordinator::RoundOutcome>) {
+    SessionBuilder::new(cfg.clone())
+        .pipelined(IdleTrace::Constant(1.0))
+        .run()
+        .unwrap()
+}
+
+fn run_sequential(cfg: &RunConfig) -> (titan::metrics::RunRecord, Vec<titan::coordinator::RoundOutcome>) {
+    SessionBuilder::new(cfg.clone()).sequential().run().unwrap()
+}
+
 #[test]
 fn titan_end_to_end_learns() {
     if !have_artifacts() {
         return;
     }
     let cfg = base(Method::Titan, 40);
-    let (record, outcomes) = pipeline::run(&cfg).unwrap();
+    let (record, outcomes) = run_pipelined(&cfg);
     assert_eq!(outcomes.len(), 40);
     // learning signal: accuracy above chance (1/6) by the end
     assert!(
@@ -62,13 +76,35 @@ fn all_methods_complete_short_runs() {
     for method in Method::ALL {
         let mut cfg = base(method, 5);
         cfg.pipeline = false;
-        let (record, outcomes) = sequential::run(&cfg).unwrap();
+        let (record, outcomes) = run_sequential(&cfg);
         assert_eq!(outcomes.len(), 5, "{method:?}");
         assert!(record.final_accuracy.is_finite(), "{method:?}");
         assert!(
             outcomes.iter().all(|o| o.train_loss.is_finite()),
             "{method:?}"
         );
+    }
+}
+
+#[test]
+fn all_methods_complete_pipelined_runs() {
+    // pipelining is method-agnostic under the session API: every method
+    // must also complete through the selector thread
+    if !have_artifacts() {
+        return;
+    }
+    for method in Method::ALL {
+        let cfg = base(method, 4);
+        let (record, outcomes) = run_pipelined(&cfg);
+        assert_eq!(outcomes.len(), 4, "{method:?}");
+        assert!(record.final_accuracy.is_finite(), "{method:?}");
+        for o in &outcomes {
+            // lanes overlap on the device clock
+            assert!(
+                o.device_wall_ms >= o.device_cpu_ms.max(o.device_gpu_ms) - 1e-9,
+                "{method:?}"
+            );
+        }
     }
 }
 
@@ -82,16 +118,39 @@ fn pipeline_and_sequential_agree_on_device_lane_costs() {
     // syncs params with one-round delay, so train losses differ — but the
     // GPU lane ops of round 0 (selection under init params) must match.
     let cfg = base(Method::Titan, 3);
-    let (_, pipe) = pipeline::run(&cfg).unwrap();
+    let (_, pipe) = run_pipelined(&cfg);
     let mut seq_cfg = cfg.clone();
     seq_cfg.pipeline = false;
-    let (_, seq) = sequential::run(&seq_cfg).unwrap();
+    let (_, seq) = run_sequential(&seq_cfg);
     assert_eq!(pipe[0].selector.candidates, seq[0].selector.candidates);
     assert_eq!(pipe[0].selector.arrivals, seq[0].selector.arrivals);
     for (p, s) in pipe.iter().zip(seq.iter()) {
         assert!(p.device_wall_ms <= s.device_wall_ms + 1e-9,
             "pipelined round must not be slower on the device clock");
     }
+}
+
+#[test]
+fn deprecated_shims_match_session_runs() {
+    // the kept shims must be byte-equivalent to the session API they wrap
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base(Method::Rs, 6);
+    cfg.pipeline = false;
+    #[allow(deprecated)]
+    let (shim, _) = titan::coordinator::sequential::run(&cfg).unwrap();
+    let (sess, _) = run_sequential(&cfg);
+    assert_eq!(shim.final_accuracy, sess.final_accuracy);
+    let a: Vec<f64> = shim.curve.iter().map(|p| p.test_accuracy).collect();
+    let b: Vec<f64> = sess.curve.iter().map(|p| p.test_accuracy).collect();
+    assert_eq!(a, b);
+
+    let ti = base(Method::Titan, 4);
+    #[allow(deprecated)]
+    let (shim, _) = titan::coordinator::pipeline::run(&ti).unwrap();
+    let (sess, _) = run_pipelined(&ti);
+    assert_eq!(shim.final_accuracy, sess.final_accuracy);
 }
 
 #[test]
@@ -108,8 +167,8 @@ fn titan_early_convergence_advantage() {
     rs_cfg.eval_every = 10;
     let mut ti_cfg = base(Method::Titan, 30);
     ti_cfg.eval_every = 10;
-    let (rs, _) = sequential::run(&rs_cfg).unwrap();
-    let (ti, _) = pipeline::run(&ti_cfg).unwrap();
+    let (rs, _) = run_sequential(&rs_cfg);
+    let (ti, _) = run_pipelined(&ti_cfg);
     // compare the best of the first two checkpoints: a single round-10
     // eval point carries ±0.04 seed noise on the synthetic task
     let early = |r: &titan::metrics::RunRecord| {
@@ -146,7 +205,7 @@ fn noisy_streams_complete_and_learn() {
     ] {
         let mut cfg = base(Method::Titan, 25);
         cfg.noise = noise;
-        let (record, _) = pipeline::run(&cfg).unwrap();
+        let (record, _) = run_pipelined(&cfg);
         assert!(record.final_accuracy > 1.0 / 6.0 - 0.02, "{noise:?}");
     }
 }
@@ -159,7 +218,10 @@ fn idle_budget_trace_respected_through_pipeline() {
     let cfg = base(Method::Titan, 8);
     let trace = IdleTrace::Sine { min: 0.2, max: 1.0, period: 4.0 };
     let budgets: Vec<usize> = (0..8).map(|r| trace.candidate_budget(r, 30)).collect();
-    let (_, outcomes) = pipeline::run_with_idle(&cfg, trace).unwrap();
+    let (_, outcomes) = SessionBuilder::new(cfg)
+        .pipelined(trace)
+        .run()
+        .unwrap();
     for (o, &b) in outcomes.iter().zip(&budgets) {
         assert!(
             o.selector.candidates <= b,
@@ -171,6 +233,31 @@ fn idle_budget_trace_respected_through_pipeline() {
 }
 
 #[test]
+fn replay_source_with_early_stop_session() {
+    // a non-default DataSource + observer through the full stack: Titan
+    // training from a replayed pool, stopped at the first checkpoint that
+    // clears chance accuracy
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base(Method::Titan, 30);
+    cfg.eval_every = 5;
+    let task = SynthTask::for_model(&cfg.model, cfg.seed);
+    let mut stream = StreamSource::new(task, cfg.seed, cfg.noise);
+    let replay = ReplaySource::capture(&mut stream, 400).unwrap();
+    assert_eq!(replay.task().num_classes(), 6);
+    let (record, outcomes) = SessionBuilder::new(cfg)
+        .pipelined(IdleTrace::Constant(1.0))
+        .source(replay)
+        .observe(EarlyStop::at_accuracy(1.0 / 6.0))
+        .run()
+        .unwrap();
+    assert!(!outcomes.is_empty());
+    assert!(outcomes.len() <= 30);
+    assert!(record.final_accuracy.is_finite());
+}
+
+#[test]
 fn batch25_artifact_trains() {
     if !have_artifacts() {
         return;
@@ -179,7 +266,7 @@ fn batch25_artifact_trains() {
     cfg.batch_size = 25;
     cfg.candidate_size = 30;
     cfg.pipeline = false;
-    let (record, outcomes) = sequential::run(&cfg).unwrap();
+    let (record, outcomes) = run_sequential(&cfg);
     assert_eq!(outcomes.len(), 4);
     assert!(record.final_accuracy.is_finite());
 }
@@ -195,7 +282,7 @@ fn conv_variant_end_to_end_if_built() {
     cfg.rounds = 6;
     cfg.test_size = 200;
     cfg.eval_every = 3;
-    let (record, outcomes) = pipeline::run(&cfg).unwrap();
+    let (record, outcomes) = run_pipelined(&cfg);
     assert_eq!(outcomes.len(), 6);
     assert!(record.final_accuracy.is_finite());
     assert!(outcomes[0].selector.candidates <= cfg.candidate_size);

@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# CI gate: the full local verification ladder, cheapest first.
+#
+#   1. cargo fmt --check          formatting drift
+#   2. cargo clippy -D warnings   lints (all targets: lib, bins, tests, benches)
+#   3. tier-1 verify              cargo build --release && cargo test -q
+#   4. bench smoke                every bench target in fast mode
+#      (TITAN_BENCH_FAST=1 via scripts/bench_smoke.sh; catches bench
+#      bit-rot without paying full measurement windows)
+#
+# Usage: scripts/ci.sh [--no-bench]
+set -euo pipefail
+script_dir="$(cd "$(dirname "$0")" && pwd)"
+repo_root="$(dirname "$script_dir")"
+cd "$repo_root/rust"
+
+run_bench=1
+if [ "${1:-}" = "--no-bench" ]; then
+  run_bench=0
+fi
+
+echo "== fmt =="
+cargo fmt --check
+
+echo "== clippy =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== tier-1 verify =="
+cargo build --release
+cargo test -q
+
+if [ "$run_bench" = 1 ]; then
+  echo "== bench smoke (fast mode) =="
+  "$script_dir/bench_smoke.sh"
+fi
+
+echo "== ci green =="
