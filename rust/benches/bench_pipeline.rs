@@ -6,6 +6,7 @@
 use std::sync::Arc;
 
 use titan::config::{presets, Method};
+use titan::coordinator::host::FleetBuilder;
 use titan::coordinator::SessionBuilder;
 use titan::device::idle::IdleTrace;
 use titan::util::bench::Bencher;
@@ -60,6 +61,21 @@ fn main() {
             .pipelined(IdleTrace::Constant(1.0))
             .run()
             .expect("pipe")
+    });
+    // fleet scheduling overhead: 3 sessions interleaved round-by-round on
+    // the host scheduler vs the 3 solo runs above (the delta over 3x
+    // run5rounds/sequential is the per-round scheduler cost — PERF.md)
+    b.bench("run5rounds/fleet3_round_robin", || {
+        let mut fleet = FleetBuilder::new();
+        for i in 0..3u64 {
+            let mut cfg = seq_cfg.clone();
+            cfg.seed = cfg.seed.wrapping_add(i);
+            fleet = fleet.session(
+                format!("s{i}"),
+                SessionBuilder::new(cfg).build().expect("build"),
+            );
+        }
+        fleet.run().expect("fleet")
     });
     b.finish();
 }

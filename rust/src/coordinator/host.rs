@@ -1,0 +1,617 @@
+//! The host fleet runtime — many device sessions multiplexed on one host.
+//!
+//! The ROADMAP north star is a host serving millions of device sessions;
+//! the prerequisite is that no session may own a thread for its whole
+//! run. [`crate::coordinator::session::Session`] is a step-driven state
+//! machine, so a [`Fleet`] can own N boxed sessions and interleave them
+//! **round-by-round** on one scheduler thread: each scheduler tick picks
+//! one ready session under a pluggable [`SchedPolicy`] and advances it by
+//! exactly one [`StepEvent`].
+//!
+//! Sessions are fully independent (own data source, own engines, own
+//! device sim), so the interleaving order cannot perturb any session's
+//! output: for every session that is reproducible solo — any
+//! sequential-backend session, and pipelined sessions with
+//! parameter-independent selection — the per-session [`RunRecord`] in a
+//! fleet is identical to the solo record, under every policy (pinned by
+//! the fleet integration tests). Pipelined sessions with
+//! parameter-*dependent* selection are timing-sensitive by design (the
+//! latest-only param slot; see the session module docs), so their
+//! records vary run-to-run with or without a fleet around them.
+//!
+//! Shared host accounting rolls up into a [`FleetRecord`]: aggregate
+//! simulated device time and ops, energy, the summed peak-memory estimate
+//! (all sessions are resident concurrently), and the scheduler's own
+//! overhead (host wall time *not* spent inside `Session::step` — the
+//! pick + bookkeeping + observer fan-out cost per interleaved round,
+//! tracked in PERF.md).
+//!
+//! ```no_run
+//! use titan::config::{presets, Method};
+//! use titan::coordinator::host::{FewestRoundsFirst, FleetBuilder};
+//! use titan::coordinator::SessionBuilder;
+//!
+//! let mut fleet = FleetBuilder::new().policy(FewestRoundsFirst);
+//! for (i, method) in [Method::Titan, Method::Rs].into_iter().enumerate() {
+//!     let mut cfg = presets::table1("mlp", method);
+//!     cfg.pipeline = false;
+//!     cfg.seed += i as u64;
+//!     fleet = fleet.session(format!("dev{i}"), SessionBuilder::new(cfg).build()?);
+//! }
+//! let record = fleet.run()?;
+//! println!("{} rounds interleaved", record.rounds_executed);
+//! # Ok::<(), titan::Error>(())
+//! ```
+
+use crate::coordinator::session::{Session, StepEvent};
+use crate::coordinator::RoundOutcome;
+use crate::metrics::RunRecord;
+use crate::util::json::Json;
+use crate::util::timer::Stopwatch;
+use crate::{Error, Result};
+
+/// Per-task scheduling bookkeeping the policies decide on. The driver
+/// (fleet or FL orchestrator) maintains one per task.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TaskState {
+    /// Rounds this task has completed.
+    pub rounds_done: usize,
+    /// Scheduler picks since this task last ran (aged by the driver,
+    /// reset to 0 when the task runs).
+    pub staleness: usize,
+}
+
+/// A scheduling policy over ready tasks.
+///
+/// `ready` is non-empty and holds indices into `states`; `pick` must
+/// return one of them, and must be **deterministic** (no wall clock, no
+/// RNG) so fleet runs replay exactly. Policies may keep internal state
+/// (e.g. the round-robin cursor).
+pub trait SchedPolicy {
+    /// Pick the next task to run among `ready`.
+    fn pick(&mut self, states: &[TaskState], ready: &[usize]) -> usize;
+
+    /// Display name for records and logs.
+    fn name(&self) -> &'static str;
+}
+
+/// Cyclic fairness: the smallest ready index strictly after the last
+/// pick, wrapping to the smallest ready index.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundRobin {
+    last: Option<usize>,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin { last: None }
+    }
+}
+
+impl SchedPolicy for RoundRobin {
+    fn pick(&mut self, _states: &[TaskState], ready: &[usize]) -> usize {
+        let next = self
+            .last
+            .and_then(|l| ready.iter().copied().filter(|&i| i > l).min())
+            .unwrap_or_else(|| ready.iter().copied().min().expect("ready is non-empty"));
+        self.last = Some(next);
+        next
+    }
+
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+}
+
+/// Progress fairness: the ready task with the fewest completed rounds
+/// (ties: smallest index). Keeps heterogeneous-length sessions aligned.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FewestRoundsFirst;
+
+impl SchedPolicy for FewestRoundsFirst {
+    fn pick(&mut self, states: &[TaskState], ready: &[usize]) -> usize {
+        ready
+            .iter()
+            .copied()
+            .min_by_key(|&i| (states[i].rounds_done, i))
+            .expect("ready is non-empty")
+    }
+
+    fn name(&self) -> &'static str {
+        "fewest-rounds-first"
+    }
+}
+
+/// Staleness priority: the ready task that has waited the most scheduler
+/// picks since it last ran (ties: smallest index). Bounds per-session
+/// latency when the ready set churns.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StalenessPriority;
+
+impl SchedPolicy for StalenessPriority {
+    fn pick(&mut self, states: &[TaskState], ready: &[usize]) -> usize {
+        ready
+            .iter()
+            .copied()
+            .min_by_key(|&i| (std::cmp::Reverse(states[i].staleness), i))
+            .expect("ready is non-empty")
+    }
+
+    fn name(&self) -> &'static str {
+        "priority-by-staleness"
+    }
+}
+
+/// Pick under `policy` and validate the choice against `ready`.
+///
+/// The shared dispatch seam for every policy consumer (the session
+/// [`Fleet`] and the FL orchestrator): a misbehaving custom policy must
+/// fail loudly here instead of hanging a drain loop or indexing out of
+/// bounds in release builds, where a `debug_assert!` would vanish.
+pub fn pick_validated(
+    policy: &mut dyn SchedPolicy,
+    states: &[TaskState],
+    ready: &[usize],
+) -> Result<usize> {
+    let idx = policy.pick(states, ready);
+    if !ready.contains(&idx) {
+        return Err(Error::Pipeline(format!(
+            "policy {:?} picked non-ready task {idx} (ready: {ready:?})",
+            policy.name()
+        )));
+    }
+    Ok(idx)
+}
+
+/// Parse a policy by its CLI name.
+pub fn parse_policy(name: &str) -> Result<Box<dyn SchedPolicy>> {
+    match name {
+        "rr" | "round-robin" => Ok(Box::new(RoundRobin::new())),
+        "fewest" | "fewest-rounds-first" => Ok(Box::new(FewestRoundsFirst)),
+        "staleness" | "priority-by-staleness" => Ok(Box::new(StalenessPriority)),
+        other => Err(Error::Config(format!(
+            "unknown scheduling policy {other:?} (rr|fewest|staleness)"
+        ))),
+    }
+}
+
+/// Fleet-level observer: sees every session's rounds in the order the
+/// scheduler interleaves them. Per-session
+/// [`RoundObserver`](crate::coordinator::session::RoundObserver)s still
+/// fire inside each session; this is the cross-session fan-out
+/// (dashboards, fleet-wide audits).
+pub trait FleetObserver {
+    /// One session completed one round.
+    fn on_session_round(&mut self, _session: usize, _name: &str, _outcome: &RoundOutcome) {}
+
+    /// One session finished its run.
+    fn on_session_finished(&mut self, _session: usize, _name: &str, _record: &RunRecord) {}
+}
+
+/// Built-in fleet observer: logs interleaving progress at debug level.
+pub struct FleetProgress {
+    every: usize,
+    steps: usize,
+}
+
+impl FleetProgress {
+    /// Log every `every` interleaved rounds (0 = finishes only).
+    pub fn every(every: usize) -> FleetProgress {
+        FleetProgress { every, steps: 0 }
+    }
+}
+
+impl FleetObserver for FleetProgress {
+    fn on_session_round(&mut self, session: usize, name: &str, outcome: &RoundOutcome) {
+        self.steps += 1;
+        if self.every > 0 && self.steps % self.every == 0 {
+            log::debug!(
+                "fleet step {:>6}: session {session} ({name}) round {} loss {:.4}",
+                self.steps,
+                outcome.round + 1,
+                outcome.train_loss
+            );
+        }
+    }
+
+    fn on_session_finished(&mut self, session: usize, name: &str, record: &RunRecord) {
+        log::debug!(
+            "fleet: session {session} ({name}) finished, final acc {:.2}%",
+            record.final_accuracy * 100.0
+        );
+    }
+}
+
+/// Builder for a [`Fleet`]: named sessions + policy + fleet observers.
+pub struct FleetBuilder {
+    names: Vec<String>,
+    sessions: Vec<Box<Session>>,
+    policy: Box<dyn SchedPolicy>,
+    observers: Vec<Box<dyn FleetObserver>>,
+}
+
+impl FleetBuilder {
+    pub fn new() -> FleetBuilder {
+        FleetBuilder {
+            names: Vec::new(),
+            sessions: Vec::new(),
+            policy: Box::new(RoundRobin::new()),
+            observers: Vec::new(),
+        }
+    }
+
+    /// Add a session under a display name; repeatable. Sessions start
+    /// lazily, so assembling a large fleet is cheap.
+    pub fn session(mut self, name: impl Into<String>, session: Session) -> Self {
+        self.names.push(name.into());
+        self.sessions.push(Box::new(session));
+        self
+    }
+
+    /// Replace the default round-robin policy.
+    pub fn policy(mut self, policy: impl SchedPolicy + 'static) -> Self {
+        self.policy = Box::new(policy);
+        self
+    }
+
+    /// Replace the policy with an already-boxed one (CLI parsing).
+    pub fn policy_boxed(mut self, policy: Box<dyn SchedPolicy>) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Attach a fleet observer; repeatable, invoked in attach order.
+    pub fn observe(mut self, observer: impl FleetObserver + 'static) -> Self {
+        self.observers.push(Box::new(observer));
+        self
+    }
+
+    /// Assemble the fleet. Errors on an empty session list.
+    pub fn build(self) -> Result<Fleet> {
+        if self.sessions.is_empty() {
+            return Err(Error::Config("fleet needs at least one session".into()));
+        }
+        Ok(Fleet {
+            names: self.names,
+            sessions: self.sessions,
+            policy: self.policy,
+            observers: self.observers,
+        })
+    }
+
+    /// Build and run in one step.
+    pub fn run(self) -> Result<FleetRecord> {
+        self.build()?.run()
+    }
+}
+
+impl Default for FleetBuilder {
+    fn default() -> Self {
+        FleetBuilder::new()
+    }
+}
+
+/// N boxed sessions interleaved round-by-round under one [`SchedPolicy`].
+pub struct Fleet {
+    names: Vec<String>,
+    sessions: Vec<Box<Session>>,
+    policy: Box<dyn SchedPolicy>,
+    observers: Vec<Box<dyn FleetObserver>>,
+}
+
+impl Fleet {
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// Drive every session to completion, one round per scheduler tick.
+    ///
+    /// A session error aborts the whole fleet (the scheduler is a
+    /// single-tenant research runtime, not an isolator); the error names
+    /// the session that failed.
+    pub fn run(mut self) -> Result<FleetRecord> {
+        let n = self.sessions.len();
+        let fleet_sw = Stopwatch::start();
+        let mut states = vec![TaskState::default(); n];
+        let mut records: Vec<Option<RunRecord>> = (0..n).map(|_| None).collect();
+        let mut ready: Vec<usize> = (0..n).collect();
+        let mut rounds_executed = 0usize;
+        let mut device_ops = 0u64;
+        let mut step_ms = 0.0f64;
+
+        while !ready.is_empty() {
+            let idx = pick_validated(self.policy.as_mut(), &states, &ready)?;
+            let step_sw = Stopwatch::start();
+            let event = self.sessions[idx]
+                .step()
+                .map_err(|e| Error::Pipeline(format!("fleet session {:?}: {e}", self.names[idx])))?;
+            step_ms += step_sw.elapsed_ms();
+            match event {
+                StepEvent::RoundCompleted(outcome) => {
+                    states[idx].rounds_done += 1;
+                    for s in states.iter_mut() {
+                        s.staleness += 1;
+                    }
+                    states[idx].staleness = 0;
+                    rounds_executed += 1;
+                    // +1: the round's TrainStep on the CPU lane (selector
+                    // ops are the GPU-lane charge)
+                    device_ops += outcome.selector.ops.len() as u64 + 1;
+                    for obs in self.observers.iter_mut() {
+                        obs.on_session_round(idx, &self.names[idx], &outcome);
+                    }
+                    // drain the outcome the session retained: the fleet
+                    // surface for per-round data is the observer fan-out,
+                    // and keeping N x R outcomes alive across in-flight
+                    // sessions would grow with fleet size
+                    self.sessions[idx].take_outcomes();
+                }
+                StepEvent::Finished(record) => {
+                    for obs in self.observers.iter_mut() {
+                        obs.on_session_finished(idx, &self.names[idx], &record);
+                    }
+                    records[idx] = Some(record);
+                    ready.retain(|&i| i != idx);
+                }
+            }
+        }
+
+        let records: Vec<RunRecord> = records
+            .into_iter()
+            .map(|r| r.expect("every session yielded Finished"))
+            .collect();
+        let total_host_ms = fleet_sw.elapsed_ms();
+        Ok(FleetRecord {
+            policy: self.policy.name().to_string(),
+            names: self.names,
+            session_rounds: states.iter().map(|s| s.rounds_done).collect(),
+            rounds_executed,
+            device_ops,
+            total_device_ms: records.iter().map(|r| r.total_device_ms).sum(),
+            energy_j: records.iter().map(|r| r.energy_j).sum(),
+            peak_memory_bytes: records.iter().map(|r| r.peak_memory_bytes).sum(),
+            records,
+            total_host_ms,
+            sched_overhead_ms: (total_host_ms - step_ms).max(0.0),
+        })
+    }
+}
+
+/// Aggregate record of one fleet run: per-session [`RunRecord`]s plus the
+/// shared host accounting.
+#[derive(Clone, Debug)]
+pub struct FleetRecord {
+    /// Policy display name.
+    pub policy: String,
+    /// Session display names, index-aligned with `records`.
+    pub names: Vec<String>,
+    /// Final per-session records — identical to solo runs for every
+    /// session that is reproducible solo (see the module docs).
+    pub records: Vec<RunRecord>,
+    /// Rounds each session completed.
+    pub session_rounds: Vec<usize>,
+    /// Total interleaved rounds across all sessions.
+    pub rounds_executed: usize,
+    /// Device-sim ops charged across all sessions (selector ops + one
+    /// train step per round).
+    pub device_ops: u64,
+    /// Σ per-session simulated device clocks (ms).
+    pub total_device_ms: f64,
+    /// Host wall clock of the whole fleet run (ms).
+    pub total_host_ms: f64,
+    /// Host wall time outside `Session::step` — scheduling, bookkeeping
+    /// and fleet-observer fan-out (ms).
+    pub sched_overhead_ms: f64,
+    /// Σ per-session simulated energy (J).
+    pub energy_j: f64,
+    /// Σ per-session peak-memory estimates (bytes) — every session's
+    /// working set is resident concurrently on the host.
+    pub peak_memory_bytes: usize,
+}
+
+impl FleetRecord {
+    /// Scheduler overhead amortized per interleaved round (ms).
+    pub fn sched_overhead_per_round_ms(&self) -> f64 {
+        if self.rounds_executed == 0 {
+            0.0
+        } else {
+            self.sched_overhead_ms / self.rounds_executed as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let sessions = Json::Arr(
+            self.names
+                .iter()
+                .zip(&self.records)
+                .zip(&self.session_rounds)
+                .map(|((name, record), &rounds)| {
+                    Json::obj(vec![
+                        ("name", Json::Str(name.clone())),
+                        ("rounds", Json::Num(rounds as f64)),
+                        ("record", record.to_json()),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("policy", Json::Str(self.policy.clone())),
+            ("sessions", sessions),
+            ("rounds_executed", Json::Num(self.rounds_executed as f64)),
+            ("device_ops", Json::Num(self.device_ops as f64)),
+            ("total_device_ms", Json::Num(self.total_device_ms)),
+            ("total_host_ms", Json::Num(self.total_host_ms)),
+            ("sched_overhead_ms", Json::Num(self.sched_overhead_ms)),
+            (
+                "sched_overhead_per_round_ms",
+                Json::Num(self.sched_overhead_per_round_ms()),
+            ),
+            ("energy_j", Json::Num(self.energy_j)),
+            ("peak_memory_bytes", Json::Num(self.peak_memory_bytes as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn states(rounds: &[usize], stale: &[usize]) -> Vec<TaskState> {
+        rounds
+            .iter()
+            .zip(stale)
+            .map(|(&rounds_done, &staleness)| TaskState { rounds_done, staleness })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles_and_skips_finished() {
+        let mut p = RoundRobin::new();
+        let s = states(&[0, 0, 0], &[0, 0, 0]);
+        assert_eq!(p.pick(&s, &[0, 1, 2]), 0);
+        assert_eq!(p.pick(&s, &[0, 1, 2]), 1);
+        assert_eq!(p.pick(&s, &[0, 1, 2]), 2);
+        assert_eq!(p.pick(&s, &[0, 1, 2]), 0); // wraps
+        // session 1 finished: the cycle skips it
+        assert_eq!(p.pick(&s, &[0, 2]), 2);
+        assert_eq!(p.pick(&s, &[0, 2]), 0);
+    }
+
+    #[test]
+    fn fewest_rounds_prefers_laggards_then_index() {
+        let mut p = FewestRoundsFirst;
+        let s = states(&[3, 1, 1, 5], &[0, 0, 0, 0]);
+        assert_eq!(p.pick(&s, &[0, 1, 2, 3]), 1); // min rounds, tie -> min index
+        assert_eq!(p.pick(&s, &[0, 2, 3]), 2);
+        assert_eq!(p.pick(&s, &[0, 3]), 0);
+    }
+
+    #[test]
+    fn staleness_prefers_longest_waiting_then_index() {
+        let mut p = StalenessPriority;
+        let s = states(&[0, 0, 0, 0], &[2, 7, 7, 1]);
+        assert_eq!(p.pick(&s, &[0, 1, 2, 3]), 1); // max staleness, tie -> min index
+        assert_eq!(p.pick(&s, &[0, 2, 3]), 2);
+        assert_eq!(p.pick(&s, &[0, 3]), 0);
+    }
+
+    #[test]
+    fn pick_validated_rejects_misbehaving_policy() {
+        struct Bad;
+        impl SchedPolicy for Bad {
+            fn pick(&mut self, _states: &[TaskState], _ready: &[usize]) -> usize {
+                999 // out of range AND not ready
+            }
+            fn name(&self) -> &'static str {
+                "bad"
+            }
+        }
+        let s = states(&[0, 0], &[0, 0]);
+        assert!(pick_validated(&mut Bad, &s, &[0, 1]).is_err());
+        assert_eq!(pick_validated(&mut RoundRobin::new(), &s, &[1]).unwrap(), 1);
+    }
+
+    #[test]
+    fn policy_parsing() {
+        for (name, want) in [
+            ("rr", "round-robin"),
+            ("round-robin", "round-robin"),
+            ("fewest", "fewest-rounds-first"),
+            ("staleness", "priority-by-staleness"),
+        ] {
+            assert_eq!(parse_policy(name).unwrap().name(), want);
+        }
+        assert!(parse_policy("bogus").is_err());
+    }
+
+    #[test]
+    fn empty_fleet_rejected() {
+        assert!(FleetBuilder::new().build().is_err());
+    }
+
+    #[test]
+    fn fleet_record_json_shape() {
+        let rec = FleetRecord {
+            policy: "round-robin".into(),
+            names: vec!["a".into(), "b".into()],
+            records: vec![RunRecord::new("rs", "mlp"), RunRecord::new("titan", "mlp")],
+            session_rounds: vec![4, 6],
+            rounds_executed: 10,
+            device_ops: 25,
+            total_device_ms: 1234.5,
+            total_host_ms: 80.0,
+            sched_overhead_ms: 2.0,
+            energy_j: 9.0,
+            peak_memory_bytes: 2048,
+        };
+        assert!((rec.sched_overhead_per_round_ms() - 0.2).abs() < 1e-12);
+        let j = rec.to_json();
+        assert_eq!(j.get("policy").unwrap().as_str().unwrap(), "round-robin");
+        assert_eq!(j.get("sessions").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("rounds_executed").unwrap().as_usize().unwrap(), 10);
+        let roundtrip = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(
+            roundtrip.get("sched_overhead_per_round_ms").unwrap().as_f64().unwrap(),
+            0.2
+        );
+    }
+
+    // ---- artifact-gated fleet runs ------------------------------------
+
+    use crate::config::{presets, Method};
+    use crate::coordinator::SessionBuilder;
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new("artifacts/mlp/meta.json").exists()
+    }
+
+    fn tiny_session(method: Method, rounds: usize, seed_off: u64) -> Session {
+        let mut cfg = presets::table1("mlp", method);
+        cfg.rounds = rounds;
+        cfg.test_size = 200;
+        cfg.eval_every = 2;
+        cfg.pipeline = false;
+        cfg.seed += seed_off;
+        SessionBuilder::new(cfg).build().unwrap()
+    }
+
+    /// A fleet observer that records the interleaving for assertions.
+    struct Trace(std::rc::Rc<std::cell::RefCell<Vec<(usize, usize)>>>);
+
+    impl FleetObserver for Trace {
+        fn on_session_round(&mut self, session: usize, _name: &str, outcome: &RoundOutcome) {
+            self.0.borrow_mut().push((session, outcome.round));
+        }
+    }
+
+    #[test]
+    fn round_robin_interleaves_heterogeneous_sessions() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let trace = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let record = FleetBuilder::new()
+            .session("short", tiny_session(Method::Rs, 2, 0))
+            .session("long", tiny_session(Method::Rs, 4, 1))
+            .observe(Trace(std::rc::Rc::clone(&trace)))
+            .run()
+            .unwrap();
+        assert_eq!(record.session_rounds, vec![2, 4]);
+        assert_eq!(record.rounds_executed, 6);
+        assert_eq!(record.records.len(), 2);
+        // strict alternation while both live, then the long tail
+        let seen = trace.borrow().clone();
+        assert_eq!(
+            seen,
+            vec![(0, 0), (1, 0), (0, 1), (1, 1), (1, 2), (1, 3)],
+            "unexpected interleaving: {seen:?}"
+        );
+        assert!(record.total_device_ms > 0.0);
+        assert!(record.peak_memory_bytes > 0);
+    }
+}

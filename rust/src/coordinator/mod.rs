@@ -20,9 +20,18 @@
 //! - `Pipelined` — two OS threads with one-round-delay batch handoff and
 //!   per-round parameter sync, the paper's §3.4 design.
 //!
+//! Sessions are **step-driven**: [`Session::step`] runs one round and
+//! yields a [`session::StepEvent`], with [`Session::run`] as the trivial
+//! while-step wrapper. The [`host`] module builds on that: a
+//! [`host::Fleet`] owns N boxed sessions and interleaves them
+//! round-by-round under a pluggable [`host::SchedPolicy`] — the
+//! multi-session host runtime on the path to the ROADMAP's
+//! millions-of-device-sessions north star.
+//!
 //! [`sequential`] and [`pipeline`] remain as deprecated thin shims over
 //! the session API so pre-session call sites keep compiling.
 
+pub mod host;
 pub mod pipeline;
 pub mod round;
 pub mod sequential;
@@ -41,8 +50,9 @@ use crate::util::rng::Xoshiro256;
 use crate::util::timer::Stopwatch;
 use crate::{Error, Result};
 
+pub use host::{Fleet, FleetBuilder, FleetObserver, FleetRecord, SchedPolicy};
 pub use round::{RoundOutcome, SelectorReport};
-pub use session::{Control, ExecBackend, RoundObserver, Session, SessionBuilder};
+pub use session::{Control, ExecBackend, RoundObserver, Session, SessionBuilder, StepEvent};
 
 /// A selected training batch with its unbiasedness weights (see
 /// `selection::SelectedBatch` — these are the owned samples crossing the

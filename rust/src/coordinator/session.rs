@@ -29,11 +29,21 @@
 //! compose around it:
 //!
 //! - [`DataSource`] (data plane) — where arrivals come from. Defaults to
-//!   the synthetic [`StreamSource`]; replay buffers and non-IID federated
-//!   device streams plug in without touching the loop.
+//!   the synthetic [`StreamSource`]; replay buffers, non-IID federated
+//!   device streams and drifting class mixes plug in without touching the
+//!   loop.
 //! - [`RoundObserver`] — per-round / per-eval hooks that can log
-//!   progress, audit budgets, or stop the run early by returning
-//!   [`Control::Stop`].
+//!   progress, audit budgets, checkpoint progress to disk, or stop the
+//!   run early by returning [`Control::Stop`].
+//!
+//! Execution is **step-driven**: a [`Session`] is a state machine whose
+//! [`Session::step`] runs exactly one round and yields a [`StepEvent`]
+//! ([`StepEvent::RoundCompleted`] per round, then one
+//! [`StepEvent::Finished`] carrying the final [`RunRecord`]).
+//! [`Session::run`] is a trivial while-step wrapper, so one-shot callers
+//! see byte-identical records — and a host scheduler
+//! ([`crate::coordinator::host`]) can interleave many sessions
+//! round-by-round on one thread without changing any session's output.
 //!
 //! ```no_run
 //! use titan::config::{presets, Method};
@@ -121,13 +131,16 @@ pub trait RoundObserver {
     }
 }
 
-/// Built-in observers: progress logging, early stopping, budget audits.
+/// Built-in observers: progress logging, early stopping, budget audits,
+/// JSON checkpointing.
 pub mod observers {
+    use std::path::{Path, PathBuf};
     use std::sync::{Arc, Mutex};
 
     use super::{Control, RoundObserver};
     use crate::coordinator::RoundOutcome;
     use crate::metrics::CurvePoint;
+    use crate::util::json::Json;
 
     /// Logs round loss and eval checkpoints at debug level via the `log`
     /// facade, without touching stdout — experiment tables stay clean.
@@ -219,6 +232,106 @@ pub mod observers {
             Control::Continue
         }
     }
+
+    /// Snapshots run progress — the completed-round counter plus the eval
+    /// accuracy trace — to a JSON file every `k` completed rounds (via
+    /// [`crate::util::json`]), so an interrupted run leaves a resumable
+    /// trace on disk. [`Checkpoint::load`] reads a snapshot back. Write
+    /// failures are logged at warn level and never abort the run.
+    pub struct Checkpoint {
+        path: PathBuf,
+        every: usize,
+        rounds_done: usize,
+        trace: Vec<(usize, f64)>,
+    }
+
+    /// A loaded checkpoint snapshot.
+    #[derive(Clone, Debug, PartialEq)]
+    pub struct CheckpointState {
+        /// Completed rounds at snapshot time (1-based counter).
+        pub round: usize,
+        /// `(round, test_accuracy)` eval checkpoints seen so far.
+        pub accuracy_trace: Vec<(usize, f64)>,
+    }
+
+    impl Checkpoint {
+        /// Snapshot to `path` every `every` completed rounds (> 0).
+        pub fn every(path: impl Into<PathBuf>, every: usize) -> Checkpoint {
+            assert!(every > 0, "checkpoint cadence must be positive");
+            Checkpoint {
+                path: path.into(),
+                every,
+                rounds_done: 0,
+                trace: Vec::new(),
+            }
+        }
+
+        fn snapshot(&self) -> Json {
+            let trace = Json::Arr(
+                self.trace
+                    .iter()
+                    .map(|&(round, acc)| {
+                        Json::obj(vec![
+                            ("round", Json::Num(round as f64)),
+                            ("test_accuracy", Json::Num(acc)),
+                        ])
+                    })
+                    .collect(),
+            );
+            Json::obj(vec![
+                ("round", Json::Num(self.rounds_done as f64)),
+                ("accuracy_trace", trace),
+            ])
+        }
+
+        /// Atomic snapshot write (temp file + rename): an interruption
+        /// mid-write must never destroy the previous valid snapshot —
+        /// surviving interruptions is the whole point of the observer.
+        fn write(&self) {
+            let mut tmp_name = self.path.as_os_str().to_owned();
+            tmp_name.push(".tmp");
+            let tmp = PathBuf::from(tmp_name);
+            let result = std::fs::write(&tmp, self.snapshot().to_string_pretty())
+                .and_then(|()| std::fs::rename(&tmp, &self.path));
+            if let Err(e) = result {
+                log::warn!("checkpoint write {} failed: {e}", self.path.display());
+            }
+        }
+
+        /// Load a snapshot written by this observer.
+        pub fn load(path: &Path) -> crate::Result<CheckpointState> {
+            let j = Json::parse_file(path)?;
+            let round = j.get("round")?.as_usize()?;
+            let accuracy_trace = j
+                .get("accuracy_trace")?
+                .as_arr()?
+                .iter()
+                .map(|p| Ok((p.get("round")?.as_usize()?, p.get("test_accuracy")?.as_f64()?)))
+                .collect::<crate::Result<Vec<_>>>()?;
+            Ok(CheckpointState { round, accuracy_trace })
+        }
+    }
+
+    impl RoundObserver for Checkpoint {
+        fn on_round(&mut self, o: &RoundOutcome) -> Control {
+            self.rounds_done = o.round + 1;
+            if self.rounds_done % self.every == 0 {
+                self.write();
+            }
+            Control::Continue
+        }
+
+        fn on_eval(&mut self, p: &CurvePoint) -> Control {
+            self.trace.push((p.round, p.test_accuracy));
+            // the session fires on_round before on_eval within a round,
+            // so a cadence snapshot for this round was written without
+            // this point — rewrite so the on-disk trace includes it
+            if self.rounds_done > 0 && self.rounds_done % self.every == 0 {
+                self.write();
+            }
+            Control::Continue
+        }
+    }
 }
 
 /// Builder for a [`Session`]. Configure, then [`SessionBuilder::run`].
@@ -268,6 +381,11 @@ impl SessionBuilder {
     }
 
     /// Validate the config and assemble the session.
+    ///
+    /// Building is cheap: engines load and threads spawn lazily on the
+    /// first [`Session::step`], so a host can assemble a large fleet of
+    /// sessions up front and artifact errors still surface from
+    /// `step`/`run` exactly as they did when `run` owned the whole loop.
     pub fn build(self) -> Result<Session> {
         let SessionBuilder { cfg, backend, source, observers } = self;
         cfg.validate()?;
@@ -276,7 +394,13 @@ impl SessionBuilder {
             Some(s) => s,
             None => Box::new(default_source(&cfg)),
         };
-        Ok(Session { cfg, backend, source, observers })
+        let outcomes = Vec::with_capacity(cfg.rounds);
+        Ok(Session {
+            cfg,
+            state: State::Pending { backend, source, observers },
+            outcomes,
+            completed: 0,
+        })
     }
 
     /// Build and run in one step.
@@ -292,13 +416,47 @@ pub fn default_source(cfg: &RunConfig) -> StreamSource {
     StreamSource::new(task, cfg.seed, cfg.noise)
 }
 
+/// What one [`Session::step`] produced.
+#[derive(Debug)]
+pub enum StepEvent {
+    /// One round ran to completion (selection, training, accounting and
+    /// observers included). The session is ready for the next step.
+    RoundCompleted(RoundOutcome),
+    /// The run is over: teardown, final eval and totals are done and the
+    /// record is final. The per-round outcomes stay on the session
+    /// ([`Session::outcomes`] / [`Session::take_outcomes`]). Stepping
+    /// again is an error.
+    Finished(RunRecord),
+}
+
 /// A fully configured run: one data source, one backend, the canonical
-/// accounting loop. Consumed by [`Session::run`].
+/// accounting loop — as a **step-driven state machine**.
+///
+/// [`Session::step`] executes exactly one round (the first step also
+/// performs the lazy engine/thread start-up) and yields a [`StepEvent`];
+/// [`Session::run`] is the trivial while-step wrapper. Both paths produce
+/// byte-identical [`RunRecord`]s, which is what lets
+/// [`crate::coordinator::host::Fleet`] interleave many sessions
+/// round-by-round without perturbing any of them.
 pub struct Session {
     cfg: RunConfig,
-    backend: ExecBackend,
-    source: Box<dyn DataSource>,
-    observers: Vec<Box<dyn RoundObserver>>,
+    state: State,
+    outcomes: Vec<RoundOutcome>,
+    /// Rounds completed, independent of `outcomes` (which a host may
+    /// drain mid-run via [`Session::take_outcomes`]).
+    completed: usize,
+}
+
+/// Session lifecycle. `Pending` holds the builder outputs until the first
+/// step; `Running` owns the engines; `Finished` is terminal.
+enum State {
+    Pending {
+        backend: ExecBackend,
+        source: Box<dyn DataSource>,
+        observers: Vec<Box<dyn RoundObserver>>,
+    },
+    Running(Box<Running>),
+    Finished,
 }
 
 /// Message from the selector side to the trainer per round.
@@ -370,16 +528,39 @@ impl BatchFeed {
     }
 }
 
-impl Session {
-    pub fn run(self) -> Result<(RunRecord, Vec<RoundOutcome>)> {
-        let Session { cfg, backend, source, mut observers } = self;
+/// The live half of a session: engines, device sim, accounting state.
+/// Created by the first step, consumed by the finishing step.
+struct Running {
+    pipelined: bool,
+    rounds: usize,
+    feed: BatchFeed,
+    trainer: TrainerEngine,
+    sim: DeviceSim,
+    record: RunRecord,
+    observers: Vec<Box<dyn RoundObserver>>,
+    test: Vec<crate::data::Sample>,
+    run_sw: Stopwatch,
+    round: usize,
+    stop: bool,
+}
+
+impl Running {
+    /// Everything the old run-to-completion loop did before round 0:
+    /// build the batch feed (spawning the selector thread when
+    /// pipelined), load the trainer, start the clocks.
+    fn start(
+        cfg: &RunConfig,
+        backend: ExecBackend,
+        source: Box<dyn DataSource>,
+        observers: Vec<Box<dyn RoundObserver>>,
+    ) -> Result<Running> {
         let pipelined = backend.is_pipelined();
         let rounds = cfg.rounds;
         let test = source.test_set(cfg.test_size, cfg.seed);
 
-        let mut feed = match backend {
+        let feed = match backend {
             ExecBackend::Sequential => BatchFeed::Sequential {
-                selector: SelectorEngine::new(&cfg, source.task())?,
+                selector: SelectorEngine::new(cfg, source.task())?,
                 source,
                 stream_per_round: cfg.stream_per_round,
             },
@@ -421,70 +602,88 @@ impl Session {
             }
         };
 
-        let mut trainer = TrainerEngine::new(&cfg)?;
-        let mut sim = DeviceSim::new(&cfg.model);
-        let mut record = RunRecord::new(cfg.method.name(), &cfg.model);
-        let mut outcomes = Vec::with_capacity(rounds);
-        let run_sw = Stopwatch::start();
+        Ok(Running {
+            pipelined,
+            rounds,
+            feed,
+            trainer: TrainerEngine::new(cfg)?,
+            sim: DeviceSim::new(&cfg.model),
+            record: RunRecord::new(cfg.method.name(), &cfg.model),
+            observers,
+            test,
+            run_sw: Stopwatch::start(),
+            round: 0,
+            stop: false,
+        })
+    }
 
-        for round in 0..rounds {
-            let (batch, report) = feed.next(round, &trainer)?;
-            for &op in &report.ops {
-                sim.record(Lane::Gpu, op);
-            }
-            record.processing_delay.record_ms(report.per_sample_host_ms);
-
-            // training (weighted: the paper's unbiased estimator)
-            let (loss, train_ms) = trainer.train_batch(&batch)?;
-            sim.record(Lane::Cpu, Op::TrainStep { batch: batch.len() });
-            if pipelined {
-                sim.record(Lane::Gpu, Op::Sync); // params + batch handoff
-            }
-            let timing = sim.end_round(pipelined);
-            feed.after_train(&trainer);
-
-            record.round_device_ms.push(timing.wall_ms);
-            // pipelined lanes overlap on the host too; sequential serializes
-            record.round_host_ms.push(if pipelined {
-                train_ms.max(report.host_ms)
-            } else {
-                report.host_ms + train_ms
-            });
-            let outcome = RoundOutcome {
-                round,
-                train_loss: loss,
-                train_host_ms: train_ms,
-                selector: report,
-                device_wall_ms: timing.wall_ms,
-                device_cpu_ms: timing.cpu_ms,
-                device_gpu_ms: timing.gpu_ms,
-            };
-            let mut stop = false;
-            for obs in observers.iter_mut() {
-                stop |= obs.on_round(&outcome) == Control::Stop;
-            }
-            outcomes.push(outcome);
-
-            // periodic eval (instrumentation; not charged to the device clock)
-            if cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0 {
-                let rep = trainer.evaluate(&test)?;
-                let point = CurvePoint {
-                    round: round + 1,
-                    device_ms: sim.total_ms(),
-                    host_ms: run_sw.elapsed_ms(),
-                    train_loss: loss as f64,
-                    test_loss: rep.loss,
-                    test_accuracy: rep.accuracy,
-                };
-                for obs in observers.iter_mut() {
-                    stop |= obs.on_eval(&point) == Control::Stop;
-                }
-                record.curve.push(point);
-            }
-            if stop {
-                break;
-            }
+    /// One round of the canonical loop: obtain the batch, train, account
+    /// on the device sim, run observers, eval on the cadence.
+    fn step_round(&mut self, cfg: &RunConfig) -> Result<RoundOutcome> {
+        let round = self.round;
+        let (batch, report) = self.feed.next(round, &self.trainer)?;
+        for &op in &report.ops {
+            self.sim.record(Lane::Gpu, op);
         }
+        self.record.processing_delay.record_ms(report.per_sample_host_ms);
+
+        // training (weighted: the paper's unbiased estimator)
+        let (loss, train_ms) = self.trainer.train_batch(&batch)?;
+        self.sim.record(Lane::Cpu, Op::TrainStep { batch: batch.len() });
+        if self.pipelined {
+            self.sim.record(Lane::Gpu, Op::Sync); // params + batch handoff
+        }
+        let timing = self.sim.end_round(self.pipelined);
+        self.feed.after_train(&self.trainer);
+
+        self.record.round_device_ms.push(timing.wall_ms);
+        // pipelined lanes overlap on the host too; sequential serializes
+        self.record.round_host_ms.push(if self.pipelined {
+            train_ms.max(report.host_ms)
+        } else {
+            report.host_ms + train_ms
+        });
+        let outcome = RoundOutcome {
+            round,
+            train_loss: loss,
+            train_host_ms: train_ms,
+            selector: report,
+            device_wall_ms: timing.wall_ms,
+            device_cpu_ms: timing.cpu_ms,
+            device_gpu_ms: timing.gpu_ms,
+        };
+        let mut stop = false;
+        for obs in self.observers.iter_mut() {
+            stop |= obs.on_round(&outcome) == Control::Stop;
+        }
+
+        // periodic eval (instrumentation; not charged to the device clock)
+        if cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0 {
+            let rep = self.trainer.evaluate(&self.test)?;
+            let point = CurvePoint {
+                round: round + 1,
+                device_ms: self.sim.total_ms(),
+                host_ms: self.run_sw.elapsed_ms(),
+                train_loss: loss as f64,
+                test_loss: rep.loss,
+                test_accuracy: rep.accuracy,
+            };
+            for obs in self.observers.iter_mut() {
+                stop |= obs.on_eval(&point) == Control::Stop;
+            }
+            self.record.curve.push(point);
+        }
+        if stop {
+            self.stop = true;
+        }
+        self.round += 1;
+        Ok(outcome)
+    }
+
+    /// Teardown + totals: join the selector thread, final eval, device
+    /// clock / energy / memory roll-up. Consumes the running half.
+    fn finish(self, cfg: &RunConfig) -> Result<RunRecord> {
+        let Running { pipelined, feed, trainer, sim, mut record, test, run_sw, .. } = self;
         feed.finish()?;
 
         let final_eval = trainer.evaluate(&test)?;
@@ -506,7 +705,83 @@ impl Session {
             pipelined,
         )
         .total();
-        Ok((record, outcomes))
+        Ok(record)
+    }
+}
+
+impl Session {
+    /// The run configuration this session executes.
+    pub fn cfg(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Rounds completed so far (robust to [`Session::take_outcomes`]).
+    pub fn rounds_completed(&self) -> usize {
+        self.completed
+    }
+
+    /// True once [`StepEvent::Finished`] has been yielded.
+    pub fn is_finished(&self) -> bool {
+        matches!(self.state, State::Finished)
+    }
+
+    /// Per-round outcomes accumulated so far (all of them, once finished).
+    pub fn outcomes(&self) -> &[RoundOutcome] {
+        &self.outcomes
+    }
+
+    /// Move the accumulated outcomes out (e.g. after a stepped run).
+    pub fn take_outcomes(&mut self) -> Vec<RoundOutcome> {
+        std::mem::take(&mut self.outcomes)
+    }
+
+    /// Advance the state machine by one transition: start up lazily on
+    /// the first call, then run exactly one round per call, and finally
+    /// tear down and yield the finished [`RunRecord`]. Stepping a
+    /// finished session is an error.
+    pub fn step(&mut self) -> Result<StepEvent> {
+        if matches!(self.state, State::Pending { .. }) {
+            let state = std::mem::replace(&mut self.state, State::Finished);
+            let State::Pending { backend, source, observers } = state else {
+                unreachable!("matched Pending above")
+            };
+            // on start-up failure the session stays Finished, so the
+            // error is not retried on the next step
+            let running = Running::start(&self.cfg, backend, source, observers)?;
+            self.state = State::Running(Box::new(running));
+        }
+        let done = match &self.state {
+            State::Running(run) => run.round >= run.rounds || run.stop,
+            State::Finished => {
+                return Err(Error::Pipeline("session already finished".into()));
+            }
+            State::Pending { .. } => unreachable!("initialized above"),
+        };
+        if done {
+            let state = std::mem::replace(&mut self.state, State::Finished);
+            let State::Running(run) = state else {
+                unreachable!("matched Running above")
+            };
+            let record = run.finish(&self.cfg)?;
+            return Ok(StepEvent::Finished(record));
+        }
+        let State::Running(run) = &mut self.state else {
+            unreachable!("checked Running above")
+        };
+        let outcome = run.step_round(&self.cfg)?;
+        self.completed += 1;
+        self.outcomes.push(outcome.clone());
+        Ok(StepEvent::RoundCompleted(outcome))
+    }
+
+    /// Run to completion: the trivial while-step wrapper. Byte-identical
+    /// records to driving [`Session::step`] by hand.
+    pub fn run(mut self) -> Result<(RunRecord, Vec<RoundOutcome>)> {
+        loop {
+            if let StepEvent::Finished(record) = self.step()? {
+                return Ok((record, self.outcomes));
+            }
+        }
     }
 }
 
@@ -562,6 +837,48 @@ mod tests {
     }
 
     #[test]
+    fn checkpoint_observer_snapshot_roundtrips() {
+        use super::observers::{Checkpoint, CheckpointState};
+        let path = std::env::temp_dir().join("titan_checkpoint_roundtrip.json");
+        let _ = std::fs::remove_file(&path);
+        let point = |round: usize, acc: f64| CurvePoint {
+            round,
+            device_ms: 0.0,
+            host_ms: 0.0,
+            train_loss: 0.5,
+            test_loss: 0.25,
+            test_accuracy: acc,
+        };
+        let outcome = |round: usize| RoundOutcome { round, ..Default::default() };
+        // drive the hooks exactly as the session loop does (eval_every =
+        // checkpoint cadence = 2): on_round first, then the round's eval
+        let mut ck = Checkpoint::every(path.clone(), 2);
+        assert_eq!(ck.on_round(&outcome(0)), Control::Continue);
+        ck.on_round(&outcome(1)); // rounds_done = 2 -> snapshot
+        assert_eq!(ck.on_eval(&point(2, 0.25)), Control::Continue); // rewrites
+        // the snapshot on disk must already include its own round's eval
+        assert_eq!(
+            Checkpoint::load(&path).unwrap(),
+            CheckpointState { round: 2, accuracy_trace: vec![(2, 0.25)] }
+        );
+        ck.on_round(&outcome(2));
+        ck.on_round(&outcome(3)); // rounds_done = 4 -> snapshot
+        ck.on_eval(&point(4, 0.5));
+        let state = Checkpoint::load(&path).unwrap();
+        assert_eq!(
+            state,
+            CheckpointState { round: 4, accuracy_trace: vec![(2, 0.25), (4, 0.5)] }
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn checkpoint_zero_cadence_panics() {
+        super::observers::Checkpoint::every("unused.json", 0);
+    }
+
+    #[test]
     fn candidate_audit_records_rounds() {
         let (mut audit, log) = CandidateAudit::new();
         for c in [30usize, 15, 22] {
@@ -575,6 +892,107 @@ mod tests {
     }
 
     // ---- artifact-gated end-to-end pins ---------------------------------
+
+    /// Deterministic-record equality: every field that does not read the
+    /// host wall clock must match byte-for-byte.
+    fn assert_deterministic_fields_eq(a: &RunRecord, b: &RunRecord) {
+        assert_eq!(a.method, b.method);
+        assert_eq!(a.model, b.model);
+        assert_eq!(a.final_accuracy, b.final_accuracy);
+        assert_eq!(a.total_device_ms, b.total_device_ms);
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(a.avg_power_w, b.avg_power_w);
+        assert_eq!(a.peak_memory_bytes, b.peak_memory_bytes);
+        assert_eq!(a.round_device_ms, b.round_device_ms);
+        assert_eq!(a.curve.len(), b.curve.len());
+        for (x, y) in a.curve.iter().zip(&b.curve) {
+            assert_eq!(x.round, y.round);
+            assert_eq!(x.device_ms, y.device_ms);
+            assert_eq!(x.train_loss, y.train_loss);
+            assert_eq!(x.test_loss, y.test_loss);
+            assert_eq!(x.test_accuracy, y.test_accuracy);
+        }
+    }
+
+    /// Step-driven execution must be byte-identical to the one-shot
+    /// `Session::run` for both backends (`run` is literally a while-step
+    /// wrapper, so anything else is a state-machine bug). The pipelined
+    /// arm uses RS: parameter-independent selection is the class of run
+    /// that is reproducible across *any* two pipelined executions (the
+    /// latest-only param slot makes param-dependent selection timing-
+    /// sensitive by design — see the module docs on the one-round delay).
+    #[test]
+    fn stepped_session_matches_one_shot_run_both_backends() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        for (method, backend) in [
+            (Method::Titan, ExecBackend::Sequential),
+            (Method::Rs, ExecBackend::Sequential),
+            (Method::Rs, ExecBackend::Pipelined { idle: IdleTrace::Constant(1.0) }),
+        ] {
+            let cfg = small_cfg(method);
+            let (run_rec, run_out) = SessionBuilder::new(cfg.clone())
+                .backend(backend.clone())
+                .run()
+                .unwrap();
+            let mut session = SessionBuilder::new(cfg)
+                .backend(backend.clone())
+                .build()
+                .unwrap();
+            assert!(!session.is_finished());
+            let step_rec = loop {
+                match session.step().unwrap() {
+                    StepEvent::RoundCompleted(o) => {
+                        assert_eq!(o.round + 1, session.rounds_completed());
+                    }
+                    StepEvent::Finished(record) => break record,
+                }
+            };
+            assert!(session.is_finished());
+            let step_out = session.take_outcomes();
+            assert_deterministic_fields_eq(&run_rec, &step_rec);
+            assert_eq!(run_out.len(), step_out.len(), "{backend:?}");
+            for (a, b) in run_out.iter().zip(&step_out) {
+                assert_eq!(a.round, b.round);
+                assert_eq!(a.train_loss, b.train_loss);
+                assert_eq!(a.selector.ops, b.selector.ops);
+                assert_eq!(a.selector.arrivals, b.selector.arrivals);
+                assert_eq!(a.selector.candidates, b.selector.candidates);
+                assert_eq!(a.device_wall_ms, b.device_wall_ms);
+            }
+        }
+    }
+
+    /// Stepping past `Finished` is an error, and observers that stop the
+    /// run still get a final `Finished` event on the next step.
+    #[test]
+    fn step_after_finished_errors() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut session = SessionBuilder::new(small_cfg(Method::Rs))
+            .sequential()
+            .observe(EarlyStop::at_accuracy(0.0)) // stop at the first eval
+            .build()
+            .unwrap();
+        let mut finished = false;
+        for _ in 0..100 {
+            match session.step().unwrap() {
+                StepEvent::RoundCompleted(_) => {}
+                StepEvent::Finished(record) => {
+                    assert!(record.final_accuracy.is_finite());
+                    finished = true;
+                    break;
+                }
+            }
+        }
+        assert!(finished, "early stop never finished");
+        // the stop fired at the first eval checkpoint (round 3 of 6)
+        assert_eq!(session.rounds_completed(), 3);
+        assert!(session.step().is_err());
+    }
 
     /// RS selection is parameter-independent, so both backends must make
     /// identical decisions and the learning-relevant record fields must

@@ -106,10 +106,21 @@ impl CandidateBuffer {
         self.heap.peek().map(|c| c.score)
     }
 
-    /// Drain all candidates, best-score-first.
+    /// Drain all candidates, best-score-first (score ties: smaller id
+    /// first — the order `drain_order_is_pinned` regression-tests).
+    ///
+    /// In-place extraction: the heap's backing `Vec` is taken and sorted
+    /// directly with `sort_unstable_by` — no candidate clone and no
+    /// stable-merge-sort scratch buffer; the per-round drain allocates
+    /// nothing beyond the returned `Vec` it already owns. (A pop-then-
+    /// reverse extraction would avoid the sort but flips the id order
+    /// within score ties, so the owned-`Vec` sort is the variant that
+    /// keeps the historical tie-break.) Unstable sort is safe here: the
+    /// (score, id) key is total for the finite scores the filter emits,
+    /// and candidates comparing equal are interchangeable duplicates.
     pub fn drain_sorted(&mut self) -> Vec<Candidate> {
         let mut v: Vec<Candidate> = std::mem::take(&mut self.heap).into_vec();
-        v.sort_by(|a, b| {
+        v.sort_unstable_by(|a, b| {
             b.score
                 .partial_cmp(&a.score)
                 .unwrap_or(Ordering::Equal)
@@ -170,6 +181,32 @@ mod tests {
         b.offer(s(4), 1.0); // equal score: not better than worst -> rejected
         let ids: Vec<u64> = b.drain_sorted().iter().map(|c| c.sample.id).collect();
         assert_eq!(ids, vec![3, 5]);
+    }
+
+    #[test]
+    fn drain_order_is_pinned() {
+        // regression pin for the in-place drain: strict score descent,
+        // id ascending within score ties — exactly what the fine stage
+        // has always consumed. Mixed offer order exercises both the heap
+        // path (under cap) and eviction (over cap).
+        let mut b = CandidateBuffer::new(6);
+        for (id, score) in [
+            (9u64, 2.0),
+            (1, 3.0),
+            (7, 2.0),
+            (3, 3.0),
+            (5, 1.0),
+            (2, 2.0),
+            (4, 0.5), // rejected: below the worst retained
+        ] {
+            b.offer(s(id), score);
+        }
+        let drained = b.drain_sorted();
+        let order: Vec<(u64, f64)> = drained.iter().map(|c| (c.sample.id, c.score)).collect();
+        assert_eq!(
+            order,
+            vec![(1, 3.0), (3, 3.0), (2, 2.0), (7, 2.0), (9, 2.0), (5, 1.0)]
+        );
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //! CIFAR-10 / Speech Commands / HARBOX — see DESIGN.md §Substitutions),
 //! the streaming source with noise injection, the class-indexed sample
 //! store, the capped candidate priority buffer, and the object-safe
-//! [`DataSource`] seam the coordinator session pulls rounds through.
+//! [`DataSource`] seam the coordinator session pulls rounds through
+//! (stream / replay / non-IID class subset / drifting class mix).
 
 pub mod buffer;
 pub mod sample;
@@ -13,7 +14,7 @@ pub mod synth;
 
 pub use buffer::CandidateBuffer;
 pub use sample::Sample;
-pub use source::{ClassSubsetSource, DataSource, ReplaySource};
+pub use source::{ClassSubsetSource, DataSource, DriftSource, ReplaySource};
 pub use store::ClassStore;
 pub use stream::{StreamSource, StreamStats};
 pub use synth::{SynthTask, TaskSpec};

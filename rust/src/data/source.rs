@@ -16,6 +16,9 @@
 //!   across rounds instead of fresh arrivals).
 //! - [`ClassSubsetSource`] — a non-IID stream restricted to a class
 //!   subset (the federated Appendix-B device shape).
+//! - [`DriftSource`] — a time-varying class mix (linear interpolation
+//!   between two class distributions over rounds), the continual-learning
+//!   stream shape.
 
 use crate::data::sample::Sample;
 use crate::data::stream::StreamSource;
@@ -163,6 +166,113 @@ impl DataSource for ClassSubsetSource {
     }
 }
 
+/// Time-varying class mix — the continual-learning stream shape.
+///
+/// Per-class sampling weights interpolate linearly from `start` to `end`
+/// over the first `drift_rounds` calls to `next_round`, then hold at
+/// `end`. Each sample draws its class from the interpolated categorical
+/// and its input from that class's clean mixture, so the stream's class
+/// marginal drifts while the class-conditional distributions stay fixed —
+/// the regime where a static candidate buffer goes stale and selection
+/// has to re-balance (cf. the "To Store or Not" online-selection setting).
+///
+/// Deterministic under `seed`: the round counter alone decides the mix.
+pub struct DriftSource {
+    task: SynthTask,
+    start: Vec<f64>,
+    end: Vec<f64>,
+    drift_rounds: usize,
+    round: usize,
+    rng: Xoshiro256,
+    next_id: u64,
+    /// Reused interpolated-weight buffer (no per-round allocation).
+    weights: Vec<f64>,
+}
+
+impl DriftSource {
+    /// `start`/`end` are unnormalized per-class weights (one per task
+    /// class, non-negative, positive total mass); `drift_rounds` > 0 is
+    /// the interpolation horizon; `seed` is used verbatim.
+    pub fn new(
+        task: SynthTask,
+        start: Vec<f64>,
+        end: Vec<f64>,
+        drift_rounds: usize,
+        seed: u64,
+    ) -> Result<DriftSource> {
+        let c = task.num_classes();
+        for (name, w) in [("start", &start), ("end", &end)] {
+            if w.len() != c {
+                return Err(Error::Config(format!(
+                    "DriftSource {name} mix has {} weights, task has {c} classes",
+                    w.len()
+                )));
+            }
+            if w.iter().any(|&x| x < 0.0 || !x.is_finite()) {
+                return Err(Error::Config(format!(
+                    "DriftSource {name} mix must be non-negative and finite"
+                )));
+            }
+            if w.iter().sum::<f64>() <= 0.0 {
+                return Err(Error::Config(format!(
+                    "DriftSource {name} mix must have positive total mass"
+                )));
+            }
+        }
+        if drift_rounds == 0 {
+            return Err(Error::Config("DriftSource drift_rounds must be > 0".into()));
+        }
+        Ok(DriftSource {
+            weights: vec![0.0; c],
+            task,
+            start,
+            end,
+            drift_rounds,
+            round: 0,
+            rng: Xoshiro256::seed_from_u64(seed),
+            next_id: 0,
+        })
+    }
+
+    /// Interpolation progress at `round`, in [0, 1].
+    pub fn progress(&self, round: usize) -> f64 {
+        (round as f64 / self.drift_rounds as f64).min(1.0)
+    }
+
+    /// Rounds emitted so far.
+    pub fn rounds_emitted(&self) -> usize {
+        self.round
+    }
+}
+
+impl DataSource for DriftSource {
+    fn task(&self) -> &SynthTask {
+        &self.task
+    }
+
+    fn next_round(&mut self, v: usize) -> Vec<Sample> {
+        // lerp of two non-negative mixes with positive mass keeps positive
+        // mass for every t in [0, 1], so the categorical is always valid
+        let t = self.progress(self.round);
+        for (w, (&a, &b)) in self.weights.iter_mut().zip(self.start.iter().zip(&self.end)) {
+            *w = a + (b - a) * t;
+        }
+        self.round += 1;
+        (0..v)
+            .map(|_| {
+                let y = self.rng.categorical(&self.weights) as u32;
+                let id = self.next_id;
+                self.next_id += 1;
+                self.task.draw_class(id, y, &mut self.rng)
+            })
+            .collect()
+    }
+
+    fn test_set(&self, n: usize, seed: u64) -> Vec<Sample> {
+        self.task.test_set(n, seed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -231,5 +341,64 @@ mod tests {
         assert!(ClassSubsetSource::new(task(), vec![], 1).is_err());
         assert!(ClassSubsetSource::new(task(), vec![6], 1).is_err());
         assert!(ClassSubsetSource::new(task(), vec![5], 1).is_ok());
+    }
+
+    #[test]
+    fn drift_moves_from_start_mix_to_end_mix() {
+        // degenerate mixes make the drift fully observable: round 0 is
+        // pure class 0, rounds >= drift_rounds are pure class 5
+        let mut start = vec![0.0; 6];
+        start[0] = 1.0;
+        let mut end = vec![0.0; 6];
+        end[5] = 1.0;
+        let mut src = DriftSource::new(task(), start, end, 4, 11).unwrap();
+        assert_eq!(src.progress(0), 0.0);
+        assert_eq!(src.progress(4), 1.0);
+        assert_eq!(src.progress(40), 1.0);
+        let first = src.next_round(50);
+        assert!(first.iter().all(|s| s.label == 0), "round 0 must be pure start");
+        let mut mid_seen_both = (false, false);
+        for _ in 1..4 {
+            for s in src.next_round(50) {
+                match s.label {
+                    0 => mid_seen_both.0 = true,
+                    5 => mid_seen_both.1 = true,
+                    other => panic!("mid-drift label {other} outside mix support"),
+                }
+            }
+        }
+        assert!(mid_seen_both.0 && mid_seen_both.1, "mid-drift must blend both mixes");
+        assert_eq!(src.rounds_emitted(), 4);
+        let last = src.next_round(50);
+        assert!(last.iter().all(|s| s.label == 5), "post-drift must be pure end");
+    }
+
+    #[test]
+    fn drift_deterministic_under_seed() {
+        let mk = || {
+            DriftSource::new(task(), vec![1.0; 6], vec![3.0, 1.0, 1.0, 1.0, 1.0, 0.2], 10, 7)
+                .unwrap()
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..12 {
+            let (ra, rb) = (a.next_round(20), b.next_round(20));
+            for (x, y) in ra.iter().zip(&rb) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.label, y.label);
+                assert_eq!(*x.x, *y.x);
+            }
+        }
+    }
+
+    #[test]
+    fn drift_validates_mixes() {
+        let t = task(); // 6 classes
+        assert!(DriftSource::new(t.clone(), vec![1.0; 5], vec![1.0; 6], 4, 1).is_err());
+        assert!(DriftSource::new(t.clone(), vec![1.0; 6], vec![1.0; 7], 4, 1).is_err());
+        let neg = vec![-1.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        assert!(DriftSource::new(t.clone(), neg, vec![1.0; 6], 4, 1).is_err());
+        assert!(DriftSource::new(t.clone(), vec![0.0; 6], vec![1.0; 6], 4, 1).is_err());
+        assert!(DriftSource::new(t.clone(), vec![1.0; 6], vec![1.0; 6], 0, 1).is_err());
+        assert!(DriftSource::new(t, vec![1.0; 6], vec![1.0; 6], 4, 1).is_ok());
     }
 }

@@ -14,11 +14,24 @@
 //! and early stopping without touching the FedAvg loop. [`FlBuilder`]
 //! mirrors `SessionBuilder` for the federated deployment shape.
 //!
+//! Per-device rounds dispatch through the host scheduler machinery
+//! ([`crate::coordinator::host`]): each comm round's participant set
+//! drains in the order a pluggable [`SchedPolicy`] picks — the same
+//! policies (round-robin, fewest-rounds-first, priority-by-staleness)
+//! that interleave whole sessions in a
+//! [`Fleet`](crate::coordinator::host::Fleet) order device work here,
+//! over per-device participation counts and staleness. FedAvg still
+//! aggregates the identical participant set — the policy never changes
+//! who was sampled — but execution order feeds the shared selection RNG
+//! and the FedAvg float-accumulation order, so numeric results are
+//! reproducible per (seed, policy), not across policies.
+//!
 //! Implementation note: devices share one `ModelRuntime` (Full role) and
 //! swap parameter vectors in/out — functionally identical to 50 separate
 //! processes, and the only tractable layout on a one-core host.
 
 use crate::config::RunConfig;
+use crate::coordinator::host::{pick_validated, RoundRobin, SchedPolicy, TaskState};
 use crate::coordinator::session::{Control, RoundObserver};
 use crate::coordinator::RoundOutcome;
 use crate::data::{ClassSubsetSource, DataSource, Sample, SynthTask};
@@ -82,6 +95,7 @@ pub struct FlBuilder {
     cfg: FlConfig,
     sources: Option<Vec<Box<dyn DataSource>>>,
     observers: Vec<Box<dyn RoundObserver>>,
+    policy: Box<dyn SchedPolicy>,
 }
 
 impl FlBuilder {
@@ -90,7 +104,17 @@ impl FlBuilder {
             cfg,
             sources: None,
             observers: Vec::new(),
+            policy: Box::new(RoundRobin::new()),
         }
+    }
+
+    /// Replace the default round-robin device-dispatch order. The policy
+    /// sees per-device participation counts (`rounds_done`) and comm-round
+    /// staleness; it reorders execution *within* each comm round — FedAvg
+    /// aggregates the same participant set either way.
+    pub fn policy(mut self, policy: impl SchedPolicy + 'static) -> Self {
+        self.policy = Box::new(policy);
+        self
     }
 
     /// Replace the default non-IID device partition with explicit
@@ -110,7 +134,7 @@ impl FlBuilder {
 
     /// Run the federated experiment; returns the global-model run record.
     pub fn run(self) -> Result<RunRecord> {
-        let FlBuilder { cfg, sources, mut observers } = self;
+        let FlBuilder { cfg, sources, mut observers, mut policy } = self;
         let base = &cfg.base;
         let task = SynthTask::for_model(&base.model, base.seed);
         let test = task.test_set(base.test_size, base.seed);
@@ -149,8 +173,11 @@ impl FlBuilder {
                         let classes: Vec<u32> = (0..cfg.classes_per_device)
                             .map(|i| ((d + i) % num_classes) as u32)
                             .collect();
-                        // seed layout matches the pre-session orchestrator,
-                        // so default runs reproduce bit-for-bit
+                        // seed layout preserved from the pre-session
+                        // orchestrator: each device's *stream* reproduces
+                        // bit-for-bit (the global model additionally
+                        // depends on the dispatch policy's execution
+                        // order — see the module docs)
                         ClassSubsetSource::new(
                             task.clone(),
                             classes,
@@ -178,12 +205,26 @@ impl FlBuilder {
         let mut record = RunRecord::new(base.method.name(), &base.model);
         let sw = Stopwatch::start();
         let per_round = (cfg.num_devices as f64 * cfg.participation).round().max(1.0) as usize;
+        // host-scheduler bookkeeping: one TaskState per device
+        // (rounds_done = participations, staleness in comm rounds)
+        let mut dev_states = vec![TaskState::default(); cfg.num_devices];
 
         for round in 0..cfg.comm_rounds {
             let chosen = orchestrator_rng.sample_indices(cfg.num_devices, per_round);
             let mut acc: Vec<f64> = vec![0.0; global.len()];
             let mut last_loss = 0.0f32;
-            for &d in &chosen {
+            // this comm round's device work drains in policy order, not
+            // sample order — the same dispatch seam the session Fleet uses
+            let mut ready = chosen.clone();
+            ready.sort_unstable();
+            while !ready.is_empty() {
+                // shared validated dispatch (host::pick_validated): a
+                // misbehaving custom policy errors instead of spinning
+                // this loop forever in release builds
+                let d = pick_validated(policy.as_mut(), &dev_states, &ready)?;
+                ready.retain(|&x| x != d);
+                dev_states[d].rounds_done += 1;
+                dev_states[d].staleness = 0;
                 let dev = &mut devices[d];
                 let arrivals = dev.stream_round(base.stream_per_round);
                 // local selection over the device's stream
@@ -219,6 +260,11 @@ impl FlBuilder {
                 for (a, &p) in acc.iter_mut().zip(rt.params()) {
                     *a += p as f64;
                 }
+            }
+            // all devices age one comm round; this round's participants
+            // were reset to 0 when dispatched (so they end at 1)
+            for s in dev_states.iter_mut() {
+                s.staleness += 1;
             }
             // FedAvg
             for (g, a) in global.iter_mut().zip(&acc) {
@@ -375,6 +421,29 @@ mod tests {
             .unwrap();
         assert_eq!(rec.curve.len(), 2);
         assert!(rec.final_accuracy.is_finite());
+    }
+
+    /// Device dispatch runs through the shared host-scheduler policies:
+    /// non-default policies complete the identical comm-round structure
+    /// (the policy reorders execution within a round, never membership).
+    #[test]
+    fn fl_dispatches_devices_under_every_policy() {
+        if !have_artifacts() {
+            return;
+        }
+        use crate::coordinator::host::{FewestRoundsFirst, StalenessPriority};
+        let a = FlBuilder::new(tiny_fl(Method::Rs))
+            .policy(FewestRoundsFirst)
+            .run()
+            .unwrap();
+        let b = FlBuilder::new(tiny_fl(Method::Rs))
+            .policy(StalenessPriority)
+            .run()
+            .unwrap();
+        for rec in [&a, &b] {
+            assert_eq!(rec.curve.len(), 2);
+            assert!(rec.final_accuracy.is_finite());
+        }
     }
 
     /// Observers hook the comm-round loop: an early stop at the first

@@ -21,10 +21,12 @@
 //! - [`runtime`] — PJRT artifact loading and typed model execution.
 //! - [`selection`] — C-IS and all paper baselines (RS/IS/LL/HL/CE/OCS/Camel).
 //! - [`filter`] — the coarse-grained first stage.
-//! - [`coordinator`] — the session API: `SessionBuilder` → `Session`
-//!   drives one canonical round loop over a sequential or pipelined
-//!   `ExecBackend`, with `RoundObserver` hooks; `sequential`/`pipeline`
-//!   remain as deprecated shims.
+//! - [`coordinator`] — the session API: `SessionBuilder` → `Session`, a
+//!   step-driven state machine over one canonical round loop (sequential
+//!   or pipelined `ExecBackend`, `RoundObserver` hooks), plus the
+//!   [`coordinator::host`] fleet runtime that interleaves many sessions
+//!   round-by-round under pluggable scheduling policies;
+//!   `sequential`/`pipeline` remain as deprecated shims.
 //! - [`device`] — edge-device timing, memory and energy simulation.
 //! - [`fl`] — federated-learning orchestration (paper Appendix B), built
 //!   on the same data-source/observer seams via `fl::FlBuilder`.

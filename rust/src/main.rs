@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run      one training run (model/method/rounds configurable)
+//!   fleet    N concurrent sessions interleaved by the host scheduler
 //!   exp      regenerate a paper table/figure (see `titan exp list`)
 //!   fl       federated-learning run (paper Appendix B)
 //!   models   list artifact sets available under --artifacts
@@ -9,14 +10,15 @@
 //!
 //! Examples:
 //!   titan run --model mlp --method titan --rounds 200
+//!   titan fleet --sessions 4 --methods titan,rs --rounds 50 --policy fewest
 //!   titan exp table1 --models all
 //!   titan exp fig5a --fast
 //!   titan verify
 
-use titan::config::{presets, RunConfig};
+use titan::config::{presets, Method, RunConfig};
 use titan::coordinator::{ExecBackend, SessionBuilder};
 use titan::exp;
-use titan::metrics::write_result;
+use titan::metrics::{render_table, write_result};
 use titan::runtime::artifact::ArtifactSet;
 use titan::util::cli::Args;
 use titan::util::logging;
@@ -40,6 +42,7 @@ fn main() {
 fn dispatch(args: &Args) -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(args),
+        Some("fleet") => cmd_fleet(args),
         Some("exp") => cmd_exp(args),
         Some("fl") => cmd_fl(args),
         Some("models") => cmd_models(args),
@@ -60,6 +63,10 @@ fn print_usage() {
     println!("          --rounds N --batch N --candidates N --seed N [--sequential]");
     println!("          [--feature-noise F | --label-noise F]");
     println!("          (any method may run pipelined; --sequential opts out)");
+    println!("  fleet   --sessions N --model <m> --methods a,b --rounds N --seed N");
+    println!("          [--policy rr|fewest|staleness] [--sources stream,replay,subset,drift]");
+    println!("          [--pipelined]  (methods/sources cycle across the N sessions;");
+    println!("          sessions interleave round-by-round on the host scheduler)");
     println!("  exp     <id> [--fast] [--models a,b|all] [--seed N]   (exp list: ids)");
     println!("  fl      --model <m> --method <m> [--fast]");
     println!("  models  [--artifacts DIR]");
@@ -97,6 +104,127 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     let name = format!("run_{}_{}", cfg.model, cfg.method.name());
     let path = write_result(&name, &record.to_json())?;
+    println!("record -> {}", path.display());
+    Ok(())
+}
+
+/// `titan fleet` — N concurrent device sessions multiplexed on the host
+/// scheduler, with methods and data sources cycling per session.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    use titan::coordinator::host::{parse_policy, FleetBuilder, FleetProgress};
+    use titan::coordinator::session::default_source;
+    use titan::data::{ClassSubsetSource, DriftSource, ReplaySource, SynthTask};
+
+    let n = args.get_usize("sessions", 3)?;
+    if n == 0 {
+        return Err(titan::Error::Config("--sessions must be > 0".into()));
+    }
+    let methods: Vec<Method> = args
+        .get_list("methods", &["titan", "rs"])
+        .iter()
+        .map(|m| Method::parse(m))
+        .collect::<Result<Vec<_>>>()?;
+    if methods.is_empty() {
+        return Err(titan::Error::Config("--methods must name at least one method".into()));
+    }
+    let source_kinds = args.get_list("sources", &["stream", "replay", "subset", "drift"]);
+    if source_kinds.is_empty() {
+        return Err(titan::Error::Config("--sources must name at least one source".into()));
+    }
+    let policy = parse_policy(&args.get_str("policy", "rr"))?;
+
+    let mut fleet = FleetBuilder::new()
+        .policy_boxed(policy)
+        .observe(FleetProgress::every(10));
+    for i in 0..n {
+        let method = methods[i % methods.len()];
+        let mut cfg = presets::table1(&args.get_str("model", "mlp"), method).apply_args(args)?;
+        // fleet-sized default round budget; --rounds still overrides
+        cfg.rounds = args.get_usize("rounds", 50)?;
+        // distinct streams per session; apply_args already set the base seed
+        cfg.seed = cfg.seed.wrapping_add(i as u64);
+        // host multiplexing is the point: step bodies run sequentially
+        // unless the selector threads are explicitly requested (note:
+        // pipelined param-dependent selection is timing-sensitive, so
+        // --pipelined trades the solo-identical-records guarantee away)
+        cfg.pipeline = args.has_flag("pipelined");
+        cfg.validate()?;
+
+        let kind = source_kinds[i % source_kinds.len()].clone();
+        let mut builder = SessionBuilder::new(cfg.clone());
+        builder = match kind.as_str() {
+            "stream" => builder, // the default synthetic stream
+            "replay" => {
+                let mut stream = default_source(&cfg);
+                builder.source(ReplaySource::capture(&mut stream, cfg.stream_per_round * 2)?)
+            }
+            "subset" => {
+                let task = SynthTask::for_model(&cfg.model, cfg.seed);
+                let c = task.num_classes();
+                let k = (c / 2).max(1);
+                let classes: Vec<u32> = (0..k).map(|j| ((i + j) % c) as u32).collect();
+                builder.source(ClassSubsetSource::new(task, classes, cfg.seed ^ 0xF1EE7)?)
+            }
+            "drift" => {
+                let task = SynthTask::for_model(&cfg.model, cfg.seed);
+                let c = task.num_classes();
+                // continual shape: uniform mix drifting toward this
+                // session's "home" classes over the first half of the run
+                let start = vec![1.0; c];
+                let end: Vec<f64> = (0..c)
+                    .map(|y| if y % 2 == i % 2 { 3.0 } else { 0.25 })
+                    .collect();
+                let drift_rounds = (cfg.rounds / 2).max(1);
+                let seed = cfg.seed ^ 0xD21F7;
+                builder.source(DriftSource::new(task, start, end, drift_rounds, seed)?)
+            }
+            other => {
+                return Err(titan::Error::Config(format!(
+                    "unknown source kind {other:?} (stream|replay|subset|drift)"
+                )))
+            }
+        };
+        let name = format!("s{i}-{}-{kind}", method.name());
+        fleet = fleet.session(name, builder.build()?);
+    }
+
+    let record = fleet.run()?;
+    let rows: Vec<Vec<String>> = record
+        .names
+        .iter()
+        .zip(&record.records)
+        .zip(&record.session_rounds)
+        .map(|((name, rec), &rounds)| {
+            vec![
+                name.clone(),
+                rounds.to_string(),
+                format!("{:.2}", rec.final_accuracy * 100.0),
+                format!("{:.1}", rec.total_device_ms / 1e3),
+                format!("{:.0}", rec.energy_j),
+            ]
+        })
+        .collect();
+    println!(
+        "fleet: {} sessions, policy {}, {} interleaved rounds",
+        record.records.len(),
+        record.policy,
+        record.rounds_executed
+    );
+    println!(
+        "{}",
+        render_table(
+            &["session", "rounds", "final_acc_%", "device_s", "energy_J"],
+            &rows
+        )
+    );
+    println!(
+        "host: {:.1}s wall, scheduler overhead {:.3} ms/round, {} device ops, {:.1} MiB resident",
+        record.total_host_ms / 1e3,
+        record.sched_overhead_per_round_ms(),
+        record.device_ops,
+        record.peak_memory_bytes as f64 / (1024.0 * 1024.0)
+    );
+    let path = write_result("fleet", &record.to_json())?;
     println!("record -> {}", path.display());
     Ok(())
 }

@@ -7,10 +7,12 @@
 //! `cargo test` stays green on a fresh checkout.
 
 use titan::config::{presets, Method, NoiseKind, RunConfig};
+use titan::coordinator::host::{parse_policy, FleetBuilder};
 use titan::coordinator::session::observers::EarlyStop;
-use titan::coordinator::SessionBuilder;
-use titan::data::{DataSource, ReplaySource, StreamSource, SynthTask};
+use titan::coordinator::{Session, SessionBuilder, StepEvent};
+use titan::data::{DataSource, DriftSource, ReplaySource, StreamSource, SynthTask};
 use titan::device::idle::IdleTrace;
+use titan::metrics::RunRecord;
 
 fn have_artifacts() -> bool {
     let ok = std::path::Path::new("artifacts/mlp/meta.json").exists();
@@ -255,6 +257,126 @@ fn replay_source_with_early_stop_session() {
     assert!(!outcomes.is_empty());
     assert!(outcomes.len() <= 30);
     assert!(record.final_accuracy.is_finite());
+}
+
+/// Deterministic RunRecord fields (everything off the host wall clock).
+fn assert_records_equivalent(a: &RunRecord, b: &RunRecord) {
+    assert_eq!(a.method, b.method);
+    assert_eq!(a.model, b.model);
+    assert_eq!(a.final_accuracy, b.final_accuracy);
+    assert_eq!(a.total_device_ms, b.total_device_ms);
+    assert_eq!(a.energy_j, b.energy_j);
+    assert_eq!(a.avg_power_w, b.avg_power_w);
+    assert_eq!(a.peak_memory_bytes, b.peak_memory_bytes);
+    assert_eq!(a.round_device_ms, b.round_device_ms);
+    assert_eq!(a.curve.len(), b.curve.len());
+    for (x, y) in a.curve.iter().zip(&b.curve) {
+        assert_eq!(x.round, y.round);
+        assert_eq!(x.device_ms, y.device_ms);
+        assert_eq!(x.train_loss, y.train_loss);
+        assert_eq!(x.test_loss, y.test_loss);
+        assert_eq!(x.test_accuracy, y.test_accuracy);
+    }
+}
+
+/// Three heterogeneous fleet members: different methods, round budgets
+/// and data sources, all sequential (deterministic under interleaving).
+fn fleet_member(i: usize) -> Session {
+    let (method, rounds) = [(Method::Titan, 6), (Method::Rs, 4), (Method::Cis, 5)][i];
+    let mut cfg = base(method, rounds);
+    cfg.pipeline = false;
+    cfg.eval_every = 2;
+    cfg.seed += i as u64;
+    let builder = SessionBuilder::new(cfg.clone()).sequential();
+    let builder = match i {
+        1 => {
+            let task = SynthTask::for_model(&cfg.model, cfg.seed);
+            let end: Vec<f64> = (0..6).map(|y| if y < 3 { 3.0 } else { 0.25 }).collect();
+            builder.source(DriftSource::new(task, vec![1.0; 6], end, 2, cfg.seed).unwrap())
+        }
+        2 => {
+            let mut stream = StreamSource::new(
+                SynthTask::for_model(&cfg.model, cfg.seed),
+                cfg.seed,
+                cfg.noise,
+            );
+            builder.source(ReplaySource::capture(&mut stream, 300).unwrap())
+        }
+        _ => builder,
+    };
+    builder.build().unwrap()
+}
+
+/// The ISSUE's fleet determinism pin: under every scheduling policy,
+/// each session's final record in a 3-session fleet is identical to the
+/// record produced by running that session alone.
+#[test]
+fn fleet_sessions_match_solo_runs_under_every_policy() {
+    if !have_artifacts() {
+        return;
+    }
+    let solo: Vec<RunRecord> = (0..3).map(|i| fleet_member(i).run().unwrap().0).collect();
+    for policy in ["rr", "fewest", "staleness"] {
+        let mut fleet = FleetBuilder::new().policy_boxed(parse_policy(policy).unwrap());
+        for i in 0..3 {
+            fleet = fleet.session(format!("s{i}"), fleet_member(i));
+        }
+        let record = fleet.run().unwrap();
+        assert_eq!(record.records.len(), 3, "{policy}");
+        assert_eq!(record.session_rounds, vec![6, 4, 5], "{policy}");
+        assert_eq!(record.rounds_executed, 15, "{policy}");
+        for (f, s) in record.records.iter().zip(&solo) {
+            assert_records_equivalent(f, s);
+        }
+        // aggregate accounting is the sum of the solo runs
+        let want_device: f64 = solo.iter().map(|r| r.total_device_ms).sum();
+        assert!((record.total_device_ms - want_device).abs() < 1e-9, "{policy}");
+        let want_mem: usize = solo.iter().map(|r| r.peak_memory_bytes).sum();
+        assert_eq!(record.peak_memory_bytes, want_mem, "{policy}");
+    }
+}
+
+/// Stepping a session by hand through the public API yields the same
+/// record as `run` — end-to-end, over a non-default source.
+#[test]
+fn manual_stepping_matches_run_end_to_end() {
+    if !have_artifacts() {
+        return;
+    }
+    let (solo, solo_out) = fleet_member(1).run().unwrap();
+    let mut session = fleet_member(1);
+    let stepped = loop {
+        match session.step().unwrap() {
+            StepEvent::RoundCompleted(_) => {}
+            StepEvent::Finished(record) => break record,
+        }
+    };
+    assert_records_equivalent(&solo, &stepped);
+    assert_eq!(solo_out.len(), session.outcomes().len());
+}
+
+/// DriftSource through the full Titan stack: the class mix the filter
+/// sees moves over the run and the session still learns/completes.
+#[test]
+fn drift_source_through_titan_session() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base(Method::Titan, 12);
+    cfg.pipeline = false;
+    let task = SynthTask::for_model(&cfg.model, cfg.seed);
+    // uniform -> one dominant class over the first 6 rounds
+    let mut end = vec![0.25; 6];
+    end[0] = 6.0;
+    let drift = DriftSource::new(task, vec![1.0; 6], end, 6, cfg.seed).unwrap();
+    let (record, outcomes) = SessionBuilder::new(cfg.clone())
+        .sequential()
+        .source(drift)
+        .run()
+        .unwrap();
+    assert_eq!(outcomes.len(), 12);
+    assert!(record.final_accuracy.is_finite());
+    assert!(outcomes.iter().all(|o| o.selector.candidates <= cfg.candidate_size));
 }
 
 #[test]

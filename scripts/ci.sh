@@ -3,8 +3,11 @@
 #
 #   1. cargo fmt --check          formatting drift
 #   2. cargo clippy -D warnings   lints (all targets: lib, bins, tests, benches)
-#   3. tier-1 verify              cargo build --release && cargo test -q
-#   4. bench smoke                every bench target in fast mode
+#   3. cargo doc -D warnings      rustdoc (intra-doc links, examples)
+#   4. tier-1 verify              cargo build --release && cargo test -q
+#   5. fleet smoke                tiny multi-session scheduler run
+#      (artifact-gated; skipped on a fresh checkout like the benches)
+#   6. bench smoke                every bench target in fast mode
 #      (TITAN_BENCH_FAST=1 via scripts/bench_smoke.sh; catches bench
 #      bit-rot without paying full measurement windows)
 #
@@ -25,9 +28,20 @@ cargo fmt --check
 echo "== clippy =="
 cargo clippy --all-targets -- -D warnings
 
+echo "== docs =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "== tier-1 verify =="
 cargo build --release
 cargo test -q
+
+echo "== fleet smoke =="
+if [ -f artifacts/mlp/meta.json ]; then
+  cargo run --release --quiet -- fleet --sessions 3 --rounds 4 \
+    --eval-every 2 --test-size 200 --policy fewest
+else
+  echo "skipping fleet smoke: no artifacts (run \`make artifacts\`)"
+fi
 
 if [ "$run_bench" = 1 ]; then
   echo "== bench smoke (fast mode) =="
