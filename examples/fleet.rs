@@ -5,6 +5,12 @@
 //! fewest-rounds-first policy; the per-session records are identical to
 //! running each session alone.
 //!
+//! The fleet is **crash-safe**: every member checkpoints to
+//! `results/fleet_example/` every 5 rounds, so killing the example
+//! mid-run (Ctrl-C) and re-running it resumes each member at its own
+//! saved round instead of restarting from 0. Members that already
+//! finished are skipped; delete the directory for a fresh start.
+//!
 //! ```sh
 //! make artifacts && cargo run --release --example fleet [rounds]
 //! ```
@@ -26,6 +32,11 @@ fn main() -> titan::Result<()> {
 
     println!("== Titan fleet: 3 sessions x {rounds} rounds, fewest-rounds-first ==\n");
 
+    // per-member checkpoints: kill + re-run resumes each member at its
+    // own saved round (delete the directory for a fresh start)
+    let ck_dir = std::path::Path::new("results/fleet_example");
+    std::fs::create_dir_all(ck_dir)?;
+
     let mut fleet = FleetBuilder::new()
         .policy(FewestRoundsFirst)
         .observe(FleetProgress::every(10));
@@ -46,7 +57,18 @@ fn main() -> titan::Result<()> {
             let drift = DriftSource::new(task, vec![1.0; c], end, (rounds / 2).max(1), cfg.seed)?;
             builder = builder.source(drift);
         }
-        fleet = fleet.session(format!("dev{i}-{}", method.name()), builder.build()?);
+        let name = format!("dev{i}-{}", method.name());
+        fleet = fleet.session_checkpointed(
+            name.clone(),
+            builder,
+            ck_dir.join(format!("{name}.json")),
+            5,
+            true,
+        )?;
+    }
+    if fleet.is_empty() {
+        println!("all sessions already complete — delete results/fleet_example to re-run");
+        return Ok(());
     }
 
     let record = fleet.run()?;

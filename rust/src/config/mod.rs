@@ -237,6 +237,57 @@ impl RunConfig {
         ])
     }
 
+    /// Rebuild a config from its [`RunConfig::to_json`] serialization —
+    /// the checkpoint-resume path (`titan run --resume` reconstructs the
+    /// run's exact config from the snapshot instead of trusting re-typed
+    /// flags). Every field is required; unknown noise kinds error.
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let noise = match j.get("noise")? {
+            Json::Str(s) if s == "none" => NoiseKind::None,
+            obj @ Json::Obj(_) => match obj.get("kind")?.as_str()? {
+                "feature" => NoiseKind::Feature {
+                    frac: obj.get("frac")?.as_f64()? as f32,
+                    sigma: obj.get("sigma")?.as_f64()? as f32,
+                },
+                "label" => NoiseKind::Label { frac: obj.get("frac")?.as_f64()? as f32 },
+                other => {
+                    return Err(Error::Config(format!("unknown noise kind {other:?}")));
+                }
+            },
+            other => {
+                return Err(Error::Config(format!("bad noise field {other:?}")));
+            }
+        };
+        Ok(RunConfig {
+            model: j.get("model")?.as_str()?.to_string(),
+            method: Method::parse(j.get("method")?.as_str()?)?,
+            seed: j.get("seed")?.as_f64()? as u64,
+            rounds: j.get("rounds")?.as_usize()?,
+            stream_per_round: j.get("stream_per_round")?.as_usize()?,
+            batch_size: j.get("batch_size")?.as_usize()?,
+            candidate_size: j.get("candidate_size")?.as_usize()?,
+            filter_blocks: j.get("filter_blocks")?.as_usize()?,
+            filter_lambda: j.get("filter_lambda")?.as_f64()? as f32,
+            lr: j.get("lr")?.as_f64()? as f32,
+            lr_decay: j.get("lr_decay")?.as_f64()? as f32,
+            lr_decay_every: j.get("lr_decay_every")?.as_usize()?,
+            eval_every: j.get("eval_every")?.as_usize()?,
+            test_size: j.get("test_size")?.as_usize()?,
+            noise,
+            pipeline: j.get("pipeline")?.as_bool()?,
+            artifacts_dir: j.get("artifacts_dir")?.as_str()?.to_string(),
+        })
+    }
+
+    /// Canonical config fingerprint: the compact JSON serialization
+    /// (object keys are sorted, so this is deterministic). Checkpoint
+    /// resume compares fingerprints to refuse a snapshot whose run was
+    /// configured differently — a silent mismatch would diverge instead
+    /// of erroring.
+    pub fn fingerprint(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
     /// Sanity checks that would otherwise surface as confusing failures
     /// deep in the pipeline.
     pub fn validate(&self) -> Result<()> {
@@ -327,5 +378,39 @@ mod tests {
         assert_eq!(j.get("model").unwrap().as_str().unwrap(), "mlp");
         assert_eq!(j.get("method").unwrap().as_str().unwrap(), "titan");
         assert_eq!(j.get("batch_size").unwrap().as_usize().unwrap(), 10);
+    }
+
+    #[test]
+    fn from_json_roundtrips_every_field() {
+        let cfg = RunConfig {
+            model: "squeeze".into(),
+            method: Method::Cis,
+            seed: 12345,
+            rounds: 77,
+            noise: NoiseKind::Feature { frac: 0.25, sigma: 1.5 },
+            pipeline: false,
+            ..RunConfig::default()
+        };
+        let restored = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(restored.fingerprint(), cfg.fingerprint());
+        assert_eq!(restored.model, "squeeze");
+        assert_eq!(restored.method, Method::Cis);
+        assert_eq!(restored.seed, 12345);
+        assert!(matches!(restored.noise, NoiseKind::Feature { frac, sigma }
+            if (frac - 0.25).abs() < 1e-7 && (sigma - 1.5).abs() < 1e-7));
+        assert!(!restored.pipeline);
+
+        let label = RunConfig {
+            noise: NoiseKind::Label { frac: 0.4 },
+            ..RunConfig::default()
+        };
+        let back = RunConfig::from_json(&label.to_json()).unwrap();
+        assert_eq!(back.fingerprint(), label.fingerprint());
+
+        // fingerprints distinguish differently configured runs
+        assert_ne!(cfg.fingerprint(), RunConfig::default().fingerprint());
+        // and a truncated object errors instead of defaulting
+        assert!(RunConfig::from_json(&Json::obj(vec![("model", Json::Str("mlp".into()))]))
+            .is_err());
     }
 }

@@ -26,6 +26,13 @@
 //! pick + bookkeeping + observer fan-out cost per interleaved round,
 //! tracked in PERF.md).
 //!
+//! Edge fleets get killed; [`FleetBuilder::session_checkpointed`] wires
+//! each member to its own on-disk snapshot (the
+//! [`observers::Checkpoint`](crate::coordinator::session::observers::Checkpoint)
+//! observer) so a restarted `titan fleet --resume` run picks every
+//! member back up at its own saved round instead of re-spending
+//! device-ms from round 0.
+//!
 //! ```no_run
 //! use titan::config::{presets, Method};
 //! use titan::coordinator::host::{FewestRoundsFirst, FleetBuilder};
@@ -43,7 +50,10 @@
 //! # Ok::<(), titan::Error>(())
 //! ```
 
-use crate::coordinator::session::{Session, StepEvent};
+use std::path::PathBuf;
+
+use crate::coordinator::session::{observers::Checkpoint, Session, SessionBuilder, StepEvent};
+use crate::coordinator::snapshot::{load_checkpoint, Loaded};
 use crate::coordinator::RoundOutcome;
 use crate::metrics::RunRecord;
 use crate::util::json::Json;
@@ -246,6 +256,80 @@ impl FleetBuilder {
         self.names.push(name.into());
         self.sessions.push(Box::new(session));
         self
+    }
+
+    /// Add a session that checkpoints to `path` every `every` rounds,
+    /// and — when `resume` is set — restarts from the snapshot already
+    /// at `path`, so a killed `titan fleet` run picks each member back
+    /// up **at its own saved round**:
+    ///
+    /// - no file at `path` (or `resume` unset): the member starts fresh;
+    /// - a mid-run snapshot: the member resumes from it (the snapshot's
+    ///   config fingerprint must match `builder`'s config — mismatches
+    ///   error instead of silently diverging);
+    /// - a completion marker **for the same config**: the member already
+    ///   finished, so it is **skipped** (logged at info level), and the
+    ///   resumed fleet runs only the unfinished members. A completion
+    ///   marker whose recorded config does not match `builder`'s errors
+    ///   like a mismatched mid-run snapshot would — skipping it would
+    ///   silently drop a run the user actually asked for.
+    pub fn session_checkpointed(
+        mut self,
+        name: impl Into<String>,
+        builder: SessionBuilder,
+        path: impl Into<PathBuf>,
+        every: usize,
+        resume: bool,
+    ) -> Result<Self> {
+        let name = name.into();
+        let path = path.into();
+        let mut builder = builder;
+        if resume && path.exists() {
+            match load_checkpoint(&path)? {
+                Loaded::Resumable(snap) => {
+                    log::info!(
+                        "fleet: resuming {name:?} from {} at round {}",
+                        path.display(),
+                        snap.round
+                    );
+                    builder = builder.resume_from_snapshot(*snap);
+                }
+                Loaded::Complete { round, config, .. } => {
+                    // Json::Null means the run finished before its first
+                    // cadence snapshot — no config to verify against
+                    if config != Json::Null
+                        && config.to_string_compact() != builder.cfg().fingerprint()
+                    {
+                        return Err(Error::Config(format!(
+                            "{}: completion marker belongs to a differently configured \
+                             run — refusing to skip {name:?} (delete the file to start over)",
+                            path.display()
+                        )));
+                    }
+                    log::info!(
+                        "fleet: {name:?} already finished ({round} rounds per {}), skipping",
+                        path.display()
+                    );
+                    return Ok(self);
+                }
+            }
+        }
+        let session = builder.observe(Checkpoint::every(path, every)).build()?;
+        self.names.push(name);
+        self.sessions.push(Box::new(session));
+        Ok(self)
+    }
+
+    /// Sessions added so far (resume may skip completed members — see
+    /// [`FleetBuilder::session_checkpointed`] — so a caller can detect an
+    /// everything-already-finished resume before `build` errors on an
+    /// empty fleet).
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
     }
 
     /// Replace the default round-robin policy.

@@ -36,6 +36,7 @@ pub mod pipeline;
 pub mod round;
 pub mod sequential;
 pub mod session;
+pub mod snapshot;
 
 use std::sync::Arc;
 
@@ -53,6 +54,7 @@ use crate::{Error, Result};
 pub use host::{Fleet, FleetBuilder, FleetObserver, FleetRecord, SchedPolicy};
 pub use round::{RoundOutcome, SelectorReport};
 pub use session::{Control, ExecBackend, RoundObserver, Session, SessionBuilder, StepEvent};
+pub use snapshot::SessionSnapshot;
 
 /// A selected training batch with its unbiasedness weights (see
 /// `selection::SelectedBatch` — these are the owned samples crossing the
@@ -260,6 +262,57 @@ impl SelectorEngine {
     pub fn seen_per_class(&self) -> &[u64] {
         &self.seen_per_class
     }
+
+    /// Export the selection-side run state for a session checkpoint: the
+    /// selection RNG, the stream class counts, and (Titan) the coarse
+    /// filter's estimators + buffer. Strategies themselves are stateless,
+    /// and the runtime's params are re-synced from the trainer before
+    /// every selection, so this is the complete mutable state.
+    pub fn export_state(&self) -> SelectorState {
+        SelectorState {
+            rng: self.rng.state(),
+            seen_per_class: self.seen_per_class.clone(),
+            filter: self.filter.as_ref().map(|f| f.export_state()),
+        }
+    }
+
+    /// Restore a state exported by [`SelectorEngine::export_state`] into
+    /// a freshly built engine for the same config (checkpoint resume).
+    pub fn restore_state(&mut self, st: SelectorState) -> Result<()> {
+        if st.seen_per_class.len() != self.seen_per_class.len() {
+            return Err(Error::Config(format!(
+                "selector restore: {} classes in snapshot, engine has {}",
+                st.seen_per_class.len(),
+                self.seen_per_class.len()
+            )));
+        }
+        if st.filter.is_some() != self.filter.is_some() {
+            return Err(Error::Config(
+                "selector restore: snapshot and engine disagree on the coarse filter".into(),
+            ));
+        }
+        self.rng = Xoshiro256::from_state(st.rng)?;
+        self.seen_per_class = st.seen_per_class;
+        if let (Some(filter), Some(fs)) = (self.filter.as_mut(), st.filter) {
+            filter.restore_state(fs)?;
+        }
+        Ok(())
+    }
+}
+
+/// Exported [`SelectorEngine`] run state — the selection half of a
+/// [`snapshot::SessionSnapshot`]. On the pipelined backend the selector
+/// thread attaches one of these to every selected batch (when an observer
+/// asked for snapshots), since the trainer thread cannot reach across to
+/// export it at checkpoint time.
+#[derive(Clone, Debug)]
+pub struct SelectorState {
+    /// Raw xoshiro256** state of the selection RNG.
+    pub rng: [u64; 4],
+    /// Stream class frequencies |S_y| observed so far.
+    pub seen_per_class: Vec<u64>,
+    /// Coarse-filter state (Titan only).
+    pub filter: Option<crate::filter::FilterState>,
 }
 
 /// Trainer process: SGD + eval + lr schedule.
@@ -335,6 +388,16 @@ impl TrainerEngine {
 
     pub fn round(&self) -> usize {
         self.round
+    }
+
+    /// Restore mid-run trainer state from a checkpoint: the model
+    /// parameters and the round counter (which drives the lr-decay
+    /// schedule — restoring params without it would silently train the
+    /// tail at the wrong learning rate).
+    pub fn restore(&mut self, round: usize, params: Vec<f32>) -> Result<()> {
+        self.rt.import_params(params)?;
+        self.round = round;
+        Ok(())
     }
 }
 

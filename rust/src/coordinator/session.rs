@@ -33,8 +33,11 @@
 //!   device streams and drifting class mixes plug in without touching the
 //!   loop.
 //! - [`RoundObserver`] — per-round / per-eval hooks that can log
-//!   progress, audit budgets, checkpoint progress to disk, or stop the
-//!   run early by returning [`Control::Stop`].
+//!   progress, audit budgets, stop the run early by returning
+//!   [`Control::Stop`], or persist full session snapshots
+//!   ([`RoundObserver::on_snapshot`], consumed by the [`observers::Checkpoint`]
+//!   observer) so a killed run resumes via [`SessionBuilder::resume_from`]
+//!   instead of re-spending device time from round 0.
 //!
 //! Execution is **step-driven**: a [`Session`] is a state machine whose
 //! [`Session::step`] runs exactly one round and yields a [`StepEvent`]
@@ -63,13 +66,16 @@ use std::sync::Arc;
 use std::thread;
 
 use crate::config::RunConfig;
-use crate::coordinator::{RoundOutcome, SelectorEngine, SelectorReport, TrainBatch, TrainerEngine};
+use crate::coordinator::snapshot::{load_checkpoint, Loaded, SessionSnapshot};
+use crate::coordinator::{
+    RoundOutcome, SelectorEngine, SelectorReport, SelectorState, TrainBatch, TrainerEngine,
+};
 use crate::data::{DataSource, StreamSource, SynthTask};
 use crate::device::idle::IdleTrace;
 use crate::device::{memory, DeviceSim, Lane, Op};
 use crate::metrics::{CurvePoint, RunRecord};
 use crate::util::sync::Latest;
-use crate::util::timer::Stopwatch;
+use crate::util::timer::{LatencyRecorder, Stopwatch};
 use crate::{Error, Result};
 
 /// How a session executes the round loop.
@@ -100,6 +106,17 @@ impl ExecBackend {
     pub fn is_pipelined(&self) -> bool {
         matches!(self, ExecBackend::Pipelined { .. })
     }
+
+    /// Backend kind for checkpoint fingerprints (`"sequential"` /
+    /// `"pipelined"`). Idle traces are configuration the resuming caller
+    /// re-supplies; the kind is what a snapshot must not silently cross.
+    pub fn kind(&self) -> &'static str {
+        if self.is_pipelined() {
+            "pipelined"
+        } else {
+            "sequential"
+        }
+    }
 }
 
 /// Loop control returned by observer hooks.
@@ -129,17 +146,50 @@ pub trait RoundObserver {
     fn on_eval(&mut self, _point: &CurvePoint) -> Control {
         Control::Continue
     }
+
+    /// Whether this observer ever consumes full session snapshots
+    /// ([`RoundObserver::on_snapshot`]). The session only pays the
+    /// per-round selector-state capture on the pipelined backend (the
+    /// selector thread attaches its state to each batch, since the
+    /// trainer thread cannot reach across at checkpoint time) when some
+    /// attached observer returns true. [`RoundObserver::snapshot_due`] is
+    /// only consulted when this returns true.
+    fn wants_snapshots(&self) -> bool {
+        false
+    }
+
+    /// Whether a snapshot is due after `rounds_done` completed rounds
+    /// (asked after the round's `on_round`/`on_eval` hooks, so the
+    /// snapshot the observer then receives already includes that round's
+    /// eval point).
+    fn snapshot_due(&self, _rounds_done: usize) -> bool {
+        false
+    }
+
+    /// Receive the full session snapshot requested via
+    /// [`RoundObserver::snapshot_due`]. Building a snapshot costs one
+    /// parameter-vector clone plus the filter-state copy, so it happens
+    /// at most once per round, shared by every observer that asked.
+    fn on_snapshot(&mut self, _snapshot: &SessionSnapshot) {}
+
+    /// Called exactly once when the run finishes, with the final record
+    /// (after teardown, final eval and totals). This is where persisting
+    /// observers flush their tail — rounds after the last cadence
+    /// multiple would otherwise be lost on disk.
+    fn on_finish(&mut self, _record: &RunRecord) {}
 }
 
 /// Built-in observers: progress logging, early stopping, budget audits,
 /// JSON checkpointing.
 pub mod observers {
     use std::path::{Path, PathBuf};
+    use std::sync::atomic::{AtomicU64, Ordering};
     use std::sync::{Arc, Mutex};
 
-    use super::{Control, RoundObserver};
+    use super::{Control, RoundObserver, SessionSnapshot};
+    use crate::coordinator::snapshot::{completion_marker, load_checkpoint, Loaded};
     use crate::coordinator::RoundOutcome;
-    use crate::metrics::CurvePoint;
+    use crate::metrics::{CurvePoint, RunRecord};
     use crate::util::json::Json;
 
     /// Logs round loss and eval checkpoints at debug level via the `log`
@@ -233,103 +283,162 @@ pub mod observers {
         }
     }
 
-    /// Snapshots run progress — the completed-round counter plus the eval
-    /// accuracy trace — to a JSON file every `k` completed rounds (via
-    /// [`crate::util::json`]), so an interrupted run leaves a resumable
-    /// trace on disk. [`Checkpoint::load`] reads a snapshot back. Write
-    /// failures are logged at warn level and never abort the run.
+    /// Persists a **full session snapshot**
+    /// ([`crate::coordinator::snapshot::SessionSnapshot`]) to a JSON file
+    /// every `k` completed rounds, and a small completion marker when the
+    /// run finishes — so a killed run resumes from its last snapshot via
+    /// [`super::SessionBuilder::resume_from`] and a finished run's tail
+    /// (eval points after the last cadence multiple) is never lost.
+    ///
+    /// Writes are atomic (unique temp file + rename): an interruption
+    /// mid-write never destroys the previous valid snapshot, and two
+    /// observers checkpointing into the same directory can never rename
+    /// each other's half-written files into place (the temp name is
+    /// unique per observer instance and process). Write failures are
+    /// logged at warn level and never abort the run.
     pub struct Checkpoint {
         path: PathBuf,
+        /// Unique per instance — see [`Checkpoint::unique_tmp`].
+        tmp: PathBuf,
         every: usize,
-        rounds_done: usize,
-        trace: Vec<(usize, f64)>,
+        /// Config of the observed run, cached off the snapshots so the
+        /// completion marker can carry it (Null if the run finished
+        /// before the first cadence snapshot).
+        config: Json,
     }
 
-    /// A loaded checkpoint snapshot.
+    /// Summary of a checkpoint file (mid-run snapshot or completion
+    /// marker) — the cheap read API; resume goes through
+    /// [`super::SessionBuilder::resume_from`] instead.
     #[derive(Clone, Debug, PartialEq)]
     pub struct CheckpointState {
-        /// Completed rounds at snapshot time (1-based counter).
+        /// Completed rounds at write time (1-based counter).
         pub round: usize,
-        /// `(round, test_accuracy)` eval checkpoints seen so far.
+        /// `(round, test_accuracy)` eval checkpoints written so far.
         pub accuracy_trace: Vec<(usize, f64)>,
+        /// Whether the run finished (nothing left to resume).
+        pub complete: bool,
     }
+
+    /// Distinguishes concurrent writers to the same directory within one
+    /// process; the pid handles concurrent processes.
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
     impl Checkpoint {
         /// Snapshot to `path` every `every` completed rounds (> 0).
+        ///
+        /// Construction also sweeps temp files a previous incarnation
+        /// left behind: a kill between write and rename orphans a
+        /// uniquely named `.tmp` sibling, and since every new instance
+        /// generates a fresh name, nothing would ever reclaim them
+        /// across crash/resume cycles. Observers are constructed before
+        /// any writes happen, so the sweep cannot race a live writer in
+        /// normal use; at worst a removed in-flight temp costs one
+        /// logged, retried-next-cadence write.
         pub fn every(path: impl Into<PathBuf>, every: usize) -> Checkpoint {
             assert!(every > 0, "checkpoint cadence must be positive");
-            Checkpoint {
-                path: path.into(),
-                every,
-                rounds_done: 0,
-                trace: Vec::new(),
+            let path = path.into();
+            Checkpoint::sweep_stale_tmp(&path);
+            let tmp = Checkpoint::unique_tmp(&path);
+            Checkpoint { path, tmp, every, config: Json::Null }
+        }
+
+        /// Remove `<file_name>.*.tmp` siblings from earlier instances.
+        fn sweep_stale_tmp(path: &Path) {
+            let (Some(dir), Some(stem)) = (path.parent(), path.file_name()) else {
+                return;
+            };
+            let Some(stem) = stem.to_str() else { return };
+            let dir = if dir.as_os_str().is_empty() { Path::new(".") } else { dir };
+            let Ok(entries) = std::fs::read_dir(dir) else { return };
+            for entry in entries.flatten() {
+                let name = entry.file_name();
+                let Some(name) = name.to_str() else { continue };
+                if name.len() > stem.len() + 1
+                    && name.starts_with(stem)
+                    && name.as_bytes()[stem.len()] == b'.'
+                    && name.ends_with(".tmp")
+                {
+                    let _ = std::fs::remove_file(entry.path());
+                }
             }
         }
 
-        fn snapshot(&self) -> Json {
-            let trace = Json::Arr(
-                self.trace
-                    .iter()
-                    .map(|&(round, acc)| {
-                        Json::obj(vec![
-                            ("round", Json::Num(round as f64)),
-                            ("test_accuracy", Json::Num(acc)),
-                        ])
-                    })
-                    .collect(),
-            );
-            Json::obj(vec![
-                ("round", Json::Num(self.rounds_done as f64)),
-                ("accuracy_trace", trace),
-            ])
+        /// `<path>.<pid>.<seq>.tmp` — unique per observer instance, so
+        /// fleet sessions checkpointing under the same stem cannot race
+        /// on a shared temp file.
+        fn unique_tmp(path: &Path) -> PathBuf {
+            let mut name = path.as_os_str().to_owned();
+            name.push(format!(
+                ".{}.{}.tmp",
+                std::process::id(),
+                TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+            ));
+            PathBuf::from(name)
         }
 
-        /// Atomic snapshot write (temp file + rename): an interruption
-        /// mid-write must never destroy the previous valid snapshot —
-        /// surviving interruptions is the whole point of the observer.
-        fn write(&self) {
-            let mut tmp_name = self.path.as_os_str().to_owned();
-            tmp_name.push(".tmp");
-            let tmp = PathBuf::from(tmp_name);
-            let result = std::fs::write(&tmp, self.snapshot().to_string_pretty())
-                .and_then(|()| std::fs::rename(&tmp, &self.path));
+        /// Atomic write: temp file + rename.
+        fn write(&self, j: &Json) {
+            let result = std::fs::write(&self.tmp, j.to_string_compact())
+                .and_then(|()| std::fs::rename(&self.tmp, &self.path));
             if let Err(e) = result {
                 log::warn!("checkpoint write {} failed: {e}", self.path.display());
             }
         }
 
-        /// Load a snapshot written by this observer.
+        /// Summarize a checkpoint file written by this observer.
         pub fn load(path: &Path) -> crate::Result<CheckpointState> {
-            let j = Json::parse_file(path)?;
-            let round = j.get("round")?.as_usize()?;
-            let accuracy_trace = j
-                .get("accuracy_trace")?
-                .as_arr()?
-                .iter()
-                .map(|p| Ok((p.get("round")?.as_usize()?, p.get("test_accuracy")?.as_f64()?)))
-                .collect::<crate::Result<Vec<_>>>()?;
-            Ok(CheckpointState { round, accuracy_trace })
+            match load_checkpoint(path)? {
+                Loaded::Resumable(snap) => Ok(CheckpointState {
+                    round: snap.round,
+                    accuracy_trace: snap
+                        .curve
+                        .iter()
+                        .map(|p| (p.round, p.test_accuracy))
+                        .collect(),
+                    complete: false,
+                }),
+                Loaded::Complete { round, accuracy_trace, .. } => {
+                    Ok(CheckpointState { round, accuracy_trace, complete: true })
+                }
+            }
         }
     }
 
     impl RoundObserver for Checkpoint {
-        fn on_round(&mut self, o: &RoundOutcome) -> Control {
-            self.rounds_done = o.round + 1;
-            if self.rounds_done % self.every == 0 {
-                self.write();
-            }
-            Control::Continue
+        fn wants_snapshots(&self) -> bool {
+            true
         }
 
-        fn on_eval(&mut self, p: &CurvePoint) -> Control {
-            self.trace.push((p.round, p.test_accuracy));
-            // the session fires on_round before on_eval within a round,
-            // so a cadence snapshot for this round was written without
-            // this point — rewrite so the on-disk trace includes it
-            if self.rounds_done > 0 && self.rounds_done % self.every == 0 {
-                self.write();
-            }
-            Control::Continue
+        fn snapshot_due(&self, rounds_done: usize) -> bool {
+            rounds_done > 0 && rounds_done % self.every == 0
+        }
+
+        fn on_snapshot(&mut self, snapshot: &SessionSnapshot) {
+            self.config = snapshot.config.clone();
+            self.write(&snapshot.to_json());
+        }
+
+        fn on_finish(&mut self, record: &RunRecord) {
+            self.write(&completion_marker(&self.config, record));
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn checkpoint_temp_files_are_unique_per_instance() {
+            // regression: a fixed `<path>.tmp` sibling let two fleet
+            // sessions checkpointing to the same stem rename each other's
+            // half-written snapshot into place
+            let path = std::env::temp_dir().join("titan_checkpoint_shared.json");
+            let a = Checkpoint::every(path.clone(), 2);
+            let b = Checkpoint::every(path.clone(), 2);
+            assert_ne!(a.tmp, b.tmp, "shared temp file would race");
+            assert_ne!(a.tmp, path);
+            assert_ne!(b.tmp, path);
         }
     }
 }
@@ -340,6 +449,7 @@ pub struct SessionBuilder {
     backend: Option<ExecBackend>,
     source: Option<Box<dyn DataSource>>,
     observers: Vec<Box<dyn RoundObserver>>,
+    resume: Option<Box<SessionSnapshot>>,
 }
 
 impl SessionBuilder {
@@ -349,7 +459,15 @@ impl SessionBuilder {
             backend: None,
             source: None,
             observers: Vec::new(),
+            resume: None,
         }
+    }
+
+    /// The config this builder will run (resume paths compare it against
+    /// a checkpoint's fingerprint before deciding what to do with the
+    /// file).
+    pub fn cfg(&self) -> &RunConfig {
+        &self.cfg
     }
 
     /// Explicit backend choice; overrides `cfg.pipeline`.
@@ -380,6 +498,34 @@ impl SessionBuilder {
         self
     }
 
+    /// Resume a killed run from a checkpoint file written by
+    /// [`observers::Checkpoint`]. The caller re-supplies the rest of the
+    /// assembly exactly as for the original run — same config (enforced
+    /// by the snapshot's fingerprint at [`SessionBuilder::build`]), same
+    /// backend kind, and an identically constructed data source (the
+    /// session fast-forwards it to the snapshot's cursor; see
+    /// [`crate::data::DataSource::fast_forward`]). Observer-internal
+    /// state is *not* part of a snapshot — observers start fresh.
+    ///
+    /// Errors if the file marks a completed run.
+    pub fn resume_from(self, path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let path = path.as_ref();
+        match load_checkpoint(path)? {
+            Loaded::Resumable(snap) => Ok(self.resume_from_snapshot(*snap)),
+            Loaded::Complete { round, .. } => Err(Error::Config(format!(
+                "checkpoint {} marks a completed run ({round} rounds) — nothing to resume",
+                path.display()
+            ))),
+        }
+    }
+
+    /// Resume from an in-memory snapshot (the fleet runtime and tests;
+    /// CLI paths use [`SessionBuilder::resume_from`]).
+    pub fn resume_from_snapshot(mut self, snapshot: SessionSnapshot) -> Self {
+        self.resume = Some(Box::new(snapshot));
+        self
+    }
+
     /// Validate the config and assemble the session.
     ///
     /// Building is cheap: engines load and threads spawn lazily on the
@@ -387,19 +533,32 @@ impl SessionBuilder {
     /// sessions up front and artifact errors still surface from
     /// `step`/`run` exactly as they did when `run` owned the whole loop.
     pub fn build(self) -> Result<Session> {
-        let SessionBuilder { cfg, backend, source, observers } = self;
+        let SessionBuilder { cfg, backend, source, observers, resume } = self;
         cfg.validate()?;
         let backend = backend.unwrap_or_else(|| ExecBackend::for_config(&cfg));
+        if let Some(snap) = &resume {
+            // refuse mismatched resumes up front: a wrong config or
+            // backend would not fail loudly later, it would quietly
+            // produce a different run
+            snap.check_matches(&cfg, backend.kind())?;
+            if snap.round > cfg.rounds {
+                return Err(Error::Config(format!(
+                    "checkpoint at round {} exceeds the configured {} rounds",
+                    snap.round, cfg.rounds
+                )));
+            }
+        }
         let source: Box<dyn DataSource> = match source {
             Some(s) => s,
             None => Box::new(default_source(&cfg)),
         };
         let outcomes = Vec::with_capacity(cfg.rounds);
+        let completed = resume.as_ref().map_or(0, |s| s.round);
         Ok(Session {
             cfg,
-            state: State::Pending { backend, source, observers },
+            state: State::Pending { backend, source, observers, resume },
             outcomes,
-            completed: 0,
+            completed,
         })
     }
 
@@ -454,6 +613,7 @@ enum State {
         backend: ExecBackend,
         source: Box<dyn DataSource>,
         observers: Vec<Box<dyn RoundObserver>>,
+        resume: Option<Box<SessionSnapshot>>,
     },
     Running(Box<Running>),
     Finished,
@@ -464,6 +624,10 @@ struct SelectedBatch {
     round: usize,
     batch: TrainBatch,
     report: SelectorReport,
+    /// Selector state after this round's selection — attached only when a
+    /// snapshot-consuming observer is listening (checkpoint capture; the
+    /// trainer thread cannot reach the selector thread's state directly).
+    state: Option<Box<SelectorState>>,
 }
 
 /// How the loop obtains each round's selected batch. `Sequential` runs
@@ -483,22 +647,29 @@ enum BatchFeed {
 }
 
 impl BatchFeed {
-    /// Produce round `round`'s batch + report.
-    fn next(&mut self, round: usize, trainer: &TrainerEngine) -> Result<(TrainBatch, SelectorReport)> {
+    /// Produce round `round`'s batch + report, plus the pipelined
+    /// selector's state capsule when checkpoint capture is on (the
+    /// sequential selector is exported directly at snapshot time).
+    fn next(
+        &mut self,
+        round: usize,
+        trainer: &TrainerEngine,
+    ) -> Result<(TrainBatch, SelectorReport, Option<Box<SelectorState>>)> {
         match self {
             BatchFeed::Sequential { selector, source, stream_per_round } => {
                 // sequential has no delay: selection sees current params
                 // (share_params is a refcount bump, not a Vec clone)
                 selector.sync_params(trainer.share_params())?;
                 let arrivals = source.next_round(*stream_per_round);
-                selector.select_round(round, arrivals)
+                let (batch, report) = selector.select_round(round, arrivals)?;
+                Ok((batch, report, None))
             }
             BatchFeed::Pipelined { rx, .. } => {
                 let sel = rx
                     .recv()
                     .map_err(|_| Error::Pipeline("selector thread terminated".into()))??;
                 debug_assert_eq!(sel.round, round);
-                Ok((sel.batch, sel.report))
+                Ok((sel.batch, sel.report, sel.state))
             }
         }
     }
@@ -542,33 +713,70 @@ struct Running {
     run_sw: Stopwatch,
     round: usize,
     stop: bool,
+    /// Latest pipelined selector-state capsule (checkpoint capture).
+    last_selector_state: Option<Box<SelectorState>>,
 }
 
 impl Running {
     /// Everything the old run-to-completion loop did before round 0:
     /// build the batch feed (spawning the selector thread when
-    /// pipelined), load the trainer, start the clocks.
+    /// pipelined), load the trainer, start the clocks. On resume, restore
+    /// the explicit snapshot state (params, selector, device sim, partial
+    /// record) and fast-forward the data source past the completed
+    /// rounds, so round `snapshot.round` starts from exactly the state
+    /// the uninterrupted run would have had.
     fn start(
         cfg: &RunConfig,
         backend: ExecBackend,
-        source: Box<dyn DataSource>,
+        mut source: Box<dyn DataSource>,
         observers: Vec<Box<dyn RoundObserver>>,
+        resume: Option<Box<SessionSnapshot>>,
     ) -> Result<Running> {
         let pipelined = backend.is_pipelined();
         let rounds = cfg.rounds;
+        let capture = observers.iter().any(|o| o.wants_snapshots());
         let test = source.test_set(cfg.test_size, cfg.seed);
 
+        // restore the trainer-side state before the feed is built: the
+        // pipelined branch pre-publishes the restored params so the
+        // resumed selector's first sync sees them, not the init params
+        let start_round = resume.as_ref().map_or(0, |s| s.round);
+        let mut trainer = TrainerEngine::new(cfg)?;
+        let mut sim = DeviceSim::new(&cfg.model);
+        let mut record = RunRecord::new(cfg.method.name(), &cfg.model);
+        let mut selector_restore: Option<SelectorState> = None;
+        if let Some(snap) = resume {
+            let snap = *snap;
+            trainer.restore(snap.round, snap.params)?;
+            sim.restore_state(snap.sim);
+            record.curve = snap.curve;
+            record.round_device_ms = snap.round_device_ms;
+            record.round_host_ms = snap.round_host_ms;
+            record.processing_delay = LatencyRecorder::from_samples(snap.delay_ms);
+            selector_restore = Some(snap.selector);
+            source.fast_forward(snap.round, cfg.stream_per_round);
+        }
+
         let feed = match backend {
-            ExecBackend::Sequential => BatchFeed::Sequential {
-                selector: SelectorEngine::new(cfg, source.task())?,
-                source,
-                stream_per_round: cfg.stream_per_round,
-            },
+            ExecBackend::Sequential => {
+                let mut selector = SelectorEngine::new(cfg, source.task())?;
+                if let Some(st) = selector_restore {
+                    selector.restore_state(st)?;
+                }
+                BatchFeed::Sequential {
+                    selector,
+                    source,
+                    stream_per_round: cfg.stream_per_round,
+                }
+            }
             ExecBackend::Pipelined { idle } => {
                 // batches forward over a bounded channel (round-ordered,
                 // moved); params backward through a latest-only slot
                 let (batch_tx, batch_rx) = mpsc::sync_channel::<Result<SelectedBatch>>(1);
                 let param_slot: Arc<Latest<Arc<Vec<f32>>>> = Arc::new(Latest::new());
+                if start_round > 0 {
+                    param_slot.publish(trainer.share_params());
+                }
                 let selector_params = Arc::clone(&param_slot);
                 let sel_cfg = cfg.clone();
                 let mut sel_source = source;
@@ -577,9 +785,12 @@ impl Running {
                     .spawn(move || -> Result<()> {
                         let mut selector = SelectorEngine::new(&sel_cfg, sel_source.task())?;
                         selector.idle = idle;
+                        if let Some(st) = selector_restore {
+                            selector.restore_state(st)?;
+                        }
                         // the batch for round r is selected during round
                         // r-1's training window
-                        for round in 0..rounds {
+                        for round in start_round..rounds {
                             // adopt the freshest params the trainer has
                             // shipped (non-blocking; one-round-delay
                             // tolerates staleness)
@@ -587,9 +798,14 @@ impl Running {
                                 selector.sync_params(p)?;
                             }
                             let arrivals = sel_source.next_round(sel_cfg.stream_per_round);
-                            let out = selector
-                                .select_round(round, arrivals)
-                                .map(|(batch, report)| SelectedBatch { round, batch, report });
+                            let out = selector.select_round(round, arrivals).map(|(batch, report)| {
+                                // capsule AFTER selecting: the state round
+                                // r+1 starts from, i.e. what a snapshot
+                                // taken at rounds_done = r+1 must carry
+                                let state =
+                                    capture.then(|| Box::new(selector.export_state()));
+                                SelectedBatch { round, batch, report, state }
+                            });
                             let failed = out.is_err();
                             if batch_tx.send(out).is_err() || failed {
                                 break; // trainer hung up or selection failed
@@ -606,14 +822,15 @@ impl Running {
             pipelined,
             rounds,
             feed,
-            trainer: TrainerEngine::new(cfg)?,
-            sim: DeviceSim::new(&cfg.model),
-            record: RunRecord::new(cfg.method.name(), &cfg.model),
+            trainer,
+            sim,
+            record,
             observers,
             test,
             run_sw: Stopwatch::start(),
-            round: 0,
+            round: start_round,
             stop: false,
+            last_selector_state: None,
         })
     }
 
@@ -621,7 +838,10 @@ impl Running {
     /// on the device sim, run observers, eval on the cadence.
     fn step_round(&mut self, cfg: &RunConfig) -> Result<RoundOutcome> {
         let round = self.round;
-        let (batch, report) = self.feed.next(round, &self.trainer)?;
+        let (batch, report, selector_state) = self.feed.next(round, &self.trainer)?;
+        if selector_state.is_some() {
+            self.last_selector_state = selector_state;
+        }
         for &op in &report.ops {
             self.sim.record(Lane::Gpu, op);
         }
@@ -676,14 +896,76 @@ impl Running {
         if stop {
             self.stop = true;
         }
+
+        // snapshot phase — after the round's accounting and the
+        // on_round/on_eval hooks, so a snapshot taken here is exactly the
+        // state the next round starts from (including this round's eval
+        // point), and exactly one snapshot is built per round no matter
+        // how many observers asked
+        if !self.observers.is_empty() {
+            let rounds_done = round + 1;
+            let due: Vec<bool> = self
+                .observers
+                .iter()
+                .map(|o| o.wants_snapshots() && o.snapshot_due(rounds_done))
+                .collect();
+            if due.iter().any(|&d| d) {
+                let snapshot = self.build_snapshot(cfg, rounds_done)?;
+                for (obs, take) in self.observers.iter_mut().zip(due) {
+                    if take {
+                        obs.on_snapshot(&snapshot);
+                    }
+                }
+            }
+        }
         self.round += 1;
         Ok(outcome)
     }
 
+    /// Assemble the full mid-run snapshot after `rounds_done` completed
+    /// rounds. The sequential selector is exported on the spot; the
+    /// pipelined one comes from the capsule its thread attached to this
+    /// round's batch.
+    fn build_snapshot(&self, cfg: &RunConfig, rounds_done: usize) -> Result<SessionSnapshot> {
+        let selector = match (&self.feed, &self.last_selector_state) {
+            (BatchFeed::Sequential { selector, .. }, _) => selector.export_state(),
+            (BatchFeed::Pipelined { .. }, Some(state)) => (**state).clone(),
+            (BatchFeed::Pipelined { .. }, None) => {
+                return Err(Error::Pipeline(
+                    "snapshot requested but no selector state was captured".into(),
+                ));
+            }
+        };
+        Ok(SessionSnapshot {
+            config: cfg.to_json(),
+            backend: if self.pipelined { "pipelined" } else { "sequential" }.into(),
+            round: rounds_done,
+            params: self.trainer.rt.export_params(),
+            selector,
+            sim: self.sim.export_state(),
+            curve: self.record.curve.clone(),
+            round_device_ms: self.record.round_device_ms.clone(),
+            round_host_ms: self.record.round_host_ms.clone(),
+            delay_ms: self.record.processing_delay.samples().to_vec(),
+        })
+    }
+
     /// Teardown + totals: join the selector thread, final eval, device
-    /// clock / energy / memory roll-up. Consumes the running half.
+    /// clock / energy / memory roll-up, then the observers' `on_finish`
+    /// (persisting observers flush their tail here). Consumes the
+    /// running half.
     fn finish(self, cfg: &RunConfig) -> Result<RunRecord> {
-        let Running { pipelined, feed, trainer, sim, mut record, test, run_sw, .. } = self;
+        let Running {
+            pipelined,
+            feed,
+            trainer,
+            sim,
+            mut record,
+            mut observers,
+            test,
+            run_sw,
+            ..
+        } = self;
         feed.finish()?;
 
         let final_eval = trainer.evaluate(&test)?;
@@ -705,6 +987,9 @@ impl Running {
             pipelined,
         )
         .total();
+        for obs in observers.iter_mut() {
+            obs.on_finish(&record);
+        }
         Ok(record)
     }
 }
@@ -742,12 +1027,12 @@ impl Session {
     pub fn step(&mut self) -> Result<StepEvent> {
         if matches!(self.state, State::Pending { .. }) {
             let state = std::mem::replace(&mut self.state, State::Finished);
-            let State::Pending { backend, source, observers } = state else {
+            let State::Pending { backend, source, observers, resume } = state else {
                 unreachable!("matched Pending above")
             };
             // on start-up failure the session stays Finished, so the
             // error is not retried on the next step
-            let running = Running::start(&self.cfg, backend, source, observers)?;
+            let running = Running::start(&self.cfg, backend, source, observers, resume)?;
             self.state = State::Running(Box::new(running));
         }
         let done = match &self.state {
@@ -836,39 +1121,87 @@ mod tests {
         assert_eq!(obs.on_eval(&p), Control::Stop);
     }
 
+    /// Synthetic snapshot for observer tests (no artifacts needed).
+    fn tiny_snapshot(cfg: &RunConfig, round: usize) -> crate::coordinator::SessionSnapshot {
+        crate::coordinator::SessionSnapshot {
+            config: cfg.to_json(),
+            backend: "sequential".into(),
+            round,
+            params: vec![0.5, -0.25],
+            selector: crate::coordinator::SelectorState {
+                rng: [1, 2, 3, 4],
+                seen_per_class: vec![10, 10],
+                filter: None,
+            },
+            sim: crate::device::DeviceSimState::default(),
+            curve: (1..=round / 2)
+                .map(|i| CurvePoint {
+                    round: i * 2,
+                    device_ms: i as f64,
+                    host_ms: i as f64,
+                    train_loss: 1.0,
+                    test_loss: 0.5,
+                    test_accuracy: 0.25 * i as f64,
+                })
+                .collect(),
+            round_device_ms: vec![1.0; round],
+            round_host_ms: vec![1.0; round],
+            delay_ms: vec![0.1; round],
+        }
+    }
+
     #[test]
-    fn checkpoint_observer_snapshot_roundtrips() {
+    fn checkpoint_observer_writes_snapshots_and_final_marker() {
         use super::observers::{Checkpoint, CheckpointState};
         let path = std::env::temp_dir().join("titan_checkpoint_roundtrip.json");
         let _ = std::fs::remove_file(&path);
-        let point = |round: usize, acc: f64| CurvePoint {
-            round,
-            device_ms: 0.0,
-            host_ms: 0.0,
-            train_loss: 0.5,
-            test_loss: 0.25,
-            test_accuracy: acc,
-        };
-        let outcome = |round: usize| RoundOutcome { round, ..Default::default() };
-        // drive the hooks exactly as the session loop does (eval_every =
-        // checkpoint cadence = 2): on_round first, then the round's eval
+        let cfg = small_cfg(Method::Rs);
         let mut ck = Checkpoint::every(path.clone(), 2);
-        assert_eq!(ck.on_round(&outcome(0)), Control::Continue);
-        ck.on_round(&outcome(1)); // rounds_done = 2 -> snapshot
-        assert_eq!(ck.on_eval(&point(2, 0.25)), Control::Continue); // rewrites
-        // the snapshot on disk must already include its own round's eval
+        // cadence contract: the session asks snapshot_due after each round
+        assert!(ck.wants_snapshots());
+        assert!(!ck.snapshot_due(1));
+        assert!(ck.snapshot_due(2));
+        assert!(!ck.snapshot_due(3));
+        ck.on_snapshot(&tiny_snapshot(&cfg, 2));
         assert_eq!(
             Checkpoint::load(&path).unwrap(),
-            CheckpointState { round: 2, accuracy_trace: vec![(2, 0.25)] }
+            CheckpointState { round: 2, accuracy_trace: vec![(2, 0.25)], complete: false }
         );
-        ck.on_round(&outcome(2));
-        ck.on_round(&outcome(3)); // rounds_done = 4 -> snapshot
-        ck.on_eval(&point(4, 0.5));
+        ck.on_snapshot(&tiny_snapshot(&cfg, 4));
+        let state = Checkpoint::load(&path).unwrap();
+        assert!(!state.complete);
+        assert_eq!(state.round, 4);
+        assert_eq!(state.accuracy_trace, vec![(2, 0.25), (4, 0.5)]);
+        // a resumable snapshot loads back for SessionBuilder::resume_from
+        assert!(SessionBuilder::new(cfg.clone()).sequential().resume_from(&path).is_ok());
+
+        // finish-time write: rounds 5–6 ran after the last cadence
+        // multiple; without on_finish their eval points would be lost
+        let mut record = RunRecord::new("rs", "mlp");
+        record.round_device_ms = vec![1.0; 6];
+        record.final_accuracy = 0.875;
+        for i in 1..=3usize {
+            record.curve.push(CurvePoint {
+                round: i * 2,
+                device_ms: i as f64,
+                host_ms: i as f64,
+                train_loss: 1.0,
+                test_loss: 0.5,
+                test_accuracy: 0.25 * i as f64,
+            });
+        }
+        ck.on_finish(&record);
         let state = Checkpoint::load(&path).unwrap();
         assert_eq!(
             state,
-            CheckpointState { round: 4, accuracy_trace: vec![(2, 0.25), (4, 0.5)] }
+            CheckpointState {
+                round: 6,
+                accuracy_trace: vec![(2, 0.25), (4, 0.5), (6, 0.75)],
+                complete: true
+            }
         );
+        // resuming a completed run errors instead of silently re-running
+        assert!(SessionBuilder::new(cfg).sequential().resume_from(&path).is_err());
         let _ = std::fs::remove_file(&path);
     }
 
@@ -962,6 +1295,112 @@ mod tests {
                 assert_eq!(a.selector.candidates, b.selector.candidates);
                 assert_eq!(a.device_wall_ms, b.device_wall_ms);
             }
+        }
+    }
+
+    /// Resume refuses a snapshot whose config fingerprint or backend kind
+    /// differs from the session's — silently diverging would be the
+    /// worst possible failure mode for a correctness feature.
+    #[test]
+    fn resume_rejects_mismatched_config_and_backend() {
+        let cfg = small_cfg(Method::Rs);
+        let snap = tiny_snapshot(&cfg, 2); // records backend "sequential"
+        assert!(SessionBuilder::new(cfg.clone())
+            .sequential()
+            .resume_from_snapshot(snap.clone())
+            .build()
+            .is_ok());
+        let mut other = cfg.clone();
+        other.seed += 1;
+        assert!(SessionBuilder::new(other)
+            .sequential()
+            .resume_from_snapshot(snap.clone())
+            .build()
+            .is_err());
+        assert!(SessionBuilder::new(cfg.clone())
+            .pipelined(IdleTrace::Constant(1.0))
+            .resume_from_snapshot(snap)
+            .build()
+            .is_err());
+        let late = tiny_snapshot(&cfg, 99); // beyond cfg.rounds = 6
+        assert!(SessionBuilder::new(cfg)
+            .sequential()
+            .resume_from_snapshot(late)
+            .build()
+            .is_err());
+    }
+
+    /// The PR's headline pin: run k rounds with checkpointing, drop the
+    /// session (the simulated kill — rounds after the last snapshot are
+    /// lost), resume from the on-disk snapshot, and the final record is
+    /// byte-identical to the uninterrupted run. Sequential covers the
+    /// stateful path (Titan: filter estimators + selection RNG mid-run);
+    /// Pipelined uses RS, the class of run that is reproducible across
+    /// any two pipelined executions (see the one-round-delay module docs).
+    #[test]
+    fn killed_session_resumes_byte_identically_both_backends() {
+        use super::observers::Checkpoint;
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        for (method, backend) in [
+            (Method::Titan, ExecBackend::Sequential),
+            (Method::Rs, ExecBackend::Sequential),
+            (Method::Rs, ExecBackend::Pipelined { idle: IdleTrace::Constant(1.0) }),
+        ] {
+            let path = std::env::temp_dir().join(format!(
+                "titan_resume_{}_{}.json",
+                method.name(),
+                backend.kind()
+            ));
+            let _ = std::fs::remove_file(&path);
+            let cfg = small_cfg(method); // 6 rounds, eval every 3
+            let (want, want_out) = SessionBuilder::new(cfg.clone())
+                .backend(backend.clone())
+                .run()
+                .unwrap();
+
+            // checkpoint every 2 rounds, kill after 5: the snapshot holds
+            // round 4, so the resumed run re-executes rounds 5–6
+            let mut session = SessionBuilder::new(cfg.clone())
+                .backend(backend.clone())
+                .observe(Checkpoint::every(path.clone(), 2))
+                .build()
+                .unwrap();
+            for _ in 0..5 {
+                session.step().unwrap();
+            }
+            drop(session);
+
+            let session = SessionBuilder::new(cfg.clone())
+                .backend(backend.clone())
+                .observe(Checkpoint::every(path.clone(), 2))
+                .resume_from(&path)
+                .unwrap()
+                .build()
+                .unwrap();
+            assert_eq!(session.rounds_completed(), 4, "{method:?} {backend:?}");
+            let (got, got_out) = session.run().unwrap();
+
+            assert_deterministic_fields_eq(&want, &got);
+            // post-resume outcomes equal the uninterrupted tail: same
+            // selector ops, candidate counts and losses, round for round
+            assert_eq!(got_out.len(), 2, "{method:?} {backend:?}");
+            for (a, b) in want_out[4..].iter().zip(&got_out) {
+                assert_eq!(a.round, b.round);
+                assert_eq!(a.train_loss, b.train_loss);
+                assert_eq!(a.selector.ops, b.selector.ops);
+                assert_eq!(a.selector.arrivals, b.selector.arrivals);
+                assert_eq!(a.selector.candidates, b.selector.candidates);
+                assert_eq!(a.device_wall_ms, b.device_wall_ms);
+            }
+            // the finished resume overwrote the file with a completion
+            // marker covering the whole run
+            let state = Checkpoint::load(&path).unwrap();
+            assert!(state.complete);
+            assert_eq!(state.round, 6);
+            let _ = std::fs::remove_file(&path);
         }
     }
 

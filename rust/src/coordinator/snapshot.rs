@@ -1,0 +1,535 @@
+//! Full-session checkpoints: the on-disk state a killed run resumes from.
+//!
+//! A [`SessionSnapshot`] is everything a mid-run
+//! [`Session`](crate::coordinator::Session) needs to continue **byte-
+//! identically** after the process is killed and restarted:
+//!
+//! - the run's [`RunConfig`] serialization (doubling as the **config
+//!   fingerprint** — resume refuses a snapshot whose run was configured
+//!   differently, because silently diverging is worse than erroring);
+//! - the completed-round counter (deterministic data sources are brought
+//!   back to their cursor by drawing-and-discarding that many rounds —
+//!   see [`crate::data::DataSource::fast_forward`] — instead of
+//!   serializing source internals);
+//! - the model parameters and the trainer's round counter (lr schedule);
+//! - the selection-side state ([`SelectorState`]: selection RNG, stream
+//!   class counts, coarse-filter estimators + retained candidates);
+//! - the device simulator's clock/energy accumulators and the partial
+//!   run record (accuracy curve, per-round timings, processing delays).
+//!
+//! Serialization goes through [`crate::util::json`]. All floats are
+//! written in Rust's shortest-roundtrip form, so every `f64`/`f32`
+//! survives a save/load cycle bit-for-bit; the 64-bit RNG words are hex
+//! strings because a JSON number (f64) only carries 53 bits of integer
+//! precision.
+//!
+//! A finished run overwrites its checkpoint with a small **completion
+//! marker** (`"complete": true`, final accuracy, accuracy trace) so the
+//! tail of the run is never lost to the cadence (rounds after the last
+//! cadence multiple) and so a resume of an already-finished run errors
+//! cleanly instead of re-running it.
+
+use std::path::Path;
+
+use crate::config::RunConfig;
+use crate::coordinator::SelectorState;
+use crate::data::buffer::Candidate;
+use crate::data::Sample;
+use crate::device::{DeviceSimState, RoundTiming};
+use crate::filter::FilterState;
+use crate::metrics::{CurvePoint, RunRecord};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Checkpoint format version (bumped on incompatible layout changes).
+pub const CHECKPOINT_VERSION: usize = 1;
+
+/// Complete mid-run session state — see the module docs.
+#[derive(Clone, Debug)]
+pub struct SessionSnapshot {
+    /// `RunConfig::to_json` of the run; compact form is the fingerprint.
+    pub config: Json,
+    /// Execution backend kind, `"sequential"` or `"pipelined"` (a
+    /// sequential snapshot resumed pipelined would silently change the
+    /// run's semantics, so it is checked like the config).
+    pub backend: String,
+    /// Completed rounds at snapshot time.
+    pub round: usize,
+    /// Model parameters after `round` rounds.
+    pub params: Vec<f32>,
+    /// Selection-side state after `round` rounds.
+    pub selector: SelectorState,
+    /// Device-sim clock/energy accumulators.
+    pub sim: DeviceSimState,
+    /// Partial run record: eval curve so far.
+    pub curve: Vec<CurvePoint>,
+    /// Partial run record: per-round device wall ms.
+    pub round_device_ms: Vec<f64>,
+    /// Partial run record: per-round host wall ms (wall-clock history of
+    /// the interrupted run; carried verbatim).
+    pub round_host_ms: Vec<f64>,
+    /// Partial run record: per-sample processing-delay samples (ms).
+    pub delay_ms: Vec<f64>,
+}
+
+/// What a checkpoint file holds.
+pub enum Loaded {
+    /// A mid-run snapshot a session can resume from.
+    Resumable(Box<SessionSnapshot>),
+    /// The run finished; nothing to resume.
+    Complete {
+        /// Rounds the finished run executed.
+        round: usize,
+        /// Final test accuracy of the finished run.
+        final_accuracy: f64,
+        /// `(round, test_accuracy)` eval checkpoints of the whole run.
+        accuracy_trace: Vec<(usize, f64)>,
+        /// Config of the finished run (`Json::Null` when the run finished
+        /// before its first cadence snapshot — the marker then has no
+        /// config to carry). Lets a resume path verify the marker really
+        /// belongs to the run it is about to skip.
+        config: Json,
+    },
+}
+
+impl SessionSnapshot {
+    /// The config fingerprint this snapshot was taken under.
+    pub fn fingerprint(&self) -> String {
+        self.config.to_string_compact()
+    }
+
+    /// Refuse resume under a different configuration or backend.
+    pub fn check_matches(&self, cfg: &RunConfig, backend_kind: &str) -> Result<()> {
+        if self.fingerprint() != cfg.fingerprint() {
+            return Err(Error::Config(format!(
+                "checkpoint config fingerprint does not match this run's config — \
+                 resuming would silently diverge.\n  checkpoint: {}\n  session:    {}",
+                self.fingerprint(),
+                cfg.fingerprint()
+            )));
+        }
+        if self.backend != backend_kind {
+            return Err(Error::Config(format!(
+                "checkpoint was taken on the {:?} backend, session runs {:?}",
+                self.backend, backend_kind
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("titan_checkpoint", Json::Num(CHECKPOINT_VERSION as f64)),
+            ("complete", Json::Bool(false)),
+            ("round", Json::Num(self.round as f64)),
+            ("config", self.config.clone()),
+            ("backend", Json::Str(self.backend.clone())),
+            ("params", Json::from_f32s(&self.params)),
+            ("selector", selector_to_json(&self.selector)),
+            ("sim", sim_to_json(&self.sim)),
+            (
+                "record",
+                Json::obj(vec![
+                    ("curve", Json::Arr(self.curve.iter().map(|p| p.to_json()).collect())),
+                    ("round_device_ms", Json::from_f64s(&self.round_device_ms)),
+                    ("round_host_ms", Json::from_f64s(&self.round_host_ms)),
+                    ("delay_ms", Json::from_f64s(&self.delay_ms)),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SessionSnapshot> {
+        let record = j.get("record")?;
+        Ok(SessionSnapshot {
+            config: j.get("config")?.clone(),
+            backend: j.get("backend")?.as_str()?.to_string(),
+            round: j.get("round")?.as_usize()?,
+            params: f32_list(j.get("params")?)?,
+            selector: selector_from_json(j.get("selector")?)?,
+            sim: sim_from_json(j.get("sim")?)?,
+            curve: record
+                .get("curve")?
+                .as_arr()?
+                .iter()
+                .map(CurvePoint::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            round_device_ms: record.get("round_device_ms")?.f64_list()?,
+            round_host_ms: record.get("round_host_ms")?.f64_list()?,
+            delay_ms: record.get("delay_ms")?.f64_list()?,
+        })
+    }
+}
+
+/// The small JSON a finished run overwrites its checkpoint with: the
+/// completed-round count, the full accuracy trace (including everything
+/// after the last cadence snapshot) and the final accuracy.
+pub fn completion_marker(config: &Json, record: &RunRecord) -> Json {
+    let trace = Json::Arr(
+        record
+            .curve
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("round", Json::Num(p.round as f64)),
+                    ("test_accuracy", Json::Num(p.test_accuracy)),
+                ])
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("titan_checkpoint", Json::Num(CHECKPOINT_VERSION as f64)),
+        ("complete", Json::Bool(true)),
+        ("round", Json::Num(record.round_device_ms.len() as f64)),
+        ("config", config.clone()),
+        ("accuracy_trace", trace),
+        ("final_accuracy", Json::Num(record.final_accuracy)),
+    ])
+}
+
+/// Read a checkpoint file written by the `Checkpoint` observer.
+pub fn load_checkpoint(path: &Path) -> Result<Loaded> {
+    let j = Json::parse_file(path)?;
+    let version = j.get("titan_checkpoint").map_err(|_| {
+        Error::Json(format!("{}: not a titan checkpoint", path.display()))
+    })?;
+    if version.as_usize()? != CHECKPOINT_VERSION {
+        return Err(Error::Json(format!(
+            "{}: unsupported checkpoint version {}",
+            path.display(),
+            version.as_usize()?
+        )));
+    }
+    if j.get("complete")?.as_bool()? {
+        let accuracy_trace = j
+            .get("accuracy_trace")?
+            .as_arr()?
+            .iter()
+            .map(|p| Ok((p.get("round")?.as_usize()?, p.get("test_accuracy")?.as_f64()?)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Loaded::Complete {
+            round: j.get("round")?.as_usize()?,
+            final_accuracy: j.get("final_accuracy")?.as_f64()?,
+            accuracy_trace,
+            config: j.get("config")?.clone(),
+        })
+    } else {
+        Ok(Loaded::Resumable(Box::new(SessionSnapshot::from_json(&j)?)))
+    }
+}
+
+// ---- field codecs ---------------------------------------------------------
+
+/// u64 with full precision (JSON numbers are f64: 53 integer bits).
+fn u64_to_json(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+fn u64_from_json(j: &Json) -> Result<u64> {
+    u64::from_str_radix(j.as_str()?, 16)
+        .map_err(|e| Error::Json(format!("bad u64 hex: {e}")))
+}
+
+fn f32_list(j: &Json) -> Result<Vec<f32>> {
+    // f32 -> f64 -> f32 is lossless, so Num carries f32s bit-exactly
+    Ok(j.f64_list()?.into_iter().map(|x| x as f32).collect())
+}
+
+/// Counters (round/class/arrival counts) stay plain JSON numbers: they
+/// are bounded far below 2^53 by construction, unlike RNG words.
+fn count_list(xs: &[u64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn count_list_from(j: &Json) -> Result<Vec<u64>> {
+    j.as_arr()?.iter().map(|v| Ok(v.as_usize()? as u64)).collect()
+}
+
+fn selector_to_json(s: &SelectorState) -> Json {
+    let rng = Json::Arr(s.rng.iter().map(|&w| u64_to_json(w)).collect());
+    let filter = match &s.filter {
+        None => Json::Null,
+        Some(f) => filter_to_json(f),
+    };
+    Json::obj(vec![
+        ("rng", rng),
+        ("seen_per_class", count_list(&s.seen_per_class)),
+        ("filter", filter),
+    ])
+}
+
+fn selector_from_json(j: &Json) -> Result<SelectorState> {
+    let words = j.get("rng")?.as_arr()?;
+    if words.len() != 4 {
+        return Err(Error::Json(format!("rng state has {} words, want 4", words.len())));
+    }
+    let mut rng = [0u64; 4];
+    for (slot, w) in rng.iter_mut().zip(words) {
+        *slot = u64_from_json(w)?;
+    }
+    let filter = match j.get("filter")? {
+        Json::Null => None,
+        f => Some(filter_from_json(f)?),
+    };
+    Ok(SelectorState {
+        rng,
+        seen_per_class: count_list_from(j.get("seen_per_class")?)?,
+        filter,
+    })
+}
+
+fn filter_to_json(f: &FilterState) -> Json {
+    let centroid = Json::Arr(
+        f.centroid
+            .iter()
+            .map(|(n, mean)| {
+                Json::obj(vec![
+                    ("n", Json::Num(*n as f64)),
+                    ("mean", Json::from_f64s(mean)),
+                ])
+            })
+            .collect(),
+    );
+    let norm2 = Json::Arr(
+        f.norm2
+            .iter()
+            .map(|&(n, mean, m2)| {
+                Json::obj(vec![
+                    ("n", Json::Num(n as f64)),
+                    ("mean", Json::Num(mean)),
+                    ("m2", Json::Num(m2)),
+                ])
+            })
+            .collect(),
+    );
+    let buffer = Json::Arr(f.buffer.iter().map(candidate_to_json).collect());
+    Json::obj(vec![
+        ("centroid", centroid),
+        ("norm2", norm2),
+        ("buffer", buffer),
+        ("buffer_cap", Json::Num(f.buffer_cap as f64)),
+        ("processed", Json::Num(f.processed as f64)),
+    ])
+}
+
+fn filter_from_json(j: &Json) -> Result<FilterState> {
+    let centroid = j
+        .get("centroid")?
+        .as_arr()?
+        .iter()
+        .map(|c| Ok((c.get("n")?.as_usize()? as u64, c.get("mean")?.f64_list()?)))
+        .collect::<Result<Vec<_>>>()?;
+    let norm2 = j
+        .get("norm2")?
+        .as_arr()?
+        .iter()
+        .map(|w| {
+            Ok((
+                w.get("n")?.as_usize()? as u64,
+                w.get("mean")?.as_f64()?,
+                w.get("m2")?.as_f64()?,
+            ))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let buffer = j
+        .get("buffer")?
+        .as_arr()?
+        .iter()
+        .map(candidate_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    Ok(FilterState {
+        centroid,
+        norm2,
+        buffer,
+        buffer_cap: j.get("buffer_cap")?.as_usize()?,
+        processed: j.get("processed")?.as_usize()? as u64,
+    })
+}
+
+fn candidate_to_json(c: &Candidate) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(c.sample.id as f64)),
+        ("label", Json::Num(c.sample.label as f64)),
+        ("clean_label", Json::Num(c.sample.clean_label as f64)),
+        ("x", Json::from_f32s(&c.sample.x)),
+        ("score", Json::Num(c.score)),
+    ])
+}
+
+fn candidate_from_json(j: &Json) -> Result<Candidate> {
+    let mut sample = Sample::new(
+        j.get("id")?.as_usize()? as u64,
+        j.get("label")?.as_usize()? as u32,
+        f32_list(j.get("x")?)?,
+    );
+    sample.clean_label = j.get("clean_label")?.as_usize()? as u32;
+    Ok(Candidate { sample, score: j.get("score")?.as_f64()? })
+}
+
+fn sim_to_json(s: &DeviceSimState) -> Json {
+    let rounds = Json::Arr(
+        s.rounds
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("cpu_ms", Json::Num(t.cpu_ms)),
+                    ("gpu_ms", Json::Num(t.gpu_ms)),
+                    ("wall_ms", Json::Num(t.wall_ms)),
+                ])
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("total_ms", Json::Num(s.total_ms)),
+        ("energy_j", Json::Num(s.energy_j)),
+        ("energy_wall_ms", Json::Num(s.energy_wall_ms)),
+        ("rounds", rounds),
+    ])
+}
+
+fn sim_from_json(j: &Json) -> Result<DeviceSimState> {
+    let rounds = j
+        .get("rounds")?
+        .as_arr()?
+        .iter()
+        .map(|t| {
+            Ok(RoundTiming {
+                cpu_ms: t.get("cpu_ms")?.as_f64()?,
+                gpu_ms: t.get("gpu_ms")?.as_f64()?,
+                wall_ms: t.get("wall_ms")?.as_f64()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(DeviceSimState {
+        total_ms: j.get("total_ms")?.as_f64()?,
+        energy_j: j.get("energy_j")?.as_f64()?,
+        energy_wall_ms: j.get("energy_wall_ms")?.as_f64()?,
+        rounds,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_snapshot() -> SessionSnapshot {
+        let cfg = RunConfig { rounds: 10, ..RunConfig::default() };
+        SessionSnapshot {
+            config: cfg.to_json(),
+            backend: "sequential".into(),
+            round: 4,
+            params: vec![0.125, -3.5, 1.0e-7, 0.30000001],
+            selector: SelectorState {
+                // high-bit words exercise the hex codec (f64 would lose them)
+                rng: [u64::MAX, 0x8000_0000_0000_0001, 42, 0xDEAD_BEEF_CAFE_F00D],
+                seen_per_class: vec![7, 0, 13],
+                filter: Some(FilterState {
+                    centroid: vec![(2, vec![0.5, -0.25]), (0, vec![0.0, 0.0])],
+                    norm2: vec![(2, 1.5, 0.125), (0, 0.0, 0.0)],
+                    buffer: vec![Candidate {
+                        sample: Sample::new(9, 1, vec![1.5, -2.25]),
+                        score: 0.1 + 0.2,
+                    }],
+                    buffer_cap: 8,
+                    processed: 40,
+                }),
+            },
+            sim: DeviceSimState {
+                total_ms: 1234.567,
+                energy_j: 8.25,
+                energy_wall_ms: 1234.567,
+                rounds: vec![RoundTiming { cpu_ms: 600.0, gpu_ms: 30.5, wall_ms: 630.5 }],
+            },
+            curve: vec![CurvePoint {
+                round: 2,
+                device_ms: 100.0,
+                host_ms: 3.25,
+                train_loss: 1.75,
+                test_loss: 1.5,
+                test_accuracy: 0.40625,
+            }],
+            round_device_ms: vec![630.5, 604.0, 604.0, 630.5],
+            round_host_ms: vec![1.0, 2.0, 3.0, 4.0],
+            delay_ms: vec![0.01, 0.02, 0.03, 0.04],
+        }
+    }
+
+    #[test]
+    fn snapshot_json_roundtrip_is_exact() {
+        let snap = sample_snapshot();
+        let text = snap.to_json().to_string_compact();
+        let back = SessionSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.fingerprint(), snap.fingerprint());
+        assert_eq!(back.backend, "sequential");
+        assert_eq!(back.round, 4);
+        assert_eq!(back.params, snap.params);
+        assert_eq!(back.selector.rng, snap.selector.rng);
+        assert_eq!(back.selector.seen_per_class, snap.selector.seen_per_class);
+        let (bf, sf) = (back.selector.filter.unwrap(), snap.selector.filter.unwrap());
+        assert_eq!(bf.centroid, sf.centroid);
+        assert_eq!(bf.norm2, sf.norm2);
+        assert_eq!(bf.buffer_cap, sf.buffer_cap);
+        assert_eq!(bf.processed, sf.processed);
+        assert_eq!(bf.buffer.len(), 1);
+        assert_eq!(bf.buffer[0].sample.id, 9);
+        assert_eq!(bf.buffer[0].score.to_bits(), sf.buffer[0].score.to_bits());
+        assert_eq!(*bf.buffer[0].sample.x, *sf.buffer[0].sample.x);
+        assert_eq!(back.sim.total_ms.to_bits(), snap.sim.total_ms.to_bits());
+        assert_eq!(back.sim.rounds.len(), 1);
+        assert_eq!(back.sim.rounds[0].wall_ms, 630.5);
+        assert_eq!(back.curve.len(), 1);
+        assert_eq!(back.curve[0].test_accuracy, 0.40625);
+        assert_eq!(back.round_device_ms, snap.round_device_ms);
+        assert_eq!(back.round_host_ms, snap.round_host_ms);
+        assert_eq!(back.delay_ms, snap.delay_ms);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_rejected() {
+        let snap = sample_snapshot();
+        let same = RunConfig { rounds: 10, ..RunConfig::default() };
+        assert!(snap.check_matches(&same, "sequential").is_ok());
+        assert!(snap.check_matches(&same, "pipelined").is_err());
+        let other = RunConfig { rounds: 10, seed: 99, ..RunConfig::default() };
+        assert!(snap.check_matches(&other, "sequential").is_err());
+    }
+
+    #[test]
+    fn load_checkpoint_distinguishes_complete_runs() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("titan_snapshot_load_test.json");
+        let snap = sample_snapshot();
+        std::fs::write(&path, snap.to_json().to_string_compact()).unwrap();
+        assert!(matches!(
+            load_checkpoint(&path).unwrap(),
+            Loaded::Resumable(s) if s.round == 4
+        ));
+
+        let mut record = RunRecord::new("titan", "mlp");
+        record.final_accuracy = 0.75;
+        record.round_device_ms = vec![1.0; 6];
+        record.curve.push(CurvePoint {
+            round: 6,
+            device_ms: 6.0,
+            host_ms: 1.0,
+            train_loss: 0.5,
+            test_loss: 0.4,
+            test_accuracy: 0.75,
+        });
+        let marker = completion_marker(&snap.config, &record);
+        std::fs::write(&path, marker.to_string_compact()).unwrap();
+        match load_checkpoint(&path).unwrap() {
+            Loaded::Complete { round, final_accuracy, accuracy_trace, config } => {
+                assert_eq!(round, 6);
+                assert_eq!(final_accuracy, 0.75);
+                assert_eq!(accuracy_trace, vec![(6, 0.75)]);
+                assert_eq!(config.to_string_compact(), snap.fingerprint());
+            }
+            Loaded::Resumable(_) => panic!("completion marker loaded as resumable"),
+        }
+
+        std::fs::write(&path, "{\"not\": \"a checkpoint\"}").unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -16,6 +16,18 @@ pub struct Candidate {
     pub score: f64,
 }
 
+/// The one canonical consumption order: score descending, id ascending
+/// within score ties. [`CandidateBuffer::drain_sorted`] and
+/// [`CandidateBuffer::snapshot`] must sort identically — the checkpoint
+/// serialization order is pinned to what the fine stage consumes — so
+/// both call this instead of carrying private copies that could drift.
+fn best_first(a: &Candidate, b: &Candidate) -> Ordering {
+    b.score
+        .partial_cmp(&a.score)
+        .unwrap_or(Ordering::Equal)
+        .then_with(|| a.sample.id.cmp(&b.sample.id))
+}
+
 // Min-heap ordering on score (reverse of natural), tie-broken by id so the
 // ordering is total and deterministic.
 impl PartialEq for Candidate {
@@ -85,7 +97,15 @@ impl CandidateBuffer {
 
     /// Offer a scored sample. Returns true if retained (possibly evicting
     /// the current worst).
+    ///
+    /// Non-finite scores are rejected outright: a NaN (or ±∞ colliding
+    /// with the `unwrap_or(Equal)` fallback in the heap comparator) would
+    /// poison the ordering and make every later eviction undefined, so
+    /// they must never enter the heap.
     pub fn offer(&mut self, sample: Sample, score: f64) -> bool {
+        if !score.is_finite() {
+            return false;
+        }
         if self.heap.len() < self.cap {
             self.heap.push(Candidate { sample, score });
             return true;
@@ -120,18 +140,46 @@ impl CandidateBuffer {
     /// and candidates comparing equal are interchangeable duplicates.
     pub fn drain_sorted(&mut self) -> Vec<Candidate> {
         let mut v: Vec<Candidate> = std::mem::take(&mut self.heap).into_vec();
-        v.sort_unstable_by(|a, b| {
-            b.score
-                .partial_cmp(&a.score)
-                .unwrap_or(Ordering::Equal)
-                .then_with(|| a.sample.id.cmp(&b.sample.id))
-        });
+        v.sort_unstable_by(best_first);
         v
     }
 
     /// Peek at the retained candidates (unsorted).
     pub fn iter(&self) -> impl Iterator<Item = &Candidate> {
         self.heap.iter()
+    }
+
+    /// Deterministic snapshot of the retained candidates, best-first
+    /// (same order as [`CandidateBuffer::drain_sorted`]) — the
+    /// serialization order for session checkpoints. Non-destructive;
+    /// sample payloads are `Arc`-shared, so the clones are cheap.
+    pub fn snapshot(&self) -> Vec<Candidate> {
+        let mut v: Vec<Candidate> = self.heap.iter().cloned().collect();
+        v.sort_unstable_by(best_first);
+        v
+    }
+
+    /// Replace the retained candidates with a [`CandidateBuffer::snapshot`]
+    /// (checkpoint restore). Heap layout is irrelevant to behaviour — the
+    /// comparator is a total order, so drains and evictions only depend on
+    /// the retained set. Errors on more items than `cap` or non-finite
+    /// scores (which [`CandidateBuffer::offer`] could never have admitted).
+    pub fn restore(&mut self, items: Vec<Candidate>) -> crate::Result<()> {
+        if items.len() > self.cap {
+            return Err(crate::Error::Config(format!(
+                "buffer restore: {} candidates > cap {}",
+                items.len(),
+                self.cap
+            )));
+        }
+        if items.iter().any(|c| !c.score.is_finite()) {
+            return Err(crate::Error::Config(
+                "buffer restore: non-finite candidate score".into(),
+            ));
+        }
+        self.heap.clear();
+        self.heap.extend(items);
+        Ok(())
     }
 }
 
@@ -221,6 +269,55 @@ mod tests {
     #[should_panic(expected = "positive")]
     fn zero_cap_panics() {
         CandidateBuffer::new(0);
+    }
+
+    #[test]
+    fn rejects_non_finite_scores() {
+        // regression: NaN/∞ used to enter the heap and poison the
+        // partial_cmp().unwrap_or(Equal) ordering
+        let mut b = CandidateBuffer::new(3);
+        assert!(!b.offer(s(0), f64::NAN));
+        assert!(!b.offer(s(1), f64::INFINITY));
+        assert!(!b.offer(s(2), f64::NEG_INFINITY));
+        assert!(b.is_empty());
+        // a finite stream around the rejects behaves exactly as before
+        assert!(b.offer(s(3), 2.0));
+        assert!(!b.offer(s(4), f64::NAN));
+        assert!(b.offer(s(5), 3.0));
+        assert!(b.offer(s(6), 1.0)); // fills to cap
+        assert!(!b.offer(s(7), f64::INFINITY)); // would evict if admitted
+        assert_eq!(b.worst_score(), Some(1.0));
+        let ids: Vec<u64> = b.drain_sorted().iter().map(|c| c.sample.id).collect();
+        assert_eq!(ids, vec![5, 3, 6]);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let mut b = CandidateBuffer::new(4);
+        for (id, score) in [(3u64, 2.0), (1, 5.0), (2, 2.0), (9, 4.0), (5, 1.0)] {
+            b.offer(s(id), score);
+        }
+        let snap = b.snapshot();
+        let order: Vec<u64> = snap.iter().map(|c| c.sample.id).collect();
+        assert_eq!(order, vec![1, 9, 2, 3], "best-first, id-tiebroken");
+        assert_eq!(b.len(), 4, "snapshot is non-destructive");
+
+        let mut restored = CandidateBuffer::new(4);
+        restored.restore(snap.clone()).unwrap();
+        assert_eq!(restored.len(), 4);
+        // restored buffer evicts and drains exactly like the original
+        assert!(restored.offer(s(7), 3.0));
+        assert!(b.offer(s(7), 3.0));
+        let a: Vec<(u64, f64)> = b.drain_sorted().iter().map(|c| (c.sample.id, c.score)).collect();
+        let r: Vec<(u64, f64)> =
+            restored.drain_sorted().iter().map(|c| (c.sample.id, c.score)).collect();
+        assert_eq!(a, r);
+
+        // over-cap and non-finite snapshots are rejected
+        let mut tiny = CandidateBuffer::new(2);
+        assert!(tiny.restore(snap).is_err());
+        let bad = vec![Candidate { sample: s(0), score: f64::NAN }];
+        assert!(tiny.restore(bad).is_err());
     }
 
     #[test]

@@ -42,6 +42,20 @@ pub trait DataSource: Send {
     /// Deterministic held-out test set (drawn from the clean
     /// distribution, on an RNG stream independent of the arrivals).
     fn test_set(&self, n: usize, seed: u64) -> Vec<Sample>;
+
+    /// Skip `rounds` rounds of `v` arrivals each — checkpoint resume
+    /// brings a freshly built source to its mid-run cursor this way.
+    ///
+    /// The default draws and discards, which is exact for every
+    /// deterministic source (it replays precisely the RNG consumption and
+    /// counter advances of the completed rounds). Sources with a cheap
+    /// explicit cursor (e.g. [`ReplaySource`]) override it with O(1)
+    /// arithmetic.
+    fn fast_forward(&mut self, rounds: usize, v: usize) {
+        for _ in 0..rounds {
+            let _ = self.next_round(v);
+        }
+    }
 }
 
 impl DataSource for StreamSource {
@@ -55,6 +69,10 @@ impl DataSource for StreamSource {
 
     fn test_set(&self, n: usize, seed: u64) -> Vec<Sample> {
         StreamSource::task(self).test_set(n, seed)
+    }
+
+    fn fast_forward(&mut self, rounds: usize, v: usize) {
+        StreamSource::skip_rounds(self, rounds, v)
     }
 }
 
@@ -107,6 +125,12 @@ impl DataSource for ReplaySource {
 
     fn test_set(&self, n: usize, seed: u64) -> Vec<Sample> {
         self.task.test_set(n, seed)
+    }
+
+    fn fast_forward(&mut self, rounds: usize, v: usize) {
+        // cursor arithmetic replaces rounds × v sample clones — replay is
+        // the case the trait docs mean by "a cursor is cheaper"
+        self.cursor = (self.cursor + rounds * v) % self.pool.len();
     }
 }
 
@@ -386,6 +410,42 @@ mod tests {
                 assert_eq!(x.id, y.id);
                 assert_eq!(x.label, y.label);
                 assert_eq!(*x.x, *y.x);
+            }
+        }
+    }
+
+    /// `fast_forward(r, v)` must land every source on exactly the state
+    /// that r draw-and-discarded rounds produce — the property checkpoint
+    /// resume relies on.
+    #[test]
+    fn fast_forward_matches_drawn_rounds_for_every_source() {
+        let sources: Vec<fn() -> Box<dyn DataSource>> = vec![
+            || Box::new(StreamSource::new(task(), 5, NoiseKind::Label { frac: 0.3 })),
+            || {
+                let mut stream = StreamSource::new(task(), 7, NoiseKind::None);
+                Box::new(ReplaySource::capture(&mut stream, 13).unwrap())
+            },
+            || Box::new(ClassSubsetSource::new(task(), vec![0, 2, 5], 9).unwrap()),
+            || {
+                let mut end = vec![0.25; 6];
+                end[1] = 4.0;
+                Box::new(DriftSource::new(task(), vec![1.0; 6], end, 5, 3).unwrap())
+            },
+        ];
+        for (i, mk) in sources.iter().enumerate() {
+            let mut drawn = mk();
+            let mut skipped = mk();
+            for _ in 0..4 {
+                let _ = drawn.next_round(20);
+            }
+            skipped.fast_forward(4, 20);
+            for r in 0..3 {
+                let (a, b) = (drawn.next_round(20), skipped.next_round(20));
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.id, y.id, "source {i} round {r}");
+                    assert_eq!(x.label, y.label, "source {i} round {r}");
+                    assert_eq!(*x.x, *y.x, "source {i} round {r}");
+                }
             }
         }
     }

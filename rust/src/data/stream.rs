@@ -87,6 +87,16 @@ impl StreamSource {
     pub fn next_round(&mut self, v: usize) -> Vec<Sample> {
         (0..v).map(|_| self.next_sample()).collect()
     }
+
+    /// Advance past `rounds` rounds of `v` arrivals without materializing
+    /// the round vectors (checkpoint resume fast-forward). Draws every
+    /// sample — RNG consumption, id counters and noise stats advance
+    /// exactly as if the rounds had been pulled and used.
+    pub fn skip_rounds(&mut self, rounds: usize, v: usize) {
+        for _ in 0..rounds * v {
+            let _ = self.next_sample();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -152,6 +162,21 @@ mod tests {
         assert_eq!(a.label, b.label);
         assert!(crate::util::stats::dist2(&a.x, &b.x) > 1.0);
         assert_eq!(b.clean_label, b.label, "feature noise keeps labels");
+    }
+
+    #[test]
+    fn skip_rounds_matches_drawing() {
+        let mut drawn = StreamSource::new(task(), 4, NoiseKind::Feature { frac: 0.5, sigma: 1.0 });
+        let mut skipped = StreamSource::new(task(), 4, NoiseKind::Feature { frac: 0.5, sigma: 1.0 });
+        for _ in 0..3 {
+            let _ = drawn.next_round(15);
+        }
+        skipped.skip_rounds(3, 15);
+        assert_eq!(drawn.stats().emitted, skipped.stats().emitted);
+        assert_eq!(drawn.stats().feature_noisy, skipped.stats().feature_noisy);
+        let (a, b) = (drawn.next_sample(), skipped.next_sample());
+        assert_eq!(a.id, b.id);
+        assert_eq!(*a.x, *b.x);
     }
 
     #[test]

@@ -71,6 +71,19 @@ impl EnergyModel {
         self.energy_j
     }
 
+    /// Wall ms accounted so far (the denominator of
+    /// [`EnergyModel::avg_power_w`]).
+    pub fn wall_ms(&self) -> f64 {
+        self.wall_ms
+    }
+
+    /// Restore the accumulators from a checkpoint (power params stay as
+    /// constructed — they are configuration, not run state).
+    pub fn restore(&mut self, energy_j: f64, wall_ms: f64) {
+        self.energy_j = energy_j;
+        self.wall_ms = wall_ms;
+    }
+
     /// Average power over the accounted wall time (W).
     pub fn avg_power_w(&self) -> f64 {
         if self.wall_ms <= 0.0 {

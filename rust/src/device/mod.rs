@@ -197,6 +197,39 @@ impl DeviceSim {
     pub fn energy(&self) -> &energy::EnergyModel {
         &self.energy
     }
+
+    /// Export the accumulated clock/energy state at a round boundary
+    /// (checkpoint). The intra-round lane accumulators are intentionally
+    /// not exported: snapshots are only taken between rounds, where they
+    /// are zero by construction.
+    pub fn export_state(&self) -> DeviceSimState {
+        DeviceSimState {
+            total_ms: self.total_ms,
+            energy_j: self.energy.energy_j(),
+            energy_wall_ms: self.energy.wall_ms(),
+            rounds: self.round_log.clone(),
+        }
+    }
+
+    /// Restore a state exported by [`DeviceSim::export_state`] into a
+    /// fresh simulator (resume). Clears any intra-round accumulation.
+    pub fn restore_state(&mut self, st: DeviceSimState) {
+        self.total_ms = st.total_ms;
+        self.energy.restore(st.energy_j, st.energy_wall_ms);
+        self.round_log = st.rounds;
+        self.round_ms = [0.0, 0.0];
+    }
+}
+
+/// Accumulated [`DeviceSim`] state at a round boundary — what a session
+/// checkpoint carries so a resumed run's device clock, energy integral
+/// and per-round log continue from the interrupted run's values.
+#[derive(Clone, Debug, Default)]
+pub struct DeviceSimState {
+    pub total_ms: f64,
+    pub energy_j: f64,
+    pub energy_wall_ms: f64,
+    pub rounds: Vec<RoundTiming>,
 }
 
 #[cfg(test)]
@@ -252,6 +285,29 @@ mod tests {
         let titan_gpu = c.cost_ms(Op::Features { chunk: 100, blocks: 1 })
             + c.cost_ms(Op::Importance { n: 30 });
         assert!(titan_gpu < train, "titan gpu lane {titan_gpu} vs train {train}");
+    }
+
+    #[test]
+    fn sim_state_roundtrip_continues_clock_and_energy() {
+        let mut live = DeviceSim::new("mlp");
+        for _ in 0..3 {
+            live.record(Lane::Cpu, Op::TrainStep { batch: 10 });
+            live.record(Lane::Gpu, Op::Importance { n: 30 });
+            live.end_round(true);
+        }
+        let mut restored = DeviceSim::new("mlp");
+        restored.restore_state(live.export_state());
+        assert_eq!(restored.total_ms(), live.total_ms());
+        assert_eq!(restored.energy().energy_j(), live.energy().energy_j());
+        assert_eq!(restored.rounds().len(), 3);
+        // both continue identically
+        for sim in [&mut live, &mut restored] {
+            sim.record(Lane::Cpu, Op::TrainStep { batch: 10 });
+            sim.end_round(false);
+        }
+        assert_eq!(restored.total_ms(), live.total_ms());
+        assert_eq!(restored.energy().avg_power_w(), live.energy().avg_power_w());
+        assert_eq!(restored.rounds().len(), live.rounds().len());
     }
 
     #[test]

@@ -15,6 +15,28 @@
 use crate::data::buffer::{Candidate, CandidateBuffer};
 use crate::data::sample::Sample;
 use crate::util::stats::{VecMean, Welford};
+use crate::{Error, Result};
+
+/// Exported coarse-filter state for session checkpoints: the per-class
+/// running estimators, the retained candidates and the arrival counter.
+/// Restoring it reproduces the filter bit-for-bit (see
+/// [`CoarseFilter::restore_state`]).
+#[derive(Clone, Debug)]
+pub struct FilterState {
+    /// Per-class `(count, f64 centroid)` from [`VecMean::state`].
+    pub centroid: Vec<(u64, Vec<f64>)>,
+    /// Per-class `(n, mean, m2)` from [`Welford::state`].
+    pub norm2: Vec<(u64, f64, f64)>,
+    /// Retained candidates, best-first ([`CandidateBuffer::snapshot`]).
+    /// Empty at round boundaries (the fine stage drains every round), but
+    /// carried so mid-round exports stay faithful.
+    pub buffer: Vec<Candidate>,
+    /// Buffer cap at export time (re-set from the idle budget every
+    /// round; restored for mid-round fidelity).
+    pub buffer_cap: usize,
+    /// Total arrivals processed.
+    pub processed: u64,
+}
 
 /// Per-class running estimators over filter features.
 #[derive(Debug)]
@@ -192,6 +214,66 @@ impl CoarseFilter {
     /// drain/reallocate/re-offer churn per idle-budget change.
     pub fn set_buffer_cap(&mut self, cap: usize) {
         self.buffer.set_cap(cap);
+    }
+
+    /// Export the filter state for a session checkpoint. Estimator means
+    /// are exported as the f64 accumulators, so a restore is bit-identical
+    /// (the f32 casts and cached norms are re-derived deterministically).
+    pub fn export_state(&self) -> FilterState {
+        FilterState {
+            centroid: self
+                .estimators
+                .centroid
+                .iter()
+                .map(|m| {
+                    let (n, mean) = m.state();
+                    (n, mean.to_vec())
+                })
+                .collect(),
+            norm2: self.estimators.norm2.iter().map(|w| w.state()).collect(),
+            buffer: self.buffer.snapshot(),
+            buffer_cap: self.buffer.cap(),
+            processed: self.processed,
+        }
+    }
+
+    /// Restore a state exported by [`CoarseFilter::export_state`] into a
+    /// freshly built filter of the same geometry. Errors on class-count or
+    /// feature-dim mismatches (a config drift the fingerprint check should
+    /// have caught earlier).
+    pub fn restore_state(&mut self, st: FilterState) -> Result<()> {
+        let classes = self.estimators.centroid.len();
+        if st.centroid.len() != classes || st.norm2.len() != classes {
+            return Err(Error::Config(format!(
+                "filter restore: snapshot has {}/{} classes, filter has {classes}",
+                st.centroid.len(),
+                st.norm2.len()
+            )));
+        }
+        let dim = self.estimators.dim;
+        if let Some((_, mean)) = st.centroid.iter().find(|(_, m)| m.len() != dim) {
+            return Err(Error::Config(format!(
+                "filter restore: centroid dim {} != feature dim {dim}",
+                mean.len()
+            )));
+        }
+        self.estimators.centroid = st
+            .centroid
+            .into_iter()
+            .map(|(n, mean)| VecMean::from_state(n, mean))
+            .collect();
+        self.estimators.norm2 = st
+            .norm2
+            .into_iter()
+            .map(|(n, mean, m2)| Welford::from_state(n, mean, m2))
+            .collect();
+        if st.buffer_cap == 0 {
+            return Err(Error::Config("filter restore: buffer cap must be positive".into()));
+        }
+        self.buffer.set_cap(st.buffer_cap);
+        self.buffer.restore(st.buffer)?;
+        self.processed = st.processed;
+        Ok(())
     }
 }
 
@@ -388,6 +470,61 @@ mod tests {
         let ids: Vec<u64> = f.drain().iter().map(|c| c.sample.id).collect();
         assert_eq!(ids.len(), 3);
         assert!(ids.contains(&7), "{ids:?}");
+    }
+
+    /// Kill-and-restore equivalence at the filter layer: a restored filter
+    /// must process the remaining stream bit-identically to one that was
+    /// never interrupted.
+    #[test]
+    fn export_restore_continues_bit_identically() {
+        let classes = 3;
+        let dim = 6;
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(77);
+        let mk_round = |rng: &mut crate::util::rng::Xoshiro256, base: u64| {
+            let samples: Vec<Sample> = (0..20)
+                .map(|i| feat_sample(base + i as u64, rng.index(classes) as u32))
+                .collect();
+            let feats = rand_feats(rng, 20, dim);
+            (samples, feats)
+        };
+        let mut live = CoarseFilter::new(classes, dim, 8, 0.3);
+        // two completed rounds (process + drain, like the coordinator)
+        for r in 0..2u64 {
+            let (samples, feats) = mk_round(&mut rng, r * 100);
+            live.process_chunk(&samples, &feats);
+            let _ = live.drain();
+        }
+        let state = live.export_state();
+        let mut restored = CoarseFilter::new(classes, dim, 8, 0.3);
+        restored.restore_state(state).unwrap();
+        assert_eq!(restored.processed(), live.processed());
+        // round 3 through both: identical scores, buffer contents, drains
+        let (samples, feats) = mk_round(&mut rng, 300);
+        live.process_chunk(&samples, &feats);
+        restored.process_chunk(&samples, &feats);
+        let (a, b) = (live.drain(), restored.drain());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.sample.id, y.sample.id);
+            assert_eq!(x.score, y.score);
+        }
+        for y in 0..classes as u32 {
+            assert_eq!(live.estimators.centroid_ref(y), restored.estimators.centroid_ref(y));
+            assert_eq!(live.estimators.mean_norm2(y), restored.estimators.mean_norm2(y));
+        }
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_geometry() {
+        let mut f = CoarseFilter::new(2, 4, 8, 0.3);
+        let other = CoarseFilter::new(3, 4, 8, 0.3).export_state();
+        assert!(f.restore_state(other).is_err());
+        let other = CoarseFilter::new(2, 5, 8, 0.3).export_state();
+        assert!(f.restore_state(other).is_err());
+        let mut ok = CoarseFilter::new(2, 4, 8, 0.3).export_state();
+        assert!(f.restore_state(ok.clone()).is_ok());
+        ok.buffer_cap = 0;
+        assert!(f.restore_state(ok).is_err());
     }
 
     #[test]

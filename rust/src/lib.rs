@@ -23,9 +23,11 @@
 //! - [`filter`] — the coarse-grained first stage.
 //! - [`coordinator`] — the session API: `SessionBuilder` → `Session`, a
 //!   step-driven state machine over one canonical round loop (sequential
-//!   or pipelined `ExecBackend`, `RoundObserver` hooks), plus the
+//!   or pipelined `ExecBackend`, `RoundObserver` hooks), the
 //!   [`coordinator::host`] fleet runtime that interleaves many sessions
-//!   round-by-round under pluggable scheduling policies;
+//!   round-by-round under pluggable scheduling policies, and
+//!   [`coordinator::snapshot`] crash-safe checkpoints — a killed session
+//!   or fleet resumes byte-identically from its last on-disk snapshot;
 //!   `sequential`/`pipeline` remain as deprecated shims.
 //! - [`device`] — edge-device timing, memory and energy simulation.
 //! - [`fl`] — federated-learning orchestration (paper Appendix B), built

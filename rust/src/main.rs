@@ -62,33 +62,105 @@ fn print_usage() {
     println!("  run     --model <m> --method <rs|is|ll|hl|ce|ocs|camel|cis|titan>");
     println!("          --rounds N --batch N --candidates N --seed N [--sequential]");
     println!("          [--feature-noise F | --label-noise F]");
+    println!("          [--checkpoint FILE] [--checkpoint-every K]  snapshot every K rounds");
+    println!("          [--resume FILE]     restart a killed run from its snapshot");
+    println!("          [--halt-after N]    stop (resumable) after N rounds, no finish");
     println!("          (any method may run pipelined; --sequential opts out)");
     println!("  fleet   --sessions N --model <m> --methods a,b --rounds N --seed N");
     println!("          [--policy rr|fewest|staleness] [--sources stream,replay,subset,drift]");
     println!("          [--pipelined]  (methods/sources cycle across the N sessions;");
     println!("          sessions interleave round-by-round on the host scheduler)");
+    println!("          [--checkpoint-dir DIR] [--checkpoint-every K]  per-member snapshots");
+    println!("          [--resume DIR]  restart each member at its own saved round");
     println!("  exp     <id> [--fast] [--models a,b|all] [--seed N]   (exp list: ids)");
     println!("  fl      --model <m> --method <m> [--fast]");
     println!("  models  [--artifacts DIR]");
     println!("  verify  [--artifacts DIR]   cross-check artifacts vs golden.json");
 }
 
+/// `--checkpoint-every` as a validated cadence (`Checkpoint::every`
+/// asserts > 0; a bad flag should be a config error, not a panic).
+fn checkpoint_cadence(args: &Args) -> Result<usize> {
+    let every = args.get_usize("checkpoint-every", 10)?;
+    if every == 0 {
+        return Err(titan::Error::Config(
+            "--checkpoint-every must be > 0".into(),
+        ));
+    }
+    Ok(every)
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
-    let cfg: RunConfig = presets::base(&args.get_str("model", "mlp")).apply_args(args)?;
+    use std::path::PathBuf;
+    use titan::coordinator::session::observers::Checkpoint;
+    use titan::coordinator::snapshot::{load_checkpoint, Loaded};
+    use titan::coordinator::StepEvent;
+
+    // --resume reconstructs the exact config from the snapshot instead of
+    // trusting re-typed flags (config flags are ignored on resume; the
+    // fingerprint check would reject any drift anyway)
+    let resume_path = args.get("resume").map(PathBuf::from);
+    let (cfg, resume_snap) = match &resume_path {
+        Some(path) => match load_checkpoint(path)? {
+            Loaded::Resumable(snap) => (RunConfig::from_json(&snap.config)?, Some(snap)),
+            Loaded::Complete { round, final_accuracy, .. } => {
+                return Err(titan::Error::Config(format!(
+                    "{}: run already complete ({round} rounds, final acc {:.2}%) — \
+                     delete the checkpoint to start over",
+                    path.display(),
+                    final_accuracy * 100.0
+                )));
+            }
+        },
+        None => (
+            presets::base(&args.get_str("model", "mlp")).apply_args(args)?,
+            None,
+        ),
+    };
     cfg.validate()?;
     // pipelining is method-agnostic: any selection method runs through
     // the pipelined backend when requested (pass --sequential to opt out;
     // the old CLI silently downgraded non-Titan methods to sequential)
     let backend = ExecBackend::for_config(&cfg);
     println!("config: {}", cfg.to_json().to_string_compact());
-    println!(
-        "backend: {}",
-        if backend.is_pipelined() { "pipelined" } else { "sequential" }
-    );
-    let (record, outcomes) = SessionBuilder::new(cfg.clone()).backend(backend).run()?;
+    println!("backend: {}", backend.kind());
+
+    let mut builder = SessionBuilder::new(cfg.clone()).backend(backend);
+    // checkpoint to the explicit --checkpoint path, or keep writing the
+    // snapshot a resumed run came from
+    if let Some(ck) = args.get("checkpoint").map(PathBuf::from).or(resume_path) {
+        builder = builder.observe(Checkpoint::every(ck, checkpoint_cadence(args)?));
+    }
+    if let Some(snap) = resume_snap {
+        println!("resuming at round {}", snap.round);
+        builder = builder.resume_from_snapshot(*snap);
+    }
+
+    // --halt-after N: simulated preemption (the CI resume smoke) — step N
+    // rounds, then exit without teardown, leaving the snapshot resumable
+    if args.get("halt-after").is_some() {
+        let halt = args.get_usize("halt-after", 0)?;
+        let mut session = builder.build()?;
+        for _ in 0..halt {
+            if let StepEvent::Finished(record) = session.step()? {
+                println!(
+                    "run finished before the halt: final_acc={:.2}%",
+                    record.final_accuracy * 100.0
+                );
+                return Ok(());
+            }
+        }
+        println!(
+            "halted after round {} (resume with --resume)",
+            session.rounds_completed()
+        );
+        return Ok(());
+    }
+
+    let (record, _) = builder.run()?;
     println!(
         "finished {} rounds: final_acc={:.2}% device_time={:.1}s host_time={:.1}s",
-        outcomes.len(),
+        record.round_device_ms.len(),
         record.final_accuracy * 100.0,
         record.total_device_ms / 1e3,
         record.total_host_ms / 1e3,
@@ -132,6 +204,21 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         return Err(titan::Error::Config("--sources must name at least one source".into()));
     }
     let policy = parse_policy(&args.get_str("policy", "rr"))?;
+
+    // --resume DIR restarts each member from DIR/<name>.json and keeps
+    // checkpointing there (members whose snapshot marks a finished run
+    // are skipped); --checkpoint-dir alone enables fresh checkpointing
+    // to the same layout. When both are given, the resume dir wins —
+    // silently reading snapshots from one directory while writing to
+    // another would discard the saved progress the user pointed at.
+    let resume_dir = args.get("resume").map(std::path::PathBuf::from);
+    let ck_dir = resume_dir
+        .clone()
+        .or_else(|| args.get("checkpoint-dir").map(std::path::PathBuf::from));
+    let ck_every = checkpoint_cadence(args)?;
+    if let Some(dir) = &ck_dir {
+        std::fs::create_dir_all(dir)?;
+    }
 
     let mut fleet = FleetBuilder::new()
         .policy_boxed(policy)
@@ -185,7 +272,20 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             }
         };
         let name = format!("s{i}-{}-{kind}", method.name());
-        fleet = fleet.session(name, builder.build()?);
+        fleet = match &ck_dir {
+            Some(dir) => fleet.session_checkpointed(
+                name.clone(),
+                builder,
+                dir.join(format!("{name}.json")),
+                ck_every,
+                resume_dir.is_some(),
+            )?,
+            None => fleet.session(name, builder.build()?),
+        };
+    }
+    if fleet.is_empty() {
+        println!("all fleet sessions already complete — nothing to resume");
+        return Ok(());
     }
 
     let record = fleet.run()?;

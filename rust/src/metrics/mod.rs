@@ -21,6 +21,30 @@ pub struct CurvePoint {
     pub test_accuracy: f64,
 }
 
+impl CurvePoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("round", Json::Num(self.round as f64)),
+            ("device_ms", Json::Num(self.device_ms)),
+            ("host_ms", Json::Num(self.host_ms)),
+            ("train_loss", Json::Num(self.train_loss)),
+            ("test_loss", Json::Num(self.test_loss)),
+            ("test_accuracy", Json::Num(self.test_accuracy)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<CurvePoint> {
+        Ok(CurvePoint {
+            round: j.get("round")?.as_usize()?,
+            device_ms: j.get("device_ms")?.as_f64()?,
+            host_ms: j.get("host_ms")?.as_f64()?,
+            train_loss: j.get("train_loss")?.as_f64()?,
+            test_loss: j.get("test_loss")?.as_f64()?,
+            test_accuracy: j.get("test_accuracy")?.as_f64()?,
+        })
+    }
+}
+
 /// Full record of one training run.
 #[derive(Clone, Debug, Default)]
 pub struct RunRecord {
@@ -76,21 +100,7 @@ impl RunRecord {
     }
 
     pub fn to_json(&self) -> Json {
-        let curve = Json::Arr(
-            self.curve
-                .iter()
-                .map(|p| {
-                    Json::obj(vec![
-                        ("round", Json::Num(p.round as f64)),
-                        ("device_ms", Json::Num(p.device_ms)),
-                        ("host_ms", Json::Num(p.host_ms)),
-                        ("train_loss", Json::Num(p.train_loss)),
-                        ("test_loss", Json::Num(p.test_loss)),
-                        ("test_accuracy", Json::Num(p.test_accuracy)),
-                    ])
-                })
-                .collect(),
-        );
+        let curve = Json::Arr(self.curve.iter().map(|p| p.to_json()).collect());
         Json::obj(vec![
             ("method", Json::Str(self.method.clone())),
             ("model", Json::Str(self.model.clone())),
@@ -203,6 +213,27 @@ mod tests {
         let j = record_with_curve().to_json();
         assert_eq!(j.get("curve").unwrap().as_arr().unwrap().len(), 5);
         assert_eq!(j.get("method").unwrap().as_str().unwrap(), "titan");
+    }
+
+    #[test]
+    fn curve_point_json_roundtrip_is_exact() {
+        let p = CurvePoint {
+            round: 42,
+            device_ms: 1234.5678901234,
+            host_ms: 0.000123,
+            train_loss: 1.75,
+            test_loss: 0.1 + 0.2, // a value with no short decimal form
+            test_accuracy: 0.73125,
+        };
+        let text = p.to_json().to_string_compact();
+        let q = CurvePoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        // bit-exact: the JSON layer prints shortest-roundtrip f64s
+        assert_eq!(p.round, q.round);
+        assert_eq!(p.device_ms.to_bits(), q.device_ms.to_bits());
+        assert_eq!(p.host_ms.to_bits(), q.host_ms.to_bits());
+        assert_eq!(p.train_loss.to_bits(), q.train_loss.to_bits());
+        assert_eq!(p.test_loss.to_bits(), q.test_loss.to_bits());
+        assert_eq!(p.test_accuracy.to_bits(), q.test_accuracy.to_bits());
     }
 
     #[test]

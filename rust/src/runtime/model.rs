@@ -173,6 +173,20 @@ impl ModelRuntime {
         Ok(())
     }
 
+    /// Owned copy of the current parameters for serialization (session
+    /// checkpoints). One `Vec` clone — the export path, not a hot path.
+    pub fn export_params(&self) -> Vec<f32> {
+        self.params.as_ref().clone()
+    }
+
+    /// Adopt parameters from a checkpoint. Length-checked alias of
+    /// [`ModelRuntime::set_params`] — the import half of the
+    /// export/import pair, kept explicit so resume call sites read as
+    /// state restoration rather than ad-hoc parameter poking.
+    pub fn import_params(&mut self, p: Vec<f32>) -> Result<()> {
+        self.set_params(p)
+    }
+
     // ---- operations ----------------------------------------------------------
 
     /// One SGD step on a batch of samples; updates internal params and
@@ -664,6 +678,13 @@ mod tests {
         rt.set_params(p.clone()).unwrap();
         assert_eq!(rt.params(), &p[..]);
         assert!(rt.set_params(vec![0.0; 3]).is_err());
+        // checkpoint export/import round-trips through owned vectors
+        let exported = rt.export_params();
+        assert_eq!(exported, p);
+        rt.reset_params().unwrap();
+        rt.import_params(exported).unwrap();
+        assert_eq!(rt.params(), &p[..]);
+        assert!(rt.import_params(vec![0.0; 3]).is_err());
         rt.reset_params().unwrap();
         assert_ne!(rt.params(), &p[..]);
     }

@@ -78,6 +78,18 @@ impl Welford {
             self.m2 / self.n as f64
         }
     }
+
+    /// Export the accumulator state `(n, mean, m2)` for checkpointing.
+    pub fn state(&self) -> (u64, f64, f64) {
+        (self.n, self.mean, self.m2)
+    }
+
+    /// Rebuild an accumulator from an exported [`Welford::state`]. The
+    /// restored accumulator continues exactly where the exported one
+    /// stopped (same internal f64s, so subsequent pushes are bit-identical).
+    pub fn from_state(n: u64, mean: f64, m2: f64) -> Welford {
+        Welford { n, mean, m2 }
+    }
 }
 
 /// Streaming mean over f32 vectors (running class centroid).
@@ -142,6 +154,22 @@ impl VecMean {
     /// recompute. Identical to `norm2(&self.mean_f32())`.
     pub fn mean_norm2(&self) -> f64 {
         self.mean_norm2
+    }
+
+    /// Export `(count, f64 mean)` — the minimal state that determines the
+    /// whole accumulator (the f32 cast and its cached norm are derived).
+    pub fn state(&self) -> (u64, &[f64]) {
+        (self.n, &self.mean)
+    }
+
+    /// Rebuild from an exported [`VecMean::state`]. The f32 cast is
+    /// re-derived elementwise and the cached `‖mean‖²` is recomputed with
+    /// the same left-to-right summation as the push loop, so the restored
+    /// accumulator is bit-identical to the exported one.
+    pub fn from_state(n: u64, mean: Vec<f64>) -> VecMean {
+        let mean_f32: Vec<f32> = mean.iter().map(|&m| m as f32).collect();
+        let mean_norm2 = norm2(&mean_f32);
+        VecMean { n, mean, mean_f32, mean_norm2 }
     }
 }
 
@@ -261,6 +289,53 @@ mod tests {
             vm.push(&x);
             assert_eq!(vm.mean_norm2(), norm2(&vm.mean_f32()));
         }
+    }
+
+    #[test]
+    fn vec_mean_state_roundtrip_is_bit_identical() {
+        let mut vm = VecMean::new(4);
+        let mut state = 7u64;
+        let draw = |state: &mut u64| -> Vec<f32> {
+            (0..4)
+                .map(|_| {
+                    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    ((*state >> 33) as f32 / 2.0e9f32) - 1.0
+                })
+                .collect()
+        };
+        for _ in 0..37 {
+            vm.push(&draw(&mut state));
+        }
+        let (n, mean) = vm.state();
+        let mut restored = VecMean::from_state(n, mean.to_vec());
+        assert_eq!(restored.count(), vm.count());
+        assert_eq!(restored.mean_slice(), vm.mean_slice());
+        assert_eq!(restored.mean_norm2(), vm.mean_norm2());
+        // subsequent pushes continue bit-identically
+        for _ in 0..11 {
+            let x = draw(&mut state);
+            vm.push(&x);
+            restored.push(&x);
+        }
+        assert_eq!(restored.mean_slice(), vm.mean_slice());
+        assert_eq!(restored.mean_norm2(), vm.mean_norm2());
+    }
+
+    #[test]
+    fn welford_state_roundtrip() {
+        let mut w = Welford::new();
+        for i in 0..50 {
+            w.push(i as f64 * 0.13 - 2.0);
+        }
+        let (n, m, m2) = w.state();
+        let mut restored = Welford::from_state(n, m, m2);
+        assert_eq!(restored.count(), w.count());
+        assert_eq!(restored.mean(), w.mean());
+        assert_eq!(restored.variance(), w.variance());
+        w.push(1.5);
+        restored.push(1.5);
+        assert_eq!(restored.mean(), w.mean());
+        assert_eq!(restored.variance(), w.variance());
     }
 
     #[test]

@@ -50,6 +50,12 @@ impl LatencyRecorder {
         Self::default()
     }
 
+    /// Rebuild a recorder from raw samples (checkpoint restore: the
+    /// resumed run keeps appending to the pre-interruption history).
+    pub fn from_samples(samples_ms: Vec<f64>) -> Self {
+        Self { samples_ms }
+    }
+
     pub fn record(&mut self, d: Duration) {
         self.samples_ms.push(d.as_secs_f64() * 1e3);
     }
@@ -119,5 +125,8 @@ mod tests {
         assert_eq!(r.percentile_ms(100.0), 3.0);
         assert_eq!(r.total_ms(), 6.0);
         assert!(r.summary().contains("n=3"));
+        let restored = LatencyRecorder::from_samples(r.samples().to_vec());
+        assert_eq!(restored.count(), 3);
+        assert_eq!(restored.mean_ms(), r.mean_ms());
     }
 }

@@ -280,15 +280,18 @@ fn assert_records_equivalent(a: &RunRecord, b: &RunRecord) {
 }
 
 /// Three heterogeneous fleet members: different methods, round budgets
-/// and data sources, all sequential (deterministic under interleaving).
-fn fleet_member(i: usize) -> Session {
+/// and data sources (stream / drift / replay), all sequential
+/// (deterministic under interleaving). Returned as a builder so the
+/// resume tests can attach checkpoint observers / snapshots before
+/// building.
+fn fleet_member_builder(i: usize) -> SessionBuilder {
     let (method, rounds) = [(Method::Titan, 6), (Method::Rs, 4), (Method::Cis, 5)][i];
     let mut cfg = base(method, rounds);
     cfg.pipeline = false;
     cfg.eval_every = 2;
     cfg.seed += i as u64;
     let builder = SessionBuilder::new(cfg.clone()).sequential();
-    let builder = match i {
+    match i {
         1 => {
             let task = SynthTask::for_model(&cfg.model, cfg.seed);
             let end: Vec<f64> = (0..6).map(|y| if y < 3 { 3.0 } else { 0.25 }).collect();
@@ -303,8 +306,11 @@ fn fleet_member(i: usize) -> Session {
             builder.source(ReplaySource::capture(&mut stream, 300).unwrap())
         }
         _ => builder,
-    };
-    builder.build().unwrap()
+    }
+}
+
+fn fleet_member(i: usize) -> Session {
+    fleet_member_builder(i).build().unwrap()
 }
 
 /// The ISSUE's fleet determinism pin: under every scheduling policy,
@@ -334,6 +340,68 @@ fn fleet_sessions_match_solo_runs_under_every_policy() {
         let want_mem: usize = solo.iter().map(|r| r.peak_memory_bytes).sum();
         assert_eq!(record.peak_memory_bytes, want_mem, "{policy}");
     }
+}
+
+/// ISSUE 4's fleet-resume pin: kill a 3-member heterogeneous fleet
+/// (stream / drift / replay sources) mid-run with each member at a
+/// *different* completed round, resume via
+/// `FleetBuilder::session_checkpointed`, and every member's final record
+/// is byte-identical to its uninterrupted solo run.
+#[test]
+fn killed_fleet_resumes_each_member_at_its_own_round() {
+    use titan::coordinator::session::observers::Checkpoint;
+    if !have_artifacts() {
+        return;
+    }
+    let dir = std::env::temp_dir().join("titan_fleet_resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = |i: usize| dir.join(format!("s{i}.json"));
+
+    let solo: Vec<RunRecord> = (0..3).map(|i| fleet_member(i).run().unwrap().0).collect();
+
+    // the "kill": run each member a different number of rounds with its
+    // checkpoint observer (cadence 2), then drop it mid-run. Member 0
+    // snapshots at round 4; members 1 and 2 at round 2 — member 2's
+    // third round ran after the cadence multiple, so it is lost on disk
+    // and must be re-executed identically after resume.
+    for (i, steps) in [(0usize, 4usize), (1, 2), (2, 3)] {
+        let mut session = fleet_member_builder(i)
+            .observe(Checkpoint::every(path(i), 2))
+            .build()
+            .unwrap();
+        for _ in 0..steps {
+            session.step().unwrap();
+        }
+        drop(session);
+    }
+
+    let mut fleet = FleetBuilder::new().policy_boxed(parse_policy("fewest").unwrap());
+    for i in 0..3 {
+        fleet = fleet
+            .session_checkpointed(format!("s{i}"), fleet_member_builder(i), path(i), 2, true)
+            .unwrap();
+    }
+    let record = fleet.run().unwrap();
+    assert_eq!(record.records.len(), 3);
+    // post-resume rounds only: (6-4, 4-2, 5-2)
+    assert_eq!(record.session_rounds, vec![2, 2, 3]);
+    for (resumed, uninterrupted) in record.records.iter().zip(&solo) {
+        assert_records_equivalent(resumed, uninterrupted);
+    }
+    // every member's file now marks completion...
+    for i in 0..3 {
+        assert!(Checkpoint::load(&path(i)).unwrap().complete);
+    }
+    // ...so a second resume skips all members instead of re-running them
+    let mut fleet = FleetBuilder::new();
+    for i in 0..3 {
+        fleet = fleet
+            .session_checkpointed(format!("s{i}"), fleet_member_builder(i), path(i), 2, true)
+            .unwrap();
+    }
+    assert!(fleet.is_empty());
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Stepping a session by hand through the public API yields the same

@@ -7,7 +7,10 @@
 #   4. tier-1 verify              cargo build --release && cargo test -q
 #   5. fleet smoke                tiny multi-session scheduler run
 #      (artifact-gated; skipped on a fresh checkout like the benches)
-#   6. bench smoke                every bench target in fast mode
+#   6. resume smoke               halt a checkpointed run mid-way, resume
+#      it, and diff the final record JSON against an uninterrupted
+#      reference on every deterministic field (artifact-gated)
+#   7. bench smoke                every bench target in fast mode
 #      (TITAN_BENCH_FAST=1 via scripts/bench_smoke.sh; catches bench
 #      bit-rot without paying full measurement windows)
 #
@@ -41,6 +44,28 @@ if [ -f artifacts/mlp/meta.json ]; then
     --eval-every 2 --test-size 200 --policy fewest
 else
   echo "skipping fleet smoke: no artifacts (run \`make artifacts\`)"
+fi
+
+echo "== resume smoke =="
+if [ -f artifacts/mlp/meta.json ]; then
+  smoke_dir="results/resume_smoke"
+  rm -rf "$smoke_dir"
+  mkdir -p "$smoke_dir"
+  run_flags=(run --model mlp --method titan --sequential --rounds 6 \
+    --eval-every 2 --test-size 200)
+  # uninterrupted reference record
+  cargo run --release --quiet -- "${run_flags[@]}"
+  mv results/run_mlp_titan.json "$smoke_dir/reference.json"
+  # same run, checkpointed every 2 rounds and "killed" after round 3
+  cargo run --release --quiet -- "${run_flags[@]}" \
+    --checkpoint "$smoke_dir/ck.json" --checkpoint-every 2 --halt-after 3
+  # resumed from the snapshot (round 2; rounds 3-6 re-run)
+  cargo run --release --quiet -- run --resume "$smoke_dir/ck.json"
+  mv results/run_mlp_titan.json "$smoke_dir/resumed.json"
+  python3 "$script_dir/diff_records.py" \
+    "$smoke_dir/reference.json" "$smoke_dir/resumed.json"
+else
+  echo "skipping resume smoke: no artifacts (run \`make artifacts\`)"
 fi
 
 if [ "$run_bench" = 1 ]; then

@@ -1,0 +1,73 @@
+#!/usr/bin/env python3
+"""Compare two titan RunRecord JSON files on their deterministic fields.
+
+Used by the CI resume smoke: a run that was halted mid-way and resumed
+from its checkpoint must produce a record byte-identical to the
+uninterrupted reference run on every field that does not read the host
+wall clock. Host-clock fields (total_host_ms, round host times, the
+curve's host_ms, processing-delay latencies) legitimately differ between
+executions and are ignored.
+
+Usage: diff_records.py REFERENCE.json RESUMED.json
+Exits 0 when the deterministic fields match exactly, 1 otherwise.
+"""
+import json
+import sys
+
+DETERMINISTIC_TOP = [
+    "method",
+    "model",
+    "final_accuracy",
+    "best_accuracy",
+    "total_device_ms",
+    "energy_j",
+    "avg_power_w",
+    "peak_memory_bytes",
+]
+DETERMINISTIC_CURVE = [
+    "round",
+    "device_ms",
+    "train_loss",
+    "test_loss",
+    "test_accuracy",
+]
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    with open(sys.argv[1]) as f:
+        ref = json.load(f)
+    with open(sys.argv[2]) as f:
+        got = json.load(f)
+
+    failures = []
+    for key in DETERMINISTIC_TOP:
+        if ref.get(key) != got.get(key):
+            failures.append(f"{key}: {ref.get(key)!r} != {got.get(key)!r}")
+
+    ref_curve = ref.get("curve", [])
+    got_curve = got.get("curve", [])
+    if len(ref_curve) != len(got_curve):
+        failures.append(f"curve length: {len(ref_curve)} != {len(got_curve)}")
+    else:
+        for i, (a, b) in enumerate(zip(ref_curve, got_curve)):
+            for key in DETERMINISTIC_CURVE:
+                if a.get(key) != b.get(key):
+                    failures.append(
+                        f"curve[{i}].{key}: {a.get(key)!r} != {b.get(key)!r}"
+                    )
+
+    if failures:
+        print("records diverge on deterministic fields:")
+        for line in failures:
+            print(f"  {line}")
+        sys.exit(1)
+    print(
+        f"records match on {len(DETERMINISTIC_TOP)} scalar fields and "
+        f"{len(ref_curve)} curve points"
+    )
+
+
+if __name__ == "__main__":
+    main()
