@@ -38,7 +38,7 @@ fn main() -> titan::Result<()> {
     std::fs::create_dir_all(ck_dir)?;
 
     let mut fleet = FleetBuilder::new()
-        .policy(FewestRoundsFirst)
+        .policy(FewestRoundsFirst::new())
         .observe(FleetProgress::every(10));
     for (i, method) in [Method::Titan, Method::Rs, Method::Cis].into_iter().enumerate() {
         let mut cfg = presets::table1("mlp", method);

@@ -66,11 +66,51 @@ fn main() {
             filt.score_chunk_into(&samples, &feats, &mut out);
             out.iter().sum::<f64>()
         });
+        // wide-lane vs the PR-1 "narrow" chunked path: same cached
+        // centroid + cached ‖c‖², but scalar left-to-right dot/norm — the
+        // pair isolates exactly what the 8-lane kernels buy
+        b.bench(&format!("score_chunk_wide_ref_n{n}/chunk"), || {
+            let mut acc = 0.0f64;
+            let lambda = 0.3f64;
+            for (i, s) in samples.iter().enumerate() {
+                let f = &feats[i * dim..(i + 1) * dim];
+                let c = filt.estimators.centroid_ref(s.label);
+                let cn2 = filt.estimators.centroid_norm2(s.label);
+                let m2 = filt.estimators.mean_norm2(s.label);
+                let fn2 = titan::util::stats::norm2(f);
+                let fc = titan::util::stats::dot(f, c);
+                let rep = -(fn2 - 2.0 * fc + cn2);
+                let div = fn2 + m2 - 2.0 * fc;
+                acc += lambda * rep + (1.0 - lambda) * div;
+            }
+            acc
+        });
+        b.bench(&format!("score_chunk_wide_n{n}/chunk"), || {
+            filt.score_chunk_into(&samples, &feats, &mut out);
+            out.iter().sum::<f64>()
+        });
         // the full streaming path (update + score + offer), chunked
         let mut stream_filt = CoarseFilter::new(classes, dim, 30, 0.3);
         b.bench(&format!("process_chunk_n{n}/chunk"), || {
             stream_filt.process_chunk(&samples, &feats);
             stream_filt.processed()
+        });
+    }
+
+    // candidate ring: a round's worth of offers + the winners-only drain
+    // (paper shape: cap 30, ~100 arrivals/round; plus a 4k-cap regime)
+    for (cap, offers) in [(30usize, 100usize), (4096, 16384)] {
+        let scores: Vec<f64> = (0..offers)
+            .map(|i| ((i as f64 * 0.7311).sin() + 1.0) * 50.0 + i as f64 * 1e-9)
+            .collect();
+        let samples: Vec<Sample> =
+            (0..offers).map(|i| Sample::new(i as u64, 0, vec![0.0; 4])).collect();
+        let mut buf = titan::data::buffer::CandidateBuffer::new(cap);
+        b.bench(&format!("ring_offer_drain_cap{cap}_n{offers}/round"), || {
+            for (s, &score) in samples.iter().zip(&scores) {
+                buf.offer(s.clone(), score);
+            }
+            buf.drain_sorted().len()
         });
     }
 

@@ -59,6 +59,24 @@ fn main() {
         });
     }
 
+    // parallel triangle sweep: 1 worker (the ref side) vs 4 workers at
+    // cand_max scales where the sweep actually splits into blocks.
+    // Results are bit-identical across thread counts (pinned in the lib
+    // tests); this pair measures the wall-clock side. n=8192 allocates a
+    // 256 MiB K, so the smoke (fast) mode stops at 4096.
+    let fast = std::env::var("TITAN_BENCH_FAST").is_ok();
+    let par_sizes: &[usize] = if fast { &[1024, 4096] } else { &[1024, 4096, 8192] };
+    for &n in par_sizes {
+        let imp = synth_importance(n);
+        let labels: Vec<u32> = (0..n).map(|i| (i % classes) as u32).collect();
+        b.bench(&format!("gram_par_ref_n{n}"), || {
+            imp.gram_class_sums_threaded(&labels, classes, 1)
+        });
+        b.bench(&format!("gram_par_n{n}"), || {
+            imp.gram_class_sums_threaded(&labels, classes, 4)
+        });
+    }
+
     if !std::path::Path::new("artifacts/mlp/meta.json").exists() {
         eprintln!("skipping artifact benches: run `make artifacts` first");
         b.finish();

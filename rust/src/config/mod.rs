@@ -130,6 +130,14 @@ pub struct RunConfig {
     /// Run the pipelined coordinator (one-round-delay co-execution) instead
     /// of the sequential one.
     pub pipeline: bool,
+    /// Worker threads for the selection-side Gram triangle sweep
+    /// (`--select-threads`; default 1 = no spawned threads). Purely a
+    /// wall-clock lever: the sweep's block partition depends only on the
+    /// candidate count, so results are bit-identical for every value —
+    /// which is why this field is deliberately **excluded** from the
+    /// serialized config and the resume fingerprint (a snapshot taken at
+    /// one thread count resumes safely at another).
+    pub select_threads: usize,
     /// Directory with AOT artifacts.
     pub artifacts_dir: String,
 }
@@ -157,6 +165,7 @@ impl Default for RunConfig {
             test_size: 1000,
             noise: NoiseKind::None,
             pipeline: true,
+            select_threads: 1,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -181,6 +190,7 @@ impl RunConfig {
         self.lr = args.get_f32("lr", self.lr)?;
         self.eval_every = args.get_usize("eval-every", self.eval_every)?;
         self.test_size = args.get_usize("test-size", self.test_size)?;
+        self.select_threads = args.get_usize("select-threads", self.select_threads)?;
         if let Some(d) = args.get("artifacts") {
             self.artifacts_dir = d.to_string();
         }
@@ -275,6 +285,9 @@ impl RunConfig {
             test_size: j.get("test_size")?.as_usize()?,
             noise,
             pipeline: j.get("pipeline")?.as_bool()?,
+            // perf-only knob, not part of the serialized config (see the
+            // field docs) — resumed runs re-apply it from the CLI
+            select_threads: 1,
             artifacts_dir: j.get("artifacts_dir")?.as_str()?.to_string(),
         })
     }
@@ -311,6 +324,9 @@ impl RunConfig {
         }
         if self.rounds == 0 {
             return Err(Error::Config("rounds must be > 0".into()));
+        }
+        if self.select_threads == 0 {
+            return Err(Error::Config("select_threads must be > 0".into()));
         }
         Ok(())
     }
@@ -353,6 +369,21 @@ mod tests {
         let mut c = RunConfig::default();
         c.filter_lambda = 1.5;
         assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.select_threads = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn select_threads_is_a_pure_perf_knob() {
+        // CLI sets it; the fingerprint must NOT see it (a snapshot taken
+        // at one thread count resumes at another)
+        let args = Args::parse(["--select-threads", "4"].iter().map(|s| s.to_string())).unwrap();
+        let c = RunConfig::default().apply_args(&args).unwrap();
+        assert_eq!(c.select_threads, 4);
+        assert_eq!(c.fingerprint(), RunConfig::default().fingerprint());
+        // and from_json falls back to the default
+        assert_eq!(RunConfig::from_json(&c.to_json()).unwrap().select_threads, 1);
     }
 
     #[test]

@@ -38,7 +38,7 @@
 //! use titan::coordinator::host::{FewestRoundsFirst, FleetBuilder};
 //! use titan::coordinator::SessionBuilder;
 //!
-//! let mut fleet = FleetBuilder::new().policy(FewestRoundsFirst);
+//! let mut fleet = FleetBuilder::new().policy(FewestRoundsFirst::new());
 //! for (i, method) in [Method::Titan, Method::Rs].into_iter().enumerate() {
 //!     let mut cfg = presets::table1("mlp", method);
 //!     cfg.pipeline = false;
@@ -66,20 +66,41 @@ use crate::{Error, Result};
 pub struct TaskState {
     /// Rounds this task has completed.
     pub rounds_done: usize,
-    /// Scheduler picks since this task last ran (aged by the driver,
-    /// reset to 0 when the task runs).
-    pub staleness: usize,
+    /// Driver tick at which this task last ran (0 = never). Staleness is
+    /// the *difference* `now − last_run`, so ordering "stalest first" is
+    /// ordering "smallest last_run first" — which is what lets the driver
+    /// update one entry per tick instead of aging all N.
+    pub last_run: u64,
 }
 
 /// A scheduling policy over ready tasks.
 ///
-/// `ready` is non-empty and holds indices into `states`; `pick` must
-/// return one of them, and must be **deterministic** (no wall clock, no
-/// RNG) so fleet runs replay exactly. Policies may keep internal state
-/// (e.g. the round-robin cursor).
+/// `ready` is non-empty, **sorted ascending**, and holds indices into
+/// `states`; `pick` must return one of them, and must be
+/// **deterministic** (no wall clock, no RNG) so fleet runs replay
+/// exactly. Policies may keep internal state (e.g. the round-robin
+/// cursor).
+///
+/// The optional lifecycle hooks let a policy maintain O(log N) indexed
+/// state instead of scanning `ready` on every pick: the driver calls
+/// [`SchedPolicy::prepare`] whenever the ready set is (re)initialized
+/// and [`SchedPolicy::task_ran`] after a picked task finished a unit of
+/// work *and remains ready* (its `states` entry already updated). A task
+/// that leaves the ready set simply gets no `task_ran` — a picked entry
+/// is consumed. Policies that ignore the hooks (the default no-ops) must
+/// answer `pick` from `states`/`ready` alone, and the built-in
+/// heap-backed policies fall back to exactly that scan when the driver
+/// never prepared them.
 pub trait SchedPolicy {
     /// Pick the next task to run among `ready`.
     fn pick(&mut self, states: &[TaskState], ready: &[usize]) -> usize;
+
+    /// The ready set was (re)initialized (fleet start, FL comm round).
+    fn prepare(&mut self, _states: &[TaskState], _ready: &[usize]) {}
+
+    /// `task` was picked, ran one unit, and is ready again; its
+    /// `states[task]` is current.
+    fn task_ran(&mut self, _task: usize, _states: &[TaskState]) {}
 
     /// Display name for records and logs.
     fn name(&self) -> &'static str;
@@ -113,18 +134,93 @@ impl SchedPolicy for RoundRobin {
     }
 }
 
+/// Key-ordered policy core shared by [`FewestRoundsFirst`] and
+/// [`StalenessPriority`]: a lazy-deletion min-heap over `(key, index)`.
+///
+/// `task_ran` pushes the task's fresh key without hunting down the old
+/// entry; `pick` pops until the top entry's key still matches the task's
+/// current key and the task is live — O(log N) amortized (each stale
+/// entry is popped exactly once). Without `prepare` the heap is empty
+/// and `pick` answers with the original O(|ready|) scan, which doubles
+/// as the equivalence oracle (`heap_policies_match_scan_reference`).
+#[derive(Clone, Debug, Default)]
+struct KeyHeap {
+    heap: std::collections::BinaryHeap<std::cmp::Reverse<(u64, usize)>>,
+    /// `queued[i]`: task i has exactly one live entry in the heap.
+    queued: Vec<bool>,
+    prepared: bool,
+}
+
+impl KeyHeap {
+    fn prepare(&mut self, n: usize, ready: &[usize], key: impl Fn(usize) -> u64) {
+        self.heap.clear();
+        self.queued = vec![false; n];
+        self.prepared = true;
+        for &i in ready {
+            self.heap.push(std::cmp::Reverse((key(i), i)));
+            self.queued[i] = true;
+        }
+    }
+
+    fn push(&mut self, task: usize, key: u64) {
+        if self.prepared {
+            self.heap.push(std::cmp::Reverse((key, task)));
+            self.queued[task] = true;
+        }
+    }
+
+    /// Pop the live minimum, or None when unprepared / drained.
+    fn pop_min(&mut self, key: impl Fn(usize) -> u64) -> Option<usize> {
+        if !self.prepared {
+            return None;
+        }
+        while let Some(std::cmp::Reverse((k, i))) = self.heap.pop() {
+            if self.queued.get(i).copied().unwrap_or(false) && key(i) == k {
+                self.queued[i] = false;
+                return Some(i);
+            }
+            // stale: superseded by a later push or consumed — drop it
+        }
+        None
+    }
+}
+
 /// Progress fairness: the ready task with the fewest completed rounds
 /// (ties: smallest index). Keeps heterogeneous-length sessions aligned.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct FewestRoundsFirst;
+///
+/// Heap-backed through the [`SchedPolicy`] lifecycle hooks — O(log N)
+/// per pick on prepared drivers, with the original scan as the
+/// unprepared fallback (and the pinned reference).
+#[derive(Clone, Debug, Default)]
+pub struct FewestRoundsFirst {
+    heap: KeyHeap,
+}
+
+impl FewestRoundsFirst {
+    pub fn new() -> FewestRoundsFirst {
+        FewestRoundsFirst::default()
+    }
+}
 
 impl SchedPolicy for FewestRoundsFirst {
     fn pick(&mut self, states: &[TaskState], ready: &[usize]) -> usize {
-        ready
-            .iter()
-            .copied()
-            .min_by_key(|&i| (states[i].rounds_done, i))
-            .expect("ready is non-empty")
+        self.heap
+            .pop_min(|i| states[i].rounds_done as u64)
+            .unwrap_or_else(|| {
+                ready
+                    .iter()
+                    .copied()
+                    .min_by_key(|&i| (states[i].rounds_done, i))
+                    .expect("ready is non-empty")
+            })
+    }
+
+    fn prepare(&mut self, states: &[TaskState], ready: &[usize]) {
+        self.heap.prepare(states.len(), ready, |i| states[i].rounds_done as u64);
+    }
+
+    fn task_ran(&mut self, task: usize, states: &[TaskState]) {
+        self.heap.push(task, states[task].rounds_done as u64);
     }
 
     fn name(&self) -> &'static str {
@@ -132,19 +228,41 @@ impl SchedPolicy for FewestRoundsFirst {
     }
 }
 
-/// Staleness priority: the ready task that has waited the most scheduler
-/// picks since it last ran (ties: smallest index). Bounds per-session
-/// latency when the ready set churns.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct StalenessPriority;
+/// Staleness priority: the ready task that has waited longest since it
+/// last ran — the smallest [`TaskState::last_run`] (ties: smallest
+/// index; a never-run task has `last_run` 0 and outranks everything).
+/// Bounds per-session latency when the ready set churns.
+///
+/// Heap-backed exactly like [`FewestRoundsFirst`]; `last_run` only moves
+/// forward, so each pick invalidates at most one heap entry.
+#[derive(Clone, Debug, Default)]
+pub struct StalenessPriority {
+    heap: KeyHeap,
+}
+
+impl StalenessPriority {
+    pub fn new() -> StalenessPriority {
+        StalenessPriority::default()
+    }
+}
 
 impl SchedPolicy for StalenessPriority {
     fn pick(&mut self, states: &[TaskState], ready: &[usize]) -> usize {
-        ready
-            .iter()
-            .copied()
-            .min_by_key(|&i| (std::cmp::Reverse(states[i].staleness), i))
-            .expect("ready is non-empty")
+        self.heap.pop_min(|i| states[i].last_run).unwrap_or_else(|| {
+            ready
+                .iter()
+                .copied()
+                .min_by_key(|&i| (states[i].last_run, i))
+                .expect("ready is non-empty")
+        })
+    }
+
+    fn prepare(&mut self, states: &[TaskState], ready: &[usize]) {
+        self.heap.prepare(states.len(), ready, |i| states[i].last_run);
+    }
+
+    fn task_ran(&mut self, task: usize, states: &[TaskState]) {
+        self.heap.push(task, states[task].last_run);
     }
 
     fn name(&self) -> &'static str {
@@ -158,13 +276,16 @@ impl SchedPolicy for StalenessPriority {
 /// [`Fleet`] and the FL orchestrator): a misbehaving custom policy must
 /// fail loudly here instead of hanging a drain loop or indexing out of
 /// bounds in release builds, where a `debug_assert!` would vanish.
+/// `ready` is sorted ascending (the [`SchedPolicy`] contract), so the
+/// membership check is a binary search, not a scan.
 pub fn pick_validated(
     policy: &mut dyn SchedPolicy,
     states: &[TaskState],
     ready: &[usize],
 ) -> Result<usize> {
+    debug_assert!(ready.windows(2).all(|w| w[0] < w[1]), "ready must be sorted");
     let idx = policy.pick(states, ready);
-    if !ready.contains(&idx) {
+    if ready.binary_search(&idx).is_err() {
         return Err(Error::Pipeline(format!(
             "policy {:?} picked non-ready task {idx} (ready: {ready:?})",
             policy.name()
@@ -177,8 +298,8 @@ pub fn pick_validated(
 pub fn parse_policy(name: &str) -> Result<Box<dyn SchedPolicy>> {
     match name {
         "rr" | "round-robin" => Ok(Box::new(RoundRobin::new())),
-        "fewest" | "fewest-rounds-first" => Ok(Box::new(FewestRoundsFirst)),
-        "staleness" | "priority-by-staleness" => Ok(Box::new(StalenessPriority)),
+        "fewest" | "fewest-rounds-first" => Ok(Box::new(FewestRoundsFirst::new())),
+        "staleness" | "priority-by-staleness" => Ok(Box::new(StalenessPriority::new())),
         other => Err(Error::Config(format!(
             "unknown scheduling policy {other:?} (rr|fewest|staleness)"
         ))),
@@ -406,6 +527,10 @@ impl Fleet {
         let mut rounds_executed = 0usize;
         let mut device_ops = 0u64;
         let mut step_ms = 0.0f64;
+        // scheduler clock for staleness: one O(1) last_run write per tick
+        // replaces the old all-tasks aging pass (O(N) per round)
+        let mut tick = 0u64;
+        self.policy.prepare(&states, &ready);
 
         while !ready.is_empty() {
             let idx = pick_validated(self.policy.as_mut(), &states, &ready)?;
@@ -417,10 +542,9 @@ impl Fleet {
             match event {
                 StepEvent::RoundCompleted(outcome) => {
                     states[idx].rounds_done += 1;
-                    for s in states.iter_mut() {
-                        s.staleness += 1;
-                    }
-                    states[idx].staleness = 0;
+                    tick += 1;
+                    states[idx].last_run = tick;
+                    self.policy.task_ran(idx, &states);
                     rounds_executed += 1;
                     // +1: the round's TrainStep on the CPU lane (selector
                     // ops are the GPU-lane charge)
@@ -544,11 +668,11 @@ impl FleetRecord {
 mod tests {
     use super::*;
 
-    fn states(rounds: &[usize], stale: &[usize]) -> Vec<TaskState> {
+    fn states(rounds: &[usize], last_run: &[u64]) -> Vec<TaskState> {
         rounds
             .iter()
-            .zip(stale)
-            .map(|(&rounds_done, &staleness)| TaskState { rounds_done, staleness })
+            .zip(last_run)
+            .map(|(&rounds_done, &last_run)| TaskState { rounds_done, last_run })
             .collect()
     }
 
@@ -567,7 +691,8 @@ mod tests {
 
     #[test]
     fn fewest_rounds_prefers_laggards_then_index() {
-        let mut p = FewestRoundsFirst;
+        // unprepared policy: the scan fallback answers
+        let mut p = FewestRoundsFirst::new();
         let s = states(&[3, 1, 1, 5], &[0, 0, 0, 0]);
         assert_eq!(p.pick(&s, &[0, 1, 2, 3]), 1); // min rounds, tie -> min index
         assert_eq!(p.pick(&s, &[0, 2, 3]), 2);
@@ -576,11 +701,56 @@ mod tests {
 
     #[test]
     fn staleness_prefers_longest_waiting_then_index() {
-        let mut p = StalenessPriority;
-        let s = states(&[0, 0, 0, 0], &[2, 7, 7, 1]);
+        // staleness = ticks since last_run, so stalest = smallest last_run
+        let mut p = StalenessPriority::new();
+        let s = states(&[0, 0, 0, 0], &[5, 1, 1, 6]);
         assert_eq!(p.pick(&s, &[0, 1, 2, 3]), 1); // max staleness, tie -> min index
         assert_eq!(p.pick(&s, &[0, 2, 3]), 2);
         assert_eq!(p.pick(&s, &[0, 3]), 0);
+    }
+
+    /// THE policy-order equivalence pin (N ≤ 100): the heap-backed path
+    /// (driven through prepare/task_ran) must reproduce the scan
+    /// fallback's pick sequence exactly, through runs, finishes and
+    /// re-preparations, for both keyed policies.
+    #[test]
+    fn heap_policies_match_scan_reference() {
+        for n in [1usize, 2, 3, 17, 100] {
+            for seed in 0..5u64 {
+                check_heap_vs_scan(&mut FewestRoundsFirst::new(), n, seed);
+                check_heap_vs_scan(&mut StalenessPriority::new(), n, seed);
+            }
+        }
+    }
+
+    fn check_heap_vs_scan(heap: &mut dyn SchedPolicy, n: usize, seed: u64) {
+        // scan twin: same type, never prepared -> always the scan path.
+        // Both twins see the same states; only the heap one gets hooks.
+        let mut scan = match heap.name() {
+            "fewest-rounds-first" => {
+                Box::new(FewestRoundsFirst::new()) as Box<dyn SchedPolicy>
+            }
+            _ => Box::new(StalenessPriority::new()),
+        };
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(seed ^ n as u64);
+        let budgets: Vec<usize> = (0..n).map(|_| 1 + rng.index(6)).collect();
+        let mut states = vec![TaskState::default(); n];
+        let mut ready: Vec<usize> = (0..n).collect();
+        let mut tick = 0u64;
+        heap.prepare(&states, &ready);
+        while !ready.is_empty() {
+            let a = pick_validated(heap, &states, &ready).unwrap();
+            let b = pick_validated(scan.as_mut(), &states, &ready).unwrap();
+            assert_eq!(a, b, "{} n={n} seed={seed} tick={tick}", heap.name());
+            states[a].rounds_done += 1;
+            tick += 1;
+            states[a].last_run = tick;
+            if states[a].rounds_done >= budgets[a] {
+                ready.retain(|&i| i != a); // finished: no task_ran
+            } else {
+                heap.task_ran(a, &states);
+            }
+        }
     }
 
     #[test]

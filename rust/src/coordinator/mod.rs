@@ -122,6 +122,16 @@ impl SelectorEngine {
             )));
         }
         let filter = if cfg.method == Method::Titan {
+            // the fine stage's importance window is lowered at cand_max;
+            // a larger candidate budget would silently truncate at drain
+            // (changing realized-candidate records), so refuse it up front
+            if cfg.candidate_size > rt.set.meta.cand_max {
+                return Err(Error::Config(format!(
+                    "candidate_size {} exceeds the artifact's cand_max {} — \
+                     candidates past the importance window are never selectable",
+                    cfg.candidate_size, rt.set.meta.cand_max
+                )));
+            }
             rt.ensure_features(cfg.filter_blocks)?;
             Some(CoarseFilter::new(
                 num_classes,
@@ -135,7 +145,7 @@ impl SelectorEngine {
         Ok(SelectorEngine {
             rt,
             cfg: cfg.clone(),
-            strategy: make_strategy(cfg.method),
+            strategy: make_strategy(cfg.method, cfg.select_threads),
             filter,
             seen_per_class: vec![0; num_classes],
             rng: Xoshiro256::seed_from_u64(cfg.seed ^ 0x5E1E_C70A),
@@ -183,7 +193,12 @@ impl SelectorEngine {
                     .process_chunk(&arrivals[i..end], &feats[..valid * fd]);
                 i = end;
             }
-            let drained = self.filter.as_mut().unwrap().drain();
+            // drain bounded by the importance window: with the
+            // candidate_size <= cand_max guard above this never truncates
+            // (the winners-only sort is the ring's own compaction win) —
+            // it documents the selectable window if budget semantics ever
+            // outgrow the guard
+            let drained = self.filter.as_mut().unwrap().drain_top(meta.cand_max);
             report.candidates = drained.len();
             drained.into_iter().map(|c| c.sample).collect()
         } else {

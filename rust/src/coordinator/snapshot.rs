@@ -303,11 +303,16 @@ fn filter_to_json(f: &FilterState) -> Json {
             .collect(),
     );
     let buffer = Json::Arr(f.buffer.iter().map(candidate_to_json).collect());
+    let thresh = match f.buffer_thresh {
+        None => Json::Null,
+        Some(t) => Json::Num(t),
+    };
     Json::obj(vec![
         ("centroid", centroid),
         ("norm2", norm2),
         ("buffer", buffer),
         ("buffer_cap", Json::Num(f.buffer_cap as f64)),
+        ("buffer_thresh", thresh),
         ("processed", Json::Num(f.processed as f64)),
     ])
 }
@@ -337,11 +342,19 @@ fn filter_from_json(j: &Json) -> Result<FilterState> {
         .iter()
         .map(candidate_from_json)
         .collect::<Result<Vec<_>>>()?;
+    // absent (pre-ring snapshots) and Null both mean "no threshold"; a
+    // round-boundary snapshot always lands here since the buffer drains
+    // every round
+    let buffer_thresh = match j.get("buffer_thresh") {
+        Err(_) | Ok(Json::Null) => None,
+        Ok(v) => Some(v.as_f64()?),
+    };
     Ok(FilterState {
         centroid,
         norm2,
         buffer,
         buffer_cap: j.get("buffer_cap")?.as_usize()?,
+        buffer_thresh,
         processed: j.get("processed")?.as_usize()? as u64,
     })
 }
@@ -431,6 +444,8 @@ mod tests {
                         score: 0.1 + 0.2,
                     }],
                     buffer_cap: 8,
+                    // awkward float: the threshold must roundtrip bit-exactly
+                    buffer_thresh: Some(0.1 + 0.2),
                     processed: 40,
                 }),
             },
@@ -469,6 +484,10 @@ mod tests {
         assert_eq!(bf.centroid, sf.centroid);
         assert_eq!(bf.norm2, sf.norm2);
         assert_eq!(bf.buffer_cap, sf.buffer_cap);
+        assert_eq!(
+            bf.buffer_thresh.map(f64::to_bits),
+            sf.buffer_thresh.map(f64::to_bits)
+        );
         assert_eq!(bf.processed, sf.processed);
         assert_eq!(bf.buffer.len(), 1);
         assert_eq!(bf.buffer[0].sample.id, 9);

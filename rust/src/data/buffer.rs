@@ -1,11 +1,49 @@
-//! Capped priority candidate buffer — the coarse filter's output.
+//! Capped candidate buffer — the coarse filter's output — as an
+//! **O(1)-evict ring with a lazy admission threshold**.
 //!
-//! Keeps the top-`cap` samples by filter score (a min-heap on score: the
-//! worst retained candidate sits at the top and is evicted first). The
-//! fine-grained stage drains the buffer once per round.
+//! Logically the buffer keeps the top-`cap` samples by filter score. The
+//! previous implementation was a binary heap (O(log cap) per admitted
+//! offer, plus a full sort of everything retained on every per-round
+//! drain). Exact top-k maintenance fundamentally costs Ω(log k)
+//! comparisons per element, so this version relaxes *when* the cut is
+//! taken, not *what* survives it:
+//!
+//! - Offers append into a fixed-capacity ring (2·cap slots, allocated
+//!   up front). While fewer than `cap` candidates are retained, every
+//!   finite-scored offer is admitted — exactly the old behaviour.
+//! - Once `cap` is reached, a **lazy threshold** τ gates admission: τ is
+//!   the exact worst retained score at the last *exact point* (the first
+//!   saturated offer, a compaction, or a shrink), and offers score ≤ τ
+//!   are rejected in O(1). Offers above τ append in O(1).
+//! - When the ring fills its 2·cap slots, one **compaction** quickselects
+//!   the top-`cap` (Floyd–Rivest via `select_nth_unstable_by`), discards
+//!   the rest, and re-tightens τ — amortized O(1) per admitted offer.
+//! - The per-round drain quickselects the winners and **sorts only
+//!   them**, instead of sorting everything the heap happened to hold.
+//!
+//! Because τ lags the true k-th best between exact points, a borderline
+//! offer (score in `(τ, true worst]`) can be provisionally admitted where
+//! the heap rejected it outright; it then loses at the next
+//! compaction/drain. For distinct scores the **drained set and order are
+//! provably identical to the heap's** (τ never exceeds the true worst, so
+//! nothing that belongs in the top-`cap` is ever rejected, and nothing
+//! discarded by a compaction could re-enter it) — `ring_matches_heap_
+//! oracle` property-pins this against a reference heap. Under score
+//! *ties* the heap's outcome depended on arrival order (a tie arriving
+//! while full was rejected; a tie evicted under pressure dropped the
+//! smallest id); the ring resolves every tie at the cut deterministically
+//! by the same pinned orders — drains consume score-descending /
+//! id-ascending, compactions evict smallest-id-first among equal scores —
+//! independent of arrival interleaving.
+//!
+//! Checkpoints carry the ring verbatim: [`CandidateBuffer::snapshot`]
+//! exposes every slot (provisional entries included) plus the threshold
+//! ([`CandidateBuffer::thresh`]), and [`CandidateBuffer::restore`] takes
+//! both back, so a resumed buffer continues bit-identically. At round
+//! boundaries the fine stage has drained everything, so session
+//! snapshots carry an empty ring and no threshold.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
 
 use crate::data::sample::Sample;
 
@@ -28,44 +66,62 @@ fn best_first(a: &Candidate, b: &Candidate) -> Ordering {
         .then_with(|| a.sample.id.cmp(&b.sample.id))
 }
 
-// Min-heap ordering on score (reverse of natural), tie-broken by id so the
-// ordering is total and deterministic.
+/// Keep-priority order for the eviction cut: score descending, then id
+/// **descending**. Taking the top-`cap` under this order reproduces the
+/// pinned heap eviction sequence — repeatedly dropping the worst score
+/// with the *smallest* id first (see `set_cap`'s historical contract) —
+/// as one selection.
+fn keep_first(a: &Candidate, b: &Candidate) -> Ordering {
+    b.score
+        .partial_cmp(&a.score)
+        .unwrap_or(Ordering::Equal)
+        .then_with(|| b.sample.id.cmp(&a.sample.id))
+}
+
+// Equality retained for tests and dedup-style callers; ordering semantics
+// live in the named comparators above.
 impl PartialEq for Candidate {
     fn eq(&self, other: &Self) -> bool {
         self.score == other.score && self.sample.id == other.sample.id
     }
 }
 impl Eq for Candidate {}
-impl PartialOrd for Candidate {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Candidate {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // reversed: smaller score = "greater" for the BinaryHeap max-heap,
-        // so the heap top is the WORST candidate.
-        other
-            .score
-            .partial_cmp(&self.score)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| other.sample.id.cmp(&self.sample.id))
-    }
-}
 
-/// Capped priority buffer.
+/// Capped candidate ring (see the module docs for the cost model).
 #[derive(Debug)]
 pub struct CandidateBuffer {
-    heap: BinaryHeap<Candidate>,
+    /// Retained + provisionally admitted candidates, unordered. Holds at
+    /// most `physical(cap) - 1` entries between calls (a push to
+    /// `physical` triggers an immediate compaction back to `cap`).
+    ring: Vec<Candidate>,
     cap: usize,
+    /// Lazy admission threshold: the exact worst retained score at the
+    /// last exact point; `None` until the buffer first saturates (or
+    /// after any event that may have lowered the true worst — an
+    /// under-cap admission, a cap grow, a drain).
+    thresh: Option<f64>,
+}
+
+/// Ring slots for a logical capacity: one compaction per `cap` admitted
+/// offers (amortized O(1)), bounded memory at 2× the retained set.
+fn physical(cap: usize) -> usize {
+    cap * 2
+}
+
+/// Worst retained score of a candidate set (∞ for empty) — the one
+/// definition the threshold, the compaction cut, and the diagnostic
+/// accessor all share.
+fn min_score(items: &[Candidate]) -> f64 {
+    items.iter().map(|c| c.score).fold(f64::INFINITY, f64::min)
 }
 
 impl CandidateBuffer {
     pub fn new(cap: usize) -> Self {
         assert!(cap > 0, "buffer cap must be positive");
         Self {
-            heap: BinaryHeap::with_capacity(cap + 1),
+            ring: Vec::with_capacity(physical(cap)),
             cap,
+            thresh: None,
         }
     }
 
@@ -73,102 +129,196 @@ impl CandidateBuffer {
         self.cap
     }
 
-    /// Re-cap the buffer **in place** (idle-resource adaptation happens
-    /// every round, so this must not reallocate). Shrinking pops the worst
-    /// retained candidates straight off the heap — O((len−cap)·log len),
-    /// no drain/re-offer churn; growing just raises the limit. Score ties
-    /// at the cut follow [`CandidateBuffer::offer`]'s eviction order
-    /// (smallest id evicted first).
-    pub fn set_cap(&mut self, cap: usize) {
-        assert!(cap > 0, "buffer cap must be positive");
-        while self.heap.len() > cap {
-            self.heap.pop(); // heap top is the worst retained candidate
-        }
-        self.cap = cap;
+    /// Current admission threshold (`None` until first saturation) — part
+    /// of the exported state; see [`CandidateBuffer::restore`].
+    pub fn thresh(&self) -> Option<f64> {
+        self.thresh
     }
 
+    /// Re-cap the buffer **in place** (idle-resource adaptation happens
+    /// every round). A same-cap call is a no-op and must not disturb the
+    /// ring. Shrinking below the retained count quickselects the best
+    /// `cap` (score ties at the cut evict the smallest id first — the
+    /// pinned eviction order); growing raises the limit and drops the
+    /// stale threshold (the larger retained set has a lower true worst,
+    /// which a stale τ would wrongly gate).
+    ///
+    /// Growing while provisional over-admissions are in flight promotes
+    /// them into the larger retained set (the heap had destructively
+    /// evicted at the old cap; the ring hadn't cut yet). The coordinator
+    /// re-caps only at round boundaries, where the buffer is freshly
+    /// drained, so the two never differ there.
+    pub fn set_cap(&mut self, cap: usize) {
+        assert!(cap > 0, "buffer cap must be positive");
+        match cap.cmp(&self.cap) {
+            Ordering::Equal => {}
+            Ordering::Less => {
+                self.cap = cap;
+                if self.ring.len() > cap {
+                    self.compact();
+                }
+                // len ≤ cap: τ (exact at the old, larger cap) can only
+                // under-estimate the new true worst — still a safe lower
+                // bound for the strict admission test, so it stands.
+            }
+            Ordering::Greater => {
+                self.cap = cap;
+                self.thresh = None;
+                let want = physical(cap);
+                if self.ring.capacity() < want {
+                    self.ring.reserve_exact(want - self.ring.len());
+                }
+            }
+        }
+    }
+
+    /// Retained candidates (provisional over-admissions count at most
+    /// `cap` — the cut just hasn't been materialized yet).
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.ring.len().min(self.cap)
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.ring.is_empty()
     }
 
-    /// Offer a scored sample. Returns true if retained (possibly evicting
-    /// the current worst).
+    /// Offer a scored sample. Returns true if admitted — possibly
+    /// provisionally: a borderline admission may still lose the next
+    /// compaction cut (the heap answered against the exact worst; the
+    /// ring answers against the lazy threshold).
     ///
     /// Non-finite scores are rejected outright: a NaN (or ±∞ colliding
-    /// with the `unwrap_or(Equal)` fallback in the heap comparator) would
-    /// poison the ordering and make every later eviction undefined, so
-    /// they must never enter the heap.
+    /// with the `unwrap_or(Equal)` fallback in the comparators) would
+    /// poison the ordering and make every later cut undefined, so they
+    /// must never enter the ring.
     pub fn offer(&mut self, sample: Sample, score: f64) -> bool {
         if !score.is_finite() {
             return false;
         }
-        if self.heap.len() < self.cap {
-            self.heap.push(Candidate { sample, score });
+        if self.ring.len() < self.cap {
+            // under cap: unconditional admission, exactly the heap's
+            // behaviour — and the admitted score may sit below τ, so the
+            // cached threshold is no longer a valid bound
+            self.thresh = None;
+            self.ring.push(Candidate { sample, score });
             return true;
         }
-        // full: compare with the worst retained
-        if let Some(worst) = self.heap.peek() {
-            if score > worst.score {
-                self.heap.pop();
-                self.heap.push(Candidate { sample, score });
-                return true;
+        let t = match self.thresh {
+            Some(t) => t,
+            None => self.establish_thresh(),
+        };
+        if score > t {
+            self.ring.push(Candidate { sample, score });
+            if self.ring.len() == physical(self.cap) {
+                self.compact();
             }
+            true
+        } else {
+            false
         }
-        false
     }
 
-    /// Current worst retained score (None if empty).
+    /// Recompute the exact worst retained score (first saturated offer
+    /// after a lazy stretch). O(len) once per refill cycle.
+    fn establish_thresh(&mut self) -> f64 {
+        debug_assert!(self.ring.len() >= self.cap);
+        if self.ring.len() > self.cap {
+            self.compact();
+        } else {
+            self.thresh = Some(min_score(&self.ring));
+        }
+        self.thresh.expect("threshold just established")
+    }
+
+    /// Quickselect the top-`cap` under [`keep_first`], discard the rest,
+    /// re-tighten τ to the exact new worst. O(len) select + O(cap) scan.
+    fn compact(&mut self) {
+        debug_assert!(self.ring.len() > self.cap);
+        self.ring.select_nth_unstable_by(self.cap, keep_first);
+        self.ring.truncate(self.cap);
+        self.thresh = Some(min_score(&self.ring));
+    }
+
+    /// Current worst retained score (None if empty). Exact — when
+    /// provisional over-admissions are in flight this selects the
+    /// would-be-kept top-`cap` first, so it is O(len) with a scratch
+    /// allocation: a diagnostic/test accessor, not a hot-path one (the
+    /// hot admission test uses the lazy τ instead).
     pub fn worst_score(&self) -> Option<f64> {
-        self.heap.peek().map(|c| c.score)
+        if self.ring.is_empty() {
+            return None;
+        }
+        if self.ring.len() <= self.cap {
+            return Some(min_score(&self.ring));
+        }
+        let mut view: Vec<Candidate> = self.ring.clone();
+        view.select_nth_unstable_by(self.cap, keep_first);
+        Some(min_score(&view[..self.cap]))
     }
 
-    /// Drain all candidates, best-score-first (score ties: smaller id
-    /// first — the order `drain_order_is_pinned` regression-tests).
-    ///
-    /// In-place extraction: the heap's backing `Vec` is taken and sorted
-    /// directly with `sort_unstable_by` — no candidate clone and no
-    /// stable-merge-sort scratch buffer; the per-round drain allocates
-    /// nothing beyond the returned `Vec` it already owns. (A pop-then-
-    /// reverse extraction would avoid the sort but flips the id order
-    /// within score ties, so the owned-`Vec` sort is the variant that
-    /// keeps the historical tie-break.) Unstable sort is safe here: the
-    /// (score, id) key is total for the finite scores the filter emits,
-    /// and candidates comparing equal are interchangeable duplicates.
+    /// Drain all retained candidates, best-score-first (score ties:
+    /// smaller id first — the order `drain_order_is_pinned`
+    /// regression-tests). Materializes the eviction cut if provisional
+    /// admissions are in flight, then sorts **only the winners** — the
+    /// per-round cost is O(len) select + O(cap log cap) sort, independent
+    /// of how many borderline offers passed through the slack.
     pub fn drain_sorted(&mut self) -> Vec<Candidate> {
-        let mut v: Vec<Candidate> = std::mem::take(&mut self.heap).into_vec();
+        self.drain_top(usize::MAX)
+    }
+
+    /// Drain the best `min(k, len)` candidates in the canonical order and
+    /// discard the rest — exactly the first `k` entries of
+    /// [`CandidateBuffer::drain_sorted`], but sorting only what the
+    /// caller will consume (the fine stage's importance window is capped
+    /// at the artifact's `cand_max`, so anything past it was never
+    /// selectable). Empties the buffer either way.
+    pub fn drain_top(&mut self, k: usize) -> Vec<Candidate> {
+        if self.ring.len() > self.cap {
+            self.compact();
+        }
+        self.thresh = None;
+        let mut v = std::mem::take(&mut self.ring);
+        if k < v.len() {
+            // winners under the canonical order = the drain prefix
+            v.select_nth_unstable_by(k, best_first);
+            v.truncate(k);
+        }
         v.sort_unstable_by(best_first);
         v
     }
 
-    /// Peek at the retained candidates (unsorted).
+    /// Peek at the retained candidates (unsorted; may include provisional
+    /// over-admissions that the next cut will discard).
     pub fn iter(&self) -> impl Iterator<Item = &Candidate> {
-        self.heap.iter()
+        self.ring.iter()
     }
 
-    /// Deterministic snapshot of the retained candidates, best-first
-    /// (same order as [`CandidateBuffer::drain_sorted`]) — the
-    /// serialization order for session checkpoints. Non-destructive;
-    /// sample payloads are `Arc`-shared, so the clones are cheap.
+    /// Deterministic snapshot of every ring slot, best-first (same
+    /// comparator as [`CandidateBuffer::drain_sorted`]) — the
+    /// serialization order for session checkpoints. Provisional entries
+    /// are included: together with [`CandidateBuffer::thresh`] they make
+    /// restore-then-continue bit-identical to never having snapshotted.
+    /// Non-destructive; sample payloads are `Arc`-shared, so the clones
+    /// are cheap.
     pub fn snapshot(&self) -> Vec<Candidate> {
-        let mut v: Vec<Candidate> = self.heap.iter().cloned().collect();
+        let mut v: Vec<Candidate> = self.ring.iter().cloned().collect();
         v.sort_unstable_by(best_first);
         v
     }
 
-    /// Replace the retained candidates with a [`CandidateBuffer::snapshot`]
-    /// (checkpoint restore). Heap layout is irrelevant to behaviour — the
-    /// comparator is a total order, so drains and evictions only depend on
-    /// the retained set. Errors on more items than `cap` or non-finite
-    /// scores (which [`CandidateBuffer::offer`] could never have admitted).
-    pub fn restore(&mut self, items: Vec<Candidate>) -> crate::Result<()> {
-        if items.len() > self.cap {
+    /// Replace the ring contents with a [`CandidateBuffer::snapshot`] and
+    /// its exported threshold (checkpoint restore). Storage order inside
+    /// the ring never affects behaviour — every cut is a selection under
+    /// a total order — so the sorted snapshot restores faithfully.
+    /// Errors on more items than the ring could ever hold live
+    /// (`2·cap - 1`), non-finite scores, or a non-finite threshold (none
+    /// of which [`CandidateBuffer::offer`] could have produced).
+    pub fn restore(&mut self, items: Vec<Candidate>, thresh: Option<f64>) -> crate::Result<()> {
+        if items.len() >= physical(self.cap) {
             return Err(crate::Error::Config(format!(
-                "buffer restore: {} candidates > cap {}",
+                "buffer restore: {} candidates ≥ ring capacity {} (cap {})",
                 items.len(),
+                physical(self.cap),
                 self.cap
             )));
         }
@@ -177,8 +327,16 @@ impl CandidateBuffer {
                 "buffer restore: non-finite candidate score".into(),
             ));
         }
-        self.heap.clear();
-        self.heap.extend(items);
+        if let Some(t) = thresh {
+            if !t.is_finite() {
+                return Err(crate::Error::Config(
+                    "buffer restore: non-finite admission threshold".into(),
+                ));
+            }
+        }
+        self.ring.clear();
+        self.ring.extend(items);
+        self.thresh = thresh;
         Ok(())
     }
 }
@@ -217,7 +375,7 @@ mod tests {
         let mut b = CandidateBuffer::new(2);
         b.offer(s(0), 1.0);
         b.offer(s(1), 2.0);
-        assert!(b.offer(s(2), 5.0)); // evicts score 1.0
+        assert!(b.offer(s(2), 5.0)); // displaces score 1.0 from the top-2
         assert_eq!(b.worst_score(), Some(2.0));
     }
 
@@ -226,17 +384,17 @@ mod tests {
         let mut b = CandidateBuffer::new(2);
         b.offer(s(5), 1.0);
         b.offer(s(3), 1.0);
-        b.offer(s(4), 1.0); // equal score: not better than worst -> rejected
+        b.offer(s(4), 1.0); // equal score: not above the threshold -> rejected
         let ids: Vec<u64> = b.drain_sorted().iter().map(|c| c.sample.id).collect();
         assert_eq!(ids, vec![3, 5]);
     }
 
     #[test]
     fn drain_order_is_pinned() {
-        // regression pin for the in-place drain: strict score descent,
-        // id ascending within score ties — exactly what the fine stage
-        // has always consumed. Mixed offer order exercises both the heap
-        // path (under cap) and eviction (over cap).
+        // regression pin: strict score descent, id ascending within score
+        // ties — exactly what the fine stage has always consumed. Mixed
+        // offer order exercises both the under-cap path and threshold
+        // rejection.
         let mut b = CandidateBuffer::new(6);
         for (id, score) in [
             (9u64, 2.0),
@@ -263,6 +421,7 @@ mod tests {
         b.offer(s(0), 1.0);
         assert_eq!(b.drain_sorted().len(), 1);
         assert!(b.is_empty());
+        assert_eq!(b.thresh(), None, "drain resets the lazy threshold");
     }
 
     #[test]
@@ -285,7 +444,7 @@ mod tests {
         assert!(!b.offer(s(4), f64::NAN));
         assert!(b.offer(s(5), 3.0));
         assert!(b.offer(s(6), 1.0)); // fills to cap
-        assert!(!b.offer(s(7), f64::INFINITY)); // would evict if admitted
+        assert!(!b.offer(s(7), f64::INFINITY)); // would displace if admitted
         assert_eq!(b.worst_score(), Some(1.0));
         let ids: Vec<u64> = b.drain_sorted().iter().map(|c| c.sample.id).collect();
         assert_eq!(ids, vec![5, 3, 6]);
@@ -301,23 +460,52 @@ mod tests {
         let order: Vec<u64> = snap.iter().map(|c| c.sample.id).collect();
         assert_eq!(order, vec![1, 9, 2, 3], "best-first, id-tiebroken");
         assert_eq!(b.len(), 4, "snapshot is non-destructive");
+        assert_eq!(b.thresh(), Some(2.0), "rejecting (5, 1.0) established τ");
 
         let mut restored = CandidateBuffer::new(4);
-        restored.restore(snap.clone()).unwrap();
+        restored.restore(snap.clone(), b.thresh()).unwrap();
         assert_eq!(restored.len(), 4);
-        // restored buffer evicts and drains exactly like the original
+        assert_eq!(restored.thresh(), b.thresh());
+        // restored buffer admits, cuts and drains exactly like the original
         assert!(restored.offer(s(7), 3.0));
         assert!(b.offer(s(7), 3.0));
         let a: Vec<(u64, f64)> = b.drain_sorted().iter().map(|c| (c.sample.id, c.score)).collect();
         let r: Vec<(u64, f64)> =
             restored.drain_sorted().iter().map(|c| (c.sample.id, c.score)).collect();
         assert_eq!(a, r);
+        assert_eq!(
+            a,
+            vec![(1, 5.0), (9, 4.0), (7, 3.0), (3, 2.0)],
+            "score-2 tie at the cut evicts the smaller id (2) first"
+        );
 
-        // over-cap and non-finite snapshots are rejected
+        // over-capacity and non-finite snapshots are rejected
         let mut tiny = CandidateBuffer::new(2);
-        assert!(tiny.restore(snap).is_err());
+        assert!(tiny.restore(snap, None).is_err(), "4 items ≥ 2·cap");
         let bad = vec![Candidate { sample: s(0), score: f64::NAN }];
-        assert!(tiny.restore(bad).is_err());
+        assert!(tiny.restore(bad, None).is_err());
+        assert!(tiny.restore(Vec::new(), Some(f64::NAN)).is_err());
+    }
+
+    #[test]
+    fn mid_slack_snapshot_restores_bit_identically() {
+        // snapshot taken while provisional admissions are in flight must
+        // carry them + τ so the restored ring continues identically
+        let mut live = CandidateBuffer::new(2);
+        live.offer(s(0), 1.0);
+        live.offer(s(1), 2.0);
+        assert!(live.offer(s(2), 3.0)); // saturated admit -> slack, τ = 1.0
+        assert_eq!(live.thresh(), Some(1.0));
+        assert_eq!(live.snapshot().len(), 3, "provisional entry included");
+
+        let mut restored = CandidateBuffer::new(2);
+        restored.restore(live.snapshot(), live.thresh()).unwrap();
+        // identical behaviour on the borderline offer τ < 1.5 < true worst
+        assert_eq!(restored.offer(s(3), 1.5), live.offer(s(3), 1.5));
+        let a: Vec<u64> = live.drain_sorted().iter().map(|c| c.sample.id).collect();
+        let b: Vec<u64> = restored.drain_sorted().iter().map(|c| c.sample.id).collect();
+        assert_eq!(a, b);
+        assert_eq!(a, vec![2, 1], "borderline 1.5 lost the cut");
     }
 
     #[test]
@@ -341,7 +529,7 @@ mod tests {
         assert!(!b.offer(s(2), 0.5));
         b.set_cap(3);
         assert_eq!(b.len(), 2);
-        assert!(b.offer(s(3), 0.25)); // room again
+        assert!(b.offer(s(3), 0.25)); // room again, sub-τ scores included
         assert_eq!(b.len(), 3);
     }
 
@@ -350,5 +538,187 @@ mod tests {
     fn set_cap_zero_panics() {
         let mut b = CandidateBuffer::new(2);
         b.set_cap(0);
+    }
+
+    #[test]
+    fn same_cap_recap_is_a_no_op() {
+        // the idle-budget adaptation re-caps every round; an unchanged
+        // budget must not disturb the ring, the threshold, or the drain
+        let mut a = CandidateBuffer::new(4);
+        let mut b = CandidateBuffer::new(4);
+        for (id, score) in [(0u64, 2.0), (1, 7.0), (2, 4.0), (3, 1.0), (4, 6.0), (5, 3.0)] {
+            a.offer(s(id), score);
+            b.offer(s(id), score);
+            b.set_cap(4); // no-op re-cap between every offer
+        }
+        assert_eq!(b.cap(), 4);
+        assert_eq!(a.thresh(), b.thresh());
+        assert_eq!(a.len(), b.len());
+        let da: Vec<(u64, f64)> = a.drain_sorted().iter().map(|c| (c.sample.id, c.score)).collect();
+        let db: Vec<(u64, f64)> = b.drain_sorted().iter().map(|c| (c.sample.id, c.score)).collect();
+        assert_eq!(da, db);
+    }
+
+    #[test]
+    fn drain_top_is_prefix_of_drain_sorted() {
+        let offers = [
+            (0u64, 2.0),
+            (1, 7.0),
+            (2, 4.0),
+            (3, 1.0),
+            (4, 6.0),
+            (5, 3.0),
+            (6, 4.0),
+            (7, 5.5),
+        ];
+        for k in 0..=6usize {
+            let mut full = CandidateBuffer::new(4);
+            let mut top = CandidateBuffer::new(4);
+            for &(id, score) in &offers {
+                full.offer(s(id), score);
+                top.offer(s(id), score);
+            }
+            let want: Vec<(u64, f64)> = full
+                .drain_sorted()
+                .iter()
+                .take(k)
+                .map(|c| (c.sample.id, c.score))
+                .collect();
+            let got: Vec<(u64, f64)> =
+                top.drain_top(k).iter().map(|c| (c.sample.id, c.score)).collect();
+            assert_eq!(got, want, "k = {k}");
+            assert!(top.is_empty(), "drain_top empties the ring");
+        }
+    }
+
+    /// The pre-ring implementation, verbatim, as the equivalence oracle:
+    /// a capped min-heap on (score, id) with strict-greater admission.
+    struct HeapOracle {
+        heap: std::collections::BinaryHeap<OracleEntry>,
+        cap: usize,
+    }
+
+    /// Max-heap entry whose "greatest" element is the worst retained
+    /// candidate (smallest score, then smallest id) — the old Ord.
+    struct OracleEntry(Candidate);
+
+    impl PartialEq for OracleEntry {
+        fn eq(&self, other: &Self) -> bool {
+            self.0 == other.0
+        }
+    }
+    impl Eq for OracleEntry {}
+    impl PartialOrd for OracleEntry {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for OracleEntry {
+        fn cmp(&self, other: &Self) -> Ordering {
+            other
+                .0
+                .score
+                .partial_cmp(&self.0.score)
+                .unwrap_or(Ordering::Equal)
+                .then_with(|| other.0.sample.id.cmp(&self.0.sample.id))
+        }
+    }
+
+    impl HeapOracle {
+        fn new(cap: usize) -> Self {
+            Self { heap: std::collections::BinaryHeap::new(), cap }
+        }
+
+        fn offer(&mut self, sample: Sample, score: f64) {
+            if !score.is_finite() {
+                return;
+            }
+            if self.heap.len() < self.cap {
+                self.heap.push(OracleEntry(Candidate { sample, score }));
+                return;
+            }
+            if let Some(worst) = self.heap.peek() {
+                if score > worst.0.score {
+                    self.heap.pop();
+                    self.heap.push(OracleEntry(Candidate { sample, score }));
+                }
+            }
+        }
+
+        fn set_cap(&mut self, cap: usize) {
+            while self.heap.len() > cap {
+                self.heap.pop();
+            }
+            self.cap = cap;
+        }
+
+        fn drain_sorted(&mut self) -> Vec<Candidate> {
+            let mut v: Vec<Candidate> =
+                std::mem::take(&mut self.heap).into_iter().map(|e| e.0).collect();
+            v.sort_unstable_by(best_first);
+            v
+        }
+
+        fn worst_score(&self) -> Option<f64> {
+            self.heap.peek().map(|e| e.0.score)
+        }
+    }
+
+    /// Distinct-score streams: the ring's drains, worst scores and
+    /// retained sets must match the heap exactly, through interleaved
+    /// re-caps and multi-round drains. (Per-offer return values may
+    /// legitimately differ — provisional admissions — so they are not
+    /// compared.)
+    #[test]
+    fn ring_matches_heap_oracle_on_distinct_scores() {
+        crate::util::prop::forall(
+            313,
+            40,
+            |rng| crate::util::prop::gen::f64_vec(rng, 3, 3, 0.0, 1.0),
+            |seedvec| {
+                let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(
+                    (seedvec.iter().sum::<f64>() * 1e6) as u64 ^ 0x21F6,
+                );
+                let cap = 1 + rng.index(12);
+                let mut ring = CandidateBuffer::new(cap);
+                let mut oracle = HeapOracle::new(cap);
+                let mut next_id = 0u64;
+                for _round in 0..3 {
+                    // occasional symmetric re-cap (idle-budget shape)
+                    if rng.next_f64() < 0.4 {
+                        let new_cap = 1 + rng.index(12);
+                        ring.set_cap(new_cap);
+                        oracle.set_cap(new_cap);
+                    }
+                    let offers = 1 + rng.index(5 * cap + 10);
+                    for _ in 0..offers {
+                        // a tiny id-proportional offset keeps scores
+                        // distinct (ties are the documented divergence)
+                        let score = rng.next_f64() * 100.0 + next_id as f64 * 1e-6;
+                        ring.offer(s(next_id), score);
+                        oracle.offer(s(next_id), score);
+                        next_id += 1;
+                    }
+                    let (rw, ow) = (ring.worst_score(), oracle.worst_score());
+                    if rw != ow {
+                        return Err(format!("worst {rw:?} != oracle {ow:?}"));
+                    }
+                    let rd: Vec<(u64, u64)> = ring
+                        .drain_sorted()
+                        .iter()
+                        .map(|c| (c.sample.id, c.score.to_bits()))
+                        .collect();
+                    let od: Vec<(u64, u64)> = oracle
+                        .drain_sorted()
+                        .iter()
+                        .map(|c| (c.sample.id, c.score.to_bits()))
+                        .collect();
+                    if rd != od {
+                        return Err(format!("drain {rd:?} != oracle {od:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

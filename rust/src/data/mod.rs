@@ -1,7 +1,7 @@
 //! Data plane: sample types, synthetic task generators (the stand-ins for
 //! CIFAR-10 / Speech Commands / HARBOX — see DESIGN.md §Substitutions),
 //! the streaming source with noise injection, the class-indexed sample
-//! store, the capped candidate priority buffer, and the object-safe
+//! store, the capped candidate ring (lazy-threshold top-k), and the object-safe
 //! [`DataSource`] seam the coordinator session pulls rounds through
 //! (stream / replay / non-IID class subset / drifting class mix).
 

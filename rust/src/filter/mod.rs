@@ -3,7 +3,7 @@
 //! For every streaming sample the filter extracts shallow-layer features
 //! (the `features_b<k>` artifact), scores them against per-class running
 //! estimators with `λ·Rep + (1−λ)·Div`, and keeps the best-scoring samples
-//! in a capped priority buffer that feeds the fine-grained stage.
+//! in a capped candidate ring that feeds the fine-grained stage.
 //!
 //! The running estimators are exactly the paper's two per-class sums:
 //! the feature centroid `E[f]` and the mean squared norm `E‖f‖²`, both
@@ -27,13 +27,17 @@ pub struct FilterState {
     pub centroid: Vec<(u64, Vec<f64>)>,
     /// Per-class `(n, mean, m2)` from [`Welford::state`].
     pub norm2: Vec<(u64, f64, f64)>,
-    /// Retained candidates, best-first ([`CandidateBuffer::snapshot`]).
-    /// Empty at round boundaries (the fine stage drains every round), but
-    /// carried so mid-round exports stay faithful.
+    /// Ring contents, best-first ([`CandidateBuffer::snapshot`] —
+    /// provisional over-admissions included). Empty at round boundaries
+    /// (the fine stage drains every round), but carried so mid-round
+    /// exports stay faithful.
     pub buffer: Vec<Candidate>,
     /// Buffer cap at export time (re-set from the idle budget every
     /// round; restored for mid-round fidelity).
     pub buffer_cap: usize,
+    /// Lazy admission threshold at export time
+    /// ([`CandidateBuffer::thresh`]; `None` at round boundaries).
+    pub buffer_thresh: Option<f64>,
     /// Total arrivals processed.
     pub processed: u64,
 }
@@ -62,7 +66,7 @@ impl ClassEstimators {
     pub fn update(&mut self, label: u32, feat: &[f32]) {
         debug_assert_eq!(feat.len(), self.dim);
         self.centroid[label as usize].push(feat);
-        self.norm2[label as usize].push(crate::util::stats::norm2(feat));
+        self.norm2[label as usize].push(crate::util::simd::norm2(feat));
     }
 
     pub fn count(&self, label: u32) -> u64 {
@@ -115,15 +119,18 @@ impl CoarseFilter {
     /// inside the importance graph pipeline).
     ///
     /// Zero heap allocations per call: the centroid is borrowed from the
-    /// running estimator and `‖c‖²` comes from its cache, so the only
-    /// O(dim) work left is the `⟨f, c⟩` dot product. Bit-identical to
-    /// [`CoarseFilter::score_ref`].
+    /// running estimator and `‖c‖²` comes from its cache. The remaining
+    /// O(dim) work — `⟨f, c⟩` and `‖f‖²` — runs through the 8-lane wide
+    /// kernels ([`crate::util::simd`]): deterministic and CPU-independent,
+    /// and within 1e-12 of [`CoarseFilter::score_ref`] (property-pinned;
+    /// the lane-striped sums round differently than the scalar chain, so
+    /// the agreement is tight-tolerance, not bitwise).
     pub fn score(&self, label: u32, feat: &[f32]) -> f64 {
         let c = self.estimators.centroid_ref(label);
         let cn2 = self.estimators.centroid_norm2(label);
         let m2 = self.estimators.mean_norm2(label);
-        let fn2 = crate::util::stats::norm2(feat);
-        let fc = crate::util::stats::dot(feat, c);
+        let fn2 = crate::util::simd::norm2(feat);
+        let fc = crate::util::simd::dot(feat, c);
         let rep = -(fn2 - 2.0 * fc + cn2);
         let div = fn2 + m2 - 2.0 * fc;
         self.lambda * rep + (1.0 - self.lambda) * div
@@ -208,10 +215,19 @@ impl CoarseFilter {
         self.buffer.drain_sorted()
     }
 
+    /// Drain only the best `k` candidates (the coordinator passes the
+    /// artifact's `cand_max` — anything past the importance window was
+    /// never selectable) and discard the rest; exactly the first `k`
+    /// entries of [`CoarseFilter::drain`], sorting only the winners.
+    pub fn drain_top(&mut self, k: usize) -> Vec<Candidate> {
+        self.buffer.drain_top(k)
+    }
+
     /// Re-cap the buffer for the next round (idle-resource adaptation,
     /// §3.4: the effective candidate budget follows the idle capacity).
-    /// Keeps the best `cap` current entries if shrinking. In-place: no
-    /// drain/reallocate/re-offer churn per idle-budget change.
+    /// Keeps the best `cap` current entries if shrinking. In-place, and a
+    /// same-cap call — the common case under a flat idle trace — returns
+    /// without touching ring or threshold.
     pub fn set_buffer_cap(&mut self, cap: usize) {
         self.buffer.set_cap(cap);
     }
@@ -233,6 +249,7 @@ impl CoarseFilter {
             norm2: self.estimators.norm2.iter().map(|w| w.state()).collect(),
             buffer: self.buffer.snapshot(),
             buffer_cap: self.buffer.cap(),
+            buffer_thresh: self.buffer.thresh(),
             processed: self.processed,
         }
     }
@@ -271,7 +288,7 @@ impl CoarseFilter {
             return Err(Error::Config("filter restore: buffer cap must be positive".into()));
         }
         self.buffer.set_cap(st.buffer_cap);
-        self.buffer.restore(st.buffer)?;
+        self.buffer.restore(st.buffer, st.buffer_thresh)?;
         self.processed = st.processed;
         Ok(())
     }
@@ -418,6 +435,63 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// Wide-lane remainder coverage: dims off the 8-lane width (1, 7, 9,
+    /// 63, 65) drive the chunked scorer against the scalar oracle, and an
+    /// empty chunk is a no-op on every observable.
+    #[test]
+    fn property_wide_lanes_cover_remainder_dims() {
+        for &dim in &[1usize, 7, 9, 63, 65] {
+            crate::util::prop::forall(
+                200 + dim as u64,
+                10,
+                |rng| crate::util::prop::gen::f64_vec(rng, 3, 3, 0.0, 1.0),
+                |seedvec| {
+                    let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(
+                        (seedvec.iter().sum::<f64>() * 1e6) as u64 ^ dim as u64,
+                    );
+                    let classes = 1 + rng.index(3);
+                    let n = 1 + rng.index(24);
+                    let mut f = CoarseFilter::new(classes, dim, 8, rng.next_f64() as f32);
+                    for _ in 0..20 {
+                        let label = rng.index(classes) as u32;
+                        f.estimators.update(label, &rand_feats(&mut rng, 1, dim));
+                    }
+                    let samples: Vec<Sample> = (0..n)
+                        .map(|i| feat_sample(i as u64, rng.index(classes) as u32))
+                        .collect();
+                    let feats = rand_feats(&mut rng, n, dim);
+                    let chunked = f.score_chunk(&samples, &feats);
+                    for (i, s) in samples.iter().enumerate() {
+                        let scalar = f.score_ref(s.label, &feats[i * dim..(i + 1) * dim]);
+                        if (chunked[i] - scalar).abs() > 1e-12 * scalar.abs().max(1.0) {
+                            return Err(format!(
+                                "dim {dim} chunk[{i}] {} != scalar {scalar}",
+                                chunked[i]
+                            ));
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn empty_chunk_is_a_no_op() {
+        let mut f = CoarseFilter::new(2, 7, 8, 0.3);
+        for _ in 0..5 {
+            f.estimators.update(0, &[1.0; 7]);
+        }
+        let before_count = f.estimators.count(0);
+        let before_norm = f.estimators.mean_norm2(0);
+        assert!(f.score_chunk(&[], &[]).is_empty());
+        f.process_chunk(&[], &[]);
+        assert_eq!(f.processed(), 0);
+        assert_eq!(f.estimators.count(0), before_count);
+        assert_eq!(f.estimators.mean_norm2(0), before_norm);
+        assert!(f.drain().is_empty());
     }
 
     #[test]

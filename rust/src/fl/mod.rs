@@ -191,7 +191,7 @@ impl FlBuilder {
 
         let mut rt = ModelRuntime::load(&base.artifacts_dir, &base.model, RuntimeRole::Full)?;
         let mut global = rt.set.init_params()?;
-        let mut strategy = make_strategy(base.method);
+        let mut strategy = make_strategy(base.method, base.select_threads);
         let mut orchestrator_rng = Xoshiro256::seed_from_u64(base.seed ^ 0xF1_F1);
 
         let mut devices: Vec<FlDevice> = sources
@@ -206,7 +206,9 @@ impl FlBuilder {
         let sw = Stopwatch::start();
         let per_round = (cfg.num_devices as f64 * cfg.participation).round().max(1.0) as usize;
         // host-scheduler bookkeeping: one TaskState per device
-        // (rounds_done = participations, staleness in comm rounds)
+        // (rounds_done = participations; last_run = the comm round the
+        // device last dispatched in, so staleness-in-comm-rounds is the
+        // difference — no per-round aging pass over all devices)
         let mut dev_states = vec![TaskState::default(); cfg.num_devices];
 
         for round in 0..cfg.comm_rounds {
@@ -217,6 +219,9 @@ impl FlBuilder {
             // sample order — the same dispatch seam the session Fleet uses
             let mut ready = chosen.clone();
             ready.sort_unstable();
+            // (re)index the policy over this round's participants — a
+            // picked device leaves the ready set, so no task_ran re-adds
+            policy.prepare(&dev_states, &ready);
             while !ready.is_empty() {
                 // shared validated dispatch (host::pick_validated): a
                 // misbehaving custom policy errors instead of spinning
@@ -224,7 +229,10 @@ impl FlBuilder {
                 let d = pick_validated(policy.as_mut(), &dev_states, &ready)?;
                 ready.retain(|&x| x != d);
                 dev_states[d].rounds_done += 1;
-                dev_states[d].staleness = 0;
+                // dispatched this comm round; a round-0 dispatch is
+                // indistinguishable from "never ran" (both 0), exactly
+                // the tie the old aging counters produced
+                dev_states[d].last_run = round as u64;
                 let dev = &mut devices[d];
                 let arrivals = dev.stream_round(base.stream_per_round);
                 // local selection over the device's stream
@@ -260,11 +268,6 @@ impl FlBuilder {
                 for (a, &p) in acc.iter_mut().zip(rt.params()) {
                     *a += p as f64;
                 }
-            }
-            // all devices age one comm round; this round's participants
-            // were reset to 0 when dispatched (so they end at 1)
-            for s in dev_states.iter_mut() {
-                s.staleness += 1;
             }
             // FedAvg
             for (g, a) in global.iter_mut().zip(&acc) {
@@ -433,11 +436,11 @@ mod tests {
         }
         use crate::coordinator::host::{FewestRoundsFirst, StalenessPriority};
         let a = FlBuilder::new(tiny_fl(Method::Rs))
-            .policy(FewestRoundsFirst)
+            .policy(FewestRoundsFirst::new())
             .run()
             .unwrap();
         let b = FlBuilder::new(tiny_fl(Method::Rs))
-            .policy(StalenessPriority)
+            .policy(StalenessPriority::new())
             .run()
             .unwrap();
         for rec in [&a, &b] {

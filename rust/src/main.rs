@@ -61,6 +61,7 @@ fn print_usage() {
     println!();
     println!("  run     --model <m> --method <rs|is|ll|hl|ce|ocs|camel|cis|titan>");
     println!("          --rounds N --batch N --candidates N --seed N [--sequential]");
+    println!("          [--select-threads N]  parallel Gram sweep (results identical)");
     println!("          [--feature-noise F | --label-noise F]");
     println!("          [--checkpoint FILE] [--checkpoint-every K]  snapshot every K rounds");
     println!("          [--resume FILE]     restart a killed run from its snapshot");
@@ -100,7 +101,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     // trusting re-typed flags (config flags are ignored on resume; the
     // fingerprint check would reject any drift anyway)
     let resume_path = args.get("resume").map(PathBuf::from);
-    let (cfg, resume_snap) = match &resume_path {
+    let (mut cfg, resume_snap) = match &resume_path {
         Some(path) => match load_checkpoint(path)? {
             Loaded::Resumable(snap) => (RunConfig::from_json(&snap.config)?, Some(snap)),
             Loaded::Complete { round, final_accuracy, .. } => {
@@ -117,6 +118,9 @@ fn cmd_run(args: &Args) -> Result<()> {
             None,
         ),
     };
+    // --select-threads is a pure perf knob excluded from the snapshot
+    // fingerprint, so a resumed run may re-apply it freely
+    cfg.select_threads = args.get_usize("select-threads", cfg.select_threads)?;
     cfg.validate()?;
     // pipelining is method-agnostic: any selection method runs through
     // the pipelined backend when requested (pass --sequential to opt out;

@@ -396,27 +396,148 @@ impl ImportanceOut {
     /// `Σ_{i∈a, j∈b} K_ij` for every class pair (using K's symmetry, so
     /// the within-class block is `K_ii + 2·Σ_{i<j} K_ij`).
     ///
-    /// Per-class accumulators receive their terms in exactly the order the
-    /// old nested per-class loops produced them (ascending i, then
-    /// ascending j within the row), so downstream summaries are
-    /// bit-identical to the reference path.
+    /// Single-threaded alias of [`ImportanceOut::gram_class_sums_threaded`].
+    /// Below [`GRAM_BLOCK_MIN_ROWS`] rows — every pinned run configuration —
+    /// the sweep is one accumulation chain whose terms arrive in exactly
+    /// the order the old nested per-class loops produced them (ascending
+    /// i, then ascending j within the row), so downstream summaries stay
+    /// bit-identical to the historical path.
     pub fn gram_class_sums(&self, labels: &[u32], num_classes: usize) -> GramClassSums {
+        self.gram_class_sums_threaded(labels, num_classes, 1)
+    }
+
+    /// The triangle sweep, parallelized across `threads` scoped workers.
+    ///
+    /// Rows are partitioned into contiguous blocks balanced by triangle
+    /// **area** (row i covers `n − i` entries, so equal row counts would
+    /// load the first worker quadratically harder). Each block accumulates
+    /// its own per-class partials — its `diag` rows are disjoint slices
+    /// written in place — and the partials merge in **block order**.
+    ///
+    /// Determinism contract: the block partition is a function of `n`
+    /// only ([`gram_block_ranges`]) and the merge order is fixed, so the
+    /// result is **bit-identical for every `threads` value** (workers only
+    /// decide *who* sweeps a block, never how sums associate) — the
+    /// `gram_sums_bit_identical_across_thread_counts` pin. `threads = 1`
+    /// sweeps the blocks on the caller thread; no threads are spawned.
+    pub fn gram_class_sums_threaded(
+        &self,
+        labels: &[u32],
+        num_classes: usize,
+        threads: usize,
+    ) -> GramClassSums {
         let n = self.valid.min(labels.len());
         let c = num_classes;
         let mut indices: Vec<Vec<usize>> = vec![Vec::new(); c];
         let mut sum_norm = vec![0.0f64; c];
-        let mut sum_diag = vec![0.0f64; c];
-        let mut block = vec![0.0f64; c * c];
-        let mut diag = Vec::with_capacity(n);
         for (i, &y) in labels.iter().enumerate().take(n) {
             indices[y as usize].push(i);
             sum_norm[y as usize] += self.norms[i] as f64;
         }
-        for i in 0..n {
+
+        let ranges = gram_block_ranges(n);
+        let mut diag = vec![0.0f64; n];
+        // carve diag into one contiguous output slice per block
+        let mut diag_slices: Vec<&mut [f64]> = Vec::with_capacity(ranges.len());
+        let mut rest: &mut [f64] = &mut diag;
+        for r in &ranges {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(r.len());
+            diag_slices.push(head);
+            rest = tail;
+        }
+        debug_assert!(rest.is_empty(), "block ranges must cover the diagonal");
+
+        let workers = threads.max(1).min(ranges.len());
+        let mut partials: Vec<Option<GramBlockSums>> = (0..ranges.len()).map(|_| None).collect();
+        if workers <= 1 {
+            for ((range, out), slot) in
+                ranges.iter().zip(diag_slices).zip(partials.iter_mut())
+            {
+                *slot = Some(self.sweep_rows(labels, n, c, range.clone(), out));
+            }
+        } else {
+            // deal blocks round-robin across workers; the dealing can
+            // never affect results — partials merge by block index below
+            let mut per_worker: Vec<Vec<(usize, std::ops::Range<usize>, &mut [f64])>> =
+                (0..workers).map(|_| Vec::new()).collect();
+            for (b, (range, out)) in ranges.iter().zip(diag_slices).enumerate() {
+                per_worker[b % workers].push((b, range.clone(), out));
+            }
+            let results: Vec<Vec<(usize, GramBlockSums)>> = std::thread::scope(|s| {
+                let handles: Vec<_> = per_worker
+                    .into_iter()
+                    .map(|tasks| {
+                        s.spawn(move || {
+                            tasks
+                                .into_iter()
+                                .map(|(b, range, out)| {
+                                    (b, self.sweep_rows(labels, n, c, range, out))
+                                })
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("gram sweep worker panicked"))
+                    .collect()
+            });
+            for worker in results {
+                for (b, p) in worker {
+                    partials[b] = Some(p);
+                }
+            }
+        }
+
+        // fixed-order merge; a lone block moves straight through so the
+        // small-n path adds zero arithmetic over the historical chain
+        let mut parts = partials.into_iter().map(|p| p.expect("every block swept"));
+        let (sum_diag, block) = if ranges.len() == 1 {
+            let p = parts.next().expect("one block");
+            (p.sum_diag, p.block)
+        } else {
+            let mut sum_diag = vec![0.0f64; c];
+            let mut block = vec![0.0f64; c * c];
+            for p in parts {
+                for (d, s) in sum_diag.iter_mut().zip(&p.sum_diag) {
+                    *d += s;
+                }
+                for (d, s) in block.iter_mut().zip(&p.block) {
+                    *d += s;
+                }
+            }
+            (sum_diag, block)
+        };
+        GramClassSums {
+            num_classes: c,
+            indices,
+            sum_norm,
+            sum_diag,
+            block,
+            diag,
+        }
+    }
+
+    /// Sweep one contiguous row block of the upper triangle. The inner
+    /// loop is the historical single-pass body verbatim; `diag_out` is
+    /// this block's slice of the global diagonal.
+    fn sweep_rows(
+        &self,
+        labels: &[u32],
+        n: usize,
+        c: usize,
+        rows: std::ops::Range<usize>,
+        diag_out: &mut [f64],
+    ) -> GramBlockSums {
+        debug_assert_eq!(diag_out.len(), rows.len());
+        let mut sum_diag = vec![0.0f64; c];
+        let mut block = vec![0.0f64; c * c];
+        let start = rows.start;
+        for i in rows {
             let yi = labels[i] as usize;
             let row = &self.k[i * self.n_total..i * self.n_total + n];
             let d = row[i] as f64;
-            diag.push(d);
+            diag_out[i - start] = d;
             sum_diag[yi] += d;
             block[yi * c + yi] += d;
             for (j, &kij) in row.iter().enumerate().skip(i + 1) {
@@ -430,15 +551,60 @@ impl ImportanceOut {
                 }
             }
         }
-        GramClassSums {
-            num_classes: c,
-            indices,
-            sum_norm,
-            sum_diag,
-            block,
-            diag,
+        GramBlockSums { sum_diag, block }
+    }
+}
+
+/// Per-block partial accumulators of the triangle sweep (the block's
+/// `diag` rows are written in place into disjoint slices instead).
+struct GramBlockSums {
+    sum_diag: Vec<f64>,
+    block: Vec<f64>,
+}
+
+/// Rows below this sweep as a single accumulation block: the blocked
+/// merge rounds differently than one serial chain at the ULP level, and
+/// every pinned run keeps n ≤ cand_max ≪ this threshold — so small-n
+/// results are bit-identical to the historical (pre-blocking) path.
+const GRAM_BLOCK_MIN_ROWS: usize = 1024;
+
+/// Upper bound on accumulation blocks (≥ any worker count worth having
+/// on the row sweep; also caps the merge cost at O(blocks · C²)).
+const GRAM_MAX_BLOCKS: usize = 16;
+
+/// Contiguous row ranges balanced by upper-triangle area. **A function
+/// of n only** — never of the worker count — which is what makes
+/// [`ImportanceOut::gram_class_sums_threaded`] bit-identical across
+/// `select_threads` values. Returns exactly one range below
+/// [`GRAM_BLOCK_MIN_ROWS`].
+fn gram_block_ranges(n: usize) -> Vec<std::ops::Range<usize>> {
+    if n == 0 {
+        return vec![0..0];
+    }
+    let k = if n < GRAM_BLOCK_MIN_ROWS {
+        1
+    } else {
+        (n / (GRAM_BLOCK_MIN_ROWS / 2)).min(GRAM_MAX_BLOCKS)
+    };
+    if k <= 1 {
+        return vec![0..n];
+    }
+    let total = n as u64 * (n as u64 + 1) / 2;
+    let mut ranges = Vec::with_capacity(k);
+    let mut start = 0usize;
+    let mut acc = 0u64;
+    let mut cut = 1u64;
+    for i in 0..n {
+        acc += (n - i) as u64;
+        // cut when the running area crosses cut/k of the total
+        if acc * k as u64 >= total * cut {
+            ranges.push(start..i + 1);
+            start = i + 1;
+            cut += 1;
         }
     }
+    debug_assert_eq!(start, n, "area cuts must cover every row");
+    ranges
 }
 
 /// Per-class aggregates of one `ImportanceOut`, produced by
@@ -665,6 +831,124 @@ mod tests {
         // between: (1+3)*2 = 8, symmetric
         assert_eq!(sums.between(0, 1), 8.0);
         assert_eq!(sums.between(1, 0), 8.0);
+    }
+
+    #[test]
+    fn gram_block_ranges_cover_and_balance() {
+        for n in [0usize, 1, 5, 1023, 1024, 2048, 4096, 8192, 100_000] {
+            let ranges = super::gram_block_ranges(n);
+            // contiguous disjoint cover of 0..n
+            let mut next = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, next, "n={n}");
+                assert!(r.end >= r.start, "n={n}");
+                next = r.end;
+            }
+            assert_eq!(next, n, "n={n}");
+            if n < super::GRAM_BLOCK_MIN_ROWS {
+                assert_eq!(ranges.len(), 1, "small n must stay single-chain");
+            } else {
+                assert!(ranges.len() > 1, "n={n}");
+                assert!(ranges.len() <= super::GRAM_MAX_BLOCKS);
+                // area balance: no block carries more than 2x its share
+                let area = |r: &std::ops::Range<usize>| -> u64 {
+                    r.clone().map(|i| (n - i) as u64).sum()
+                };
+                let total: u64 = n as u64 * (n as u64 + 1) / 2;
+                let fair = total / ranges.len() as u64;
+                for r in &ranges {
+                    assert!(area(r) <= 2 * fair, "n={n} block {r:?} area {}", area(r));
+                }
+            }
+        }
+    }
+
+    /// Synthetic low-rank K at blocking scale (n ≥ GRAM_BLOCK_MIN_ROWS).
+    fn synth_blocked_importance(n: usize) -> ImportanceOut {
+        let grads: Vec<(f64, f64)> = (0..n)
+            .map(|i| {
+                let th = i as f64 * 0.37;
+                let r = 0.5 + (i % 7) as f64 * 0.25;
+                (r * th.cos(), r * th.sin())
+            })
+            .collect();
+        let mut k = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                k[i * n + j] = (grads[i].0 * grads[j].0 + grads[i].1 * grads[j].1) as f32;
+            }
+        }
+        let norms: Vec<f32> = grads
+            .iter()
+            .map(|g| ((g.0 * g.0 + g.1 * g.1) as f32).sqrt())
+            .collect();
+        ImportanceOut { norms, k, n_total: n, valid: n }
+    }
+
+    /// THE cross-`select_threads` determinism pin: 1, 4 and 16 workers
+    /// must produce bit-identical sums at a size where the sweep really
+    /// splits into multiple blocks (n = 2048 → 4 area-balanced blocks).
+    #[test]
+    fn gram_sums_bit_identical_across_thread_counts() {
+        let n = 2048usize;
+        let classes = 10usize;
+        let imp = synth_blocked_importance(n);
+        let labels: Vec<u32> = (0..n).map(|i| (i % classes) as u32).collect();
+        let base = imp.gram_class_sums_threaded(&labels, classes, 1);
+        for threads in [2usize, 4, 16] {
+            let par = imp.gram_class_sums_threaded(&labels, classes, threads);
+            assert_eq!(base.indices, par.indices, "t={threads}");
+            for (name, a, b) in [
+                ("sum_norm", &base.sum_norm, &par.sum_norm),
+                ("sum_diag", &base.sum_diag, &par.sum_diag),
+                ("block", &base.block, &par.block),
+                ("diag", &base.diag, &par.diag),
+            ] {
+                assert_eq!(a.len(), b.len(), "t={threads} {name}");
+                for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "t={threads} {name}[{i}]: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The blocked sweep must still compute the right numbers: compare
+    /// against a naive per-class double loop at blocking scale.
+    #[test]
+    fn gram_blocked_sums_match_naive_reference() {
+        let n = 1024usize; // exactly at the threshold -> 2 blocks
+        let classes = 4usize;
+        let imp = synth_blocked_importance(n);
+        let labels: Vec<u32> = (0..n).map(|i| ((i * 7) % classes) as u32).collect();
+        let sums = imp.gram_class_sums_threaded(&labels, classes, 4);
+        let mut want_within = vec![0.0f64; classes];
+        let mut want_diag = vec![0.0f64; classes];
+        for i in 0..n {
+            let yi = labels[i] as usize;
+            want_diag[yi] += imp.k_at(i, i) as f64;
+            for j in 0..n {
+                if labels[j] as usize == yi {
+                    want_within[yi] += imp.k_at(i, j) as f64;
+                }
+            }
+        }
+        for y in 0..classes {
+            assert!(
+                (sums.within(y) - want_within[y]).abs()
+                    <= 1e-9 * want_within[y].abs().max(1.0),
+                "class {y}: {} vs {}",
+                sums.within(y),
+                want_within[y]
+            );
+            assert!(
+                (sums.sum_diag[y] - want_diag[y]).abs() <= 1e-9 * want_diag[y].abs().max(1.0),
+                "class {y} diag"
+            );
+        }
     }
 
     #[test]

@@ -71,14 +71,30 @@ impl ClassSummary {
 /// Built on [`ImportanceOut::gram_class_sums`]: ONE sweep over K's upper
 /// triangle yields every class's diagonal/norm/block sums simultaneously,
 /// replacing the old per-class nested `k_at` loops (O(C·n²) scalar reads,
-/// cache-hostile). Numerically the per-class accumulation order is
-/// unchanged, so results are bit-identical to [`class_summaries_ref`].
+/// cache-hostile). Below the sweep's blocking threshold (every pinned run
+/// configuration) the per-class accumulation order is unchanged, so
+/// results are bit-identical to [`class_summaries_ref`]. Single-threaded
+/// alias of [`class_summaries_threaded`].
 pub fn class_summaries(
     ctx_labels: &[u32],
     imp: &ImportanceOut,
     num_classes: usize,
 ) -> Vec<ClassSummary> {
-    let sums = imp.gram_class_sums(ctx_labels, num_classes);
+    class_summaries_threaded(ctx_labels, imp, num_classes, 1)
+}
+
+/// [`class_summaries`] over the parallel triangle sweep
+/// ([`ImportanceOut::gram_class_sums_threaded`]) — summaries are
+/// bit-identical for every `threads` value (the sweep's block partition
+/// depends only on the candidate count), so the knob is purely a
+/// wall-clock lever for `cand_max ≥ 4k` deployments.
+pub fn class_summaries_threaded(
+    ctx_labels: &[u32],
+    imp: &ImportanceOut,
+    num_classes: usize,
+    threads: usize,
+) -> Vec<ClassSummary> {
+    let sums = imp.gram_class_sums_threaded(ctx_labels, num_classes, threads);
     let crate::runtime::model::GramClassSums {
         num_classes: c,
         indices,
@@ -180,7 +196,24 @@ pub fn class_importances(summaries: &[ClassSummary], seen_per_class: &[u64]) -> 
         .collect()
 }
 
-pub struct ClassifiedImportanceSampling;
+pub struct ClassifiedImportanceSampling {
+    /// Worker threads for the Gram triangle sweep (`RunConfig::
+    /// select_threads`; 1 = sweep on the calling thread). Results are
+    /// identical for every value — see [`class_summaries_threaded`].
+    threads: usize,
+}
+
+impl ClassifiedImportanceSampling {
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+}
+
+impl Default for ClassifiedImportanceSampling {
+    fn default() -> Self {
+        Self::new(1)
+    }
+}
 
 impl SelectionStrategy for ClassifiedImportanceSampling {
     fn name(&self) -> &'static str {
@@ -190,7 +223,7 @@ impl SelectionStrategy for ClassifiedImportanceSampling {
     fn select(&mut self, ctx: &SelectionContext, rng: &mut Xoshiro256) -> Result<SelectedBatch> {
         let imp = ctx.require_importance()?;
         let labels: Vec<u32> = ctx.samples.iter().map(|s| s.label).collect();
-        let summaries = class_summaries(&labels, imp, ctx.num_classes);
+        let summaries = class_summaries_threaded(&labels, imp, ctx.num_classes, self.threads);
         let importances = class_importances(&summaries, ctx.seen_per_class);
         let caps: Vec<usize> = summaries.iter().map(|s| s.indices.len()).collect();
         // Inter-class allocation (largest-remainder, caps = candidates/class;
@@ -353,6 +386,32 @@ mod tests {
         }
     }
 
+    /// Summaries-level cross-`select_threads` pin at sub-blocking size:
+    /// any thread count must yield bit-identical ClassSummary fields
+    /// (the large multi-block pin lives in runtime::model's tests).
+    #[test]
+    fn summaries_bit_identical_across_thread_counts() {
+        let (grads, npc) = fig4_importance(12);
+        let imp = importance_from_grads(&grads);
+        let labels: Vec<u32> = (0..24).map(|i| (i / npc) as u32).collect();
+        let one = class_summaries_threaded(&labels, &imp, 2, 1);
+        for threads in [2usize, 4, 32] {
+            let many = class_summaries_threaded(&labels, &imp, 2, threads);
+            assert_eq!(one.len(), many.len());
+            for (a, b) in one.iter().zip(&many) {
+                assert_eq!(a.indices, b.indices, "t={threads}");
+                assert_eq!(a.diag, b.diag, "t={threads}");
+                assert_eq!(a.mean_norm.to_bits(), b.mean_norm.to_bits(), "t={threads}");
+                assert_eq!(a.mean_norm2.to_bits(), b.mean_norm2.to_bits(), "t={threads}");
+                assert_eq!(
+                    a.mean_grad_norm2.to_bits(),
+                    b.mean_grad_norm2.to_bits(),
+                    "t={threads}"
+                );
+            }
+        }
+    }
+
     #[test]
     fn fig4_allocation_prefers_diverse_class() {
         // THE paper's key qualitative claim (Fig. 4): C-IS sends more slots
@@ -380,7 +439,7 @@ mod tests {
             feature_dim: 0,
         };
         let mut rng = Xoshiro256::seed_from_u64(12);
-        let mut strat = ClassifiedImportanceSampling;
+        let mut strat = ClassifiedImportanceSampling::default();
         let mut class0 = 0usize;
         let mut total = 0usize;
         for _ in 0..50 {
@@ -415,7 +474,7 @@ mod tests {
             feature_dim: 0,
         };
         let mut rng = Xoshiro256::seed_from_u64(14);
-        let picks = ClassifiedImportanceSampling.select(&ctx, &mut rng).unwrap();
+        let picks = ClassifiedImportanceSampling::default().select(&ctx, &mut rng).unwrap();
         assert_valid_batch(&picks, 12, 6);
         let mut per_class = [0usize; 3];
         for &i in &picks.indices {
@@ -460,7 +519,7 @@ mod tests {
             feature_dim: 0,
         };
         let mut rng = Xoshiro256::seed_from_u64(16);
-        let picks = ClassifiedImportanceSampling.select(&ctx, &mut rng).unwrap();
+        let picks = ClassifiedImportanceSampling::default().select(&ctx, &mut rng).unwrap();
         assert_valid_batch(&picks, 10, 6);
         let c0 = picks.indices.iter().filter(|&&i| owned[i].label == 0).count();
         assert_eq!(c0, 2, "cap bound");
@@ -487,7 +546,7 @@ mod tests {
             feature_dim: 0,
         };
         let mut rng = Xoshiro256::seed_from_u64(18);
-        let picks = ClassifiedImportanceSampling.select(&ctx, &mut rng).unwrap();
+        let picks = ClassifiedImportanceSampling::default().select(&ctx, &mut rng).unwrap();
         assert_valid_batch(&picks, 6, 4);
     }
 }

@@ -128,8 +128,10 @@ pub trait SelectionStrategy: Send {
 
 /// Instantiate the strategy for a method. `Titan` uses the same fine
 /// stage as `Cis` (the two differ in the coarse stage + pipeline, which
-/// live in the coordinator).
-pub fn make_strategy(method: Method) -> Box<dyn SelectionStrategy> {
+/// live in the coordinator). `select_threads` parallelizes the C-IS Gram
+/// sweep (`RunConfig::select_threads`; results are identical for every
+/// value, 1 = no spawned threads); the other strategies ignore it.
+pub fn make_strategy(method: Method, select_threads: usize) -> Box<dyn SelectionStrategy> {
     match method {
         Method::Rs => Box::new(random::RandomSelection),
         Method::Is => Box::new(importance::ImportanceSampling),
@@ -138,7 +140,9 @@ pub fn make_strategy(method: Method) -> Box<dyn SelectionStrategy> {
         Method::Ce => Box::new(heuristics::EntropyBased),
         Method::Ocs => Box::new(heuristics::RepDiv),
         Method::Camel => Box::new(camel::CamelCoreset),
-        Method::Cis | Method::Titan => Box::new(cis::ClassifiedImportanceSampling),
+        Method::Cis | Method::Titan => {
+            Box::new(cis::ClassifiedImportanceSampling::new(select_threads))
+        }
     }
 }
 

@@ -1,0 +1,232 @@
+//! Fixed-width (8-lane) striped reduction kernels on stable Rust.
+//!
+//! The filter's per-sample cost after PR 1 is exactly one `⟨f, c⟩` dot
+//! product plus one `‖f‖²` (everything else is cached), and `VecMean`'s
+//! push refreshes a cached `‖mean‖²` on every estimator update. All three
+//! are straight-line f64 reductions over f32 slices, which the scalar
+//! `a.iter().map(..).sum()` form chains into one serial dependency per
+//! element — the compiler cannot re-associate float adds, so the loop runs
+//! at the latency of one `addsd` per element instead of the machine's
+//! vector width.
+//!
+//! These kernels stripe the accumulation across [`LANES`] = 8 independent
+//! f64 accumulators (`chunks_exact(8)` body + a sequential remainder
+//! tail) and fold the lanes in one fixed order ([`fold`]). That breaks the
+//! dependency chain — the body auto-vectorizes / pipelines on any target —
+//! while staying **fully deterministic and CPU-independent**: the lane
+//! count is a compile-time constant (no `std::simd`, no runtime feature
+//! detection), every term goes to a fixed lane decided only by its index,
+//! and the fold order never varies. The same inputs produce bit-identical
+//! outputs on every machine, which is what the resume / cross-backend
+//! byte-identity pins require.
+//!
+//! The striped sum is a *different* float result than the scalar
+//! left-to-right sum (float addition is not associative), so the scalar
+//! helpers in [`crate::util::stats`] survive as the reference oracles and
+//! the property tests pin wide-vs-scalar agreement at 1e-12 relative.
+//! What *is* bit-pinned: [`mean_update`] leaves the cached norm exactly
+//! equal to a from-scratch [`norm2`] over the updated cast (same striping,
+//! same fold), so `VecMean`'s cache and its restore path stay coherent.
+
+/// Accumulator lanes per kernel. 8 f64 lanes = one AVX-512 register or
+/// two AVX2 registers — wide enough to hide FP-add latency everywhere
+/// without making the remainder tail dominate at small dims.
+pub const LANES: usize = 8;
+
+/// Fold the 8 lane accumulators and the remainder tail in one fixed
+/// order: pairwise tree over the lanes, then the tail last. Every kernel
+/// in this module funnels through this, so "the" wide sum is well defined.
+#[inline]
+fn fold(lanes: [f64; LANES], tail: f64) -> f64 {
+    (((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7])))
+        + tail
+}
+
+/// Striped dot product of two f32 slices with f64 lane accumulation.
+/// Deterministic: term `i` of the full chunks goes to lane `i % 8`; the
+/// remainder accumulates sequentially into the tail; [`fold`] order fixed.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f64; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for j in 0..LANES {
+            lanes[j] += xa[j] as f64 * xb[j] as f64;
+        }
+    }
+    let mut tail = 0.0f64;
+    for (&x, &y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x as f64 * y as f64;
+    }
+    fold(lanes, tail)
+}
+
+/// Striped squared L2 norm of an f32 slice (f64 lane accumulation), with
+/// the same term-to-lane assignment and fold order as [`dot`].
+pub fn norm2(a: &[f32]) -> f64 {
+    let mut lanes = [0.0f64; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    for xa in &mut ca {
+        for j in 0..LANES {
+            lanes[j] += xa[j] as f64 * xa[j] as f64;
+        }
+    }
+    let mut tail = 0.0f64;
+    for &x in ca.remainder() {
+        tail += x as f64 * x as f64;
+    }
+    fold(lanes, tail)
+}
+
+/// Fused wide `VecMean` update: for every element, advance the f64
+/// running mean by `(x - mean) * inv`, refresh its f32 cast, and
+/// accumulate the cast's square — returning the new `‖cast‖²`.
+///
+/// The square accumulation uses the **exact** striping of [`norm2`]
+/// (full chunks stripe by `i % 8`, remainder goes to the tail, same
+/// [`fold`]), so the returned value is bit-identical to calling
+/// `norm2(cast)` after the update. `VecMean::from_state` re-derives its
+/// cache through `norm2`, which is what makes a restored accumulator
+/// bit-identical to a live one.
+///
+/// The per-element mean/cast updates are element-local (no cross-element
+/// accumulation), so their results are independent of the chunking.
+pub fn mean_update(mean: &mut [f64], cast: &mut [f32], x: &[f32], inv: f64) -> f64 {
+    debug_assert_eq!(mean.len(), cast.len());
+    debug_assert_eq!(mean.len(), x.len());
+    let mut lanes = [0.0f64; LANES];
+    let mut cm = mean.chunks_exact_mut(LANES);
+    let mut cc = cast.chunks_exact_mut(LANES);
+    let mut cx = x.chunks_exact(LANES);
+    for ((m, c), v) in (&mut cm).zip(&mut cc).zip(&mut cx) {
+        for j in 0..LANES {
+            m[j] += (v[j] as f64 - m[j]) * inv;
+            c[j] = m[j] as f32;
+            lanes[j] += c[j] as f64 * c[j] as f64;
+        }
+    }
+    let mut tail = 0.0f64;
+    for ((m, c), &v) in cm
+        .into_remainder()
+        .iter_mut()
+        .zip(cc.into_remainder().iter_mut())
+        .zip(cx.remainder())
+    {
+        *m += (v as f64 - *m) * inv;
+        *c = *m as f32;
+        tail += *c as f64 * *c as f64;
+    }
+    fold(lanes, tail)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+    use crate::util::stats;
+
+    /// Dims that exercise every remainder-lane shape: empty, sub-width,
+    /// exact widths, one-over, and multi-chunk one-under/over.
+    const DIMS: [usize; 9] = [0, 1, 7, 8, 9, 16, 63, 64, 65];
+
+    fn rand_f32s(rng: &mut Xoshiro256, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.next_f64() * 4.0 - 2.0) as f32).collect()
+    }
+
+    #[test]
+    fn wide_matches_scalar_reference_at_every_remainder_shape() {
+        let mut rng = Xoshiro256::seed_from_u64(0x51D0);
+        for &dim in &DIMS {
+            for _ in 0..20 {
+                let a = rand_f32s(&mut rng, dim);
+                let b = rand_f32s(&mut rng, dim);
+                let (wd, sd) = (dot(&a, &b), stats::dot(&a, &b));
+                assert!(
+                    (wd - sd).abs() <= 1e-12 * sd.abs().max(1.0),
+                    "dot dim {dim}: wide {wd} vs scalar {sd}"
+                );
+                let (wn, sn) = (norm2(&a), stats::norm2(&a));
+                assert!(
+                    (wn - sn).abs() <= 1e-12 * sn.abs().max(1.0),
+                    "norm2 dim {dim}: wide {wn} vs scalar {sn}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wide_kernels_are_deterministic() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        for &dim in &DIMS {
+            let a = rand_f32s(&mut rng, dim);
+            let b = rand_f32s(&mut rng, dim);
+            assert_eq!(dot(&a, &b).to_bits(), dot(&a, &b).to_bits());
+            assert_eq!(norm2(&a).to_bits(), norm2(&a).to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_zero() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(norm2(&[]), 0.0);
+        assert_eq!(mean_update(&mut [], &mut [], &[], 1.0), 0.0);
+    }
+
+    #[test]
+    fn mean_update_cache_equals_from_scratch_norm2_bitwise() {
+        // THE coherence pin: the fused update's returned norm must equal
+        // norm2() over the updated cast EXACTLY — VecMean's cached value
+        // and its restore path both depend on it.
+        let mut rng = Xoshiro256::seed_from_u64(0xCAFE);
+        for &dim in &DIMS {
+            let mut mean = vec![0.0f64; dim];
+            let mut cast = vec![0.0f32; dim];
+            for step in 1..=50u64 {
+                let x = rand_f32s(&mut rng, dim);
+                let got = mean_update(&mut mean, &mut cast, &x, 1.0 / step as f64);
+                assert_eq!(
+                    got.to_bits(),
+                    norm2(&cast).to_bits(),
+                    "dim {dim} step {step}: fused {got} != from-scratch {}",
+                    norm2(&cast)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mean_update_mean_matches_elementwise_reference() {
+        // chunking must not change the per-element mean math
+        let mut rng = Xoshiro256::seed_from_u64(0xBEEF);
+        for &dim in &DIMS {
+            let mut mean = vec![0.0f64; dim];
+            let mut cast = vec![0.0f32; dim];
+            let mut ref_mean = vec![0.0f64; dim];
+            for step in 1..=20u64 {
+                let x = rand_f32s(&mut rng, dim);
+                let inv = 1.0 / step as f64;
+                mean_update(&mut mean, &mut cast, &x, inv);
+                for (m, &v) in ref_mean.iter_mut().zip(&x) {
+                    *m += (v as f64 - *m) * inv;
+                }
+                assert_eq!(mean, ref_mean, "dim {dim} step {step}");
+                let want: Vec<f32> = ref_mean.iter().map(|&m| m as f32).collect();
+                assert_eq!(cast, want, "dim {dim} step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), 32.0);
+        assert_eq!(norm2(&a), 14.0);
+        // a width-straddling exact case: 10 ones
+        let ones = [1.0f32; 10];
+        assert_eq!(norm2(&ones), 10.0);
+        assert_eq!(dot(&ones, &ones), 10.0);
+    }
+}

@@ -105,9 +105,10 @@ pub struct VecMean {
     mean: Vec<f64>,
     /// f32 cast of `mean`, kept in lockstep (what scoring consumes).
     mean_f32: Vec<f32>,
-    /// `norm2(&mean_f32)`, refreshed inside the push loop with the same
-    /// left-to-right summation as [`norm2`] so cached and from-scratch
-    /// values agree bit-for-bit.
+    /// `simd::norm2(&mean_f32)`, refreshed inside the fused wide push
+    /// ([`crate::util::simd::mean_update`]) with exactly the 8-lane
+    /// striping of [`crate::util::simd::norm2`], so cached and
+    /// from-scratch values agree bit-for-bit.
     mean_norm2: f64,
 }
 
@@ -125,16 +126,12 @@ impl VecMean {
         assert_eq!(x.len(), self.mean.len());
         self.n += 1;
         let inv = 1.0 / self.n as f64;
-        // fused: one pass updates the f64 mean, its f32 cast, and the
-        // cached ‖mean_f32‖² (left-to-right accumulation, the same order
-        // as `norm2`, so the cache matches a from-scratch norm bit-for-bit)
-        let mut n2 = 0.0f64;
-        for ((m, c), &v) in self.mean.iter_mut().zip(self.mean_f32.iter_mut()).zip(x) {
-            *m += (v as f64 - *m) * inv;
-            *c = *m as f32;
-            n2 += *c as f64 * *c as f64;
-        }
-        self.mean_norm2 = n2;
+        // fused wide update: one 8-lane pass advances the f64 mean, its
+        // f32 cast, and the cached ‖mean_f32‖² (striped exactly like
+        // `simd::norm2`, so the cache matches a from-scratch wide norm
+        // bit-for-bit — the coherence `simd` property-tests)
+        self.mean_norm2 =
+            crate::util::simd::mean_update(&mut self.mean, &mut self.mean_f32, x, inv);
     }
 
     pub fn count(&self) -> u64 {
@@ -151,7 +148,8 @@ impl VecMean {
     }
 
     /// Cached `‖mean‖²` of the f32-cast mean — no allocation, no O(dim)
-    /// recompute. Identical to `norm2(&self.mean_f32())`.
+    /// recompute. Identical to `simd::norm2(&self.mean_f32())` (the wide
+    /// kernel; within 1e-12 of the scalar [`norm2`]).
     pub fn mean_norm2(&self) -> f64 {
         self.mean_norm2
     }
@@ -164,11 +162,11 @@ impl VecMean {
 
     /// Rebuild from an exported [`VecMean::state`]. The f32 cast is
     /// re-derived elementwise and the cached `‖mean‖²` is recomputed with
-    /// the same left-to-right summation as the push loop, so the restored
+    /// the same wide kernel the push loop stripes by, so the restored
     /// accumulator is bit-identical to the exported one.
     pub fn from_state(n: u64, mean: Vec<f64>) -> VecMean {
         let mean_f32: Vec<f32> = mean.iter().map(|&m| m as f32).collect();
-        let mean_norm2 = norm2(&mean_f32);
+        let mean_norm2 = crate::util::simd::norm2(&mean_f32);
         VecMean { n, mean, mean_f32, mean_norm2 }
     }
 }
@@ -200,13 +198,17 @@ impl Ema {
     }
 }
 
-/// Dot product of two f32 slices (f64 accumulation).
+/// Scalar dot product of two f32 slices (f64 left-to-right accumulation).
+/// Reference oracle for [`crate::util::simd::dot`] — hot paths use the
+/// wide kernel.
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
 }
 
-/// Squared L2 norm of an f32 slice (f64 accumulation).
+/// Scalar squared L2 norm of an f32 slice (f64 left-to-right
+/// accumulation). Reference oracle for [`crate::util::simd::norm2`] —
+/// hot paths use the wide kernel.
 pub fn norm2(a: &[f32]) -> f64 {
     a.iter().map(|&x| x as f64 * x as f64).sum()
 }
@@ -274,20 +276,30 @@ mod tests {
 
     #[test]
     fn vec_mean_cached_norm2_is_bit_identical() {
-        // the cached norm must equal a from-scratch norm2 over the f32 cast
-        // EXACTLY (same summation order), not just approximately
-        let mut vm = VecMean::new(5);
-        assert_eq!(vm.mean_norm2(), 0.0);
-        let mut state = 1u64;
-        for _ in 0..200 {
-            let x: Vec<f32> = (0..5)
-                .map(|_| {
-                    state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
-                    ((state >> 33) as f32 / 2.0e9f32) - 1.0
-                })
-                .collect();
-            vm.push(&x);
-            assert_eq!(vm.mean_norm2(), norm2(&vm.mean_f32()));
+        // the cached norm must equal a from-scratch wide norm2 over the
+        // f32 cast EXACTLY (same striping), and stay within 1e-12 of the
+        // scalar reference — at remainder-lane dims too (5, 8, 9, 63)
+        for dim in [5usize, 8, 9, 63] {
+            let mut vm = VecMean::new(dim);
+            assert_eq!(vm.mean_norm2(), 0.0);
+            let mut state = 1u64 + dim as u64;
+            for _ in 0..100 {
+                let x: Vec<f32> = (0..dim)
+                    .map(|_| {
+                        state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                        ((state >> 33) as f32 / 2.0e9f32) - 1.0
+                    })
+                    .collect();
+                vm.push(&x);
+                let wide = crate::util::simd::norm2(&vm.mean_f32());
+                assert_eq!(vm.mean_norm2().to_bits(), wide.to_bits(), "dim {dim}");
+                let scalar = norm2(&vm.mean_f32());
+                assert!(
+                    (vm.mean_norm2() - scalar).abs() <= 1e-12 * scalar.max(1.0),
+                    "dim {dim}: cached {} vs scalar {scalar}",
+                    vm.mean_norm2()
+                );
+            }
         }
     }
 

@@ -19,8 +19,21 @@ For old-vs-new pairs (``*_ref_n<k>`` vs the optimized name) it also emits a
 ``speedups`` map, e.g. ``{"score_chunk_n1024": 2.7}`` meaning the optimized
 path is 2.7x the reference at n=1024.
 
-Usage: python3 scripts/bench_report.py  (run from anywhere; paths are
-repo-relative to this file)
+Regression gate: ``--regress-threshold X`` compares the freshly measured
+``speedups`` against the **committed** ``BENCH_*.json`` baselines: every
+speedup key present in a baseline must come out >= X in the new
+measurement. On failure the script exits non-zero and leaves the baseline
+files untouched (overwriting them with the regressed numbers would make
+the next run gate against the regression itself). ``--check-only`` skips
+the rewrite even on success — CI runs the gate in fast (smoke) mode, and
+passing-but-noisy smoke numbers must not replace a full-``cargo bench``
+trajectory; refreshing the committed baselines is a deliberate
+full-bench + plain ``bench_report.py`` step. Empty baselines (the
+placeholder files committed from environments that cannot run ``cargo
+bench``) gate nothing.
+
+Usage: python3 scripts/bench_report.py [--regress-threshold X] [--check-only]
+(run from anywhere; paths are repo-relative to this file)
 """
 
 import json
@@ -78,17 +91,69 @@ def report(group: str, entries) -> dict:
     return {"group": group, "entries": rows, "speedups": speedups}
 
 
+def parse_threshold(argv) -> float | None:
+    if "--regress-threshold" not in argv:
+        return None
+    i = argv.index("--regress-threshold")
+    try:
+        return float(argv[i + 1])
+    except (IndexError, ValueError):
+        print("--regress-threshold requires a numeric argument", file=sys.stderr)
+        sys.exit(2)
+
+
+def check_regressions(group: str, baseline: dict, fresh: dict, threshold: float):
+    """Every baseline speedup key must re-measure >= threshold."""
+    failures = []
+    base_speedups = baseline.get("speedups") or {}
+    new_speedups = fresh.get("speedups") or {}
+    for name, old in sorted(base_speedups.items()):
+        got = new_speedups.get(name)
+        if got is None:
+            print(f"warning: {group}: baseline speedup {name!r} "
+                  f"missing from the new run (renamed bench?)", file=sys.stderr)
+        elif got < threshold:
+            failures.append(
+                f"{group}: {name} speedup {got} < threshold {threshold}"
+                f" (baseline had {old})")
+    return failures
+
+
 def main() -> int:
+    threshold = parse_threshold(sys.argv[1:])
+    check_only = "--check-only" in sys.argv[1:]
     wrote = 0
+    failures = []
+    pending = []  # (path, fresh) — written only if the gate passes
     for group in GROUPS:
         entries = load(group)
         if entries is None:
             print(f"skipping {group}: no rust/results/bench_{group}.json "
                   f"(run scripts/bench_smoke.sh first)", file=sys.stderr)
             continue
+        fresh = report(group, entries)
         out = REPO / f"BENCH_{group}.json"
+        if threshold is not None and out.exists():
+            with out.open() as f:
+                baseline = json.load(f)
+            failures += check_regressions(group, baseline, fresh, threshold)
+        pending.append((out, fresh))
+    if failures:
+        # leave the committed baselines untouched: overwriting them with
+        # the regressed (or fast-mode) numbers would make the very next
+        # run compare against the regression and pass — the gate would
+        # mask itself
+        for line in failures:
+            print(f"REGRESSION: {line}", file=sys.stderr)
+        print("baselines left unmodified (fix the regression, then re-run)",
+              file=sys.stderr)
+        return 3
+    if check_only:
+        print(f"gate passed; {len(pending)} baseline(s) left unmodified (--check-only)")
+        return 0 if pending else 1
+    for out, fresh in pending:
         with out.open("w") as f:
-            json.dump(report(group, entries), f, indent=2)
+            json.dump(fresh, f, indent=2)
             f.write("\n")
         print(f"wrote {out}")
         wrote += 1

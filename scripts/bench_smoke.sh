@@ -11,6 +11,11 @@
 # files at the repo root.
 #
 # Usage: scripts/bench_smoke.sh [bench ...]   (default: all four)
+#
+# Set TITAN_BENCH_REGRESS=<threshold> (ci.sh does) to turn the report step
+# into a regression gate: freshly measured speedups are compared against
+# the committed BENCH_*.json baselines and the smoke fails if any tracked
+# entry drops below the threshold.
 set -euo pipefail
 script_dir="$(cd "$(dirname "$0")" && pwd)"
 repo_root="$(dirname "$script_dir")"
@@ -28,4 +33,13 @@ for bench in "${benches[@]}"; do
 done
 
 echo "== emitting BENCH_*.json =="
-python3 "$script_dir/bench_report.py" || true
+if [ -n "${TITAN_BENCH_REGRESS:-}" ]; then
+  # gate mode: a tracked speedup falling below the threshold fails the
+  # smoke; --check-only keeps fast-mode numbers from overwriting the
+  # committed full-bench trajectory (refreshing baselines is a deliberate
+  # full-bench + plain bench_report.py step)
+  python3 "$script_dir/bench_report.py" \
+    --regress-threshold "$TITAN_BENCH_REGRESS" --check-only
+else
+  python3 "$script_dir/bench_report.py" || true
+fi

@@ -12,7 +12,12 @@
 #      reference on every deterministic field (artifact-gated)
 #   7. bench smoke                every bench target in fast mode
 #      (TITAN_BENCH_FAST=1 via scripts/bench_smoke.sh; catches bench
-#      bit-rot without paying full measurement windows)
+#      bit-rot without paying full measurement windows), then the
+#      speedup regression gate: bench_report.py --check-only fails if
+#      any tracked speedup drops below 1.0 against the committed
+#      BENCH_*.json baseline, without letting fast-mode numbers
+#      overwrite it. Perf PRs refresh the committed files from a full
+#      cargo bench run (see PERF.md).
 #
 # Usage: scripts/ci.sh [--no-bench]
 set -euo pipefail
@@ -69,8 +74,10 @@ else
 fi
 
 if [ "$run_bench" = 1 ]; then
-  echo "== bench smoke (fast mode) =="
-  "$script_dir/bench_smoke.sh"
+  echo "== bench smoke (fast mode, regression-gated) =="
+  TITAN_BENCH_REGRESS="${TITAN_BENCH_REGRESS:-1.0}" "$script_dir/bench_smoke.sh"
+  echo "gate only: refresh committed BENCH_*.json via a full cargo bench +"
+  echo "scripts/bench_report.py when a perf PR changes a hot path (PERF.md)"
 fi
 
 echo "== ci green =="
