@@ -33,6 +33,23 @@
 //! member back up at its own saved round instead of re-spending
 //! device-ms from round 0.
 //!
+//! Edge fleets also fail *while running*: [`FleetBuilder::fault_plan`]
+//! attaches a seeded, deterministic [`FaultPlan`] that injects crashes,
+//! transient errors, stragglers, energy brown-outs and checkpoint
+//! corruption per (session, round) cell, and
+//! [`FleetBuilder::supervise`] picks what the scheduler does about
+//! failures: [`SupervisionPolicy::FailFast`] aborts the fleet (the
+//! historical behavior and still the default),
+//! [`SupervisionPolicy::Isolate`] quarantines the failed member and
+//! finishes everyone else, and [`SupervisionPolicy::Restart`] rebuilds
+//! the member from its factory — resuming from its latest valid
+//! checkpoint when it has one — after a deterministic scheduler-tick
+//! backoff. Every terminal state is reported per session as a
+//! [`SessionStatus`]; fault activity rolls up into
+//! [`FleetRecord::faults`]. With a zero-rate plan (or none) every
+//! policy is bit-identical to the unsupervised fleet on all
+//! deterministic fields.
+//!
 //! ```no_run
 //! use titan::config::{presets, Method};
 //! use titan::coordinator::host::{FewestRoundsFirst, FleetBuilder};
@@ -50,11 +67,13 @@
 //! # Ok::<(), titan::Error>(())
 //! ```
 
+use std::collections::HashSet;
 use std::path::PathBuf;
 
 use crate::coordinator::session::{observers::Checkpoint, Session, SessionBuilder, StepEvent};
 use crate::coordinator::snapshot::{load_checkpoint, Loaded};
 use crate::coordinator::RoundOutcome;
+use crate::fault::{FaultKind, FaultPlan, SupervisionPolicy};
 use crate::metrics::RunRecord;
 use crate::util::json::Json;
 use crate::util::timer::Stopwatch;
@@ -317,6 +336,15 @@ pub trait FleetObserver {
 
     /// One session finished its run.
     fn on_session_finished(&mut self, _session: usize, _name: &str, _record: &RunRecord) {}
+
+    /// The fault plan fired `kind` (see [`FaultKind::name`]) against a
+    /// session at its `round`.
+    fn on_fault(&mut self, _session: usize, _name: &str, _round: usize, _kind: &str) {}
+
+    /// Supervision gave up on a session: it is out of the fleet with no
+    /// final record.
+    fn on_session_quarantined(&mut self, _session: usize, _name: &str, _round: usize, _reason: &str) {
+    }
 }
 
 /// Built-in fleet observer: logs interleaving progress at debug level.
@@ -353,11 +381,25 @@ impl FleetObserver for FleetProgress {
     }
 }
 
+/// Rebuilds a member's [`SessionBuilder`] from scratch for
+/// [`SupervisionPolicy::Restart`]: same config, same backend, an
+/// identically constructed data source. Determinism of the fleet under
+/// restarts is exactly the determinism of this closure.
+pub type SessionFactory = Box<dyn Fn() -> Result<SessionBuilder>>;
+
 /// Builder for a [`Fleet`]: named sessions + policy + fleet observers.
 pub struct FleetBuilder {
     names: Vec<String>,
     sessions: Vec<Box<Session>>,
+    /// Index-aligned with `sessions`: how to rebuild each member
+    /// (restart supervision); None = not restartable.
+    factories: Vec<Option<SessionFactory>>,
+    /// Index-aligned with `sessions`: each member's checkpoint wiring
+    /// (path, cadence); None = not checkpointed.
+    checkpoints: Vec<Option<(PathBuf, usize)>>,
     policy: Box<dyn SchedPolicy>,
+    supervise: SupervisionPolicy,
+    fault_plan: Option<FaultPlan>,
     observers: Vec<Box<dyn FleetObserver>>,
 }
 
@@ -366,7 +408,11 @@ impl FleetBuilder {
         FleetBuilder {
             names: Vec::new(),
             sessions: Vec::new(),
+            factories: Vec::new(),
+            checkpoints: Vec::new(),
             policy: Box::new(RoundRobin::new()),
+            supervise: SupervisionPolicy::FailFast,
+            fault_plan: None,
             observers: Vec::new(),
         }
     }
@@ -376,7 +422,30 @@ impl FleetBuilder {
     pub fn session(mut self, name: impl Into<String>, session: Session) -> Self {
         self.names.push(name.into());
         self.sessions.push(Box::new(session));
+        self.factories.push(None);
+        self.checkpoints.push(None);
         self
+    }
+
+    /// Add a session [`SupervisionPolicy::Restart`] can rebuild: the
+    /// factory must reassemble the member's [`SessionBuilder`] from
+    /// scratch (same config, same backend, identically constructed data
+    /// source). Without a checkpoint the rebuilt member restarts from
+    /// round 0 — deterministic sessions reproduce the lost rounds
+    /// exactly; pair with
+    /// [`FleetBuilder::session_checkpointed_restartable`] to resume from
+    /// the latest snapshot instead.
+    pub fn session_restartable(
+        mut self,
+        name: impl Into<String>,
+        factory: impl Fn() -> Result<SessionBuilder> + 'static,
+    ) -> Result<Self> {
+        let session = factory()?.build()?;
+        self.names.push(name.into());
+        self.sessions.push(Box::new(session));
+        self.factories.push(Some(Box::new(factory)));
+        self.checkpoints.push(None);
+        Ok(self)
     }
 
     /// Add a session that checkpoints to `path` every `every` rounds,
@@ -395,15 +464,50 @@ impl FleetBuilder {
     ///   like a mismatched mid-run snapshot would — skipping it would
     ///   silently drop a run the user actually asked for.
     pub fn session_checkpointed(
-        mut self,
+        self,
         name: impl Into<String>,
         builder: SessionBuilder,
         path: impl Into<PathBuf>,
         every: usize,
         resume: bool,
     ) -> Result<Self> {
-        let name = name.into();
-        let path = path.into();
+        self.add_checkpointed(name.into(), builder, None, path.into(), every, resume)
+    }
+
+    /// [`FleetBuilder::session_checkpointed`] + a rebuild factory: under
+    /// [`SupervisionPolicy::Restart`] a failed member is reassembled from
+    /// the factory and resumed from the latest valid snapshot at `path`
+    /// (falling back to a fresh start when the file is corrupt or
+    /// missing), so recovery costs only the rounds since the last
+    /// checkpoint cadence.
+    pub fn session_checkpointed_restartable(
+        self,
+        name: impl Into<String>,
+        factory: impl Fn() -> Result<SessionBuilder> + 'static,
+        path: impl Into<PathBuf>,
+        every: usize,
+        resume: bool,
+    ) -> Result<Self> {
+        let builder = factory()?;
+        self.add_checkpointed(
+            name.into(),
+            builder,
+            Some(Box::new(factory)),
+            path.into(),
+            every,
+            resume,
+        )
+    }
+
+    fn add_checkpointed(
+        mut self,
+        name: String,
+        builder: SessionBuilder,
+        factory: Option<SessionFactory>,
+        path: PathBuf,
+        every: usize,
+        resume: bool,
+    ) -> Result<Self> {
         let mut builder = builder;
         if resume && path.exists() {
             match load_checkpoint(&path)? {
@@ -435,9 +539,11 @@ impl FleetBuilder {
                 }
             }
         }
-        let session = builder.observe(Checkpoint::every(path, every)).build()?;
+        let session = builder.observe(Checkpoint::every(path.clone(), every)).build()?;
         self.names.push(name);
         self.sessions.push(Box::new(session));
+        self.factories.push(factory);
+        self.checkpoints.push(Some((path, every)));
         Ok(self)
     }
 
@@ -465,6 +571,22 @@ impl FleetBuilder {
         self
     }
 
+    /// What the scheduler does when a session fails (injected or real).
+    /// Default: [`SupervisionPolicy::FailFast`], the historical
+    /// abort-the-fleet behavior.
+    pub fn supervise(mut self, policy: SupervisionPolicy) -> Self {
+        self.supervise = policy;
+        self
+    }
+
+    /// Attach a deterministic fault-injection plan; validated at
+    /// [`Fleet::run`]. A zero-rate plan injects nothing and leaves every
+    /// deterministic output bit-identical to an unfaulted fleet.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
     /// Attach a fleet observer; repeatable, invoked in attach order.
     pub fn observe(mut self, observer: impl FleetObserver + 'static) -> Self {
         self.observers.push(Box::new(observer));
@@ -479,7 +601,11 @@ impl FleetBuilder {
         Ok(Fleet {
             names: self.names,
             sessions: self.sessions,
+            factories: self.factories,
+            checkpoints: self.checkpoints,
             policy: self.policy,
+            supervise: self.supervise,
+            fault_plan: self.fault_plan,
             observers: self.observers,
         })
     }
@@ -500,7 +626,11 @@ impl Default for FleetBuilder {
 pub struct Fleet {
     names: Vec<String>,
     sessions: Vec<Box<Session>>,
+    factories: Vec<Option<SessionFactory>>,
+    checkpoints: Vec<Option<(PathBuf, usize)>>,
     policy: Box<dyn SchedPolicy>,
+    supervise: SupervisionPolicy,
+    fault_plan: Option<FaultPlan>,
     observers: Vec<Box<dyn FleetObserver>>,
 }
 
@@ -513,17 +643,34 @@ impl Fleet {
         self.sessions.is_empty()
     }
 
-    /// Drive every session to completion, one round per scheduler tick.
+    /// Drive every session to a terminal state under the configured
+    /// supervision policy, one round per scheduler tick.
     ///
-    /// A session error aborts the whole fleet (the scheduler is a
-    /// single-tenant research runtime, not an isolator); the error names
-    /// the session that failed.
+    /// Under [`SupervisionPolicy::FailFast`] (the default) a session
+    /// error aborts the whole fleet (the scheduler acting as a
+    /// single-tenant research runtime, not an isolator) and the error
+    /// names the session that failed — the historical contract, byte for
+    /// byte. `Isolate` and `Restart` turn failures into per-session
+    /// [`SessionStatus`]es instead and the fleet runs to completion.
     pub fn run(mut self) -> Result<FleetRecord> {
+        if let Some(plan) = &self.fault_plan {
+            plan.validate()?;
+        }
         let n = self.sessions.len();
         let fleet_sw = Stopwatch::start();
         let mut states = vec![TaskState::default(); n];
         let mut records: Vec<Option<RunRecord>> = (0..n).map(|_| None).collect();
+        let mut statuses: Vec<Option<SessionStatus>> = vec![None; n];
         let mut ready: Vec<usize> = (0..n).collect();
+        // restart backoff: (scheduler tick at which the session re-enters
+        // the ready set, session index)
+        let mut parked: Vec<(u64, usize)> = Vec::new();
+        let mut restarts_used = vec![0usize; n];
+        // (session, session-round) cells whose fault already fired: a
+        // Transient clears on retry, and a restarted member replaying
+        // earlier rounds does not re-crash on the same cell
+        let mut fired: HashSet<(usize, usize)> = HashSet::new();
+        let mut faults = FaultTelemetry::default();
         let mut rounds_executed = 0usize;
         let mut device_ops = 0u64;
         let mut step_ms = 0.0f64;
@@ -532,13 +679,107 @@ impl Fleet {
         let mut tick = 0u64;
         self.policy.prepare(&states, &ready);
 
-        while !ready.is_empty() {
+        loop {
+            // re-admit parked (restarting) sessions whose backoff elapsed;
+            // with nothing ready, jump the clock to the next wake-up. The
+            // clock is scheduler ticks, so backoff is simulation-
+            // deterministic — no wall time involved.
+            if !parked.is_empty() {
+                if ready.is_empty() {
+                    let wake =
+                        parked.iter().map(|&(at, _)| at).min().expect("parked is non-empty");
+                    tick = tick.max(wake);
+                }
+                if parked.iter().any(|&(at, _)| at <= tick) {
+                    let mut due: Vec<usize> = parked
+                        .iter()
+                        .filter(|&&(at, _)| at <= tick)
+                        .map(|&(_, i)| i)
+                        .collect();
+                    parked.retain(|&(at, _)| at > tick);
+                    due.sort_unstable();
+                    for i in due {
+                        if let Err(pos) = ready.binary_search(&i) {
+                            ready.insert(pos, i);
+                        }
+                    }
+                    self.policy.prepare(&states, &ready);
+                }
+            }
+            if ready.is_empty() {
+                break;
+            }
+
             let idx = pick_validated(self.policy.as_mut(), &states, &ready)?;
+
+            // fault injection, keyed on the session's own round (not the
+            // fleet tick) so the plan names cells a user can reason
+            // about; skipped on the finishing step, which runs no round
+            let session_round = self.sessions[idx].rounds_completed();
+            let fault = self
+                .fault_plan
+                .as_ref()
+                .filter(|_| session_round < self.sessions[idx].cfg().rounds)
+                .and_then(|plan| plan.fault_for(idx, session_round))
+                .filter(|_| fired.insert((idx, session_round)));
+            if let Some(kind) = fault {
+                faults.record(idx, session_round, &kind);
+                for obs in self.observers.iter_mut() {
+                    obs.on_fault(idx, &self.names[idx], session_round, kind.name());
+                }
+                match kind {
+                    FaultKind::Transient => {
+                        // clears on retry: the session stays ready, but
+                        // the pick consumed the policy's indexed entry
+                        self.policy.prepare(&states, &ready);
+                        continue;
+                    }
+                    FaultKind::Straggler { slowdown } => {
+                        self.sessions[idx].inject_slowdown(slowdown);
+                    }
+                    FaultKind::EnergyBrownout { joules } => {
+                        self.sessions[idx].inject_brownout(joules);
+                    }
+                    FaultKind::CorruptCheckpoint => self.corrupt_checkpoint(idx),
+                    FaultKind::Crash => {
+                        self.handle_failure(
+                            idx,
+                            session_round,
+                            "injected crash".into(),
+                            tick,
+                            &states,
+                            &mut ready,
+                            &mut parked,
+                            &mut statuses,
+                            &mut restarts_used,
+                            &mut faults,
+                        )?;
+                        continue;
+                    }
+                }
+            }
+
             let step_sw = Stopwatch::start();
-            let event = self.sessions[idx]
-                .step()
-                .map_err(|e| Error::Pipeline(format!("fleet session {:?}: {e}", self.names[idx])))?;
+            let stepped = self.sessions[idx].step();
             step_ms += step_sw.elapsed_ms();
+            let event = match stepped {
+                Ok(event) => event,
+                Err(e) => {
+                    self.handle_failure(
+                        idx,
+                        session_round,
+                        e.to_string(),
+                        tick,
+                        &states,
+                        &mut ready,
+                        &mut parked,
+                        &mut statuses,
+                        &mut restarts_used,
+                        &mut faults,
+                    )?;
+                    continue;
+                }
+            };
             match event {
                 StepEvent::RoundCompleted(outcome) => {
                     states[idx].rounds_done += 1;
@@ -563,29 +804,300 @@ impl Fleet {
                         obs.on_session_finished(idx, &self.names[idx], &record);
                     }
                     records[idx] = Some(record);
+                    statuses[idx] = Some(SessionStatus::Finished);
                     ready.retain(|&i| i != idx);
                 }
             }
         }
 
-        let records: Vec<RunRecord> = records
+        // every session that left the ready set carries a terminal
+        // status; a scheduler bug that dropped one reports as quarantined
+        // instead of panicking the whole fleet
+        let statuses: Vec<SessionStatus> = statuses
             .into_iter()
-            .map(|r| r.expect("every session yielded Finished"))
+            .enumerate()
+            .map(|(i, s)| {
+                s.unwrap_or_else(|| SessionStatus::Quarantined {
+                    round: states[i].rounds_done,
+                    reason: "scheduler exited without a terminal status".into(),
+                })
+            })
             .collect();
         let total_host_ms = fleet_sw.elapsed_ms();
+        let finished = records.iter().flatten();
         Ok(FleetRecord {
             policy: self.policy.name().to_string(),
+            supervision: self.supervise.name().to_string(),
             names: self.names,
             session_rounds: states.iter().map(|s| s.rounds_done).collect(),
             rounds_executed,
             device_ops,
-            total_device_ms: records.iter().map(|r| r.total_device_ms).sum(),
-            energy_j: records.iter().map(|r| r.energy_j).sum(),
-            peak_memory_bytes: records.iter().map(|r| r.peak_memory_bytes).sum(),
+            total_device_ms: finished.clone().map(|r| r.total_device_ms).sum(),
+            energy_j: finished.clone().map(|r| r.energy_j).sum(),
+            peak_memory_bytes: finished.map(|r| r.peak_memory_bytes).sum(),
             records,
+            statuses,
+            faults,
+            fault_plan: self.fault_plan.as_ref().map(|p| p.to_json()),
             total_host_ms,
             sched_overhead_ms: (total_host_ms - step_ms).max(0.0),
         })
+    }
+
+    /// Apply the supervision policy to one failed session. `FailFast`
+    /// returns the historical fleet-aborting error; `Isolate` and
+    /// `Restart` mutate the scheduler state and return `Ok`.
+    #[allow(clippy::too_many_arguments)]
+    fn handle_failure(
+        &mut self,
+        idx: usize,
+        round: usize,
+        reason: String,
+        tick: u64,
+        states: &[TaskState],
+        ready: &mut Vec<usize>,
+        parked: &mut Vec<(u64, usize)>,
+        statuses: &mut [Option<SessionStatus>],
+        restarts_used: &mut [usize],
+        faults: &mut FaultTelemetry,
+    ) -> Result<()> {
+        match self.supervise {
+            SupervisionPolicy::FailFast => {
+                Err(Error::Pipeline(format!("fleet session {:?}: {reason}", self.names[idx])))
+            }
+            SupervisionPolicy::Isolate => {
+                self.quarantine(idx, round, reason, ready, statuses, faults);
+                self.policy.prepare(states, ready);
+                Ok(())
+            }
+            SupervisionPolicy::Restart { max_retries, backoff_rounds } => {
+                if restarts_used[idx] >= max_retries {
+                    let reason = format!("{reason} ({max_retries} restarts exhausted)");
+                    self.quarantine(idx, round, reason, ready, statuses, faults);
+                } else {
+                    match self.rebuild_session(idx) {
+                        Ok(resumed_round) => {
+                            restarts_used[idx] += 1;
+                            faults.restarts += 1;
+                            faults.rounds_recovered += round.saturating_sub(resumed_round);
+                            log::info!(
+                                "fleet: restarting session {:?} from round {resumed_round} \
+                                 (failed at {round}: {reason}; retry {}/{max_retries}, \
+                                 backoff {backoff_rounds} ticks)",
+                                self.names[idx],
+                                restarts_used[idx],
+                            );
+                            ready.retain(|&i| i != idx);
+                            parked.push((tick + backoff_rounds as u64, idx));
+                        }
+                        Err(e) => {
+                            let reason = format!("{reason}; restart failed: {e}");
+                            self.quarantine(idx, round, reason, ready, statuses, faults);
+                        }
+                    }
+                }
+                self.policy.prepare(states, ready);
+                Ok(())
+            }
+        }
+    }
+
+    /// Remove a session from scheduling with a terminal
+    /// [`SessionStatus::Quarantined`]; the rest of the fleet keeps
+    /// running.
+    fn quarantine(
+        &mut self,
+        idx: usize,
+        round: usize,
+        reason: String,
+        ready: &mut Vec<usize>,
+        statuses: &mut [Option<SessionStatus>],
+        faults: &mut FaultTelemetry,
+    ) {
+        log::warn!(
+            "fleet: quarantining session {:?} at round {round}: {reason}",
+            self.names[idx]
+        );
+        for obs in self.observers.iter_mut() {
+            obs.on_session_quarantined(idx, &self.names[idx], round, &reason);
+        }
+        statuses[idx] = Some(SessionStatus::Quarantined { round, reason });
+        ready.retain(|&i| i != idx);
+        faults.quarantines += 1;
+    }
+
+    /// Rebuild session `idx` from its factory for restart supervision,
+    /// resuming from its latest valid checkpoint when it has one; a
+    /// corrupt (or otherwise unusable) checkpoint file degrades to a
+    /// fresh start — deterministic sessions reproduce the lost rounds
+    /// exactly. Returns the round the rebuilt session starts from.
+    fn rebuild_session(&mut self, idx: usize) -> Result<usize> {
+        let Some(factory) = &self.factories[idx] else {
+            return Err(Error::Config(
+                "no session factory registered (use session_restartable / \
+                 session_checkpointed_restartable)"
+                    .into(),
+            ));
+        };
+        let mut builder = factory()?;
+        let mut resumed_round = 0usize;
+        if let Some((path, every)) = &self.checkpoints[idx] {
+            if path.exists() {
+                match load_checkpoint(path) {
+                    Ok(Loaded::Resumable(snap)) => {
+                        resumed_round = snap.round;
+                        builder = builder.resume_from_snapshot(*snap);
+                    }
+                    Ok(Loaded::Complete { .. }) => {
+                        log::warn!(
+                            "fleet: {} marks a completed run but the session failed — \
+                             restarting from scratch",
+                            path.display()
+                        );
+                    }
+                    Err(e) => {
+                        log::warn!("fleet: discarding unusable checkpoint: {e}");
+                    }
+                }
+            }
+            builder = builder.observe(Checkpoint::every(path.clone(), *every));
+        }
+        self.sessions[idx] = Box::new(builder.build()?);
+        Ok(resumed_round)
+    }
+
+    /// Injected checkpoint corruption: truncate the member's on-disk
+    /// snapshot to half its size (a torn write). The typed loader rejects
+    /// the remnant, so a later restart falls back to a fresh start; a
+    /// member without checkpoint wiring makes this a no-op.
+    fn corrupt_checkpoint(&self, idx: usize) {
+        let Some((path, _)) = &self.checkpoints[idx] else { return };
+        let Ok(meta) = std::fs::metadata(path) else { return };
+        let result = std::fs::OpenOptions::new()
+            .write(true)
+            .open(path)
+            .and_then(|f| f.set_len(meta.len() / 2));
+        if let Err(e) = result {
+            log::warn!("fleet: corrupt-checkpoint fault on {} failed: {e}", path.display());
+        }
+    }
+}
+
+/// How one fleet member ended its run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SessionStatus {
+    /// The session ran to completion and has a [`RunRecord`].
+    Finished,
+    /// Supervision gave up on the session at its `round`; it has no
+    /// final record.
+    Quarantined {
+        /// The session-local round at which supervision gave up.
+        round: usize,
+        /// Why (the failing error, or the injected fault).
+        reason: String,
+    },
+}
+
+impl SessionStatus {
+    pub fn is_finished(&self) -> bool {
+        matches!(self, SessionStatus::Finished)
+    }
+
+    /// Display/JSON label: `finished` or `quarantined`.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SessionStatus::Finished => "finished",
+            SessionStatus::Quarantined { .. } => "quarantined",
+        }
+    }
+}
+
+/// One injected fault, in injection order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Fleet index of the session the fault hit.
+    pub session: usize,
+    /// The session-local round it hit at.
+    pub round: usize,
+    /// [`FaultKind::name`] of what fired.
+    pub kind: String,
+}
+
+/// Fault + supervision telemetry for one fleet run. Fully deterministic
+/// for a given (config, fault plan) pair — it counts injected faults and
+/// the scheduler's deterministic reactions, never wall-clock effects.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultTelemetry {
+    /// Injected `Crash` faults.
+    pub crashes: usize,
+    /// Injected `Transient` faults (each also counts one retry).
+    pub transients: usize,
+    /// Picks consumed by a fault that left the session ready to retry.
+    pub retries: usize,
+    /// Injected `Straggler` slowdowns.
+    pub stragglers: usize,
+    /// Injected `EnergyBrownout` drains.
+    pub brownouts: usize,
+    /// Injected `CorruptCheckpoint` truncations.
+    pub corruptions: usize,
+    /// Successful session rebuilds under restart supervision.
+    pub restarts: usize,
+    /// Sessions supervision gave up on.
+    pub quarantines: usize,
+    /// Σ over restarts of (failed-at round − resumed-from round): rounds
+    /// a checkpoint saved the fleet from re-running. 0 with no
+    /// checkpoints (scratch restarts re-run everything).
+    pub rounds_recovered: usize,
+    /// Every injected fault, in injection order.
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultTelemetry {
+    /// Count one injected fault and append it to the event log.
+    fn record(&mut self, session: usize, round: usize, kind: &FaultKind) {
+        match kind {
+            FaultKind::Crash => self.crashes += 1,
+            FaultKind::Transient => {
+                self.transients += 1;
+                self.retries += 1;
+            }
+            FaultKind::Straggler { .. } => self.stragglers += 1,
+            FaultKind::EnergyBrownout { .. } => self.brownouts += 1,
+            FaultKind::CorruptCheckpoint => self.corruptions += 1,
+        }
+        self.events.push(FaultEvent { session, round, kind: kind.name().to_string() });
+    }
+
+    /// Total injected faults.
+    pub fn total(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let events = Json::Arr(
+            self.events
+                .iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("session", Json::Num(e.session as f64)),
+                        ("round", Json::Num(e.round as f64)),
+                        ("kind", Json::Str(e.kind.clone())),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("crashes", Json::Num(self.crashes as f64)),
+            ("transients", Json::Num(self.transients as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("stragglers", Json::Num(self.stragglers as f64)),
+            ("brownouts", Json::Num(self.brownouts as f64)),
+            ("corruptions", Json::Num(self.corruptions as f64)),
+            ("restarts", Json::Num(self.restarts as f64)),
+            ("quarantines", Json::Num(self.quarantines as f64)),
+            ("rounds_recovered", Json::Num(self.rounds_recovered as f64)),
+            ("events", events),
+        ])
     }
 }
 
@@ -595,30 +1107,43 @@ impl Fleet {
 pub struct FleetRecord {
     /// Policy display name.
     pub policy: String,
-    /// Session display names, index-aligned with `records`.
+    /// Supervision policy display name ([`SupervisionPolicy::name`]).
+    pub supervision: String,
+    /// Session display names, index-aligned with `records`/`statuses`.
     pub names: Vec<String>,
-    /// Final per-session records — identical to solo runs for every
-    /// session that is reproducible solo (see the module docs).
-    pub records: Vec<RunRecord>,
-    /// Rounds each session completed.
+    /// Final per-session records — `Some` exactly for
+    /// [`SessionStatus::Finished`] members, and identical to solo runs
+    /// for every session that is reproducible solo (see the module
+    /// docs).
+    pub records: Vec<Option<RunRecord>>,
+    /// How each session ended.
+    pub statuses: Vec<SessionStatus>,
+    /// Rounds each session completed **in this fleet run** (a restarted
+    /// member counts replayed rounds again — they were re-executed).
     pub session_rounds: Vec<usize>,
     /// Total interleaved rounds across all sessions.
     pub rounds_executed: usize,
     /// Device-sim ops charged across all sessions (selector ops + one
     /// train step per round).
     pub device_ops: u64,
-    /// Σ per-session simulated device clocks (ms).
+    /// Σ per-session simulated device clocks (ms), finished members only.
     pub total_device_ms: f64,
     /// Host wall clock of the whole fleet run (ms).
     pub total_host_ms: f64,
     /// Host wall time outside `Session::step` — scheduling, bookkeeping
     /// and fleet-observer fan-out (ms).
     pub sched_overhead_ms: f64,
-    /// Σ per-session simulated energy (J).
+    /// Σ per-session simulated energy (J), finished members only.
     pub energy_j: f64,
     /// Σ per-session peak-memory estimates (bytes) — every session's
     /// working set is resident concurrently on the host.
     pub peak_memory_bytes: usize,
+    /// Injected-fault and supervision telemetry (all zero with no plan
+    /// or a zero-rate plan).
+    pub faults: FaultTelemetry,
+    /// The fault plan that ran, serialized ([`FaultPlan::to_json`]);
+    /// None when the fleet ran unfaulted.
+    pub fault_plan: Option<Json>,
 }
 
 impl FleetRecord {
@@ -631,23 +1156,36 @@ impl FleetRecord {
         }
     }
 
+    /// Finished sessions (those with a [`RunRecord`]).
+    pub fn finished(&self) -> usize {
+        self.statuses.iter().filter(|s| s.is_finished()).count()
+    }
+
     pub fn to_json(&self) -> Json {
         let sessions = Json::Arr(
             self.names
                 .iter()
                 .zip(&self.records)
-                .zip(&self.session_rounds)
-                .map(|((name, record), &rounds)| {
-                    Json::obj(vec![
+                .zip(self.statuses.iter().zip(&self.session_rounds))
+                .map(|((name, record), (status, &rounds))| {
+                    let mut fields = vec![
                         ("name", Json::Str(name.clone())),
                         ("rounds", Json::Num(rounds as f64)),
-                        ("record", record.to_json()),
-                    ])
+                        ("status", Json::Str(status.label().into())),
+                    ];
+                    if let SessionStatus::Quarantined { round, reason } = status {
+                        fields.push(("quarantine_round", Json::Num(*round as f64)));
+                        fields.push(("reason", Json::Str(reason.clone())));
+                    }
+                    fields
+                        .push(("record", record.as_ref().map_or(Json::Null, |r| r.to_json())));
+                    Json::obj(fields)
                 })
                 .collect(),
         );
-        Json::obj(vec![
+        let mut fields = vec![
             ("policy", Json::Str(self.policy.clone())),
+            ("supervision", Json::Str(self.supervision.clone())),
             ("sessions", sessions),
             ("rounds_executed", Json::Num(self.rounds_executed as f64)),
             ("device_ops", Json::Num(self.device_ops as f64)),
@@ -660,7 +1198,12 @@ impl FleetRecord {
             ),
             ("energy_j", Json::Num(self.energy_j)),
             ("peak_memory_bytes", Json::Num(self.peak_memory_bytes as f64)),
-        ])
+            ("faults", self.faults.to_json()),
+        ];
+        if let Some(plan) = &self.fault_plan {
+            fields.push(("fault_plan", plan.clone()));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -787,13 +1330,144 @@ mod tests {
         assert!(FleetBuilder::new().build().is_err());
     }
 
+    // Sessions start lazily, so supervision paths driven entirely by
+    // scripted round-0 crashes (which fire *before* the first step) are
+    // testable without model artifacts.
+
+    fn unstarted_session(rounds: usize) -> Session {
+        let mut cfg = presets::table1("mlp", Method::Rs);
+        cfg.rounds = rounds;
+        cfg.pipeline = false;
+        SessionBuilder::new(cfg).build().unwrap()
+    }
+
+    fn crash_everyone(n: usize) -> FaultPlan {
+        let mut plan = FaultPlan::new(0);
+        for i in 0..n {
+            plan = plan.script(i, 0, FaultKind::Crash);
+        }
+        plan
+    }
+
+    #[test]
+    fn scripted_crashes_quarantine_under_isolate() {
+        let record = FleetBuilder::new()
+            .session("a", unstarted_session(3))
+            .session("b", unstarted_session(3))
+            .supervise(SupervisionPolicy::Isolate)
+            .fault_plan(crash_everyone(2))
+            .run()
+            .unwrap();
+        assert_eq!(record.supervision, "isolate");
+        assert_eq!(record.rounds_executed, 0);
+        assert_eq!(record.finished(), 0);
+        for (status, rec) in record.statuses.iter().zip(&record.records) {
+            assert_eq!(
+                status,
+                &SessionStatus::Quarantined { round: 0, reason: "injected crash".into() }
+            );
+            assert!(rec.is_none());
+        }
+        assert_eq!(record.faults.crashes, 2);
+        assert_eq!(record.faults.quarantines, 2);
+        assert_eq!(record.faults.total(), 2);
+        assert!(record.fault_plan.is_some());
+    }
+
+    #[test]
+    fn scripted_crash_aborts_under_failfast() {
+        let err = FleetBuilder::new()
+            .session("doomed", unstarted_session(3))
+            .fault_plan(crash_everyone(1))
+            .run()
+            .unwrap_err();
+        // the historical fleet-abort shape, naming the session
+        assert_eq!(err.to_string(), "pipeline error: fleet session \"doomed\": injected crash");
+    }
+
+    #[test]
+    fn restart_without_factory_quarantines() {
+        let record = FleetBuilder::new()
+            .session("fixed", unstarted_session(3))
+            .supervise(SupervisionPolicy::Restart { max_retries: 2, backoff_rounds: 1 })
+            .fault_plan(crash_everyone(1))
+            .run()
+            .unwrap();
+        assert_eq!(record.faults.restarts, 0);
+        assert_eq!(record.faults.quarantines, 1);
+        let SessionStatus::Quarantined { round, reason } = &record.statuses[0] else {
+            panic!("expected quarantine, got {:?}", record.statuses[0]);
+        };
+        assert_eq!(*round, 0);
+        assert!(reason.contains("restart failed"), "unexpected reason: {reason}");
+        assert!(reason.contains("no session factory"), "unexpected reason: {reason}");
+    }
+
+    #[test]
+    fn restart_quarantines_when_the_factory_breaks() {
+        // factory works for the initial build, then breaks — the restart
+        // path must degrade to quarantine, not abort the fleet
+        let calls = std::rc::Rc::new(std::cell::Cell::new(0usize));
+        let seen = std::rc::Rc::clone(&calls);
+        let factory = move || {
+            seen.set(seen.get() + 1);
+            if seen.get() > 1 {
+                return Err(Error::Other("factory broke".into()));
+            }
+            let mut cfg = presets::table1("mlp", Method::Rs);
+            cfg.rounds = 3;
+            cfg.pipeline = false;
+            Ok(SessionBuilder::new(cfg))
+        };
+        let record = FleetBuilder::new()
+            .session_restartable("flaky", factory)
+            .unwrap()
+            .supervise(SupervisionPolicy::Restart { max_retries: 2, backoff_rounds: 0 })
+            .fault_plan(crash_everyone(1))
+            .run()
+            .unwrap();
+        assert_eq!(calls.get(), 2, "initial build + one rebuild attempt");
+        assert_eq!(record.faults.restarts, 0);
+        let SessionStatus::Quarantined { reason, .. } = &record.statuses[0] else {
+            panic!("expected quarantine, got {:?}", record.statuses[0]);
+        };
+        assert!(reason.contains("factory broke"), "unexpected reason: {reason}");
+    }
+
+    #[test]
+    fn zero_rate_plan_injects_nothing() {
+        let plan = FaultPlan::new(42);
+        assert!(plan.is_zero());
+        let record = FleetBuilder::new()
+            .session("a", unstarted_session(3))
+            .supervise(SupervisionPolicy::Isolate)
+            .fault_plan(plan)
+            .run()
+            .unwrap();
+        // without artifacts the session fails at start and is isolated
+        // (a real failure, counted as a quarantine); with artifacts it
+        // finishes — either way the plan injected nothing
+        assert_eq!(record.faults.total(), 0);
+        assert!(record.faults.events.is_empty());
+        assert_eq!(record.faults.restarts, 0);
+        assert_eq!(record.faults.rounds_recovered, 0);
+    }
+
     #[test]
     fn fleet_record_json_shape() {
+        let mut faults = FaultTelemetry::default();
+        faults.record(1, 3, &FaultKind::Crash);
+        faults.quarantines = 1;
         let rec = FleetRecord {
             policy: "round-robin".into(),
+            supervision: "isolate".into(),
             names: vec!["a".into(), "b".into()],
-            records: vec![RunRecord::new("rs", "mlp"), RunRecord::new("titan", "mlp")],
-            session_rounds: vec![4, 6],
+            records: vec![Some(RunRecord::new("rs", "mlp")), None],
+            statuses: vec![
+                SessionStatus::Finished,
+                SessionStatus::Quarantined { round: 3, reason: "injected crash".into() },
+            ],
+            session_rounds: vec![4, 3],
             rounds_executed: 10,
             device_ops: 25,
             total_device_ms: 1234.5,
@@ -801,11 +1475,27 @@ mod tests {
             sched_overhead_ms: 2.0,
             energy_j: 9.0,
             peak_memory_bytes: 2048,
+            faults,
+            fault_plan: Some(FaultPlan::new(7).to_json()),
         };
         assert!((rec.sched_overhead_per_round_ms() - 0.2).abs() < 1e-12);
+        assert_eq!(rec.finished(), 1);
         let j = rec.to_json();
         assert_eq!(j.get("policy").unwrap().as_str().unwrap(), "round-robin");
-        assert_eq!(j.get("sessions").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("supervision").unwrap().as_str().unwrap(), "isolate");
+        let sessions = j.get("sessions").unwrap().as_arr().unwrap();
+        assert_eq!(sessions.len(), 2);
+        assert_eq!(sessions[0].get("status").unwrap().as_str().unwrap(), "finished");
+        assert!(sessions[0].get("record").unwrap() != &Json::Null);
+        assert_eq!(sessions[1].get("status").unwrap().as_str().unwrap(), "quarantined");
+        assert_eq!(sessions[1].get("quarantine_round").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(sessions[1].get("reason").unwrap().as_str().unwrap(), "injected crash");
+        assert_eq!(sessions[1].get("record").unwrap(), &Json::Null);
+        let faults = j.get("faults").unwrap();
+        assert_eq!(faults.get("crashes").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(faults.get("quarantines").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(faults.get("events").unwrap().as_arr().unwrap().len(), 1);
+        assert!(j.get("fault_plan").is_ok());
         assert_eq!(j.get("rounds_executed").unwrap().as_usize().unwrap(), 10);
         let roundtrip = Json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(
@@ -858,6 +1548,11 @@ mod tests {
         assert_eq!(record.session_rounds, vec![2, 4]);
         assert_eq!(record.rounds_executed, 6);
         assert_eq!(record.records.len(), 2);
+        assert!(record.records.iter().all(|r| r.is_some()));
+        assert!(record.statuses.iter().all(|s| s.is_finished()));
+        assert_eq!(record.supervision, "failfast");
+        assert_eq!(record.faults, FaultTelemetry::default());
+        assert!(record.fault_plan.is_none());
         // strict alternation while both live, then the long tail
         let seen = trace.borrow().clone();
         assert_eq!(

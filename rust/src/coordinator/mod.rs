@@ -51,7 +51,10 @@ use crate::util::rng::Xoshiro256;
 use crate::util::timer::Stopwatch;
 use crate::{Error, Result};
 
-pub use host::{Fleet, FleetBuilder, FleetObserver, FleetRecord, SchedPolicy};
+pub use host::{
+    FaultEvent, FaultTelemetry, Fleet, FleetBuilder, FleetObserver, FleetRecord, SchedPolicy,
+    SessionFactory, SessionStatus,
+};
 pub use round::{RoundOutcome, SelectorReport};
 pub use session::{Control, ExecBackend, RoundObserver, Session, SessionBuilder, StepEvent};
 pub use snapshot::SessionSnapshot;

@@ -305,6 +305,10 @@ pub mod observers {
         /// completion marker can carry it (Null if the run finished
         /// before the first cadence snapshot).
         config: Json,
+        /// Failed writes so far — shared so callers keep visibility after
+        /// the session has taken the observer by value (see
+        /// [`Checkpoint::failure_counter`]).
+        failures: Arc<AtomicU64>,
     }
 
     /// Summary of a checkpoint file (mid-run snapshot or completion
@@ -340,7 +344,26 @@ pub mod observers {
             let path = path.into();
             Checkpoint::sweep_stale_tmp(&path);
             let tmp = Checkpoint::unique_tmp(&path);
-            Checkpoint { path, tmp, every, config: Json::Null }
+            Checkpoint {
+                path,
+                tmp,
+                every,
+                config: Json::Null,
+                failures: Arc::new(AtomicU64::new(0)),
+            }
+        }
+
+        /// Write failures so far (each is also logged at warn level; the
+        /// run itself never aborts on one).
+        pub fn failures(&self) -> u64 {
+            self.failures.load(Ordering::Relaxed)
+        }
+
+        /// Shared handle to the failure counter — grab one before
+        /// `observe` takes the observer by value to audit write failures
+        /// after the run.
+        pub fn failure_counter(&self) -> Arc<AtomicU64> {
+            Arc::clone(&self.failures)
         }
 
         /// Remove `<file_name>.*.tmp` siblings from earlier instances.
@@ -377,11 +400,16 @@ pub mod observers {
             PathBuf::from(name)
         }
 
-        /// Atomic write: temp file + rename.
+        /// Atomic write: temp file + rename. Failures are counted and
+        /// logged, never propagated — losing a snapshot must not kill the
+        /// run it is protecting. A failed write also cleans up its temp
+        /// file so no `.tmp` orphan survives into the next cadence.
         fn write(&self, j: &Json) {
             let result = std::fs::write(&self.tmp, j.to_string_compact())
                 .and_then(|()| std::fs::rename(&self.tmp, &self.path));
             if let Err(e) = result {
+                self.failures.fetch_add(1, Ordering::Relaxed);
+                let _ = std::fs::remove_file(&self.tmp);
                 log::warn!("checkpoint write {} failed: {e}", self.path.display());
             }
         }
@@ -559,6 +587,8 @@ impl SessionBuilder {
             state: State::Pending { backend, source, observers, resume },
             outcomes,
             completed,
+            pending_slowdown: None,
+            pending_brownout: 0.0,
         })
     }
 
@@ -604,6 +634,11 @@ pub struct Session {
     /// Rounds completed, independent of `outcomes` (which a host may
     /// drain mid-run via [`Session::take_outcomes`]).
     completed: usize,
+    /// Fault-plane injection, applied to the device simulator at the next
+    /// [`Session::step`] (see [`Session::inject_slowdown`]).
+    pending_slowdown: Option<f64>,
+    /// Joules to drain at the next step (see [`Session::inject_brownout`]).
+    pending_brownout: f64,
 }
 
 /// Session lifecycle. `Pending` holds the builder outputs until the first
@@ -1053,10 +1088,32 @@ impl Session {
         let State::Running(run) = &mut self.state else {
             unreachable!("checked Running above")
         };
+        if let Some(factor) = self.pending_slowdown.take() {
+            run.sim.set_round_slowdown(factor);
+        }
+        if self.pending_brownout > 0.0 {
+            run.sim.drain_energy(self.pending_brownout);
+            self.pending_brownout = 0.0;
+        }
         let outcome = run.step_round(&self.cfg)?;
         self.completed += 1;
         self.outcomes.push(outcome.clone());
         Ok(StepEvent::RoundCompleted(outcome))
+    }
+
+    /// Fault-plane hook: inflate the device clock of the **next** stepped
+    /// round by `factor` (a straggler episode). One-shot — the simulator
+    /// resets the factor after the round; calling twice before a step
+    /// keeps the latest factor.
+    pub fn inject_slowdown(&mut self, factor: f64) {
+        self.pending_slowdown = Some(factor);
+    }
+
+    /// Fault-plane hook: drain `joules` from the device battery at the
+    /// next stepped round (an energy brown-out). Accumulates across calls
+    /// until a step consumes it.
+    pub fn inject_brownout(&mut self, joules: f64) {
+        self.pending_brownout += joules.max(0.0);
     }
 
     /// Run to completion: the trivial while-step wrapper. Byte-identical
@@ -1209,6 +1266,53 @@ mod tests {
     #[should_panic(expected = "positive")]
     fn checkpoint_zero_cadence_panics() {
         super::observers::Checkpoint::every("unused.json", 0);
+    }
+
+    #[test]
+    fn checkpoint_write_failure_is_counted_not_fatal() {
+        use super::observers::Checkpoint;
+        // A regular file as the parent "directory" makes every write fail,
+        // even for root (ENOTDIR is not a permission check).
+        let blocker = std::env::temp_dir().join("titan_ck_notadir");
+        std::fs::write(&blocker, b"not a directory").unwrap();
+        let path = blocker.join("ck.json");
+        let cfg = small_cfg(Method::Rs);
+        let mut ck = Checkpoint::every(path, 2);
+        let counter = ck.failure_counter();
+        // every write fails, none panics or aborts the observer protocol
+        ck.on_snapshot(&tiny_snapshot(&cfg, 2));
+        assert_eq!(ck.failures(), 1);
+        ck.on_snapshot(&tiny_snapshot(&cfg, 4));
+        ck.on_finish(&RunRecord::new("rs", "mlp"));
+        assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), 3);
+        let _ = std::fs::remove_file(&blocker);
+    }
+
+    #[test]
+    fn checkpoint_leaves_no_tmp_files_behind() {
+        use super::observers::Checkpoint;
+        let dir = std::env::temp_dir().join("titan_ck_tmp_sweep");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.json");
+        // a stale temp file from a killed writer, matching the
+        // `<name>.<pid>.<seq>.tmp` pattern the sweeper targets
+        let stale = dir.join("ck.json.4242.7.tmp");
+        std::fs::write(&stale, b"{half written").unwrap();
+        let cfg = small_cfg(Method::Rs);
+        let mut ck = Checkpoint::every(path.clone(), 2);
+        assert!(!stale.exists(), "construction sweeps stale temp files");
+        ck.on_snapshot(&tiny_snapshot(&cfg, 2));
+        assert!(path.exists(), "snapshot landed at the target path");
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "no .tmp survives a successful write: {leftovers:?}");
+        assert_eq!(ck.failures(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

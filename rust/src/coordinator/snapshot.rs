@@ -188,33 +188,54 @@ pub fn completion_marker(config: &Json, record: &RunRecord) -> Json {
 }
 
 /// Read a checkpoint file written by the `Checkpoint` observer.
+///
+/// Every failure — unreadable file, truncated/corrupt JSON, wrong
+/// version, missing or ill-typed field — comes back as a typed
+/// [`Error::Checkpoint`] naming the path and the stage that failed, so
+/// callers (and the restart supervisor) can distinguish "this file is
+/// damaged, fall back" from config errors without string-matching.
 pub fn load_checkpoint(path: &Path) -> Result<Loaded> {
-    let j = Json::parse_file(path)?;
-    let version = j.get("titan_checkpoint").map_err(|_| {
-        Error::Json(format!("{}: not a titan checkpoint", path.display()))
-    })?;
-    if version.as_usize()? != CHECKPOINT_VERSION {
-        return Err(Error::Json(format!(
-            "{}: unsupported checkpoint version {}",
-            path.display(),
-            version.as_usize()?
-        )));
+    let fail = |stage: &'static str, detail: String| Error::Checkpoint {
+        path: path.display().to_string(),
+        stage,
+        detail,
+    };
+    let text = std::fs::read_to_string(path).map_err(|e| fail("read", e.to_string()))?;
+    let j = Json::parse(&text).map_err(|e| fail("parse", e.to_string()))?;
+    let version = j
+        .get("titan_checkpoint")
+        .map_err(|_| fail("version", "missing titan_checkpoint field — not a titan checkpoint".into()))?;
+    let version = version.as_usize().map_err(|e| fail("version", e.to_string()))?;
+    if version != CHECKPOINT_VERSION {
+        return Err(fail(
+            "version",
+            format!("unsupported checkpoint version {version} (this build reads {CHECKPOINT_VERSION})"),
+        ));
     }
-    if j.get("complete")?.as_bool()? {
-        let accuracy_trace = j
-            .get("accuracy_trace")?
-            .as_arr()?
-            .iter()
-            .map(|p| Ok((p.get("round")?.as_usize()?, p.get("test_accuracy")?.as_f64()?)))
-            .collect::<Result<Vec<_>>>()?;
-        Ok(Loaded::Complete {
-            round: j.get("round")?.as_usize()?,
-            final_accuracy: j.get("final_accuracy")?.as_f64()?,
-            accuracy_trace,
-            config: j.get("config")?.clone(),
-        })
+    let complete = j
+        .get("complete")
+        .and_then(|v| v.as_bool())
+        .map_err(|e| fail("field", e.to_string()))?;
+    if complete {
+        let decode = || -> Result<Loaded> {
+            let accuracy_trace = j
+                .get("accuracy_trace")?
+                .as_arr()?
+                .iter()
+                .map(|p| Ok((p.get("round")?.as_usize()?, p.get("test_accuracy")?.as_f64()?)))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Loaded::Complete {
+                round: j.get("round")?.as_usize()?,
+                final_accuracy: j.get("final_accuracy")?.as_f64()?,
+                accuracy_trace,
+                config: j.get("config")?.clone(),
+            })
+        };
+        decode().map_err(|e| fail("field", e.to_string()))
     } else {
-        Ok(Loaded::Resumable(Box::new(SessionSnapshot::from_json(&j)?)))
+        SessionSnapshot::from_json(&j)
+            .map(|s| Loaded::Resumable(Box::new(s)))
+            .map_err(|e| fail("field", e.to_string()))
     }
 }
 
@@ -550,5 +571,70 @@ mod tests {
         std::fs::write(&path, "{\"not\": \"a checkpoint\"}").unwrap();
         assert!(load_checkpoint(&path).is_err());
         let _ = std::fs::remove_file(&path);
+    }
+
+    /// ISSUE 6 satellite: clip a valid snapshot at many byte offsets —
+    /// every clip must come back as a clean typed [`Error::Checkpoint`]
+    /// naming the path, never a panic or a bare JSON error.
+    #[test]
+    fn truncated_checkpoints_yield_clean_typed_errors() {
+        let dir = std::env::temp_dir().join("titan_snapshot_truncation");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.json");
+        let full = sample_snapshot().to_json().to_string_compact();
+        let mut cuts: Vec<usize> = (0..full.len()).step_by(7).collect();
+        cuts.extend([1, full.len() / 2, full.len() - 1]);
+        for cut in cuts {
+            std::fs::write(&path, &full.as_bytes()[..cut]).unwrap();
+            let err = match load_checkpoint(&path) {
+                Err(e) => e,
+                Ok(_) => panic!("clip at {cut}/{} loaded successfully", full.len()),
+            };
+            match &err {
+                Error::Checkpoint { path: p, stage, .. } => {
+                    assert!(p.contains("ck.json"), "error does not name the file: {err}");
+                    assert!(
+                        ["read", "parse", "version", "field"].contains(stage),
+                        "unexpected stage {stage:?}: {err}"
+                    );
+                }
+                other => panic!("clip at {cut}: untyped error {other:?}"),
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The typed error distinguishes what failed: parse vs. version vs.
+    /// missing-field, each carrying the offending path.
+    #[test]
+    fn load_errors_name_path_and_stage() {
+        let dir = std::env::temp_dir().join("titan_snapshot_stages");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.json");
+        let stage_of = |body: &str| -> &'static str {
+            std::fs::write(&path, body).unwrap();
+            match load_checkpoint(&path) {
+                Err(Error::Checkpoint { path: p, stage, .. }) => {
+                    assert!(p.contains("ck.json"));
+                    stage
+                }
+                other => panic!("expected typed checkpoint error, got {other:?}"),
+            }
+        };
+        assert_eq!(stage_of("{\"titan_checkpoint\": 1,"), "parse");
+        assert_eq!(stage_of("{\"complete\": false}"), "version");
+        assert_eq!(stage_of("{\"titan_checkpoint\": 99, \"complete\": false}"), "version");
+        // valid header, but the snapshot body is missing entirely
+        assert_eq!(stage_of("{\"titan_checkpoint\": 1, \"complete\": false}"), "field");
+        assert_eq!(stage_of("{\"titan_checkpoint\": 1, \"complete\": true}"), "field");
+        // a missing file fails at the read stage
+        let _ = std::fs::remove_file(&path);
+        match load_checkpoint(&path) {
+            Err(Error::Checkpoint { stage: "read", .. }) => {}
+            other => panic!("expected read-stage error, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

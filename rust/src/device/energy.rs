@@ -71,6 +71,13 @@ impl EnergyModel {
         self.energy_j
     }
 
+    /// Consume `joules` outside the per-round power integral — an
+    /// injected brown-out. Wall time is unchanged: the device lost
+    /// charge, not progress, so average power rises.
+    pub fn drain(&mut self, joules: f64) {
+        self.energy_j += joules.max(0.0);
+    }
+
     /// Wall ms accounted so far (the denominator of
     /// [`EnergyModel::avg_power_w`]).
     pub fn wall_ms(&self) -> f64 {

@@ -139,6 +139,9 @@ pub struct DeviceSim {
     total_ms: f64,
     round_log: Vec<RoundTiming>,
     energy: energy::EnergyModel,
+    /// One-round clock inflation (straggler fault injection); ≥ 1, reset
+    /// to the neutral 1.0 after each round.
+    round_slowdown: f64,
 }
 
 /// Timing of one completed round.
@@ -158,7 +161,21 @@ impl DeviceSim {
             total_ms: 0.0,
             round_log: Vec::new(),
             energy: energy::EnergyModel::default(),
+            round_slowdown: 1.0,
         }
+    }
+
+    /// Inflate the *current* round's device clock by `factor` (clamped to
+    /// ≥ 1) on both lanes — a straggler round. One-shot: the factor
+    /// resets to 1 when the round ends.
+    pub fn set_round_slowdown(&mut self, factor: f64) {
+        self.round_slowdown = factor.max(1.0);
+    }
+
+    /// Drain `joules` from the simulated battery without useful work
+    /// (energy brown-out injection).
+    pub fn drain_energy(&mut self, joules: f64) {
+        self.energy.drain(joules);
     }
 
     /// Record an operation on a lane within the current round.
@@ -170,8 +187,11 @@ impl DeviceSim {
     /// Close the round. `pipelined` determines whether lanes overlap.
     /// Returns the realized round timing.
     pub fn end_round(&mut self, pipelined: bool) -> RoundTiming {
-        let cpu = self.round_ms[Lane::Cpu as usize];
-        let gpu = self.round_ms[Lane::Gpu as usize];
+        // ×1.0 is a bit-exact identity, so fault-free rounds are
+        // untouched by the slowdown hook
+        let cpu = self.round_ms[Lane::Cpu as usize] * self.round_slowdown;
+        let gpu = self.round_ms[Lane::Gpu as usize] * self.round_slowdown;
+        self.round_slowdown = 1.0;
         let wall = if pipelined { cpu.max(gpu) } else { cpu + gpu };
         self.total_ms += wall;
         self.energy.account_round(cpu, gpu, wall);
@@ -218,6 +238,7 @@ impl DeviceSim {
         self.energy.restore(st.energy_j, st.energy_wall_ms);
         self.round_log = st.rounds;
         self.round_ms = [0.0, 0.0];
+        self.round_slowdown = 1.0;
     }
 }
 
@@ -308,6 +329,47 @@ mod tests {
         assert_eq!(restored.total_ms(), live.total_ms());
         assert_eq!(restored.energy().avg_power_w(), live.energy().avg_power_w());
         assert_eq!(restored.rounds().len(), live.rounds().len());
+    }
+
+    #[test]
+    fn round_slowdown_inflates_one_round_then_resets() {
+        let mut clean = DeviceSim::new("mlp");
+        let mut slow = DeviceSim::new("mlp");
+        for sim in [&mut clean, &mut slow] {
+            sim.record(Lane::Cpu, Op::TrainStep { batch: 10 });
+            sim.record(Lane::Gpu, Op::Importance { n: 30 });
+        }
+        slow.set_round_slowdown(3.0);
+        let tc = clean.end_round(true);
+        let ts = slow.end_round(true);
+        assert_eq!(ts.wall_ms, tc.wall_ms * 3.0);
+        assert_eq!(ts.cpu_ms, tc.cpu_ms * 3.0);
+        assert!(slow.energy().energy_j() > clean.energy().energy_j());
+        // one-shot: the next round is back to clean costs
+        for sim in [&mut clean, &mut slow] {
+            sim.record(Lane::Cpu, Op::TrainStep { batch: 10 });
+        }
+        assert_eq!(slow.end_round(true).wall_ms, clean.end_round(true).wall_ms);
+        // sub-unity factors clamp to the neutral 1.0
+        clean.record(Lane::Cpu, Op::TrainStep { batch: 5 });
+        clean.set_round_slowdown(0.25);
+        let t = clean.end_round(false);
+        assert_eq!(t.wall_ms, t.cpu_ms);
+    }
+
+    #[test]
+    fn drain_energy_adds_joules_without_wall_time() {
+        let mut sim = DeviceSim::new("mlp");
+        sim.record(Lane::Cpu, Op::TrainStep { batch: 10 });
+        sim.end_round(true);
+        let base_e = sim.energy().energy_j();
+        let base_t = sim.total_ms();
+        sim.drain_energy(2.5);
+        assert_eq!(sim.energy().energy_j(), base_e + 2.5);
+        assert_eq!(sim.total_ms(), base_t);
+        // negative drains are ignored, not credited
+        sim.drain_energy(-10.0);
+        assert_eq!(sim.energy().energy_j(), base_e + 2.5);
     }
 
     #[test]

@@ -1,0 +1,467 @@
+//! Deterministic fault-injection plane.
+//!
+//! Titan's pitch is training under hostile edge conditions; this module
+//! makes those conditions reproducible. A [`FaultPlan`] is a pure
+//! function from `(session, round)` to an optional [`FaultKind`],
+//! derived from a seed and per-kind rates: the same plan always injects
+//! the same faults at the same points, so a chaos run is as replayable
+//! as a clean one. The fleet supervisor ([`crate::coordinator::host`])
+//! consumes the plan to crash, slow, brown-out or checkpoint-corrupt
+//! individual sessions, and its [`SupervisionPolicy`] decides what the
+//! fleet does about it; the federated orchestrator ([`crate::fl`])
+//! reuses the same plan as a per-device dropout/straggler model.
+//!
+//! Two pinned invariants (covered by unit + integration tests):
+//!
+//! - **Determinism** — same seed + rates ⇒ identical faults, and the
+//!   records they produce are byte-identical across runs.
+//! - **Zero-rate neutrality** — a plan with all rates zero injects
+//!   nothing, and every consumer's zero-plan output is bit-identical to
+//!   running without a plan at all.
+//!
+//! Rates are evaluated with a *single* uniform draw per `(session,
+//! round)` cell against cumulative thresholds, so at most one fault
+//! fires per cell and each kind's marginal frequency equals its rate.
+//! A scripted overlay ([`FaultPlan::script`]) pins exact faults at
+//! exact cells for tests; script entries take precedence over the
+//! seeded draw.
+
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+use crate::{Error, Result};
+
+/// One injected fault.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// The session's step fails; the supervisor decides recovery.
+    Crash,
+    /// A failure that clears on retry (the step is re-attempted and
+    /// succeeds; models flaky I/O / transient contention).
+    Transient,
+    /// The round's device clock is inflated by `slowdown` (≥ 1) on both
+    /// lanes — a thermally-throttled or contended device.
+    Straggler { slowdown: f64 },
+    /// The device battery drains an extra `joules` this round without
+    /// doing useful work (energy brown-out).
+    EnergyBrownout { joules: f64 },
+    /// The session's latest on-disk checkpoint is truncated before the
+    /// step, exercising the corrupt-snapshot recovery path.
+    CorruptCheckpoint,
+}
+
+impl FaultKind {
+    /// Stable telemetry/JSON tag.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::Transient => "transient",
+            FaultKind::Straggler { .. } => "straggler",
+            FaultKind::EnergyBrownout { .. } => "brownout",
+            FaultKind::CorruptCheckpoint => "corrupt_checkpoint",
+        }
+    }
+
+    fn to_json(self) -> Json {
+        match self {
+            FaultKind::Straggler { slowdown } => Json::obj(vec![
+                ("kind", Json::Str("straggler".into())),
+                ("slowdown", Json::Num(slowdown)),
+            ]),
+            FaultKind::EnergyBrownout { joules } => Json::obj(vec![
+                ("kind", Json::Str("brownout".into())),
+                ("joules", Json::Num(joules)),
+            ]),
+            other => Json::obj(vec![("kind", Json::Str(other.name().into()))]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<FaultKind> {
+        Ok(match j.get("kind")?.as_str()? {
+            "crash" => FaultKind::Crash,
+            "transient" => FaultKind::Transient,
+            "straggler" => FaultKind::Straggler { slowdown: j.get("slowdown")?.as_f64()? },
+            "brownout" => FaultKind::EnergyBrownout { joules: j.get("joules")?.as_f64()? },
+            "corrupt_checkpoint" => FaultKind::CorruptCheckpoint,
+            other => return Err(Error::Json(format!("unknown fault kind {other:?}"))),
+        })
+    }
+}
+
+/// Seeded per-session-per-round fault schedule. See the module docs for
+/// the determinism/neutrality contract.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed of the per-cell draws (independent of the training seed).
+    pub seed: u64,
+    /// Probability a cell crashes.
+    pub crash_rate: f64,
+    /// Probability a cell fails transiently (clears on retry).
+    pub transient_rate: f64,
+    /// Probability a cell straggles.
+    pub straggler_rate: f64,
+    /// Probability a cell brown-outs.
+    pub brownout_rate: f64,
+    /// Probability a cell corrupts its checkpoint before stepping.
+    pub corrupt_rate: f64,
+    /// Device-clock inflation of a straggler round (≥ 1).
+    pub straggler_slowdown: f64,
+    /// Extra joules drained by a brown-out round.
+    pub brownout_joules: f64,
+    /// Exact-cell overlay; takes precedence over the seeded draw.
+    script: Vec<(usize, usize, FaultKind)>,
+}
+
+impl FaultPlan {
+    /// A plan with the given seed and all rates zero (injects nothing
+    /// until rates are set or cells are scripted).
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            crash_rate: 0.0,
+            transient_rate: 0.0,
+            straggler_rate: 0.0,
+            brownout_rate: 0.0,
+            corrupt_rate: 0.0,
+            straggler_slowdown: 4.0,
+            brownout_joules: 5.0,
+            script: Vec::new(),
+        }
+    }
+
+    /// Pin an exact fault at `(session, round)`. Scripted cells override
+    /// the seeded draw; the first script entry for a cell wins.
+    pub fn script(mut self, session: usize, round: usize, kind: FaultKind) -> FaultPlan {
+        self.script.push((session, round, kind));
+        self
+    }
+
+    /// True when the plan can never inject anything.
+    pub fn is_zero(&self) -> bool {
+        self.script.is_empty()
+            && self.crash_rate == 0.0
+            && self.transient_rate == 0.0
+            && self.straggler_rate == 0.0
+            && self.brownout_rate == 0.0
+            && self.corrupt_rate == 0.0
+    }
+
+    /// Check rate/parameter sanity; consumers call this once up front so
+    /// a bad plan fails before any training work.
+    pub fn validate(&self) -> Result<()> {
+        let rates = [
+            ("crash-rate", self.crash_rate),
+            ("transient-rate", self.transient_rate),
+            ("straggler-rate", self.straggler_rate),
+            ("brownout-rate", self.brownout_rate),
+            ("corrupt-rate", self.corrupt_rate),
+        ];
+        for (name, r) in rates {
+            if !(0.0..=1.0).contains(&r) {
+                return Err(Error::Config(format!("fault {name} {r} outside [0, 1]")));
+            }
+        }
+        let sum: f64 = rates.iter().map(|(_, r)| r).sum();
+        if sum > 1.0 + 1e-12 {
+            return Err(Error::Config(format!("fault rates sum to {sum} > 1")));
+        }
+        if self.straggler_slowdown < 1.0 {
+            return Err(Error::Config(format!(
+                "straggler slowdown {} < 1",
+                self.straggler_slowdown
+            )));
+        }
+        if self.brownout_joules < 0.0 {
+            return Err(Error::Config(format!(
+                "brownout joules {} negative",
+                self.brownout_joules
+            )));
+        }
+        Ok(())
+    }
+
+    /// The fault injected at `(session, round)`, if any. Pure: the same
+    /// cell always returns the same answer for the same plan.
+    pub fn fault_for(&self, session: usize, round: usize) -> Option<FaultKind> {
+        for &(s, r, kind) in &self.script {
+            if s == session && r == round {
+                return Some(kind);
+            }
+        }
+        let total = self.crash_rate
+            + self.transient_rate
+            + self.straggler_rate
+            + self.brownout_rate
+            + self.corrupt_rate;
+        if total <= 0.0 {
+            return None;
+        }
+        // one independent draw per cell: the stream position of one cell
+        // can never perturb another, so fleets of different sizes or
+        // schedules see identical per-cell faults
+        let mut rng = Xoshiro256::seed_from_u64(self.seed ^ mix_cell(session, round));
+        let draw = rng.next_f64();
+        let mut acc = self.crash_rate;
+        if draw < acc {
+            return Some(FaultKind::Crash);
+        }
+        acc += self.transient_rate;
+        if draw < acc {
+            return Some(FaultKind::Transient);
+        }
+        acc += self.straggler_rate;
+        if draw < acc {
+            return Some(FaultKind::Straggler { slowdown: self.straggler_slowdown });
+        }
+        acc += self.brownout_rate;
+        if draw < acc {
+            return Some(FaultKind::EnergyBrownout { joules: self.brownout_joules });
+        }
+        acc += self.corrupt_rate;
+        if draw < acc {
+            return Some(FaultKind::CorruptCheckpoint);
+        }
+        None
+    }
+
+    pub fn to_json(&self) -> Json {
+        let script = Json::Arr(
+            self.script
+                .iter()
+                .map(|&(s, r, kind)| {
+                    let mut cell = kind.to_json();
+                    if let Json::Obj(map) = &mut cell {
+                        map.insert("session".into(), Json::Num(s as f64));
+                        map.insert("round".into(), Json::Num(r as f64));
+                    }
+                    cell
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("seed", Json::Str(format!("{:016x}", self.seed))),
+            ("crash_rate", Json::Num(self.crash_rate)),
+            ("transient_rate", Json::Num(self.transient_rate)),
+            ("straggler_rate", Json::Num(self.straggler_rate)),
+            ("brownout_rate", Json::Num(self.brownout_rate)),
+            ("corrupt_rate", Json::Num(self.corrupt_rate)),
+            ("straggler_slowdown", Json::Num(self.straggler_slowdown)),
+            ("brownout_joules", Json::Num(self.brownout_joules)),
+            ("script", script),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultPlan> {
+        let seed = u64::from_str_radix(j.get("seed")?.as_str()?, 16)
+            .map_err(|e| Error::Json(format!("bad fault seed: {e}")))?;
+        let mut plan = FaultPlan::new(seed);
+        plan.crash_rate = j.get("crash_rate")?.as_f64()?;
+        plan.transient_rate = j.get("transient_rate")?.as_f64()?;
+        plan.straggler_rate = j.get("straggler_rate")?.as_f64()?;
+        plan.brownout_rate = j.get("brownout_rate")?.as_f64()?;
+        plan.corrupt_rate = j.get("corrupt_rate")?.as_f64()?;
+        plan.straggler_slowdown = j.get("straggler_slowdown")?.as_f64()?;
+        plan.brownout_joules = j.get("brownout_joules")?.as_f64()?;
+        for cell in j.get("script")?.as_arr()? {
+            plan.script.push((
+                cell.get("session")?.as_usize()?,
+                cell.get("round")?.as_usize()?,
+                FaultKind::from_json(cell)?,
+            ));
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+/// Decorrelate the per-cell RNG streams (splitmix-style finalizer over
+/// the cell coordinates).
+fn mix_cell(session: usize, round: usize) -> u64 {
+    let mut h = (session as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((round as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    h ^= h >> 31;
+    h = h.wrapping_mul(0x94D0_49BB_1331_11EB);
+    h ^ (h >> 29)
+}
+
+/// What the fleet does when a session's step fails (injected or real).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SupervisionPolicy {
+    /// Abort the whole fleet on the first failure — the pre-supervision
+    /// behaviour, kept as the default oracle.
+    #[default]
+    FailFast,
+    /// Quarantine the failed session and keep scheduling the rest; the
+    /// `FleetRecord` reports a per-session terminal status.
+    Isolate,
+    /// Rebuild the dead session from its latest valid checkpoint (or
+    /// from scratch — same config + seed reproduces the run), park it
+    /// for `backoff_rounds` fleet ticks, then re-admit. After
+    /// `max_retries` restarts the session is quarantined instead.
+    Restart { max_retries: usize, backoff_rounds: usize },
+}
+
+impl SupervisionPolicy {
+    /// Stable record/CLI tag.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SupervisionPolicy::FailFast => "failfast",
+            SupervisionPolicy::Isolate => "isolate",
+            SupervisionPolicy::Restart { .. } => "restart",
+        }
+    }
+}
+
+/// Parse a `--supervise` argument. `restart` takes optional
+/// `:max_retries:backoff_rounds` suffixes (default `restart:3:1`).
+pub fn parse_supervision(s: &str) -> Result<SupervisionPolicy> {
+    let mut parts = s.split(':');
+    let head = parts.next().unwrap_or("");
+    let policy = match head {
+        "failfast" => SupervisionPolicy::FailFast,
+        "isolate" => SupervisionPolicy::Isolate,
+        "restart" => {
+            let max_retries = match parts.next() {
+                None => 3,
+                Some(v) => v
+                    .parse()
+                    .map_err(|_| Error::Config(format!("bad restart max_retries {v:?}")))?,
+            };
+            let backoff_rounds = match parts.next() {
+                None => 1,
+                Some(v) => v
+                    .parse()
+                    .map_err(|_| Error::Config(format!("bad restart backoff_rounds {v:?}")))?,
+            };
+            SupervisionPolicy::Restart { max_retries, backoff_rounds }
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "unknown supervision policy {other:?} (failfast|isolate|restart[:retries[:backoff]])"
+            )))
+        }
+    };
+    if parts.next().is_some() {
+        return Err(Error::Config(format!("trailing fields in supervision spec {s:?}")));
+    }
+    Ok(policy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_plan_injects_nothing() {
+        let plan = FaultPlan::new(42);
+        assert!(plan.is_zero());
+        for s in 0..8 {
+            for r in 0..64 {
+                assert_eq!(plan.fault_for(s, r), None);
+            }
+        }
+    }
+
+    #[test]
+    fn same_seed_same_faults_different_seed_differs() {
+        let mut a = FaultPlan::new(7);
+        a.crash_rate = 0.3;
+        a.straggler_rate = 0.3;
+        let b = a.clone();
+        let mut c = a.clone();
+        c.seed = 8;
+        let grid = |p: &FaultPlan| -> Vec<Option<FaultKind>> {
+            (0..4).flat_map(|s| (0..32).map(move |r| (s, r))).map(|(s, r)| p.fault_for(s, r)).collect()
+        };
+        assert_eq!(grid(&a), grid(&b));
+        assert_ne!(grid(&a), grid(&c), "different fault seeds agree on a 128-cell grid");
+    }
+
+    #[test]
+    fn rates_govern_frequency() {
+        let mut plan = FaultPlan::new(99);
+        plan.crash_rate = 1.0;
+        for s in 0..4 {
+            for r in 0..16 {
+                assert_eq!(plan.fault_for(s, r), Some(FaultKind::Crash));
+            }
+        }
+        // cumulative split: every cell draws exactly one fault when the
+        // rates sum to 1, with each kind's share near its rate
+        let mut plan = FaultPlan::new(5);
+        plan.crash_rate = 0.5;
+        plan.straggler_rate = 0.5;
+        let mut crashes = 0;
+        let n = 1000;
+        for cell in 0..n {
+            match plan.fault_for(cell % 7, cell) {
+                Some(FaultKind::Crash) => crashes += 1,
+                Some(FaultKind::Straggler { .. }) => {}
+                other => panic!("rates sum to 1 but cell {cell} drew {other:?}"),
+            }
+        }
+        assert!((350..=650).contains(&crashes), "crash share {crashes}/{n}");
+    }
+
+    #[test]
+    fn scripted_cells_override_seeded_draw() {
+        let mut plan = FaultPlan::new(3);
+        plan.crash_rate = 1.0;
+        let plan = plan.script(1, 2, FaultKind::Straggler { slowdown: 2.0 });
+        assert!(!plan.is_zero());
+        assert_eq!(plan.fault_for(1, 2), Some(FaultKind::Straggler { slowdown: 2.0 }));
+        assert_eq!(plan.fault_for(1, 3), Some(FaultKind::Crash));
+        assert_eq!(plan.fault_for(0, 2), Some(FaultKind::Crash));
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let mut plan = FaultPlan::new(u64::MAX - 3);
+        plan.crash_rate = 0.1;
+        plan.transient_rate = 0.2;
+        plan.straggler_rate = 0.3;
+        plan.brownout_rate = 0.05;
+        plan.corrupt_rate = 0.01;
+        plan.straggler_slowdown = 3.5;
+        plan.brownout_joules = 0.1 + 0.2; // no short decimal form
+        let plan = plan
+            .script(0, 4, FaultKind::CorruptCheckpoint)
+            .script(2, 1, FaultKind::EnergyBrownout { joules: 7.25 });
+        let text = plan.to_json().to_string_compact();
+        let back = FaultPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(plan, back);
+    }
+
+    #[test]
+    fn validate_rejects_bad_plans() {
+        let mut plan = FaultPlan::new(1);
+        plan.crash_rate = -0.1;
+        assert!(plan.validate().is_err());
+        plan.crash_rate = 0.8;
+        plan.straggler_rate = 0.5;
+        assert!(plan.validate().is_err(), "rates sum > 1");
+        plan.straggler_rate = 0.1;
+        plan.straggler_slowdown = 0.5;
+        assert!(plan.validate().is_err(), "slowdown < 1");
+        plan.straggler_slowdown = 2.0;
+        plan.validate().unwrap();
+    }
+
+    #[test]
+    fn supervision_parsing() {
+        assert_eq!(parse_supervision("failfast").unwrap(), SupervisionPolicy::FailFast);
+        assert_eq!(parse_supervision("isolate").unwrap(), SupervisionPolicy::Isolate);
+        assert_eq!(
+            parse_supervision("restart").unwrap(),
+            SupervisionPolicy::Restart { max_retries: 3, backoff_rounds: 1 }
+        );
+        assert_eq!(
+            parse_supervision("restart:5:0").unwrap(),
+            SupervisionPolicy::Restart { max_retries: 5, backoff_rounds: 0 }
+        );
+        assert!(parse_supervision("reboot").is_err());
+        assert!(parse_supervision("restart:x").is_err());
+        assert!(parse_supervision("restart:1:2:3").is_err());
+        assert_eq!(SupervisionPolicy::default(), SupervisionPolicy::FailFast);
+    }
+}

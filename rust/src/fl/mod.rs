@@ -26,6 +26,18 @@
 //! and the FedAvg float-accumulation order, so numeric results are
 //! reproducible per (seed, policy), not across policies.
 //!
+//! Real federated rounds lose devices. [`FlBuilder::fault_plan`] reuses
+//! the fleet's deterministic [`FaultPlan`] as a per-device dropout and
+//! straggler model: each *sampled* device consults
+//! `plan.fault_for(device, comm_round)` — a crash kills the device for
+//! the rest of the run, a transient failure or brown-out drops it for
+//! this round only, and an injected slowdown beyond
+//! [`FlBuilder::straggler_deadline`] misses the round deadline and is
+//! cut. FedAvg then aggregates **survivors only**, weighting by actual
+//! participation (a zero-survivor round leaves the global model
+//! untouched); the coordinator's sampling stream never depends on the
+//! plan, so a zero-rate plan is bit-identical to no plan at all.
+//!
 //! Implementation note: devices share one `ModelRuntime` (Full role) and
 //! swap parameter vectors in/out — functionally identical to 50 separate
 //! processes, and the only tractable layout on a one-core host.
@@ -35,6 +47,7 @@ use crate::coordinator::host::{pick_validated, RoundRobin, SchedPolicy, TaskStat
 use crate::coordinator::session::{Control, RoundObserver};
 use crate::coordinator::RoundOutcome;
 use crate::data::{ClassSubsetSource, DataSource, Sample, SynthTask};
+use crate::fault::{FaultKind, FaultPlan};
 use crate::metrics::{CurvePoint, RunRecord};
 use crate::runtime::model::{ModelRuntime, RuntimeRole};
 use crate::selection::{make_strategy, SelectionContext};
@@ -96,6 +109,8 @@ pub struct FlBuilder {
     sources: Option<Vec<Box<dyn DataSource>>>,
     observers: Vec<Box<dyn RoundObserver>>,
     policy: Box<dyn SchedPolicy>,
+    fault_plan: Option<FaultPlan>,
+    straggler_deadline: f64,
 }
 
 impl FlBuilder {
@@ -105,7 +120,28 @@ impl FlBuilder {
             sources: None,
             observers: Vec::new(),
             policy: Box::new(RoundRobin::new()),
+            fault_plan: None,
+            straggler_deadline: 8.0,
         }
+    }
+
+    /// Attach a deterministic per-device fault plan; validated at run.
+    /// Cells are `(device, comm_round)`, consulted only for sampled
+    /// devices: crash = dead for the rest of the run, transient /
+    /// brown-out = dropped this round, straggler = cut iff its slowdown
+    /// exceeds the [`FlBuilder::straggler_deadline`].
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
+    /// Straggler tolerance (default 8×): an injected slowdown at or
+    /// under the deadline is tolerated — it costs only simulated device
+    /// time, which FL does not model — while a slower device misses the
+    /// round deadline and is cut from aggregation.
+    pub fn straggler_deadline(mut self, deadline: f64) -> Self {
+        self.straggler_deadline = deadline;
+        self
     }
 
     /// Replace the default round-robin device-dispatch order. The policy
@@ -134,7 +170,19 @@ impl FlBuilder {
 
     /// Run the federated experiment; returns the global-model run record.
     pub fn run(self) -> Result<RunRecord> {
-        let FlBuilder { cfg, sources, mut observers, mut policy } = self;
+        Ok(self.run_with_faults()?.0)
+    }
+
+    /// [`FlBuilder::run`], also returning the per-comm-round fault log
+    /// (one [`FlRoundFaults`] per executed round; every entry has an
+    /// empty `dropped` list when no plan — or a zero-rate one — is
+    /// attached).
+    pub fn run_with_faults(self) -> Result<(RunRecord, Vec<FlRoundFaults>)> {
+        let FlBuilder { cfg, sources, mut observers, mut policy, fault_plan, straggler_deadline } =
+            self;
+        if let Some(plan) = &fault_plan {
+            plan.validate()?;
+        }
         let base = &cfg.base;
         let task = SynthTask::for_model(&base.model, base.seed);
         let test = task.test_set(base.test_size, base.seed);
@@ -210,15 +258,49 @@ impl FlBuilder {
         // device last dispatched in, so staleness-in-comm-rounds is the
         // difference — no per-round aging pass over all devices)
         let mut dev_states = vec![TaskState::default(); cfg.num_devices];
+        // devices an injected Crash permanently removed
+        let mut dead = vec![false; cfg.num_devices];
+        let mut fault_log: Vec<FlRoundFaults> = Vec::new();
 
         for round in 0..cfg.comm_rounds {
             let chosen = orchestrator_rng.sample_indices(cfg.num_devices, per_round);
+            // dropout filtering happens *after* sampling: the coordinator
+            // samples blind (it cannot know who will fail), so the
+            // sampling stream — and with a zero-rate plan the whole run —
+            // is independent of the fault plan
+            let mut dropped: Vec<(usize, &'static str)> = Vec::new();
+            let mut survivors: Vec<usize> = Vec::with_capacity(chosen.len());
+            for &d in &chosen {
+                if dead[d] {
+                    dropped.push((d, "crash"));
+                    continue;
+                }
+                match fault_plan.as_ref().and_then(|p| p.fault_for(d, round)) {
+                    Some(FaultKind::Crash) => {
+                        dead[d] = true;
+                        dropped.push((d, "crash"));
+                    }
+                    Some(FaultKind::Transient) => dropped.push((d, "transient")),
+                    Some(FaultKind::EnergyBrownout { .. }) => dropped.push((d, "brownout")),
+                    Some(FaultKind::Straggler { slowdown })
+                        if slowdown > straggler_deadline =>
+                    {
+                        dropped.push((d, "straggler"));
+                    }
+                    // a tolerated straggler only costs simulated device
+                    // time (unmodelled here); checkpoint corruption has
+                    // no target in FL — both participate normally
+                    _ => survivors.push(d),
+                }
+            }
+            fault_log.push(FlRoundFaults { round, dropped, survivors: survivors.len() });
             let mut acc: Vec<f64> = vec![0.0; global.len()];
             let mut last_loss = 0.0f32;
             // this comm round's device work drains in policy order, not
             // sample order — the same dispatch seam the session Fleet uses
-            let mut ready = chosen.clone();
+            let mut ready = survivors;
             ready.sort_unstable();
+            let participants = ready.len();
             // (re)index the policy over this round's participants — a
             // picked device leaves the ready set, so no task_ran re-adds
             policy.prepare(&dev_states, &ready);
@@ -269,9 +351,14 @@ impl FlBuilder {
                     *a += p as f64;
                 }
             }
-            // FedAvg
-            for (g, a) in global.iter_mut().zip(&acc) {
-                *g = (a / chosen.len() as f64) as f32;
+            // participation-weighted FedAvg: average over the devices
+            // that actually reported (identical to the historical
+            // all-participants average when nothing dropped); a
+            // zero-survivor round leaves the global model untouched
+            if participants > 0 {
+                for (g, a) in global.iter_mut().zip(&acc) {
+                    *g = (a / participants as f64) as f32;
+                }
             }
 
             let mut stop = false;
@@ -309,8 +396,21 @@ impl FlBuilder {
         let final_eval = rt.evaluate(&test)?;
         record.final_accuracy = final_eval.accuracy;
         record.total_host_ms = sw.elapsed_ms();
-        Ok(record)
+        Ok((record, fault_log))
     }
+}
+
+/// Fault activity of one federated communication round.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FlRoundFaults {
+    /// The comm round.
+    pub round: usize,
+    /// Sampled devices that did not report, with the fault tag that
+    /// dropped them ([`FaultKind::name`]); a permanently crashed device
+    /// reappears here every round it is sampled in.
+    pub dropped: Vec<(usize, &'static str)>,
+    /// Sampled devices that reported and were aggregated.
+    pub survivors: usize,
 }
 
 /// Run the FL experiment with the paper's default device partition;
@@ -463,6 +563,92 @@ mod tests {
             .unwrap();
         assert_eq!(rec.curve.len(), 1, "stopped at the first checkpoint");
         assert!(rec.final_accuracy.is_finite());
+    }
+
+    // bad fault plans are rejected before any artifact loading, so this
+    // needs no artifact gate
+    #[test]
+    fn rejects_bad_fault_plan() {
+        let mut plan = FaultPlan::new(1);
+        plan.crash_rate = 2.0;
+        let err = FlBuilder::new(tiny_fl(Method::Rs)).fault_plan(plan).run().unwrap_err();
+        assert!(err.to_string().contains("outside [0, 1]"), "got: {err}");
+    }
+
+    /// Zero-rate-plan neutrality, FL flavor: attaching an all-zero plan
+    /// must leave the run bit-identical to no plan at all, with an empty
+    /// fault log every round.
+    #[test]
+    fn zero_rate_plan_is_bit_identical() {
+        if !have_artifacts() {
+            return;
+        }
+        let plain = FlBuilder::new(tiny_fl(Method::Rs)).run().unwrap();
+        let (faulted, log) = FlBuilder::new(tiny_fl(Method::Rs))
+            .fault_plan(FaultPlan::new(11))
+            .run_with_faults()
+            .unwrap();
+        assert_eq!(plain.final_accuracy, faulted.final_accuracy);
+        assert_eq!(plain.curve.len(), faulted.curve.len());
+        for (a, b) in plain.curve.iter().zip(&faulted.curve) {
+            assert_eq!(a.test_accuracy, b.test_accuracy);
+            assert_eq!(a.test_loss, b.test_loss);
+            assert_eq!(a.train_loss, b.train_loss);
+        }
+        assert_eq!(log.len(), 4);
+        assert!(log.iter().all(|r| r.dropped.is_empty()));
+    }
+
+    /// Total dropout: with every sampled device crashing, FedAvg never
+    /// updates and the global model stays at its deterministic init —
+    /// the run completes instead of dividing by zero.
+    #[test]
+    fn total_dropout_freezes_the_global_model() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut plan = FaultPlan::new(2);
+        plan.crash_rate = 1.0;
+        let (rec, log) = FlBuilder::new(tiny_fl(Method::Rs))
+            .fault_plan(plan)
+            .run_with_faults()
+            .unwrap();
+        assert!(log.iter().all(|r| r.survivors == 0 && !r.dropped.is_empty()));
+        assert!(log.iter().flat_map(|r| &r.dropped).all(|&(_, kind)| kind == "crash"));
+        // frozen model => every eval checkpoint sees identical accuracy
+        assert!(rec.curve.windows(2).all(|w| w[0].test_accuracy == w[1].test_accuracy));
+        assert!(rec.final_accuracy.is_finite());
+    }
+
+    /// The straggler deadline separates tolerated from cut slowdowns:
+    /// a generous deadline reproduces the plain run bit-for-bit, a tight
+    /// one drops every straggling device.
+    #[test]
+    fn straggler_deadline_gates_the_cut() {
+        if !have_artifacts() {
+            return;
+        }
+        let slow = |deadline: f64| {
+            let cfg = tiny_fl(Method::Rs);
+            let mut plan = FaultPlan::new(0);
+            for d in 0..cfg.num_devices {
+                plan = plan.script(d, 0, FaultKind::Straggler { slowdown: 16.0 });
+            }
+            FlBuilder::new(cfg)
+                .fault_plan(plan)
+                .straggler_deadline(deadline)
+                .run_with_faults()
+                .unwrap()
+        };
+        let plain = FlBuilder::new(tiny_fl(Method::Rs)).run().unwrap();
+        let (tolerated, log) = slow(100.0);
+        assert!(log.iter().all(|r| r.dropped.is_empty()));
+        assert_eq!(plain.final_accuracy, tolerated.final_accuracy);
+        let (_cut, log) = slow(2.0);
+        assert!(!log[0].dropped.is_empty(), "16x stragglers at round 0 must miss a 2x deadline");
+        assert!(log[0].dropped.iter().all(|&(_, kind)| kind == "straggler"));
+        assert_eq!(log[0].survivors, 0);
+        assert!(log[1..].iter().all(|r| r.dropped.is_empty()), "stragglers recover next round");
     }
 
     /// The default partition must match the pre-builder orchestrator's

@@ -30,6 +30,10 @@
 //!   or fleet resumes byte-identically from its last on-disk snapshot;
 //!   `sequential`/`pipeline` remain as deprecated shims.
 //! - [`device`] — edge-device timing, memory and energy simulation.
+//! - [`fault`] — the deterministic fault-injection plane: seeded
+//!   [`fault::FaultPlan`]s (crash / transient / straggler / brown-out /
+//!   checkpoint-corruption) and the fleet's [`fault::SupervisionPolicy`]
+//!   (fail-fast / isolate / restart).
 //! - [`fl`] — federated-learning orchestration (paper Appendix B), built
 //!   on the same data-source/observer seams via `fl::FlBuilder`.
 //! - [`metrics`] — trackers and result emission.
@@ -40,6 +44,7 @@ pub mod coordinator;
 pub mod data;
 pub mod device;
 pub mod exp;
+pub mod fault;
 pub mod filter;
 pub mod fl;
 pub mod metrics;
@@ -60,6 +65,15 @@ pub enum Error {
     Json(String),
     #[error("config error: {0}")]
     Config(String),
+    #[error("checkpoint {path}: {stage}: {detail}")]
+    Checkpoint {
+        /// The snapshot file that failed to load.
+        path: String,
+        /// Which stage failed: "read", "parse", "version", "field" or
+        /// "fingerprint".
+        stage: &'static str,
+        detail: String,
+    },
     #[error("artifact error: {0}")]
     Artifact(String),
     #[error("pipeline error: {0}")]

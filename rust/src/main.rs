@@ -73,6 +73,11 @@ fn print_usage() {
     println!("          sessions interleave round-by-round on the host scheduler)");
     println!("          [--checkpoint-dir DIR] [--checkpoint-every K]  per-member snapshots");
     println!("          [--resume DIR]  restart each member at its own saved round");
+    println!("          [--fault-seed N] [--crash-rate F] [--transient-rate F]");
+    println!("          [--straggler-rate F] [--brownout-rate F] [--corrupt-rate F]");
+    println!("          deterministic fault injection per (session, round) cell");
+    println!("          [--supervise failfast|isolate|restart[:retries[:backoff]]]");
+    println!("          what the scheduler does about failures (default failfast)");
     println!("  exp     <id> [--fast] [--models a,b|all] [--seed N]   (exp list: ids)");
     println!("  fl      --model <m> --method <m> [--fast]");
     println!("  models  [--artifacts DIR]");
@@ -184,12 +189,73 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build one fleet member's `SessionBuilder` from its (validated) config,
+/// source kind, and fleet index. Factored out of [`cmd_fleet`] so restart
+/// supervision can re-run the exact same construction when it rebuilds a
+/// crashed member: every source here derives its randomness from `cfg`
+/// fields, so a rebuild is deterministic.
+fn fleet_member_builder(cfg: &RunConfig, kind: &str, i: usize) -> Result<SessionBuilder> {
+    use titan::coordinator::session::default_source;
+    use titan::data::{ClassSubsetSource, DriftSource, ReplaySource, SynthTask};
+
+    let builder = SessionBuilder::new(cfg.clone());
+    Ok(match kind {
+        "stream" => builder, // the default synthetic stream
+        "replay" => {
+            let mut stream = default_source(cfg);
+            builder.source(ReplaySource::capture(&mut stream, cfg.stream_per_round * 2)?)
+        }
+        "subset" => {
+            let task = SynthTask::for_model(&cfg.model, cfg.seed);
+            let c = task.num_classes();
+            let k = (c / 2).max(1);
+            let classes: Vec<u32> = (0..k).map(|j| ((i + j) % c) as u32).collect();
+            builder.source(ClassSubsetSource::new(task, classes, cfg.seed ^ 0xF1EE7)?)
+        }
+        "drift" => {
+            let task = SynthTask::for_model(&cfg.model, cfg.seed);
+            let c = task.num_classes();
+            // continual shape: uniform mix drifting toward this
+            // session's "home" classes over the first half of the run
+            let start = vec![1.0; c];
+            let end: Vec<f64> = (0..c)
+                .map(|y| if y % 2 == i % 2 { 3.0 } else { 0.25 })
+                .collect();
+            let drift_rounds = (cfg.rounds / 2).max(1);
+            let seed = cfg.seed ^ 0xD21F7;
+            builder.source(DriftSource::new(task, start, end, drift_rounds, seed)?)
+        }
+        other => {
+            return Err(titan::Error::Config(format!(
+                "unknown source kind {other:?} (stream|replay|subset|drift)"
+            )))
+        }
+    })
+}
+
+/// Assemble the fleet's fault plan from CLI flags. Returns `None` when no
+/// fault flag was given at all, so the default CLI path carries no plan
+/// (a zero-rate plan is behaviorally identical, but `None` keeps the
+/// record's JSON shape unchanged for existing consumers).
+fn fleet_fault_plan(args: &Args) -> Result<Option<titan::fault::FaultPlan>> {
+    let mut plan = titan::fault::FaultPlan::new(args.get_u64("fault-seed", 0)?);
+    plan.crash_rate = args.get_f64("crash-rate", 0.0)?;
+    plan.transient_rate = args.get_f64("transient-rate", 0.0)?;
+    plan.straggler_rate = args.get_f64("straggler-rate", 0.0)?;
+    plan.brownout_rate = args.get_f64("brownout-rate", 0.0)?;
+    plan.corrupt_rate = args.get_f64("corrupt-rate", 0.0)?;
+    if args.get("fault-seed").is_none() && plan.is_zero() {
+        return Ok(None);
+    }
+    plan.validate()?;
+    Ok(Some(plan))
+}
+
 /// `titan fleet` — N concurrent device sessions multiplexed on the host
 /// scheduler, with methods and data sources cycling per session.
 fn cmd_fleet(args: &Args) -> Result<()> {
     use titan::coordinator::host::{parse_policy, FleetBuilder, FleetProgress};
-    use titan::coordinator::session::default_source;
-    use titan::data::{ClassSubsetSource, DriftSource, ReplaySource, SynthTask};
+    use titan::fault::{parse_supervision, SupervisionPolicy};
 
     let n = args.get_usize("sessions", 3)?;
     if n == 0 {
@@ -208,6 +274,8 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         return Err(titan::Error::Config("--sources must name at least one source".into()));
     }
     let policy = parse_policy(&args.get_str("policy", "rr"))?;
+    let supervise = parse_supervision(&args.get_str("supervise", "failfast"))?;
+    let fault_plan = fleet_fault_plan(args)?;
 
     // --resume DIR restarts each member from DIR/<name>.json and keeps
     // checkpointing there (members whose snapshot marks a finished run
@@ -226,7 +294,15 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 
     let mut fleet = FleetBuilder::new()
         .policy_boxed(policy)
+        .supervise(supervise)
         .observe(FleetProgress::every(10));
+    if let Some(plan) = &fault_plan {
+        fleet = fleet.fault_plan(plan.clone());
+    }
+    // restart supervision needs a way to rebuild a crashed member from
+    // scratch; everyone else keeps the plain (factory-free) registration
+    // so the default path is exactly what it was
+    let restartable = matches!(supervise, SupervisionPolicy::Restart { .. });
     for i in 0..n {
         let method = methods[i % methods.len()];
         let mut cfg = presets::table1(&args.get_str("model", "mlp"), method).apply_args(args)?;
@@ -242,49 +318,25 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         cfg.validate()?;
 
         let kind = source_kinds[i % source_kinds.len()].clone();
-        let mut builder = SessionBuilder::new(cfg.clone());
-        builder = match kind.as_str() {
-            "stream" => builder, // the default synthetic stream
-            "replay" => {
-                let mut stream = default_source(&cfg);
-                builder.source(ReplaySource::capture(&mut stream, cfg.stream_per_round * 2)?)
-            }
-            "subset" => {
-                let task = SynthTask::for_model(&cfg.model, cfg.seed);
-                let c = task.num_classes();
-                let k = (c / 2).max(1);
-                let classes: Vec<u32> = (0..k).map(|j| ((i + j) % c) as u32).collect();
-                builder.source(ClassSubsetSource::new(task, classes, cfg.seed ^ 0xF1EE7)?)
-            }
-            "drift" => {
-                let task = SynthTask::for_model(&cfg.model, cfg.seed);
-                let c = task.num_classes();
-                // continual shape: uniform mix drifting toward this
-                // session's "home" classes over the first half of the run
-                let start = vec![1.0; c];
-                let end: Vec<f64> = (0..c)
-                    .map(|y| if y % 2 == i % 2 { 3.0 } else { 0.25 })
-                    .collect();
-                let drift_rounds = (cfg.rounds / 2).max(1);
-                let seed = cfg.seed ^ 0xD21F7;
-                builder.source(DriftSource::new(task, start, end, drift_rounds, seed)?)
-            }
-            other => {
-                return Err(titan::Error::Config(format!(
-                    "unknown source kind {other:?} (stream|replay|subset|drift)"
-                )))
-            }
-        };
         let name = format!("s{i}-{}-{kind}", method.name());
-        fleet = match &ck_dir {
-            Some(dir) => fleet.session_checkpointed(
+        let factory = move || fleet_member_builder(&cfg, &kind, i);
+        fleet = match (&ck_dir, restartable) {
+            (Some(dir), true) => fleet.session_checkpointed_restartable(
                 name.clone(),
-                builder,
+                factory,
                 dir.join(format!("{name}.json")),
                 ck_every,
                 resume_dir.is_some(),
             )?,
-            None => fleet.session(name, builder.build()?),
+            (Some(dir), false) => fleet.session_checkpointed(
+                name.clone(),
+                factory()?,
+                dir.join(format!("{name}.json")),
+                ck_every,
+                resume_dir.is_some(),
+            )?,
+            (None, true) => fleet.session_restartable(name, factory)?,
+            (None, false) => fleet.session(name, factory()?.build()?),
         };
     }
     if fleet.is_empty() {
@@ -298,29 +350,65 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         .iter()
         .zip(&record.records)
         .zip(&record.session_rounds)
-        .map(|((name, rec), &rounds)| {
-            vec![
+        .zip(&record.statuses)
+        .map(|(((name, rec), &rounds), status)| match rec {
+            Some(rec) => vec![
                 name.clone(),
                 rounds.to_string(),
                 format!("{:.2}", rec.final_accuracy * 100.0),
                 format!("{:.1}", rec.total_device_ms / 1e3),
                 format!("{:.0}", rec.energy_j),
-            ]
+                status.label().to_string(),
+            ],
+            // a quarantined member has no final record
+            None => vec![
+                name.clone(),
+                rounds.to_string(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                status.label().to_string(),
+            ],
         })
         .collect();
+    // surface why each quarantined member was given up on (the table
+    // only has room for the status label)
+    for (name, status) in record.names.iter().zip(&record.statuses) {
+        if let titan::coordinator::SessionStatus::Quarantined { round, reason } = status {
+            println!("quarantined {name:?} at round {round}: {reason}");
+        }
+    }
     println!(
-        "fleet: {} sessions, policy {}, {} interleaved rounds",
+        "fleet: {} sessions ({} finished), policy {}, supervision {}, {} interleaved rounds",
         record.records.len(),
+        record.finished(),
         record.policy,
+        record.supervision,
         record.rounds_executed
     );
     println!(
         "{}",
         render_table(
-            &["session", "rounds", "final_acc_%", "device_s", "energy_J"],
+            &["session", "rounds", "final_acc_%", "device_s", "energy_J", "status"],
             &rows
         )
     );
+    if record.fault_plan.is_some() || record.faults.total() > 0 {
+        let f = &record.faults;
+        println!(
+            "faults: {} injected (crash {}, transient {}, straggler {}, brownout {}, corrupt {}); \
+             {} restarts, {} quarantines, {} rounds recovered",
+            f.total(),
+            f.crashes,
+            f.transients,
+            f.stragglers,
+            f.brownouts,
+            f.corruptions,
+            f.restarts,
+            f.quarantines,
+            f.rounds_recovered
+        );
+    }
     println!(
         "host: {:.1}s wall, scheduler overhead {:.3} ms/round, {} device ops, {:.1} MiB resident",
         record.total_host_ms / 1e3,

@@ -9,9 +9,10 @@
 use titan::config::{presets, Method, NoiseKind, RunConfig};
 use titan::coordinator::host::{parse_policy, FleetBuilder};
 use titan::coordinator::session::observers::EarlyStop;
-use titan::coordinator::{Session, SessionBuilder, StepEvent};
+use titan::coordinator::{Session, SessionBuilder, SessionStatus, StepEvent};
 use titan::data::{DataSource, DriftSource, ReplaySource, StreamSource, SynthTask};
 use titan::device::idle::IdleTrace;
+use titan::fault::{FaultKind, FaultPlan, SupervisionPolicy};
 use titan::metrics::RunRecord;
 
 fn have_artifacts() -> bool {
@@ -331,8 +332,9 @@ fn fleet_sessions_match_solo_runs_under_every_policy() {
         assert_eq!(record.records.len(), 3, "{policy}");
         assert_eq!(record.session_rounds, vec![6, 4, 5], "{policy}");
         assert_eq!(record.rounds_executed, 15, "{policy}");
+        assert!(record.statuses.iter().all(|s| s.is_finished()), "{policy}");
         for (f, s) in record.records.iter().zip(&solo) {
-            assert_records_equivalent(f, s);
+            assert_records_equivalent(f.as_ref().expect("finished member has a record"), s);
         }
         // aggregate accounting is the sum of the solo runs
         let want_device: f64 = solo.iter().map(|r| r.total_device_ms).sum();
@@ -387,7 +389,10 @@ fn killed_fleet_resumes_each_member_at_its_own_round() {
     // post-resume rounds only: (6-4, 4-2, 5-2)
     assert_eq!(record.session_rounds, vec![2, 2, 3]);
     for (resumed, uninterrupted) in record.records.iter().zip(&solo) {
-        assert_records_equivalent(resumed, uninterrupted);
+        assert_records_equivalent(
+            resumed.as_ref().expect("finished member has a record"),
+            uninterrupted,
+        );
     }
     // every member's file now marks completion...
     for i in 0..3 {
@@ -445,6 +450,189 @@ fn drift_source_through_titan_session() {
     assert_eq!(outcomes.len(), 12);
     assert!(record.final_accuracy.is_finite());
     assert!(outcomes.iter().all(|o| o.selector.candidates <= cfg.candidate_size));
+}
+
+/// Option-record equivalence: presence must agree, and present records
+/// must match on every deterministic field.
+fn assert_opt_records_equivalent(a: &Option<RunRecord>, b: &Option<RunRecord>) {
+    match (a, b) {
+        (Some(x), Some(y)) => assert_records_equivalent(x, y),
+        (None, None) => {}
+        _ => panic!("one record present, the other missing"),
+    }
+}
+
+/// The fault plane's first determinism pin: a zero-rate fault plan under
+/// every supervision policy is bit-identical to today's fleet with no
+/// plan at all — same records, rounds, statuses, and (empty) telemetry.
+#[test]
+fn zero_rate_fault_plan_is_bit_identical_under_every_supervision() {
+    if !have_artifacts() {
+        return;
+    }
+    let baseline = {
+        let mut fleet = FleetBuilder::new();
+        for i in 0..3 {
+            fleet = fleet.session(format!("s{i}"), fleet_member(i));
+        }
+        fleet.run().unwrap()
+    };
+    assert!(baseline.statuses.iter().all(|s| s.is_finished()));
+    for supervise in [
+        SupervisionPolicy::FailFast,
+        SupervisionPolicy::Isolate,
+        SupervisionPolicy::Restart { max_retries: 3, backoff_rounds: 1 },
+    ] {
+        let mut fleet = FleetBuilder::new()
+            .supervise(supervise)
+            .fault_plan(FaultPlan::new(0xD15EA5E));
+        for i in 0..3 {
+            // restart supervision wants a factory; give everyone one
+            fleet = fleet
+                .session_restartable(format!("s{i}"), move || Ok(fleet_member_builder(i)))
+                .unwrap();
+        }
+        let record = fleet.run().unwrap();
+        assert_eq!(record.session_rounds, baseline.session_rounds, "{supervise:?}");
+        assert_eq!(record.rounds_executed, baseline.rounds_executed, "{supervise:?}");
+        assert_eq!(record.statuses, baseline.statuses, "{supervise:?}");
+        assert_eq!(record.faults, baseline.faults, "{supervise:?}");
+        assert_eq!(record.total_device_ms, baseline.total_device_ms, "{supervise:?}");
+        assert_eq!(record.energy_j, baseline.energy_j, "{supervise:?}");
+        assert_eq!(record.peak_memory_bytes, baseline.peak_memory_bytes, "{supervise:?}");
+        for (a, b) in record.records.iter().zip(&baseline.records) {
+            assert_opt_records_equivalent(a, b);
+        }
+    }
+}
+
+/// The ISSUE's isolate pin: a 3-member fleet with one scripted crasher
+/// completes with 2 finished members (whose records are untouched by the
+/// neighbour's crash) and 1 quarantined member.
+#[test]
+fn isolate_quarantines_the_crasher_and_finishes_the_rest() {
+    if !have_artifacts() {
+        return;
+    }
+    let solo: Vec<RunRecord> = (0..3).map(|i| fleet_member(i).run().unwrap().0).collect();
+    let plan = FaultPlan::new(1).script(1, 2, FaultKind::Crash);
+    let mut fleet = FleetBuilder::new()
+        .supervise(SupervisionPolicy::Isolate)
+        .fault_plan(plan);
+    for i in 0..3 {
+        fleet = fleet.session(format!("s{i}"), fleet_member(i));
+    }
+    let record = fleet.run().unwrap();
+    assert_eq!(record.finished(), 2);
+    assert!(record.statuses[0].is_finished());
+    assert!(record.statuses[2].is_finished());
+    match &record.statuses[1] {
+        SessionStatus::Quarantined { round, reason } => {
+            assert_eq!(*round, 2);
+            assert!(reason.contains("injected crash"), "{reason}");
+        }
+        other => panic!("expected quarantine, got {other:?}"),
+    }
+    assert!(record.records[1].is_none());
+    assert_records_equivalent(record.records[0].as_ref().unwrap(), &solo[0]);
+    assert_records_equivalent(record.records[2].as_ref().unwrap(), &solo[2]);
+    assert_eq!(record.faults.crashes, 1);
+    assert_eq!(record.faults.quarantines, 1);
+    // aggregate accounting only counts finished members
+    assert_eq!(
+        record.peak_memory_bytes,
+        solo[0].peak_memory_bytes + solo[2].peak_memory_bytes
+    );
+}
+
+/// The ISSUE's restart pin: a member crashed mid-run is rebuilt from its
+/// latest checkpoint and its final record is byte-identical (on the
+/// deterministic fields) to the uninterrupted solo run — the whole fleet
+/// finishes with no quarantines.
+#[test]
+fn crashed_member_recovers_identically_under_restart_supervision() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = std::env::temp_dir().join("titan_fleet_restart");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = |i: usize| dir.join(format!("s{i}.json"));
+
+    let solo: Vec<RunRecord> = (0..3).map(|i| fleet_member(i).run().unwrap().0).collect();
+
+    // member 0 (6 rounds, cadence-2 checkpoints) crashes at its round 3:
+    // the latest snapshot is round 2, so the restart replays one round
+    let plan = FaultPlan::new(2).script(0, 3, FaultKind::Crash);
+    let mut fleet = FleetBuilder::new()
+        .supervise(SupervisionPolicy::Restart { max_retries: 3, backoff_rounds: 1 })
+        .fault_plan(plan);
+    for i in 0..3 {
+        fleet = fleet
+            .session_checkpointed_restartable(
+                format!("s{i}"),
+                move || Ok(fleet_member_builder(i)),
+                path(i),
+                2,
+                false,
+            )
+            .unwrap();
+    }
+    let record = fleet.run().unwrap();
+    assert!(record.statuses.iter().all(|s| s.is_finished()), "{:?}", record.statuses);
+    for (f, s) in record.records.iter().zip(&solo) {
+        assert_records_equivalent(f.as_ref().unwrap(), s);
+    }
+    assert_eq!(record.faults.crashes, 1);
+    assert_eq!(record.faults.restarts, 1);
+    assert_eq!(record.faults.quarantines, 0);
+    assert_eq!(record.faults.rounds_recovered, 1);
+    // the replayed round shows up in the fleet's executed-round counts
+    assert_eq!(record.session_rounds, vec![7, 4, 5]);
+    assert_eq!(record.rounds_executed, 16);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The ISSUE's telemetry pin: the same config + fault seed twice yields
+/// byte-identical deterministic FleetRecord fields, including the full
+/// fault telemetry and the serialized plan.
+#[test]
+fn same_fault_seed_yields_identical_fleet_telemetry() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = || {
+        let mut plan = FaultPlan::new(0xFA7E);
+        plan.crash_rate = 0.08;
+        plan.transient_rate = 0.10;
+        plan.straggler_rate = 0.10;
+        // one scripted fault so the run is guaranteed to inject something
+        let plan = plan.script(0, 1, FaultKind::Transient);
+        let mut fleet = FleetBuilder::new()
+            .supervise(SupervisionPolicy::Isolate)
+            .fault_plan(plan);
+        for i in 0..3 {
+            fleet = fleet.session(format!("s{i}"), fleet_member(i));
+        }
+        fleet.run().unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert!(a.faults.total() > 0);
+    assert_eq!(a.faults, b.faults);
+    assert_eq!(a.statuses, b.statuses);
+    assert_eq!(a.session_rounds, b.session_rounds);
+    assert_eq!(a.rounds_executed, b.rounds_executed);
+    assert_eq!(a.total_device_ms, b.total_device_ms);
+    assert_eq!(a.energy_j, b.energy_j);
+    assert_eq!(a.peak_memory_bytes, b.peak_memory_bytes);
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_opt_records_equivalent(x, y);
+    }
+    assert_eq!(
+        a.fault_plan.as_ref().unwrap().to_string_compact(),
+        b.fault_plan.as_ref().unwrap().to_string_compact()
+    );
 }
 
 #[test]

@@ -10,7 +10,12 @@
 #   6. resume smoke               halt a checkpointed run mid-way, resume
 #      it, and diff the final record JSON against an uninterrupted
 #      reference on every deterministic field (artifact-gated)
-#   7. bench smoke                every bench target in fast mode
+#   7. chaos smoke                fault-injected fleet runs: a zero-rate
+#      plan diffs clean against no plan, and two runs with the same
+#      fault seed under restart supervision diff clean on every
+#      deterministic FleetRecord field, telemetry included
+#      (artifact-gated)
+#   8. bench smoke                every bench target in fast mode
 #      (TITAN_BENCH_FAST=1 via scripts/bench_smoke.sh; catches bench
 #      bit-rot without paying full measurement windows), then the
 #      speedup regression gate: bench_report.py --check-only fails if
@@ -71,6 +76,39 @@ if [ -f artifacts/mlp/meta.json ]; then
     "$smoke_dir/reference.json" "$smoke_dir/resumed.json"
 else
   echo "skipping resume smoke: no artifacts (run \`make artifacts\`)"
+fi
+
+echo "== chaos smoke =="
+if [ -f artifacts/mlp/meta.json ]; then
+  chaos_dir="results/chaos_smoke"
+  rm -rf "$chaos_dir"
+  mkdir -p "$chaos_dir"
+  fleet_flags=(fleet --sessions 3 --rounds 4 --eval-every 2 --test-size 200 \
+    --policy fewest)
+  # pin 1: a zero-rate fault plan (any --fault-seed, all rates 0) is
+  # deterministically identical to running with no plan at all
+  cargo run --release --quiet -- "${fleet_flags[@]}"
+  mv results/fleet.json "$chaos_dir/plain.json"
+  cargo run --release --quiet -- "${fleet_flags[@]}" --fault-seed 7
+  mv results/fleet.json "$chaos_dir/zero_rate.json"
+  python3 "$script_dir/diff_records.py" --fleet \
+    "$chaos_dir/plain.json" "$chaos_dir/zero_rate.json"
+  # pin 2: the same fault seed under restart supervision reproduces the
+  # same fleet outcome byte-for-byte on the deterministic fields —
+  # statuses, per-session records, and the fault telemetry included
+  chaos_flags=("${fleet_flags[@]}" --checkpoint-every 2 \
+    --supervise restart:2:1 --fault-seed 7 \
+    --crash-rate 0.15 --transient-rate 0.1 --straggler-rate 0.1)
+  cargo run --release --quiet -- "${chaos_flags[@]}" \
+    --checkpoint-dir "$chaos_dir/ck_a"
+  mv results/fleet.json "$chaos_dir/chaos_a.json"
+  cargo run --release --quiet -- "${chaos_flags[@]}" \
+    --checkpoint-dir "$chaos_dir/ck_b"
+  mv results/fleet.json "$chaos_dir/chaos_b.json"
+  python3 "$script_dir/diff_records.py" --fleet \
+    "$chaos_dir/chaos_a.json" "$chaos_dir/chaos_b.json"
+else
+  echo "skipping chaos smoke: no artifacts (run \`make artifacts\`)"
 fi
 
 if [ "$run_bench" = 1 ]; then

@@ -1,14 +1,21 @@
 #!/usr/bin/env python3
-"""Compare two titan RunRecord JSON files on their deterministic fields.
+"""Compare two titan record JSON files on their deterministic fields.
 
 Used by the CI resume smoke: a run that was halted mid-way and resumed
 from its checkpoint must produce a record byte-identical to the
 uninterrupted reference run on every field that does not read the host
 wall clock. Host-clock fields (total_host_ms, round host times, the
-curve's host_ms, processing-delay latencies) legitimately differ between
-executions and are ignored.
+curve's host_ms, processing-delay latencies, scheduler overhead)
+legitimately differ between executions and are ignored.
 
-Usage: diff_records.py REFERENCE.json RESUMED.json
+With --fleet both files are FleetRecord JSON (the `titan fleet` output):
+per-session status/rounds/record plus the fault telemetry are compared,
+which is what the CI chaos smoke uses to pin that the same fault seed
+reproduces the same fleet outcome, and that a zero-rate fault plan is
+identical to no plan at all (the `fault_plan` key itself is ignored for
+exactly that comparison).
+
+Usage: diff_records.py [--fleet] REFERENCE.json GOT.json
 Exits 0 when the deterministic fields match exactly, 1 otherwise.
 """
 import json
@@ -31,42 +38,107 @@ DETERMINISTIC_CURVE = [
     "test_loss",
     "test_accuracy",
 ]
+DETERMINISTIC_FLEET_TOP = [
+    "policy",
+    "supervision",
+    "rounds_executed",
+    "device_ops",
+    "total_device_ms",
+    "energy_j",
+    "peak_memory_bytes",
+    "faults",
+]
+DETERMINISTIC_SESSION = [
+    "name",
+    "rounds",
+    "status",
+    "quarantine_round",
+    "reason",
+]
 
 
-def main():
-    if len(sys.argv) != 3:
-        sys.exit(__doc__)
-    with open(sys.argv[1]) as f:
-        ref = json.load(f)
-    with open(sys.argv[2]) as f:
-        got = json.load(f)
-
+def diff_run_record(ref, got, prefix=""):
+    """Failures on a single RunRecord's deterministic fields."""
     failures = []
     for key in DETERMINISTIC_TOP:
         if ref.get(key) != got.get(key):
-            failures.append(f"{key}: {ref.get(key)!r} != {got.get(key)!r}")
+            failures.append(f"{prefix}{key}: {ref.get(key)!r} != {got.get(key)!r}")
 
     ref_curve = ref.get("curve", [])
     got_curve = got.get("curve", [])
     if len(ref_curve) != len(got_curve):
-        failures.append(f"curve length: {len(ref_curve)} != {len(got_curve)}")
+        failures.append(f"{prefix}curve length: {len(ref_curve)} != {len(got_curve)}")
     else:
         for i, (a, b) in enumerate(zip(ref_curve, got_curve)):
             for key in DETERMINISTIC_CURVE:
                 if a.get(key) != b.get(key):
                     failures.append(
-                        f"curve[{i}].{key}: {a.get(key)!r} != {b.get(key)!r}"
+                        f"{prefix}curve[{i}].{key}: {a.get(key)!r} != {b.get(key)!r}"
                     )
+    return failures
+
+
+def diff_fleet_record(ref, got):
+    """Failures on a FleetRecord's deterministic fields (host clocks and
+    the serialized fault plan ignored)."""
+    failures = []
+    for key in DETERMINISTIC_FLEET_TOP:
+        if ref.get(key) != got.get(key):
+            failures.append(f"{key}: {ref.get(key)!r} != {got.get(key)!r}")
+
+    ref_sessions = ref.get("sessions", [])
+    got_sessions = got.get("sessions", [])
+    if len(ref_sessions) != len(got_sessions):
+        failures.append(
+            f"sessions length: {len(ref_sessions)} != {len(got_sessions)}"
+        )
+        return failures
+    for i, (a, b) in enumerate(zip(ref_sessions, got_sessions)):
+        for key in DETERMINISTIC_SESSION:
+            if a.get(key) != b.get(key):
+                failures.append(
+                    f"sessions[{i}].{key}: {a.get(key)!r} != {b.get(key)!r}"
+                )
+        ra, rb = a.get("record"), b.get("record")
+        if (ra is None) != (rb is None):
+            failures.append(
+                f"sessions[{i}].record: one present, the other null"
+            )
+        elif ra is not None:
+            failures.extend(diff_run_record(ra, rb, f"sessions[{i}].record."))
+    return failures
+
+
+def main():
+    argv = sys.argv[1:]
+    fleet = "--fleet" in argv
+    argv = [a for a in argv if a != "--fleet"]
+    if len(argv) != 2:
+        sys.exit(__doc__)
+    with open(argv[0]) as f:
+        ref = json.load(f)
+    with open(argv[1]) as f:
+        got = json.load(f)
+
+    if fleet:
+        failures = diff_fleet_record(ref, got)
+        summary = (
+            f"fleet records match on {len(DETERMINISTIC_FLEET_TOP)} scalar "
+            f"fields and {len(ref.get('sessions', []))} sessions"
+        )
+    else:
+        failures = diff_run_record(ref, got)
+        summary = (
+            f"records match on {len(DETERMINISTIC_TOP)} scalar fields and "
+            f"{len(ref.get('curve', []))} curve points"
+        )
 
     if failures:
         print("records diverge on deterministic fields:")
         for line in failures:
             print(f"  {line}")
         sys.exit(1)
-    print(
-        f"records match on {len(DETERMINISTIC_TOP)} scalar fields and "
-        f"{len(ref_curve)} curve points"
-    )
+    print(summary)
 
 
 if __name__ == "__main__":
