@@ -1,0 +1,83 @@
+//! Bench: retention-plane hot paths — the per-offer admit/evict cost of
+//! a full [`SampleStore`] under each eviction policy (steady state: every
+//! offer scans for its victim), the cheap-admit path into a store with
+//! headroom, and the per-round blend cost of `RetainedSource`.
+//!
+//! The store's offer path is O(n) in live entries (duplicate-id scan +
+//! victim scan, see PERF.md), so the `_n<k>` suffix is the store
+//! occupancy in samples — divide by k for the per-entry scan cost.
+//!
+//! Run: `cargo bench --bench bench_retention`
+//!
+//! [`SampleStore`]: titan::retention::SampleStore
+
+use titan::data::buffer::Candidate;
+use titan::data::Sample;
+use titan::retention::{sample_cost, RetentionKind, SampleStore};
+use titan::util::bench::{black_box, Bencher};
+
+const DIM: usize = 64;
+const CLASSES: usize = 10;
+
+fn candidate(id: u64, score: f64) -> Candidate {
+    let x: Vec<f32> = (0..DIM).map(|j| ((id as usize * DIM + j) as f32 * 0.01).sin()).collect();
+    Candidate {
+        sample: Sample::new(id, (id % CLASSES as u64) as u32, x),
+        score,
+    }
+}
+
+/// A store filled to exactly `n` entries (budget fits n, no more).
+fn full_store(n: usize, kind: RetentionKind) -> SampleStore {
+    let mut st = SampleStore::new(n * sample_cost(DIM), CLASSES, kind, 7);
+    for i in 0..n as u64 {
+        st.offer(candidate(i, i as f64 * 0.1));
+    }
+    assert_eq!(st.len(), n);
+    st
+}
+
+fn main() {
+    let mut b = Bencher::new("retention");
+
+    // steady-state admit/evict: every offer on a full store pays the
+    // duplicate scan, the policy's victim scan, and the entry swap
+    for kind in [RetentionKind::Score, RetentionKind::Balanced, RetentionKind::Reservoir] {
+        for n in [64usize, 256, 1024] {
+            let mut st = full_store(n, kind);
+            let mut id = n as u64;
+            b.bench(&format!("retention_admit_evict_{}_n{n}/offer", kind.name()), || {
+                id += 1;
+                // fresh id, high score: ScoreWeighted always admits, the
+                // other policies exercise their own accept paths
+                black_box(st.offer(candidate(id, 1e9)))
+            });
+        }
+    }
+
+    // cheap path: admitting into headroom (no victim scan, still the
+    // duplicate-id scan over live entries)
+    {
+        let mut st = SampleStore::new(usize::MAX / 2, CLASSES, RetentionKind::Score, 7);
+        for i in 0..1024u64 {
+            st.offer(candidate(i, 0.5));
+        }
+        let mut id = 2048u64;
+        b.bench("retention_admit_headroom_n1024/offer", || {
+            id += 1;
+            black_box(st.offer(candidate(id, 0.5)))
+        });
+    }
+
+    // duplicate refresh: re-offering a live id updates in place
+    {
+        let mut st = full_store(256, RetentionKind::Score);
+        let mut i = 0u64;
+        b.bench("retention_refresh_n256/offer", || {
+            i = (i + 1) % 256;
+            black_box(st.offer(candidate(i, 0.9)))
+        });
+    }
+
+    b.finish();
+}

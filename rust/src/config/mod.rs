@@ -8,6 +8,7 @@
 
 pub mod presets;
 
+use crate::retention::RetentionKind;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::{Error, Result};
@@ -138,6 +139,16 @@ pub struct RunConfig {
     /// serialized config and the resume fingerprint (a snapshot taken at
     /// one thread count resumes safely at another).
     pub select_threads: usize,
+    /// Storage budget (bytes) for the retention stage's persistent sample
+    /// store (`--store-bytes`; 0 = no retention plane at all — the run is
+    /// byte-identical to a pre-retention build).
+    pub store_bytes: usize,
+    /// Eviction policy for the retention store (`--retention`). Ignored
+    /// when `store_bytes` is 0.
+    pub retention: RetentionKind,
+    /// Fraction of each round's arrivals replayed from the retention
+    /// store (`--replay-mix`, in [0, 1]). Ignored when `store_bytes` is 0.
+    pub replay_mix: f64,
     /// Directory with AOT artifacts.
     pub artifacts_dir: String,
 }
@@ -166,6 +177,9 @@ impl Default for RunConfig {
             noise: NoiseKind::None,
             pipeline: true,
             select_threads: 1,
+            store_bytes: 0,
+            retention: RetentionKind::Score,
+            replay_mix: 0.5,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -191,6 +205,11 @@ impl RunConfig {
         self.eval_every = args.get_usize("eval-every", self.eval_every)?;
         self.test_size = args.get_usize("test-size", self.test_size)?;
         self.select_threads = args.get_usize("select-threads", self.select_threads)?;
+        self.store_bytes = args.get_usize("store-bytes", self.store_bytes)?;
+        if let Some(p) = args.get("retention") {
+            self.retention = RetentionKind::parse(p)?;
+        }
+        self.replay_mix = args.get_f64("replay-mix", self.replay_mix)?;
         if let Some(d) = args.get("artifacts") {
             self.artifacts_dir = d.to_string();
         }
@@ -226,7 +245,7 @@ impl RunConfig {
                 ("frac", Json::Num(frac as f64)),
             ]),
         };
-        Json::obj(vec![
+        let mut fields = vec![
             ("model", Json::Str(self.model.clone())),
             ("method", Json::Str(self.method.name().into())),
             ("seed", Json::Num(self.seed as f64)),
@@ -244,7 +263,21 @@ impl RunConfig {
             ("noise", noise),
             ("pipeline", Json::Bool(self.pipeline)),
             ("artifacts_dir", Json::Str(self.artifacts_dir.clone())),
-        ])
+        ];
+        // emitted only when the retention plane is on: a zero-budget
+        // config's serialization (and so its fingerprint and RunRecord)
+        // stays byte-identical to pre-retention builds
+        if self.store_bytes > 0 {
+            fields.push((
+                "retention",
+                Json::obj(vec![
+                    ("store_bytes", Json::Num(self.store_bytes as f64)),
+                    ("policy", Json::Str(self.retention.name().into())),
+                    ("replay_mix", Json::Num(self.replay_mix)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
     }
 
     /// Rebuild a config from its [`RunConfig::to_json`] serialization —
@@ -268,6 +301,16 @@ impl RunConfig {
                 return Err(Error::Config(format!("bad noise field {other:?}")));
             }
         };
+        // absent = the retention plane was off (to_json omits the object
+        // at store_bytes 0, and pre-retention configs never had it)
+        let (store_bytes, retention, replay_mix) = match j.get("retention") {
+            Err(_) | Ok(Json::Null) => (0, RetentionKind::Score, 0.5),
+            Ok(r) => (
+                r.get("store_bytes")?.as_usize()?,
+                RetentionKind::parse(r.get("policy")?.as_str()?)?,
+                r.get("replay_mix")?.as_f64()?,
+            ),
+        };
         Ok(RunConfig {
             model: j.get("model")?.as_str()?.to_string(),
             method: Method::parse(j.get("method")?.as_str()?)?,
@@ -288,6 +331,9 @@ impl RunConfig {
             // perf-only knob, not part of the serialized config (see the
             // field docs) — resumed runs re-apply it from the CLI
             select_threads: 1,
+            store_bytes,
+            retention,
+            replay_mix,
             artifacts_dir: j.get("artifacts_dir")?.as_str()?.to_string(),
         })
     }
@@ -327,6 +373,12 @@ impl RunConfig {
         }
         if self.select_threads == 0 {
             return Err(Error::Config("select_threads must be > 0".into()));
+        }
+        if !self.replay_mix.is_finite() || !(0.0..=1.0).contains(&self.replay_mix) {
+            return Err(Error::Config(format!(
+                "replay_mix {} must be in [0, 1]",
+                self.replay_mix
+            )));
         }
         Ok(())
     }
@@ -443,5 +495,53 @@ mod tests {
         // and a truncated object errors instead of defaulting
         assert!(RunConfig::from_json(&Json::obj(vec![("model", Json::Str("mlp".into()))]))
             .is_err());
+    }
+
+    /// Determinism pin (a) at the config layer: a zero-budget config must
+    /// serialize byte-identically to a build that has never heard of
+    /// retention — no "retention" key, no fingerprint change, no matter
+    /// what the (ignored) policy/mix fields hold.
+    #[test]
+    fn zero_store_budget_keeps_the_fingerprint_unchanged() {
+        let plain = RunConfig::default();
+        assert_eq!(plain.store_bytes, 0);
+        assert!(!plain.fingerprint().contains("retention"));
+        let mut tweaked = plain.clone();
+        tweaked.retention = RetentionKind::Reservoir;
+        tweaked.replay_mix = 0.9;
+        assert_eq!(tweaked.fingerprint(), plain.fingerprint());
+        // turning the budget on changes the fingerprint (a budgeted run
+        // must never resume from an unbudgeted snapshot, or vice versa)
+        tweaked.store_bytes = 1 << 20;
+        assert_ne!(tweaked.fingerprint(), plain.fingerprint());
+        assert!(tweaked.fingerprint().contains("\"retention\""));
+    }
+
+    #[test]
+    fn retention_args_and_json_roundtrip() {
+        let args = Args::parse(
+            ["--store-bytes", "65536", "--retention", "balanced", "--replay-mix", "0.25"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let cfg = RunConfig::default().apply_args(&args).unwrap();
+        assert_eq!(cfg.store_bytes, 65536);
+        assert_eq!(cfg.retention, RetentionKind::Balanced);
+        assert_eq!(cfg.replay_mix, 0.25);
+        cfg.validate().unwrap();
+
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.fingerprint(), cfg.fingerprint());
+        assert_eq!(back.store_bytes, 65536);
+        assert_eq!(back.retention, RetentionKind::Balanced);
+        assert_eq!(back.replay_mix, 0.25);
+
+        // bad values surface as config errors
+        let bad = Args::parse(["--retention", "lru"].iter().map(|s| s.to_string())).unwrap();
+        assert!(RunConfig::default().apply_args(&bad).is_err());
+        let mut cfg = RunConfig::default();
+        cfg.replay_mix = 1.5;
+        assert!(cfg.validate().is_err());
     }
 }

@@ -825,6 +825,16 @@ impl Fleet {
             .collect();
         let total_host_ms = fleet_sw.elapsed_ms();
         let finished = records.iter().flatten();
+        // fleet-wide retention aggregate: component-wise sum over the
+        // finished members that retained; None when no member did
+        let retention = finished
+            .clone()
+            .filter_map(|r| r.retention.as_ref())
+            .fold(None, |acc: Option<crate::retention::RetentionTelemetry>, t| {
+                let mut sum = acc.unwrap_or_default();
+                sum.merge(t);
+                Some(sum)
+            });
         Ok(FleetRecord {
             policy: self.policy.name().to_string(),
             supervision: self.supervise.name().to_string(),
@@ -839,6 +849,7 @@ impl Fleet {
             statuses,
             faults,
             fault_plan: self.fault_plan.as_ref().map(|p| p.to_json()),
+            retention,
             total_host_ms,
             sched_overhead_ms: (total_host_ms - step_ms).max(0.0),
         })
@@ -1144,6 +1155,10 @@ pub struct FleetRecord {
     /// The fault plan that ran, serialized ([`FaultPlan::to_json`]);
     /// None when the fleet ran unfaulted.
     pub fault_plan: Option<Json>,
+    /// Component-wise sum of finished members' retention telemetry
+    /// (`bytes_held` reads as total bytes held across members); None when
+    /// no member retained.
+    pub retention: Option<crate::retention::RetentionTelemetry>,
 }
 
 impl FleetRecord {
@@ -1202,6 +1217,9 @@ impl FleetRecord {
         ];
         if let Some(plan) = &self.fault_plan {
             fields.push(("fault_plan", plan.clone()));
+        }
+        if let Some(t) = &self.retention {
+            fields.push(("retention", t.to_json()));
         }
         Json::obj(fields)
     }
@@ -1477,6 +1495,7 @@ mod tests {
             peak_memory_bytes: 2048,
             faults,
             fault_plan: Some(FaultPlan::new(7).to_json()),
+            retention: None,
         };
         assert!((rec.sched_overhead_per_round_ms() - 0.2).abs() < 1e-12);
         assert_eq!(rec.finished(), 1);
@@ -1496,7 +1515,16 @@ mod tests {
         assert_eq!(faults.get("quarantines").unwrap().as_usize().unwrap(), 1);
         assert_eq!(faults.get("events").unwrap().as_arr().unwrap().len(), 1);
         assert!(j.get("fault_plan").is_ok());
+        assert!(j.get("retention").is_err(), "no retaining member, no retention key");
         assert_eq!(j.get("rounds_executed").unwrap().as_usize().unwrap(), 10);
+        // a fleet with a retention aggregate emits it
+        let mut with_ret = rec.clone();
+        let mut t = crate::retention::RetentionTelemetry::default();
+        t.offers = 12;
+        t.bytes_held = 4096;
+        with_ret.retention = Some(t);
+        let j = with_ret.to_json();
+        assert_eq!(j.get("retention").unwrap().get("offers").unwrap().as_usize().unwrap(), 12);
         let roundtrip = Json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(
             roundtrip.get("sched_overhead_per_round_ms").unwrap().as_f64().unwrap(),

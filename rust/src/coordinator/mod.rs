@@ -112,6 +112,11 @@ pub struct SelectorEngine {
     rng: Xoshiro256,
     /// Idle-capacity trace governing the per-round candidate budget.
     pub idle: IdleTrace,
+    /// When set, each round's post-filter candidates (with their coarse
+    /// scores) are kept aside for the retention plane — see
+    /// [`SelectorEngine::take_scored`].
+    capture_scored: bool,
+    last_scored: Vec<crate::data::buffer::Candidate>,
 }
 
 impl SelectorEngine {
@@ -153,7 +158,27 @@ impl SelectorEngine {
             seen_per_class: vec![0; num_classes],
             rng: Xoshiro256::seed_from_u64(cfg.seed ^ 0x5E1E_C70A),
             idle: IdleTrace::Constant(1.0),
+            capture_scored: false,
+            last_scored: Vec::new(),
         })
+    }
+
+    /// Ask the engine to keep each round's scored candidate set aside so
+    /// the session feed can offer it to a retaining data source. Off by
+    /// default — capturing clones the round's candidates (cheap `Arc`
+    /// bumps, but nonzero), so it is enabled only when the source retains.
+    pub fn set_capture_scored(&mut self, on: bool) {
+        self.capture_scored = on;
+        if !on {
+            self.last_scored = Vec::new();
+        }
+    }
+
+    /// Take the last round's captured candidates (coarse-filter scores for
+    /// Titan, score 0.0 for baselines whose candidate set is unscored).
+    /// Empty unless [`SelectorEngine::set_capture_scored`] is on.
+    pub fn take_scored(&mut self) -> Vec<crate::data::buffer::Candidate> {
+        std::mem::take(&mut self.last_scored)
     }
 
     /// Process one round's arrivals and select the next training batch.
@@ -203,12 +228,28 @@ impl SelectorEngine {
             // outgrow the guard
             let drained = self.filter.as_mut().unwrap().drain_top(meta.cand_max);
             report.candidates = drained.len();
+            if self.capture_scored {
+                // retention plane: keep the scored candidates aside (Arc
+                // clones of the payloads, not copies)
+                self.last_scored = drained.clone();
+            }
             drained.into_iter().map(|c| c.sample).collect()
         } else {
             // baselines / bare C-IS: the whole round's stream is the
             // candidate set (capped by the artifact's N).
             let n = arrivals.len().min(meta.cand_max);
             report.candidates = n;
+            if self.capture_scored {
+                // baselines have no coarse score; offer at 0.0 (the
+                // reservoir/balanced policies ignore scores anyway)
+                self.last_scored = arrivals[..n]
+                    .iter()
+                    .map(|s| crate::data::buffer::Candidate {
+                        sample: s.clone(),
+                        score: 0.0,
+                    })
+                    .collect();
+            }
             arrivals[..n].to_vec()
         };
         if candidates.is_empty() {
@@ -291,6 +332,7 @@ impl SelectorEngine {
             rng: self.rng.state(),
             seen_per_class: self.seen_per_class.clone(),
             filter: self.filter.as_ref().map(|f| f.export_state()),
+            retention: None,
         }
     }
 
@@ -331,6 +373,11 @@ pub struct SelectorState {
     pub seen_per_class: Vec<u64>,
     /// Coarse-filter state (Titan only).
     pub filter: Option<crate::filter::FilterState>,
+    /// Retention-plane state (store contents + policy RNG + telemetry) —
+    /// `Some` only when the run's data source retains samples. Filled in
+    /// by the session layer (the source owns the store, not the engine),
+    /// so [`SelectorEngine::export_state`] leaves it `None`.
+    pub retention: Option<crate::retention::RetentionState>,
 }
 
 /// Trainer process: SGD + eval + lr schedule.

@@ -2,6 +2,7 @@
 //! and the metrics plane.
 
 use crate::device::Op;
+use crate::retention::RetentionTelemetry;
 
 /// What the selector did in one round (fed to the device simulator's GPU
 /// lane and the processing-delay metrics).
@@ -17,6 +18,11 @@ pub struct SelectorReport {
     pub arrivals: usize,
     /// Candidate-set size after the coarse stage.
     pub candidates: usize,
+    /// Cumulative retention telemetry as of this round — `Some` only when
+    /// the run's data source retains samples (`--store-bytes > 0`). Set
+    /// by the session feed after the round's candidates were offered to
+    /// the store, so `bytes_held` reflects the post-round store.
+    pub retention: Option<RetentionTelemetry>,
 }
 
 /// One completed training round, as the experiment harness sees it.

@@ -70,10 +70,11 @@ use crate::coordinator::snapshot::{load_checkpoint, Loaded, SessionSnapshot};
 use crate::coordinator::{
     RoundOutcome, SelectorEngine, SelectorReport, SelectorState, TrainBatch, TrainerEngine,
 };
-use crate::data::{DataSource, StreamSource, SynthTask};
+use crate::data::{DataSource, RetainedSource, StreamSource, SynthTask};
 use crate::device::idle::IdleTrace;
 use crate::device::{memory, DeviceSim, Lane, Op};
 use crate::metrics::{CurvePoint, RunRecord};
+use crate::retention::RetentionTelemetry;
 use crate::util::sync::Latest;
 use crate::util::timer::{LatencyRecorder, Stopwatch};
 use crate::{Error, Result};
@@ -144,6 +145,14 @@ pub trait RoundObserver {
 
     /// Called at every eval-cadence checkpoint with the new curve point.
     fn on_eval(&mut self, _point: &CurvePoint) -> Control {
+        Control::Continue
+    }
+
+    /// Called once per completed round when the run's data source retains
+    /// samples (`--store-bytes > 0`), after [`RoundObserver::on_round`],
+    /// with the **cumulative** retention telemetry as of this round. Runs
+    /// without a retention plane never invoke this hook.
+    fn on_retention(&mut self, _round: usize, _telemetry: &RetentionTelemetry) -> Control {
         Control::Continue
     }
 
@@ -576,10 +585,22 @@ impl SessionBuilder {
                 )));
             }
         }
-        let source: Box<dyn DataSource> = match source {
+        let mut source: Box<dyn DataSource> = match source {
             Some(s) => s,
             None => Box::new(default_source(&cfg)),
         };
+        // retention plane: a storage budget wraps whatever source the run
+        // uses in a byte-budgeted store (unless the caller already
+        // supplied a retaining source with its own budget/policy)
+        if cfg.store_bytes > 0 && !source.retains() {
+            source = Box::new(RetainedSource::new(
+                source,
+                cfg.store_bytes,
+                cfg.retention,
+                cfg.replay_mix,
+                cfg.seed,
+            )?);
+        }
         let outcomes = Vec::with_capacity(cfg.rounds);
         let completed = resume.as_ref().map_or(0, |s| s.round);
         Ok(Session {
@@ -696,7 +717,13 @@ impl BatchFeed {
                 // (share_params is a refcount bump, not a Vec clone)
                 selector.sync_params(trainer.share_params())?;
                 let arrivals = source.next_round(*stream_per_round);
-                let (batch, report) = selector.select_round(round, arrivals)?;
+                let (batch, mut report) = selector.select_round(round, arrivals)?;
+                if source.retains() {
+                    // retention stage: offer the round's scored candidates
+                    // to the store, then report the post-round telemetry
+                    source.offer_retention(selector.take_scored());
+                    report.retention = source.retention_stats();
+                }
                 Ok((batch, report, None))
             }
             BatchFeed::Pipelined { rx, .. } => {
@@ -770,6 +797,7 @@ impl Running {
         let pipelined = backend.is_pipelined();
         let rounds = cfg.rounds;
         let capture = observers.iter().any(|o| o.wants_snapshots());
+        let retains = source.retains();
         let test = source.test_set(cfg.test_size, cfg.seed);
 
         // restore the trainer-side state before the feed is built: the
@@ -788,13 +816,22 @@ impl Running {
             record.round_device_ms = snap.round_device_ms;
             record.round_host_ms = snap.round_host_ms;
             record.processing_delay = LatencyRecorder::from_samples(snap.delay_ms);
-            selector_restore = Some(snap.selector);
+            let mut sel_state = snap.selector;
             source.fast_forward(snap.round, cfg.stream_per_round);
+            // the resume contract for retaining sources: fast_forward only
+            // replays the inner stream cursor; store contents, policy RNG
+            // and telemetry come from the snapshot
+            if let Some(ret) = sel_state.retention.take() {
+                source.restore_retention(ret)?;
+                record.retention = source.retention_stats();
+            }
+            selector_restore = Some(sel_state);
         }
 
         let feed = match backend {
             ExecBackend::Sequential => {
                 let mut selector = SelectorEngine::new(cfg, source.task())?;
+                selector.set_capture_scored(retains);
                 if let Some(st) = selector_restore {
                     selector.restore_state(st)?;
                 }
@@ -820,6 +857,7 @@ impl Running {
                     .spawn(move || -> Result<()> {
                         let mut selector = SelectorEngine::new(&sel_cfg, sel_source.task())?;
                         selector.idle = idle;
+                        selector.set_capture_scored(retains);
                         if let Some(st) = selector_restore {
                             selector.restore_state(st)?;
                         }
@@ -833,12 +871,23 @@ impl Running {
                                 selector.sync_params(p)?;
                             }
                             let arrivals = sel_source.next_round(sel_cfg.stream_per_round);
-                            let out = selector.select_round(round, arrivals).map(|(batch, report)| {
+                            let out = selector.select_round(round, arrivals).map(|(batch, mut report)| {
+                                if retains {
+                                    // retention stage lives on the selector
+                                    // thread: source + selector share it,
+                                    // so the offer/stats pairing is the
+                                    // same as the sequential feed's
+                                    sel_source.offer_retention(selector.take_scored());
+                                    report.retention = sel_source.retention_stats();
+                                }
                                 // capsule AFTER selecting: the state round
                                 // r+1 starts from, i.e. what a snapshot
                                 // taken at rounds_done = r+1 must carry
-                                let state =
-                                    capture.then(|| Box::new(selector.export_state()));
+                                let state = capture.then(|| {
+                                    let mut st = selector.export_state();
+                                    st.retention = sel_source.export_retention();
+                                    Box::new(st)
+                                });
                                 SelectedBatch { round, batch, report, state }
                             });
                             let failed = out.is_err();
@@ -911,6 +960,13 @@ impl Running {
         for obs in self.observers.iter_mut() {
             stop |= obs.on_round(&outcome) == Control::Stop;
         }
+        if let Some(t) = &outcome.selector.retention {
+            // cumulative totals: the last round's telemetry IS the run's
+            self.record.retention = Some(t.clone());
+            for obs in self.observers.iter_mut() {
+                stop |= obs.on_retention(round, t) == Control::Stop;
+            }
+        }
 
         // periodic eval (instrumentation; not charged to the device clock)
         if cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0 {
@@ -963,7 +1019,11 @@ impl Running {
     /// round's batch.
     fn build_snapshot(&self, cfg: &RunConfig, rounds_done: usize) -> Result<SessionSnapshot> {
         let selector = match (&self.feed, &self.last_selector_state) {
-            (BatchFeed::Sequential { selector, .. }, _) => selector.export_state(),
+            (BatchFeed::Sequential { selector, source, .. }, _) => {
+                let mut st = selector.export_state();
+                st.retention = source.export_retention();
+                st
+            }
             (BatchFeed::Pipelined { .. }, Some(state)) => (**state).clone(),
             (BatchFeed::Pipelined { .. }, None) => {
                 return Err(Error::Pipeline(
@@ -1189,6 +1249,7 @@ mod tests {
                 rng: [1, 2, 3, 4],
                 seen_per_class: vec![10, 10],
                 filter: None,
+                retention: None,
             },
             sim: crate::device::DeviceSimState::default(),
             curve: (1..=round / 2)
@@ -1653,6 +1714,114 @@ mod tests {
         assert_eq!(outcomes.len(), 2, "stopped at the first eval checkpoint");
         assert_eq!(record.curve.len(), 1);
         assert!(record.final_accuracy.is_finite());
+    }
+
+    /// A storage budget turns on the retention plane end to end: the
+    /// record carries cumulative telemetry, every round fires the
+    /// `on_retention` hook, and without a budget neither happens.
+    #[test]
+    fn retaining_session_reports_telemetry_and_fires_observer_hook() {
+        use std::sync::{Arc, Mutex};
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        struct RetentionAudit {
+            rounds: Arc<Mutex<Vec<usize>>>,
+        }
+        impl RoundObserver for RetentionAudit {
+            fn on_retention(
+                &mut self,
+                round: usize,
+                t: &crate::retention::RetentionTelemetry,
+            ) -> Control {
+                assert!(t.offers >= t.admits + t.refreshes + t.rejects);
+                self.rounds.lock().unwrap().push(round);
+                Control::Continue
+            }
+        }
+        let mut cfg = small_cfg(Method::Titan);
+        cfg.store_bytes = 1 << 16;
+        cfg.replay_mix = 0.25;
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let (record, outcomes) = SessionBuilder::new(cfg.clone())
+            .sequential()
+            .observe(RetentionAudit { rounds: Arc::clone(&log) })
+            .run()
+            .unwrap();
+        let t = record.retention.expect("budgeted run must carry telemetry");
+        assert!(t.offers > 0, "candidates were offered to the store");
+        assert!(t.admits > 0, "a 64 KiB budget admits something");
+        assert!(t.bytes_held > 0 && t.bytes_held <= 1 << 16);
+        assert_eq!(*log.lock().unwrap(), (0..outcomes.len()).collect::<Vec<_>>());
+        for o in &outcomes {
+            assert!(o.selector.retention.is_some());
+        }
+
+        // no budget, no retention plane: same config minus the store
+        cfg.store_bytes = 0;
+        let (plain, plain_out) = SessionBuilder::new(cfg).sequential().run().unwrap();
+        assert!(plain.retention.is_none());
+        assert!(plain_out.iter().all(|o| o.selector.retention.is_none()));
+    }
+
+    /// The retention plane obeys the kill/resume pin: checkpoint, kill,
+    /// resume, and the final record — store telemetry included — is
+    /// byte-identical to the uninterrupted budgeted run. Sequential Titan
+    /// covers the score-weighted store fed by real coarse scores;
+    /// pipelined RS covers the capsule path (store state crosses the
+    /// thread boundary attached to the batch).
+    #[test]
+    fn killed_retaining_session_resumes_byte_identically() {
+        use super::observers::Checkpoint;
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        for (method, backend) in [
+            (Method::Titan, ExecBackend::Sequential),
+            (Method::Rs, ExecBackend::Pipelined { idle: IdleTrace::Constant(1.0) }),
+        ] {
+            let path = std::env::temp_dir().join(format!(
+                "titan_retention_resume_{}_{}.json",
+                method.name(),
+                backend.kind()
+            ));
+            let _ = std::fs::remove_file(&path);
+            let mut cfg = small_cfg(method); // 6 rounds, eval every 3
+            cfg.store_bytes = 1 << 14;
+            cfg.replay_mix = 0.5;
+            let (want, _) = SessionBuilder::new(cfg.clone())
+                .backend(backend.clone())
+                .run()
+                .unwrap();
+            assert!(want.retention.is_some(), "{method:?} {backend:?}");
+
+            let mut session = SessionBuilder::new(cfg.clone())
+                .backend(backend.clone())
+                .observe(Checkpoint::every(path.clone(), 2))
+                .build()
+                .unwrap();
+            for _ in 0..5 {
+                session.step().unwrap();
+            }
+            drop(session); // kill: round 5 ran past the round-4 snapshot
+
+            let (got, _) = SessionBuilder::new(cfg)
+                .backend(backend.clone())
+                .resume_from(&path)
+                .unwrap()
+                .build()
+                .unwrap()
+                .run()
+                .unwrap();
+            assert_deterministic_fields_eq(&want, &got);
+            assert_eq!(
+                want.retention, got.retention,
+                "{method:?} {backend:?}: resumed telemetry must match"
+            );
+            let _ = std::fs::remove_file(&path);
+        }
     }
 
     /// Observer ordering: audit sees every round exactly once, in order.

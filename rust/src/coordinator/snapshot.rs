@@ -38,6 +38,7 @@ use crate::data::Sample;
 use crate::device::{DeviceSimState, RoundTiming};
 use crate::filter::FilterState;
 use crate::metrics::{CurvePoint, RunRecord};
+use crate::retention::{PolicyState, RetentionState, RetentionTelemetry};
 use crate::util::json::Json;
 use crate::{Error, Result};
 
@@ -266,36 +267,95 @@ fn count_list_from(j: &Json) -> Result<Vec<u64>> {
     j.as_arr()?.iter().map(|v| Ok(v.as_usize()? as u64)).collect()
 }
 
+/// Four RNG words as a hex-string array (the xoshiro256** state).
+fn words_to_json(ws: &[u64; 4]) -> Json {
+    Json::Arr(ws.iter().map(|&w| u64_to_json(w)).collect())
+}
+
+fn words_from_json(j: &Json) -> Result<[u64; 4]> {
+    let words = j.as_arr()?;
+    if words.len() != 4 {
+        return Err(Error::Json(format!("rng state has {} words, want 4", words.len())));
+    }
+    let mut out = [0u64; 4];
+    for (slot, w) in out.iter_mut().zip(words) {
+        *slot = u64_from_json(w)?;
+    }
+    Ok(out)
+}
+
 fn selector_to_json(s: &SelectorState) -> Json {
-    let rng = Json::Arr(s.rng.iter().map(|&w| u64_to_json(w)).collect());
     let filter = match &s.filter {
         None => Json::Null,
         Some(f) => filter_to_json(f),
     };
-    Json::obj(vec![
-        ("rng", rng),
+    let mut fields = vec![
+        ("rng", words_to_json(&s.rng)),
         ("seen_per_class", count_list(&s.seen_per_class)),
         ("filter", filter),
-    ])
+    ];
+    // emitted only for retaining runs, so non-retaining snapshots stay
+    // byte-identical to pre-retention builds
+    if let Some(r) = &s.retention {
+        fields.push(("retention", retention_to_json(r)));
+    }
+    Json::obj(fields)
 }
 
 fn selector_from_json(j: &Json) -> Result<SelectorState> {
-    let words = j.get("rng")?.as_arr()?;
-    if words.len() != 4 {
-        return Err(Error::Json(format!("rng state has {} words, want 4", words.len())));
-    }
-    let mut rng = [0u64; 4];
-    for (slot, w) in rng.iter_mut().zip(words) {
-        *slot = u64_from_json(w)?;
-    }
     let filter = match j.get("filter")? {
         Json::Null => None,
         f => Some(filter_from_json(f)?),
     };
+    // absent (pre-retention snapshots, non-retaining runs) and Null both
+    // mean "no retention plane"
+    let retention = match j.get("retention") {
+        Err(_) | Ok(Json::Null) => None,
+        Ok(r) => Some(retention_from_json(r)?),
+    };
     Ok(SelectorState {
-        rng,
+        rng: words_from_json(j.get("rng")?)?,
         seen_per_class: count_list_from(j.get("seen_per_class")?)?,
         filter,
+        retention,
+    })
+}
+
+fn retention_to_json(r: &RetentionState) -> Json {
+    let policy = match &r.policy {
+        None => Json::Null,
+        Some(p) => Json::obj(vec![
+            ("rng", words_to_json(&p.rng)),
+            // hex like the RNG words: a counter, but unbounded in principle
+            ("seen", u64_to_json(p.seen)),
+        ]),
+    };
+    Json::obj(vec![
+        ("entries", Json::Arr(r.entries.iter().map(candidate_to_json).collect())),
+        ("telemetry", r.telemetry.to_json()),
+        ("policy", policy),
+        ("blend_rng", words_to_json(&r.blend_rng)),
+    ])
+}
+
+fn retention_from_json(j: &Json) -> Result<RetentionState> {
+    let policy = match j.get("policy")? {
+        Json::Null => None,
+        p => Some(PolicyState {
+            rng: words_from_json(p.get("rng")?)?,
+            seen: u64_from_json(p.get("seen")?)?,
+        }),
+    };
+    Ok(RetentionState {
+        entries: j
+            .get("entries")?
+            .as_arr()?
+            .iter()
+            .map(candidate_from_json)
+            .collect::<Result<Vec<_>>>()?,
+        telemetry: RetentionTelemetry::from_json(j.get("telemetry")?)?,
+        policy,
+        blend_rng: words_from_json(j.get("blend_rng")?)?,
     })
 }
 
@@ -469,6 +529,29 @@ mod tests {
                     buffer_thresh: Some(0.1 + 0.2),
                     processed: 40,
                 }),
+                retention: Some(RetentionState {
+                    entries: vec![Candidate {
+                        sample: Sample::new(77, 2, vec![0.5, 0.75]),
+                        score: 1.0 / 3.0,
+                    }],
+                    telemetry: RetentionTelemetry {
+                        offers: 30,
+                        admits: 12,
+                        refreshes: 3,
+                        rejects: 5,
+                        evicts_score: 10,
+                        evicts_balanced: 0,
+                        evicts_reservoir: 0,
+                        bytes_held: 40,
+                        retained_emitted: 6,
+                        emitted_total: 48,
+                    },
+                    policy: Some(PolicyState {
+                        rng: [0xFFFF_0000_FFFF_0000, 1, 2, 3],
+                        seen: 30,
+                    }),
+                    blend_rng: [9, 8, 7, u64::MAX - 1],
+                }),
             },
             sim: DeviceSimState {
                 total_ms: 1234.567,
@@ -514,6 +597,12 @@ mod tests {
         assert_eq!(bf.buffer[0].sample.id, 9);
         assert_eq!(bf.buffer[0].score.to_bits(), sf.buffer[0].score.to_bits());
         assert_eq!(*bf.buffer[0].sample.x, *sf.buffer[0].sample.x);
+        let (br, sr) = (
+            back.selector.retention.as_ref().unwrap(),
+            snap.selector.retention.as_ref().unwrap(),
+        );
+        assert_eq!(br, sr, "retention state must roundtrip bit-exactly");
+        assert_eq!(br.entries[0].score.to_bits(), (1.0f64 / 3.0).to_bits());
         assert_eq!(back.sim.total_ms.to_bits(), snap.sim.total_ms.to_bits());
         assert_eq!(back.sim.rounds.len(), 1);
         assert_eq!(back.sim.rounds[0].wall_ms, 630.5);
@@ -522,6 +611,24 @@ mod tests {
         assert_eq!(back.round_device_ms, snap.round_device_ms);
         assert_eq!(back.round_host_ms, snap.round_host_ms);
         assert_eq!(back.delay_ms, snap.delay_ms);
+    }
+
+    /// Pre-retention snapshots (no "retention" key) and non-retaining
+    /// runs (key omitted) both decode to `retention: None`, and a
+    /// retention-free snapshot emits no "retention" key at all — old
+    /// checkpoint files stay loadable and new non-retaining ones stay
+    /// byte-identical to what earlier builds wrote.
+    #[test]
+    fn snapshots_without_retention_stay_compatible() {
+        let mut snap = sample_snapshot();
+        snap.selector.retention = None;
+        let text = snap.to_json().to_string_compact();
+        assert!(
+            !text.contains("\"retention\""),
+            "non-retaining snapshot must not emit a retention key"
+        );
+        let back = SessionSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(back.selector.retention.is_none());
     }
 
     #[test]

@@ -3,9 +3,11 @@
 //! the streaming source with noise injection, the class-indexed sample
 //! store, the capped candidate ring (lazy-threshold top-k), and the object-safe
 //! [`DataSource`] seam the coordinator session pulls rounds through
-//! (stream / replay / non-IID class subset / drifting class mix).
+//! (stream / replay / non-IID class subset / drifting class mix /
+//! byte-budget-retaining [`RetainedSource`]).
 
 pub mod buffer;
+pub mod retained;
 pub mod sample;
 pub mod source;
 pub mod store;
@@ -13,6 +15,7 @@ pub mod stream;
 pub mod synth;
 
 pub use buffer::CandidateBuffer;
+pub use retained::RetainedSource;
 pub use sample::Sample;
 pub use source::{ClassSubsetSource, DataSource, DriftSource, ReplaySource};
 pub use store::ClassStore;

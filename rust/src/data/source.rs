@@ -20,9 +20,11 @@
 //!   between two class distributions over rounds), the continual-learning
 //!   stream shape.
 
+use crate::data::buffer::Candidate;
 use crate::data::sample::Sample;
 use crate::data::stream::StreamSource;
 use crate::data::synth::SynthTask;
+use crate::retention::{RetentionState, RetentionTelemetry};
 use crate::util::rng::Xoshiro256;
 use crate::{Error, Result};
 
@@ -55,6 +57,47 @@ pub trait DataSource: Send {
         for _ in 0..rounds {
             let _ = self.next_round(v);
         }
+    }
+
+    // ---- retention seam (third selection stage) --------------------------
+    //
+    // Default no-ops keep every plain source oblivious to retention; only
+    // [`crate::data::RetainedSource`] overrides these. The session feed
+    // calls them after each round's selection, on whichever thread owns
+    // the source — sequentially in both backends, so no locking is
+    // involved.
+
+    /// Whether this source retains samples across rounds. The session
+    /// uses this to decide whether to capture scored candidates after
+    /// selection — a non-retaining run must not pay for the clone.
+    fn retains(&self) -> bool {
+        false
+    }
+
+    /// Offer one round's scored candidates (the filter-stage output, or
+    /// the candidate window at score 0 for methods without a filter) to
+    /// the retention store. Default: drop them.
+    fn offer_retention(&mut self, _scored: Vec<Candidate>) {}
+
+    /// Cumulative [`RetentionTelemetry`], if this source retains.
+    fn retention_stats(&self) -> Option<RetentionTelemetry> {
+        None
+    }
+
+    /// Export the retention state (store contents + policy state + blend
+    /// RNG) for a session checkpoint.
+    fn export_retention(&self) -> Option<RetentionState> {
+        None
+    }
+
+    /// Restore retention state from a checkpoint. `fast_forward` alone
+    /// cannot rebuild a retaining source — the store depends on past
+    /// selection outcomes, not just the stream — so resume pairs the two.
+    /// Errors on sources that do not retain.
+    fn restore_retention(&mut self, _st: RetentionState) -> Result<()> {
+        Err(Error::Data(
+            "this data source does not retain samples (no retention state expected)".into(),
+        ))
     }
 }
 
@@ -98,7 +141,20 @@ impl ReplaySource {
     }
 
     /// Capture `n` samples from another source into a replay pool.
+    ///
+    /// Cursor contract: this consumes exactly one `next_round(n)` from
+    /// `source` — its stream position advances by `n` samples and nothing
+    /// else about it changes, so the caller can keep drawing from it and
+    /// the first post-capture sample is the `n+1`-th of its stream
+    /// (`capture_advances_the_source_by_exactly_n` pins this). `n == 0`
+    /// is rejected here as a typed error — it used to fall through to
+    /// [`ReplaySource::new`]'s misleading "non-empty pool" failure.
     pub fn capture(source: &mut dyn DataSource, n: usize) -> Result<ReplaySource> {
+        if n == 0 {
+            return Err(Error::Data(
+                "ReplaySource::capture: n == 0 captures nothing (need n > 0)".into(),
+            ));
+        }
         let pool = source.next_round(n);
         ReplaySource::new(source.task().clone(), pool)
     }
@@ -341,6 +397,36 @@ mod tests {
     }
 
     #[test]
+    fn capture_rejects_zero_n_with_a_typed_error() {
+        // regression: n == 0 used to reach ReplaySource::new and fail
+        // there with a misleading "non-empty pool" config error
+        let mut stream = StreamSource::new(task(), 7, NoiseKind::None);
+        match ReplaySource::capture(&mut stream, 0) {
+            Err(crate::Error::Data(msg)) => assert!(msg.contains("n == 0"), "{msg}"),
+            other => panic!("expected Error::Data, got {other:?}"),
+        }
+        // the failed capture consumed nothing from the source
+        assert_eq!(stream.next_round(1)[0].id, 0);
+    }
+
+    #[test]
+    fn capture_advances_the_source_by_exactly_n() {
+        // the documented cursor contract: capture consumes one
+        // next_round(n), so the source's stream resumes at sample n
+        let mut captured = StreamSource::new(task(), 7, NoiseKind::None);
+        let mut reference = StreamSource::new(task(), 7, NoiseKind::None);
+        let replay = ReplaySource::capture(&mut captured, 13).unwrap();
+        assert_eq!(replay.pool_len(), 13);
+        let _ = reference.next_round(13);
+        let (a, b) = (captured.next_round(9), reference.next_round(9));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.label, y.label);
+            assert_eq!(*x.x, *y.x);
+        }
+    }
+
+    #[test]
     fn class_subset_only_emits_its_classes() {
         let mut src = ClassSubsetSource::new(task(), vec![1, 4], 42).unwrap();
         for s in src.next_round(200) {
@@ -430,6 +516,23 @@ mod tests {
                 let mut end = vec![0.25; 6];
                 end[1] = 4.0;
                 Box::new(DriftSource::new(task(), vec![1.0; 6], end, 5, 3).unwrap())
+            },
+            // a RetainedSource that was never offered candidates is a pure
+            // pass-through (empty store -> no blend-RNG draws), so the
+            // inner-cursor-only fast_forward is exact here; the retaining
+            // case needs restore_retention and is pinned in retained.rs
+            || {
+                let inner = Box::new(StreamSource::new(task(), 5, NoiseKind::None));
+                Box::new(
+                    crate::data::RetainedSource::new(
+                        inner,
+                        1 << 20,
+                        crate::retention::RetentionKind::Score,
+                        0.5,
+                        7,
+                    )
+                    .unwrap(),
+                )
             },
         ];
         for (i, mk) in sources.iter().enumerate() {

@@ -4,6 +4,7 @@
 
 use crate::data::sample::Sample;
 use crate::util::rng::Xoshiro256;
+use crate::{Error, Result};
 
 /// Bounded, class-indexed sample store.
 ///
@@ -34,9 +35,21 @@ impl ClassStore {
     }
 
     /// Offer a sample; reservoir-evict if the class shard is full.
-    pub fn offer(&mut self, s: Sample) {
+    ///
+    /// An out-of-range label is a data-plane error (a corrupted stream or
+    /// a misconfigured `num_classes`), not a programming invariant — it
+    /// returns [`Error::Data`] instead of panicking, leaving the store
+    /// untouched. (For budget-relative balancing across classes see
+    /// [`crate::retention::ClassBalanced`], which supersedes this fixed
+    /// `cap_per_class` scheme for cross-round retention.)
+    pub fn offer(&mut self, s: Sample) -> Result<()> {
         let y = s.label as usize;
-        assert!(y < self.per_class.len(), "label {y} out of range");
+        if y >= self.per_class.len() {
+            return Err(Error::Data(format!(
+                "ClassStore::offer: label {y} out of range (num_classes {})",
+                self.per_class.len()
+            )));
+        }
         self.seen_per_class[y] += 1;
         let shard = &mut self.per_class[y];
         if shard.len() < self.cap_per_class {
@@ -49,6 +62,7 @@ impl ClassStore {
                 shard[j as usize] = s;
             }
         }
+        Ok(())
     }
 
     /// Samples currently stored for class y.
@@ -92,7 +106,7 @@ mod tests {
     fn fills_then_reservoir_evicts() {
         let mut st = ClassStore::new(2, 5, 1);
         for i in 0..50 {
-            st.offer(sample(i, 0));
+            st.offer(sample(i, 0)).unwrap();
         }
         assert_eq!(st.class(0).len(), 5);
         assert_eq!(st.seen(0), 50);
@@ -112,7 +126,7 @@ mod tests {
         for seed in 0..300 {
             let mut st = ClassStore::new(1, 10, seed);
             for i in 0..100 {
-                st.offer(sample(i, 0));
+                st.offer(sample(i, 0)).unwrap();
             }
             for s in st.class(0) {
                 hits[s.id as usize] += 1;
@@ -128,7 +142,7 @@ mod tests {
     fn totals_and_payload() {
         let mut st = ClassStore::new(3, 4, 2);
         for i in 0..6 {
-            st.offer(sample(i, (i % 3) as u32));
+            st.offer(sample(i, (i % 3) as u32)).unwrap();
         }
         assert_eq!(st.stored_total(), 6);
         assert_eq!(st.all().len(), 6);
@@ -136,9 +150,18 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "out of range")]
-    fn rejects_bad_label() {
+    fn bad_label_is_a_typed_error_not_a_panic() {
+        // regression: this used to assert!-panic; a corrupted stream must
+        // surface as Error::Data and leave the store untouched
         let mut st = ClassStore::new(2, 4, 3);
-        st.offer(sample(0, 9));
+        match st.offer(sample(0, 9)) {
+            Err(crate::Error::Data(msg)) => assert!(msg.contains("out of range"), "{msg}"),
+            other => panic!("expected Error::Data, got {other:?}"),
+        }
+        assert_eq!(st.stored_total(), 0);
+        assert_eq!(st.seen(0) + st.seen(1), 0, "rejected offer must not count");
+        // the store still works after the rejection
+        st.offer(sample(1, 1)).unwrap();
+        assert_eq!(st.stored_total(), 1);
     }
 }

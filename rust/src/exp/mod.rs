@@ -18,6 +18,7 @@ pub mod fig8;
 pub mod fig9;
 pub mod fig10;
 pub mod fig11;
+pub mod retention;
 pub mod table1;
 
 use crate::config::{Method, RunConfig};
@@ -44,6 +45,7 @@ pub const ALL: &[(&str, &str)] = &[
     ("fig9", "fluctuant idle resources / candidate budgets"),
     ("fig10", "federated learning with 50 devices"),
     ("fig11", "noisy data streams (feature/label noise)"),
+    ("ret", "storage-budget sweep: retention policies vs byte budget"),
 ];
 
 /// Dispatch an experiment by id.
@@ -65,6 +67,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         "fig9" => fig9::run(args),
         "fig10" => fig10::run(args),
         "fig11" => fig11::run(args),
+        "ret" => retention::run(args),
         "all" => {
             for (id, _) in ALL {
                 println!("\n===== exp {id} =====");

@@ -1,0 +1,82 @@
+//! `ret` — storage-budget sweep for the retention plane: final accuracy
+//! and store telemetry of Titan under each [`RetentionPolicy`] across a
+//! range of byte budgets, against the unbudgeted baseline.
+//!
+//! This is the experiment axis the ROADMAP's retention item opens: the
+//! paper's two stages select from the *current* stream window only, while
+//! the storage-budget question ("To Store or Not?", PAPERS.md) is what to
+//! *keep* across rounds. A zero-budget row is included so the neutrality
+//! pin is visible in the output: it must match a plain run exactly.
+//!
+//! [`RetentionPolicy`]: crate::retention::RetentionPolicy
+
+use crate::config::{presets, Method};
+use crate::metrics::{render_table, write_result};
+use crate::retention::RetentionKind;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Byte budgets swept per policy (the zero row is the baseline).
+const BUDGETS: &[usize] = &[0, 1 << 14, 1 << 16, 1 << 18];
+
+pub fn run(args: &Args) -> Result<()> {
+    let models = super::models_from_args(args, &["mlp"]);
+    let kinds = [RetentionKind::Score, RetentionKind::Balanced, RetentionKind::Reservoir];
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for model in &models {
+        for &bytes in BUDGETS {
+            // the zero-budget baseline is policy-independent: run it once
+            let swept: &[RetentionKind] = if bytes == 0 { &kinds[..1] } else { &kinds };
+            for &kind in swept {
+                let mut cfg = super::tune(presets::table1(model, Method::Titan), args)?;
+                cfg.store_bytes = bytes;
+                cfg.retention = kind;
+                cfg.replay_mix = args.get_f64("replay-mix", cfg.replay_mix)?;
+                cfg.validate()?;
+                let rec = super::run_config(&cfg)?;
+                let policy = if bytes == 0 { "-".to_string() } else { kind.name().to_string() };
+                let (admits, evicts, held, hit) = match &rec.retention {
+                    Some(t) => (
+                        t.admits.to_string(),
+                        t.evicts_total().to_string(),
+                        t.bytes_held.to_string(),
+                        format!("{:.3}", t.hit_rate()),
+                    ),
+                    None => ("-".into(), "-".into(), "-".into(), "-".into()),
+                };
+                rows.push(vec![
+                    model.clone(),
+                    policy.clone(),
+                    bytes.to_string(),
+                    format!("{:.2}", rec.final_accuracy * 100.0),
+                    admits,
+                    evicts,
+                    held,
+                    hit,
+                ]);
+                let mut fields = vec![
+                    ("model", Json::Str(model.clone())),
+                    ("policy", Json::Str(policy)),
+                    ("store_bytes", Json::Num(bytes as f64)),
+                    ("final_accuracy", Json::Num(rec.final_accuracy)),
+                ];
+                if let Some(t) = &rec.retention {
+                    fields.push(("telemetry", t.to_json()));
+                }
+                out.push(Json::obj(fields));
+            }
+        }
+    }
+    println!(
+        "{}",
+        render_table(
+            &["model", "policy", "store_bytes", "final_acc_%", "admits", "evicts", "bytes_held", "hit_rate"],
+            &rows
+        )
+    );
+    let path = write_result("ret", &Json::Arr(out))?;
+    println!("results -> {}", path.display());
+    Ok(())
+}

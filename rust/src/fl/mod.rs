@@ -46,7 +46,8 @@ use crate::config::RunConfig;
 use crate::coordinator::host::{pick_validated, RoundRobin, SchedPolicy, TaskState};
 use crate::coordinator::session::{Control, RoundObserver};
 use crate::coordinator::RoundOutcome;
-use crate::data::{ClassSubsetSource, DataSource, Sample, SynthTask};
+use crate::data::buffer::Candidate;
+use crate::data::{ClassSubsetSource, DataSource, RetainedSource, Sample, SynthTask};
 use crate::fault::{FaultKind, FaultPlan};
 use crate::metrics::{CurvePoint, RunRecord};
 use crate::runtime::model::{ModelRuntime, RuntimeRole};
@@ -236,6 +237,27 @@ impl FlBuilder {
                     .collect::<Result<Vec<_>>>()?
             }
         };
+        // storage budget: each device keeps its own byte-budgeted store
+        // (distinct policy/blend RNG streams per device), exactly the
+        // session-layer wrapping — explicit sources that already retain
+        // are left alone
+        let sources: Vec<Box<dyn DataSource>> = sources
+            .into_iter()
+            .enumerate()
+            .map(|(d, src)| {
+                if base.store_bytes > 0 && !src.retains() {
+                    Ok(Box::new(RetainedSource::new(
+                        src,
+                        base.store_bytes,
+                        base.retention,
+                        base.replay_mix,
+                        base.seed ^ (0x2E7_0000 + d as u64),
+                    )?) as Box<dyn DataSource>)
+                } else {
+                    Ok(src)
+                }
+            })
+            .collect::<Result<Vec<_>>>()?;
 
         let mut rt = ModelRuntime::load(&base.artifacts_dir, &base.model, RuntimeRole::Full)?;
         let mut global = rt.set.init_params()?;
@@ -343,6 +365,18 @@ impl FlBuilder {
                 };
                 let sel = strategy.select(&ctx, &mut orchestrator_rng)?;
                 let batch: Vec<&Sample> = sel.indices.iter().map(|&i| refs[i]).collect();
+                // retention offer: the locally selected batch, scored by
+                // its selection weights (the per-device analogue of the
+                // session layer feeding coarse-filter scores)
+                if dev.source.retains() {
+                    let scored: Vec<Candidate> = sel
+                        .indices
+                        .iter()
+                        .zip(&sel.weights)
+                        .map(|(&i, &w)| Candidate { sample: refs[i].clone(), score: w as f64 })
+                        .collect();
+                    dev.source.offer_retention(scored);
+                }
                 // local training (weighted: unbiased estimator)
                 for _ in 0..cfg.local_iters {
                     last_loss = rt.train_step_weighted(&batch, &sel.weights, base.lr)?;
@@ -369,6 +403,23 @@ impl FlBuilder {
             };
             for obs in observers.iter_mut() {
                 stop |= obs.on_round(&outcome) == Control::Stop;
+            }
+            // fleet-style aggregate over every retaining device; each
+            // device's telemetry is cumulative, so the last comm round's
+            // merge IS the run total (mirrors the session layer)
+            let retention = devices.iter().filter_map(|d| d.source.retention_stats()).fold(
+                None,
+                |acc: Option<crate::retention::RetentionTelemetry>, t| {
+                    let mut sum = acc.unwrap_or_default();
+                    sum.merge(&t);
+                    Some(sum)
+                },
+            );
+            if let Some(t) = &retention {
+                record.retention = Some(t.clone());
+                for obs in observers.iter_mut() {
+                    stop |= obs.on_retention(round, t) == Control::Stop;
+                }
             }
 
             if base.eval_every > 0 && (round + 1) % base.eval_every == 0 {
@@ -547,6 +598,29 @@ mod tests {
             assert_eq!(rec.curve.len(), 2);
             assert!(rec.final_accuracy.is_finite());
         }
+    }
+
+    /// Storage budget in FL: each device keeps its own byte-budgeted
+    /// store; the record carries the merged telemetry, and a zero budget
+    /// reproduces the plain run bit-for-bit.
+    #[test]
+    fn fl_devices_retain_under_a_storage_budget() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut cfg = tiny_fl(Method::Rs);
+        cfg.base.store_bytes = 1 << 14;
+        cfg.base.replay_mix = 0.25;
+        let rec = run(&cfg).unwrap();
+        let t = rec.retention.as_ref().expect("budgeted FL run reports telemetry");
+        assert!(t.offers > 0 && t.admits > 0, "devices offered and admitted: {t:?}");
+        assert!(t.bytes_held > 0, "stores hold bytes at the end");
+
+        // zero budget ≡ current behavior, bit for bit
+        let plain = run(&tiny_fl(Method::Rs)).unwrap();
+        let unbudgeted = run(&tiny_fl(Method::Rs)).unwrap();
+        assert!(unbudgeted.retention.is_none());
+        assert_eq!(plain.final_accuracy, unbudgeted.final_accuracy);
     }
 
     /// Observers hook the comm-round loop: an early stop at the first

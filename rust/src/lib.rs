@@ -36,6 +36,11 @@
 //!   (fail-fast / isolate / restart).
 //! - [`fl`] — federated-learning orchestration (paper Appendix B), built
 //!   on the same data-source/observer seams via `fl::FlBuilder`.
+//! - [`retention`] — the **third selection stage**: a byte-budgeted
+//!   persistent [`retention::SampleStore`] with pluggable
+//!   [`retention::RetentionPolicy`]s (score-weighted / class-balanced /
+//!   reservoir) deciding what to keep across rounds; wired into sessions
+//!   via [`data::RetainedSource`] and the `--store-bytes` config surface.
 //! - [`metrics`] — trackers and result emission.
 //! - [`exp`] — one module per paper table/figure, all driving sessions.
 
@@ -48,6 +53,7 @@ pub mod fault;
 pub mod filter;
 pub mod fl;
 pub mod metrics;
+pub mod retention;
 pub mod runtime;
 pub mod selection;
 pub mod util;
@@ -65,6 +71,8 @@ pub enum Error {
     Json(String),
     #[error("config error: {0}")]
     Config(String),
+    #[error("data error: {0}")]
+    Data(String),
     #[error("checkpoint {path}: {stage}: {detail}")]
     Checkpoint {
         /// The snapshot file that failed to load.

@@ -66,6 +66,9 @@ fn print_usage() {
     println!("          [--checkpoint FILE] [--checkpoint-every K]  snapshot every K rounds");
     println!("          [--resume FILE]     restart a killed run from its snapshot");
     println!("          [--halt-after N]    stop (resumable) after N rounds, no finish");
+    println!("          [--store-bytes N]   byte-budgeted retention store (0 = off)");
+    println!("          [--retention score|balanced|reservoir]  eviction policy");
+    println!("          [--replay-mix F]    retained fraction of each round (0..1)");
     println!("          (any method may run pipelined; --sequential opts out)");
     println!("  fleet   --sessions N --model <m> --methods a,b --rounds N --seed N");
     println!("          [--policy rr|fewest|staleness] [--sources stream,replay,subset,drift]");
@@ -78,8 +81,10 @@ fn print_usage() {
     println!("          deterministic fault injection per (session, round) cell");
     println!("          [--supervise failfast|isolate|restart[:retries[:backoff]]]");
     println!("          what the scheduler does about failures (default failfast)");
+    println!("          [--store-bytes N] [--retention P] [--replay-mix F]  per-member");
+    println!("          retention stores (same flags as run)");
     println!("  exp     <id> [--fast] [--models a,b|all] [--seed N]   (exp list: ids)");
-    println!("  fl      --model <m> --method <m> [--fast]");
+    println!("  fl      --model <m> --method <m> [--fast] [--store-bytes N]");
     println!("  models  [--artifacts DIR]");
     println!("  verify  [--artifacts DIR]   cross-check artifacts vs golden.json");
 }

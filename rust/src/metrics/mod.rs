@@ -5,6 +5,7 @@
 use std::io::Write;
 use std::path::Path;
 
+use crate::retention::RetentionTelemetry;
 use crate::util::json::Json;
 use crate::util::timer::LatencyRecorder;
 
@@ -63,6 +64,9 @@ pub struct RunRecord {
     pub energy_j: f64,
     pub avg_power_w: f64,
     pub peak_memory_bytes: usize,
+    /// Cumulative retention-store telemetry — `Some` only when the run
+    /// had a storage budget (`--store-bytes > 0`).
+    pub retention: Option<RetentionTelemetry>,
 }
 
 impl RunRecord {
@@ -101,7 +105,7 @@ impl RunRecord {
 
     pub fn to_json(&self) -> Json {
         let curve = Json::Arr(self.curve.iter().map(|p| p.to_json()).collect());
-        Json::obj(vec![
+        let mut fields = vec![
             ("method", Json::Str(self.method.clone())),
             ("model", Json::Str(self.model.clone())),
             ("curve", curve),
@@ -121,7 +125,13 @@ impl RunRecord {
             ("energy_j", Json::Num(self.energy_j)),
             ("avg_power_w", Json::Num(self.avg_power_w)),
             ("peak_memory_bytes", Json::Num(self.peak_memory_bytes as f64)),
-        ])
+        ];
+        // only retaining runs carry the key, so an unbudgeted run's record
+        // stays byte-identical to pre-retention builds
+        if let Some(t) = &self.retention {
+            fields.push(("retention", t.to_json()));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -213,6 +223,15 @@ mod tests {
         let j = record_with_curve().to_json();
         assert_eq!(j.get("curve").unwrap().as_arr().unwrap().len(), 5);
         assert_eq!(j.get("method").unwrap().as_str().unwrap(), "titan");
+    }
+
+    #[test]
+    fn retention_key_only_for_retaining_runs() {
+        let mut r = record_with_curve();
+        assert!(!r.to_json().to_string_compact().contains("\"retention\""));
+        r.retention = Some(RetentionTelemetry { offers: 9, admits: 4, ..Default::default() });
+        let j = r.to_json();
+        assert_eq!(j.get("retention").unwrap().get("offers").unwrap().as_usize().unwrap(), 9);
     }
 
     #[test]

@@ -1,0 +1,1016 @@
+//! Retention plane — Titan's **third selection stage**.
+//!
+//! The paper's two stages (coarse filter, fine C-IS selection) choose
+//! from the *current* stream window; this module decides what to **keep**
+//! across rounds under a hard on-device storage budget ("To Store or
+//! Not?", PAPERS.md). A [`SampleStore`] holds already-seen samples under
+//! a byte budget; a pluggable [`RetentionPolicy`] picks eviction victims
+//! when an admit would overflow it:
+//!
+//! | policy | admits by evicting | keeps |
+//! |---|---|---|
+//! | [`ScoreWeighted`] | the lowest filter-stage score (ties: largest id) | the all-time top scorers |
+//! | [`ClassBalanced`] | from the most-overrepresented class | a class-uniform recent set |
+//! | [`Reservoir`] | a seeded uniform slot (Algorithm R) | an unbiased stream sample |
+//!
+//! `ScoreWeighted` consumes the scores the [`crate::filter::CoarseFilter`]
+//! already computed for its candidates, which is what makes retention a
+//! genuine third stage rather than a second cache. `ClassBalanced`
+//! supersedes the fixed `cap_per_class` of [`crate::data::ClassStore`]
+//! with a budget-relative balance. `Reservoir` is the baseline: a
+//! deterministic ([`Xoshiro256`]-seeded) uniform sample of everything
+//! offered.
+//!
+//! Everything here is deterministic and checkpointable: same seed + same
+//! budget ⇒ identical store contents and [`RetentionTelemetry`], including
+//! across a kill/resume ([`RetentionState`] travels inside the session
+//! snapshot). The store itself never touches the model or the clock.
+//!
+//! Cost model (see PERF.md): the store is a flat insertion-ordered `Vec`.
+//! An admit is an O(n) duplicate-id scan plus, only under byte pressure,
+//! one O(n) victim scan per evicted entry. Store capacities are
+//! budget/sample-cost entries — hundreds at the paper's scales — so the
+//! scans are cheap compared to one model step; a hash index would buy
+//! nothing measurable at this size.
+
+use crate::data::buffer::Candidate;
+use crate::util::rng::Xoshiro256;
+use crate::{Error, Result};
+
+/// Modelled per-sample metadata overhead on top of the raw feature bytes:
+/// id (8) + label (4) + clean label (4) + retained score (8) + length
+/// header (8). The budget charges what a serialized store entry costs,
+/// not Rust's in-memory `Arc` bookkeeping.
+pub const SAMPLE_OVERHEAD_BYTES: usize = 32;
+
+/// Byte cost of retaining one sample of `dim` f32 features.
+pub fn sample_cost(dim: usize) -> usize {
+    dim * std::mem::size_of::<f32>() + SAMPLE_OVERHEAD_BYTES
+}
+
+/// Which retention policy a store runs (config/CLI surface).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RetentionKind {
+    /// Evict the lowest filter-stage score ([`ScoreWeighted`]).
+    Score,
+    /// Evict from the most-overrepresented class ([`ClassBalanced`]).
+    Balanced,
+    /// Seeded uniform reservoir baseline ([`Reservoir`]).
+    Reservoir,
+}
+
+impl RetentionKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "score" => Ok(RetentionKind::Score),
+            "balanced" => Ok(RetentionKind::Balanced),
+            "reservoir" => Ok(RetentionKind::Reservoir),
+            other => Err(Error::Config(format!(
+                "unknown retention policy {other:?} (expected score|balanced|reservoir)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RetentionKind::Score => "score",
+            RetentionKind::Balanced => "balanced",
+            RetentionKind::Reservoir => "reservoir",
+        }
+    }
+
+    /// Construct the policy this kind names. `seed` feeds the reservoir
+    /// RNG; the other policies are stateless and ignore it.
+    pub fn policy(self, seed: u64) -> Box<dyn RetentionPolicy> {
+        match self {
+            RetentionKind::Score => Box::new(ScoreWeighted),
+            RetentionKind::Balanced => Box::new(ClassBalanced),
+            RetentionKind::Reservoir => Box::new(Reservoir::new(seed)),
+        }
+    }
+}
+
+/// Serialized policy state. Only [`Reservoir`] carries any: its RNG words
+/// and the stream-position counter Algorithm R draws against.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PolicyState {
+    pub rng: [u64; 4],
+    pub seen: u64,
+}
+
+/// Cumulative retention counters — the telemetry surface that rides
+/// `SelectorReport` per round and lands in `RunRecord`/`FleetRecord`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RetentionTelemetry {
+    /// Candidates offered to the store (admits + refreshes + rejects).
+    pub offers: u64,
+    /// Offers admitted as new entries.
+    pub admits: u64,
+    /// Offers whose id was already retained (score refreshed in place).
+    pub refreshes: u64,
+    /// Offers turned away (budget, policy verdict, oversize, bad label,
+    /// non-finite score).
+    pub rejects: u64,
+    /// Evictions charged to [`ScoreWeighted`].
+    pub evicts_score: u64,
+    /// Evictions charged to [`ClassBalanced`].
+    pub evicts_balanced: u64,
+    /// Evictions charged to [`Reservoir`].
+    pub evicts_reservoir: u64,
+    /// Bytes currently held (latest value, not a sum).
+    pub bytes_held: u64,
+    /// Samples emitted into training rounds from the store.
+    pub retained_emitted: u64,
+    /// Total samples emitted into training rounds (retained + fresh).
+    pub emitted_total: u64,
+}
+
+impl RetentionTelemetry {
+    pub fn evicts_total(&self) -> u64 {
+        self.evicts_score + self.evicts_balanced + self.evicts_reservoir
+    }
+
+    /// Retained-batch hit rate: fraction of emitted training samples that
+    /// came out of the store rather than the fresh stream.
+    pub fn hit_rate(&self) -> f64 {
+        if self.emitted_total == 0 {
+            0.0
+        } else {
+            self.retained_emitted as f64 / self.emitted_total as f64
+        }
+    }
+
+    fn bump_evict(&mut self, kind: RetentionKind) {
+        match kind {
+            RetentionKind::Score => self.evicts_score += 1,
+            RetentionKind::Balanced => self.evicts_balanced += 1,
+            RetentionKind::Reservoir => self.evicts_reservoir += 1,
+        }
+    }
+
+    /// Component-wise sum (fleet aggregation; `bytes_held` sums too — the
+    /// aggregate reads as total bytes held across members).
+    pub fn merge(&mut self, other: &RetentionTelemetry) {
+        self.offers += other.offers;
+        self.admits += other.admits;
+        self.refreshes += other.refreshes;
+        self.rejects += other.rejects;
+        self.evicts_score += other.evicts_score;
+        self.evicts_balanced += other.evicts_balanced;
+        self.evicts_reservoir += other.evicts_reservoir;
+        self.bytes_held += other.bytes_held;
+        self.retained_emitted += other.retained_emitted;
+        self.emitted_total += other.emitted_total;
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("offers", Json::Num(self.offers as f64)),
+            ("admits", Json::Num(self.admits as f64)),
+            ("refreshes", Json::Num(self.refreshes as f64)),
+            ("rejects", Json::Num(self.rejects as f64)),
+            (
+                "evicts",
+                Json::obj(vec![
+                    ("score", Json::Num(self.evicts_score as f64)),
+                    ("balanced", Json::Num(self.evicts_balanced as f64)),
+                    ("reservoir", Json::Num(self.evicts_reservoir as f64)),
+                ]),
+            ),
+            ("bytes_held", Json::Num(self.bytes_held as f64)),
+            ("retained_emitted", Json::Num(self.retained_emitted as f64)),
+            ("emitted_total", Json::Num(self.emitted_total as f64)),
+            // derived, emitted for human/tooling consumption; from_json
+            // recomputes it from the counters
+            ("hit_rate", Json::Num(self.hit_rate())),
+        ])
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> Result<RetentionTelemetry> {
+        let evicts = j.get("evicts")?;
+        Ok(RetentionTelemetry {
+            offers: j.get("offers")?.as_usize()? as u64,
+            admits: j.get("admits")?.as_usize()? as u64,
+            refreshes: j.get("refreshes")?.as_usize()? as u64,
+            rejects: j.get("rejects")?.as_usize()? as u64,
+            evicts_score: evicts.get("score")?.as_usize()? as u64,
+            evicts_balanced: evicts.get("balanced")?.as_usize()? as u64,
+            evicts_reservoir: evicts.get("reservoir")?.as_usize()? as u64,
+            bytes_held: j.get("bytes_held")?.as_usize()? as u64,
+            retained_emitted: j.get("retained_emitted")?.as_usize()? as u64,
+            emitted_total: j.get("emitted_total")?.as_usize()? as u64,
+        })
+    }
+}
+
+/// Everything a retaining [`crate::data::DataSource`] must carry through
+/// a checkpoint to resume bit-identically: the store contents in slot
+/// order, the cumulative telemetry, the policy state (reservoir RNG +
+/// counter), and the source's blend RNG (the draw stream that picks which
+/// retained samples each round replays).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RetentionState {
+    pub entries: Vec<Candidate>,
+    pub telemetry: RetentionTelemetry,
+    pub policy: Option<PolicyState>,
+    pub blend_rng: [u64; 4],
+}
+
+/// Outcome of one [`SampleStore::offer`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Offer {
+    /// Stored as a new entry (possibly after evictions).
+    Admitted,
+    /// The id was already retained; its score was updated in place.
+    Refreshed,
+    /// Turned away — the entry never entered the store.
+    Rejected,
+}
+
+/// Eviction decision seam. Policies see the store in slot (admission)
+/// order and pick victims one at a time; the store only applies the
+/// evictions once enough bytes are freed, so a rejected offer leaves the
+/// entries untouched (policy RNG state still advances — that is what
+/// keeps two same-seed runs aligned regardless of outcome).
+pub trait RetentionPolicy: Send {
+    /// Which [`RetentionKind`] this policy implements (telemetry key).
+    fn kind(&self) -> RetentionKind;
+
+    /// Per-offer bookkeeping, called once per non-refresh offer *before*
+    /// any victim query (the reservoir stream counter).
+    fn on_offer(&mut self) {}
+
+    /// Pick the next victim slot among `entries`, skipping slots already
+    /// in `excluded` (sorted ascending), to make room for `incoming`.
+    /// `None` rejects the incoming candidate instead.
+    fn victim(
+        &mut self,
+        entries: &[Candidate],
+        excluded: &[usize],
+        num_classes: usize,
+        incoming: &Candidate,
+    ) -> Option<usize>;
+
+    /// Serialized policy state; stateless policies return `None`.
+    fn export(&self) -> Option<PolicyState> {
+        None
+    }
+
+    /// Restore from [`RetentionPolicy::export`]'s output. The default
+    /// (stateless) impl accepts only `None`.
+    fn restore(&mut self, st: Option<PolicyState>) -> Result<()> {
+        match st {
+            None => Ok(()),
+            Some(_) => Err(Error::Data(format!(
+                "retention policy {:?} is stateless but the snapshot carries policy state",
+                self.kind()
+            ))),
+        }
+    }
+}
+
+/// Is `a` evicted before `b`? The pinned eviction order of
+/// [`ScoreWeighted`]: score **ascending**, id **descending** within score
+/// ties — among equal scores the largest id goes first, so the incoming
+/// candidate (always the newest, largest id) loses ties against anything
+/// already stored and the surviving set is arrival-independent. This
+/// mirrors the tie discipline [`crate::data::CandidateBuffer`] pins for
+/// its cuts (`score_weighted_tie_break_is_pinned` regression-tests it).
+fn evict_before(a: &Candidate, b: &Candidate) -> bool {
+    a.score < b.score || (a.score == b.score && a.sample.id > b.sample.id)
+}
+
+/// Keep the all-time best filter scores: the victim is the worst stored
+/// entry under [`evict_before`], and an incoming candidate that is itself
+/// the worst is rejected. With equal-size samples the surviving set is
+/// exactly the top-`capacity` offers by (score desc, id asc), whatever
+/// order they arrived in.
+pub struct ScoreWeighted;
+
+impl RetentionPolicy for ScoreWeighted {
+    fn kind(&self) -> RetentionKind {
+        RetentionKind::Score
+    }
+
+    fn victim(
+        &mut self,
+        entries: &[Candidate],
+        excluded: &[usize],
+        _num_classes: usize,
+        incoming: &Candidate,
+    ) -> Option<usize> {
+        let mut worst: Option<usize> = None;
+        for (i, e) in entries.iter().enumerate() {
+            if excluded.binary_search(&i).is_ok() {
+                continue;
+            }
+            let worse = match worst {
+                None => true,
+                Some(w) => evict_before(e, &entries[w]),
+            };
+            if worse {
+                worst = Some(i);
+            }
+        }
+        let w = worst?;
+        if evict_before(&entries[w], incoming) {
+            Some(w)
+        } else {
+            None
+        }
+    }
+}
+
+/// Keep the classes level: the victim comes from the class with the most
+/// stored entries (ties: smallest class index), and within that class the
+/// lowest score goes first (ties: smallest id). Always admits while
+/// anything is stored — the store churns toward a class-uniform,
+/// recency-biased set, superseding `ClassStore`'s fixed `cap_per_class`
+/// with a budget-relative balance.
+pub struct ClassBalanced;
+
+impl RetentionPolicy for ClassBalanced {
+    fn kind(&self) -> RetentionKind {
+        RetentionKind::Balanced
+    }
+
+    fn victim(
+        &mut self,
+        entries: &[Candidate],
+        excluded: &[usize],
+        num_classes: usize,
+        _incoming: &Candidate,
+    ) -> Option<usize> {
+        let mut counts = vec![0usize; num_classes];
+        for (i, e) in entries.iter().enumerate() {
+            if excluded.binary_search(&i).is_ok() {
+                continue;
+            }
+            counts[e.sample.label as usize] += 1;
+        }
+        // most-overrepresented class; strict > keeps the smallest index
+        // on ties
+        let mut cls: Option<usize> = None;
+        let mut best = 0usize;
+        for (c, &n) in counts.iter().enumerate() {
+            if n > best {
+                best = n;
+                cls = Some(c);
+            }
+        }
+        let cls = cls?;
+        let mut pick: Option<usize> = None;
+        for (i, e) in entries.iter().enumerate() {
+            if e.sample.label as usize != cls || excluded.binary_search(&i).is_ok() {
+                continue;
+            }
+            let better = match pick {
+                None => true,
+                Some(p) => {
+                    let q = &entries[p];
+                    e.score < q.score || (e.score == q.score && e.sample.id < q.sample.id)
+                }
+            };
+            if better {
+                pick = Some(i);
+            }
+        }
+        pick
+    }
+}
+
+/// Seeded uniform reservoir (Algorithm R adapted to slot eviction): the
+/// `i`-th non-refresh offer draws `j ∈ [0, i)`; if `j` lands on a live
+/// slot, that slot is evicted and the offer admitted (appended at the
+/// end), else the offer is rejected. Eviction slots are uniform over the
+/// residents, so membership stays a uniform sample of the offer stream —
+/// `reservoir_matches_brute_force_oracle` pins the exact retained set
+/// against an independent re-implementation, and the frequency test
+/// checks per-class uniformity over 10k offers.
+pub struct Reservoir {
+    rng: Xoshiro256,
+    /// Non-refresh offers observed so far (Algorithm R's stream index).
+    seen: u64,
+}
+
+impl Reservoir {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Xoshiro256::seed_from_u64(seed),
+            seen: 0,
+        }
+    }
+}
+
+impl RetentionPolicy for Reservoir {
+    fn kind(&self) -> RetentionKind {
+        RetentionKind::Reservoir
+    }
+
+    fn on_offer(&mut self) {
+        self.seen += 1;
+    }
+
+    fn victim(
+        &mut self,
+        entries: &[Candidate],
+        excluded: &[usize],
+        _num_classes: usize,
+        _incoming: &Candidate,
+    ) -> Option<usize> {
+        let live = entries.len() - excluded.len();
+        if live == 0 || self.seen == 0 {
+            return None;
+        }
+        let j = self.rng.next_below(self.seen);
+        if (j as usize) >= live {
+            return None;
+        }
+        // map j onto the j-th live (non-excluded) slot
+        let mut k = j as usize;
+        for i in 0..entries.len() {
+            if excluded.binary_search(&i).is_ok() {
+                continue;
+            }
+            if k == 0 {
+                return Some(i);
+            }
+            k -= 1;
+        }
+        None // unreachable: live > j was checked above
+    }
+
+    fn export(&self) -> Option<PolicyState> {
+        Some(PolicyState {
+            rng: self.rng.state(),
+            seen: self.seen,
+        })
+    }
+
+    fn restore(&mut self, st: Option<PolicyState>) -> Result<()> {
+        let st = st.ok_or_else(|| {
+            Error::Data("reservoir retention needs policy state in the snapshot".into())
+        })?;
+        self.rng = Xoshiro256::from_state(st.rng)?;
+        self.seen = st.seen;
+        Ok(())
+    }
+}
+
+/// The byte-budgeted persistent sample store. Entries are kept in
+/// admission order (the slot order policies and snapshots see); the
+/// budget is checked on every admit with [`sample_cost`] per entry.
+pub struct SampleStore {
+    budget: usize,
+    num_classes: usize,
+    entries: Vec<Candidate>,
+    bytes: usize,
+    policy: Box<dyn RetentionPolicy>,
+    telemetry: RetentionTelemetry,
+}
+
+impl SampleStore {
+    pub fn new(budget_bytes: usize, num_classes: usize, kind: RetentionKind, seed: u64) -> Self {
+        Self {
+            budget: budget_bytes,
+            num_classes,
+            entries: Vec::new(),
+            bytes: 0,
+            policy: kind.policy(seed),
+            telemetry: RetentionTelemetry::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn bytes_held(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    pub fn kind(&self) -> RetentionKind {
+        self.policy.kind()
+    }
+
+    /// Retained entries in slot (admission) order.
+    pub fn entries(&self) -> &[Candidate] {
+        &self.entries
+    }
+
+    pub fn telemetry(&self) -> &RetentionTelemetry {
+        &self.telemetry
+    }
+
+    /// Count samples emitted into a training round (`retained` of them
+    /// drawn from this store, `total` overall) — the hit-rate inputs.
+    pub fn note_emitted(&mut self, retained: u64, total: u64) {
+        self.telemetry.retained_emitted += retained;
+        self.telemetry.emitted_total += total;
+    }
+
+    /// Offer one scored candidate. Duplicate ids refresh the stored score
+    /// in place (no byte movement). Non-finite scores, out-of-range
+    /// labels, and entries that could never fit the budget are rejected
+    /// outright; otherwise the policy picks victims until the entry fits
+    /// or refuses, in which case nothing is evicted and the offer is
+    /// rejected (two-phase: a refusal midway must not half-empty the
+    /// store).
+    pub fn offer(&mut self, c: Candidate) -> Offer {
+        self.telemetry.offers += 1;
+        let cost = sample_cost(c.sample.dim());
+        if !c.score.is_finite() || (c.sample.label as usize) >= self.num_classes || cost > self.budget
+        {
+            self.telemetry.rejects += 1;
+            return Offer::Rejected;
+        }
+        if let Some(e) = self.entries.iter_mut().find(|e| e.sample.id == c.sample.id) {
+            e.score = c.score;
+            self.telemetry.refreshes += 1;
+            return Offer::Refreshed;
+        }
+        self.policy.on_offer();
+        let mut excluded: Vec<usize> = Vec::new();
+        let mut freed = 0usize;
+        while self.bytes + cost - freed > self.budget {
+            match self
+                .policy
+                .victim(&self.entries, &excluded, self.num_classes, &c)
+            {
+                Some(i) => {
+                    debug_assert!(i < self.entries.len());
+                    debug_assert!(excluded.binary_search(&i).is_err());
+                    freed += sample_cost(self.entries[i].sample.dim());
+                    let pos = excluded.partition_point(|&e| e < i);
+                    excluded.insert(pos, i);
+                }
+                None => {
+                    self.telemetry.rejects += 1;
+                    return Offer::Rejected;
+                }
+            }
+        }
+        let kind = self.policy.kind();
+        for &i in excluded.iter().rev() {
+            self.entries.remove(i);
+            self.telemetry.bump_evict(kind);
+        }
+        self.bytes = self.bytes + cost - freed;
+        self.entries.push(c);
+        self.telemetry.admits += 1;
+        self.telemetry.bytes_held = self.bytes as u64;
+        Offer::Admitted
+    }
+
+    /// Offer a whole drained candidate batch in order.
+    pub fn offer_all(&mut self, cs: Vec<Candidate>) {
+        for c in cs {
+            self.offer(c);
+        }
+    }
+
+    pub fn export_entries(&self) -> Vec<Candidate> {
+        self.entries.clone()
+    }
+
+    pub fn export_policy(&self) -> Option<PolicyState> {
+        self.policy.export()
+    }
+
+    /// Restore store contents + telemetry + policy state from a snapshot.
+    /// Validates what [`SampleStore::offer`] could never have produced:
+    /// non-finite scores, out-of-range labels, duplicate ids, and a byte
+    /// total over the budget.
+    pub fn restore(
+        &mut self,
+        entries: Vec<Candidate>,
+        telemetry: RetentionTelemetry,
+        policy: Option<PolicyState>,
+    ) -> Result<()> {
+        let mut bytes = 0usize;
+        for c in &entries {
+            if !c.score.is_finite() {
+                return Err(Error::Data(format!(
+                    "store restore: non-finite score on sample {}",
+                    c.sample.id
+                )));
+            }
+            if (c.sample.label as usize) >= self.num_classes {
+                return Err(Error::Data(format!(
+                    "store restore: label {} out of range (num_classes {})",
+                    c.sample.label, self.num_classes
+                )));
+            }
+            bytes += sample_cost(c.sample.dim());
+        }
+        if bytes > self.budget {
+            return Err(Error::Data(format!(
+                "store restore: {bytes} bytes exceed the {}-byte budget",
+                self.budget
+            )));
+        }
+        let mut ids: Vec<u64> = entries.iter().map(|c| c.sample.id).collect();
+        ids.sort_unstable();
+        if ids.windows(2).any(|w| w[0] == w[1]) {
+            return Err(Error::Data("store restore: duplicate sample id".into()));
+        }
+        self.policy.restore(policy)?;
+        self.entries = entries;
+        self.bytes = bytes;
+        self.telemetry = telemetry;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Sample;
+
+    /// dim-1 candidate: every entry costs `sample_cost(1)` = 36 bytes.
+    fn c(id: u64, label: u32, score: f64) -> Candidate {
+        Candidate {
+            sample: Sample::new(id, label, vec![0.5]),
+            score,
+        }
+    }
+
+    /// Budget that fits exactly `n` dim-1 entries.
+    fn fit(n: usize) -> usize {
+        n * sample_cost(1)
+    }
+
+    fn ids(store: &SampleStore) -> Vec<u64> {
+        store.entries().iter().map(|e| e.sample.id).collect()
+    }
+
+    #[test]
+    fn cost_model_is_features_plus_overhead() {
+        assert_eq!(sample_cost(0), SAMPLE_OVERHEAD_BYTES);
+        assert_eq!(sample_cost(64), 64 * 4 + SAMPLE_OVERHEAD_BYTES);
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [
+            RetentionKind::Score,
+            RetentionKind::Balanced,
+            RetentionKind::Reservoir,
+        ] {
+            assert_eq!(RetentionKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(RetentionKind::parse("lru").is_err());
+    }
+
+    #[test]
+    fn zero_budget_store_rejects_everything() {
+        let mut st = SampleStore::new(0, 10, RetentionKind::Score, 1);
+        for i in 0..5 {
+            assert_eq!(st.offer(c(i, 0, i as f64)), Offer::Rejected);
+        }
+        assert!(st.is_empty());
+        assert_eq!(st.bytes_held(), 0);
+        assert_eq!(st.telemetry().rejects, 5);
+        assert_eq!(st.telemetry().admits, 0);
+    }
+
+    #[test]
+    fn admits_until_budget_then_policy_decides() {
+        let mut st = SampleStore::new(fit(3), 10, RetentionKind::Score, 1);
+        assert_eq!(st.offer(c(0, 0, 1.0)), Offer::Admitted);
+        assert_eq!(st.offer(c(1, 1, 3.0)), Offer::Admitted);
+        assert_eq!(st.offer(c(2, 2, 2.0)), Offer::Admitted);
+        assert_eq!(st.bytes_held(), fit(3));
+        // worse than everything stored -> rejected, store untouched
+        assert_eq!(st.offer(c(3, 0, 0.5)), Offer::Rejected);
+        assert_eq!(ids(&st), vec![0, 1, 2]);
+        // better than the worst (score 1.0 at id 0) -> evicts it
+        assert_eq!(st.offer(c(4, 0, 5.0)), Offer::Admitted);
+        assert_eq!(ids(&st), vec![1, 2, 4]);
+        let t = st.telemetry();
+        assert_eq!(
+            (t.offers, t.admits, t.rejects, t.evicts_score),
+            (5, 4, 1, 1)
+        );
+        assert_eq!(t.bytes_held, fit(3) as u64);
+    }
+
+    #[test]
+    fn score_weighted_tie_break_is_pinned() {
+        // eviction order: score asc / id desc — among equal scores the
+        // LARGEST id is evicted first (the incoming candidate, having the
+        // largest id of all, loses ties against anything stored)
+        let mut st = SampleStore::new(fit(2), 10, RetentionKind::Score, 1);
+        st.offer(c(1, 0, 1.0));
+        st.offer(c(2, 0, 1.0));
+        // equal score, larger id than both stored -> rejected
+        assert_eq!(st.offer(c(3, 0, 1.0)), Offer::Rejected);
+        assert_eq!(ids(&st), vec![1, 2]);
+        // equal score, SMALLER id than the stored worst (id 2) -> id 2,
+        // the largest equal-score id, is evicted first
+        assert_eq!(st.offer(c(0, 0, 1.0)), Offer::Admitted);
+        assert_eq!(ids(&st), vec![1, 0]);
+    }
+
+    #[test]
+    fn score_weighted_survivors_are_arrival_independent() {
+        // same offer set in different orders -> same surviving id set
+        let offers = [
+            (10u64, 0.9),
+            (11, 0.1),
+            (12, 0.5),
+            (13, 0.5),
+            (14, 0.7),
+            (15, 0.2),
+        ];
+        let survivors = |order: &[usize]| -> Vec<u64> {
+            let mut st = SampleStore::new(fit(3), 4, RetentionKind::Score, 1);
+            for &i in order {
+                let (id, s) = offers[i];
+                st.offer(c(id, (id % 4) as u32, s));
+            }
+            let mut v = ids(&st);
+            v.sort_unstable();
+            v
+        };
+        let want = survivors(&[0, 1, 2, 3, 4, 5]);
+        // top-3 by (score desc, id asc): 10 (0.9), 14 (0.7), 12 (0.5 —
+        // beats the equal-scored 13 by smaller id)
+        assert_eq!(want, vec![10, 12, 14]);
+        assert_eq!(survivors(&[5, 4, 3, 2, 1, 0]), want);
+        assert_eq!(survivors(&[2, 0, 5, 3, 1, 4]), want);
+        assert_eq!(survivors(&[3, 2, 4, 0, 1, 5]), want);
+    }
+
+    #[test]
+    fn class_balanced_evicts_most_overrepresented_class() {
+        let mut st = SampleStore::new(fit(4), 3, RetentionKind::Balanced, 1);
+        st.offer(c(0, 0, 0.9));
+        st.offer(c(1, 0, 0.2));
+        st.offer(c(2, 0, 0.5));
+        st.offer(c(3, 1, 0.1));
+        // class 0 holds 3 of 4 slots; its lowest score (id 1) goes first
+        assert_eq!(st.offer(c(4, 2, 0.0)), Offer::Admitted);
+        assert_eq!(ids(&st), vec![0, 2, 3, 4]);
+        assert_eq!(st.telemetry().evicts_balanced, 1);
+        // now classes hold 2/1/1 -> class 0 again; equal scores would tie
+        // by smallest id, here lowest score is id 2 (0.5)
+        assert_eq!(st.offer(c(5, 1, 0.0)), Offer::Admitted);
+        assert_eq!(ids(&st), vec![0, 3, 4, 5]);
+    }
+
+    #[test]
+    fn class_balanced_class_tie_picks_smallest_class() {
+        let mut st = SampleStore::new(fit(2), 4, RetentionKind::Balanced, 1);
+        st.offer(c(0, 2, 0.5));
+        st.offer(c(1, 1, 0.5));
+        // classes 1 and 2 tied at one entry each -> class 1 (smaller
+        // index) loses its only entry
+        assert_eq!(st.offer(c(2, 3, 0.5)), Offer::Admitted);
+        assert_eq!(ids(&st), vec![0, 2]);
+    }
+
+    #[test]
+    fn refresh_updates_score_without_bytes() {
+        let mut st = SampleStore::new(fit(2), 10, RetentionKind::Score, 1);
+        st.offer(c(7, 0, 1.0));
+        let before = st.bytes_held();
+        assert_eq!(st.offer(c(7, 0, 9.0)), Offer::Refreshed);
+        assert_eq!(st.bytes_held(), before);
+        assert_eq!(st.len(), 1);
+        assert_eq!(st.entries()[0].score, 9.0);
+        assert_eq!(st.telemetry().refreshes, 1);
+        // the refreshed score now wins evictions
+        st.offer(c(8, 0, 2.0));
+        assert_eq!(st.offer(c(9, 0, 3.0)), Offer::Admitted);
+        assert_eq!(ids(&st), vec![7, 9]);
+    }
+
+    #[test]
+    fn rejects_bad_label_and_non_finite_score() {
+        let mut st = SampleStore::new(fit(4), 3, RetentionKind::Score, 1);
+        assert_eq!(st.offer(c(0, 3, 1.0)), Offer::Rejected);
+        assert_eq!(st.offer(c(1, 0, f64::NAN)), Offer::Rejected);
+        assert_eq!(st.offer(c(2, 0, f64::INFINITY)), Offer::Rejected);
+        assert!(st.is_empty());
+        assert_eq!(st.telemetry().rejects, 3);
+    }
+
+    #[test]
+    fn oversize_sample_is_rejected_not_evicting() {
+        let mut st = SampleStore::new(fit(2), 10, RetentionKind::Score, 1);
+        st.offer(c(0, 0, 1.0));
+        st.offer(c(1, 0, 2.0));
+        // a sample bigger than the whole budget must not drain the store
+        let big = Candidate {
+            sample: Sample::new(9, 0, vec![0.0; 1000]),
+            score: 99.0,
+        };
+        assert_eq!(st.offer(big), Offer::Rejected);
+        assert_eq!(st.len(), 2);
+    }
+
+    #[test]
+    fn heterogeneous_dims_evict_multiple_victims_atomically() {
+        // budget fits 4 small entries; a double-size offer with a top
+        // score must evict TWO victims, or none at all on refusal
+        let mut st = SampleStore::new(4 * sample_cost(2), 10, RetentionKind::Score, 1);
+        for i in 0..4u64 {
+            st.offer(Candidate {
+                sample: Sample::new(i, 0, vec![0.0; 2]),
+                score: i as f64,
+            });
+        }
+        assert_eq!(st.len(), 4);
+        let wide = |id: u64, score: f64| Candidate {
+            sample: Sample::new(id, 0, vec![0.0; 2 + SAMPLE_OVERHEAD_BYTES / 4]),
+            score,
+        };
+        // worth less than the second victim (score 1.0) -> the policy
+        // refuses midway and the first victim must NOT have been evicted
+        assert_eq!(st.offer(wide(10, 0.5)), Offer::Rejected);
+        assert_eq!(st.len(), 4);
+        assert_eq!(st.bytes_held(), 4 * sample_cost(2));
+        // worth more than both victims -> evicts scores 0.0 and 1.0
+        assert_eq!(st.offer(wide(11, 9.0)), Offer::Admitted);
+        assert_eq!(ids(&st), vec![2, 3, 11]);
+        assert_eq!(st.telemetry().evicts_score, 2);
+        assert_eq!(st.bytes_held(), 4 * sample_cost(2));
+    }
+
+    /// Independent re-implementation of the documented reservoir
+    /// semantics: i-th offer draws j ∈ [0, i); j < len evicts slot j and
+    /// appends, else rejects.
+    fn reservoir_oracle(seed: u64, cap: usize, offers: &[(u64, u32)]) -> Vec<u64> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut kept: Vec<u64> = Vec::new();
+        let mut seen = 0u64;
+        for &(id, _label) in offers {
+            seen += 1;
+            if kept.len() < cap {
+                kept.push(id);
+                continue;
+            }
+            let j = rng.next_below(seen);
+            if (j as usize) < kept.len() {
+                kept.remove(j as usize);
+                kept.push(id);
+            }
+        }
+        kept
+    }
+
+    #[test]
+    fn reservoir_matches_brute_force_oracle() {
+        crate::util::prop::forall(
+            0x4E5E_4701,
+            30,
+            |rng| {
+                vec![
+                    1 + rng.index(20) as f64,  // capacity in entries
+                    50 + rng.index(400) as f64, // offer count
+                    rng.next_u64() as f64,      // truncated seed (fine)
+                ]
+            },
+            |params| {
+                if params.len() < 3 {
+                    return Ok(()); // shrunk below the parameter arity
+                }
+                let cap = (params[0] as usize).max(1);
+                let n = params[1] as usize;
+                let seed = params[2] as u64;
+                let offers: Vec<(u64, u32)> =
+                    (0..n as u64).map(|i| (i, (i % 7) as u32)).collect();
+                let mut st = SampleStore::new(fit(cap), 7, RetentionKind::Reservoir, seed);
+                for &(id, label) in &offers {
+                    st.offer(c(id, label, 0.0));
+                }
+                let got = ids(&st);
+                let want = reservoir_oracle(seed, cap, &offers);
+                if got != want {
+                    return Err(format!("store {got:?} != oracle {want:?}"));
+                }
+                // same seed, fresh store -> identical retained set
+                let mut st2 = SampleStore::new(fit(cap), 7, RetentionKind::Reservoir, seed);
+                for &(id, label) in &offers {
+                    st2.offer(c(id, label, 0.0));
+                }
+                if ids(&st2) != got {
+                    return Err("same seed diverged".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn reservoir_per_class_frequencies_are_uniform() {
+        // 10k offers cycling 10 classes into a 200-entry reservoir: each
+        // class should hold ~20 slots; aggregate over seeds to bound the
+        // variance and require every class within ±50% of fair share
+        let classes = 10u32;
+        let cap = 200usize;
+        let mut totals = vec![0u64; classes as usize];
+        for seed in 0..5u64 {
+            let mut st = SampleStore::new(fit(cap), classes as usize, RetentionKind::Reservoir, seed);
+            for i in 0..10_000u64 {
+                st.offer(c(i, (i % classes as u64) as u32, 0.0));
+            }
+            assert_eq!(st.len(), cap);
+            for e in st.entries() {
+                totals[e.sample.label as usize] += 1;
+            }
+        }
+        let fair = (5 * cap) as f64 / classes as f64; // 100 per class
+        for (cls, &n) in totals.iter().enumerate() {
+            assert!(
+                (n as f64) > fair * 0.5 && (n as f64) < fair * 1.5,
+                "class {cls} holds {n} of ~{fair} expected slots"
+            );
+        }
+    }
+
+    #[test]
+    fn export_restore_continues_identically() {
+        for kind in [
+            RetentionKind::Score,
+            RetentionKind::Balanced,
+            RetentionKind::Reservoir,
+        ] {
+            let mut live = SampleStore::new(fit(5), 4, kind, 42);
+            for i in 0..12u64 {
+                live.offer(c(i, (i % 4) as u32, (i % 5) as f64));
+            }
+            let mut resumed = SampleStore::new(fit(5), 4, kind, 999); // seed overwritten by restore
+            resumed
+                .restore(
+                    live.export_entries(),
+                    live.telemetry().clone(),
+                    live.export_policy(),
+                )
+                .unwrap();
+            for i in 12..30u64 {
+                let offer = c(i, (i % 4) as u32, (i % 5) as f64);
+                assert_eq!(live.offer(offer.clone()), resumed.offer(offer), "{kind:?} @ {i}");
+            }
+            assert_eq!(ids(&live), ids(&resumed), "{kind:?}");
+            assert_eq!(live.telemetry(), resumed.telemetry(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn restore_rejects_invalid_state() {
+        let mut st = SampleStore::new(fit(2), 3, RetentionKind::Score, 1);
+        let t = RetentionTelemetry::default();
+        // over budget
+        let too_many = vec![c(0, 0, 0.0), c(1, 0, 0.0), c(2, 0, 0.0)];
+        assert!(st.restore(too_many, t.clone(), None).is_err());
+        // duplicate ids
+        assert!(st.restore(vec![c(5, 0, 0.0), c(5, 1, 1.0)], t.clone(), None).is_err());
+        // bad label
+        assert!(st.restore(vec![c(0, 7, 0.0)], t.clone(), None).is_err());
+        // non-finite score
+        assert!(st.restore(vec![c(0, 0, f64::NAN)], t.clone(), None).is_err());
+        // stateless policy handed policy state
+        let snap = PolicyState { rng: [1, 2, 3, 4], seen: 9 };
+        assert!(st.restore(vec![], t.clone(), Some(snap)).is_err());
+        // reservoir without policy state
+        let mut rs = SampleStore::new(fit(2), 3, RetentionKind::Reservoir, 1);
+        assert!(rs.restore(vec![], t, None).is_err());
+    }
+
+    #[test]
+    fn telemetry_json_roundtrip_and_merge() {
+        let mut t = RetentionTelemetry {
+            offers: 100,
+            admits: 60,
+            refreshes: 5,
+            rejects: 35,
+            evicts_score: 40,
+            evicts_balanced: 0,
+            evicts_reservoir: 0,
+            bytes_held: 720,
+            retained_emitted: 30,
+            emitted_total: 120,
+        };
+        assert_eq!(t.hit_rate(), 0.25);
+        assert_eq!(t.evicts_total(), 40);
+        let j = crate::util::json::Json::parse(&t.to_json().to_string_compact()).unwrap();
+        assert_eq!(RetentionTelemetry::from_json(&j).unwrap(), t);
+        let u = t.clone();
+        t.merge(&u);
+        assert_eq!(t.offers, 200);
+        assert_eq!(t.bytes_held, 1440);
+        assert_eq!(t.hit_rate(), 0.25);
+        assert_eq!(RetentionTelemetry::default().hit_rate(), 0.0);
+    }
+}

@@ -10,12 +10,16 @@
 #   6. resume smoke               halt a checkpointed run mid-way, resume
 #      it, and diff the final record JSON against an uninterrupted
 #      reference on every deterministic field (artifact-gated)
-#   7. chaos smoke                fault-injected fleet runs: a zero-rate
+#   7. retention smoke            a byte-budgeted (--store-bytes) run is
+#      halted and resumed; the record — cumulative RetentionTelemetry
+#      included — must diff clean against the uninterrupted reference
+#      (artifact-gated)
+#   8. chaos smoke                fault-injected fleet runs: a zero-rate
 #      plan diffs clean against no plan, and two runs with the same
 #      fault seed under restart supervision diff clean on every
 #      deterministic FleetRecord field, telemetry included
 #      (artifact-gated)
-#   8. bench smoke                every bench target in fast mode
+#   9. bench smoke                every bench target in fast mode
 #      (TITAN_BENCH_FAST=1 via scripts/bench_smoke.sh; catches bench
 #      bit-rot without paying full measurement windows), then the
 #      speedup regression gate: bench_report.py --check-only fails if
@@ -76,6 +80,30 @@ if [ -f artifacts/mlp/meta.json ]; then
     "$smoke_dir/reference.json" "$smoke_dir/resumed.json"
 else
   echo "skipping resume smoke: no artifacts (run \`make artifacts\`)"
+fi
+
+echo "== retention smoke =="
+if [ -f artifacts/mlp/meta.json ]; then
+  ret_dir="results/retention_smoke"
+  rm -rf "$ret_dir"
+  mkdir -p "$ret_dir"
+  ret_flags=(run --model mlp --method titan --sequential --rounds 6 \
+    --eval-every 2 --test-size 200 \
+    --store-bytes 65536 --retention balanced --replay-mix 0.25)
+  # uninterrupted reference of a retaining run
+  cargo run --release --quiet -- "${ret_flags[@]}"
+  mv results/run_mlp_titan.json "$ret_dir/reference.json"
+  # same run killed after round 3 and resumed: the store contents,
+  # policy RNG, and telemetry ride the snapshot, so the resumed record
+  # must diff clean on every deterministic field, retention included
+  cargo run --release --quiet -- "${ret_flags[@]}" \
+    --checkpoint "$ret_dir/ck.json" --checkpoint-every 2 --halt-after 3
+  cargo run --release --quiet -- run --resume "$ret_dir/ck.json"
+  mv results/run_mlp_titan.json "$ret_dir/resumed.json"
+  python3 "$script_dir/diff_records.py" \
+    "$ret_dir/reference.json" "$ret_dir/resumed.json"
+else
+  echo "skipping retention smoke: no artifacts (run \`make artifacts\`)"
 fi
 
 echo "== chaos smoke =="

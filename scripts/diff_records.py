@@ -30,6 +30,9 @@ DETERMINISTIC_TOP = [
     "energy_j",
     "avg_power_w",
     "peak_memory_bytes",
+    # cumulative RetentionTelemetry (counts + bytes; absent for
+    # unbudgeted runs, and absence must match too)
+    "retention",
 ]
 DETERMINISTIC_CURVE = [
     "round",
@@ -47,6 +50,7 @@ DETERMINISTIC_FLEET_TOP = [
     "energy_j",
     "peak_memory_bytes",
     "faults",
+    "retention",
 ]
 DETERMINISTIC_SESSION = [
     "name",
