@@ -11,8 +11,7 @@
 //!
 //! Run: `cargo run --release --example retention`
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use titan::config::{presets, Method};
 use titan::coordinator::session::{Control, RoundObserver};
@@ -27,17 +26,17 @@ use titan::util::logging;
 /// exercise the hooks the way a monitoring integration would).
 #[derive(Clone, Default)]
 struct Tap {
-    curve: Rc<RefCell<Vec<CurvePoint>>>,
-    telemetry: Rc<RefCell<Option<RetentionTelemetry>>>,
+    curve: Arc<Mutex<Vec<CurvePoint>>>,
+    telemetry: Arc<Mutex<Option<RetentionTelemetry>>>,
 }
 
 impl RoundObserver for Tap {
     fn on_eval(&mut self, point: &CurvePoint) -> Control {
-        self.curve.borrow_mut().push(*point);
+        self.curve.lock().unwrap().push(*point);
         Control::Continue
     }
     fn on_retention(&mut self, _round: usize, telemetry: &RetentionTelemetry) -> Control {
-        *self.telemetry.borrow_mut() = Some(telemetry.clone());
+        *self.telemetry.lock().unwrap() = Some(telemetry.clone());
         Control::Continue
     }
 }
@@ -92,11 +91,11 @@ fn main() -> titan::Result<()> {
         print!("  {label:>10}");
     }
     println!();
-    let n = results[0].1.curve.borrow().len();
+    let n = results[0].1.curve.lock().unwrap().len();
     for i in 0..n {
-        print!("{:>8}", results[0].1.curve.borrow()[i].round);
+        print!("{:>8}", results[0].1.curve.lock().unwrap()[i].round);
         for (_, tap, _) in &results {
-            let curve = tap.curve.borrow();
+            let curve = tap.curve.lock().unwrap();
             match curve.get(i) {
                 Some(p) => print!("  {:>9.2}%", p.test_accuracy * 100.0),
                 None => print!("  {:>10}", "-"),
@@ -107,7 +106,7 @@ fn main() -> titan::Result<()> {
 
     println!("\nstore telemetry (from the on_retention hook):");
     for (label, tap, _) in &results {
-        match tap.telemetry.borrow().as_ref() {
+        match tap.telemetry.lock().unwrap().as_ref() {
             Some(t) => println!(
                 "  {label:<10} offers {:>6}  admits {:>5}  evicts {:>5}  bytes {:>6}  hit_rate {:.3}",
                 t.offers,

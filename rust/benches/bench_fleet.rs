@@ -1,0 +1,51 @@
+//! Bench: fleet host at scale — end-to-end wall time for n one-round
+//! light sessions on the single-thread host (`t1`) vs the sharded
+//! work-stealing host (`t4`). The per-session work is identical across
+//! thread counts (that is the determinism contract), so the t1/t4 ratio
+//! is pure host-level speedup and the `sched_overhead_per_tick_ms`
+//! fields in the resulting FleetRecord bound the scheduler's own cost.
+//!
+//! Run: `cargo bench --bench bench_fleet`
+
+use titan::config::{presets, Method};
+use titan::coordinator::host::{parse_policy, FleetBuilder};
+use titan::coordinator::SessionBuilder;
+use titan::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new("fleet");
+    if !std::path::Path::new("artifacts/mlp/meta.json").exists() {
+        eprintln!("skipping fleet benches: run `make artifacts` first");
+        b.finish();
+        return;
+    }
+    // fast (smoke) mode caps the fleet size: a 10k-session fleet is a
+    // full-bench measurement, not a compile-rot check
+    let fast = std::env::var("TITAN_BENCH_FAST").is_ok();
+    let sizes: &[usize] = if fast { &[100, 1000] } else { &[100, 1000, 10_000] };
+    if fast {
+        eprintln!("fast mode: skipping fleet_rr_n10000_t{{1,4}} (run full `cargo bench` for them)");
+    }
+    for &n in sizes {
+        for &threads in &[1usize, 4] {
+            b.bench(&format!("fleet_rr_n{n}_t{threads}"), || {
+                let mut fleet = FleetBuilder::new()
+                    .policy_boxed(parse_policy("rr").unwrap())
+                    .host_threads(threads);
+                for i in 0..n {
+                    let mut cfg = presets::table1("mlp", Method::Rs);
+                    cfg.rounds = 1;
+                    cfg.eval_every = 0;
+                    cfg.test_size = 50;
+                    cfg.pipeline = false;
+                    cfg.seed = cfg.seed.wrapping_add(i as u64);
+                    fleet = fleet.session(format!("s{i}"), SessionBuilder::new(cfg));
+                }
+                let record = fleet.run().expect("fleet");
+                assert_eq!(record.rounds_executed, n);
+                record
+            });
+        }
+    }
+    b.finish();
+}

@@ -70,10 +70,7 @@ fn main() {
         for i in 0..3u64 {
             let mut cfg = seq_cfg.clone();
             cfg.seed = cfg.seed.wrapping_add(i);
-            fleet = fleet.session(
-                format!("s{i}"),
-                SessionBuilder::new(cfg).build().expect("build"),
-            );
+            fleet = fleet.session(format!("s{i}"), SessionBuilder::new(cfg));
         }
         fleet.run().expect("fleet")
     });

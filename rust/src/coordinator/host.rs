@@ -8,6 +8,27 @@
 //! one ready session under a pluggable [`SchedPolicy`] and advances it by
 //! exactly one [`StepEvent`].
 //!
+//! # Sharded multi-thread host
+//!
+//! One scheduler thread caps the fleet at one core.
+//! [`FleetBuilder::host_threads`] partitions the members into `t` shards
+//! by a stable hash of session index ([`shard_of`]); each shard runs its
+//! own fresh copy of the [`SchedPolicy`] ([`SchedPolicy::fresh`]) on a
+//! `std::thread::scope` worker and advances its sessions **op by op**
+//! ([`Session::step_op`]) — a slow selection stalls only its own session,
+//! not a whole tick of everyone else. An idle worker *steals* the
+//! oldest-stamped un-admitted member from the most-loaded shard's cold
+//! queue. Stealing moves whole sessions (un-started builder recipes),
+//! never mid-op state and never a *started* session: a session's engines
+//! are pinned to the worker that admitted it (the runtime's compile cache
+//! and `Rc`-shared executables are thread-local), so per-session round
+//! order is untouched and every per-session [`RunRecord`] stays
+//! bit-identical across all `host_threads` values — `host_threads = 1`
+//! runs the original single-thread loop and is the determinism oracle.
+//! Aggregates that read the host wall clock (`total_host_ms`, per-shard
+//! [`ShardStats`]) legitimately vary; everything derived from the
+//! simulated device clocks does not.
+//!
 //! Sessions are fully independent (own data source, own engines, own
 //! device sim), so the interleaving order cannot perturb any session's
 //! output: for every session that is reproducible solo — any
@@ -60,15 +81,17 @@
 //!     let mut cfg = presets::table1("mlp", method);
 //!     cfg.pipeline = false;
 //!     cfg.seed += i as u64;
-//!     fleet = fleet.session(format!("dev{i}"), SessionBuilder::new(cfg).build()?);
+//!     fleet = fleet.session(format!("dev{i}"), SessionBuilder::new(cfg));
 //! }
-//! let record = fleet.run()?;
-//! println!("{} rounds interleaved", record.rounds_executed);
+//! let record = fleet.host_threads(4).run()?;
+//! println!("{} rounds interleaved, {} steals", record.rounds_executed, record.steals);
 //! # Ok::<(), titan::Error>(())
 //! ```
 
 use std::collections::HashSet;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
 
 use crate::coordinator::session::{observers::Checkpoint, Session, SessionBuilder, StepEvent};
 use crate::coordinator::snapshot::{load_checkpoint, Loaded};
@@ -121,6 +144,17 @@ pub trait SchedPolicy {
     /// `states[task]` is current.
     fn task_ran(&mut self, _task: usize, _states: &[TaskState]) {}
 
+    /// A fresh, state-free instance of this policy for one shard worker
+    /// of the sharded host ([`FleetBuilder::host_threads`] > 1). Each
+    /// worker schedules its own shard independently, so the instance must
+    /// start from the same blank state a `new()` would. The default
+    /// `None` means the policy cannot be replicated across shards —
+    /// a sharded run then fails with [`Error::Sched`] *before* spawning
+    /// any worker. Single-thread fleets never call this.
+    fn fresh(&self) -> Option<Box<dyn SchedPolicy + Send>> {
+        None
+    }
+
     /// Display name for records and logs.
     fn name(&self) -> &'static str;
 }
@@ -146,6 +180,10 @@ impl SchedPolicy for RoundRobin {
             .unwrap_or_else(|| ready.iter().copied().min().expect("ready is non-empty"));
         self.last = Some(next);
         next
+    }
+
+    fn fresh(&self) -> Option<Box<dyn SchedPolicy + Send>> {
+        Some(Box::new(RoundRobin::new()))
     }
 
     fn name(&self) -> &'static str {
@@ -242,6 +280,10 @@ impl SchedPolicy for FewestRoundsFirst {
         self.heap.push(task, states[task].rounds_done as u64);
     }
 
+    fn fresh(&self) -> Option<Box<dyn SchedPolicy + Send>> {
+        Some(Box::new(FewestRoundsFirst::new()))
+    }
+
     fn name(&self) -> &'static str {
         "fewest-rounds-first"
     }
@@ -284,6 +326,10 @@ impl SchedPolicy for StalenessPriority {
         self.heap.push(task, states[task].last_run);
     }
 
+    fn fresh(&self) -> Option<Box<dyn SchedPolicy + Send>> {
+        Some(Box::new(StalenessPriority::new()))
+    }
+
     fn name(&self) -> &'static str {
         "priority-by-staleness"
     }
@@ -296,7 +342,10 @@ impl SchedPolicy for StalenessPriority {
 /// fail loudly here instead of hanging a drain loop or indexing out of
 /// bounds in release builds, where a `debug_assert!` would vanish.
 /// `ready` is sorted ascending (the [`SchedPolicy`] contract), so the
-/// membership check is a binary search, not a scan.
+/// membership check is a binary search, not a scan. A bad pick is a
+/// typed [`Error::Sched`] — schedulers misbehaving are a different
+/// failure class from sessions failing, and supervision must not treat
+/// one as the other.
 pub fn pick_validated(
     policy: &mut dyn SchedPolicy,
     states: &[TaskState],
@@ -305,7 +354,7 @@ pub fn pick_validated(
     debug_assert!(ready.windows(2).all(|w| w[0] < w[1]), "ready must be sorted");
     let idx = policy.pick(states, ready);
     if ready.binary_search(&idx).is_err() {
-        return Err(Error::Pipeline(format!(
+        return Err(Error::Sched(format!(
             "policy {:?} picked non-ready task {idx} (ready: {ready:?})",
             policy.name()
         )));
@@ -384,44 +433,57 @@ impl FleetObserver for FleetProgress {
 /// Rebuilds a member's [`SessionBuilder`] from scratch for
 /// [`SupervisionPolicy::Restart`]: same config, same backend, an
 /// identically constructed data source. Determinism of the fleet under
-/// restarts is exactly the determinism of this closure.
-pub type SessionFactory = Box<dyn Fn() -> Result<SessionBuilder>>;
+/// restarts is exactly the determinism of this closure. `Send` because a
+/// restartable member travels to (and between) shard workers with its
+/// factory attached.
+pub type SessionFactory = Box<dyn Fn() -> Result<SessionBuilder> + Send>;
 
 /// Builder for a [`Fleet`]: named sessions + policy + fleet observers.
+///
+/// Members are stored as **un-built** [`SessionBuilder`] recipes
+/// (validated on add — see [`SessionBuilder::validate`]) and materialized
+/// by the host that runs them: the single-thread host builds everything
+/// up front, the sharded host builds each member on the worker that
+/// admits it, which is what makes members movable (and stealable) across
+/// shard threads.
 pub struct FleetBuilder {
     names: Vec<String>,
-    sessions: Vec<Box<Session>>,
-    /// Index-aligned with `sessions`: how to rebuild each member
+    builders: Vec<SessionBuilder>,
+    /// Index-aligned with `builders`: how to rebuild each member
     /// (restart supervision); None = not restartable.
     factories: Vec<Option<SessionFactory>>,
-    /// Index-aligned with `sessions`: each member's checkpoint wiring
+    /// Index-aligned with `builders`: each member's checkpoint wiring
     /// (path, cadence); None = not checkpointed.
     checkpoints: Vec<Option<(PathBuf, usize)>>,
     policy: Box<dyn SchedPolicy>,
     supervise: SupervisionPolicy,
     fault_plan: Option<FaultPlan>,
     observers: Vec<Box<dyn FleetObserver>>,
+    host_threads: usize,
 }
 
 impl FleetBuilder {
     pub fn new() -> FleetBuilder {
         FleetBuilder {
             names: Vec::new(),
-            sessions: Vec::new(),
+            builders: Vec::new(),
             factories: Vec::new(),
             checkpoints: Vec::new(),
             policy: Box::new(RoundRobin::new()),
             supervise: SupervisionPolicy::FailFast,
             fault_plan: None,
             observers: Vec::new(),
+            host_threads: 1,
         }
     }
 
-    /// Add a session under a display name; repeatable. Sessions start
-    /// lazily, so assembling a large fleet is cheap.
-    pub fn session(mut self, name: impl Into<String>, session: Session) -> Self {
+    /// Add a session under a display name; repeatable. Sessions build and
+    /// start lazily, so assembling a large fleet is cheap; an invalid
+    /// builder surfaces from [`FleetBuilder::build`], which validates
+    /// every member by name.
+    pub fn session(mut self, name: impl Into<String>, builder: SessionBuilder) -> Self {
         self.names.push(name.into());
-        self.sessions.push(Box::new(session));
+        self.builders.push(builder);
         self.factories.push(None);
         self.checkpoints.push(None);
         self
@@ -438,11 +500,12 @@ impl FleetBuilder {
     pub fn session_restartable(
         mut self,
         name: impl Into<String>,
-        factory: impl Fn() -> Result<SessionBuilder> + 'static,
+        factory: impl Fn() -> Result<SessionBuilder> + Send + 'static,
     ) -> Result<Self> {
-        let session = factory()?.build()?;
+        let builder = factory()?;
+        builder.validate()?;
         self.names.push(name.into());
-        self.sessions.push(Box::new(session));
+        self.builders.push(builder);
         self.factories.push(Some(Box::new(factory)));
         self.checkpoints.push(None);
         Ok(self)
@@ -483,7 +546,7 @@ impl FleetBuilder {
     pub fn session_checkpointed_restartable(
         self,
         name: impl Into<String>,
-        factory: impl Fn() -> Result<SessionBuilder> + 'static,
+        factory: impl Fn() -> Result<SessionBuilder> + Send + 'static,
         path: impl Into<PathBuf>,
         every: usize,
         resume: bool,
@@ -539,9 +602,10 @@ impl FleetBuilder {
                 }
             }
         }
-        let session = builder.observe(Checkpoint::every(path.clone(), every)).build()?;
+        let builder = builder.observe(Checkpoint::every(path.clone(), every));
+        builder.validate()?;
         self.names.push(name);
-        self.sessions.push(Box::new(session));
+        self.builders.push(builder);
         self.factories.push(factory);
         self.checkpoints.push(Some((path, every)));
         Ok(self)
@@ -552,11 +616,11 @@ impl FleetBuilder {
     /// everything-already-finished resume before `build` errors on an
     /// empty fleet).
     pub fn len(&self) -> usize {
-        self.sessions.len()
+        self.builders.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.sessions.is_empty()
+        self.builders.is_empty()
     }
 
     /// Replace the default round-robin policy.
@@ -593,20 +657,40 @@ impl FleetBuilder {
         self
     }
 
-    /// Assemble the fleet. Errors on an empty session list.
+    /// Worker threads for the fleet host (clamped to ≥ 1; default 1, the
+    /// single-thread reference host). With `t > 1` sessions are
+    /// partitioned into `t` shards by [`shard_of`] and stepped at **op**
+    /// granularity on `t` scoped worker threads with work stealing; every
+    /// per-session [`RunRecord`] and every deterministic [`FleetRecord`]
+    /// field is bit-identical across thread counts (see the module docs).
+    pub fn host_threads(mut self, threads: usize) -> Self {
+        self.host_threads = threads.max(1);
+        self
+    }
+
+    /// Assemble the fleet. Errors on an empty session list, and surfaces
+    /// the first invalid member ([`SessionBuilder::validate`]) by name —
+    /// members build lazily on the host that runs them, so this is the
+    /// last pre-run moment that can name a misconfigured session cheaply.
     pub fn build(self) -> Result<Fleet> {
-        if self.sessions.is_empty() {
+        if self.builders.is_empty() {
             return Err(Error::Config("fleet needs at least one session".into()));
+        }
+        for (name, builder) in self.names.iter().zip(&self.builders) {
+            builder
+                .validate()
+                .map_err(|e| Error::Config(format!("fleet session {name:?}: {e}")))?;
         }
         Ok(Fleet {
             names: self.names,
-            sessions: self.sessions,
+            builders: self.builders,
             factories: self.factories,
             checkpoints: self.checkpoints,
             policy: self.policy,
             supervise: self.supervise,
             fault_plan: self.fault_plan,
             observers: self.observers,
+            host_threads: self.host_threads,
         })
     }
 
@@ -622,29 +706,34 @@ impl Default for FleetBuilder {
     }
 }
 
-/// N boxed sessions interleaved round-by-round under one [`SchedPolicy`].
+/// N session recipes interleaved under one [`SchedPolicy`] — round per
+/// tick on the single-thread host, op per tick on the sharded host.
 pub struct Fleet {
     names: Vec<String>,
-    sessions: Vec<Box<Session>>,
+    builders: Vec<SessionBuilder>,
     factories: Vec<Option<SessionFactory>>,
     checkpoints: Vec<Option<(PathBuf, usize)>>,
     policy: Box<dyn SchedPolicy>,
     supervise: SupervisionPolicy,
     fault_plan: Option<FaultPlan>,
     observers: Vec<Box<dyn FleetObserver>>,
+    host_threads: usize,
 }
 
 impl Fleet {
     pub fn len(&self) -> usize {
-        self.sessions.len()
+        self.builders.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.sessions.is_empty()
+        self.builders.is_empty()
     }
 
     /// Drive every session to a terminal state under the configured
-    /// supervision policy, one round per scheduler tick.
+    /// supervision policy: one round per scheduler tick on the
+    /// single-thread host, one **op** per worker tick on the sharded host
+    /// ([`FleetBuilder::host_threads`]). Both produce bit-identical
+    /// deterministic outputs; wall-clock fields vary.
     ///
     /// Under [`SupervisionPolicy::FailFast`] (the default) a session
     /// error aborts the whole fleet (the scheduler acting as a
@@ -652,12 +741,33 @@ impl Fleet {
     /// names the session that failed — the historical contract, byte for
     /// byte. `Isolate` and `Restart` turn failures into per-session
     /// [`SessionStatus`]es instead and the fleet runs to completion.
-    pub fn run(mut self) -> Result<FleetRecord> {
+    pub fn run(self) -> Result<FleetRecord> {
         if let Some(plan) = &self.fault_plan {
             plan.validate()?;
         }
-        let n = self.sessions.len();
+        if self.host_threads > 1 {
+            self.run_sharded()
+        } else {
+            self.run_single()
+        }
+    }
+
+    /// The single-thread reference host: materialize every member up
+    /// front, then the historical round-per-tick scheduler loop. This is
+    /// the determinism oracle the sharded host is pinned against.
+    fn run_single(mut self) -> Result<FleetRecord> {
+        let n = self.builders.len();
         let fleet_sw = Stopwatch::start();
+        let mut sessions: Vec<Box<Session>> = Vec::with_capacity(n);
+        for (i, builder) in std::mem::take(&mut self.builders).into_iter().enumerate() {
+            let session = builder.build().map_err(|e| {
+                Error::Pipeline(format!(
+                    "fleet session {:?}: failed to build: {e}",
+                    self.names[i]
+                ))
+            })?;
+            sessions.push(Box::new(session));
+        }
         let mut states = vec![TaskState::default(); n];
         let mut records: Vec<Option<RunRecord>> = (0..n).map(|_| None).collect();
         let mut statuses: Vec<Option<SessionStatus>> = vec![None; n];
@@ -715,11 +825,11 @@ impl Fleet {
             // fault injection, keyed on the session's own round (not the
             // fleet tick) so the plan names cells a user can reason
             // about; skipped on the finishing step, which runs no round
-            let session_round = self.sessions[idx].rounds_completed();
+            let session_round = sessions[idx].rounds_completed();
             let fault = self
                 .fault_plan
                 .as_ref()
-                .filter(|_| session_round < self.sessions[idx].cfg().rounds)
+                .filter(|_| session_round < sessions[idx].cfg().rounds)
                 .and_then(|plan| plan.fault_for(idx, session_round))
                 .filter(|_| fired.insert((idx, session_round)));
             if let Some(kind) = fault {
@@ -735,18 +845,21 @@ impl Fleet {
                         continue;
                     }
                     FaultKind::Straggler { slowdown } => {
-                        self.sessions[idx].inject_slowdown(slowdown);
+                        sessions[idx].inject_slowdown(slowdown);
                     }
                     FaultKind::EnergyBrownout { joules } => {
-                        self.sessions[idx].inject_brownout(joules);
+                        sessions[idx].inject_brownout(joules);
                     }
-                    FaultKind::CorruptCheckpoint => self.corrupt_checkpoint(idx),
+                    FaultKind::CorruptCheckpoint => {
+                        corrupt_checkpoint(self.checkpoints[idx].as_ref())
+                    }
                     FaultKind::Crash => {
                         self.handle_failure(
                             idx,
                             session_round,
                             "injected crash".into(),
                             tick,
+                            &mut sessions,
                             &states,
                             &mut ready,
                             &mut parked,
@@ -760,7 +873,7 @@ impl Fleet {
             }
 
             let step_sw = Stopwatch::start();
-            let stepped = self.sessions[idx].step();
+            let stepped = sessions[idx].step();
             step_ms += step_sw.elapsed_ms();
             let event = match stepped {
                 Ok(event) => event,
@@ -770,6 +883,7 @@ impl Fleet {
                         session_round,
                         e.to_string(),
                         tick,
+                        &mut sessions,
                         &states,
                         &mut ready,
                         &mut parked,
@@ -797,7 +911,7 @@ impl Fleet {
                     // surface for per-round data is the observer fan-out,
                     // and keeping N x R outcomes alive across in-flight
                     // sessions would grow with fleet size
-                    self.sessions[idx].take_outcomes();
+                    sessions[idx].take_outcomes();
                 }
                 StepEvent::Finished(record) => {
                     for obs in self.observers.iter_mut() {
@@ -824,6 +938,9 @@ impl Fleet {
             })
             .collect();
         let total_host_ms = fleet_sw.elapsed_ms();
+        // canonical (session, round) event order — shared with the
+        // sharded host, whose workers log concurrently
+        faults.events.sort_unstable_by_key(|e| (e.session, e.round));
         let finished = records.iter().flatten();
         // fleet-wide retention aggregate: component-wise sum over the
         // finished members that retained; None when no member did
@@ -852,6 +969,9 @@ impl Fleet {
             retention,
             total_host_ms,
             sched_overhead_ms: (total_host_ms - step_ms).max(0.0),
+            host_threads: 1,
+            steals: 0,
+            shards: Vec::new(),
         })
     }
 
@@ -865,6 +985,7 @@ impl Fleet {
         round: usize,
         reason: String,
         tick: u64,
+        sessions: &mut [Box<Session>],
         states: &[TaskState],
         ready: &mut Vec<usize>,
         parked: &mut Vec<(u64, usize)>,
@@ -886,8 +1007,14 @@ impl Fleet {
                     let reason = format!("{reason} ({max_retries} restarts exhausted)");
                     self.quarantine(idx, round, reason, ready, statuses, faults);
                 } else {
-                    match self.rebuild_session(idx) {
-                        Ok(resumed_round) => {
+                    let rebuilt = rebuild_builder(
+                        self.factories[idx].as_ref(),
+                        self.checkpoints[idx].as_ref(),
+                    )
+                    .and_then(|(builder, resumed)| Ok((builder.build()?, resumed)));
+                    match rebuilt {
+                        Ok((session, resumed_round)) => {
+                            sessions[idx] = Box::new(session);
                             restarts_used[idx] += 1;
                             faults.restarts += 1;
                             faults.rounds_recovered += round.saturating_sub(resumed_round);
@@ -937,60 +1064,756 @@ impl Fleet {
         faults.quarantines += 1;
     }
 
-    /// Rebuild session `idx` from its factory for restart supervision,
-    /// resuming from its latest valid checkpoint when it has one; a
-    /// corrupt (or otherwise unusable) checkpoint file degrades to a
-    /// fresh start — deterministic sessions reproduce the lost rounds
-    /// exactly. Returns the round the rebuilt session starts from.
-    fn rebuild_session(&mut self, idx: usize) -> Result<usize> {
-        let Some(factory) = &self.factories[idx] else {
-            return Err(Error::Config(
-                "no session factory registered (use session_restartable / \
-                 session_checkpointed_restartable)"
-                    .into(),
-            ));
+}
+
+/// Rebuild a failed member's [`SessionBuilder`] from its factory for
+/// restart supervision, resuming from its latest valid checkpoint when it
+/// has one; a corrupt (or otherwise unusable) checkpoint file degrades to
+/// a fresh start — deterministic sessions reproduce the lost rounds
+/// exactly. Returns the recipe and the round it will start from. Shared
+/// by both hosts: single-thread restarts build the result in place, shard
+/// workers re-queue it as a cold member.
+fn rebuild_builder(
+    factory: Option<&SessionFactory>,
+    checkpoint: Option<&(PathBuf, usize)>,
+) -> Result<(SessionBuilder, usize)> {
+    let Some(factory) = factory else {
+        return Err(Error::Config(
+            "no session factory registered (use session_restartable / \
+             session_checkpointed_restartable)"
+                .into(),
+        ));
+    };
+    let mut builder = factory()?;
+    let mut resumed_round = 0usize;
+    if let Some((path, every)) = checkpoint {
+        if path.exists() {
+            match load_checkpoint(path) {
+                Ok(Loaded::Resumable(snap)) => {
+                    resumed_round = snap.round;
+                    builder = builder.resume_from_snapshot(*snap);
+                }
+                Ok(Loaded::Complete { .. }) => {
+                    log::warn!(
+                        "fleet: {} marks a completed run but the session failed — \
+                         restarting from scratch",
+                        path.display()
+                    );
+                }
+                Err(e) => {
+                    log::warn!("fleet: discarding unusable checkpoint: {e}");
+                }
+            }
+        }
+        builder = builder.observe(Checkpoint::every(path.clone(), *every));
+    }
+    Ok((builder, resumed_round))
+}
+
+/// Injected checkpoint corruption: truncate the member's on-disk
+/// snapshot to half its size (a torn write). The typed loader rejects
+/// the remnant, so a later restart falls back to a fresh start; a
+/// member without checkpoint wiring makes this a no-op.
+fn corrupt_checkpoint(checkpoint: Option<&(PathBuf, usize)>) {
+    let Some((path, _)) = checkpoint else { return };
+    let Ok(meta) = std::fs::metadata(path) else { return };
+    let result = std::fs::OpenOptions::new()
+        .write(true)
+        .open(path)
+        .and_then(|f| f.set_len(meta.len() / 2));
+    if let Err(e) = result {
+        log::warn!("fleet: corrupt-checkpoint fault on {} failed: {e}", path.display());
+    }
+}
+
+/// Stable session-index → shard map (the splitmix64 finalizer over the
+/// index, reduced mod `threads`): uniform across shard counts, and a pure
+/// function of `(idx, threads)`, so a fleet's home-shard layout is
+/// reproducible without running anything.
+pub fn shard_of(idx: usize, threads: usize) -> usize {
+    let mut z = (idx as u64).wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z % threads.max(1) as u64) as usize
+}
+
+/// Per-shard scheduler accounting for one sharded fleet run
+/// ([`FleetRecord::shards`]). Wall-clock fields (`host_ms`, `step_ms`,
+/// `sched_overhead_ms`) and the steal counters vary run to run — they
+/// describe the host, not the simulation — while the per-session records
+/// the shard produced stay bit-identical.
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    /// Shard index (== worker thread index).
+    pub shard: usize,
+    /// Sessions this worker admitted (home members plus stolen-in ones,
+    /// counting each restart re-admission).
+    pub sessions: usize,
+    /// Scheduler ticks the worker executed (one session op each).
+    pub ops: u64,
+    /// Rounds completed on this shard.
+    pub rounds: usize,
+    /// Cold members this worker stole from other shards' queues.
+    pub steals_in: u64,
+    /// Cold members other workers stole from this shard's queue.
+    pub steals_out: u64,
+    /// Worker wall clock (ms).
+    pub host_ms: f64,
+    /// Wall clock inside [`Session::step_op`] (ms).
+    pub step_ms: f64,
+    /// `host_ms − step_ms`, floored at zero: scheduling, fault injection
+    /// and queue bookkeeping.
+    pub sched_overhead_ms: f64,
+}
+
+impl ShardStats {
+    /// Scheduling overhead amortized per scheduler tick (ms); 0 for a
+    /// worker that never ran an op.
+    pub fn sched_overhead_per_tick_ms(&self) -> f64 {
+        if self.ops == 0 {
+            0.0
+        } else {
+            self.sched_overhead_ms / self.ops as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shard", Json::Num(self.shard as f64)),
+            ("sessions", Json::Num(self.sessions as f64)),
+            ("ops", Json::Num(self.ops as f64)),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("steals_in", Json::Num(self.steals_in as f64)),
+            ("steals_out", Json::Num(self.steals_out as f64)),
+            ("host_ms", Json::Num(self.host_ms)),
+            ("step_ms", Json::Num(self.step_ms)),
+            ("sched_overhead_ms", Json::Num(self.sched_overhead_ms)),
+            ("sched_overhead_per_tick_ms", Json::Num(self.sched_overhead_per_tick_ms())),
+        ])
+    }
+}
+
+/// A not-yet-started fleet member: a `Send` recipe sitting in (and
+/// movable between) shard queues. Everything a worker needs to run and
+/// supervise the session travels with the member, which is what makes
+/// stealing a queue splice instead of a state migration.
+struct ColdMember {
+    idx: usize,
+    builder: SessionBuilder,
+    factory: Option<SessionFactory>,
+    checkpoint: Option<(PathBuf, usize)>,
+    /// Fleet-wide admission age (initial members: their session index;
+    /// restart re-queues: a shared counter). "Oldest" — the steal
+    /// victim's minimum stamp — is therefore well defined fleet-wide.
+    stamp: u64,
+    /// Earliest owning-worker tick at which the member may be admitted
+    /// (restart backoff; 0 for initial members).
+    wake_at: u64,
+    /// Scheduling bookkeeping carried across restarts, like the
+    /// single-thread host's persistent per-session `TaskState`.
+    state: TaskState,
+    restarts_used: usize,
+    /// Session-rounds whose injected fault already fired (a restarted
+    /// member replaying earlier rounds must not re-crash on the same
+    /// cell).
+    fired: HashSet<usize>,
+}
+
+/// A started — and therefore worker-pinned — member. Sessions share
+/// thread-local runtime state once started, so a hot member never
+/// migrates; only its [`ColdMember`] form does.
+struct HotMember {
+    session: Box<Session>,
+    factory: Option<SessionFactory>,
+    checkpoint: Option<(PathBuf, usize)>,
+    restarts_used: usize,
+    fired: HashSet<usize>,
+}
+
+/// Worker → main-thread event stream: everything the (possibly
+/// non-`Send`) fleet observers and the aggregate record need, in
+/// per-shard completion order. The main thread owns observer fan-out and
+/// record assembly; workers own stepping and supervision.
+enum HostEvent {
+    Round { session: usize, outcome: RoundOutcome },
+    Finished { session: usize, record: Box<RunRecord> },
+    Fault { session: usize, round: usize, kind: &'static str },
+    Quarantined { session: usize, round: usize, reason: String },
+}
+
+/// Trips the shared stop flag if its worker unwinds: a panicking shard
+/// must not leave the surviving workers spinning on `live > 0` forever.
+struct PanicStop<'a>(&'a AtomicBool);
+
+impl Drop for PanicStop<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.store(true, Ordering::Release);
+        }
+    }
+}
+
+/// One shard's scheduler: a worker-local policy over worker-local hot
+/// members, fed from the shard's cold queue (and, when idle, from other
+/// shards' queues via stealing). Indices are fleet-global throughout —
+/// `states`/`hot` are full-length vectors so policies see the same
+/// `TaskState` shapes as the single-thread host.
+struct ShardWorker<'a> {
+    shard: usize,
+    supervise: SupervisionPolicy,
+    plan: Option<&'a FaultPlan>,
+    names: &'a [String],
+    queues: &'a [Mutex<Vec<ColdMember>>],
+    steals_out: &'a [AtomicU64],
+    /// Fleet-wide count of members not yet in a terminal state; 0 is the
+    /// shutdown signal.
+    live: &'a AtomicUsize,
+    stop: &'a AtomicBool,
+    /// Shared stamp source for restart re-queues.
+    stamps: &'a AtomicU64,
+    /// FailFast failures, formatted into the fleet-aborting error by the
+    /// main thread (lowest session index wins).
+    failures: &'a Mutex<Vec<(usize, String)>>,
+    tx: mpsc::Sender<HostEvent>,
+    policy: Box<dyn SchedPolicy + Send>,
+    states: Vec<TaskState>,
+    hot: Vec<Option<HotMember>>,
+    /// Ready hot members, sorted ascending (the policy contract).
+    ready: Vec<usize>,
+    /// Worker-local scheduler clock: one increment per op. Restart
+    /// backoff and staleness are measured on this clock, so they are
+    /// op-granular on the sharded host (round-granular on the
+    /// single-thread host) — deterministic outputs do not depend on
+    /// either.
+    tick: u64,
+    telemetry: FaultTelemetry,
+    stats: ShardStats,
+    step_ms: f64,
+}
+
+impl ShardWorker<'_> {
+    fn run(mut self) -> Result<(FaultTelemetry, ShardStats)> {
+        let sw = Stopwatch::start();
+        while self.live.load(Ordering::Acquire) > 0 && !self.stop.load(Ordering::Relaxed) {
+            let admitted = self.admit_one()?;
+            if self.ready.is_empty() {
+                if !admitted && !self.steal() {
+                    // nothing to run, admit or steal: another worker is
+                    // finishing the stragglers
+                    std::thread::yield_now();
+                }
+                continue;
+            }
+            let idx = pick_validated(self.policy.as_mut(), &self.states, &self.ready)?;
+            self.tick_session(idx)?;
+        }
+        self.stats.host_ms = sw.elapsed_ms();
+        self.stats.step_ms = self.step_ms;
+        self.stats.sched_overhead_ms = (self.stats.host_ms - self.step_ms).max(0.0);
+        Ok((self.telemetry, self.stats))
+    }
+
+    /// Admit at most one cold member per loop iteration — the
+    /// oldest-stamped one whose `wake_at` has come — building its session
+    /// on this thread. Lazy admission keeps a 10k-session fleet from
+    /// paying 10k up-front builds before the first op runs. With nothing
+    /// ready and nothing due, jumps the local clock to the earliest
+    /// wake-up (backoff is tick-deterministic, never wall-clock).
+    fn admit_one(&mut self) -> Result<bool> {
+        let member = {
+            let mut queue = self.queues[self.shard].lock().expect("fleet queue poisoned");
+            if self.ready.is_empty() && !queue.is_empty() {
+                let wake = queue.iter().map(|m| m.wake_at).min().expect("non-empty");
+                self.tick = self.tick.max(wake);
+            }
+            queue
+                .iter()
+                .enumerate()
+                .filter(|(_, m)| m.wake_at <= self.tick)
+                .min_by_key(|(_, m)| m.stamp)
+                .map(|(i, _)| i)
+                .map(|i| queue.swap_remove(i))
         };
-        let mut builder = factory()?;
-        let mut resumed_round = 0usize;
-        if let Some((path, every)) = &self.checkpoints[idx] {
-            if path.exists() {
-                match load_checkpoint(path) {
-                    Ok(Loaded::Resumable(snap)) => {
-                        resumed_round = snap.round;
-                        builder = builder.resume_from_snapshot(*snap);
+        let Some(member) = member else { return Ok(false) };
+        let idx = member.idx;
+        let session = member.builder.build().map_err(|e| {
+            // parity with the single-thread host, where any member
+            // failing to build aborts the fleet regardless of supervision
+            Error::Pipeline(format!(
+                "fleet session {:?}: failed to build: {e}",
+                self.names[idx]
+            ))
+        })?;
+        self.hot[idx] = Some(HotMember {
+            session: Box::new(session),
+            factory: member.factory,
+            checkpoint: member.checkpoint,
+            restarts_used: member.restarts_used,
+            fired: member.fired,
+        });
+        self.states[idx] = member.state;
+        if let Err(pos) = self.ready.binary_search(&idx) {
+            self.ready.insert(pos, idx);
+        }
+        self.stats.sessions += 1;
+        self.policy.prepare(&self.states, &self.ready);
+        Ok(true)
+    }
+
+    /// Idle-worker work stealing: take the oldest-stamped cold member
+    /// from the most-loaded foreign queue and splice it into our own
+    /// (admission then happens through the normal [`Self::admit_one`]
+    /// path). Only cold members move — hot sessions are pinned — so a
+    /// steal hands over a recipe, never mid-op state. Locks are taken one
+    /// at a time, so no ordering discipline is needed.
+    fn steal(&mut self) -> bool {
+        let victim = (0..self.queues.len())
+            .filter(|&s| s != self.shard)
+            .map(|s| (s, self.queues[s].lock().expect("fleet queue poisoned").len()))
+            .filter(|&(_, len)| len > 0)
+            .max_by_key(|&(_, len)| len);
+        let Some((victim, _)) = victim else { return false };
+        let stolen = {
+            let mut queue = self.queues[victim].lock().expect("fleet queue poisoned");
+            queue
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, m)| m.stamp)
+                .map(|(i, _)| i)
+                .map(|i| queue.swap_remove(i))
+        };
+        // the queue may have drained between the length probe and the
+        // lock re-take; that just means someone else got there first
+        let Some(member) = stolen else { return false };
+        self.steals_out[victim].fetch_add(1, Ordering::Relaxed);
+        self.stats.steals_in += 1;
+        self.queues[self.shard].lock().expect("fleet queue poisoned").push(member);
+        true
+    }
+
+    /// One scheduler tick: maybe inject a fault (only at a round
+    /// boundary, where the single-thread host makes every decision), then
+    /// advance the picked session by exactly one op.
+    fn tick_session(&mut self, idx: usize) -> Result<()> {
+        let member = self.hot[idx].as_mut().expect("ready session is hot");
+        if member.session.at_round_boundary() {
+            // keyed on the session's own round (not any host clock) so
+            // the plan names cells a user can reason about; the gate
+            // order matches the single-thread host exactly
+            let session_round = member.session.rounds_completed();
+            let total_rounds = member.session.cfg().rounds;
+            let fault = self
+                .plan
+                .filter(|_| session_round < total_rounds)
+                .and_then(|plan| plan.fault_for(idx, session_round))
+                .filter(|_| member.fired.insert(session_round));
+            if let Some(kind) = fault {
+                self.telemetry.record(idx, session_round, &kind);
+                let _ = self.tx.send(HostEvent::Fault {
+                    session: idx,
+                    round: session_round,
+                    kind: kind.name(),
+                });
+                match kind {
+                    FaultKind::Transient => {
+                        // clears on retry: the session stays ready, but
+                        // the pick consumed the policy's indexed entry
+                        self.policy.prepare(&self.states, &self.ready);
+                        return Ok(());
                     }
-                    Ok(Loaded::Complete { .. }) => {
-                        log::warn!(
-                            "fleet: {} marks a completed run but the session failed — \
-                             restarting from scratch",
-                            path.display()
-                        );
+                    FaultKind::Straggler { slowdown } => {
+                        member.session.inject_slowdown(slowdown);
                     }
-                    Err(e) => {
-                        log::warn!("fleet: discarding unusable checkpoint: {e}");
+                    FaultKind::EnergyBrownout { joules } => {
+                        member.session.inject_brownout(joules);
+                    }
+                    FaultKind::CorruptCheckpoint => {
+                        corrupt_checkpoint(member.checkpoint.as_ref());
+                    }
+                    FaultKind::Crash => {
+                        return self.fail(idx, session_round, "injected crash".into());
                     }
                 }
             }
-            builder = builder.observe(Checkpoint::every(path.clone(), *every));
         }
-        self.sessions[idx] = Box::new(builder.build()?);
-        Ok(resumed_round)
+
+        let member = self.hot[idx].as_mut().expect("ready session is hot");
+        let step_sw = Stopwatch::start();
+        let stepped = member.session.step_op();
+        self.step_ms += step_sw.elapsed_ms();
+        self.tick += 1;
+        self.stats.ops += 1;
+        match stepped {
+            Ok(StepEvent::OpCompleted(_)) => {
+                self.states[idx].last_run = self.tick;
+                self.policy.task_ran(idx, &self.states);
+                Ok(())
+            }
+            Ok(StepEvent::RoundCompleted(outcome)) => {
+                self.states[idx].rounds_done += 1;
+                self.states[idx].last_run = self.tick;
+                self.stats.rounds += 1;
+                self.policy.task_ran(idx, &self.states);
+                let _ = self.tx.send(HostEvent::Round { session: idx, outcome });
+                // the main thread got the outcome; drop the session's copy
+                let member = self.hot[idx].as_mut().expect("ready session is hot");
+                member.session.take_outcomes();
+                Ok(())
+            }
+            Ok(StepEvent::Finished(record)) => {
+                self.hot[idx] = None;
+                self.remove_ready(idx);
+                self.live.fetch_sub(1, Ordering::AcqRel);
+                let _ = self
+                    .tx
+                    .send(HostEvent::Finished { session: idx, record: Box::new(record) });
+                Ok(())
+            }
+            Err(e) => {
+                let round = self.hot[idx]
+                    .as_ref()
+                    .expect("ready session is hot")
+                    .session
+                    .rounds_completed();
+                self.fail(idx, round, e.to_string())
+            }
+        }
     }
 
-    /// Injected checkpoint corruption: truncate the member's on-disk
-    /// snapshot to half its size (a torn write). The typed loader rejects
-    /// the remnant, so a later restart falls back to a fresh start; a
-    /// member without checkpoint wiring makes this a no-op.
-    fn corrupt_checkpoint(&self, idx: usize) {
-        let Some((path, _)) = &self.checkpoints[idx] else { return };
-        let Ok(meta) = std::fs::metadata(path) else { return };
-        let result = std::fs::OpenOptions::new()
-            .write(true)
-            .open(path)
-            .and_then(|f| f.set_len(meta.len() / 2));
-        if let Err(e) = result {
-            log::warn!("fleet: corrupt-checkpoint fault on {} failed: {e}", path.display());
+    /// Route one failed hot session through the supervision policy.
+    /// `FailFast` records the failure for the main thread and trips the
+    /// fleet-wide stop; `Isolate` and `Restart` keep the shard running.
+    fn fail(&mut self, idx: usize, round: usize, reason: String) -> Result<()> {
+        match self.supervise {
+            SupervisionPolicy::FailFast => {
+                self.failures.lock().expect("fleet failures poisoned").push((idx, reason));
+                self.stop.store(true, Ordering::Release);
+                Ok(())
+            }
+            SupervisionPolicy::Isolate => {
+                self.quarantine(idx, round, reason);
+                self.policy.prepare(&self.states, &self.ready);
+                Ok(())
+            }
+            SupervisionPolicy::Restart { max_retries, backoff_rounds } => {
+                let used = self.hot[idx].as_ref().expect("failed session is hot").restarts_used;
+                if used >= max_retries {
+                    let reason = format!("{reason} ({max_retries} restarts exhausted)");
+                    self.quarantine(idx, round, reason);
+                } else {
+                    let member = self.hot[idx].take().expect("failed session is hot");
+                    match rebuild_builder(member.factory.as_ref(), member.checkpoint.as_ref())
+                    {
+                        Ok((builder, resumed_round)) => {
+                            self.telemetry.restarts += 1;
+                            self.telemetry.rounds_recovered +=
+                                round.saturating_sub(resumed_round);
+                            log::info!(
+                                "fleet: restarting session {:?} from round {resumed_round} \
+                                 (failed at {round}: {reason}; retry {}/{max_retries}, \
+                                 backoff {backoff_rounds} ticks)",
+                                self.names[idx],
+                                member.restarts_used + 1,
+                            );
+                            self.remove_ready(idx);
+                            // back to our own cold queue (stealable from
+                            // there): the rebuilt session has not started,
+                            // so it is movable again
+                            let stamp = self.stamps.fetch_add(1, Ordering::Relaxed);
+                            self.queues[self.shard]
+                                .lock()
+                                .expect("fleet queue poisoned")
+                                .push(ColdMember {
+                                    idx,
+                                    builder,
+                                    factory: member.factory,
+                                    checkpoint: member.checkpoint,
+                                    stamp,
+                                    wake_at: self.tick + backoff_rounds as u64,
+                                    state: self.states[idx],
+                                    restarts_used: member.restarts_used + 1,
+                                    fired: member.fired,
+                                });
+                        }
+                        Err(e) => {
+                            let reason = format!("{reason}; restart failed: {e}");
+                            self.quarantine(idx, round, reason);
+                        }
+                    }
+                }
+                self.policy.prepare(&self.states, &self.ready);
+                Ok(())
+            }
         }
+    }
+
+    /// Terminal quarantine: the member leaves scheduling for good and the
+    /// fleet-wide live count drops.
+    fn quarantine(&mut self, idx: usize, round: usize, reason: String) {
+        log::warn!(
+            "fleet: quarantining session {:?} at round {round}: {reason}",
+            self.names[idx]
+        );
+        self.telemetry.quarantines += 1;
+        let _ = self.tx.send(HostEvent::Quarantined { session: idx, round, reason });
+        self.hot[idx] = None;
+        self.remove_ready(idx);
+        self.live.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    fn remove_ready(&mut self, idx: usize) {
+        if let Ok(pos) = self.ready.binary_search(&idx) {
+            self.ready.remove(pos);
+        }
+    }
+}
+
+impl Fleet {
+    /// The sharded host: sessions are partitioned into `host_threads`
+    /// shards by [`shard_of`] and run on scoped worker threads, each
+    /// advancing one of its members by one **op** per tick under its own
+    /// fresh copy of the scheduling policy ([`SchedPolicy::fresh`]); idle
+    /// workers steal the oldest cold member from the most-loaded foreign
+    /// shard. Per-session work is untouched — only the interleaving
+    /// changes — so every deterministic output is bit-identical to
+    /// [`Fleet::run_single`].
+    fn run_sharded(mut self) -> Result<FleetRecord> {
+        let n = self.builders.len();
+        let threads = self.host_threads.min(n);
+
+        let mut worker_policies: Vec<Box<dyn SchedPolicy + Send>> =
+            Vec::with_capacity(threads);
+        for _ in 0..threads {
+            match self.policy.fresh() {
+                Some(p) => worker_policies.push(p),
+                None => {
+                    return Err(Error::Sched(format!(
+                        "policy {:?} has no fresh() and cannot run sharded; use \
+                         host_threads(1) or implement SchedPolicy::fresh",
+                        self.policy.name()
+                    )))
+                }
+            }
+        }
+
+        let fleet_sw = Stopwatch::start();
+        // per-shard cold queues seeded by the stable shard hash; initial
+        // stamps are the session indices, so "oldest" starts out meaning
+        // "first added"
+        let queues: Vec<Mutex<Vec<ColdMember>>> =
+            (0..threads).map(|_| Mutex::new(Vec::new())).collect();
+        {
+            let builders = std::mem::take(&mut self.builders);
+            let factories = std::mem::take(&mut self.factories);
+            let checkpoints = std::mem::take(&mut self.checkpoints);
+            for (idx, ((builder, factory), checkpoint)) in
+                builders.into_iter().zip(factories).zip(checkpoints).enumerate()
+            {
+                queues[shard_of(idx, threads)].lock().expect("fleet queue poisoned").push(
+                    ColdMember {
+                        idx,
+                        builder,
+                        factory,
+                        checkpoint,
+                        stamp: idx as u64,
+                        wake_at: 0,
+                        state: TaskState::default(),
+                        restarts_used: 0,
+                        fired: HashSet::new(),
+                    },
+                );
+            }
+        }
+
+        let live = AtomicUsize::new(n);
+        let stop = AtomicBool::new(false);
+        let stamps = AtomicU64::new(n as u64);
+        let steals_out: Vec<AtomicU64> = (0..threads).map(|_| AtomicU64::new(0)).collect();
+        let failures: Mutex<Vec<(usize, String)>> = Mutex::new(Vec::new());
+        let plan = self.fault_plan.clone();
+        let supervise = self.supervise;
+
+        let mut records: Vec<Option<RunRecord>> = (0..n).map(|_| None).collect();
+        let mut statuses: Vec<Option<SessionStatus>> = vec![None; n];
+        let mut session_rounds = vec![0usize; n];
+        let mut rounds_executed = 0usize;
+        let mut device_ops = 0u64;
+
+        let (queues, steals_out) = (&queues, &steals_out);
+        let (live, stop, stamps, failures) = (&live, &stop, &stamps, &failures);
+        let names: &[String] = &self.names;
+        let observers = &mut self.observers;
+        let (tx, rx) = mpsc::channel::<HostEvent>();
+
+        let worker_results: Result<Vec<(FaultTelemetry, ShardStats)>> =
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(threads);
+                for (shard, policy) in worker_policies.into_iter().enumerate() {
+                    let tx = tx.clone();
+                    let plan = plan.as_ref();
+                    handles.push(scope.spawn(move || {
+                        let _guard = PanicStop(stop);
+                        let worker = ShardWorker {
+                            shard,
+                            supervise,
+                            plan,
+                            names,
+                            queues,
+                            steals_out,
+                            live,
+                            stop,
+                            stamps,
+                            failures,
+                            tx,
+                            policy,
+                            states: vec![TaskState::default(); n],
+                            hot: (0..n).map(|_| None).collect(),
+                            ready: Vec::new(),
+                            tick: 0,
+                            telemetry: FaultTelemetry::default(),
+                            stats: ShardStats { shard, ..ShardStats::default() },
+                            step_ms: 0.0,
+                        };
+                        let result = worker.run();
+                        if result.is_err() {
+                            // a dead worker's members can never finish, so
+                            // the fleet would otherwise wait forever
+                            stop.store(true, Ordering::Release);
+                        }
+                        result
+                    }));
+                }
+                // the main thread owns the (possibly non-Send) fleet
+                // observers: workers stream events here and this loop runs
+                // until every worker has dropped its sender
+                drop(tx);
+                while let Ok(event) = rx.recv() {
+                    match event {
+                        HostEvent::Round { session, outcome } => {
+                            session_rounds[session] += 1;
+                            rounds_executed += 1;
+                            // +1: the round's TrainStep on the CPU lane
+                            device_ops += outcome.selector.ops.len() as u64 + 1;
+                            for obs in observers.iter_mut() {
+                                obs.on_session_round(session, &names[session], &outcome);
+                            }
+                        }
+                        HostEvent::Finished { session, record } => {
+                            for obs in observers.iter_mut() {
+                                obs.on_session_finished(session, &names[session], &record);
+                            }
+                            records[session] = Some(*record);
+                            statuses[session] = Some(SessionStatus::Finished);
+                        }
+                        HostEvent::Fault { session, round, kind } => {
+                            for obs in observers.iter_mut() {
+                                obs.on_fault(session, &names[session], round, kind);
+                            }
+                        }
+                        HostEvent::Quarantined { session, round, reason } => {
+                            for obs in observers.iter_mut() {
+                                obs.on_session_quarantined(
+                                    session,
+                                    &names[session],
+                                    round,
+                                    &reason,
+                                );
+                            }
+                            statuses[session] =
+                                Some(SessionStatus::Quarantined { round, reason });
+                        }
+                    }
+                }
+                let joins: Vec<_> = handles.into_iter().map(|h| h.join()).collect();
+                let mut out = Vec::with_capacity(threads);
+                for joined in joins {
+                    out.push(
+                        joined
+                            .map_err(|_| {
+                                Error::Pipeline("fleet shard worker panicked".into())
+                            })??,
+                    );
+                }
+                Ok(out)
+            });
+
+        // FailFast failures outrank worker-level errors: the historical
+        // contract is an error naming the failing session, and with
+        // several racing the lowest index wins (any single one is a
+        // legitimate outcome; this picks one deterministically)
+        let recorded = {
+            let mut f = failures.lock().unwrap_or_else(|p| p.into_inner());
+            std::mem::take(&mut *f)
+        };
+        if let Some((idx, reason)) = recorded.into_iter().min_by_key(|&(idx, _)| idx) {
+            return Err(Error::Pipeline(format!(
+                "fleet session {:?}: {reason}",
+                self.names[idx]
+            )));
+        }
+        let worker_results = worker_results?;
+
+        let mut faults = FaultTelemetry::default();
+        let mut shards = Vec::with_capacity(threads);
+        let mut steals = 0u64;
+        let mut sched_overhead_ms = 0.0f64;
+        for (shard, (telemetry, mut stats)) in worker_results.into_iter().enumerate() {
+            faults.merge_from(telemetry);
+            stats.steals_out = steals_out[shard].load(Ordering::Relaxed);
+            steals += stats.steals_in;
+            sched_overhead_ms += stats.sched_overhead_ms;
+            shards.push(stats);
+        }
+        // canonical (session, round) event order — workers log
+        // concurrently, and fault cells are unique per (session, round),
+        // so this is a total order shared with the single-thread host
+        faults.events.sort_unstable_by_key(|e| (e.session, e.round));
+
+        let statuses: Vec<SessionStatus> = statuses
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| {
+                s.unwrap_or_else(|| SessionStatus::Quarantined {
+                    round: session_rounds[i],
+                    reason: "scheduler exited without a terminal status".into(),
+                })
+            })
+            .collect();
+        let total_host_ms = fleet_sw.elapsed_ms();
+        // totals fold over records in session-index order — the same
+        // float-summation order as the single-thread host, so the sums
+        // are bit-identical, not merely close
+        let finished = records.iter().flatten();
+        let retention = finished
+            .clone()
+            .filter_map(|r| r.retention.as_ref())
+            .fold(None, |acc: Option<crate::retention::RetentionTelemetry>, t| {
+                let mut sum = acc.unwrap_or_default();
+                sum.merge(t);
+                Some(sum)
+            });
+        Ok(FleetRecord {
+            policy: self.policy.name().to_string(),
+            supervision: self.supervise.name().to_string(),
+            names: self.names,
+            session_rounds,
+            rounds_executed,
+            device_ops,
+            total_device_ms: finished.clone().map(|r| r.total_device_ms).sum(),
+            energy_j: finished.clone().map(|r| r.energy_j).sum(),
+            peak_memory_bytes: finished.map(|r| r.peak_memory_bytes).sum(),
+            records,
+            statuses,
+            faults,
+            fault_plan: self.fault_plan.as_ref().map(|p| p.to_json()),
+            retention,
+            total_host_ms,
+            sched_overhead_ms,
+            host_threads: threads,
+            steals,
+            shards,
+        })
     }
 }
 
@@ -1023,7 +1846,10 @@ impl SessionStatus {
     }
 }
 
-/// One injected fault, in injection order.
+/// One injected fault. The telemetry's event log is kept in canonical
+/// `(session, round)` order — fault cells are unique per (session,
+/// round), so that order is total, and it is the same no matter how many
+/// host threads injected the faults.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct FaultEvent {
     /// Fleet index of the session the fault hit.
@@ -1059,11 +1885,27 @@ pub struct FaultTelemetry {
     /// a checkpoint saved the fleet from re-running. 0 with no
     /// checkpoints (scratch restarts re-run everything).
     pub rounds_recovered: usize,
-    /// Every injected fault, in injection order.
+    /// Every injected fault, in canonical `(session, round)` order (see
+    /// [`FaultEvent`]).
     pub events: Vec<FaultEvent>,
 }
 
 impl FaultTelemetry {
+    /// Fold another telemetry (a shard worker's) into this one. Events
+    /// concatenate; the caller re-sorts into canonical order afterwards.
+    fn merge_from(&mut self, other: FaultTelemetry) {
+        self.crashes += other.crashes;
+        self.transients += other.transients;
+        self.retries += other.retries;
+        self.stragglers += other.stragglers;
+        self.brownouts += other.brownouts;
+        self.corruptions += other.corruptions;
+        self.restarts += other.restarts;
+        self.quarantines += other.quarantines;
+        self.rounds_recovered += other.rounds_recovered;
+        self.events.extend(other.events);
+    }
+
     /// Count one injected fault and append it to the event log.
     fn record(&mut self, session: usize, round: usize, kind: &FaultKind) {
         match kind {
@@ -1159,6 +2001,15 @@ pub struct FleetRecord {
     /// (`bytes_held` reads as total bytes held across members); None when
     /// no member retained.
     pub retention: Option<crate::retention::RetentionTelemetry>,
+    /// Worker threads the host actually ran with (1 = the single-thread
+    /// reference host; clamped to the fleet size).
+    pub host_threads: usize,
+    /// Total cross-shard work steals (Σ shards' `steals_in`); 0 on the
+    /// single-thread host. Wall-clock-dependent, like the shard stats.
+    pub steals: u64,
+    /// Per-shard scheduler accounting, in shard order; empty on the
+    /// single-thread host.
+    pub shards: Vec<ShardStats>,
 }
 
 impl FleetRecord {
@@ -1213,8 +2064,16 @@ impl FleetRecord {
             ),
             ("energy_j", Json::Num(self.energy_j)),
             ("peak_memory_bytes", Json::Num(self.peak_memory_bytes as f64)),
+            ("host_threads", Json::Num(self.host_threads as f64)),
+            ("steals", Json::Num(self.steals as f64)),
             ("faults", self.faults.to_json()),
         ];
+        if !self.shards.is_empty() {
+            fields.push((
+                "shards",
+                Json::Arr(self.shards.iter().map(|s| s.to_json()).collect()),
+            ));
+        }
         if let Some(plan) = &self.fault_plan {
             fields.push(("fault_plan", plan.clone()));
         }
@@ -1348,15 +2207,15 @@ mod tests {
         assert!(FleetBuilder::new().build().is_err());
     }
 
-    // Sessions start lazily, so supervision paths driven entirely by
-    // scripted round-0 crashes (which fire *before* the first step) are
-    // testable without model artifacts.
+    // Sessions build and start lazily, so supervision paths driven
+    // entirely by scripted round-0 crashes (which fire *before* the first
+    // step) are testable without model artifacts.
 
-    fn unstarted_session(rounds: usize) -> Session {
+    fn unstarted_session(rounds: usize) -> SessionBuilder {
         let mut cfg = presets::table1("mlp", Method::Rs);
         cfg.rounds = rounds;
         cfg.pipeline = false;
-        SessionBuilder::new(cfg).build().unwrap()
+        SessionBuilder::new(cfg)
     }
 
     fn crash_everyone(n: usize) -> FaultPlan {
@@ -1424,12 +2283,13 @@ mod tests {
     #[test]
     fn restart_quarantines_when_the_factory_breaks() {
         // factory works for the initial build, then breaks — the restart
-        // path must degrade to quarantine, not abort the fleet
-        let calls = std::rc::Rc::new(std::cell::Cell::new(0usize));
-        let seen = std::rc::Rc::clone(&calls);
+        // path must degrade to quarantine, not abort the fleet. (Arc +
+        // atomic because factories are Send: they travel to shard
+        // workers with their member.)
+        let calls = std::sync::Arc::new(AtomicUsize::new(0));
+        let seen = std::sync::Arc::clone(&calls);
         let factory = move || {
-            seen.set(seen.get() + 1);
-            if seen.get() > 1 {
+            if seen.fetch_add(1, Ordering::SeqCst) + 1 > 1 {
                 return Err(Error::Other("factory broke".into()));
             }
             let mut cfg = presets::table1("mlp", Method::Rs);
@@ -1444,7 +2304,7 @@ mod tests {
             .fault_plan(crash_everyone(1))
             .run()
             .unwrap();
-        assert_eq!(calls.get(), 2, "initial build + one rebuild attempt");
+        assert_eq!(calls.load(Ordering::SeqCst), 2, "initial build + one rebuild attempt");
         assert_eq!(record.faults.restarts, 0);
         let SessionStatus::Quarantined { reason, .. } = &record.statuses[0] else {
             panic!("expected quarantine, got {:?}", record.statuses[0]);
@@ -1496,6 +2356,9 @@ mod tests {
             faults,
             fault_plan: Some(FaultPlan::new(7).to_json()),
             retention: None,
+            host_threads: 1,
+            steals: 0,
+            shards: Vec::new(),
         };
         assert!((rec.sched_overhead_per_round_ms() - 0.2).abs() < 1e-12);
         assert_eq!(rec.finished(), 1);
@@ -1517,6 +2380,24 @@ mod tests {
         assert!(j.get("fault_plan").is_ok());
         assert!(j.get("retention").is_err(), "no retaining member, no retention key");
         assert_eq!(j.get("rounds_executed").unwrap().as_usize().unwrap(), 10);
+        assert_eq!(j.get("host_threads").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("steals").unwrap().as_usize().unwrap(), 0);
+        assert!(j.get("shards").is_err(), "single-thread record emits no shards key");
+        // a sharded record emits per-shard stats
+        let mut sharded = rec.clone();
+        sharded.host_threads = 2;
+        sharded.steals = 3;
+        sharded.shards = vec![
+            ShardStats { shard: 0, sessions: 1, ops: 10, ..ShardStats::default() },
+            ShardStats { shard: 1, sessions: 1, ops: 15, steals_in: 3, ..ShardStats::default() },
+        ];
+        let j = sharded.to_json();
+        assert_eq!(j.get("host_threads").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("steals").unwrap().as_usize().unwrap(), 3);
+        let shards = j.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[1].get("steals_in").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(shards[1].get("ops").unwrap().as_usize().unwrap(), 15);
         // a fleet with a retention aggregate emits it
         let mut with_ret = rec.clone();
         let mut t = crate::retention::RetentionTelemetry::default();
@@ -1541,14 +2422,14 @@ mod tests {
         std::path::Path::new("artifacts/mlp/meta.json").exists()
     }
 
-    fn tiny_session(method: Method, rounds: usize, seed_off: u64) -> Session {
+    fn tiny_session(method: Method, rounds: usize, seed_off: u64) -> SessionBuilder {
         let mut cfg = presets::table1("mlp", method);
         cfg.rounds = rounds;
         cfg.test_size = 200;
         cfg.eval_every = 2;
         cfg.pipeline = false;
         cfg.seed += seed_off;
-        SessionBuilder::new(cfg).build().unwrap()
+        SessionBuilder::new(cfg)
     }
 
     /// A fleet observer that records the interleaving for assertions.
@@ -1590,5 +2471,123 @@ mod tests {
         );
         assert!(record.total_device_ms > 0.0);
         assert!(record.peak_memory_bytes > 0);
+    }
+
+    // ---- sharded host -------------------------------------------------
+
+    #[test]
+    fn shard_of_is_stable_and_in_range() {
+        for threads in [1usize, 2, 3, 4, 7, 16] {
+            let mut hits = vec![0usize; threads];
+            for idx in 0..10_000 {
+                let s = shard_of(idx, threads);
+                assert!(s < threads);
+                assert_eq!(s, shard_of(idx, threads), "pure function of (idx, threads)");
+                hits[s] += 1;
+            }
+            // splitmix64 spreads 10k indices roughly uniformly: no shard
+            // is starved or grossly overloaded
+            for (s, &count) in hits.iter().enumerate() {
+                let expect = 10_000 / threads;
+                assert!(
+                    count > expect / 2 && count < expect * 2,
+                    "shard {s}/{threads} got {count} of 10000"
+                );
+            }
+        }
+        assert_eq!(shard_of(3, 0), 0, "degenerate thread count clamps to 1");
+    }
+
+    #[test]
+    fn shard_stats_per_tick_math() {
+        let zero = ShardStats::default();
+        assert_eq!(zero.sched_overhead_per_tick_ms(), 0.0);
+        let s = ShardStats { ops: 8, sched_overhead_ms: 2.0, ..ShardStats::default() };
+        assert!((s.sched_overhead_per_tick_ms() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn builtin_policies_are_sharding_capable() {
+        for policy in [parse_policy("rr"), parse_policy("fewest"), parse_policy("staleness")] {
+            let policy = policy.unwrap();
+            let fresh = policy.fresh().expect("builtin policies implement fresh()");
+            assert_eq!(fresh.name(), policy.name());
+        }
+    }
+
+    #[test]
+    fn sharded_host_rejects_fresh_less_policies() {
+        struct NoFresh;
+        impl SchedPolicy for NoFresh {
+            fn pick(&mut self, _states: &[TaskState], ready: &[usize]) -> usize {
+                ready[0]
+            }
+            fn name(&self) -> &'static str {
+                "no-fresh"
+            }
+        }
+        let err = FleetBuilder::new()
+            .session("a", unstarted_session(3))
+            .session("b", unstarted_session(3))
+            .policy(NoFresh)
+            .host_threads(2)
+            .run()
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.starts_with("scheduler error:"), "want Error::Sched, got: {msg}");
+        assert!(msg.contains("no-fresh"), "names the policy: {msg}");
+    }
+
+    /// Cross-thread-count determinism on the non-artifact path: scripted
+    /// round-0 crashes under Isolate produce identical statuses, fault
+    /// telemetry (including canonical event order) and per-session round
+    /// counts for every host thread count. The artifact-gated
+    /// integration suite pins full RunRecord equality; this pins the
+    /// supervision plane in any environment.
+    #[test]
+    fn sharded_isolate_matches_single_thread() {
+        let run = |threads: usize| {
+            FleetBuilder::new()
+                .session("a", unstarted_session(3))
+                .session("b", unstarted_session(3))
+                .session("c", unstarted_session(3))
+                .supervise(SupervisionPolicy::Isolate)
+                .fault_plan(crash_everyone(3))
+                .host_threads(threads)
+                .run()
+                .unwrap()
+        };
+        let reference = run(1);
+        assert_eq!(reference.host_threads, 1);
+        assert!(reference.shards.is_empty());
+        assert_eq!(reference.steals, 0);
+        for threads in [2usize, 4] {
+            let sharded = run(threads);
+            assert_eq!(sharded.host_threads, threads.min(3));
+            assert_eq!(sharded.shards.len(), threads.min(3));
+            assert_eq!(sharded.statuses, reference.statuses, "t={threads}");
+            assert_eq!(sharded.faults, reference.faults, "t={threads}");
+            assert_eq!(sharded.session_rounds, reference.session_rounds, "t={threads}");
+            assert_eq!(sharded.rounds_executed, reference.rounds_executed);
+            assert!(sharded.records.iter().all(|r| r.is_none()));
+            // every member was admitted exactly once somewhere
+            let admitted: usize = sharded.shards.iter().map(|s| s.sessions).sum();
+            assert_eq!(admitted, 3, "t={threads}");
+        }
+    }
+
+    #[test]
+    fn sharded_failfast_names_the_crashed_session() {
+        // one member keeps the winning failure deterministic in any
+        // environment (several racing members may not all get to record
+        // theirs before the stop flag lands)
+        let err = FleetBuilder::new()
+            .session("doomed", unstarted_session(3))
+            .fault_plan(crash_everyone(1))
+            .host_threads(2)
+            .run()
+            .unwrap_err();
+        // same fleet-abort shape as the single-thread host
+        assert_eq!(err.to_string(), "pipeline error: fleet session \"doomed\": injected crash");
     }
 }

@@ -22,11 +22,15 @@
 //!
 //! Sessions are **step-driven**: [`Session::step`] runs one round and
 //! yields a [`session::StepEvent`], with [`Session::run`] as the trivial
-//! while-step wrapper. The [`host`] module builds on that: a
-//! [`host::Fleet`] owns N boxed sessions and interleaves them
-//! round-by-round under a pluggable [`host::SchedPolicy`] — the
-//! multi-session host runtime on the path to the ROADMAP's
-//! millions-of-device-sessions north star.
+//! while-step wrapper, and [`Session::step_op`] exposing the five
+//! sub-round micro-ops ([`round::RoundOp`]) one at a time. The [`host`]
+//! module builds on that: a [`host::Fleet`] owns N session recipes and
+//! interleaves them under a pluggable [`host::SchedPolicy`] —
+//! round-per-tick on one thread, op-per-tick across sharded
+//! work-stealing worker threads
+//! ([`host::FleetBuilder::host_threads`]) — the multi-session host
+//! runtime on the path to the ROADMAP's millions-of-device-sessions
+//! north star.
 //!
 //! [`sequential`] and [`pipeline`] remain as deprecated thin shims over
 //! the session API so pre-session call sites keep compiling.
@@ -52,10 +56,10 @@ use crate::util::timer::Stopwatch;
 use crate::{Error, Result};
 
 pub use host::{
-    FaultEvent, FaultTelemetry, Fleet, FleetBuilder, FleetObserver, FleetRecord, SchedPolicy,
-    SessionFactory, SessionStatus,
+    shard_of, FaultEvent, FaultTelemetry, Fleet, FleetBuilder, FleetObserver, FleetRecord,
+    SchedPolicy, SessionFactory, SessionStatus, ShardStats,
 };
-pub use round::{RoundOutcome, SelectorReport};
+pub use round::{RoundOp, RoundOutcome, SelectorReport};
 pub use session::{Control, ExecBackend, RoundObserver, Session, SessionBuilder, StepEvent};
 pub use snapshot::SessionSnapshot;
 

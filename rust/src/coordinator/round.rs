@@ -4,6 +4,50 @@
 use crate::device::Op;
 use crate::retention::RetentionTelemetry;
 
+/// The sub-round micro-ops of the canonical session loop, in execution
+/// order: feed → select → train → sync → record. A session steps through
+/// them one at a time under
+/// [`Session::step_op`](crate::coordinator::Session::step_op) — each of
+/// the first four completions surfaces as a
+/// [`StepEvent::OpCompleted`](crate::coordinator::StepEvent::OpCompleted)
+/// micro-state, while completing [`RoundOp::Record`] closes the round and
+/// surfaces as `StepEvent::RoundCompleted` instead. This is what lets the
+/// sharded fleet host interleave sessions at op granularity: a scheduler
+/// tick advances one session by one op, so a slow selection no longer
+/// stalls a whole round's worth of everyone else's work behind it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundOp {
+    /// Sync selector params and pull the round's stream arrivals
+    /// (sequential backend; a no-op op on the pipelined backend, whose
+    /// selector thread owns its own feed).
+    Feed,
+    /// Produce the round's training batch (two-stage selection plus the
+    /// retention offer), and charge the selector ops to the GPU lane.
+    Select,
+    /// One weighted SGD step on the selected batch (CPU lane).
+    Train,
+    /// Close the device-sim round and ship fresh params back to the
+    /// selector (the pipelined backend's per-round `Op::Sync`).
+    Sync,
+    /// Round bookkeeping: record pushes, observer fan-out, the eval
+    /// cadence and the snapshot phase. Completion of this op IS the
+    /// round completion.
+    Record,
+}
+
+impl RoundOp {
+    /// Stable display/telemetry tag.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoundOp::Feed => "feed",
+            RoundOp::Select => "select",
+            RoundOp::Train => "train",
+            RoundOp::Sync => "sync",
+            RoundOp::Record => "record",
+        }
+    }
+}
+
 /// What the selector did in one round (fed to the device simulator's GPU
 /// lane and the processing-delay metrics).
 #[derive(Clone, Debug, Default)]
@@ -49,5 +93,13 @@ mod tests {
         let r = RoundOutcome::default();
         assert_eq!(r.round, 0);
         assert!(r.selector.ops.is_empty());
+    }
+
+    #[test]
+    fn round_op_tags_are_stable() {
+        let ops =
+            [RoundOp::Feed, RoundOp::Select, RoundOp::Train, RoundOp::Sync, RoundOp::Record];
+        let names: Vec<&str> = ops.iter().map(|o| o.name()).collect();
+        assert_eq!(names, ["feed", "select", "train", "sync", "record"]);
     }
 }

@@ -48,6 +48,14 @@
 //! ([`crate::coordinator::host`]) can interleave many sessions
 //! round-by-round on one thread without changing any session's output.
 //!
+//! Below the round sits the **op level**: [`Session::step_op`] advances
+//! exactly one sub-round op (feed → select → train → sync → record, see
+//! [`RoundOp`]) and yields [`StepEvent::OpCompleted`] until the record op
+//! closes the round. The sharded fleet host interleaves sessions at this
+//! granularity so one slow op stalls only its own session; `step` is a
+//! loop over `step_op`, so both drive the identical state machine and
+//! produce byte-identical records.
+//!
 //! ```no_run
 //! use titan::config::{presets, Method};
 //! use titan::coordinator::session::{observers, SessionBuilder};
@@ -68,11 +76,12 @@ use std::thread;
 use crate::config::RunConfig;
 use crate::coordinator::snapshot::{load_checkpoint, Loaded, SessionSnapshot};
 use crate::coordinator::{
-    RoundOutcome, SelectorEngine, SelectorReport, SelectorState, TrainBatch, TrainerEngine,
+    RoundOp, RoundOutcome, SelectorEngine, SelectorReport, SelectorState, TrainBatch,
+    TrainerEngine,
 };
-use crate::data::{DataSource, RetainedSource, StreamSource, SynthTask};
+use crate::data::{DataSource, RetainedSource, Sample, StreamSource, SynthTask};
 use crate::device::idle::IdleTrace;
-use crate::device::{memory, DeviceSim, Lane, Op};
+use crate::device::{memory, DeviceSim, Lane, Op, RoundTiming};
 use crate::metrics::{CurvePoint, RunRecord};
 use crate::retention::RetentionTelemetry;
 use crate::util::sync::Latest;
@@ -137,7 +146,12 @@ pub enum Control {
 /// done, so they see exactly what the run record sees and cannot perturb
 /// selection. Returning [`Control::Stop`] from either hook ends the run
 /// after the current round.
-pub trait RoundObserver {
+///
+/// Observers are `Send` because an un-started [`SessionBuilder`] (which
+/// carries them) may be handed to a sharded fleet-host worker thread;
+/// shared-handle observers use `Arc<Mutex<..>>`/atomics rather than
+/// `Rc`/`RefCell`.
+pub trait RoundObserver: Send {
     /// Called once per completed round.
     fn on_round(&mut self, _outcome: &RoundOutcome) -> Control {
         Control::Continue
@@ -563,6 +577,30 @@ impl SessionBuilder {
         self
     }
 
+    /// Everything [`SessionBuilder::build`] would reject, without
+    /// consuming the builder: config validity plus resume-snapshot
+    /// compatibility (fingerprint, backend kind, round bound). The fleet
+    /// host calls this when a builder is *added*, so a bad member fails
+    /// at assembly time instead of on some worker thread mid-run.
+    pub fn validate(&self) -> Result<()> {
+        self.cfg.validate()?;
+        let backend =
+            self.backend.clone().unwrap_or_else(|| ExecBackend::for_config(&self.cfg));
+        if let Some(snap) = &self.resume {
+            // refuse mismatched resumes up front: a wrong config or
+            // backend would not fail loudly later, it would quietly
+            // produce a different run
+            snap.check_matches(&self.cfg, backend.kind())?;
+            if snap.round > self.cfg.rounds {
+                return Err(Error::Config(format!(
+                    "checkpoint at round {} exceeds the configured {} rounds",
+                    snap.round, self.cfg.rounds
+                )));
+            }
+        }
+        Ok(())
+    }
+
     /// Validate the config and assemble the session.
     ///
     /// Building is cheap: engines load and threads spawn lazily on the
@@ -570,21 +608,9 @@ impl SessionBuilder {
     /// sessions up front and artifact errors still surface from
     /// `step`/`run` exactly as they did when `run` owned the whole loop.
     pub fn build(self) -> Result<Session> {
+        self.validate()?;
         let SessionBuilder { cfg, backend, source, observers, resume } = self;
-        cfg.validate()?;
         let backend = backend.unwrap_or_else(|| ExecBackend::for_config(&cfg));
-        if let Some(snap) = &resume {
-            // refuse mismatched resumes up front: a wrong config or
-            // backend would not fail loudly later, it would quietly
-            // produce a different run
-            snap.check_matches(&cfg, backend.kind())?;
-            if snap.round > cfg.rounds {
-                return Err(Error::Config(format!(
-                    "checkpoint at round {} exceeds the configured {} rounds",
-                    snap.round, cfg.rounds
-                )));
-            }
-        }
         let mut source: Box<dyn DataSource> = match source {
             Some(s) => s,
             None => Box::new(default_source(&cfg)),
@@ -626,9 +652,14 @@ pub fn default_source(cfg: &RunConfig) -> StreamSource {
     StreamSource::new(task, cfg.seed, cfg.noise)
 }
 
-/// What one [`Session::step`] produced.
+/// What one [`Session::step`] / [`Session::step_op`] produced.
 #[derive(Debug)]
 pub enum StepEvent {
+    /// One sub-round op completed ([`Session::step_op`] only — a round is
+    /// still in flight and the session expects further `step_op` calls).
+    /// [`Session::step`] never yields this: it resolves ops internally
+    /// and surfaces whole rounds.
+    OpCompleted(RoundOp),
     /// One round ran to completion (selection, training, accounting and
     /// observers included). The session is ready for the next step.
     RoundCompleted(RoundOutcome),
@@ -703,20 +734,34 @@ enum BatchFeed {
 }
 
 impl BatchFeed {
-    /// Produce round `round`'s batch + report, plus the pipelined
-    /// selector's state capsule when checkpoint capture is on (the
-    /// sequential selector is exported directly at snapshot time).
-    fn next(
-        &mut self,
-        round: usize,
-        trainer: &TrainerEngine,
-    ) -> Result<(TrainBatch, SelectorReport, Option<Box<SelectorState>>)> {
+    /// The [`RoundOp::Feed`] half of producing a round's batch: the
+    /// sequential feed syncs the selector's params and pulls the round's
+    /// stream arrivals; the pipelined feed is a no-op (its selector
+    /// thread owns feed + select) and yields `None`.
+    fn feed_arrivals(&mut self, trainer: &TrainerEngine) -> Result<Option<Vec<Sample>>> {
         match self {
             BatchFeed::Sequential { selector, source, stream_per_round } => {
                 // sequential has no delay: selection sees current params
                 // (share_params is a refcount bump, not a Vec clone)
                 selector.sync_params(trainer.share_params())?;
-                let arrivals = source.next_round(*stream_per_round);
+                Ok(Some(source.next_round(*stream_per_round)))
+            }
+            BatchFeed::Pipelined { .. } => Ok(None),
+        }
+    }
+
+    /// The [`RoundOp::Select`] half: produce round `round`'s batch +
+    /// report from the feed op's arrivals, plus the pipelined selector's
+    /// state capsule when checkpoint capture is on (the sequential
+    /// selector is exported directly at snapshot time).
+    fn select(
+        &mut self,
+        round: usize,
+        arrivals: Option<Vec<Sample>>,
+    ) -> Result<(TrainBatch, SelectorReport, Option<Box<SelectorState>>)> {
+        match self {
+            BatchFeed::Sequential { selector, source, .. } => {
+                let arrivals = arrivals.expect("sequential feed op produced arrivals");
                 let (batch, mut report) = selector.select_round(round, arrivals)?;
                 if source.retains() {
                     // retention stage: offer the round's scored candidates
@@ -761,6 +806,34 @@ impl BatchFeed {
     }
 }
 
+/// Where within the current round the next [`Running::step_op`] resumes —
+/// the op-level micro-state. Mid-round values (arrivals, the selected
+/// batch, the loss/timing pair) travel in the variant, so an op boundary
+/// is a plain resumable value rather than a suspended stack frame, and a
+/// host can interleave other sessions between any two ops.
+enum RoundPhase {
+    /// Round boundary: nothing in flight; the next op is [`RoundOp::Feed`].
+    Feed,
+    /// Feed done; [`RoundOp::Select`] turns the arrivals into a batch.
+    Select { arrivals: Option<Vec<Sample>> },
+    /// Select done; [`RoundOp::Train`] runs one SGD step on the batch.
+    Train { batch: TrainBatch, report: SelectorReport },
+    /// Train done; [`RoundOp::Sync`] closes the device-sim round and
+    /// ships params back to the selector.
+    Sync { loss: f32, train_ms: f64, report: SelectorReport },
+    /// Sync done; [`RoundOp::Record`] does the round bookkeeping and
+    /// completes the round.
+    Record { loss: f32, train_ms: f64, timing: RoundTiming, report: SelectorReport },
+}
+
+/// What one [`Running::step_op`] advance produced.
+enum OpStep {
+    /// A mid-round op completed; the round is still in flight.
+    Op(RoundOp),
+    /// The record op closed the round.
+    Round(RoundOutcome),
+}
+
 /// The live half of a session: engines, device sim, accounting state.
 /// Created by the first step, consumed by the finishing step.
 struct Running {
@@ -775,6 +848,8 @@ struct Running {
     run_sw: Stopwatch,
     round: usize,
     stop: bool,
+    /// Op-level resume point within the current round.
+    phase: RoundPhase,
     /// Latest pipelined selector-state capsule (checkpoint capture).
     last_selector_state: Option<Box<SelectorState>>,
 }
@@ -914,32 +989,79 @@ impl Running {
             run_sw: Stopwatch::start(),
             round: start_round,
             stop: false,
+            phase: RoundPhase::Feed,
             last_selector_state: None,
         })
     }
 
-    /// One round of the canonical loop: obtain the batch, train, account
-    /// on the device sim, run observers, eval on the cadence.
-    fn step_round(&mut self, cfg: &RunConfig) -> Result<RoundOutcome> {
+    /// True when no round is in flight (the next op is the feed op).
+    fn at_boundary(&self) -> bool {
+        matches!(self.phase, RoundPhase::Feed)
+    }
+
+    /// Advance the canonical round loop by exactly one op. The five ops
+    /// partition the old whole-round body without reordering a single
+    /// statement, so driving a session op-by-op is byte-identical to
+    /// round-by-round stepping.
+    ///
+    /// On an op error the phase has already been reset to the round
+    /// boundary (mid-round state is dropped); supervision rebuilds or
+    /// quarantines the session, never resumes the broken round.
+    fn step_op(&mut self, cfg: &RunConfig) -> Result<OpStep> {
         let round = self.round;
-        let (batch, report, selector_state) = self.feed.next(round, &self.trainer)?;
-        if selector_state.is_some() {
-            self.last_selector_state = selector_state;
+        match std::mem::replace(&mut self.phase, RoundPhase::Feed) {
+            RoundPhase::Feed => {
+                let arrivals = self.feed.feed_arrivals(&self.trainer)?;
+                self.phase = RoundPhase::Select { arrivals };
+                Ok(OpStep::Op(RoundOp::Feed))
+            }
+            RoundPhase::Select { arrivals } => {
+                let (batch, report, selector_state) = self.feed.select(round, arrivals)?;
+                if selector_state.is_some() {
+                    self.last_selector_state = selector_state;
+                }
+                for &op in &report.ops {
+                    self.sim.record(Lane::Gpu, op);
+                }
+                self.record.processing_delay.record_ms(report.per_sample_host_ms);
+                self.phase = RoundPhase::Train { batch, report };
+                Ok(OpStep::Op(RoundOp::Select))
+            }
+            RoundPhase::Train { batch, report } => {
+                // training (weighted: the paper's unbiased estimator)
+                let (loss, train_ms) = self.trainer.train_batch(&batch)?;
+                self.sim.record(Lane::Cpu, Op::TrainStep { batch: batch.len() });
+                self.phase = RoundPhase::Sync { loss, train_ms, report };
+                Ok(OpStep::Op(RoundOp::Train))
+            }
+            RoundPhase::Sync { loss, train_ms, report } => {
+                if self.pipelined {
+                    self.sim.record(Lane::Gpu, Op::Sync); // params + batch handoff
+                }
+                let timing = self.sim.end_round(self.pipelined);
+                self.feed.after_train(&self.trainer);
+                self.phase = RoundPhase::Record { loss, train_ms, timing, report };
+                Ok(OpStep::Op(RoundOp::Sync))
+            }
+            RoundPhase::Record { loss, train_ms, timing, report } => {
+                self.record_round(cfg, loss, train_ms, timing, report).map(OpStep::Round)
+            }
         }
-        for &op in &report.ops {
-            self.sim.record(Lane::Gpu, op);
-        }
-        self.record.processing_delay.record_ms(report.per_sample_host_ms);
+    }
 
-        // training (weighted: the paper's unbiased estimator)
-        let (loss, train_ms) = self.trainer.train_batch(&batch)?;
-        self.sim.record(Lane::Cpu, Op::TrainStep { batch: batch.len() });
-        if self.pipelined {
-            self.sim.record(Lane::Gpu, Op::Sync); // params + batch handoff
-        }
-        let timing = self.sim.end_round(self.pipelined);
-        self.feed.after_train(&self.trainer);
-
+    /// The [`RoundOp::Record`] body: round accounting, observer fan-out,
+    /// the eval cadence and the snapshot phase. Completing it closes the
+    /// round (`self.round += 1`; the phase is already back at the
+    /// boundary).
+    fn record_round(
+        &mut self,
+        cfg: &RunConfig,
+        loss: f32,
+        train_ms: f64,
+        timing: RoundTiming,
+        report: SelectorReport,
+    ) -> Result<RoundOutcome> {
+        let round = self.round;
         self.record.round_device_ms.push(timing.wall_ms);
         // pipelined lanes overlap on the host too; sequential serializes
         self.record.round_host_ms.push(if self.pipelined {
@@ -1115,11 +1237,30 @@ impl Session {
         std::mem::take(&mut self.outcomes)
     }
 
-    /// Advance the state machine by one transition: start up lazily on
-    /// the first call, then run exactly one round per call, and finally
-    /// tear down and yield the finished [`RunRecord`]. Stepping a
-    /// finished session is an error.
+    /// Advance the state machine by one round: start up lazily on the
+    /// first call, then run exactly one round per call, and finally tear
+    /// down and yield the finished [`RunRecord`]. Stepping a finished
+    /// session is an error. A loop over [`Session::step_op`], so round-
+    /// and op-driven execution are the identical state machine; `step`
+    /// never surfaces [`StepEvent::OpCompleted`].
     pub fn step(&mut self) -> Result<StepEvent> {
+        loop {
+            match self.step_op()? {
+                StepEvent::OpCompleted(_) => continue,
+                event => return Ok(event),
+            }
+        }
+    }
+
+    /// Advance the state machine by one sub-round op ([`RoundOp`]) —
+    /// the sharded fleet host's scheduling quantum. Yields
+    /// [`StepEvent::OpCompleted`] for each of feed/select/train/sync,
+    /// [`StepEvent::RoundCompleted`] when the record op closes the round,
+    /// and [`StepEvent::Finished`] once all rounds (or an observer stop)
+    /// are done. Lazy start-up, the done-check and pending fault
+    /// injections all apply at round boundaries only, so op-level
+    /// interleaving cannot shift which round a fault lands on.
+    pub fn step_op(&mut self) -> Result<StepEvent> {
         if matches!(self.state, State::Pending { .. }) {
             let state = std::mem::replace(&mut self.state, State::Finished);
             let State::Pending { backend, source, observers, resume } = state else {
@@ -1131,7 +1272,9 @@ impl Session {
             self.state = State::Running(Box::new(running));
         }
         let done = match &self.state {
-            State::Running(run) => run.round >= run.rounds || run.stop,
+            State::Running(run) => {
+                run.at_boundary() && (run.round >= run.rounds || run.stop)
+            }
             State::Finished => {
                 return Err(Error::Pipeline("session already finished".into()));
             }
@@ -1148,17 +1291,34 @@ impl Session {
         let State::Running(run) = &mut self.state else {
             unreachable!("checked Running above")
         };
-        if let Some(factor) = self.pending_slowdown.take() {
-            run.sim.set_round_slowdown(factor);
+        if run.at_boundary() {
+            if let Some(factor) = self.pending_slowdown.take() {
+                run.sim.set_round_slowdown(factor);
+            }
+            if self.pending_brownout > 0.0 {
+                run.sim.drain_energy(self.pending_brownout);
+                self.pending_brownout = 0.0;
+            }
         }
-        if self.pending_brownout > 0.0 {
-            run.sim.drain_energy(self.pending_brownout);
-            self.pending_brownout = 0.0;
+        match run.step_op(&self.cfg)? {
+            OpStep::Op(op) => Ok(StepEvent::OpCompleted(op)),
+            OpStep::Round(outcome) => {
+                self.completed += 1;
+                self.outcomes.push(outcome.clone());
+                Ok(StepEvent::RoundCompleted(outcome))
+            }
         }
-        let outcome = run.step_round(&self.cfg)?;
-        self.completed += 1;
-        self.outcomes.push(outcome.clone());
-        Ok(StepEvent::RoundCompleted(outcome))
+    }
+
+    /// True when no round is in flight: before the first step, between
+    /// rounds, and after finishing. The fleet host injects faults and
+    /// applies supervision decisions only here, so fault cells keyed on
+    /// the session-absolute round stay thread-count-independent.
+    pub fn at_round_boundary(&self) -> bool {
+        match &self.state {
+            State::Running(run) => run.at_boundary(),
+            State::Pending { .. } | State::Finished => true,
+        }
     }
 
     /// Fault-plane hook: inflate the device clock of the **next** stepped
@@ -1442,6 +1602,9 @@ mod tests {
             assert!(!session.is_finished());
             let step_rec = loop {
                 match session.step().unwrap() {
+                    StepEvent::OpCompleted(op) => {
+                        panic!("step() must resolve ops internally, yielded {op:?}")
+                    }
                     StepEvent::RoundCompleted(o) => {
                         assert_eq!(o.round + 1, session.rounds_completed());
                     }
@@ -1461,6 +1624,88 @@ mod tests {
                 assert_eq!(a.device_wall_ms, b.device_wall_ms);
             }
         }
+    }
+
+    /// Op-granular stepping is the same state machine: driving a session
+    /// by [`Session::step_op`] yields the canonical
+    /// feed → select → train → sync op sequence each round,
+    /// `RoundCompleted` at every boundary, and a final record
+    /// byte-identical to whole-round stepping — with
+    /// [`Session::at_round_boundary`] true exactly between rounds.
+    #[test]
+    fn op_stepped_session_matches_round_stepped() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        for (method, backend) in [
+            (Method::Titan, ExecBackend::Sequential),
+            (Method::Rs, ExecBackend::Pipelined { idle: IdleTrace::Constant(1.0) }),
+        ] {
+            let cfg = small_cfg(method);
+            let (want, want_out) = SessionBuilder::new(cfg.clone())
+                .backend(backend.clone())
+                .run()
+                .unwrap();
+            let mut session = SessionBuilder::new(cfg)
+                .backend(backend.clone())
+                .build()
+                .unwrap();
+            let mut ops: Vec<RoundOp> = Vec::new();
+            let mut rounds = 0usize;
+            let record = loop {
+                assert_eq!(session.at_round_boundary(), ops.is_empty());
+                match session.step_op().unwrap() {
+                    StepEvent::OpCompleted(op) => ops.push(op),
+                    StepEvent::RoundCompleted(o) => {
+                        assert_eq!(
+                            ops,
+                            [RoundOp::Feed, RoundOp::Select, RoundOp::Train, RoundOp::Sync],
+                            "{method:?} {backend:?} round {}",
+                            o.round
+                        );
+                        ops.clear();
+                        rounds += 1;
+                    }
+                    StepEvent::Finished(record) => break record,
+                }
+            };
+            assert_eq!(rounds, 6, "{method:?} {backend:?}");
+            assert!(session.at_round_boundary());
+            assert_deterministic_fields_eq(&want, &record);
+            let got_out = session.take_outcomes();
+            assert_eq!(want_out.len(), got_out.len());
+            for (a, b) in want_out.iter().zip(&got_out) {
+                assert_eq!(a.round, b.round);
+                assert_eq!(a.train_loss, b.train_loss);
+                assert_eq!(a.selector.ops, b.selector.ops);
+                assert_eq!(a.device_wall_ms, b.device_wall_ms);
+            }
+        }
+    }
+
+    /// An un-started builder must cross threads (the sharded fleet host
+    /// hands cold members to shard workers), and `validate` must agree
+    /// with `build` without consuming the builder.
+    #[test]
+    fn builder_is_send_and_validate_matches_build() {
+        fn assert_send<T: Send>() {}
+        assert_send::<SessionBuilder>();
+
+        let good = SessionBuilder::new(small_cfg(Method::Rs));
+        assert!(good.validate().is_ok());
+
+        let mut bad_cfg = small_cfg(Method::Rs);
+        bad_cfg.candidate_size = 5; // < batch_size 10
+        let bad = SessionBuilder::new(bad_cfg);
+        assert!(bad.validate().is_err());
+        assert!(bad.build().is_err());
+
+        // resume bound is part of validate, not just build
+        let cfg = small_cfg(Method::Rs);
+        let late = tiny_snapshot(&cfg, 99); // beyond cfg.rounds = 6
+        let b = SessionBuilder::new(cfg).sequential().resume_from_snapshot(late);
+        assert!(b.validate().is_err());
     }
 
     /// Resume refuses a snapshot whose config fingerprint or backend kind
@@ -1584,6 +1829,9 @@ mod tests {
         let mut finished = false;
         for _ in 0..100 {
             match session.step().unwrap() {
+                StepEvent::OpCompleted(op) => {
+                    panic!("step() must resolve ops internally, yielded {op:?}")
+                }
                 StepEvent::RoundCompleted(_) => {}
                 StepEvent::Finished(record) => {
                     assert!(record.final_accuracy.is_finite());

@@ -86,6 +86,8 @@ pub enum Error {
     Artifact(String),
     #[error("pipeline error: {0}")]
     Pipeline(String),
+    #[error("scheduler error: {0}")]
+    Sched(String),
     #[error("{0}")]
     Other(String),
 }

@@ -81,6 +81,8 @@ fn print_usage() {
     println!("          deterministic fault injection per (session, round) cell");
     println!("          [--supervise failfast|isolate|restart[:retries[:backoff]]]");
     println!("          what the scheduler does about failures (default failfast)");
+    println!("          [--host-threads T]  sharded work-stealing host: sessions step");
+    println!("          op-by-op across T worker threads; records stay bit-identical");
     println!("          [--store-bytes N] [--retention P] [--replay-mix F]  per-member");
     println!("          retention stores (same flags as run)");
     println!("  exp     <id> [--fast] [--models a,b|all] [--seed N]   (exp list: ids)");
@@ -281,6 +283,10 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let policy = parse_policy(&args.get_str("policy", "rr"))?;
     let supervise = parse_supervision(&args.get_str("supervise", "failfast"))?;
     let fault_plan = fleet_fault_plan(args)?;
+    let host_threads = args.get_usize("host-threads", 1)?;
+    if host_threads == 0 {
+        return Err(titan::Error::Config("--host-threads must be > 0".into()));
+    }
 
     // --resume DIR restarts each member from DIR/<name>.json and keeps
     // checkpointing there (members whose snapshot marks a finished run
@@ -300,6 +306,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let mut fleet = FleetBuilder::new()
         .policy_boxed(policy)
         .supervise(supervise)
+        .host_threads(host_threads)
         .observe(FleetProgress::every(10));
     if let Some(plan) = &fault_plan {
         fleet = fleet.fault_plan(plan.clone());
@@ -341,7 +348,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
                 resume_dir.is_some(),
             )?,
             (None, true) => fleet.session_restartable(name, factory)?,
-            (None, false) => fleet.session(name, factory()?.build()?),
+            (None, false) => fleet.session(name, factory()?),
         };
     }
     if fleet.is_empty() {
@@ -421,6 +428,25 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         record.device_ops,
         record.peak_memory_bytes as f64 / (1024.0 * 1024.0)
     );
+    if record.host_threads > 1 {
+        for s in &record.shards {
+            println!(
+                "  shard {}: {} sessions, {} ops, {} rounds, steals in/out {}/{}, \
+                 {:.4} ms sched/tick",
+                s.shard,
+                s.sessions,
+                s.ops,
+                s.rounds,
+                s.steals_in,
+                s.steals_out,
+                s.sched_overhead_per_tick_ms()
+            );
+        }
+        println!(
+            "  {} host threads, {} total steals",
+            record.host_threads, record.steals
+        );
+    }
     let path = write_result("fleet", &record.to_json())?;
     println!("record -> {}", path.display());
     Ok(())

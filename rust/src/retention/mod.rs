@@ -26,12 +26,14 @@
 //! across a kill/resume ([`RetentionState`] travels inside the session
 //! snapshot). The store itself never touches the model or the clock.
 //!
-//! Cost model (see PERF.md): the store is a flat insertion-ordered `Vec`.
-//! An admit is an O(n) duplicate-id scan plus, only under byte pressure,
-//! one O(n) victim scan per evicted entry. Store capacities are
-//! budget/sample-cost entries — hundreds at the paper's scales — so the
-//! scans are cheap compared to one model step; a hash index would buy
-//! nothing measurable at this size.
+//! Cost model (see PERF.md): the store is a flat insertion-ordered `Vec`
+//! with an id → slot hash index on the side. Duplicate detection and
+//! score refresh are O(1) lookups; only under byte pressure does an admit
+//! pay O(n) — one victim scan per evicted entry, plus one index rebuild
+//! after the eviction compaction (eviction shifts every later slot). The
+//! index matters for the fleet host, where thousands of concurrent
+//! sessions each offer every round: the old O(n) duplicate scan per offer
+//! was the store's only per-offer term that grew with capacity.
 
 use crate::data::buffer::Candidate;
 use crate::util::rng::Xoshiro256;
@@ -460,11 +462,18 @@ impl RetentionPolicy for Reservoir {
 
 /// The byte-budgeted persistent sample store. Entries are kept in
 /// admission order (the slot order policies and snapshots see); the
-/// budget is checked on every admit with [`sample_cost`] per entry.
+/// budget is checked on every admit with [`sample_cost`] per entry. A
+/// sample-id → slot hash index rides alongside `entries` for O(1)
+/// duplicate detection and refresh; the `Vec` stays the source of truth
+/// (the index is derived state, rebuilt wholesale after any slot-shifting
+/// mutation).
 pub struct SampleStore {
     budget: usize,
     num_classes: usize,
     entries: Vec<Candidate>,
+    /// sample id → slot in `entries`. Invariant: `index[entries[i].id] ==
+    /// i` for every slot, and the two have equal lengths (ids are unique).
+    index: std::collections::HashMap<u64, usize>,
     bytes: usize,
     policy: Box<dyn RetentionPolicy>,
     telemetry: RetentionTelemetry,
@@ -476,10 +485,20 @@ impl SampleStore {
             budget: budget_bytes,
             num_classes,
             entries: Vec::new(),
+            index: std::collections::HashMap::new(),
             bytes: 0,
             policy: kind.policy(seed),
             telemetry: RetentionTelemetry::default(),
         }
+    }
+
+    /// Recompute the id → slot index from `entries` — after evictions
+    /// (removal shifts every later slot) and restores. O(n), but both
+    /// callers already paid O(n) for the mutation itself.
+    fn rebuild_index(&mut self) {
+        self.index.clear();
+        self.index
+            .extend(self.entries.iter().enumerate().map(|(i, e)| (e.sample.id, i)));
     }
 
     pub fn len(&self) -> usize {
@@ -533,8 +552,9 @@ impl SampleStore {
             self.telemetry.rejects += 1;
             return Offer::Rejected;
         }
-        if let Some(e) = self.entries.iter_mut().find(|e| e.sample.id == c.sample.id) {
-            e.score = c.score;
+        if let Some(&slot) = self.index.get(&c.sample.id) {
+            debug_assert_eq!(self.entries[slot].sample.id, c.sample.id, "index out of sync");
+            self.entries[slot].score = c.score;
             self.telemetry.refreshes += 1;
             return Offer::Refreshed;
         }
@@ -566,6 +586,16 @@ impl SampleStore {
         }
         self.bytes = self.bytes + cost - freed;
         self.entries.push(c);
+        if excluded.is_empty() {
+            // pressure-free admit (the common path): one O(1) insert
+            self.index.insert(
+                self.entries.last().expect("just pushed").sample.id,
+                self.entries.len() - 1,
+            );
+        } else {
+            // eviction shifted the slots after each removal point
+            self.rebuild_index();
+        }
         self.telemetry.admits += 1;
         self.telemetry.bytes_held = self.bytes as u64;
         Offer::Admitted
@@ -625,6 +655,7 @@ impl SampleStore {
         }
         self.policy.restore(policy)?;
         self.entries = entries;
+        self.rebuild_index();
         self.bytes = bytes;
         self.telemetry = telemetry;
         Ok(())
@@ -669,6 +700,54 @@ mod tests {
             assert_eq!(RetentionKind::parse(k.name()).unwrap(), k);
         }
         assert!(RetentionKind::parse("lru").is_err());
+    }
+
+    /// THE index-vs-scan equivalence pin: across randomized offer
+    /// streams (duplicates, evictions, every policy) and a snapshot
+    /// round-trip, the hash index must agree with a linear scan of the
+    /// entries at every step — same duplicate verdict per offer, and
+    /// `index[entries[i].id] == i` as a standing invariant.
+    #[test]
+    fn index_matches_scan_under_random_offers() {
+        for kind in [
+            RetentionKind::Score,
+            RetentionKind::Balanced,
+            RetentionKind::Reservoir,
+        ] {
+            for seed in 0..4u64 {
+                let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x1DCE5);
+                let mut st = SampleStore::new(fit(8), 4, kind, seed);
+                for step in 0..400 {
+                    // small id universe forces frequent duplicate offers
+                    let id = rng.index(24) as u64;
+                    let label = rng.index(4) as u32;
+                    let scan_hit = st.entries().iter().any(|e| e.sample.id == id);
+                    let offer = st.offer(c(id, label, rng.index(1000) as f64 / 10.0));
+                    assert_eq!(
+                        offer == Offer::Refreshed,
+                        scan_hit,
+                        "{} seed={seed} step={step}: index and scan disagree on id {id}",
+                        kind.name()
+                    );
+                    assert_index_invariant(&st);
+                }
+                // a restored store rebuilds the index from the entries
+                let entries = st.export_entries();
+                let telemetry = st.telemetry().clone();
+                let policy = st.export_policy();
+                let mut thawed = SampleStore::new(fit(8), 4, kind, seed);
+                thawed.restore(entries, telemetry, policy).unwrap();
+                assert_index_invariant(&thawed);
+                assert_eq!(ids(&thawed), ids(&st));
+            }
+        }
+    }
+
+    fn assert_index_invariant(st: &SampleStore) {
+        assert_eq!(st.index.len(), st.entries.len(), "index/entries length drift");
+        for (i, e) in st.entries.iter().enumerate() {
+            assert_eq!(st.index.get(&e.sample.id), Some(&i), "slot drift for id {}", e.sample.id);
+        }
     }
 
     #[test]

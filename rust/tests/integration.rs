@@ -10,7 +10,8 @@ use titan::config::{presets, Method, NoiseKind, RunConfig};
 use titan::coordinator::host::{parse_policy, FleetBuilder};
 use titan::coordinator::session::observers::EarlyStop;
 use titan::coordinator::{Session, SessionBuilder, SessionStatus, StepEvent};
-use titan::data::{DataSource, DriftSource, ReplaySource, StreamSource, SynthTask};
+use titan::coordinator::shard_of;
+use titan::data::{DataSource, DriftSource, ReplaySource, Sample, StreamSource, SynthTask};
 use titan::device::idle::IdleTrace;
 use titan::fault::{FaultKind, FaultPlan, SupervisionPolicy};
 use titan::metrics::RunRecord;
@@ -326,7 +327,7 @@ fn fleet_sessions_match_solo_runs_under_every_policy() {
     for policy in ["rr", "fewest", "staleness"] {
         let mut fleet = FleetBuilder::new().policy_boxed(parse_policy(policy).unwrap());
         for i in 0..3 {
-            fleet = fleet.session(format!("s{i}"), fleet_member(i));
+            fleet = fleet.session(format!("s{i}"), fleet_member_builder(i));
         }
         let record = fleet.run().unwrap();
         assert_eq!(record.records.len(), 3, "{policy}");
@@ -420,6 +421,7 @@ fn manual_stepping_matches_run_end_to_end() {
     let mut session = fleet_member(1);
     let stepped = loop {
         match session.step().unwrap() {
+            StepEvent::OpCompleted(op) => panic!("step() must not surface ops: {}", op.name()),
             StepEvent::RoundCompleted(_) => {}
             StepEvent::Finished(record) => break record,
         }
@@ -473,7 +475,7 @@ fn zero_rate_fault_plan_is_bit_identical_under_every_supervision() {
     let baseline = {
         let mut fleet = FleetBuilder::new();
         for i in 0..3 {
-            fleet = fleet.session(format!("s{i}"), fleet_member(i));
+            fleet = fleet.session(format!("s{i}"), fleet_member_builder(i));
         }
         fleet.run().unwrap()
     };
@@ -520,7 +522,7 @@ fn isolate_quarantines_the_crasher_and_finishes_the_rest() {
         .supervise(SupervisionPolicy::Isolate)
         .fault_plan(plan);
     for i in 0..3 {
-        fleet = fleet.session(format!("s{i}"), fleet_member(i));
+        fleet = fleet.session(format!("s{i}"), fleet_member_builder(i));
     }
     let record = fleet.run().unwrap();
     assert_eq!(record.finished(), 2);
@@ -612,7 +614,7 @@ fn same_fault_seed_yields_identical_fleet_telemetry() {
             .supervise(SupervisionPolicy::Isolate)
             .fault_plan(plan);
         for i in 0..3 {
-            fleet = fleet.session(format!("s{i}"), fleet_member(i));
+            fleet = fleet.session(format!("s{i}"), fleet_member_builder(i));
         }
         fleet.run().unwrap()
     };
@@ -633,6 +635,154 @@ fn same_fault_seed_yields_identical_fleet_telemetry() {
         a.fault_plan.as_ref().unwrap().to_string_compact(),
         b.fault_plan.as_ref().unwrap().to_string_compact()
     );
+}
+
+/// The sharded host's determinism oracle (ISSUE 8): the same
+/// heterogeneous fleet — stream / drift / replay members, a scripted
+/// mid-run crash and restart supervision — produces bit-identical
+/// per-session records and fault telemetry at every `--host-threads`.
+#[test]
+fn fleet_records_identical_across_host_threads() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = std::env::temp_dir().join("titan_fleet_threads");
+    let run = |threads: usize| {
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // member 0 crashes at its round 3; cadence-2 checkpoints mean the
+        // restart replays exactly one round, on whichever worker admits it
+        let plan = FaultPlan::new(2).script(0, 3, FaultKind::Crash);
+        let mut fleet = FleetBuilder::new()
+            .supervise(SupervisionPolicy::Restart { max_retries: 3, backoff_rounds: 1 })
+            .fault_plan(plan)
+            .host_threads(threads);
+        for i in 0..3 {
+            fleet = fleet
+                .session_checkpointed_restartable(
+                    format!("s{i}"),
+                    move || Ok(fleet_member_builder(i)),
+                    dir.join(format!("s{i}.json")),
+                    2,
+                    false,
+                )
+                .unwrap();
+        }
+        fleet.run().unwrap()
+    };
+
+    // host_threads = 1 is the reference: the legacy single-thread loop
+    let reference = run(1);
+    assert!(reference.statuses.iter().all(|s| s.is_finished()));
+    assert_eq!(reference.host_threads, 1);
+    assert_eq!(reference.steals, 0);
+    assert_eq!(reference.faults.crashes, 1);
+    assert_eq!(reference.faults.restarts, 1);
+    assert_eq!(reference.session_rounds, vec![7, 4, 5]);
+
+    for threads in [2usize, 4] {
+        let record = run(threads);
+        // 3 sessions clamp a 4-thread host to 3 shards
+        assert_eq!(record.host_threads, threads.min(3), "t={threads}");
+        assert_eq!(record.shards.len(), threads.min(3), "t={threads}");
+        // 3 admissions plus 1 restart re-admission, wherever they landed
+        assert_eq!(
+            record.shards.iter().map(|s| s.sessions).sum::<usize>(),
+            4,
+            "t={threads}"
+        );
+        assert_eq!(record.statuses, reference.statuses, "t={threads}");
+        assert_eq!(record.faults, reference.faults, "t={threads}");
+        assert_eq!(record.session_rounds, reference.session_rounds, "t={threads}");
+        assert_eq!(record.rounds_executed, reference.rounds_executed, "t={threads}");
+        assert_eq!(record.total_device_ms, reference.total_device_ms, "t={threads}");
+        assert_eq!(record.energy_j, reference.energy_j, "t={threads}");
+        assert_eq!(record.peak_memory_bytes, reference.peak_memory_bytes, "t={threads}");
+        for (a, b) in record.records.iter().zip(&reference.records) {
+            assert_opt_records_equivalent(a, b);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Wraps a source so its first batch takes a long wall-clock time: the
+/// worker that admits it blocks mid-op with the rest of its cold queue
+/// still parked — exactly the window work stealing exists for.
+struct SlowStart<S: DataSource> {
+    inner: S,
+    delay: std::time::Duration,
+    fired: bool,
+}
+
+impl<S: DataSource> DataSource for SlowStart<S> {
+    fn task(&self) -> &SynthTask {
+        self.inner.task()
+    }
+    fn next_round(&mut self, v: usize) -> Vec<Sample> {
+        if !self.fired {
+            self.fired = true;
+            std::thread::sleep(self.delay);
+        }
+        self.inner.next_round(v)
+    }
+    fn test_set(&self, n: usize, seed: u64) -> Vec<Sample> {
+        self.inner.test_set(n, seed)
+    }
+}
+
+/// The steal path end-to-end: session 0 stalls its whole shard on a
+/// deliberately slow first op, so the other worker drains its own queue
+/// and then steals session 0's parked neighbours. Records don't depend
+/// on who ran what — only the steal counters do.
+#[test]
+fn idle_worker_steals_from_a_blocked_shard() {
+    if !have_artifacts() {
+        return;
+    }
+    // grow the fleet until session 0's shard holds at least two other
+    // members: cold members parked behind the slow session are what the
+    // idle worker has to steal (shard_of is a pure hash, so this count
+    // is a compile-time-stable property of the fleet size)
+    let home = shard_of(0, 2);
+    let mut n = 3;
+    while (1..n).filter(|&i| shard_of(i, 2) == home).count() < 2 {
+        n += 1;
+    }
+    let mut fleet = FleetBuilder::new()
+        .policy_boxed(parse_policy("rr").unwrap())
+        .host_threads(2);
+    for i in 0..n {
+        let mut cfg = base(Method::Rs, 2);
+        cfg.pipeline = false;
+        cfg.eval_every = 2;
+        cfg.test_size = 50;
+        cfg.seed += i as u64;
+        let mut builder = SessionBuilder::new(cfg.clone()).sequential();
+        if i == 0 {
+            let task = SynthTask::for_model(&cfg.model, cfg.seed);
+            let stream = StreamSource::new(task, cfg.seed, cfg.noise);
+            builder = builder.source(SlowStart {
+                inner: stream,
+                delay: std::time::Duration::from_millis(4000),
+                fired: false,
+            });
+        }
+        fleet = fleet.session(format!("s{i}"), builder);
+    }
+    let record = fleet.run().unwrap();
+    assert!(record.statuses.iter().all(|s| s.is_finished()), "{:?}", record.statuses);
+    assert_eq!(record.session_rounds, vec![2; n]);
+    assert_eq!(record.host_threads, 2);
+    assert_eq!(record.shards.len(), 2);
+    assert!(record.steals > 0, "idle worker never stole: {:?}", record.shards);
+    // both sides of every steal are counted, once each
+    let steals_in: u64 = record.shards.iter().map(|s| s.steals_in).sum();
+    let steals_out: u64 = record.shards.iter().map(|s| s.steals_out).sum();
+    assert_eq!(steals_in, record.steals);
+    assert_eq!(steals_out, record.steals);
+    // every session was admitted exactly once, wherever it ran
+    assert_eq!(record.shards.iter().map(|s| s.sessions).sum::<usize>(), n);
+    assert_eq!(record.shards.iter().map(|s| s.rounds).sum::<usize>(), 2 * n);
 }
 
 #[test]

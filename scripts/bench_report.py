@@ -4,14 +4,16 @@
 The Rust bench harness (`titan::util::bench::Bencher`) writes raw
 per-iteration summaries to ``rust/results/bench_<group>.json``. This script
 post-processes the groups that track the data-plane hot paths into compact
-repo-root files (``BENCH_filter.json``, ``BENCH_selection.json``) so future
-PRs can diff throughput numbers without re-parsing harness output.
+repo-root files (``BENCH_filter.json``, ``BENCH_selection.json``,
+``BENCH_fleet.json``) so future PRs can diff throughput numbers without
+re-parsing harness output.
 
 Per entry it reports:
 
 - ``mean_ns`` / ``p50_ns``  — straight from the harness;
 - ``n``                     — batch size parsed from a ``_n<digits>`` name
-                              suffix (1 if absent);
+                              segment (1 if absent; a trailing qualifier
+                              like ``fleet_rr_n1000_t4`` is fine);
 - ``ns_per_sample``         — ``mean_ns / n``, the headline number;
 - ``throughput_msps``       — million samples per second.
 
@@ -43,9 +45,9 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 RESULTS = REPO / "rust" / "results"
-GROUPS = ("filter", "selection")
+GROUPS = ("filter", "selection", "fleet")
 
-N_SUFFIX = re.compile(r"_n(\d+)(?:/|$)")
+N_SUFFIX = re.compile(r"_n(\d+)(?=[_/]|$)")
 
 
 def batch_size(name: str) -> int:

@@ -10,7 +10,7 @@
 # through scripts/bench_report.py to refresh the BENCH_*.json trajectory
 # files at the repo root.
 #
-# Usage: scripts/bench_smoke.sh [bench ...]   (default: all five)
+# Usage: scripts/bench_smoke.sh [bench ...]   (default: all six)
 #
 # Set TITAN_BENCH_REGRESS=<threshold> (ci.sh does) to turn the report step
 # into a regression gate: freshly measured speedups are compared against
@@ -23,7 +23,7 @@ cd "$repo_root/rust"
 
 benches=("$@")
 if [ ${#benches[@]} -eq 0 ]; then
-  benches=(bench_filter bench_selection bench_pipeline bench_runtime bench_retention)
+  benches=(bench_filter bench_selection bench_pipeline bench_runtime bench_retention bench_fleet)
 fi
 
 export TITAN_BENCH_FAST=1

@@ -19,7 +19,11 @@
 #      fault seed under restart supervision diff clean on every
 #      deterministic FleetRecord field, telemetry included
 #      (artifact-gated)
-#   9. bench smoke                every bench target in fast mode
+#   9. fleet-scale smoke          the same fleet on --host-threads 1 and
+#      --host-threads 4: the sharded work-stealing host must produce a
+#      record that diffs clean against the single-thread host on every
+#      deterministic FleetRecord field (artifact-gated)
+#  10. bench smoke                every bench target in fast mode
 #      (TITAN_BENCH_FAST=1 via scripts/bench_smoke.sh; catches bench
 #      bit-rot without paying full measurement windows), then the
 #      speedup regression gate: bench_report.py --check-only fails if
@@ -137,6 +141,26 @@ if [ -f artifacts/mlp/meta.json ]; then
     "$chaos_dir/chaos_a.json" "$chaos_dir/chaos_b.json"
 else
   echo "skipping chaos smoke: no artifacts (run \`make artifacts\`)"
+fi
+
+echo "== fleet-scale smoke =="
+if [ -f artifacts/mlp/meta.json ]; then
+  scale_dir="results/fleet_scale_smoke"
+  rm -rf "$scale_dir"
+  mkdir -p "$scale_dir"
+  scale_flags=(fleet --sessions 8 --rounds 3 --eval-every 2 --test-size 200 \
+    --policy rr)
+  # host_threads = 1 is the determinism oracle: the sharded host at any
+  # thread count must reproduce its record on the deterministic fields
+  # (diff_records.py ignores the host-clock shard stats and steal counts)
+  cargo run --release --quiet -- "${scale_flags[@]}" --host-threads 1
+  mv results/fleet.json "$scale_dir/t1.json"
+  cargo run --release --quiet -- "${scale_flags[@]}" --host-threads 4
+  mv results/fleet.json "$scale_dir/t4.json"
+  python3 "$script_dir/diff_records.py" --fleet \
+    "$scale_dir/t1.json" "$scale_dir/t4.json"
+else
+  echo "skipping fleet-scale smoke: no artifacts (run \`make artifacts\`)"
 fi
 
 if [ "$run_bench" = 1 ]; then
