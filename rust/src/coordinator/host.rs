@@ -177,6 +177,7 @@ impl SchedPolicy for RoundRobin {
         let next = self
             .last
             .and_then(|l| ready.iter().copied().filter(|&i| i > l).min())
+            // detlint: allow(R001) pick() contract: callers never pass an empty ready set
             .unwrap_or_else(|| ready.iter().copied().min().expect("ready is non-empty"));
         self.last = Some(next);
         next
@@ -268,6 +269,7 @@ impl SchedPolicy for FewestRoundsFirst {
                     .iter()
                     .copied()
                     .min_by_key(|&i| (states[i].rounds_done, i))
+                    // detlint: allow(R001) pick() contract: ready is non-empty
                     .expect("ready is non-empty")
             })
     }
@@ -314,6 +316,7 @@ impl SchedPolicy for StalenessPriority {
                 .iter()
                 .copied()
                 .min_by_key(|&i| (states[i].last_run, i))
+                // detlint: allow(R001) pick() contract: ready is non-empty
                 .expect("ready is non-empty")
         })
     }
@@ -796,8 +799,12 @@ impl Fleet {
             // deterministic — no wall time involved.
             if !parked.is_empty() {
                 if ready.is_empty() {
-                    let wake =
-                        parked.iter().map(|&(at, _)| at).min().expect("parked is non-empty");
+                    let wake = parked
+                        .iter()
+                        .map(|&(at, _)| at)
+                        .min()
+                        // detlint: allow(R001) guarded by the !parked.is_empty() branch above
+                        .expect("parked is non-empty");
                     tick = tick.max(wake);
                 }
                 if parked.iter().any(|&(at, _)| at <= tick) {
@@ -874,6 +881,7 @@ impl Fleet {
 
             let step_sw = Stopwatch::start();
             let stepped = sessions[idx].step();
+            // detlint: allow(D004) host-profiling accumulator; *_ms fields are diff-ignored
             step_ms += step_sw.elapsed_ms();
             let event = match stepped {
                 Ok(event) => event,
@@ -1292,13 +1300,37 @@ struct ShardWorker<'a> {
     step_ms: f64,
 }
 
+/// Lock a shard's cold queue, surfacing lock poisoning (a sibling
+/// worker panicked while holding it) as a typed scheduler error instead
+/// of a second panic. The panicking worker already carries the root
+/// cause; the fleet surfaces it after joining, so a poisoned lock here
+/// only needs a clean unwind, not a fresh backtrace.
+fn lock_queue(
+    queue: &Mutex<Vec<ColdMember>>,
+) -> Result<std::sync::MutexGuard<'_, Vec<ColdMember>>> {
+    queue
+        .lock()
+        .map_err(|_| Error::Sched("fleet cold queue poisoned by a panicked worker".into()))
+}
+
+/// Send a host event to the main thread. The receiver lives on the
+/// main thread for the entire `thread::scope`, so a failed send means
+/// the main thread is gone (it panicked out of the event loop): trip
+/// the fleet-wide stop so every worker winds down instead of spinning
+/// against a dead channel.
+fn emit(tx: &mpsc::Sender<HostEvent>, stop: &AtomicBool, event: HostEvent) {
+    if tx.send(event).is_err() {
+        stop.store(true, Ordering::Release);
+    }
+}
+
 impl ShardWorker<'_> {
     fn run(mut self) -> Result<(FaultTelemetry, ShardStats)> {
         let sw = Stopwatch::start();
         while self.live.load(Ordering::Acquire) > 0 && !self.stop.load(Ordering::Relaxed) {
             let admitted = self.admit_one()?;
             if self.ready.is_empty() {
-                if !admitted && !self.steal() {
+                if !admitted && !self.steal()? {
                     // nothing to run, admit or steal: another worker is
                     // finishing the stragglers
                     std::thread::yield_now();
@@ -1322,8 +1354,9 @@ impl ShardWorker<'_> {
     /// wake-up (backoff is tick-deterministic, never wall-clock).
     fn admit_one(&mut self) -> Result<bool> {
         let member = {
-            let mut queue = self.queues[self.shard].lock().expect("fleet queue poisoned");
+            let mut queue = lock_queue(&self.queues[self.shard])?;
             if self.ready.is_empty() && !queue.is_empty() {
+                // detlint: allow(R001) guarded by !queue.is_empty() on the previous line
                 let wake = queue.iter().map(|m| m.wake_at).min().expect("non-empty");
                 self.tick = self.tick.max(wake);
             }
@@ -1367,15 +1400,19 @@ impl ShardWorker<'_> {
     /// path). Only cold members move — hot sessions are pinned — so a
     /// steal hands over a recipe, never mid-op state. Locks are taken one
     /// at a time, so no ordering discipline is needed.
-    fn steal(&mut self) -> bool {
-        let victim = (0..self.queues.len())
-            .filter(|&s| s != self.shard)
-            .map(|s| (s, self.queues[s].lock().expect("fleet queue poisoned").len()))
-            .filter(|&(_, len)| len > 0)
-            .max_by_key(|&(_, len)| len);
-        let Some((victim, _)) = victim else { return false };
+    fn steal(&mut self) -> Result<bool> {
+        // `len >= best` keeps max_by_key's last-maximal tie break (the
+        // highest-index shard among equally loaded victims)
+        let mut victim: Option<(usize, usize)> = None;
+        for s in (0..self.queues.len()).filter(|&s| s != self.shard) {
+            let len = lock_queue(&self.queues[s])?.len();
+            if len > 0 && victim.map_or(true, |(_, best)| len >= best) {
+                victim = Some((s, len));
+            }
+        }
+        let Some((victim, _)) = victim else { return Ok(false) };
         let stolen = {
-            let mut queue = self.queues[victim].lock().expect("fleet queue poisoned");
+            let mut queue = lock_queue(&self.queues[victim])?;
             queue
                 .iter()
                 .enumerate()
@@ -1385,17 +1422,18 @@ impl ShardWorker<'_> {
         };
         // the queue may have drained between the length probe and the
         // lock re-take; that just means someone else got there first
-        let Some(member) = stolen else { return false };
+        let Some(member) = stolen else { return Ok(false) };
         self.steals_out[victim].fetch_add(1, Ordering::Relaxed);
         self.stats.steals_in += 1;
-        self.queues[self.shard].lock().expect("fleet queue poisoned").push(member);
-        true
+        lock_queue(&self.queues[self.shard])?.push(member);
+        Ok(true)
     }
 
     /// One scheduler tick: maybe inject a fault (only at a round
     /// boundary, where the single-thread host makes every decision), then
     /// advance the picked session by exactly one op.
     fn tick_session(&mut self, idx: usize) -> Result<()> {
+        // detlint: allow(R001) invariant: idx comes from `ready`, and ready members are hot
         let member = self.hot[idx].as_mut().expect("ready session is hot");
         if member.session.at_round_boundary() {
             // keyed on the session's own round (not any host clock) so
@@ -1410,11 +1448,11 @@ impl ShardWorker<'_> {
                 .filter(|_| member.fired.insert(session_round));
             if let Some(kind) = fault {
                 self.telemetry.record(idx, session_round, &kind);
-                let _ = self.tx.send(HostEvent::Fault {
-                    session: idx,
-                    round: session_round,
-                    kind: kind.name(),
-                });
+                emit(
+                    &self.tx,
+                    self.stop,
+                    HostEvent::Fault { session: idx, round: session_round, kind: kind.name() },
+                );
                 match kind {
                     FaultKind::Transient => {
                         // clears on retry: the session stays ready, but
@@ -1438,9 +1476,11 @@ impl ShardWorker<'_> {
             }
         }
 
+        // detlint: allow(R001) invariant: idx comes from `ready`, and ready members are hot
         let member = self.hot[idx].as_mut().expect("ready session is hot");
         let step_sw = Stopwatch::start();
         let stepped = member.session.step_op();
+        // detlint: allow(D004) host-profiling accumulator; *_ms fields are diff-ignored
         self.step_ms += step_sw.elapsed_ms();
         self.tick += 1;
         self.stats.ops += 1;
@@ -1455,8 +1495,9 @@ impl ShardWorker<'_> {
                 self.states[idx].last_run = self.tick;
                 self.stats.rounds += 1;
                 self.policy.task_ran(idx, &self.states);
-                let _ = self.tx.send(HostEvent::Round { session: idx, outcome });
+                emit(&self.tx, self.stop, HostEvent::Round { session: idx, outcome });
                 // the main thread got the outcome; drop the session's copy
+                // detlint: allow(R001) invariant: idx comes from `ready`, and ready members are hot
                 let member = self.hot[idx].as_mut().expect("ready session is hot");
                 member.session.take_outcomes();
                 Ok(())
@@ -1465,14 +1506,17 @@ impl ShardWorker<'_> {
                 self.hot[idx] = None;
                 self.remove_ready(idx);
                 self.live.fetch_sub(1, Ordering::AcqRel);
-                let _ = self
-                    .tx
-                    .send(HostEvent::Finished { session: idx, record: Box::new(record) });
+                emit(
+                    &self.tx,
+                    self.stop,
+                    HostEvent::Finished { session: idx, record: Box::new(record) },
+                );
                 Ok(())
             }
             Err(e) => {
                 let round = self.hot[idx]
                     .as_ref()
+                    // detlint: allow(R001) invariant: a stepping session is hot by construction
                     .expect("ready session is hot")
                     .session
                     .rounds_completed();
@@ -1487,7 +1531,12 @@ impl ShardWorker<'_> {
     fn fail(&mut self, idx: usize, round: usize, reason: String) -> Result<()> {
         match self.supervise {
             SupervisionPolicy::FailFast => {
-                self.failures.lock().expect("fleet failures poisoned").push((idx, reason));
+                self.failures
+                    .lock()
+                    .map_err(|_| {
+                        Error::Sched("fleet failure list poisoned by a panicked worker".into())
+                    })?
+                    .push((idx, reason));
                 self.stop.store(true, Ordering::Release);
                 Ok(())
             }
@@ -1497,11 +1546,13 @@ impl ShardWorker<'_> {
                 Ok(())
             }
             SupervisionPolicy::Restart { max_retries, backoff_rounds } => {
+                // detlint: allow(R001) invariant: fail() is only called for a hot session
                 let used = self.hot[idx].as_ref().expect("failed session is hot").restarts_used;
                 if used >= max_retries {
                     let reason = format!("{reason} ({max_retries} restarts exhausted)");
                     self.quarantine(idx, round, reason);
                 } else {
+                    // detlint: allow(R001) invariant: fail() is only called for a hot session
                     let member = self.hot[idx].take().expect("failed session is hot");
                     match rebuild_builder(member.factory.as_ref(), member.checkpoint.as_ref())
                     {
@@ -1521,20 +1572,17 @@ impl ShardWorker<'_> {
                             // there): the rebuilt session has not started,
                             // so it is movable again
                             let stamp = self.stamps.fetch_add(1, Ordering::Relaxed);
-                            self.queues[self.shard]
-                                .lock()
-                                .expect("fleet queue poisoned")
-                                .push(ColdMember {
-                                    idx,
-                                    builder,
-                                    factory: member.factory,
-                                    checkpoint: member.checkpoint,
-                                    stamp,
-                                    wake_at: self.tick + backoff_rounds as u64,
-                                    state: self.states[idx],
-                                    restarts_used: member.restarts_used + 1,
-                                    fired: member.fired,
-                                });
+                            lock_queue(&self.queues[self.shard])?.push(ColdMember {
+                                idx,
+                                builder,
+                                factory: member.factory,
+                                checkpoint: member.checkpoint,
+                                stamp,
+                                wake_at: self.tick + backoff_rounds as u64,
+                                state: self.states[idx],
+                                restarts_used: member.restarts_used + 1,
+                                fired: member.fired,
+                            });
                         }
                         Err(e) => {
                             let reason = format!("{reason}; restart failed: {e}");
@@ -1556,7 +1604,7 @@ impl ShardWorker<'_> {
             self.names[idx]
         );
         self.telemetry.quarantines += 1;
-        let _ = self.tx.send(HostEvent::Quarantined { session: idx, round, reason });
+        emit(&self.tx, self.stop, HostEvent::Quarantined { session: idx, round, reason });
         self.hot[idx] = None;
         self.remove_ready(idx);
         self.live.fetch_sub(1, Ordering::AcqRel);
@@ -1610,19 +1658,17 @@ impl Fleet {
             for (idx, ((builder, factory), checkpoint)) in
                 builders.into_iter().zip(factories).zip(checkpoints).enumerate()
             {
-                queues[shard_of(idx, threads)].lock().expect("fleet queue poisoned").push(
-                    ColdMember {
-                        idx,
-                        builder,
-                        factory,
-                        checkpoint,
-                        stamp: idx as u64,
-                        wake_at: 0,
-                        state: TaskState::default(),
-                        restarts_used: 0,
-                        fired: HashSet::new(),
-                    },
-                );
+                lock_queue(&queues[shard_of(idx, threads)])?.push(ColdMember {
+                    idx,
+                    builder,
+                    factory,
+                    checkpoint,
+                    stamp: idx as u64,
+                    wake_at: 0,
+                    state: TaskState::default(),
+                    restarts_used: 0,
+                    fired: HashSet::new(),
+                });
             }
         }
 
@@ -1762,6 +1808,7 @@ impl Fleet {
             faults.merge_from(telemetry);
             stats.steals_out = steals_out[shard].load(Ordering::Relaxed);
             steals += stats.steals_in;
+            // detlint: allow(D004) host-profiling accumulator; *_ms fields are diff-ignored
             sched_overhead_ms += stats.sched_overhead_ms;
             shards.push(stats);
         }

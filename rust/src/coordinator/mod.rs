@@ -221,6 +221,7 @@ impl SelectorEngine {
                 // re-borrow the filter (self.rt.features above needed &mut self)
                 self.filter
                     .as_mut()
+                    // detlint: allow(R001) invariant: Some for the whole if-let body; re-borrow only
                     .unwrap()
                     .process_chunk(&arrivals[i..end], &feats[..valid * fd]);
                 i = end;
@@ -230,6 +231,7 @@ impl SelectorEngine {
             // (the winners-only sort is the ring's own compaction win) —
             // it documents the selectable window if budget semantics ever
             // outgrow the guard
+            // detlint: allow(R001) invariant: Some for the whole if-let body; re-borrow only
             let drained = self.filter.as_mut().unwrap().drain_top(meta.cand_max);
             report.candidates = drained.len();
             if self.capture_scored {

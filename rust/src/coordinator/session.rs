@@ -405,6 +405,7 @@ pub mod observers {
                     && name.as_bytes()[stem.len()] == b'.'
                     && name.ends_with(".tmp")
                 {
+                    // detlint: allow(R002) best-effort orphan sweep; a survivor is re-swept next start
                     let _ = std::fs::remove_file(entry.path());
                 }
             }
@@ -432,6 +433,7 @@ pub mod observers {
                 .and_then(|()| std::fs::rename(&self.tmp, &self.path));
             if let Err(e) = result {
                 self.failures.fetch_add(1, Ordering::Relaxed);
+                // detlint: allow(R002) best-effort temp cleanup after a counted, logged failure
                 let _ = std::fs::remove_file(&self.tmp);
                 log::warn!("checkpoint write {} failed: {e}", self.path.display());
             }
@@ -761,6 +763,7 @@ impl BatchFeed {
     ) -> Result<(TrainBatch, SelectorReport, Option<Box<SelectorState>>)> {
         match self {
             BatchFeed::Sequential { selector, source, .. } => {
+                // detlint: allow(R001) invariant: the sequential feed op always yields arrivals
                 let arrivals = arrivals.expect("sequential feed op produced arrivals");
                 let (batch, mut report) = selector.select_round(round, arrivals)?;
                 if source.retains() {
@@ -927,6 +930,9 @@ impl Running {
                 let selector_params = Arc::clone(&param_slot);
                 let sel_cfg = cfg.clone();
                 let mut sel_source = source;
+                // blessed spawn seam (detlint D005 / clippy
+                // disallowed-methods): the pipelined selector thread
+                #[allow(clippy::disallowed_methods)]
                 let handle = thread::Builder::new()
                     .name("titan-selector".into())
                     .spawn(move || -> Result<()> {

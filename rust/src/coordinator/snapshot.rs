@@ -254,6 +254,7 @@ fn u64_from_json(j: &Json) -> Result<u64> {
 
 fn f32_list(j: &Json) -> Result<Vec<f32>> {
     // f32 -> f64 -> f32 is lossless, so Num carries f32s bit-exactly
+    // detlint: allow(C001) decode half of a lossless f32<->f64 roundtrip (pinned by snapshot tests)
     Ok(j.f64_list()?.into_iter().map(|x| x as f32).collect())
 }
 

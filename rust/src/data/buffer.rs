@@ -112,7 +112,7 @@ fn physical(cap: usize) -> usize {
 /// definition the threshold, the compaction cut, and the diagnostic
 /// accessor all share.
 fn min_score(items: &[Candidate]) -> f64 {
-    items.iter().map(|c| c.score).fold(f64::INFINITY, f64::min)
+    crate::util::stats::fold_min(items.iter().map(|c| c.score), f64::INFINITY)
 }
 
 impl CandidateBuffer {
@@ -227,6 +227,7 @@ impl CandidateBuffer {
         } else {
             self.thresh = Some(min_score(&self.ring));
         }
+        // detlint: allow(R001) invariant: both branches above set self.thresh to Some
         self.thresh.expect("threshold just established")
     }
 

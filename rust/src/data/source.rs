@@ -55,6 +55,7 @@ pub trait DataSource: Send {
     /// arithmetic.
     fn fast_forward(&mut self, rounds: usize, v: usize) {
         for _ in 0..rounds {
+            // detlint: allow(R002) draw-and-discard IS the fast-forward: only the RNG advance matters
             let _ = self.next_round(v);
         }
     }
@@ -293,7 +294,7 @@ impl DriftSource {
                     "DriftSource {name} mix must be non-negative and finite"
                 )));
             }
-            if w.iter().sum::<f64>() <= 0.0 {
+            if crate::util::stats::sum(w) <= 0.0 {
                 return Err(Error::Config(format!(
                     "DriftSource {name} mix must have positive total mass"
                 )));

@@ -94,6 +94,7 @@ impl StreamSource {
     /// exactly as if the rounds had been pulled and used.
     pub fn skip_rounds(&mut self, rounds: usize, v: usize) {
         for _ in 0..rounds * v {
+            // detlint: allow(R002) draw-and-discard IS the fast-forward: only the RNG advance matters
             let _ = self.next_sample();
         }
     }

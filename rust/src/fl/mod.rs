@@ -73,6 +73,7 @@ pub struct FlConfig {
 
 impl FlConfig {
     pub fn paper_default(base: RunConfig) -> FlConfig {
+        // detlint: allow(R001) constructor precondition: a bad base config is a programming error
         base.validate().expect("base config invalid");
         FlConfig {
             base,
@@ -391,6 +392,7 @@ impl FlBuilder {
             // zero-survivor round leaves the global model untouched
             if participants > 0 {
                 for (g, a) in global.iter_mut().zip(&acc) {
+                    // detlint: allow(C001) params are f32 by the model contract; f64 only widens the average
                     *g = (a / participants as f64) as f32;
                 }
             }

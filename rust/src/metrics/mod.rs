@@ -96,10 +96,7 @@ impl RunRecord {
 
     /// Best accuracy along the curve (robust "final" metric for short runs).
     pub fn best_accuracy(&self) -> f64 {
-        self.curve
-            .iter()
-            .map(|p| p.test_accuracy)
-            .fold(0.0, f64::max)
+        crate::util::stats::fold_max(self.curve.iter().map(|p| p.test_accuracy), 0.0)
             .max(self.final_accuracy)
     }
 

@@ -589,6 +589,7 @@ impl SampleStore {
         if excluded.is_empty() {
             // pressure-free admit (the common path): one O(1) insert
             self.index.insert(
+                // detlint: allow(R001) invariant: entries.push(c) on the previous line
                 self.entries.last().expect("just pushed").sample.id,
                 self.entries.len() - 1,
             );

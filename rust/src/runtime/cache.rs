@@ -18,6 +18,7 @@ use std::path::{Path, PathBuf};
 use std::rc::Rc;
 use std::time::SystemTime;
 
+use crate::util::clock;
 use crate::Result;
 
 thread_local! {
@@ -42,7 +43,7 @@ pub fn thread_client() -> Result<Rc<xla::PjRtClient>> {
 /// Compile `path` (HLO text) on the thread client, reusing a cached
 /// executable when the file is unchanged (path + mtime key).
 pub fn compile_cached(path: &Path) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-    let mtime = std::fs::metadata(path)?.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+    let mtime = clock::file_mtime(path)?;
     let key = (path.to_path_buf(), mtime);
     if let Some(hit) = EXES.with(|m| m.borrow().get(&key).cloned()) {
         return Ok(hit);

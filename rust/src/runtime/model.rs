@@ -308,6 +308,7 @@ impl ModelRuntime {
         let x = lit::batch_inputs(&samples[..valid], m.cand_max, m.input_dim)?;
         let y = lit::batch_onehot(&samples[..valid], m.cand_max, m.num_classes)?;
         let mask = lit::mask(m.cand_max, valid);
+        // detlint: allow(R001) invariant: populated by the is_none() guard above
         let exe = self.probe_exe.as_ref().unwrap();
         let args = [
             lit::literal_1d(&self.params),
@@ -359,7 +360,10 @@ impl ModelRuntime {
             ];
             let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
             let outs = result.to_tuple()?;
+            // detlint: allow(D004) chunk-ordered eval reduction, pinned across backends by the
+            // record differ (same chunking on every host-thread count)
             loss_sum += outs[0].to_vec::<f32>()?[0] as f64;
+            // detlint: allow(D004) see above: chunk-ordered eval reduction
             correct += outs[1].to_vec::<f32>()?[0] as f64;
         }
         let n = chunks * m.eval_chunk;
@@ -432,6 +436,8 @@ impl ImportanceOut {
         let mut sum_norm = vec![0.0f64; c];
         for (i, &y) in labels.iter().enumerate().take(n) {
             indices[y as usize].push(i);
+            // detlint: allow(D004) index-ordered class reduction; pinned bit-identical across
+            // thread counts by gram_sums_bit_identical_across_thread_counts
             sum_norm[y as usize] += self.norms[i] as f64;
         }
 
@@ -479,6 +485,7 @@ impl ImportanceOut {
                     .collect();
                 handles
                     .into_iter()
+                    // detlint: allow(R001) re-raising a worker panic on the caller is the intent
                     .map(|h| h.join().expect("gram sweep worker panicked"))
                     .collect()
             });
@@ -491,8 +498,10 @@ impl ImportanceOut {
 
         // fixed-order merge; a lone block moves straight through so the
         // small-n path adds zero arithmetic over the historical chain
+        // detlint: allow(R001) invariant: both branches above fill every partials slot
         let mut parts = partials.into_iter().map(|p| p.expect("every block swept"));
         let (sum_diag, block) = if ranges.len() == 1 {
+            // detlint: allow(R001) invariant: ranges.len() == 1 guarantees one part
             let p = parts.next().expect("one block");
             (p.sum_diag, p.block)
         } else {
@@ -538,15 +547,21 @@ impl ImportanceOut {
             let row = &self.k[i * self.n_total..i * self.n_total + n];
             let d = row[i] as f64;
             diag_out[i - start] = d;
+            // detlint: allow(D004) historical single-pass triangle body, verbatim; the block
+            // partition + fixed merge order keep it bit-identical across thread counts
             sum_diag[yi] += d;
+            // detlint: allow(D004) see above: pinned triangle-sweep order
             block[yi * c + yi] += d;
             for (j, &kij) in row.iter().enumerate().skip(i + 1) {
                 let yj = labels[j] as usize;
                 let v = kij as f64;
                 if yi == yj {
+                    // detlint: allow(D004) see above: pinned triangle-sweep order
                     block[yi * c + yi] += 2.0 * v;
                 } else {
+                    // detlint: allow(D004) see above: pinned triangle-sweep order
                     block[yi * c + yj] += v;
+                    // detlint: allow(D004) see above: pinned triangle-sweep order
                     block[yj * c + yi] += v;
                 }
             }

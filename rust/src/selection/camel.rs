@@ -50,6 +50,7 @@ impl SelectionStrategy for CamelCoreset {
                 for u in 0..n {
                     let du = d2[i * n + u];
                     if du < best_cover[u] {
+                        // detlint: allow(D004) greedy-cover gain, summed in fixed candidate order
                         gain += (best_cover[u] - du).min(1e18);
                     }
                 }

@@ -111,7 +111,7 @@ impl SelectionStrategy for RepDiv {
             })
             .collect();
         // normalize rep to unit scale so rep and div are commensurate
-        let rep_scale = rep.iter().map(|r| r.abs()).fold(0.0f64, f64::max).max(1e-9);
+        let rep_scale = stats::fold_max(rep.iter().map(|r| r.abs()), 0.0).max(1e-9);
         let mut chosen: Vec<usize> = Vec::with_capacity(ctx.batch);
         let mut remaining: Vec<usize> = (0..n).collect();
         while chosen.len() < ctx.batch.min(n) {
@@ -123,6 +123,8 @@ impl SelectionStrategy for RepDiv {
                 } else {
                     let mut dsum = 0.0;
                     for &j in &chosen {
+                        // detlint: allow(D004) diversity term summed in chosen order (greedy order
+                        // is part of the algorithm, so the fold order is already pinned)
                         dsum += stats::dist2(
                             &feats[i * d..(i + 1) * d],
                             &feats[j * d..(j + 1) * d],

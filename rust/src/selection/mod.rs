@@ -113,7 +113,7 @@ pub fn make_weights(inv_prob: &[f64]) -> Vec<f32> {
             }
         })
         .collect();
-    let mean: f64 = clipped.iter().sum::<f64>() / clipped.len() as f64;
+    let mean: f64 = crate::util::stats::sum(&clipped) / clipped.len() as f64;
     clipped.iter().map(|&w| (w / mean) as f32).collect()
 }
 

@@ -45,9 +45,12 @@ pub fn theorem2_variance(summaries: &[ClassSummary], spec: &StrategySpec) -> f64
         let mut beta = 0.0;
         for (local, &g2) in s.diag.iter().enumerate() {
             let p = spec.probs[y][local].max(1e-12);
+            // detlint: allow(D004) Theorem-2 inner sum in class-local index order, pinned by
+            // the variance-decomposition tests
             beta += g2 / (ny * ny * p);
         }
         let gamma = s.mean_grad_norm2;
+        // detlint: allow(D004) see above: class-ordered outer sum
         v += alpha * (beta - gamma);
     }
     v

@@ -6,6 +6,10 @@
 //! summary (mean/p50/p99), black-box value sinking, and optional JSON
 //! emission so EXPERIMENTS.md can cite machine-readable numbers.
 
+// blessed monotonic-clock seam (detlint D001 / clippy disallowed-methods):
+// bench timings never reach deterministic record fields
+#![allow(clippy::disallowed_methods)]
+
 use std::hint::black_box as bb;
 use std::time::{Duration, Instant};
 
@@ -131,7 +135,7 @@ impl Bencher {
             mean_ns: mean,
             p50_ns: stats::percentile(&samples_ns, 50.0),
             p99_ns: stats::percentile(&samples_ns, 99.0),
-            min_ns: samples_ns.iter().cloned().fold(f64::INFINITY, f64::min),
+            min_ns: stats::fold_min(samples_ns.iter().copied(), f64::INFINITY),
         };
         println!(
             "{:<44} {:>12}/iter  p50 {:>12}  p99 {:>12}  ({} iters)",
@@ -142,11 +146,13 @@ impl Bencher {
             result.iters
         );
         self.results.push(result);
+        // detlint: allow(R001) invariant: results.push(result) on the previous line
         self.results.last().unwrap()
     }
 
     /// Write all results as JSON under `results/bench_<group>.json`.
     pub fn finish(self) {
+        // detlint: allow(R002) best-effort mkdir; the write below reports its own failure
         let _ = std::fs::create_dir_all("results");
         let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
         let path = format!("results/bench_{}.json", self.group);

@@ -43,6 +43,7 @@ impl Args {
                     // value-style if next token exists and isn't an option
                     match iter.peek() {
                         Some(next) if !next.starts_with("--") => {
+                            // detlint: allow(R001) invariant: peek() just returned Some
                             let v = iter.next().unwrap();
                             out.options.insert(rest.to_string(), v);
                         }

@@ -1,0 +1,60 @@
+//! The single wall-clock seam.
+//!
+//! Every wall-clock read in the library goes through this module (or
+//! through `util::timer` / `util::bench`, the monotonic profiling
+//! seams), so `scripts/detlint.py` rule D001 can bless exactly three
+//! files and flag any other `Instant::now` / `SystemTime::now` as a
+//! determinism hazard.
+//!
+//! Audit of where clock values are allowed to flow (none of these reach
+//! deterministic record fields):
+//!
+//! - `util::logging` stamps stderr lines with [`unix_now`]; log output
+//!   is never diffed or snapshotted.
+//! - `runtime::cache` keys compiled executables by [`file_mtime`]; the
+//!   key only controls cache hits, never computed values.
+//! - `util::timer` / `util::bench` feed host-profiling fields
+//!   (`*_ms`), which the record differ ignores by contract
+//!   (see DETERMINISM.md).
+//!
+//! `FleetRecord`, snapshots, and telemetry JSON must stay clock-free;
+//! detlint enforces the module boundary, this doc records the intent.
+
+#![allow(clippy::disallowed_methods)] // this IS the blessed clock seam
+
+use std::path::Path;
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+/// Seconds-precision wall clock for log stamps. Returns the duration
+/// since the Unix epoch, or zero if the system clock is before it.
+pub fn unix_now() -> Duration {
+    SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default()
+}
+
+/// Modification time of `path`, for cache keying only. Filesystems
+/// without mtime support report the Unix epoch (a stable degenerate
+/// key: the cache then revalidates on every compile, never misserves).
+pub fn file_mtime(path: &Path) -> std::io::Result<SystemTime> {
+    Ok(std::fs::metadata(path)?.modified().unwrap_or(SystemTime::UNIX_EPOCH))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unix_now_is_post_2020() {
+        // 2020-01-01T00:00:00Z — sanity-checks the epoch basis.
+        assert!(unix_now().as_secs() > 1_577_836_800);
+    }
+
+    #[test]
+    fn mtime_of_missing_file_errors() {
+        assert!(file_mtime(Path::new("definitely/not/a/file.hlo")).is_err());
+    }
+
+    #[test]
+    fn mtime_of_real_file_succeeds() {
+        assert!(file_mtime(Path::new("Cargo.toml")).is_ok());
+    }
+}

@@ -217,8 +217,10 @@ fn write_num(out: &mut String, n: f64) {
         // JSON has no inf/nan; emit null like serde_json's lossy mode.
         out.push_str("null");
     } else if n == n.trunc() && n.abs() < 1e15 {
+        // detlint: allow(R002) write! to a String is infallible (fmt::Write on String)
         let _ = write!(out, "{}", n as i64);
     } else {
+        // detlint: allow(R002) write! to a String is infallible (fmt::Write on String)
         let _ = write!(out, "{n}");
     }
 }
@@ -233,6 +235,7 @@ fn write_str(out: &mut String, s: &str) {
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
             c if (c as u32) < 0x20 => {
+                // detlint: allow(R002) write! to a String is infallible (fmt::Write on String)
                 let _ = write!(out, "\\u{:04x}", c as u32);
             }
             c => out.push(c),
@@ -420,6 +423,7 @@ impl<'a> Parser<'a> {
                     let rest = &self.bytes[self.pos..];
                     let text = std::str::from_utf8(rest)
                         .map_err(|_| Error::Json("invalid UTF-8".into()))?;
+                    // detlint: allow(R001) invariant: rest is non-empty (peek() returned Some)
                     let c = text.chars().next().unwrap();
                     s.push(c);
                     self.pos += c.len_utf8();
@@ -463,6 +467,7 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
+        // detlint: allow(R001) invariant: the scanned span is ASCII digits/sign/dot/exp only
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
         text.parse::<f64>()
             .map(Json::Num)

@@ -5,9 +5,10 @@
 
 use std::io::Write;
 use std::sync::Once;
-use std::time::{SystemTime, UNIX_EPOCH};
 
 use log::{Level, LevelFilter, Log, Metadata, Record};
+
+use crate::util::clock;
 
 struct StderrLogger {
     max: Level,
@@ -22,12 +23,12 @@ impl Log for StderrLogger {
         if !self.enabled(record.metadata()) {
             return;
         }
-        let now = SystemTime::now()
-            .duration_since(UNIX_EPOCH)
-            .unwrap_or_default();
+        // Wall clock only stamps stderr; records never see it (see util::clock).
+        let now = clock::unix_now();
         let secs = now.as_secs();
         let ms = now.subsec_millis();
         let (h, m, s) = ((secs / 3600) % 24, (secs / 60) % 60, secs % 60);
+        // detlint: allow(R002) a logger cannot log its own write failure; dropping is the only option
         let _ = writeln!(
             std::io::stderr(),
             "[{h:02}:{m:02}:{s:02}.{ms:03} {:5} {}] {}",

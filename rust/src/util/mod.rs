@@ -5,6 +5,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod clock;
 pub mod json;
 pub mod logging;
 pub mod prop;

@@ -89,6 +89,7 @@ where
         let input = gen(&mut rng);
         if let Err(msg) = check(&input) {
             let (min_input, min_msg) = shrink_failure(input, msg, &mut check);
+            // detlint: allow(R001) panicking with the counterexample IS the prop-test API
             panic!(
                 "property failed (case {case_idx}/{cases}, seed {seed}):\n  \
                  counterexample: {min_input:?}\n  error: {min_msg}"

@@ -1,6 +1,25 @@
 //! Small numeric/statistics helpers shared by the selection math, the
 //! metrics plane and the bench harness.
 
+/// Left-to-right f64 sum — THE blessed scalar reduction. Callers
+/// outside this module and `util::simd` must reduce through these
+/// helpers (detlint rule D004), so every sum in the tree shares one
+/// pinned association order.
+pub fn sum(xs: &[f64]) -> f64 {
+    xs.iter().sum()
+}
+
+/// Left-to-right fold with `f64::max`, seeded at `init` (blessed; NaN
+/// inputs are skipped by `f64::max`'s NaN-losing semantics).
+pub fn fold_max(xs: impl IntoIterator<Item = f64>, init: f64) -> f64 {
+    xs.into_iter().fold(init, f64::max)
+}
+
+/// Left-to-right fold with `f64::min`, seeded at `init` (blessed).
+pub fn fold_min(xs: impl IntoIterator<Item = f64>, init: f64) -> f64 {
+    xs.into_iter().fold(init, f64::min)
+}
+
 /// Mean of a slice (0.0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -228,6 +247,16 @@ pub fn dist2(a: &[f32], b: &[f32]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn blessed_reductions() {
+        let xs = [2.0, -1.0, 4.5];
+        assert_eq!(sum(&xs), 5.5);
+        assert_eq!(fold_max(xs.iter().copied(), f64::NEG_INFINITY), 4.5);
+        assert_eq!(fold_min(xs.iter().copied(), f64::INFINITY), -1.0);
+        assert_eq!(sum(&[]), 0.0);
+        assert_eq!(fold_max(std::iter::empty(), 0.0), 0.0);
+    }
 
     #[test]
     fn basic_moments() {

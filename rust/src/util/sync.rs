@@ -57,6 +57,8 @@ impl<T> Latest<T> {
 }
 
 #[cfg(test)]
+// contention tests need raw OS threads; test threads never touch records
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use std::sync::Arc;

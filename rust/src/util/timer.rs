@@ -1,6 +1,10 @@
 //! Wall-clock instrumentation: stopwatch + latency histogram. Used by the
 //! coordinator's metrics plane and the micro-bench harness.
 
+// blessed monotonic-clock seam (detlint D001 / clippy disallowed-methods):
+// values from here only ever feed diff-ignored host-profiling fields
+#![allow(clippy::disallowed_methods)]
+
 use std::time::{Duration, Instant};
 
 /// Simple stopwatch around `Instant`.

@@ -1,6 +1,10 @@
 #!/usr/bin/env bash
 # CI gate: the full local verification ladder, cheapest first.
 #
+#   0. detlint                    determinism & robustness static analysis
+#      (scripts/detlint.py against the committed detlint_baseline.json
+#      ratchet; its own Python test suite runs first — no toolchain
+#      needed, so this gate runs even where cargo is unavailable)
 #   1. cargo fmt --check          formatting drift
 #   2. cargo clippy -D warnings   lints (all targets: lib, bins, tests, benches)
 #   3. cargo doc -D warnings      rustdoc (intra-doc links, examples)
@@ -36,6 +40,12 @@
 set -euo pipefail
 script_dir="$(cd "$(dirname "$0")" && pwd)"
 repo_root="$(dirname "$script_dir")"
+
+echo "== detlint =="
+python3 -m unittest discover -s "$script_dir" -p "test_detlint.py" -q
+python3 "$script_dir/detlint.py" --root "$repo_root" \
+  --baseline "$repo_root/detlint_baseline.json"
+
 cd "$repo_root/rust"
 
 run_bench=1

@@ -1,0 +1,598 @@
+#!/usr/bin/env python3
+"""detlint — determinism & robustness static analysis for rust/src/**.
+
+Every pinned guarantee in this repo (bit-identical FleetRecords across
+host_threads, byte-identical kill/resume snapshots, plan-independent RNG
+streams) rests on conventions: seeded RNG only, blessed float-fold
+kernels, wall-clock reads confined to the clock/timer/bench seam, sorted
+JSON keys. This scanner enforces those conventions mechanically, with no
+Rust toolchain required — it tokenizes the source (comment- and
+string-aware, raw strings and nested block comments included) and runs a
+rule registry over the code text only.
+
+Rules
+-----
+  D001  wall-clock read (`Instant::now` / `SystemTime::now`) outside the
+        blessed clock seam: util/{clock,timer,bench}.rs. Wall time may
+        only reach host-profiling fields and log stamps, never a
+        deterministic record field.
+  D002  iteration over a HashMap/HashSet (`.iter()`, `.keys()`, `for in`,
+        `.drain()`, ...) in a module that feeds records, telemetry, or
+        snapshots. Iteration order is seeded per-process; use sorted keys
+        or a BTreeMap (util::json already sorts object keys).
+  D003  ambient randomness (`thread_rng`, `from_entropy`, `OsRng`,
+        `rand::random`, `RandomState::new`, `getrandom`). All entropy
+        must flow from explicit seeds (`seed ^ 0x...` derivations).
+  D004  floating-point fold (`.sum::<f32/f64>()`, float-seeded `.fold`,
+        or a `+=` reduction over a float accumulator inside a loop)
+        outside the blessed kernels util/{simd,stats}.rs, which exist to
+        pin fold order.
+  D005  unscoped thread creation (`thread::spawn` / `thread::Builder`)
+        outside the coordinator host/pipeline/session seam. Only scoped,
+        join-guarded threading keeps panics and shutdown deterministic.
+  R001  `.unwrap()` / `.expect(` / `panic!(` in non-test library code.
+        The fault-supervision plane turns failures into SessionStatus;
+        aborts bypass it.
+  R002  `let _ =` silently discarding a value (usually a Result).
+  C001  narrowing numeric cast (`as f32`, float `as usize`/ints) on a
+        record/telemetry path — use a checked conversion or document the
+        invariant.
+  P001  malformed detlint pragma (unknown rule or missing reason).
+        Never suppressible, never baselineable.
+
+Pragmas
+-------
+An inline escape hatch with a mandatory reason:
+
+    do_thing().unwrap(); // detlint: allow(R001) init-only; config was validated above
+
+A pragma on a comment-only line applies to the next line carrying code:
+
+    // detlint: allow(D004) host-clock aggregate, not a deterministic field
+    total_host_ms += shard_ms;
+
+Multiple rules: `// detlint: allow(R001,R002) reason`.
+
+Baseline ratchet
+----------------
+`--baseline detlint_baseline.json` grandfathers existing findings as
+per-(file, rule) counts. A count above its baseline entry fails (new
+finding); a count below it fails as *stale* (the ratchet only turns one
+way: re-run with --write-baseline to lock the improvement in) unless
+--allow-stale is given. `--write-baseline` regenerates the counts,
+preserving any "notes" block in the existing file.
+
+Exit codes: 0 clean (or fully ratcheted), 1 findings/new/stale/P001,
+2 usage error.
+
+Run `scripts/test_detlint.py` for the tokenizer unit tests and the
+fixture corpus under scripts/testdata/detlint/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+from collections import Counter
+from dataclasses import dataclass
+
+# --------------------------------------------------------------- registry
+
+RULES = {
+    "D001": "wall-clock read outside the blessed clock seam (util::{clock,timer,bench})",
+    "D002": "HashMap/HashSet iteration in a record/telemetry/snapshot-feeding module",
+    "D003": "ambient (unseeded) randomness; entropy must flow from explicit seeds",
+    "D004": "floating-point fold outside the blessed kernels (util::{simd,stats})",
+    "D005": "unscoped thread creation outside the coordinator threading seam",
+    "R001": ".unwrap()/.expect()/panic! in non-test library code",
+    "R002": "value silently discarded with `let _ =`",
+    "C001": "narrowing numeric cast on a record/telemetry path",
+    "P001": "malformed detlint pragma (unknown rule or missing reason)",
+}
+
+# Module scoping, as paths relative to rust/src (directories end in "/").
+SCOPE = {
+    "d001_blessed": ("util/clock.rs", "util/timer.rs", "util/bench.rs"),
+    "d002_scope": ("coordinator/", "retention/", "fault/", "fl/", "metrics/", "data/", "exp/"),
+    "d004_blessed": ("util/simd.rs", "util/stats.rs"),
+    "d005_allowed": ("coordinator/host.rs", "coordinator/pipeline.rs", "coordinator/session.rs"),
+    "c001_scope": ("coordinator/", "metrics/", "retention/", "fl/", "fault/"),
+}
+
+
+def in_scope(rel, paths):
+    return any(rel == p or (p.endswith("/") and rel.startswith(p)) for p in paths)
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str  # relative to rust/src, "/"-separated
+    line: int  # 1-based
+    rule: str
+    message: str
+    snippet: str
+
+    def render(self):
+        return f"rust/src/{self.path}:{self.line}: {self.rule} {self.message}\n    {self.snippet}"
+
+    def to_json(self):
+        return {
+            "path": f"rust/src/{self.path}",
+            "line": self.line,
+            "rule": self.rule,
+            "message": self.message,
+            "snippet": self.snippet,
+        }
+
+
+# -------------------------------------------------------------- tokenizer
+
+RAW_STR = re.compile(r'b?r(#*)"')
+CHAR_LIT = re.compile(r"'(?:\\u\{[0-9a-fA-F_]+\}|\\.|[^\\'\n])'")
+
+
+def tokenize(text):
+    """Split Rust source into (code_lines, comment_lines).
+
+    code_lines[i] is line i with comment and string/char-literal *content*
+    replaced by spaces (delimiters kept), so rule regexes can never match
+    inside a string or comment. comment_lines[i] is the comment text on
+    line i (for pragma parsing). Handles nested block comments, (byte)
+    raw strings r#"..."#, escapes, and char literals vs. lifetimes.
+    """
+    code, comment = [], []
+    cur_code, cur_comment = [], []
+
+    def flush():
+        code.append("".join(cur_code))
+        comment.append("".join(cur_comment))
+        cur_code.clear()
+        cur_comment.clear()
+
+    i, n = 0, len(text)
+    while i < n:
+        c = text[i]
+        nxt = text[i + 1] if i + 1 < n else ""
+        if c == "\n":
+            flush()
+            i += 1
+        elif c == "/" and nxt == "/":
+            while i < n and text[i] != "\n":
+                cur_comment.append(text[i])
+                cur_code.append(" ")
+                i += 1
+        elif c == "/" and nxt == "*":
+            depth = 0
+            while i < n:
+                if text[i] == "/" and i + 1 < n and text[i + 1] == "*":
+                    depth += 1
+                    cur_comment.append("/*")
+                    cur_code.append("  ")
+                    i += 2
+                elif text[i] == "*" and i + 1 < n and text[i + 1] == "/":
+                    depth -= 1
+                    cur_comment.append("*/")
+                    cur_code.append("  ")
+                    i += 2
+                    if depth == 0:
+                        break
+                elif text[i] == "\n":
+                    flush()
+                    i += 1
+                else:
+                    cur_comment.append(text[i])
+                    cur_code.append(" ")
+                    i += 1
+        elif c in "br" and (m := RAW_STR.match(text, i)) and (i == 0 or not (text[i - 1].isalnum() or text[i - 1] == "_")):
+            hashes = m.group(1)
+            cur_code.append(m.group(0))
+            i = m.end()
+            close = '"' + hashes
+            while i < n:
+                if text.startswith(close, i):
+                    cur_code.append(close)
+                    i += len(close)
+                    break
+                if text[i] == "\n":
+                    flush()
+                else:
+                    cur_code.append(" ")
+                i += 1
+        elif c == '"':
+            cur_code.append('"')
+            i += 1
+            while i < n:
+                if text[i] == "\\" and i + 1 < n:
+                    if text[i + 1] == "\n":
+                        cur_code.append(" ")
+                        flush()
+                    else:
+                        cur_code.append("  ")
+                    i += 2
+                elif text[i] == '"':
+                    cur_code.append('"')
+                    i += 1
+                    break
+                elif text[i] == "\n":
+                    flush()
+                    i += 1
+                else:
+                    cur_code.append(" ")
+                    i += 1
+        elif c == "'":
+            m = CHAR_LIT.match(text, i)
+            if m:
+                cur_code.append("'" + " " * (len(m.group(0)) - 2) + "'")
+                i = m.end()
+            else:  # lifetime
+                cur_code.append("'")
+                i += 1
+        else:
+            cur_code.append(c)
+            i += 1
+    if cur_code or cur_comment:
+        flush()
+    return code, comment
+
+
+# ---------------------------------------------------- regions over code text
+
+
+def brace_region(code_text, start):
+    """End offset of the item starting at `start`: the close of its first
+    `{...}` block, or the first top-level `;` before any brace."""
+    depth = 0
+    opened = False
+    i = start
+    n = len(code_text)
+    while i < n:
+        ch = code_text[i]
+        if ch == "{":
+            depth += 1
+            opened = True
+        elif ch == "}":
+            depth -= 1
+            if opened and depth <= 0:
+                return i
+        elif ch == ";" and not opened and depth == 0:
+            return i
+        i += 1
+    return n - 1
+
+
+def line_starts(code_text):
+    starts = [0]
+    for m in re.finditer(r"\n", code_text):
+        starts.append(m.end())
+    return starts
+
+
+def offsets_to_lines(starts, lo, hi):
+    """0-based line indices covered by [lo, hi] offsets."""
+    import bisect
+
+    first = bisect.bisect_right(starts, lo) - 1
+    last = bisect.bisect_right(starts, hi) - 1
+    return range(first, last + 1)
+
+
+TEST_ATTR = re.compile(r"#\[\s*(?:cfg\s*\(\s*(?:test\b|all\s*\(\s*test\b)|test\s*\])")
+LOOP_HEAD = re.compile(r"\b(?:for|while)\b|\bloop\s*\{")
+
+
+def mark_regions(code_text, starts, pattern):
+    lines = set()
+    covered_until = -1
+    for m in pattern.finditer(code_text):
+        if m.start() <= covered_until:
+            continue
+        end = brace_region(code_text, m.start())
+        covered_until = max(covered_until, end)
+        lines.update(offsets_to_lines(starts, m.start(), end))
+    return lines
+
+
+# ------------------------------------------------------------ rule patterns
+
+RE_D001 = re.compile(r"\b(?:Instant|SystemTime)\s*::\s*now\b")
+RE_D003 = re.compile(
+    r"\bthread_rng\s*\(|\bfrom_entropy\b|\bOsRng\b|\brand\s*::\s*random\b"
+    r"|\bRandomState\s*::\s*new\b|\bgetrandom\b"
+)
+RE_D004_ITER = re.compile(r"\.\s*(?:sum|product)\s*::\s*<\s*f(?:32|64)\s*>")
+RE_D004_FOLD = re.compile(
+    r"\.\s*fold\s*\(\s*(?:-?\d+\.\d*(?:_?f(?:32|64))?|-?\d+_?f(?:32|64)"
+    r"|f(?:32|64)\s*::\s*(?:NEG_INFINITY|INFINITY|MIN|MAX|EPSILON))"
+)
+RE_D004_ADD = re.compile(r"\b(?:self\s*\.\s*)?(?:\w+\s*\.\s*)*(\w+)\s*(?:\[[^\]]*\])?\s*\+=")
+RE_D005 = re.compile(r"\bthread\s*::\s*(?:spawn\s*\(|Builder\b)")
+#  `.expect(` is only Option/Result::expect when its argument is a panic
+#  message (string literal or format!); parsers with their own byte-level
+#  `expect(b'{')` methods stay unflagged.
+RE_R001 = re.compile(r"\.\s*unwrap\s*\(\s*\)|\.\s*expect\s*\(\s*(?:\"|&?\s*format!)|\bpanic!\s*[(\[{]")
+RE_R002 = re.compile(r"^\s*let\s+_\s*=")
+RE_C001_F32 = re.compile(r"\bas\s+f32\b")
+RE_C001_INT = re.compile(r"(?:\bf(?:32|64)\b|\d\.\d*)\s+as\s+(?:usize|u(?:8|16|32|64|128)|i(?:8|16|32|64|128))\b")
+
+RE_FLOAT_DECL = [
+    re.compile(r"\blet\s+mut\s+(\w+)\s*=\s*-?(?:\d+\.\d*|\d+_?f(?:32|64))"),
+    re.compile(r"\blet\s+mut\s+(\w+)\s*:\s*f(?:32|64)\b"),
+    re.compile(r"\blet\s+mut\s+(\w+)\s*(?::[^=;]*)?=\s*vec!\s*\[\s*0(?:\.\d*(?:_?f(?:32|64))?|_?f(?:32|64))\s*;"),
+    re.compile(r"\b(\w+)\s*:\s*f(?:32|64)\b"),
+]
+RE_HASH_DECL = [
+    re.compile(r"\b(\w+)\s*:\s*(?:&\s*(?:mut\s+)?)?(?:std\s*::\s*collections\s*::\s*)?Hash(?:Map|Set)\b"),
+    re.compile(r"\blet\s+(?:mut\s+)?(\w+)\s*(?::[^=;]*)?=\s*(?:std\s*::\s*collections\s*::\s*)?Hash(?:Map|Set)\s*::"),
+]
+HASH_ITER_METHODS = r"iter|iter_mut|keys|values|values_mut|into_iter|drain|retain"
+
+PRAGMA = re.compile(r"detlint:\s*allow\s*\(([^)]*)\)\s*(.*)")
+
+
+# ---------------------------------------------------------------- scanning
+
+
+def collect_idents(code_lines, patterns, skip_lines=()):
+    idents = set()
+    for i, line in enumerate(code_lines):
+        if i in skip_lines:
+            continue
+        for pat in patterns:
+            for m in pat.finditer(line):
+                idents.add(m.group(1))
+    return idents
+
+
+def parse_pragmas(code_lines, comment_lines):
+    """Return (allow: {0-based line -> set(rules)}, errors: [Finding-args]).
+
+    A pragma on a comment-only line applies to the next line carrying
+    code; an inline pragma applies to its own line.
+    """
+    allow = {}
+    errors = []
+    n = len(code_lines)
+    for i, comment in enumerate(comment_lines):
+        m = PRAGMA.search(comment)
+        if not m:
+            continue
+        rules = [r.strip() for r in m.group(1).split(",") if r.strip()]
+        reason = m.group(2).strip()
+        bad = [r for r in rules if r not in RULES or r == "P001"]
+        if bad or not rules:
+            errors.append((i + 1, f"unknown rule(s) {bad or '(none)'} in pragma"))
+            continue
+        if not reason:
+            errors.append((i + 1, f"pragma allow({','.join(rules)}) is missing its mandatory reason"))
+            continue
+        target = i
+        if not code_lines[i].strip():  # standalone comment: next code line
+            target = next((j for j in range(i + 1, n) if code_lines[j].strip()), None)
+            if target is None:
+                errors.append((i + 1, "standalone pragma at end of file applies to nothing"))
+                continue
+        allow.setdefault(target, set()).update(rules)
+    return allow, errors
+
+
+def scan_file(rel, text):
+    """Scan one file; returns (kept_findings, suppressed_count)."""
+    code_lines, comment_lines = tokenize(text)
+    code_text = "\n".join(code_lines)
+    starts = line_starts(code_text)
+    test_lines = mark_regions(code_text, starts, TEST_ATTR)
+    loop_lines = mark_regions(code_text, starts, LOOP_HEAD)
+    float_idents = collect_idents(code_lines, RE_FLOAT_DECL, test_lines)
+    hash_idents = collect_idents(code_lines, RE_HASH_DECL, test_lines)
+    hash_use = None
+    if hash_idents:
+        alt = "|".join(sorted(re.escape(x) for x in hash_idents))
+        hash_use = re.compile(
+            rf"\b(?:self\s*\.\s*)?(?:{alt})\s*\.\s*(?:{HASH_ITER_METHODS})\s*\("
+            rf"|\bfor\s+[^;{{]*?\bin\s+&?(?:mut\s+)?(?:self\s*\.\s*)?(?:{alt})\b"
+        )
+
+    allow, pragma_errors = parse_pragmas(code_lines, comment_lines)
+    raw = []
+
+    def hit(i, rule, message):
+        snippet = " ".join((text.splitlines()[i] if i < len(text.splitlines()) else "").split())
+        raw.append(Finding(rel, i + 1, rule, message, snippet[:160]))
+
+    for i, line in enumerate(code_lines):
+        if i in test_lines or not line.strip():
+            continue
+        if RE_D001.search(line) and not in_scope(rel, SCOPE["d001_blessed"]):
+            hit(i, "D001", RULES["D001"])
+        if hash_use and in_scope(rel, SCOPE["d002_scope"]) and hash_use.search(line):
+            hit(i, "D002", RULES["D002"])
+        if RE_D003.search(line):
+            hit(i, "D003", RULES["D003"])
+        if not in_scope(rel, SCOPE["d004_blessed"]):
+            if RE_D004_ITER.search(line) or RE_D004_FOLD.search(line):
+                hit(i, "D004", RULES["D004"])
+            elif i in loop_lines:
+                for m in RE_D004_ADD.finditer(line):
+                    if m.group(1) in float_idents:
+                        hit(i, "D004", RULES["D004"] + f" (`{m.group(1)} +=` reduction)")
+                        break
+        if RE_D005.search(line) and not in_scope(rel, SCOPE["d005_allowed"]):
+            hit(i, "D005", RULES["D005"])
+        if RE_R001.search(line):
+            hit(i, "R001", RULES["R001"])
+        if RE_R002.search(line):
+            hit(i, "R002", RULES["R002"])
+        if in_scope(rel, SCOPE["c001_scope"]) and (RE_C001_F32.search(line) or RE_C001_INT.search(line)):
+            hit(i, "C001", RULES["C001"])
+
+    kept, suppressed = [], 0
+    for f in raw:
+        if f.rule in allow.get(f.line - 1, ()):
+            suppressed += 1
+        else:
+            kept.append(f)
+    for line_no, msg in pragma_errors:
+        kept.append(Finding(rel, line_no, "P001", msg, ""))
+    return kept, suppressed
+
+
+def scan_tree(root):
+    src = os.path.join(root, "rust", "src")
+    if not os.path.isdir(src):
+        raise SystemExit(f"detlint: no rust/src under {root!r}")
+    findings, suppressed = [], 0
+    for dirpath, dirnames, filenames in sorted(os.walk(src)):
+        dirnames.sort()
+        for name in sorted(filenames):
+            if not name.endswith(".rs"):
+                continue
+            path = os.path.join(dirpath, name)
+            rel = os.path.relpath(path, src).replace(os.sep, "/")
+            with open(path, encoding="utf-8") as fh:
+                text = fh.read()
+            got, sup = scan_file(rel, text)
+            findings.extend(got)
+            suppressed += sup
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings, suppressed
+
+
+# ---------------------------------------------------------------- baseline
+
+
+def load_baseline(path):
+    with open(path, encoding="utf-8") as fh:
+        data = json.load(fh)
+    if data.get("version") != 1:
+        raise SystemExit(f"detlint: unsupported baseline version in {path}")
+    return data
+
+
+def counts_of(findings):
+    counts = Counter((f.path, f.rule) for f in findings if f.rule != "P001")
+    return counts
+
+
+def write_baseline(path, findings, old_notes=None):
+    counts = counts_of(findings)
+    entries = {}
+    for (p, rule), cnt in sorted(counts.items()):
+        entries.setdefault(p, {})[rule] = cnt
+    data = {
+        "version": 1,
+        "generated_by": "scripts/detlint.py --write-baseline",
+        "total": sum(counts.values()),
+        "entries": entries,
+    }
+    if old_notes:
+        data["notes"] = old_notes
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(data, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return data
+
+
+def compare(findings, baseline):
+    """Partition findings into (new, covered) and find stale baseline keys."""
+    entries = baseline.get("entries", {})
+    base = {(p, r): c for p, rules in entries.items() for r, c in rules.items()}
+    declared = baseline.get("total")
+    if declared is not None and declared != sum(base.values()):
+        raise SystemExit(
+            "detlint: baseline tampered — 'total' does not match the sum of entries"
+        )
+    counts = counts_of(findings)
+    new, covered = [], []
+    for f in findings:
+        if f.rule == "P001":
+            new.append(f)
+        elif counts[(f.path, f.rule)] > base.get((f.path, f.rule), 0):
+            new.append(f)  # every finding of an over-budget (file, rule) is reported
+        else:
+            covered.append(f)
+    stale = sorted(
+        (p, r, c, counts.get((p, r), 0)) for (p, r), c in base.items() if counts.get((p, r), 0) < c
+    )
+    return new, covered, stale
+
+
+# -------------------------------------------------------------------- main
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="detlint", description="determinism & robustness lint over rust/src/**"
+    )
+    ap.add_argument("--root", default=None, help="repo root (default: the script's parent repo)")
+    ap.add_argument("--baseline", default=None, help="grandfathered-findings ratchet file")
+    ap.add_argument("--write-baseline", default=None, metavar="PATH",
+                    help="write the current findings as the new baseline and exit 0")
+    ap.add_argument("--json", action="store_true", help="machine-readable report on stdout")
+    ap.add_argument("--all", action="store_true", help="also print baseline-covered findings")
+    ap.add_argument("--allow-stale", action="store_true",
+                    help="do not fail when the tree beats the baseline (ratchet not locked)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in RULES.items():
+            print(f"{rule}  {desc}")
+        return 0
+
+    root = args.root or os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    findings, suppressed = scan_tree(root)
+
+    if args.write_baseline:
+        old_notes = None
+        if os.path.exists(args.write_baseline):
+            old_notes = load_baseline(args.write_baseline).get("notes")
+        data = write_baseline(args.write_baseline, findings, old_notes)
+        print(f"detlint: baseline written to {args.write_baseline} "
+              f"({data['total']} grandfathered findings, {suppressed} pragma-suppressed)")
+        return 0
+
+    if args.baseline:
+        new, covered, stale = compare(findings, load_baseline(args.baseline))
+    else:
+        new, covered, stale = findings, [], []
+
+    if args.json:
+        print(json.dumps({
+            "rules": RULES,
+            "findings": [f.to_json() for f in new],
+            "baseline_covered": [f.to_json() for f in covered],
+            "stale": [{"path": f"rust/src/{p}", "rule": r, "baseline": c, "current": cur}
+                      for p, r, c, cur in stale],
+            "suppressed": suppressed,
+            "counts": {r: c for r, c in sorted(Counter(f.rule for f in findings).items())},
+        }, indent=2, sort_keys=True))
+    else:
+        shown = new + (covered if args.all else [])
+        shown.sort(key=lambda f: (f.path, f.line, f.rule))
+        for f in shown:
+            tag = "" if f in new or f.rule == "P001" else " [baseline]"
+            print(f.render() + tag)
+        for p, r, c, cur in stale:
+            print(f"rust/src/{p}: {r} improved {c} -> {cur}; baseline is stale "
+                  f"(lock the ratchet: detlint.py --write-baseline)")
+        status = []
+        if new:
+            status.append(f"{len(new)} finding(s)")
+        if covered:
+            status.append(f"{len(covered)} baseline-covered")
+        if suppressed:
+            status.append(f"{suppressed} pragma-suppressed")
+        if stale:
+            status.append(f"{len(stale)} stale baseline entr(y/ies)")
+        print(f"detlint: {', '.join(status) if status else 'clean'}")
+
+    if new or (stale and not args.allow_stale):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,11 @@
+//! C001 conforming fixture: checked conversions, or a pragma that
+//! documents the narrowing invariant.
+
+pub fn checked(ms: u64) -> Result<u32, String> {
+    u32::try_from(ms).map_err(|_| "ms overflows u32".to_string())
+}
+
+pub fn documented(x: f64) -> f32 {
+    // detlint: allow(C001) params are f32 by model contract; the f64 came from a lossless widen
+    x as f32
+}

@@ -1,0 +1,24 @@
+//! D002 conforming fixture: deterministic iteration in a record-feeding
+//! module — BTreeMap for anything walked, HashMap only for point lookups.
+
+use std::collections::{BTreeMap, HashMap};
+
+pub struct Telemetry {
+    ordered: BTreeMap<u64, u64>,
+    index: HashMap<u64, usize>,
+}
+
+impl Telemetry {
+    pub fn emit(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        for (k, v) in &self.ordered {
+            out.push((*k, *v));
+        }
+        out
+    }
+
+    pub fn slot_of(&mut self, id: u64, slot: usize) -> Option<usize> {
+        self.index.insert(id, slot);
+        self.index.get(&id).copied()
+    }
+}

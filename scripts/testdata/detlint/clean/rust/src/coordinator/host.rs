@@ -1,0 +1,9 @@
+//! D005 conforming fixture: the coordinator host seam may create
+//! threads (this path is on the allowed list), and scoped spawns are
+//! fine anywhere.
+
+pub fn hosted() {
+    std::thread::spawn(move || {});
+    let builder = std::thread::Builder::new();
+    drop(builder);
+}

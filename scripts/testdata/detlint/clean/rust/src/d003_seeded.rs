@@ -1,0 +1,13 @@
+//! D003 conforming fixture: all entropy flows from an explicit seed.
+
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn seed_from_u64(seed: u64) -> Rng {
+        Rng(seed)
+    }
+}
+
+pub fn derived(seed: u64) -> Rng {
+    Rng::seed_from_u64(seed ^ 0xB1E4_D411)
+}

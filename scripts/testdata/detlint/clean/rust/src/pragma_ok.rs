@@ -1,0 +1,16 @@
+//! Pragma fixture: correctly formed pragmas (rule + mandatory reason)
+//! suppress their findings — inline, standalone, and multi-rule forms.
+
+pub fn pinned_fold(xs: &[f64; 4]) -> f64 {
+    // detlint: allow(D004) fixed-order four-element fold, pinned by a regression test
+    xs.iter().sum::<f64>()
+}
+
+pub fn known_some() -> u32 {
+    Some(1).unwrap() // detlint: allow(R001) literal is Some by construction
+}
+
+pub fn best_effort(path: &str) {
+    // detlint: allow(R002,R001) best-effort temp cleanup; failure only leaves a stray file
+    let _ = std::fs::remove_file(path);
+}

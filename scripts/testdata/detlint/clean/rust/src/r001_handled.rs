@@ -1,0 +1,42 @@
+//! R001 conforming fixture: errors handled, not aborted on — and the
+//! two deliberate non-matches: a parser's *own* `expect(byte)` method
+//! (not Option/Result::expect) and unwraps confined to test code.
+
+pub struct Parser {
+    pos: usize,
+}
+
+impl Parser {
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        self.pos += usize::from(b & 1);
+        Ok(())
+    }
+
+    pub fn parse(&mut self) -> Result<(), String> {
+        self.expect(b'{')?;
+        self.expect(b'}')?;
+        Ok(())
+    }
+}
+
+pub fn first(xs: &[u32]) -> Result<u32, String> {
+    xs.first().copied().ok_or_else(|| "empty".to_string())
+}
+
+pub fn second(xs: &[u32]) -> u32 {
+    xs.get(1).copied().unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwraps_are_fine_in_tests() {
+        assert_eq!(first(&[7]).unwrap(), 7);
+        let v: Option<u32> = Some(1);
+        if v.expect("set above") != 1 {
+            panic!("impossible");
+        }
+    }
+}

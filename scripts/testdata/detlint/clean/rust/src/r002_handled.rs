@@ -1,0 +1,11 @@
+//! R002 conforming fixture: the Result is inspected, not discarded.
+
+pub fn cleanup(path: &str) -> bool {
+    std::fs::remove_file(path).is_ok()
+}
+
+pub fn send_or_stop(ok: Result<(), String>, stop: &mut bool) {
+    if ok.is_err() {
+        *stop = true;
+    }
+}

@@ -1,0 +1,14 @@
+//! D004 conforming fixture: float folds are the blessed kernels' job,
+//! and this file's path (util/stats.rs) is on the blessed list.
+
+pub fn sum(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>()
+}
+
+pub fn running(xs: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for x in xs {
+        acc += x;
+    }
+    acc
+}

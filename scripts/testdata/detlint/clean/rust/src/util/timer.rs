@@ -1,0 +1,12 @@
+//! D001 conforming fixture: wall-clock reads are fine in the blessed
+//! clock seam (this file's path, util/timer.rs, is on the blessed list).
+
+use std::time::Instant;
+
+pub fn stopwatch() -> Instant {
+    Instant::now()
+}
+
+pub fn unix_like() {
+    let _t = std::time::SystemTime::now();
+}

@@ -1,0 +1,9 @@
+//! C001 fixture: narrowing casts on a record/telemetry path.
+
+pub fn narrow(ms: f64) -> f32 {
+    ms as f32
+}
+
+pub fn truncate(ms: f64) -> usize {
+    (ms * 1e3) as f64 as usize
+}

@@ -1,0 +1,17 @@
+//! D002 fixture: HashMap iteration in a record-feeding module.
+
+use std::collections::HashMap;
+
+pub struct Telemetry {
+    counts: HashMap<u64, u64>,
+}
+
+impl Telemetry {
+    pub fn emit(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        for (k, v) in &self.counts {
+            out.push((*k, *v));
+        }
+        out
+    }
+}

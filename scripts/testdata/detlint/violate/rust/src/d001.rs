@@ -1,0 +1,5 @@
+//! D001 fixture: a wall-clock read outside the blessed clock seam.
+
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -1,0 +1,6 @@
+//! D003 fixture: ambient randomness instead of an explicit seed.
+
+pub fn noise() -> u64 {
+    let mut rng = rand::thread_rng();
+    rng.next_u64()
+}

@@ -1,0 +1,9 @@
+//! D005 fixture: an unscoped thread outside the coordinator seam.
+
+pub fn detach() {
+    std::thread::spawn(move || {
+        do_work();
+    });
+}
+
+fn do_work() {}

@@ -1,0 +1,10 @@
+//! P001 fixture: pragmas that are malformed (reason missing / unknown rule).
+
+// detlint: allow(R001)
+pub fn reasonless() -> u32 {
+    7
+}
+
+pub fn unknown() -> u32 {
+    8 // detlint: allow(Q999) there is no rule Q999
+}

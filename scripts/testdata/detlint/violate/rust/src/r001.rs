@@ -1,0 +1,16 @@
+//! R001 fixture: unwrap/expect/panic in non-test library code.
+
+pub fn first(xs: &[u32]) -> u32 {
+    *xs.first().unwrap()
+}
+
+pub fn second(xs: &[u32]) -> u32 {
+    *xs.get(1).expect("needs two elements")
+}
+
+pub fn third(xs: &[u32]) -> u32 {
+    match xs.get(2) {
+        Some(v) => *v,
+        None => panic!("needs three elements"),
+    }
+}

@@ -1,0 +1,5 @@
+//! R002 fixture: a Result silently discarded.
+
+pub fn cleanup(path: &str) {
+    let _ = std::fs::remove_file(path);
+}
