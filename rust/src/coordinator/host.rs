@@ -94,9 +94,10 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Mutex};
 
 use crate::coordinator::session::{observers::Checkpoint, Session, SessionBuilder, StepEvent};
-use crate::coordinator::snapshot::{load_checkpoint, Loaded};
+use crate::coordinator::snapshot::{load_checkpoint_str, load_vault_checkpoint, Loaded};
+use crate::coordinator::vault::{self, RecoveryTelemetry};
 use crate::coordinator::RoundOutcome;
-use crate::fault::{FaultKind, FaultPlan, SupervisionPolicy};
+use crate::fault::{restart_backoff, FaultKind, FaultPlan, SupervisionPolicy};
 use crate::metrics::RunRecord;
 use crate::util::json::Json;
 use crate::util::timer::Stopwatch;
@@ -397,6 +398,13 @@ pub trait FleetObserver {
     /// final record.
     fn on_session_quarantined(&mut self, _session: usize, _name: &str, _round: usize, _reason: &str) {
     }
+
+    /// A session resumed **degraded**: its checkpoint vault rejected
+    /// frames (torn/checksum) or fell back past the newest generation —
+    /// possibly all the way to a fresh start. Fired once per degraded
+    /// resume (at fleet assembly, or mid-run on a supervised restart);
+    /// clean resumes are silent.
+    fn on_recovery(&mut self, _session: usize, _name: &str, _telemetry: &RecoveryTelemetry) {}
 }
 
 /// Built-in fleet observer: logs interleaving progress at debug level.
@@ -441,6 +449,24 @@ impl FleetObserver for FleetProgress {
 /// factory attached.
 pub type SessionFactory = Box<dyn Fn() -> Result<SessionBuilder> + Send>;
 
+/// One member's checkpoint wiring: vault base path, snapshot cadence,
+/// and how many generations the vault retains (`keep` = 1 is the
+/// historical single-file discipline; ≥ 2 keeps checksummed `.g<N>`
+/// frames a restart can fall back through).
+#[derive(Clone, Debug)]
+pub struct CheckpointSpec {
+    pub path: PathBuf,
+    pub every: usize,
+    pub keep: usize,
+}
+
+impl CheckpointSpec {
+    /// The vault this member writes through and resumes from.
+    pub fn vault(&self) -> crate::coordinator::vault::CheckpointVault {
+        crate::coordinator::vault::CheckpointVault::new(&self.path, self.keep)
+    }
+}
+
 /// Builder for a [`Fleet`]: named sessions + policy + fleet observers.
 ///
 /// Members are stored as **un-built** [`SessionBuilder`] recipes
@@ -455,14 +481,19 @@ pub struct FleetBuilder {
     /// Index-aligned with `builders`: how to rebuild each member
     /// (restart supervision); None = not restartable.
     factories: Vec<Option<SessionFactory>>,
-    /// Index-aligned with `builders`: each member's checkpoint wiring
-    /// (path, cadence); None = not checkpointed.
-    checkpoints: Vec<Option<(PathBuf, usize)>>,
+    /// Index-aligned with `builders`: each member's checkpoint wiring;
+    /// None = not checkpointed.
+    checkpoints: Vec<Option<CheckpointSpec>>,
+    /// Index-aligned with `builders`: telemetry from a **degraded**
+    /// assembly-time resume (vault fell back past a bad artifact); None
+    /// for clean resumes and fresh starts.
+    recoveries: Vec<Option<RecoveryTelemetry>>,
     policy: Box<dyn SchedPolicy>,
     supervise: SupervisionPolicy,
     fault_plan: Option<FaultPlan>,
     observers: Vec<Box<dyn FleetObserver>>,
     host_threads: usize,
+    keep_checkpoints: usize,
 }
 
 impl FleetBuilder {
@@ -472,11 +503,13 @@ impl FleetBuilder {
             builders: Vec::new(),
             factories: Vec::new(),
             checkpoints: Vec::new(),
+            recoveries: Vec::new(),
             policy: Box::new(RoundRobin::new()),
             supervise: SupervisionPolicy::FailFast,
             fault_plan: None,
             observers: Vec::new(),
             host_threads: 1,
+            keep_checkpoints: 1,
         }
     }
 
@@ -489,6 +522,7 @@ impl FleetBuilder {
         self.builders.push(builder);
         self.factories.push(None);
         self.checkpoints.push(None);
+        self.recoveries.push(None);
         self
     }
 
@@ -511,6 +545,7 @@ impl FleetBuilder {
         self.builders.push(builder);
         self.factories.push(Some(Box::new(factory)));
         self.checkpoints.push(None);
+        self.recoveries.push(None);
         Ok(self)
     }
 
@@ -574,16 +609,31 @@ impl FleetBuilder {
         every: usize,
         resume: bool,
     ) -> Result<Self> {
+        let spec = CheckpointSpec { path, every, keep: self.keep_checkpoints };
+        let vault = spec.vault();
         let mut builder = builder;
-        if resume && path.exists() {
-            match load_checkpoint(&path)? {
+        let mut recovery = None;
+        if resume && vault.has_artifacts() {
+            let (loaded, telemetry) = load_vault_checkpoint(&vault)?;
+            match loaded {
                 Loaded::Resumable(snap) => {
                     log::info!(
-                        "fleet: resuming {name:?} from {} at round {}",
-                        path.display(),
-                        snap.round
+                        "fleet: resuming {name:?} from {} at round {}{}",
+                        spec.path.display(),
+                        snap.round,
+                        if telemetry.degraded() {
+                            format!(
+                                " (degraded: generation {}, {} rounds lost)",
+                                telemetry.generation_used, telemetry.rounds_lost
+                            )
+                        } else {
+                            String::new()
+                        }
                     );
                     builder = builder.resume_from_snapshot(*snap);
+                    if telemetry.degraded() {
+                        recovery = Some(telemetry);
+                    }
                 }
                 Loaded::Complete { round, config, .. } => {
                     // Json::Null means the run finished before its first
@@ -594,23 +644,25 @@ impl FleetBuilder {
                         return Err(Error::Config(format!(
                             "{}: completion marker belongs to a differently configured \
                              run — refusing to skip {name:?} (delete the file to start over)",
-                            path.display()
+                            spec.path.display()
                         )));
                     }
                     log::info!(
                         "fleet: {name:?} already finished ({round} rounds per {}), skipping",
-                        path.display()
+                        spec.path.display()
                     );
                     return Ok(self);
                 }
             }
         }
-        let builder = builder.observe(Checkpoint::every(path.clone(), every));
+        let builder =
+            builder.observe(Checkpoint::every(spec.path.clone(), spec.every).keep(spec.keep));
         builder.validate()?;
         self.names.push(name);
         self.builders.push(builder);
         self.factories.push(factory);
-        self.checkpoints.push(Some((path, every)));
+        self.checkpoints.push(Some(spec));
+        self.recoveries.push(recovery);
         Ok(self)
     }
 
@@ -671,6 +723,18 @@ impl FleetBuilder {
         self
     }
 
+    /// Checkpoint generations each member's vault retains (clamped to
+    /// ≥ 1; default 1, the historical bare-file layout with bit-identical
+    /// bytes on disk). With `keep ≥ 2` snapshots are written as
+    /// checksummed `.g<N>` frames and a restart whose newest generation
+    /// is torn or bit-flipped falls back to the previous one instead of
+    /// round 0. Applies to members added **after** this call, so set it
+    /// before `session_checkpointed*`.
+    pub fn keep_checkpoints(mut self, keep: usize) -> Self {
+        self.keep_checkpoints = keep.max(1);
+        self
+    }
+
     /// Assemble the fleet. Errors on an empty session list, and surfaces
     /// the first invalid member ([`SessionBuilder::validate`]) by name —
     /// members build lazily on the host that runs them, so this is the
@@ -689,6 +753,7 @@ impl FleetBuilder {
             builders: self.builders,
             factories: self.factories,
             checkpoints: self.checkpoints,
+            recoveries: self.recoveries,
             policy: self.policy,
             supervise: self.supervise,
             fault_plan: self.fault_plan,
@@ -715,7 +780,8 @@ pub struct Fleet {
     names: Vec<String>,
     builders: Vec<SessionBuilder>,
     factories: Vec<Option<SessionFactory>>,
-    checkpoints: Vec<Option<(PathBuf, usize)>>,
+    checkpoints: Vec<Option<CheckpointSpec>>,
+    recoveries: Vec<Option<RecoveryTelemetry>>,
     policy: Box<dyn SchedPolicy>,
     supervise: SupervisionPolicy,
     fault_plan: Option<FaultPlan>,
@@ -784,6 +850,17 @@ impl Fleet {
         // earlier rounds does not re-crash on the same cell
         let mut fired: HashSet<(usize, usize)> = HashSet::new();
         let mut faults = FaultTelemetry::default();
+        // per-session vault-recovery telemetry, seeded with degraded
+        // assembly-time resumes and merged with restart-time recoveries;
+        // surfaced on the member's record and the fleet aggregate
+        let mut recoveries = std::mem::take(&mut self.recoveries);
+        for (i, t) in recoveries.iter().enumerate() {
+            if let Some(t) = t {
+                for obs in self.observers.iter_mut() {
+                    obs.on_recovery(i, &self.names[i], t);
+                }
+            }
+        }
         let mut rounds_executed = 0usize;
         let mut device_ops = 0u64;
         let mut step_ms = 0.0f64;
@@ -857,9 +934,6 @@ impl Fleet {
                     FaultKind::EnergyBrownout { joules } => {
                         sessions[idx].inject_brownout(joules);
                     }
-                    FaultKind::CorruptCheckpoint => {
-                        corrupt_checkpoint(self.checkpoints[idx].as_ref())
-                    }
                     FaultKind::Crash => {
                         self.handle_failure(
                             idx,
@@ -873,8 +947,17 @@ impl Fleet {
                             &mut statuses,
                             &mut restarts_used,
                             &mut faults,
+                            &mut recoveries,
                         )?;
                         continue;
+                    }
+                    // every remaining kind damages the on-disk checkpoint
+                    other => {
+                        let seed = self
+                            .fault_plan
+                            .as_ref()
+                            .map_or(0, |p| p.corruption_seed(idx, session_round));
+                        inject_checkpoint_fault(&other, self.checkpoints[idx].as_ref(), seed);
                     }
                 }
             }
@@ -898,6 +981,7 @@ impl Fleet {
                         &mut statuses,
                         &mut restarts_used,
                         &mut faults,
+                        &mut recoveries,
                     )?;
                     continue;
                 }
@@ -921,7 +1005,10 @@ impl Fleet {
                     // sessions would grow with fleet size
                     sessions[idx].take_outcomes();
                 }
-                StepEvent::Finished(record) => {
+                StepEvent::Finished(mut record) => {
+                    // stamp accumulated vault-recovery telemetry so the
+                    // member's record says how it got here
+                    record.recovery = recoveries[idx].clone();
                     for obs in self.observers.iter_mut() {
                         obs.on_session_finished(idx, &self.names[idx], &record);
                     }
@@ -975,6 +1062,7 @@ impl Fleet {
             faults,
             fault_plan: self.fault_plan.as_ref().map(|p| p.to_json()),
             retention,
+            recovery: merge_recoveries(&recoveries),
             total_host_ms,
             sched_overhead_ms: (total_host_ms - step_ms).max(0.0),
             host_threads: 1,
@@ -1000,6 +1088,7 @@ impl Fleet {
         statuses: &mut [Option<SessionStatus>],
         restarts_used: &mut [usize],
         faults: &mut FaultTelemetry,
+        recoveries: &mut [Option<RecoveryTelemetry>],
     ) -> Result<()> {
         match self.supervise {
             SupervisionPolicy::FailFast => {
@@ -1010,7 +1099,7 @@ impl Fleet {
                 self.policy.prepare(states, ready);
                 Ok(())
             }
-            SupervisionPolicy::Restart { max_retries, backoff_rounds } => {
+            SupervisionPolicy::Restart { max_retries, backoff_rounds, backoff_cap } => {
                 if restarts_used[idx] >= max_retries {
                     let reason = format!("{reason} ({max_retries} restarts exhausted)");
                     self.quarantine(idx, round, reason, ready, statuses, faults);
@@ -1019,22 +1108,34 @@ impl Fleet {
                         self.factories[idx].as_ref(),
                         self.checkpoints[idx].as_ref(),
                     )
-                    .and_then(|(builder, resumed)| Ok((builder.build()?, resumed)));
+                    .and_then(|(builder, resumed, rec)| Ok((builder.build()?, resumed, rec)));
                     match rebuilt {
-                        Ok((session, resumed_round)) => {
+                        Ok((session, resumed_round, rec)) => {
                             sessions[idx] = Box::new(session);
+                            // capped exponential backoff: attempt 0 waits
+                            // the base, each retry doubles up to the cap
+                            let delay =
+                                restart_backoff(backoff_rounds, backoff_cap, restarts_used[idx]);
                             restarts_used[idx] += 1;
                             faults.restarts += 1;
                             faults.rounds_recovered += round.saturating_sub(resumed_round);
+                            if let Some(t) = rec {
+                                for obs in self.observers.iter_mut() {
+                                    obs.on_recovery(idx, &self.names[idx], &t);
+                                }
+                                recoveries[idx]
+                                    .get_or_insert_with(RecoveryTelemetry::default)
+                                    .merge(&t);
+                            }
                             log::info!(
                                 "fleet: restarting session {:?} from round {resumed_round} \
                                  (failed at {round}: {reason}; retry {}/{max_retries}, \
-                                 backoff {backoff_rounds} ticks)",
+                                 backoff {delay} ticks)",
                                 self.names[idx],
                                 restarts_used[idx],
                             );
                             ready.retain(|&i| i != idx);
-                            parked.push((tick + backoff_rounds as u64, idx));
+                            parked.push((tick + delay, idx));
                         }
                         Err(e) => {
                             let reason = format!("{reason}; restart failed: {e}");
@@ -1075,16 +1176,18 @@ impl Fleet {
 }
 
 /// Rebuild a failed member's [`SessionBuilder`] from its factory for
-/// restart supervision, resuming from its latest valid checkpoint when it
-/// has one; a corrupt (or otherwise unusable) checkpoint file degrades to
-/// a fresh start — deterministic sessions reproduce the lost rounds
-/// exactly. Returns the recipe and the round it will start from. Shared
-/// by both hosts: single-thread restarts build the result in place, shard
-/// workers re-queue it as a cold member.
+/// restart supervision, resuming through its checkpoint vault when it has
+/// one: the newest valid generation wins, a torn/bit-flipped newest falls
+/// back to an older frame, and a vault with nothing usable degrades to a
+/// fresh start — deterministic sessions reproduce the lost rounds
+/// exactly. Returns the recipe, the round it will start from, and the
+/// recovery telemetry when the resume was degraded. Shared by both hosts:
+/// single-thread restarts build the result in place, shard workers
+/// re-queue it as a cold member.
 fn rebuild_builder(
     factory: Option<&SessionFactory>,
-    checkpoint: Option<&(PathBuf, usize)>,
-) -> Result<(SessionBuilder, usize)> {
+    checkpoint: Option<&CheckpointSpec>,
+) -> Result<(SessionBuilder, usize, Option<RecoveryTelemetry>)> {
     let Some(factory) = factory else {
         return Err(Error::Config(
             "no session factory registered (use session_restartable / \
@@ -1094,9 +1197,15 @@ fn rebuild_builder(
     };
     let mut builder = factory()?;
     let mut resumed_round = 0usize;
-    if let Some((path, every)) = checkpoint {
-        if path.exists() {
-            match load_checkpoint(path) {
+    let mut recovery = None;
+    if let Some(spec) = checkpoint {
+        let vault = spec.vault();
+        if vault.has_artifacts() {
+            let (winner, mut telemetry) = vault.load_latest_valid();
+            let walk_failed = winner.is_err();
+            match winner
+                .and_then(|w| load_checkpoint_str(&w.text, &w.path.display().to_string()))
+            {
                 Ok(Loaded::Resumable(snap)) => {
                     resumed_round = snap.round;
                     builder = builder.resume_from_snapshot(*snap);
@@ -1105,33 +1214,47 @@ fn rebuild_builder(
                     log::warn!(
                         "fleet: {} marks a completed run but the session failed — \
                          restarting from scratch",
-                        path.display()
+                        spec.path.display()
                     );
                 }
                 Err(e) => {
                     log::warn!("fleet: discarding unusable checkpoint: {e}");
+                    if !walk_failed {
+                        // the generation that won the vault walk was still
+                        // unusable downstream (typed parse failure): count
+                        // it so the fresh start reads as degraded
+                        telemetry.crc_failures += 1;
+                    }
                 }
             }
+            if telemetry.degraded() {
+                recovery = Some(telemetry);
+            }
         }
-        builder = builder.observe(Checkpoint::every(path.clone(), *every));
+        builder = builder.observe(Checkpoint::every(spec.path.clone(), spec.every).keep(spec.keep));
     }
-    Ok((builder, resumed_round))
+    Ok((builder, resumed_round, recovery))
 }
 
-/// Injected checkpoint corruption: truncate the member's on-disk
-/// snapshot to half its size (a torn write). The typed loader rejects
-/// the remnant, so a later restart falls back to a fresh start; a
-/// member without checkpoint wiring makes this a no-op.
-fn corrupt_checkpoint(checkpoint: Option<&(PathBuf, usize)>) {
-    let Some((path, _)) = checkpoint else { return };
-    let Ok(meta) = std::fs::metadata(path) else { return };
-    let result = std::fs::OpenOptions::new()
-        .write(true)
-        .open(path)
-        .and_then(|f| f.set_len(meta.len() / 2));
-    if let Err(e) = result {
-        log::warn!("fleet: corrupt-checkpoint fault on {} failed: {e}", path.display());
-    }
+/// Route an injected checkpoint-corruption fault ([`FaultKind`] variants
+/// with [`FaultKind::corrupts_checkpoint`]) through the vault's
+/// deterministic injector seam; a member without checkpoint wiring makes
+/// this a no-op — there is nothing on disk to damage.
+fn inject_checkpoint_fault(kind: &FaultKind, checkpoint: Option<&CheckpointSpec>, seed: u64) {
+    debug_assert!(kind.corrupts_checkpoint(), "not a corruption fault: {kind:?}");
+    let Some(spec) = checkpoint else { return };
+    vault::inject_corruption(kind, &spec.path, seed);
+}
+
+/// Fleet-wide recovery aggregate: component-wise sum over the members
+/// that resumed degraded ([`RecoveryTelemetry::merge`]); None when every
+/// resume was clean.
+fn merge_recoveries(recoveries: &[Option<RecoveryTelemetry>]) -> Option<RecoveryTelemetry> {
+    recoveries.iter().flatten().fold(None, |acc: Option<RecoveryTelemetry>, t| {
+        let mut sum = acc.unwrap_or_default();
+        sum.merge(t);
+        Some(sum)
+    })
 }
 
 /// Stable session-index → shard map (the splitmix64 finalizer over the
@@ -1210,7 +1333,7 @@ struct ColdMember {
     idx: usize,
     builder: SessionBuilder,
     factory: Option<SessionFactory>,
-    checkpoint: Option<(PathBuf, usize)>,
+    checkpoint: Option<CheckpointSpec>,
     /// Fleet-wide admission age (initial members: their session index;
     /// restart re-queues: a shared counter). "Oldest" — the steal
     /// victim's minimum stamp — is therefore well defined fleet-wide.
@@ -1234,7 +1357,7 @@ struct ColdMember {
 struct HotMember {
     session: Box<Session>,
     factory: Option<SessionFactory>,
-    checkpoint: Option<(PathBuf, usize)>,
+    checkpoint: Option<CheckpointSpec>,
     restarts_used: usize,
     fired: HashSet<usize>,
 }
@@ -1248,6 +1371,11 @@ enum HostEvent {
     Finished { session: usize, record: Box<RunRecord> },
     Fault { session: usize, round: usize, kind: &'static str },
     Quarantined { session: usize, round: usize, reason: String },
+    /// A restarted member resumed **degraded** through its vault. Sent
+    /// before the member is re-queued, and the re-queue happens-before
+    /// any later event for the same session, so on the main thread a
+    /// `Recovery` always precedes that session's `Finished`.
+    Recovery { session: usize, telemetry: RecoveryTelemetry },
 }
 
 /// Trips the shared stop flag if its worker unwinds: a panicking shard
@@ -1466,11 +1594,14 @@ impl ShardWorker<'_> {
                     FaultKind::EnergyBrownout { joules } => {
                         member.session.inject_brownout(joules);
                     }
-                    FaultKind::CorruptCheckpoint => {
-                        corrupt_checkpoint(member.checkpoint.as_ref());
-                    }
                     FaultKind::Crash => {
                         return self.fail(idx, session_round, "injected crash".into());
+                    }
+                    // every remaining kind damages the on-disk checkpoint
+                    other => {
+                        let seed =
+                            self.plan.map_or(0, |p| p.corruption_seed(idx, session_round));
+                        inject_checkpoint_fault(&other, member.checkpoint.as_ref(), seed);
                     }
                 }
             }
@@ -1545,7 +1676,7 @@ impl ShardWorker<'_> {
                 self.policy.prepare(&self.states, &self.ready);
                 Ok(())
             }
-            SupervisionPolicy::Restart { max_retries, backoff_rounds } => {
+            SupervisionPolicy::Restart { max_retries, backoff_rounds, backoff_cap } => {
                 // detlint: allow(R001) invariant: fail() is only called for a hot session
                 let used = self.hot[idx].as_ref().expect("failed session is hot").restarts_used;
                 if used >= max_retries {
@@ -1556,14 +1687,29 @@ impl ShardWorker<'_> {
                     let member = self.hot[idx].take().expect("failed session is hot");
                     match rebuild_builder(member.factory.as_ref(), member.checkpoint.as_ref())
                     {
-                        Ok((builder, resumed_round)) => {
+                        Ok((builder, resumed_round, recovery)) => {
                             self.telemetry.restarts += 1;
                             self.telemetry.rounds_recovered +=
                                 round.saturating_sub(resumed_round);
+                            if let Some(telemetry) = recovery {
+                                // must reach the main thread before the
+                                // member is re-queued: channel order then
+                                // guarantees Recovery precedes the
+                                // session's eventual Finished
+                                emit(
+                                    &self.tx,
+                                    self.stop,
+                                    HostEvent::Recovery { session: idx, telemetry },
+                                );
+                            }
+                            // capped exponential backoff, on the worker's
+                            // op-granular clock
+                            let delay =
+                                restart_backoff(backoff_rounds, backoff_cap, member.restarts_used);
                             log::info!(
                                 "fleet: restarting session {:?} from round {resumed_round} \
                                  (failed at {round}: {reason}; retry {}/{max_retries}, \
-                                 backoff {backoff_rounds} ticks)",
+                                 backoff {delay} ticks)",
                                 self.names[idx],
                                 member.restarts_used + 1,
                             );
@@ -1578,7 +1724,7 @@ impl ShardWorker<'_> {
                                 factory: member.factory,
                                 checkpoint: member.checkpoint,
                                 stamp,
-                                wake_at: self.tick + backoff_rounds as u64,
+                                wake_at: self.tick + delay,
                                 state: self.states[idx],
                                 restarts_used: member.restarts_used + 1,
                                 fired: member.fired,
@@ -1685,11 +1831,21 @@ impl Fleet {
         let mut session_rounds = vec![0usize; n];
         let mut rounds_executed = 0usize;
         let mut device_ops = 0u64;
+        let mut recoveries = std::mem::take(&mut self.recoveries);
 
         let (queues, steals_out) = (&queues, &steals_out);
         let (live, stop, stamps, failures) = (&live, &stop, &stamps, &failures);
         let names: &[String] = &self.names;
         let observers = &mut self.observers;
+        // degraded assembly-time resumes, surfaced before the first tick
+        // (same order as the single-thread host)
+        for (i, t) in recoveries.iter().enumerate() {
+            if let Some(t) = t {
+                for obs in observers.iter_mut() {
+                    obs.on_recovery(i, &names[i], t);
+                }
+            }
+        }
         let (tx, rx) = mpsc::channel::<HostEvent>();
 
         let worker_results: Result<Vec<(FaultTelemetry, ShardStats)>> =
@@ -1746,10 +1902,15 @@ impl Fleet {
                             }
                         }
                         HostEvent::Finished { session, record } => {
+                            let mut record = *record;
+                            // any Recovery for this session already
+                            // arrived (sent before its re-queue), so the
+                            // stamp matches the single-thread host's
+                            record.recovery = recoveries[session].clone();
                             for obs in observers.iter_mut() {
                                 obs.on_session_finished(session, &names[session], &record);
                             }
-                            records[session] = Some(*record);
+                            records[session] = Some(record);
                             statuses[session] = Some(SessionStatus::Finished);
                         }
                         HostEvent::Fault { session, round, kind } => {
@@ -1768,6 +1929,14 @@ impl Fleet {
                             }
                             statuses[session] =
                                 Some(SessionStatus::Quarantined { round, reason });
+                        }
+                        HostEvent::Recovery { session, telemetry } => {
+                            for obs in observers.iter_mut() {
+                                obs.on_recovery(session, &names[session], &telemetry);
+                            }
+                            recoveries[session]
+                                .get_or_insert_with(RecoveryTelemetry::default)
+                                .merge(&telemetry);
                         }
                     }
                 }
@@ -1855,6 +2024,7 @@ impl Fleet {
             faults,
             fault_plan: self.fault_plan.as_ref().map(|p| p.to_json()),
             retention,
+            recovery: merge_recoveries(&recoveries),
             total_host_ms,
             sched_overhead_ms,
             host_threads: threads,
@@ -1922,7 +2092,9 @@ pub struct FaultTelemetry {
     pub stragglers: usize,
     /// Injected `EnergyBrownout` drains.
     pub brownouts: usize,
-    /// Injected `CorruptCheckpoint` truncations.
+    /// Injected checkpoint corruptions — every
+    /// [`FaultKind::corrupts_checkpoint`] flavor (truncation, torn write,
+    /// bit flip, stale rename); the event log keeps the flavor.
     pub corruptions: usize,
     /// Successful session rebuilds under restart supervision.
     pub restarts: usize,
@@ -1963,7 +2135,12 @@ impl FaultTelemetry {
             }
             FaultKind::Straggler { .. } => self.stragglers += 1,
             FaultKind::EnergyBrownout { .. } => self.brownouts += 1,
-            FaultKind::CorruptCheckpoint => self.corruptions += 1,
+            // all four checkpoint-corruption flavors share one counter;
+            // the per-event `kind` string keeps them distinguishable
+            FaultKind::CorruptCheckpoint
+            | FaultKind::TornWrite
+            | FaultKind::BitFlip
+            | FaultKind::StaleRename => self.corruptions += 1,
         }
         self.events.push(FaultEvent { session, round, kind: kind.name().to_string() });
     }
@@ -2048,6 +2225,9 @@ pub struct FleetRecord {
     /// (`bytes_held` reads as total bytes held across members); None when
     /// no member retained.
     pub retention: Option<crate::retention::RetentionTelemetry>,
+    /// Component-wise sum of members' checkpoint-vault recovery telemetry
+    /// ([`RecoveryTelemetry::merge`]); None when every resume was clean.
+    pub recovery: Option<RecoveryTelemetry>,
     /// Worker threads the host actually ran with (1 = the single-thread
     /// reference host; clamped to the fleet size).
     pub host_threads: usize,
@@ -2126,6 +2306,9 @@ impl FleetRecord {
         }
         if let Some(t) = &self.retention {
             fields.push(("retention", t.to_json()));
+        }
+        if let Some(t) = &self.recovery {
+            fields.push(("recovery", t.to_json()));
         }
         Json::obj(fields)
     }
@@ -2313,7 +2496,11 @@ mod tests {
     fn restart_without_factory_quarantines() {
         let record = FleetBuilder::new()
             .session("fixed", unstarted_session(3))
-            .supervise(SupervisionPolicy::Restart { max_retries: 2, backoff_rounds: 1 })
+            .supervise(SupervisionPolicy::Restart {
+                max_retries: 2,
+                backoff_rounds: 1,
+                backoff_cap: 32,
+            })
             .fault_plan(crash_everyone(1))
             .run()
             .unwrap();
@@ -2347,7 +2534,11 @@ mod tests {
         let record = FleetBuilder::new()
             .session_restartable("flaky", factory)
             .unwrap()
-            .supervise(SupervisionPolicy::Restart { max_retries: 2, backoff_rounds: 0 })
+            .supervise(SupervisionPolicy::Restart {
+                max_retries: 2,
+                backoff_rounds: 0,
+                backoff_cap: 32,
+            })
             .fault_plan(crash_everyone(1))
             .run()
             .unwrap();
@@ -2403,6 +2594,7 @@ mod tests {
             faults,
             fault_plan: Some(FaultPlan::new(7).to_json()),
             retention: None,
+            recovery: None,
             host_threads: 1,
             steals: 0,
             shards: Vec::new(),
@@ -2426,6 +2618,7 @@ mod tests {
         assert_eq!(faults.get("events").unwrap().as_arr().unwrap().len(), 1);
         assert!(j.get("fault_plan").is_ok());
         assert!(j.get("retention").is_err(), "no retaining member, no retention key");
+        assert!(j.get("recovery").is_err(), "no degraded resume, no recovery key");
         assert_eq!(j.get("rounds_executed").unwrap().as_usize().unwrap(), 10);
         assert_eq!(j.get("host_threads").unwrap().as_usize().unwrap(), 1);
         assert_eq!(j.get("steals").unwrap().as_usize().unwrap(), 0);
@@ -2453,11 +2646,50 @@ mod tests {
         with_ret.retention = Some(t);
         let j = with_ret.to_json();
         assert_eq!(j.get("retention").unwrap().get("offers").unwrap().as_usize().unwrap(), 12);
+        // a fleet with a degraded resume emits the recovery aggregate
+        let mut with_rec = rec.clone();
+        with_rec.recovery = Some(RecoveryTelemetry {
+            frames_scanned: 3,
+            torn_frames: 1,
+            generation_used: 2,
+            rounds_lost: 2,
+            ..Default::default()
+        });
+        let j = with_rec.to_json();
+        let r = j.get("recovery").unwrap();
+        assert_eq!(r.get("rounds_lost").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(r.get("generation_used").unwrap().as_usize().unwrap(), 2);
+        let j = with_ret.to_json();
         let roundtrip = Json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(
             roundtrip.get("sched_overhead_per_round_ms").unwrap().as_f64().unwrap(),
             0.2
         );
+    }
+
+    #[test]
+    fn merge_recoveries_aggregates_or_none() {
+        assert!(merge_recoveries(&[]).is_none());
+        assert!(merge_recoveries(&[None, None]).is_none());
+        let a = RecoveryTelemetry {
+            frames_scanned: 2,
+            torn_frames: 1,
+            generation_used: 1,
+            rounds_lost: 2,
+            ..Default::default()
+        };
+        let b = RecoveryTelemetry {
+            frames_scanned: 1,
+            crc_failures: 1,
+            generation_used: 3,
+            ..Default::default()
+        };
+        let m = merge_recoveries(&[Some(a), None, Some(b)]).unwrap();
+        assert_eq!(m.frames_scanned, 3);
+        assert_eq!(m.torn_frames, 1);
+        assert_eq!(m.crc_failures, 1);
+        assert_eq!(m.generation_used, 3, "generation_used keeps the max");
+        assert_eq!(m.rounds_lost, 2);
     }
 
     // ---- artifact-gated fleet runs ------------------------------------

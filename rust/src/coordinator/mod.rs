@@ -41,6 +41,7 @@ pub mod round;
 pub mod sequential;
 pub mod session;
 pub mod snapshot;
+pub mod vault;
 
 use std::sync::Arc;
 

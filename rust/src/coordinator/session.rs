@@ -74,7 +74,8 @@ use std::sync::Arc;
 use std::thread;
 
 use crate::config::RunConfig;
-use crate::coordinator::snapshot::{load_checkpoint, Loaded, SessionSnapshot};
+use crate::coordinator::snapshot::{load_vault_checkpoint, Loaded, SessionSnapshot};
+use crate::coordinator::vault::{CheckpointVault, RecoveryTelemetry};
 use crate::coordinator::{
     RoundOp, RoundOutcome, SelectorEngine, SelectorReport, SelectorState, TrainBatch,
     TrainerEngine,
@@ -210,7 +211,8 @@ pub mod observers {
     use std::sync::{Arc, Mutex};
 
     use super::{Control, RoundObserver, SessionSnapshot};
-    use crate::coordinator::snapshot::{completion_marker, load_checkpoint, Loaded};
+    use crate::coordinator::snapshot::{completion_marker, load_vault_checkpoint, Loaded};
+    use crate::coordinator::vault::CheckpointVault;
     use crate::coordinator::RoundOutcome;
     use crate::metrics::{CurvePoint, RunRecord};
     use crate::util::json::Json;
@@ -307,22 +309,25 @@ pub mod observers {
     }
 
     /// Persists a **full session snapshot**
-    /// ([`crate::coordinator::snapshot::SessionSnapshot`]) to a JSON file
-    /// every `k` completed rounds, and a small completion marker when the
-    /// run finishes — so a killed run resumes from its last snapshot via
+    /// ([`crate::coordinator::snapshot::SessionSnapshot`]) through a
+    /// [`CheckpointVault`] every `k` completed rounds, and a small
+    /// completion marker when the run finishes — so a killed run resumes
+    /// from its last snapshot via
     /// [`super::SessionBuilder::resume_from`] and a finished run's tail
     /// (eval points after the last cadence multiple) is never lost.
     ///
-    /// Writes are atomic (unique temp file + rename): an interruption
-    /// mid-write never destroys the previous valid snapshot, and two
-    /// observers checkpointing into the same directory can never rename
-    /// each other's half-written files into place (the temp name is
-    /// unique per observer instance and process). Write failures are
-    /// logged at warn level and never abort the run.
+    /// With the default `keep = 1` the vault writes the payload verbatim
+    /// to `path` (unique temp file + rename, bit-identical to the
+    /// historical single-file discipline); [`Checkpoint::keep`] retains
+    /// checksummed generation files instead, so a torn or bit-flipped
+    /// newest write falls back to an older valid generation on resume.
+    /// Writes are atomic either way: an interruption mid-write never
+    /// destroys the previous valid artifact, and two observers
+    /// checkpointing into the same directory can never rename each
+    /// other's half-written files into place. Write failures are logged
+    /// at warn level and never abort the run.
     pub struct Checkpoint {
-        path: PathBuf,
-        /// Unique per instance — see [`Checkpoint::unique_tmp`].
-        tmp: PathBuf,
+        vault: CheckpointVault,
         every: usize,
         /// Config of the observed run, cached off the snapshots so the
         /// completion marker can carry it (Null if the run finished
@@ -347,33 +352,41 @@ pub mod observers {
         pub complete: bool,
     }
 
-    /// Distinguishes concurrent writers to the same directory within one
-    /// process; the pid handles concurrent processes.
-    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
-
     impl Checkpoint {
-        /// Snapshot to `path` every `every` completed rounds (> 0).
+        /// Snapshot to `path` every `every` completed rounds (> 0),
+        /// keeping a single generation (the historical single-file
+        /// discipline; see [`Checkpoint::keep`] for more).
         ///
-        /// Construction also sweeps temp files a previous incarnation
-        /// left behind: a kill between write and rename orphans a
-        /// uniquely named `.tmp` sibling, and since every new instance
-        /// generates a fresh name, nothing would ever reclaim them
-        /// across crash/resume cycles. Observers are constructed before
-        /// any writes happen, so the sweep cannot race a live writer in
-        /// normal use; at worst a removed in-flight temp costs one
-        /// logged, retried-next-cadence write.
+        /// Vault construction also sweeps temp files a previous
+        /// incarnation left behind: a kill between write and rename
+        /// orphans a uniquely named `.tmp` sibling, and since every
+        /// write generates a fresh name, nothing would ever reclaim
+        /// them across crash/resume cycles. Observers are constructed
+        /// before any writes happen, so the sweep cannot race a live
+        /// writer in normal use; at worst a removed in-flight temp
+        /// costs one logged, retried-next-cadence write.
         pub fn every(path: impl Into<PathBuf>, every: usize) -> Checkpoint {
             assert!(every > 0, "checkpoint cadence must be positive");
-            let path = path.into();
-            Checkpoint::sweep_stale_tmp(&path);
-            let tmp = Checkpoint::unique_tmp(&path);
             Checkpoint {
-                path,
-                tmp,
+                vault: CheckpointVault::new(path, 1),
                 every,
                 config: Json::Null,
                 failures: Arc::new(AtomicU64::new(0)),
             }
+        }
+
+        /// Retain the newest `keep` (≥ 1) checksummed generations
+        /// instead of one bare file — a torn or bit-flipped newest
+        /// write then falls back to an older valid generation on
+        /// resume (`--keep-checkpoints` on the CLI).
+        pub fn keep(mut self, keep: usize) -> Checkpoint {
+            self.vault = CheckpointVault::new(self.vault.path().to_path_buf(), keep);
+            self
+        }
+
+        /// The vault this observer writes through.
+        pub fn vault(&self) -> &CheckpointVault {
+            &self.vault
         }
 
         /// Write failures so far (each is also logged at warn level; the
@@ -389,60 +402,25 @@ pub mod observers {
             Arc::clone(&self.failures)
         }
 
-        /// Remove `<file_name>.*.tmp` siblings from earlier instances.
-        fn sweep_stale_tmp(path: &Path) {
-            let (Some(dir), Some(stem)) = (path.parent(), path.file_name()) else {
-                return;
-            };
-            let Some(stem) = stem.to_str() else { return };
-            let dir = if dir.as_os_str().is_empty() { Path::new(".") } else { dir };
-            let Ok(entries) = std::fs::read_dir(dir) else { return };
-            for entry in entries.flatten() {
-                let name = entry.file_name();
-                let Some(name) = name.to_str() else { continue };
-                if name.len() > stem.len() + 1
-                    && name.starts_with(stem)
-                    && name.as_bytes()[stem.len()] == b'.'
-                    && name.ends_with(".tmp")
-                {
-                    // detlint: allow(R002) best-effort orphan sweep; a survivor is re-swept next start
-                    let _ = std::fs::remove_file(entry.path());
-                }
-            }
-        }
-
-        /// `<path>.<pid>.<seq>.tmp` — unique per observer instance, so
-        /// fleet sessions checkpointing under the same stem cannot race
-        /// on a shared temp file.
-        fn unique_tmp(path: &Path) -> PathBuf {
-            let mut name = path.as_os_str().to_owned();
-            name.push(format!(
-                ".{}.{}.tmp",
-                std::process::id(),
-                TMP_SEQ.fetch_add(1, Ordering::Relaxed)
-            ));
-            PathBuf::from(name)
-        }
-
-        /// Atomic write: temp file + rename. Failures are counted and
-        /// logged, never propagated — losing a snapshot must not kill the
-        /// run it is protecting. A failed write also cleans up its temp
-        /// file so no `.tmp` orphan survives into the next cadence.
-        fn write(&self, j: &Json) {
-            let result = std::fs::write(&self.tmp, j.to_string_compact())
-                .and_then(|()| std::fs::rename(&self.tmp, &self.path));
-            if let Err(e) = result {
+        /// Vault write: atomic, checksummed when `keep > 1`. Failures
+        /// are counted and logged, never propagated — losing a snapshot
+        /// must not kill the run it is protecting.
+        fn write(&self, round: usize, j: &Json) {
+            let fingerprint = self.config.to_string_compact();
+            if let Err(e) = self.vault.write(round, &fingerprint, &j.to_string_compact()) {
                 self.failures.fetch_add(1, Ordering::Relaxed);
-                // detlint: allow(R002) best-effort temp cleanup after a counted, logged failure
-                let _ = std::fs::remove_file(&self.tmp);
-                log::warn!("checkpoint write {} failed: {e}", self.path.display());
+                log::warn!("checkpoint write {} failed: {e}", self.vault.path().display());
             }
         }
 
-        /// Summarize a checkpoint file written by this observer.
+        /// Summarize the latest valid checkpoint of the vault rooted at
+        /// `path` (framed generations first, the legacy unframed file as
+        /// the final fallback).
         pub fn load(path: &Path) -> crate::Result<CheckpointState> {
-            match load_checkpoint(path)? {
-                Loaded::Resumable(snap) => Ok(CheckpointState {
+            let vault = CheckpointVault::new(path, 1);
+            let (loaded, _telemetry) = load_vault_checkpoint(&vault)?;
+            Ok(match loaded {
+                Loaded::Resumable(snap) => CheckpointState {
                     round: snap.round,
                     accuracy_trace: snap
                         .curve
@@ -450,11 +428,11 @@ pub mod observers {
                         .map(|p| (p.round, p.test_accuracy))
                         .collect(),
                     complete: false,
-                }),
+                },
                 Loaded::Complete { round, accuracy_trace, .. } => {
-                    Ok(CheckpointState { round, accuracy_trace, complete: true })
+                    CheckpointState { round, accuracy_trace, complete: true }
                 }
-            }
+            })
         }
     }
 
@@ -469,11 +447,11 @@ pub mod observers {
 
         fn on_snapshot(&mut self, snapshot: &SessionSnapshot) {
             self.config = snapshot.config.clone();
-            self.write(&snapshot.to_json());
+            self.write(snapshot.round, &snapshot.to_json());
         }
 
         fn on_finish(&mut self, record: &RunRecord) {
-            self.write(&completion_marker(&self.config, record));
+            self.write(record.round_device_ms.len(), &completion_marker(&self.config, record));
         }
     }
 
@@ -482,16 +460,13 @@ pub mod observers {
         use super::*;
 
         #[test]
-        fn checkpoint_temp_files_are_unique_per_instance() {
-            // regression: a fixed `<path>.tmp` sibling let two fleet
-            // sessions checkpointing to the same stem rename each other's
-            // half-written snapshot into place
+        fn checkpoint_keep_defaults_to_one_generation() {
             let path = std::env::temp_dir().join("titan_checkpoint_shared.json");
             let a = Checkpoint::every(path.clone(), 2);
-            let b = Checkpoint::every(path.clone(), 2);
-            assert_ne!(a.tmp, b.tmp, "shared temp file would race");
-            assert_ne!(a.tmp, path);
-            assert_ne!(b.tmp, path);
+            assert_eq!(a.vault.keep(), 1);
+            assert_eq!(a.vault.path(), path.as_path());
+            let b = Checkpoint::every(path.clone(), 2).keep(3);
+            assert_eq!(b.vault.keep(), 3);
         }
     }
 }
@@ -562,12 +537,24 @@ impl SessionBuilder {
     ///
     /// Errors if the file marks a completed run.
     pub fn resume_from(self, path: impl AsRef<std::path::Path>) -> Result<Self> {
-        let path = path.as_ref();
-        match load_checkpoint(path)? {
-            Loaded::Resumable(snap) => Ok(self.resume_from_snapshot(*snap)),
+        let vault = CheckpointVault::new(path.as_ref(), 1);
+        Ok(self.resume_from_vault(&vault)?.0)
+    }
+
+    /// Vault-aware [`SessionBuilder::resume_from`]: walk the vault's
+    /// generations newest → oldest, resume from the first valid one, and
+    /// report what the walk saw (rejected frames, the generation used,
+    /// rounds lost to corruption) as [`RecoveryTelemetry`].
+    pub fn resume_from_vault(
+        self,
+        vault: &CheckpointVault,
+    ) -> Result<(Self, RecoveryTelemetry)> {
+        let (loaded, telemetry) = load_vault_checkpoint(vault)?;
+        match loaded {
+            Loaded::Resumable(snap) => Ok((self.resume_from_snapshot(*snap), telemetry)),
             Loaded::Complete { round, .. } => Err(Error::Config(format!(
                 "checkpoint {} marks a completed run ({round} rounds) — nothing to resume",
-                path.display()
+                vault.path().display()
             ))),
         }
     }

@@ -196,13 +196,26 @@ pub fn completion_marker(config: &Json, record: &RunRecord) -> Json {
 /// callers (and the restart supervisor) can distinguish "this file is
 /// damaged, fall back" from config errors without string-matching.
 pub fn load_checkpoint(path: &Path) -> Result<Loaded> {
+    let display = path.display().to_string();
+    let text = std::fs::read_to_string(path).map_err(|e| Error::Checkpoint {
+        path: display.clone(),
+        stage: "read",
+        detail: e.to_string(),
+    })?;
+    load_checkpoint_str(&text, &display)
+}
+
+/// Decode checkpoint text already read from disk (`path` names the
+/// source file in errors) — the parse half of [`load_checkpoint`], used
+/// directly by the vault, whose frame validation already read and
+/// checksummed the payload.
+pub fn load_checkpoint_str(text: &str, path: &str) -> Result<Loaded> {
     let fail = |stage: &'static str, detail: String| Error::Checkpoint {
-        path: path.display().to_string(),
+        path: path.to_string(),
         stage,
         detail,
     };
-    let text = std::fs::read_to_string(path).map_err(|e| fail("read", e.to_string()))?;
-    let j = Json::parse(&text).map_err(|e| fail("parse", e.to_string()))?;
+    let j = Json::parse(text).map_err(|e| fail("parse", e.to_string()))?;
     let version = j
         .get("titan_checkpoint")
         .map_err(|_| fail("version", "missing titan_checkpoint field — not a titan checkpoint".into()))?;
@@ -240,19 +253,36 @@ pub fn load_checkpoint(path: &Path) -> Result<Loaded> {
     }
 }
 
+/// Read the newest valid checkpoint out of a
+/// [`CheckpointVault`](crate::coordinator::vault::CheckpointVault):
+/// validated framed generations first (newest → oldest), the legacy
+/// unframed file last. Returns what resumed plus the
+/// [`RecoveryTelemetry`](crate::coordinator::vault::RecoveryTelemetry)
+/// of the walk — callers surface it when
+/// [`degraded`](crate::coordinator::vault::RecoveryTelemetry::degraded).
+pub fn load_vault_checkpoint(
+    vault: &crate::coordinator::vault::CheckpointVault,
+) -> Result<(Loaded, crate::coordinator::vault::RecoveryTelemetry)> {
+    let (win, telemetry) = vault.load_latest_valid();
+    let win = win?;
+    let loaded = load_checkpoint_str(&win.text, &win.path.display().to_string())?;
+    Ok((loaded, telemetry))
+}
+
 // ---- field codecs ---------------------------------------------------------
 
 /// u64 with full precision (JSON numbers are f64: 53 integer bits).
-fn u64_to_json(v: u64) -> Json {
+/// `pub(crate)`: the FL capsule codec ([`crate::fl`]) reuses these.
+pub(crate) fn u64_to_json(v: u64) -> Json {
     Json::Str(format!("{v:016x}"))
 }
 
-fn u64_from_json(j: &Json) -> Result<u64> {
+pub(crate) fn u64_from_json(j: &Json) -> Result<u64> {
     u64::from_str_radix(j.as_str()?, 16)
         .map_err(|e| Error::Json(format!("bad u64 hex: {e}")))
 }
 
-fn f32_list(j: &Json) -> Result<Vec<f32>> {
+pub(crate) fn f32_list(j: &Json) -> Result<Vec<f32>> {
     // f32 -> f64 -> f32 is lossless, so Num carries f32s bit-exactly
     // detlint: allow(C001) decode half of a lossless f32<->f64 roundtrip (pinned by snapshot tests)
     Ok(j.f64_list()?.into_iter().map(|x| x as f32).collect())
@@ -269,11 +299,11 @@ fn count_list_from(j: &Json) -> Result<Vec<u64>> {
 }
 
 /// Four RNG words as a hex-string array (the xoshiro256** state).
-fn words_to_json(ws: &[u64; 4]) -> Json {
+pub(crate) fn words_to_json(ws: &[u64; 4]) -> Json {
     Json::Arr(ws.iter().map(|&w| u64_to_json(w)).collect())
 }
 
-fn words_from_json(j: &Json) -> Result<[u64; 4]> {
+pub(crate) fn words_from_json(j: &Json) -> Result<[u64; 4]> {
     let words = j.as_arr()?;
     if words.len() != 4 {
         return Err(Error::Json(format!("rng state has {} words, want 4", words.len())));

@@ -1,0 +1,825 @@
+//! Durable multi-generation checkpoint store.
+//!
+//! A [`CheckpointVault`] owns every byte a checkpoint writes or resumes
+//! from. With `keep = 1` (the default everywhere) it degrades to exactly
+//! the historical single-file discipline — the payload JSON is written
+//! verbatim to `<path>` via unique-temp + atomic rename, bit-identical
+//! to pre-vault builds. With `keep > 1` each snapshot becomes a new
+//! **generation** `<path>.g<N>`: a framed file whose fixed-width header
+//! carries the codec version, the completed round, the payload length,
+//! a CRC64 of the config fingerprint and a CRC64 of the payload. The
+//! vault retains the newest `keep` generations and evicts the rest.
+//!
+//! ```text
+//! TITANVLT1 vvvv rrrrrrrrrrrrrrrrrrrr llllllllllllllllllll ffff…16 cccc…16\n
+//! <payload JSON, exactly l bytes>
+//! ```
+//!
+//! [`CheckpointVault::load_latest_valid`] walks generations newest →
+//! oldest and rejects anything torn (truncated, bad magic, length
+//! mismatch), bit-flipped (payload CRC mismatch) or inconsistent
+//! (header round / fingerprint hash disagreeing with the payload) —
+//! closing the silent-wrong-resume hole where a flipped digit inside
+//! still-valid JSON resumed from corrupted params without any error.
+//! Every single-byte corruption of a frame is rejectable: the payload
+//! is covered by CRC64, and each header field is cross-checked against
+//! the payload it describes. A legacy unframed `<path>` file acts as
+//! the final fallback generation (number 0) and is passed through
+//! unvalidated so the caller's typed parse errors stay exactly as they
+//! were.
+//!
+//! The walk's outcome is summarized in [`RecoveryTelemetry`]; a
+//! degraded load (any rejected frame, or an older generation winning)
+//! surfaces in `RunRecord`/`FleetRecord` and fires
+//! [`FleetObserver::on_recovery`](crate::coordinator::host::FleetObserver::on_recovery).
+//!
+//! [`inject_corruption`] is the fault plane's one tested seam for
+//! damaging checkpoint artifacts on disk: all four corruption kinds
+//! ([`FaultKind::CorruptCheckpoint`], [`FaultKind::TornWrite`],
+//! [`FaultKind::BitFlip`], [`FaultKind::StaleRename`]) are expressed
+//! through it, seeded per `(session, round)` like the rest of
+//! [`crate::fault::FaultPlan`].
+
+use std::path::{Path, PathBuf};
+
+use crate::fault::FaultKind;
+use crate::util::durable_io;
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+use crate::{Error, Result};
+
+/// Vault frame codec version (bumped on incompatible header changes).
+pub const VAULT_VERSION: usize = 1;
+
+/// Frame magic: identifies a vault generation file.
+const FRAME_MAGIC: &str = "TITANVLT1";
+
+/// Fixed header size: magic(9) + sp + version(4) + sp + round(20) + sp
+/// + payload_len(20) + sp + fingerprint_crc(16) + sp + payload_crc(16)
+/// + newline.
+const HEADER_LEN: usize = 91;
+
+// ---- CRC64 ----------------------------------------------------------------
+
+/// CRC-64/XZ (reflected, poly 0x42F0E1EBA9EA3693): the frame checksum.
+/// Table-driven; the table is built at compile time, no dependencies.
+const CRC64_TABLE: [u64; 256] = {
+    let poly: u64 = 0xC96C_5795_D787_0F42; // reflected form
+    let mut table = [0u64; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u64;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 == 1 { (crc >> 1) ^ poly } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+};
+
+/// CRC64 of `bytes` (CRC-64/XZ parameters).
+pub fn crc64(bytes: &[u8]) -> u64 {
+    let mut crc = !0u64;
+    for &b in bytes {
+        crc = CRC64_TABLE[((crc ^ b as u64) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+// ---- telemetry ------------------------------------------------------------
+
+/// What a [`CheckpointVault::load_latest_valid`] walk saw: how many
+/// frames it scanned, how many it rejected and why, which generation
+/// finally resumed, and how many completed rounds the rejected newer
+/// frames claimed beyond it.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryTelemetry {
+    /// On-disk artifacts examined (framed generations + legacy file).
+    pub frames_scanned: u64,
+    /// Frames rejected on a checksum / cross-check mismatch (payload
+    /// CRC, fingerprint hash, or header round disagreeing with payload).
+    pub crc_failures: u64,
+    /// Frames rejected structurally: truncated, bad magic/layout, or a
+    /// payload shorter than the header's declared length.
+    pub torn_frames: u64,
+    /// Generation number that resumed (0 = the legacy unframed file).
+    pub generation_used: u64,
+    /// Completed rounds claimed by readable-but-rejected newer frames
+    /// beyond the generation used (0 when the newest frame won).
+    pub rounds_lost: u64,
+}
+
+impl RecoveryTelemetry {
+    /// True when the walk rejected anything or lost rounds — i.e. when
+    /// this load is worth surfacing in records and observers.
+    pub fn degraded(&self) -> bool {
+        self.crc_failures > 0 || self.torn_frames > 0 || self.rounds_lost > 0
+    }
+
+    /// Fleet aggregation: counters sum, `generation_used` keeps the max.
+    pub fn merge(&mut self, other: &RecoveryTelemetry) {
+        self.frames_scanned += other.frames_scanned;
+        self.crc_failures += other.crc_failures;
+        self.torn_frames += other.torn_frames;
+        self.generation_used = self.generation_used.max(other.generation_used);
+        self.rounds_lost += other.rounds_lost;
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("frames_scanned", Json::Num(self.frames_scanned as f64)),
+            ("crc_failures", Json::Num(self.crc_failures as f64)),
+            ("torn_frames", Json::Num(self.torn_frames as f64)),
+            ("generation_used", Json::Num(self.generation_used as f64)),
+            ("rounds_lost", Json::Num(self.rounds_lost as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RecoveryTelemetry> {
+        Ok(RecoveryTelemetry {
+            frames_scanned: j.get("frames_scanned")?.as_usize()? as u64,
+            crc_failures: j.get("crc_failures")?.as_usize()? as u64,
+            torn_frames: j.get("torn_frames")?.as_usize()? as u64,
+            generation_used: j.get("generation_used")?.as_usize()? as u64,
+            rounds_lost: j.get("rounds_lost")?.as_usize()? as u64,
+        })
+    }
+}
+
+// ---- frame codec ----------------------------------------------------------
+
+/// Why a frame was rejected; maps onto the two telemetry counters.
+enum FrameReject {
+    /// Structural: truncation, bad magic/layout, length mismatch.
+    Torn(String),
+    /// Content: checksum or header↔payload cross-check mismatch.
+    Crc(String),
+}
+
+fn encode_frame(round: usize, fingerprint: &str, payload: &str) -> String {
+    let mut frame = format!(
+        "{} {:04} {:020} {:020} {:016x} {:016x}\n",
+        FRAME_MAGIC,
+        VAULT_VERSION,
+        round,
+        payload.len(),
+        crc64(fingerprint.as_bytes()),
+        crc64(payload.as_bytes()),
+    );
+    debug_assert_eq!(frame.len(), HEADER_LEN);
+    frame.push_str(payload);
+    frame
+}
+
+fn field_usize(bytes: &[u8], what: &str) -> std::result::Result<usize, FrameReject> {
+    std::str::from_utf8(bytes)
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .ok_or_else(|| FrameReject::Torn(format!("unparsable {what} field")))
+}
+
+fn field_hex(bytes: &[u8], what: &str) -> std::result::Result<u64, FrameReject> {
+    std::str::from_utf8(bytes)
+        .ok()
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+        .ok_or_else(|| FrameReject::Torn(format!("unparsable {what} field")))
+}
+
+/// Validate one frame end-to-end; returns the payload text and the
+/// round both the header and the payload agree on.
+fn decode_frame(bytes: &[u8]) -> std::result::Result<(String, usize), FrameReject> {
+    if bytes.len() < HEADER_LEN {
+        return Err(FrameReject::Torn(format!(
+            "{} bytes, shorter than the {HEADER_LEN}-byte frame header",
+            bytes.len()
+        )));
+    }
+    if &bytes[..9] != FRAME_MAGIC.as_bytes() {
+        return Err(FrameReject::Torn("bad frame magic".into()));
+    }
+    for &sep in &[9usize, 14, 35, 56, 73] {
+        if bytes[sep] != b' ' {
+            return Err(FrameReject::Torn("malformed frame header layout".into()));
+        }
+    }
+    if bytes[HEADER_LEN - 1] != b'\n' {
+        return Err(FrameReject::Torn("malformed frame header layout".into()));
+    }
+    let version = field_usize(&bytes[10..14], "version")?;
+    if version != VAULT_VERSION {
+        return Err(FrameReject::Torn(format!(
+            "unsupported vault codec version {version} (this build reads {VAULT_VERSION})"
+        )));
+    }
+    let round = field_usize(&bytes[15..35], "round")?;
+    let payload_len = field_usize(&bytes[36..56], "payload length")?;
+    let fp_crc = field_hex(&bytes[57..73], "fingerprint crc")?;
+    let payload_crc = field_hex(&bytes[74..90], "payload crc")?;
+    let payload = &bytes[HEADER_LEN..];
+    if payload.len() != payload_len {
+        return Err(FrameReject::Torn(format!(
+            "payload is {} bytes, header declares {payload_len}",
+            payload.len()
+        )));
+    }
+    if crc64(payload) != payload_crc {
+        return Err(FrameReject::Crc("payload CRC64 mismatch".into()));
+    }
+    // the checksum passed, so the payload is the writer's bytes; the
+    // remaining checks catch a corrupted *header* on an intact payload
+    let text = String::from_utf8(payload.to_vec())
+        .map_err(|_| FrameReject::Crc("payload is not UTF-8".into()))?;
+    let j = Json::parse(&text)
+        .map_err(|e| FrameReject::Crc(format!("payload is not valid JSON: {e}")))?;
+    let payload_round = j
+        .get("round")
+        .and_then(|r| r.as_usize())
+        .map_err(|e| FrameReject::Crc(format!("payload carries no round: {e}")))?;
+    if payload_round != round {
+        return Err(FrameReject::Crc(format!(
+            "header claims round {round}, payload says {payload_round}"
+        )));
+    }
+    let config = j
+        .get("config")
+        .map_err(|e| FrameReject::Crc(format!("payload carries no config: {e}")))?;
+    if crc64(config.to_string_compact().as_bytes()) != fp_crc {
+        return Err(FrameReject::Crc(
+            "header fingerprint hash disagrees with the payload config".into(),
+        ));
+    }
+    Ok((text, round))
+}
+
+/// The round a frame's header claims, if the header alone is readable —
+/// used to count `rounds_lost` across rejected frames.
+fn header_claimed_round(bytes: &[u8]) -> Option<usize> {
+    if bytes.len() < HEADER_LEN || &bytes[..9] != FRAME_MAGIC.as_bytes() {
+        return None;
+    }
+    field_usize(&bytes[15..35], "round").ok()
+}
+
+// ---- the vault ------------------------------------------------------------
+
+/// The winning artifact of a [`CheckpointVault::load_latest_valid`]
+/// walk. `generation == 0` means the legacy unframed `<path>` file,
+/// whose `text` is passed through unvalidated (the caller's checkpoint
+/// parser keeps its historical typed errors).
+#[derive(Debug)]
+pub struct ValidGeneration {
+    /// The checkpoint payload JSON.
+    pub text: String,
+    /// Round the frame header claims (0 for an unvalidated legacy file
+    /// whose payload could not be probed).
+    pub round: usize,
+    /// Generation number (0 = legacy file).
+    pub generation: usize,
+    /// The on-disk artifact the text came from.
+    pub path: PathBuf,
+}
+
+/// Durable multi-generation checkpoint store — see the module docs.
+#[derive(Clone, Debug)]
+pub struct CheckpointVault {
+    path: PathBuf,
+    keep: usize,
+}
+
+impl CheckpointVault {
+    /// A vault rooted at `path`, retaining the newest `keep` (≥ 1)
+    /// generations. `keep == 1` writes the bare payload to `path`
+    /// itself, byte-identical to the pre-vault single-file discipline.
+    /// Construction sweeps temp files earlier incarnations orphaned.
+    pub fn new(path: impl Into<PathBuf>, keep: usize) -> CheckpointVault {
+        assert!(keep >= 1, "a vault must keep at least one generation");
+        let path = path.into();
+        durable_io::sweep_stale_tmp(&path);
+        CheckpointVault { path, keep }
+    }
+
+    /// The vault's base path (`<path>` / `<path>.g<N>`).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Generations retained on write.
+    pub fn keep(&self) -> usize {
+        self.keep
+    }
+
+    /// Whether anything on disk could be resumed from.
+    pub fn has_artifacts(&self) -> bool {
+        self.path.exists() || !self.generations().is_empty()
+    }
+
+    /// Framed generation files next to `path`, newest first.
+    fn generations(&self) -> Vec<(usize, PathBuf)> {
+        let (Some(dir), Some(stem)) = (self.path.parent(), self.path.file_name()) else {
+            return Vec::new();
+        };
+        let Some(stem) = stem.to_str() else { return Vec::new() };
+        let dir = if dir.as_os_str().is_empty() { Path::new(".") } else { dir };
+        let Ok(entries) = std::fs::read_dir(dir) else { return Vec::new() };
+        let mut gens: Vec<(usize, PathBuf)> = entries
+            .flatten()
+            .filter_map(|entry| {
+                let name = entry.file_name();
+                let name = name.to_str()?;
+                let suffix = name.strip_prefix(stem)?.strip_prefix(".g")?;
+                let n: usize = suffix.parse().ok()?;
+                Some((n, entry.path()))
+            })
+            .collect();
+        gens.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+        gens
+    }
+
+    /// Persist one snapshot. `fingerprint` is the payload's compact
+    /// config serialization (`config.to_string_compact()`); the frame
+    /// header cross-checks against it on load. Atomic either way; the
+    /// caller decides what a failure costs (the `Checkpoint` observer
+    /// counts and logs, never aborts the run it protects).
+    pub fn write(&self, round: usize, fingerprint: &str, payload: &str) -> std::io::Result<()> {
+        if self.keep == 1 {
+            durable_io::write_atomic(&self.path, payload.as_bytes())?;
+            // a vault shrunk back to keep=1 must not leave newer-looking
+            // framed generations shadowing the file it now writes
+            for (_, p) in self.generations() {
+                // detlint: allow(R002) best-effort eviction; a survivor is re-evicted next write
+                let _ = std::fs::remove_file(p);
+            }
+            return Ok(());
+        }
+        let next = self.generations().first().map_or(1, |(n, _)| n + 1);
+        let gen_path = self.generation_path(next);
+        let frame = encode_frame(round, fingerprint, payload);
+        durable_io::write_atomic(&gen_path, frame.as_bytes())?;
+        for (_, p) in self.generations().into_iter().skip(self.keep) {
+            // detlint: allow(R002) best-effort eviction; a survivor is re-evicted next write
+            let _ = std::fs::remove_file(p);
+        }
+        Ok(())
+    }
+
+    /// `<path>.g<N>`.
+    pub fn generation_path(&self, n: usize) -> PathBuf {
+        let mut name = self.path.as_os_str().to_owned();
+        name.push(format!(".g{n}"));
+        PathBuf::from(name)
+    }
+
+    /// Walk newest → oldest and return the first artifact that survives
+    /// validation, plus the [`RecoveryTelemetry`] of the whole walk
+    /// (also returned alongside the error when nothing survived). The
+    /// legacy unframed `<path>` is the final, pass-through fallback.
+    pub fn load_latest_valid(&self) -> (Result<ValidGeneration>, RecoveryTelemetry) {
+        let mut telemetry = RecoveryTelemetry::default();
+        let mut max_claimed: Option<usize> = None;
+        let mut first_reject: Option<String> = None;
+        for (n, path) in self.generations() {
+            telemetry.frames_scanned += 1;
+            let bytes = match std::fs::read(&path) {
+                Ok(b) => b,
+                Err(e) => {
+                    telemetry.torn_frames += 1;
+                    first_reject.get_or_insert(format!("{}: read: {e}", path.display()));
+                    continue;
+                }
+            };
+            if let Some(r) = header_claimed_round(&bytes) {
+                max_claimed = Some(max_claimed.map_or(r, |m: usize| m.max(r)));
+            }
+            match decode_frame(&bytes) {
+                Ok((text, round)) => {
+                    telemetry.generation_used = n as u64;
+                    telemetry.rounds_lost =
+                        max_claimed.map_or(0, |m| m.saturating_sub(round)) as u64;
+                    return (
+                        Ok(ValidGeneration { text, round, generation: n, path }),
+                        telemetry,
+                    );
+                }
+                Err(FrameReject::Torn(detail)) => {
+                    telemetry.torn_frames += 1;
+                    first_reject.get_or_insert(format!("{}: {detail}", path.display()));
+                }
+                Err(FrameReject::Crc(detail)) => {
+                    telemetry.crc_failures += 1;
+                    first_reject.get_or_insert(format!("{}: {detail}", path.display()));
+                }
+            }
+        }
+        if self.path.exists() {
+            telemetry.frames_scanned += 1;
+            match std::fs::read_to_string(&self.path) {
+                Ok(text) => {
+                    // pass-through: the caller's parser owns validation
+                    // (and its historical typed errors) for legacy files
+                    let round = Json::parse(&text)
+                        .ok()
+                        .and_then(|j| j.get("round").and_then(|r| r.as_usize()).ok())
+                        .unwrap_or(0);
+                    telemetry.generation_used = 0;
+                    telemetry.rounds_lost =
+                        max_claimed.map_or(0, |m| m.saturating_sub(round)) as u64;
+                    return (
+                        Ok(ValidGeneration {
+                            text,
+                            round,
+                            generation: 0,
+                            path: self.path.clone(),
+                        }),
+                        telemetry,
+                    );
+                }
+                Err(e) => {
+                    telemetry.torn_frames += 1;
+                    first_reject.get_or_insert(format!("{}: read: {e}", self.path.display()));
+                }
+            }
+        }
+        let detail = first_reject
+            .unwrap_or_else(|| "no checkpoint artifact on disk".into());
+        let err = Error::Checkpoint {
+            path: self.path.display().to_string(),
+            stage: "vault",
+            detail: format!(
+                "no valid generation ({} scanned, {} torn, {} checksum failures): {detail}",
+                telemetry.frames_scanned, telemetry.torn_frames, telemetry.crc_failures
+            ),
+        };
+        (Err(err), telemetry)
+    }
+}
+
+// ---- fault injection seam -------------------------------------------------
+
+/// Damage the newest on-disk checkpoint artifact of the vault rooted at
+/// `base` — the single tested seam every checkpoint-corruption fault
+/// goes through. Deterministic in `seed` (derive it per `(session,
+/// round)` via [`crate::fault::FaultPlan::corruption_seed`]). Non-
+/// corruption kinds are a no-op. Best-effort like a real bad disk:
+/// failures are logged, never propagated.
+pub fn inject_corruption(kind: &FaultKind, base: &Path, seed: u64) {
+    let probe = CheckpointVault::new(base, 1);
+    let gens = probe.generations();
+    let target = gens
+        .first()
+        .map(|(_, p)| p.clone())
+        .or_else(|| base.exists().then(|| base.to_path_buf()));
+    let Some(target) = target else {
+        log::warn!("fault: no checkpoint artifact to corrupt at {}", base.display());
+        return;
+    };
+    let result = apply_corruption(kind, &target, gens.get(1).map(|(_, p)| p.as_path()), seed);
+    if let Err(e) = result {
+        log::warn!("fault: failed to corrupt checkpoint {}: {e}", target.display());
+    }
+}
+
+fn apply_corruption(
+    kind: &FaultKind,
+    target: &Path,
+    previous: Option<&Path>,
+    seed: u64,
+) -> std::io::Result<()> {
+    use std::io::{Seek, SeekFrom, Write};
+    let len = std::fs::metadata(target)?.len();
+    let open = || std::fs::OpenOptions::new().write(true).open(target);
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    match kind {
+        // historical behavior, preserved bit-for-bit: clip to half
+        FaultKind::CorruptCheckpoint => open()?.set_len(len / 2),
+        // a write the power failed mid-way through: a seeded prefix
+        FaultKind::TornWrite => {
+            let cut = if len == 0 { 0 } else { rng.state()[0] % len };
+            open()?.set_len(cut)
+        }
+        // silent media corruption: one seeded bit, anywhere in the file
+        FaultKind::BitFlip => {
+            if len == 0 {
+                return Ok(());
+            }
+            let offset = rng.state()[0] % len;
+            let bit = (rng.state()[1] % 8) as u8;
+            let mut bytes = std::fs::read(target)?;
+            bytes[offset as usize] ^= 1 << bit;
+            let mut f = open()?;
+            f.seek(SeekFrom::Start(offset))?;
+            f.write_all(&bytes[offset as usize..offset as usize + 1])
+        }
+        // a rename that resurrected the previous generation's bytes
+        FaultKind::StaleRename => match previous {
+            Some(prev) => std::fs::copy(prev, target).map(|_| ()),
+            None => open()?.set_len(0),
+        },
+        _ => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(round: usize, seed: usize) -> String {
+        Json::obj(vec![
+            ("titan_checkpoint", Json::Num(1.0)),
+            ("round", Json::Num(round as f64)),
+            ("config", Json::obj(vec![("seed", Json::Num(seed as f64))])),
+            ("params", Json::from_f64s(&[0.5, -0.25, 1.0e-7])),
+        ])
+        .to_string_compact()
+    }
+
+    fn fingerprint(seed: usize) -> String {
+        Json::obj(vec![("seed", Json::Num(seed as f64))]).to_string_compact()
+    }
+
+    fn fresh_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn crc64_matches_the_reference_vector() {
+        // CRC-64/XZ check value
+        assert_eq!(crc64(b"123456789"), 0x995D_C9BB_DF19_39FA);
+        assert_eq!(crc64(b""), 0);
+        assert_ne!(crc64(b"a"), crc64(b"b"));
+    }
+
+    #[test]
+    fn frame_roundtrips_exactly() {
+        let p = payload(7, 3);
+        let frame = encode_frame(7, &fingerprint(3), &p);
+        assert_eq!(frame.len(), HEADER_LEN + p.len());
+        let (text, round) = match decode_frame(frame.as_bytes()) {
+            Ok(ok) => ok,
+            Err(FrameReject::Torn(d)) | Err(FrameReject::Crc(d)) => panic!("rejected: {d}"),
+        };
+        assert_eq!(text, p);
+        assert_eq!(round, 7);
+    }
+
+    /// The tentpole's property sweep: every prefix truncation and every
+    /// single-byte corruption of a frame is rejected — a frame never
+    /// decodes to a different state than the one written.
+    #[test]
+    fn every_truncation_and_single_byte_corruption_is_rejected() {
+        let p = payload(12, 9);
+        let frame = encode_frame(12, &fingerprint(9), &p).into_bytes();
+        for cut in 0..frame.len() {
+            assert!(
+                decode_frame(&frame[..cut]).is_err(),
+                "prefix truncation at {cut}/{} decoded",
+                frame.len()
+            );
+        }
+        for pos in 0..frame.len() {
+            for delta in [0x01u8, 0x80, 0xFF] {
+                let mut bad = frame.clone();
+                bad[pos] ^= delta;
+                match decode_frame(&bad) {
+                    Err(_) => {}
+                    Ok((text, _)) => panic!(
+                        "byte {pos} ^ {delta:#x} decoded to {} bytes of payload",
+                        text.len()
+                    ),
+                }
+            }
+        }
+    }
+
+    /// `keep = 1` is byte-identical to the historical single-file path:
+    /// the payload lands verbatim at `<path>` and no `.g` files appear.
+    #[test]
+    fn keep_one_writes_the_bare_payload() {
+        let dir = fresh_dir("titan_vault_keep1");
+        let vault = CheckpointVault::new(dir.join("ck.json"), 1);
+        let p = payload(4, 1);
+        vault.write(4, &fingerprint(1), &p).unwrap();
+        assert_eq!(std::fs::read_to_string(dir.join("ck.json")).unwrap(), p);
+        assert!(vault.generations().is_empty());
+        let (win, t) = vault.load_latest_valid();
+        let win = win.unwrap();
+        assert_eq!(win.generation, 0);
+        assert_eq!(win.round, 4);
+        assert_eq!(win.text, p);
+        assert!(!t.degraded());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Generation-ring rotation and eviction roundtrip: six writes at
+    /// keep=3 retain exactly the newest three generations, and the walk
+    /// resumes from the newest with clean telemetry.
+    #[test]
+    fn generation_ring_rotates_and_evicts() {
+        let dir = fresh_dir("titan_vault_ring");
+        let vault = CheckpointVault::new(dir.join("ck.json"), 3);
+        for round in 1..=6usize {
+            vault.write(round, &fingerprint(1), &payload(round, 1)).unwrap();
+        }
+        let gens: Vec<usize> = vault.generations().iter().map(|(n, _)| *n).collect();
+        assert_eq!(gens, vec![6, 5, 4], "newest three generations retained");
+        assert!(!vault.path().exists(), "keep>1 never writes the bare path");
+        let (win, t) = vault.load_latest_valid();
+        let win = win.unwrap();
+        assert_eq!((win.generation, win.round), (6, 6));
+        assert_eq!(win.text, payload(6, 1));
+        assert_eq!(
+            t,
+            RecoveryTelemetry {
+                frames_scanned: 1,
+                generation_used: 6,
+                ..RecoveryTelemetry::default()
+            }
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The fallback chain: a torn newest generation loses to its valid
+    /// predecessor, with the telemetry counting the rejected frame and
+    /// the rounds the torn frame claimed beyond the survivor.
+    #[test]
+    fn torn_newest_generation_falls_back_to_previous() {
+        let dir = fresh_dir("titan_vault_fallback");
+        let vault = CheckpointVault::new(dir.join("ck.json"), 3);
+        vault.write(2, &fingerprint(1), &payload(2, 1)).unwrap();
+        vault.write(5, &fingerprint(1), &payload(5, 1)).unwrap();
+        // tear the newest frame mid-payload
+        let newest = vault.generation_path(2);
+        let len = std::fs::metadata(&newest).unwrap().len();
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&newest)
+            .unwrap()
+            .set_len(len - 10)
+            .unwrap();
+        let (win, t) = vault.load_latest_valid();
+        let win = win.unwrap();
+        assert_eq!((win.generation, win.round), (1, 2));
+        assert_eq!(
+            t,
+            RecoveryTelemetry {
+                frames_scanned: 2,
+                torn_frames: 1,
+                generation_used: 1,
+                rounds_lost: 3,
+            }
+        );
+        assert!(t.degraded());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A bit flip inside the payload is a CRC failure, not a torn frame.
+    #[test]
+    fn bit_flipped_payload_counts_as_crc_failure() {
+        let dir = fresh_dir("titan_vault_bitflip");
+        let vault = CheckpointVault::new(dir.join("ck.json"), 2);
+        vault.write(1, &fingerprint(1), &payload(1, 1)).unwrap();
+        vault.write(3, &fingerprint(1), &payload(3, 1)).unwrap();
+        let newest = vault.generation_path(2);
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let mid = HEADER_LEN + (bytes.len() - HEADER_LEN) / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&newest, &bytes).unwrap();
+        let (win, t) = vault.load_latest_valid();
+        assert_eq!(win.unwrap().round, 1);
+        assert_eq!(t.crc_failures, 1);
+        assert_eq!(t.torn_frames, 0);
+        assert_eq!(t.rounds_lost, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A wrong-fingerprint frame (header hash disagreeing with the
+    /// payload config) is rejected even though its JSON parses fine —
+    /// the silent-wrong-resume hole this vault exists to close.
+    #[test]
+    fn wrong_fingerprint_frame_is_rejected() {
+        let dir = fresh_dir("titan_vault_fp");
+        let vault = CheckpointVault::new(dir.join("ck.json"), 2);
+        vault.write(2, &fingerprint(1), &payload(2, 1)).unwrap();
+        // forge a newer frame whose header hash belongs to another config
+        let forged = encode_frame(4, &fingerprint(99), &payload(4, 1));
+        std::fs::write(vault.generation_path(2), forged).unwrap();
+        let (win, t) = vault.load_latest_valid();
+        assert_eq!(win.unwrap().round, 2);
+        assert_eq!(t.crc_failures, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A legacy unframed file is the final fallback and passes through
+    /// unvalidated — even when every framed generation is rejected.
+    #[test]
+    fn legacy_file_is_the_final_fallback() {
+        let dir = fresh_dir("titan_vault_legacy");
+        let base = dir.join("ck.json");
+        std::fs::write(&base, payload(3, 1)).unwrap();
+        let vault = CheckpointVault::new(&base, 3);
+        let (win, t) = vault.load_latest_valid();
+        let win = win.unwrap();
+        assert_eq!((win.generation, win.round), (0, 3));
+        assert!(!t.degraded());
+        // now shadow it with a frame, then tear the frame: back to legacy
+        vault.write(5, &fingerprint(1), &payload(5, 1)).unwrap();
+        std::fs::write(vault.generation_path(1), b"TITANVLT1 garbage").unwrap();
+        let (win, t) = vault.load_latest_valid();
+        assert_eq!(win.unwrap().generation, 0);
+        assert_eq!(t.torn_frames, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Nothing valid on disk: the walk errors with a typed checkpoint
+    /// error carrying the rejection tallies, and the telemetry matches.
+    #[test]
+    fn exhausted_vault_yields_typed_error_and_telemetry() {
+        let dir = fresh_dir("titan_vault_exhausted");
+        let vault = CheckpointVault::new(dir.join("ck.json"), 2);
+        vault.write(2, &fingerprint(1), &payload(2, 1)).unwrap();
+        std::fs::write(vault.generation_path(1), b"short").unwrap();
+        let (win, t) = vault.load_latest_valid();
+        match win {
+            Err(Error::Checkpoint { stage: "vault", detail, .. }) => {
+                assert!(detail.contains("1 torn"), "{detail}");
+            }
+            other => panic!("expected vault-stage error, got {other:?}"),
+        }
+        assert_eq!(t.torn_frames, 1);
+        assert_eq!(t.frames_scanned, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The injector seam is deterministic in its seed and damages the
+    /// newest artifact for every corruption kind.
+    #[test]
+    fn corruption_injection_is_deterministic_per_seed() {
+        for kind in [
+            FaultKind::CorruptCheckpoint,
+            FaultKind::TornWrite,
+            FaultKind::BitFlip,
+            FaultKind::StaleRename,
+        ] {
+            let mut damaged = Vec::new();
+            for copy in 0..2 {
+                let dir = fresh_dir(&format!("titan_vault_inject_{}_{copy}", kind.name()));
+                let vault = CheckpointVault::new(dir.join("ck.json"), 2);
+                vault.write(2, &fingerprint(1), &payload(2, 1)).unwrap();
+                vault.write(4, &fingerprint(1), &payload(4, 1)).unwrap();
+                inject_corruption(&kind, &dir.join("ck.json"), 0xABCD);
+                let bytes = std::fs::read(vault.generation_path(2)).unwrap();
+                assert_ne!(
+                    bytes,
+                    encode_frame(4, &fingerprint(1), &payload(4, 1)).into_bytes(),
+                    "{} left the newest frame intact",
+                    kind.name()
+                );
+                // the older generation is never touched
+                assert_eq!(
+                    std::fs::read(vault.generation_path(1)).unwrap(),
+                    encode_frame(2, &fingerprint(1), &payload(2, 1)).into_bytes()
+                );
+                // and the walk still recovers something
+                let (win, t) = vault.load_latest_valid();
+                match kind {
+                    // a stale rename resurrects a valid (older) frame
+                    FaultKind::StaleRename => assert_eq!(win.unwrap().round, 2),
+                    _ => {
+                        assert_eq!(win.unwrap().round, 2);
+                        assert!(t.degraded(), "{}: {t:?}", kind.name());
+                    }
+                }
+                damaged.push(bytes);
+                let _ = std::fs::remove_dir_all(&dir);
+            }
+            assert_eq!(damaged[0], damaged[1], "{} is not deterministic", kind.name());
+        }
+    }
+
+    #[test]
+    fn recovery_telemetry_json_roundtrip_and_merge() {
+        let t = RecoveryTelemetry {
+            frames_scanned: 3,
+            crc_failures: 1,
+            torn_frames: 1,
+            generation_used: 4,
+            rounds_lost: 2,
+        };
+        let back = RecoveryTelemetry::from_json(&Json::parse(
+            &t.to_json().to_string_compact(),
+        ).unwrap())
+        .unwrap();
+        assert_eq!(back, t);
+        let mut sum = RecoveryTelemetry::default();
+        sum.merge(&t);
+        sum.merge(&t);
+        assert_eq!(sum.frames_scanned, 6);
+        assert_eq!(sum.rounds_lost, 4);
+        assert_eq!(sum.generation_used, 4);
+    }
+}

@@ -30,9 +30,25 @@ pub fn run(args: &Args) -> Result<()> {
                 cfg.base.eval_every = 2;
             }
             cfg.comm_rounds = args.get_usize("comm-rounds", cfg.comm_rounds)?;
-            let rec = FlBuilder::new(cfg)
-                .observe(ProgressLog::every(5))
-                .run()?;
+            let mut builder = FlBuilder::new(cfg).observe(ProgressLog::every(5));
+            // vault-backed durability: one capsule per (model, method)
+            // cell, resumable across interrupted sweeps with --resume
+            if let Some(dir) = args.get("checkpoint-dir") {
+                let every = args.get_usize("checkpoint-every", 5)?;
+                let keep = args.get_usize("keep-checkpoints", 1)?;
+                let path = std::path::Path::new(dir)
+                    .join(format!("fl_{model}_{}.json", method.name()));
+                builder = builder.checkpoint(path, every, keep).resume(args.has_flag("resume"));
+            }
+            let rec = builder.run()?;
+            if let Some(r) = &rec.recovery {
+                eprintln!(
+                    "fig10 {model}/{}: degraded resume (generation {}, {} rounds lost)",
+                    method.name(),
+                    r.generation_used,
+                    r.rounds_lost
+                );
+            }
             if method == Method::Rs {
                 rs_target = rec.final_accuracy;
                 rs_rounds_to = rec.rounds_to_accuracy(rs_target);

@@ -47,6 +47,17 @@ pub enum FaultKind {
     /// The session's latest on-disk checkpoint is truncated before the
     /// step, exercising the corrupt-snapshot recovery path.
     CorruptCheckpoint,
+    /// The newest checkpoint artifact is clipped to a seeded prefix — a
+    /// write the power failed mid-way through. Injected via the same
+    /// seam as the other corruption kinds
+    /// ([`crate::coordinator::vault::inject_corruption`]).
+    TornWrite,
+    /// One seeded bit of the newest checkpoint artifact flips — silent
+    /// media corruption that leaves the JSON superficially intact.
+    BitFlip,
+    /// The newest checkpoint generation's bytes are replaced with the
+    /// previous generation's — a rename that resurrected stale state.
+    StaleRename,
 }
 
 impl FaultKind {
@@ -58,7 +69,55 @@ impl FaultKind {
             FaultKind::Straggler { .. } => "straggler",
             FaultKind::EnergyBrownout { .. } => "brownout",
             FaultKind::CorruptCheckpoint => "corrupt_checkpoint",
+            FaultKind::TornWrite => "torn_write",
+            FaultKind::BitFlip => "bit_flip",
+            FaultKind::StaleRename => "stale_rename",
         }
+    }
+
+    /// True for the kinds that damage on-disk checkpoint artifacts (all
+    /// four share [`crate::coordinator::vault::inject_corruption`]).
+    pub fn corrupts_checkpoint(&self) -> bool {
+        matches!(
+            self,
+            FaultKind::CorruptCheckpoint
+                | FaultKind::TornWrite
+                | FaultKind::BitFlip
+                | FaultKind::StaleRename
+        )
+    }
+
+    /// Parse a CLI fault tag (`--fault-script`): a bare [`name`] tag,
+    /// with `straggler:<slowdown>` / `brownout:<joules>` carrying their
+    /// parameter.
+    ///
+    /// [`name`]: FaultKind::name
+    pub fn parse(spec: &str) -> Result<FaultKind> {
+        let (head, param) = match spec.split_once(':') {
+            Some((h, p)) => (h, Some(p)),
+            None => (spec, None),
+        };
+        let value = |what: &str| -> Result<f64> {
+            param
+                .ok_or_else(|| Error::Config(format!("fault {head:?} needs :{what}")))?
+                .parse()
+                .map_err(|_| Error::Config(format!("bad {what} in fault spec {spec:?}")))
+        };
+        let kind = match head {
+            "crash" => FaultKind::Crash,
+            "transient" => FaultKind::Transient,
+            "straggler" => return Ok(FaultKind::Straggler { slowdown: value("slowdown")? }),
+            "brownout" => return Ok(FaultKind::EnergyBrownout { joules: value("joules")? }),
+            "corrupt_checkpoint" => FaultKind::CorruptCheckpoint,
+            "torn_write" => FaultKind::TornWrite,
+            "bit_flip" => FaultKind::BitFlip,
+            "stale_rename" => FaultKind::StaleRename,
+            other => return Err(Error::Config(format!("unknown fault kind {other:?}"))),
+        };
+        if param.is_some() {
+            return Err(Error::Config(format!("fault {head:?} takes no parameter")));
+        }
+        Ok(kind)
     }
 
     fn to_json(self) -> Json {
@@ -82,6 +141,9 @@ impl FaultKind {
             "straggler" => FaultKind::Straggler { slowdown: j.get("slowdown")?.as_f64()? },
             "brownout" => FaultKind::EnergyBrownout { joules: j.get("joules")?.as_f64()? },
             "corrupt_checkpoint" => FaultKind::CorruptCheckpoint,
+            "torn_write" => FaultKind::TornWrite,
+            "bit_flip" => FaultKind::BitFlip,
+            "stale_rename" => FaultKind::StaleRename,
             other => return Err(Error::Json(format!("unknown fault kind {other:?}"))),
         })
     }
@@ -103,6 +165,14 @@ pub struct FaultPlan {
     pub brownout_rate: f64,
     /// Probability a cell corrupts its checkpoint before stepping.
     pub corrupt_rate: f64,
+    /// Probability a cell tears the newest checkpoint artifact (seeded
+    /// prefix truncation).
+    pub torn_rate: f64,
+    /// Probability a cell flips one seeded bit of the newest artifact.
+    pub bitflip_rate: f64,
+    /// Probability a cell replaces the newest generation with the
+    /// previous one (stale rename).
+    pub stale_rate: f64,
     /// Device-clock inflation of a straggler round (≥ 1).
     pub straggler_slowdown: f64,
     /// Extra joules drained by a brown-out round.
@@ -122,6 +192,9 @@ impl FaultPlan {
             straggler_rate: 0.0,
             brownout_rate: 0.0,
             corrupt_rate: 0.0,
+            torn_rate: 0.0,
+            bitflip_rate: 0.0,
+            stale_rate: 0.0,
             straggler_slowdown: 4.0,
             brownout_joules: 5.0,
             script: Vec::new(),
@@ -143,6 +216,9 @@ impl FaultPlan {
             && self.straggler_rate == 0.0
             && self.brownout_rate == 0.0
             && self.corrupt_rate == 0.0
+            && self.torn_rate == 0.0
+            && self.bitflip_rate == 0.0
+            && self.stale_rate == 0.0
     }
 
     /// Check rate/parameter sanity; consumers call this once up front so
@@ -154,6 +230,9 @@ impl FaultPlan {
             ("straggler-rate", self.straggler_rate),
             ("brownout-rate", self.brownout_rate),
             ("corrupt-rate", self.corrupt_rate),
+            ("torn-rate", self.torn_rate),
+            ("bitflip-rate", self.bitflip_rate),
+            ("stale-rate", self.stale_rate),
         ];
         for (name, r) in rates {
             if !(0.0..=1.0).contains(&r) {
@@ -191,7 +270,10 @@ impl FaultPlan {
             + self.transient_rate
             + self.straggler_rate
             + self.brownout_rate
-            + self.corrupt_rate;
+            + self.corrupt_rate
+            + self.torn_rate
+            + self.bitflip_rate
+            + self.stale_rate;
         if total <= 0.0 {
             return None;
         }
@@ -220,7 +302,27 @@ impl FaultPlan {
         if draw < acc {
             return Some(FaultKind::CorruptCheckpoint);
         }
+        acc += self.torn_rate;
+        if draw < acc {
+            return Some(FaultKind::TornWrite);
+        }
+        acc += self.bitflip_rate;
+        if draw < acc {
+            return Some(FaultKind::BitFlip);
+        }
+        acc += self.stale_rate;
+        if draw < acc {
+            return Some(FaultKind::StaleRename);
+        }
         None
+    }
+
+    /// Seed for the corruption injector's RNG at a cell — the same
+    /// `(session, round)` decorrelation as [`FaultPlan::fault_for`],
+    /// salted so the injected damage is independent of the draw that
+    /// selected the fault.
+    pub fn corruption_seed(&self, session: usize, round: usize) -> u64 {
+        (self.seed ^ mix_cell(session, round)).rotate_left(17) ^ 0x7E4A_11E5_BADD_15C0
     }
 
     pub fn to_json(&self) -> Json {
@@ -244,6 +346,9 @@ impl FaultPlan {
             ("straggler_rate", Json::Num(self.straggler_rate)),
             ("brownout_rate", Json::Num(self.brownout_rate)),
             ("corrupt_rate", Json::Num(self.corrupt_rate)),
+            ("torn_rate", Json::Num(self.torn_rate)),
+            ("bitflip_rate", Json::Num(self.bitflip_rate)),
+            ("stale_rate", Json::Num(self.stale_rate)),
             ("straggler_slowdown", Json::Num(self.straggler_slowdown)),
             ("brownout_joules", Json::Num(self.brownout_joules)),
             ("script", script),
@@ -259,6 +364,17 @@ impl FaultPlan {
         plan.straggler_rate = j.get("straggler_rate")?.as_f64()?;
         plan.brownout_rate = j.get("brownout_rate")?.as_f64()?;
         plan.corrupt_rate = j.get("corrupt_rate")?.as_f64()?;
+        // the corruption-suite rates postdate the format: absent keys
+        // (plans serialized by earlier builds) mean zero
+        let rate_or_zero = |key: &str| -> Result<f64> {
+            match j.get(key) {
+                Err(_) => Ok(0.0),
+                Ok(v) => v.as_f64(),
+            }
+        };
+        plan.torn_rate = rate_or_zero("torn_rate")?;
+        plan.bitflip_rate = rate_or_zero("bitflip_rate")?;
+        plan.stale_rate = rate_or_zero("stale_rate")?;
         plan.straggler_slowdown = j.get("straggler_slowdown")?.as_f64()?;
         plan.brownout_joules = j.get("brownout_joules")?.as_f64()?;
         for cell in j.get("script")?.as_arr()? {
@@ -294,11 +410,28 @@ pub enum SupervisionPolicy {
     /// Quarantine the failed session and keep scheduling the rest; the
     /// `FleetRecord` reports a per-session terminal status.
     Isolate,
-    /// Rebuild the dead session from its latest valid checkpoint (or
-    /// from scratch — same config + seed reproduces the run), park it
-    /// for `backoff_rounds` fleet ticks, then re-admit. After
+    /// Rebuild the dead session from its latest valid checkpoint
+    /// generation (older generations are fallbacks; from scratch only
+    /// when the whole vault is exhausted — same config + seed
+    /// reproduces the run), park it for
+    /// `backoff_rounds * 2^attempt` fleet ticks (capped at
+    /// `backoff_cap` — see [`restart_backoff`]), then re-admit. After
     /// `max_retries` restarts the session is quarantined instead.
-    Restart { max_retries: usize, backoff_rounds: usize },
+    Restart { max_retries: usize, backoff_rounds: usize, backoff_cap: usize },
+}
+
+/// Default exponential-backoff ceiling (fleet ticks) for
+/// [`SupervisionPolicy::Restart`].
+pub const DEFAULT_BACKOFF_CAP: usize = 32;
+
+/// The deterministic restart-backoff schedule: attempt `a` (0-based)
+/// parks for `min(backoff_rounds * 2^a, backoff_cap)` ticks. Attempt 0
+/// always equals `backoff_rounds` (when under the cap), so
+/// single-restart runs are tick-identical to the historical constant
+/// backoff; a zero `backoff_rounds` stays zero forever.
+pub fn restart_backoff(backoff_rounds: usize, backoff_cap: usize, attempt: usize) -> u64 {
+    let mult = 1usize.checked_shl(attempt.min(63) as u32).unwrap_or(usize::MAX);
+    backoff_rounds.saturating_mul(mult).min(backoff_cap) as u64
 }
 
 impl SupervisionPolicy {
@@ -313,7 +446,8 @@ impl SupervisionPolicy {
 }
 
 /// Parse a `--supervise` argument. `restart` takes optional
-/// `:max_retries:backoff_rounds` suffixes (default `restart:3:1`).
+/// `:max_retries:backoff_rounds:backoff_cap` suffixes (default
+/// `restart:3:1:32`).
 pub fn parse_supervision(s: &str) -> Result<SupervisionPolicy> {
     let mut parts = s.split(':');
     let head = parts.next().unwrap_or("");
@@ -321,23 +455,24 @@ pub fn parse_supervision(s: &str) -> Result<SupervisionPolicy> {
         "failfast" => SupervisionPolicy::FailFast,
         "isolate" => SupervisionPolicy::Isolate,
         "restart" => {
-            let max_retries = match parts.next() {
-                None => 3,
-                Some(v) => v
-                    .parse()
-                    .map_err(|_| Error::Config(format!("bad restart max_retries {v:?}")))?,
+            let mut field = |what: &str, default: usize| -> Result<usize> {
+                match parts.next() {
+                    None => Ok(default),
+                    Some(v) => v
+                        .parse()
+                        .map_err(|_| Error::Config(format!("bad restart {what} {v:?}"))),
+                }
             };
-            let backoff_rounds = match parts.next() {
-                None => 1,
-                Some(v) => v
-                    .parse()
-                    .map_err(|_| Error::Config(format!("bad restart backoff_rounds {v:?}")))?,
-            };
-            SupervisionPolicy::Restart { max_retries, backoff_rounds }
+            SupervisionPolicy::Restart {
+                max_retries: field("max_retries", 3)?,
+                backoff_rounds: field("backoff_rounds", 1)?,
+                backoff_cap: field("backoff_cap", DEFAULT_BACKOFF_CAP)?,
+            }
         }
         other => {
             return Err(Error::Config(format!(
-                "unknown supervision policy {other:?} (failfast|isolate|restart[:retries[:backoff]])"
+                "unknown supervision policy {other:?} \
+                 (failfast|isolate|restart[:retries[:backoff[:cap]]])"
             )))
         }
     };
@@ -453,15 +588,126 @@ mod tests {
         assert_eq!(parse_supervision("isolate").unwrap(), SupervisionPolicy::Isolate);
         assert_eq!(
             parse_supervision("restart").unwrap(),
-            SupervisionPolicy::Restart { max_retries: 3, backoff_rounds: 1 }
+            SupervisionPolicy::Restart {
+                max_retries: 3,
+                backoff_rounds: 1,
+                backoff_cap: DEFAULT_BACKOFF_CAP,
+            }
         );
         assert_eq!(
             parse_supervision("restart:5:0").unwrap(),
-            SupervisionPolicy::Restart { max_retries: 5, backoff_rounds: 0 }
+            SupervisionPolicy::Restart {
+                max_retries: 5,
+                backoff_rounds: 0,
+                backoff_cap: DEFAULT_BACKOFF_CAP,
+            }
+        );
+        assert_eq!(
+            parse_supervision("restart:1:2:3").unwrap(),
+            SupervisionPolicy::Restart { max_retries: 1, backoff_rounds: 2, backoff_cap: 3 }
         );
         assert!(parse_supervision("reboot").is_err());
         assert!(parse_supervision("restart:x").is_err());
-        assert!(parse_supervision("restart:1:2:3").is_err());
+        assert!(parse_supervision("restart:1:2:x").is_err());
+        assert!(parse_supervision("restart:1:2:3:4").is_err());
         assert_eq!(SupervisionPolicy::default(), SupervisionPolicy::FailFast);
+    }
+
+    #[test]
+    fn restart_backoff_schedule_is_capped_exponential() {
+        // attempt 0 always equals the configured backoff, so historical
+        // single-restart runs keep their exact tick schedule
+        assert_eq!(restart_backoff(1, DEFAULT_BACKOFF_CAP, 0), 1);
+        assert_eq!(restart_backoff(2, DEFAULT_BACKOFF_CAP, 0), 2);
+        // pinned full schedule for restart:_:2:12
+        let sched: Vec<u64> = (0..6).map(|a| restart_backoff(2, 12, a)).collect();
+        assert_eq!(sched, vec![2, 4, 8, 12, 12, 12]);
+        // zero backoff stays zero forever; huge attempts saturate at the cap
+        assert_eq!(restart_backoff(0, DEFAULT_BACKOFF_CAP, 40), 0);
+        assert_eq!(restart_backoff(3, 32, 200), 32);
+    }
+
+    #[test]
+    fn fault_kind_parse_accepts_cli_tags() {
+        assert_eq!(FaultKind::parse("crash").unwrap(), FaultKind::Crash);
+        assert_eq!(FaultKind::parse("transient").unwrap(), FaultKind::Transient);
+        assert_eq!(
+            FaultKind::parse("corrupt_checkpoint").unwrap(),
+            FaultKind::CorruptCheckpoint
+        );
+        assert_eq!(FaultKind::parse("torn_write").unwrap(), FaultKind::TornWrite);
+        assert_eq!(FaultKind::parse("bit_flip").unwrap(), FaultKind::BitFlip);
+        assert_eq!(FaultKind::parse("stale_rename").unwrap(), FaultKind::StaleRename);
+        assert_eq!(
+            FaultKind::parse("straggler:2.5").unwrap(),
+            FaultKind::Straggler { slowdown: 2.5 }
+        );
+        assert_eq!(
+            FaultKind::parse("brownout:0.125").unwrap(),
+            FaultKind::EnergyBrownout { joules: 0.125 }
+        );
+        assert!(FaultKind::parse("straggler").is_err(), "missing slowdown");
+        assert!(FaultKind::parse("crash:1").is_err(), "stray parameter");
+        assert!(FaultKind::parse("meteor").is_err());
+    }
+
+    #[test]
+    fn corruption_kinds_roundtrip_and_draw() {
+        let mut plan = FaultPlan::new(11);
+        plan.torn_rate = 0.2;
+        plan.bitflip_rate = 0.1;
+        plan.stale_rate = 0.05;
+        let plan = plan.script(0, 1, FaultKind::TornWrite).script(1, 1, FaultKind::StaleRename);
+        plan.validate().unwrap();
+        let text = plan.to_json().to_string_compact();
+        let back = FaultPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(plan, back);
+        assert_eq!(plan.fault_for(0, 1), Some(FaultKind::TornWrite));
+        // all draws come from the corruption family
+        let mut seen = std::collections::BTreeSet::new();
+        let mut full = plan.clone();
+        full.torn_rate = 0.4;
+        full.bitflip_rate = 0.4;
+        full.stale_rate = 0.2;
+        for cell in 0..600 {
+            if let Some(k) = full.fault_for(cell % 5, cell) {
+                assert!(k.corrupts_checkpoint(), "non-corruption draw {k:?}");
+                seen.insert(k.name());
+            }
+        }
+        assert_eq!(
+            seen.into_iter().collect::<Vec<_>>(),
+            vec!["bit_flip", "stale_rename", "torn_write"]
+        );
+    }
+
+    #[test]
+    fn from_json_defaults_absent_corruption_rates() {
+        // plans serialized before the vault work lack the three new rate
+        // keys; they must deserialize as zero-rate
+        let mut plan = FaultPlan::new(9);
+        plan.crash_rate = 0.25;
+        let mut j = plan.to_json();
+        if let Json::Obj(map) = &mut j {
+            for key in ["torn_rate", "bitflip_rate", "stale_rate"] {
+                map.remove(key);
+            }
+        }
+        let back = FaultPlan::from_json(&j).unwrap();
+        assert_eq!(back, plan);
+        assert_eq!(back.torn_rate, 0.0);
+        assert_eq!(back.bitflip_rate, 0.0);
+        assert_eq!(back.stale_rate, 0.0);
+    }
+
+    #[test]
+    fn corruption_seed_is_cell_deterministic() {
+        let plan = FaultPlan::new(21);
+        assert_eq!(plan.corruption_seed(0, 4), plan.corruption_seed(0, 4));
+        assert_ne!(plan.corruption_seed(0, 4), plan.corruption_seed(0, 5));
+        assert_ne!(plan.corruption_seed(0, 4), plan.corruption_seed(1, 4));
+        let mut other = plan.clone();
+        other.seed = 22;
+        assert_ne!(plan.corruption_seed(0, 4), other.corruption_seed(0, 4));
     }
 }

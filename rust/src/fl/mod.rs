@@ -38,6 +38,15 @@
 //! untouched); the coordinator's sampling stream never depends on the
 //! plan, so a zero-rate plan is bit-identical to no plan at all.
 //!
+//! Interrupted deployments resume: [`FlBuilder::checkpoint`] persists
+//! one [`CheckpointVault`]-backed capsule per run — global parameters,
+//! the orchestrator RNG, and each device's dispatch state — and
+//! [`FlBuilder::resume`] restores it, fast-forwarding the deterministic
+//! device streams instead of persisting per-device buffers. The torn-
+//! write story is the vault's: a shredded newest generation falls back
+//! to the previous one and the replay cost is reported as the record's
+//! `recovery` telemetry.
+//!
 //! Implementation note: devices share one `ModelRuntime` (Full role) and
 //! swap parameter vectors in/out — functionally identical to 50 separate
 //! processes, and the only tractable layout on a one-core host.
@@ -45,6 +54,10 @@
 use crate::config::RunConfig;
 use crate::coordinator::host::{pick_validated, RoundRobin, SchedPolicy, TaskState};
 use crate::coordinator::session::{Control, RoundObserver};
+use crate::coordinator::snapshot::{
+    f32_list, u64_from_json, u64_to_json, words_from_json, words_to_json,
+};
+use crate::coordinator::vault::CheckpointVault;
 use crate::coordinator::RoundOutcome;
 use crate::data::buffer::Candidate;
 use crate::data::{ClassSubsetSource, DataSource, RetainedSource, Sample, SynthTask};
@@ -52,9 +65,11 @@ use crate::fault::{FaultKind, FaultPlan};
 use crate::metrics::{CurvePoint, RunRecord};
 use crate::runtime::model::{ModelRuntime, RuntimeRole};
 use crate::selection::{make_strategy, SelectionContext};
+use crate::util::json::Json;
 use crate::util::rng::Xoshiro256;
 use crate::util::timer::Stopwatch;
 use crate::{Error, Result};
+use std::path::PathBuf;
 
 /// FL experiment configuration on top of a base RunConfig.
 #[derive(Clone, Debug)]
@@ -113,6 +128,9 @@ pub struct FlBuilder {
     policy: Box<dyn SchedPolicy>,
     fault_plan: Option<FaultPlan>,
     straggler_deadline: f64,
+    /// (vault path, checkpoint cadence in comm rounds, generations kept).
+    checkpoint: Option<(PathBuf, usize, usize)>,
+    resume: bool,
 }
 
 impl FlBuilder {
@@ -124,6 +142,8 @@ impl FlBuilder {
             policy: Box::new(RoundRobin::new()),
             fault_plan: None,
             straggler_deadline: 8.0,
+            checkpoint: None,
+            resume: false,
         }
     }
 
@@ -143,6 +163,28 @@ impl FlBuilder {
     /// round deadline and is cut from aggregation.
     pub fn straggler_deadline(mut self, deadline: f64) -> Self {
         self.straggler_deadline = deadline;
+        self
+    }
+
+    /// Checkpoint the federated run into a [`CheckpointVault`] at `path`
+    /// every `every` comm rounds, keeping the newest `keep` generations.
+    /// One capsule holds the whole deployment: global parameters, the
+    /// orchestrator RNG, and every device's dispatch state — device
+    /// streams are deterministic, so a resume fast-forwards them instead
+    /// of persisting per-device buffers. Incompatible with retaining
+    /// device sources (`store_bytes > 0`): a store's contents depend on
+    /// model outputs at offer time, which a fast-forward cannot replay.
+    pub fn checkpoint(mut self, path: impl Into<PathBuf>, every: usize, keep: usize) -> Self {
+        self.checkpoint = Some((path.into(), every.max(1), keep.max(1)));
+        self
+    }
+
+    /// Resume from the vault's newest valid generation when one exists
+    /// (requires [`FlBuilder::checkpoint`]); fresh start otherwise. A
+    /// degraded recovery — torn or corrupt newer generations skipped on
+    /// the walk — is surfaced as the record's `recovery` telemetry.
+    pub fn resume(mut self, resume: bool) -> Self {
+        self.resume = resume;
         self
     }
 
@@ -180,10 +222,23 @@ impl FlBuilder {
     /// empty `dropped` list when no plan — or a zero-rate one — is
     /// attached).
     pub fn run_with_faults(self) -> Result<(RunRecord, Vec<FlRoundFaults>)> {
-        let FlBuilder { cfg, sources, mut observers, mut policy, fault_plan, straggler_deadline } =
-            self;
+        let FlBuilder {
+            cfg,
+            sources,
+            mut observers,
+            mut policy,
+            fault_plan,
+            straggler_deadline,
+            checkpoint,
+            resume,
+        } = self;
         if let Some(plan) = &fault_plan {
             plan.validate()?;
+        }
+        if resume && checkpoint.is_none() {
+            return Err(Error::Config(
+                "resume(true) requires a checkpoint() vault path".into(),
+            ));
         }
         let base = &cfg.base;
         let task = SynthTask::for_model(&base.model, base.seed);
@@ -260,6 +315,18 @@ impl FlBuilder {
             })
             .collect::<Result<Vec<_>>>()?;
 
+        // the capsule persists only each device's dispatch count — enough
+        // to fast-forward a deterministic stream, but a retention store's
+        // contents depend on model outputs at offer time, which a resume
+        // cannot replay; refuse rather than silently diverge
+        if checkpoint.is_some() && sources.iter().any(|s| s.retains()) {
+            return Err(Error::Config(
+                "FL checkpointing does not support retaining device sources \
+                 (set store_bytes = 0 and use non-retaining sources)"
+                    .into(),
+            ));
+        }
+
         let mut rt = ModelRuntime::load(&base.artifacts_dir, &base.model, RuntimeRole::Full)?;
         let mut global = rt.set.init_params()?;
         let mut strategy = make_strategy(base.method, base.select_threads);
@@ -285,7 +352,85 @@ impl FlBuilder {
         let mut dead = vec![false; cfg.num_devices];
         let mut fault_log: Vec<FlRoundFaults> = Vec::new();
 
-        for round in 0..cfg.comm_rounds {
+        let fingerprint = fl_fingerprint(&cfg);
+        let vault = checkpoint
+            .as_ref()
+            .map(|(path, every, keep)| (CheckpointVault::new(path, *keep), *every));
+        let mut start_round = 0usize;
+        if resume {
+            if let Some((v, _)) = vault.as_ref() {
+                if v.has_artifacts() {
+                    let (win, telemetry) = v.load_latest_valid();
+                    let win = win?;
+                    let at = win.path.display().to_string();
+                    let j = Json::parse(&win.text).map_err(|e| Error::Checkpoint {
+                        path: at.clone(),
+                        stage: "parse",
+                        detail: e.to_string(),
+                    })?;
+                    let capsule = FlCapsule::from_json(&j).map_err(|e| Error::Checkpoint {
+                        path: at.clone(),
+                        stage: "field",
+                        detail: e.to_string(),
+                    })?;
+                    // the frame codec already cross-checked the config
+                    // fingerprint for framed generations; re-checking here
+                    // also covers the unframed keep=1 / legacy layout
+                    let want = fingerprint.to_string_compact();
+                    let got = j.get("config").map(Json::to_string_compact).unwrap_or_default();
+                    if got != want {
+                        return Err(Error::Checkpoint {
+                            path: at.clone(),
+                            stage: "fingerprint",
+                            detail: "capsule was written by a different FL configuration".into(),
+                        });
+                    }
+                    if capsule.devices.len() != cfg.num_devices {
+                        return Err(Error::Checkpoint {
+                            path: at.clone(),
+                            stage: "field",
+                            detail: format!(
+                                "capsule has {} devices, run has {}",
+                                capsule.devices.len(),
+                                cfg.num_devices
+                            ),
+                        });
+                    }
+                    if capsule.params.len() != global.len() {
+                        return Err(Error::Checkpoint {
+                            path: at,
+                            stage: "field",
+                            detail: format!(
+                                "capsule has {} parameters, model has {}",
+                                capsule.params.len(),
+                                global.len()
+                            ),
+                        });
+                    }
+                    global = capsule.params;
+                    orchestrator_rng = Xoshiro256::from_state(capsule.rng)?;
+                    for (d, st) in capsule.devices.iter().enumerate() {
+                        dev_states[d].rounds_done = st.rounds_done;
+                        dev_states[d].last_run = st.last_run;
+                        dead[d] = st.dead;
+                        // fast-forward the device's deterministic stream:
+                        // rounds_done counts dispatches, each of which
+                        // consumed exactly one stream round — replaying
+                        // them also recomputes seen_per_class exactly
+                        for _ in 0..st.rounds_done {
+                            devices[d].stream_round(base.stream_per_round);
+                        }
+                    }
+                    record.curve = capsule.curve;
+                    start_round = capsule.round;
+                    if telemetry.degraded() {
+                        record.recovery = Some(telemetry);
+                    }
+                }
+            }
+        }
+
+        for round in start_round..cfg.comm_rounds {
             let chosen = orchestrator_rng.sample_indices(cfg.num_devices, per_round);
             // dropout filtering happens *after* sampling: the coordinator
             // samples blind (it cannot know who will fail), so the
@@ -440,6 +585,31 @@ impl FlBuilder {
                 }
                 record.curve.push(point);
             }
+            // durable capsule at cadence: everything the loop reads at
+            // `round + 1` — written through the vault's atomic-rename +
+            // generation-ring path, so a torn write can only cost the
+            // replay back to an older intact generation, never the run
+            if let Some((v, every)) = &vault {
+                if (round + 1) % every == 0 {
+                    let capsule = FlCapsule {
+                        round: round + 1,
+                        params: global.clone(),
+                        rng: orchestrator_rng.state(),
+                        devices: dev_states
+                            .iter()
+                            .zip(&dead)
+                            .map(|(st, &is_dead)| FlDeviceState {
+                                rounds_done: st.rounds_done,
+                                last_run: st.last_run,
+                                dead: is_dead,
+                            })
+                            .collect(),
+                        curve: record.curve.clone(),
+                    };
+                    let payload = capsule.to_json(fingerprint.clone()).to_string_compact();
+                    v.write(round + 1, &fingerprint.to_string_compact(), &payload)?;
+                }
+            }
             if stop {
                 break;
             }
@@ -450,6 +620,109 @@ impl FlBuilder {
         record.final_accuracy = final_eval.accuracy;
         record.total_host_ms = sw.elapsed_ms();
         Ok((record, fault_log))
+    }
+}
+
+// ---- checkpoint capsule ---------------------------------------------------
+
+/// FL-relevant configuration fingerprint embedded in every capsule as
+/// its `config` value: everything the comm-round loop and the default
+/// device partition read. Its compact serialization is also the vault
+/// frame's fingerprint string, so the frame codec rejects a generation
+/// written under a different configuration before the capsule is even
+/// parsed.
+fn fl_fingerprint(cfg: &FlConfig) -> Json {
+    Json::obj(vec![
+        ("titan_fl_checkpoint", Json::Num(1.0)),
+        ("model", Json::Str(cfg.base.model.clone())),
+        ("method", Json::Str(cfg.base.method.name().to_string())),
+        ("seed", u64_to_json(cfg.base.seed)),
+        ("num_devices", Json::Num(cfg.num_devices as f64)),
+        ("participation", Json::Num(cfg.participation)),
+        ("classes_per_device", Json::Num(cfg.classes_per_device as f64)),
+        ("local_iters", Json::Num(cfg.local_iters as f64)),
+        ("comm_rounds", Json::Num(cfg.comm_rounds as f64)),
+        ("stream_per_round", Json::Num(cfg.base.stream_per_round as f64)),
+        ("eval_every", Json::Num(cfg.base.eval_every as f64)),
+    ])
+}
+
+/// One device's dispatch state inside a capsule. `rounds_done` doubles
+/// as the stream fast-forward distance on resume: every dispatch
+/// consumed exactly one stream round.
+struct FlDeviceState {
+    rounds_done: usize,
+    last_run: u64,
+    dead: bool,
+}
+
+/// Resumable mid-run state of a federated deployment — one capsule per
+/// vault generation. The top-level `round` and `config` keys are load-
+/// bearing: the vault frame codec cross-checks both against its header.
+struct FlCapsule {
+    /// Comm rounds completed when the capsule was written (the resume
+    /// loop re-enters at this round).
+    round: usize,
+    params: Vec<f32>,
+    /// Orchestrator RNG state (sampling + selection share this stream).
+    rng: [u64; 4],
+    devices: Vec<FlDeviceState>,
+    curve: Vec<CurvePoint>,
+}
+
+impl FlCapsule {
+    fn to_json(&self, fingerprint: Json) -> Json {
+        Json::obj(vec![
+            ("round", Json::Num(self.round as f64)),
+            ("config", fingerprint),
+            // f32 -> f64 -> f32 is lossless, so Num carries params bit-exactly
+            ("params", Json::from_f32s(&self.params)),
+            ("rng", words_to_json(&self.rng)),
+            (
+                "devices",
+                Json::Arr(
+                    self.devices
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("rounds_done", Json::Num(d.rounds_done as f64)),
+                                ("last_run", u64_to_json(d.last_run)),
+                                ("dead", Json::Bool(d.dead)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("curve", Json::Arr(self.curve.iter().map(|p| p.to_json()).collect())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<FlCapsule> {
+        let devices = j
+            .get("devices")?
+            .as_arr()?
+            .iter()
+            .map(|d| {
+                Ok(FlDeviceState {
+                    rounds_done: d.get("rounds_done")?.as_usize()?,
+                    last_run: u64_from_json(d.get("last_run")?)?,
+                    dead: d.get("dead")?.as_bool()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let curve = j
+            .get("curve")?
+            .as_arr()?
+            .iter()
+            .map(CurvePoint::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(FlCapsule {
+            round: j.get("round")?.as_usize()?,
+            params: f32_list(j.get("params")?)?,
+            rng: words_from_json(j.get("rng")?)?,
+            devices,
+            curve,
+        })
     }
 }
 
@@ -744,5 +1017,151 @@ mod tests {
             assert_eq!(*x.x, *y.x);
         }
         assert!(ra.iter().all(|s| s.label < 3));
+    }
+
+    /// Capsule codec round-trip: params bit-exactly (f32 -> f64 -> f32
+    /// is lossless), RNG words at full 64-bit precision, device flags
+    /// and the curve all survive compact JSON.
+    #[test]
+    fn fl_capsule_roundtrips_through_json() {
+        let capsule = FlCapsule {
+            round: 3,
+            params: vec![0.125, -3.5, 1.0e-7, 0.300_000_01],
+            rng: [u64::MAX, 1, 0xDEAD_BEEF_DEAD_BEEF, 42],
+            devices: vec![
+                FlDeviceState { rounds_done: 2, last_run: 1, dead: false },
+                FlDeviceState { rounds_done: 0, last_run: 0, dead: true },
+            ],
+            curve: vec![CurvePoint {
+                round: 2,
+                device_ms: 0.0,
+                host_ms: 12.5,
+                train_loss: 0.75,
+                test_loss: 1.25,
+                test_accuracy: 0.5,
+            }],
+        };
+        let fp = fl_fingerprint(&tiny_fl(Method::Rs));
+        let text = capsule.to_json(fp.clone()).to_string_compact();
+        let j = Json::parse(&text).unwrap();
+        // the embedded config is the frame fingerprint, byte for byte
+        assert_eq!(j.get("config").unwrap().to_string_compact(), fp.to_string_compact());
+        assert_eq!(j.get("round").unwrap().as_usize().unwrap(), 3);
+        let back = FlCapsule::from_json(&j).unwrap();
+        assert_eq!(back.round, 3);
+        assert_eq!(back.params, capsule.params);
+        assert_eq!(back.rng, capsule.rng);
+        assert_eq!(back.devices.len(), 2);
+        assert_eq!(back.devices[0].rounds_done, 2);
+        assert_eq!(back.devices[0].last_run, 1);
+        assert!(!back.devices[0].dead && back.devices[1].dead);
+        assert_eq!(back.curve.len(), 1);
+        assert_eq!(back.curve[0].round, 2);
+        assert_eq!(back.curve[0].test_accuracy, 0.5);
+    }
+
+    // both guards fire before any artifact loading, so no gate
+    #[test]
+    fn rejects_resume_without_checkpoint() {
+        let err = FlBuilder::new(tiny_fl(Method::Rs)).resume(true).run().unwrap_err();
+        assert!(err.to_string().contains("checkpoint"), "got: {err}");
+    }
+
+    #[test]
+    fn rejects_checkpoint_with_retaining_sources() {
+        let mut cfg = tiny_fl(Method::Rs);
+        cfg.base.store_bytes = 1 << 14;
+        let dir = std::env::temp_dir().join("titan_fl_gate");
+        let err = FlBuilder::new(cfg)
+            .checkpoint(dir.join("fl.json"), 2, 2)
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().contains("retaining"), "got: {err}");
+    }
+
+    fn assert_curves_match(a: &RunRecord, b: &RunRecord) {
+        assert_eq!(a.curve.len(), b.curve.len());
+        for (x, y) in a.curve.iter().zip(&b.curve) {
+            assert_eq!(x.round, y.round);
+            assert_eq!(x.train_loss, y.train_loss);
+            assert_eq!(x.test_loss, y.test_loss);
+            assert_eq!(x.test_accuracy, y.test_accuracy);
+        }
+        assert_eq!(a.final_accuracy, b.final_accuracy);
+    }
+
+    /// Kill/resume equivalence: a run halted at its first eval leaves a
+    /// round-2 capsule behind; resuming fast-forwards the device streams,
+    /// restores the orchestrator RNG, finishes rounds 2..4, and matches
+    /// the uninterrupted run on every deterministic field.
+    #[test]
+    fn fl_checkpoint_resume_matches_uninterrupted() {
+        if !have_artifacts() {
+            return;
+        }
+        let dir = std::env::temp_dir().join("titan_fl_resume");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fl.json");
+        let full = FlBuilder::new(tiny_fl(Method::Rs)).run().unwrap();
+        let halted = FlBuilder::new(tiny_fl(Method::Rs))
+            .checkpoint(&path, 2, 2)
+            .observe(EarlyStop::at_accuracy(0.0))
+            .run()
+            .unwrap();
+        assert_eq!(halted.curve.len(), 1, "died at the first checkpoint");
+        let resumed = FlBuilder::new(tiny_fl(Method::Rs))
+            .checkpoint(&path, 2, 2)
+            .resume(true)
+            .run()
+            .unwrap();
+        assert!(resumed.recovery.is_none(), "a clean resume is not degraded");
+        assert_curves_match(&full, &resumed);
+        // resume with nothing on disk is a fresh start, not an error
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let fresh = FlBuilder::new(tiny_fl(Method::Rs))
+            .checkpoint(&path, 2, 2)
+            .resume(true)
+            .run()
+            .unwrap();
+        assert_curves_match(&full, &fresh);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The vault seam under FL: tear the newest generation (g2, comm
+    /// round 4) mid-payload; the resume walk rejects it, falls back to
+    /// g1 (comm round 2), replays the lost rounds to the identical
+    /// record, and reports the degradation as recovery telemetry.
+    #[test]
+    fn fl_torn_generation_falls_back_and_recovers() {
+        if !have_artifacts() {
+            return;
+        }
+        let dir = std::env::temp_dir().join("titan_fl_torn");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fl.json");
+        let full = FlBuilder::new(tiny_fl(Method::Rs))
+            .checkpoint(&path, 2, 2)
+            .run()
+            .unwrap();
+        let g2 = CheckpointVault::new(&path, 2).generation_path(2);
+        let len = std::fs::metadata(&g2).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&g2).unwrap();
+        f.set_len(len / 2).unwrap();
+        let resumed = FlBuilder::new(tiny_fl(Method::Rs))
+            .checkpoint(&path, 2, 2)
+            .resume(true)
+            .run()
+            .unwrap();
+        let rec = resumed.recovery.as_ref().expect("a torn walk is degraded");
+        assert_eq!(rec.frames_scanned, 2);
+        assert_eq!(rec.torn_frames, 1);
+        assert_eq!(rec.crc_failures, 0);
+        assert_eq!(rec.generation_used, 1);
+        assert_eq!(rec.rounds_lost, 2, "round-4 capsule lost, round-2 generation used");
+        assert_curves_match(&full, &resumed);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -64,7 +64,10 @@ fn print_usage() {
     println!("          [--select-threads N]  parallel Gram sweep (results identical)");
     println!("          [--feature-noise F | --label-noise F]");
     println!("          [--checkpoint FILE] [--checkpoint-every K]  snapshot every K rounds");
+    println!("          [--keep-checkpoints K]  checksummed generations kept (default 1");
+    println!("          = the plain single file; >=2 enables torn-write fallback)");
     println!("          [--resume FILE]     restart a killed run from its snapshot");
+    println!("          (resume walks the vault newest->oldest past corrupt generations)");
     println!("          [--halt-after N]    stop (resumable) after N rounds, no finish");
     println!("          [--store-bytes N]   byte-budgeted retention store (0 = off)");
     println!("          [--retention score|balanced|reservoir]  eviction policy");
@@ -75,18 +78,27 @@ fn print_usage() {
     println!("          [--pipelined]  (methods/sources cycle across the N sessions;");
     println!("          sessions interleave round-by-round on the host scheduler)");
     println!("          [--checkpoint-dir DIR] [--checkpoint-every K]  per-member snapshots");
+    println!("          [--keep-checkpoints K]  vault generations per member (default 1)");
     println!("          [--resume DIR]  restart each member at its own saved round");
     println!("          [--fault-seed N] [--crash-rate F] [--transient-rate F]");
     println!("          [--straggler-rate F] [--brownout-rate F] [--corrupt-rate F]");
+    println!("          [--torn-rate F] [--bitflip-rate F] [--stale-rate F]");
     println!("          deterministic fault injection per (session, round) cell");
-    println!("          [--supervise failfast|isolate|restart[:retries[:backoff]]]");
-    println!("          what the scheduler does about failures (default failfast)");
+    println!("          [--fault-script \"s:r:kind;...\"]  exact scripted cells, e.g.");
+    println!("          \"0:2:torn_write;0:3:crash\" (kinds: crash|transient|");
+    println!("          straggler:<slowdown>|brownout:<joules>|corrupt_checkpoint|");
+    println!("          torn_write|bit_flip|stale_rename)");
+    println!("          [--supervise failfast|isolate|restart[:retries[:backoff[:cap]]]]");
+    println!("          what the scheduler does about failures (default failfast;");
+    println!("          restart backoff doubles per retry up to cap)");
     println!("          [--host-threads T]  sharded work-stealing host: sessions step");
     println!("          op-by-op across T worker threads; records stay bit-identical");
     println!("          [--store-bytes N] [--retention P] [--replay-mix F]  per-member");
     println!("          retention stores (same flags as run)");
     println!("  exp     <id> [--fast] [--models a,b|all] [--seed N]   (exp list: ids)");
     println!("  fl      --model <m> --method <m> [--fast] [--store-bytes N]");
+    println!("          [--checkpoint-dir DIR] [--checkpoint-every N] [--keep-checkpoints K]");
+    println!("          [--resume]   vault-backed FL capsules, one per (model, method)");
     println!("  models  [--artifacts DIR]");
     println!("  verify  [--artifacts DIR]   cross-check artifacts vs golden.json");
 }
@@ -103,30 +115,68 @@ fn checkpoint_cadence(args: &Args) -> Result<usize> {
     Ok(every)
 }
 
+/// `--keep-checkpoints` as a validated vault depth (the vault asserts
+/// >= 1; a bad flag should be a config error, not a panic).
+fn keep_checkpoints(args: &Args) -> Result<usize> {
+    let keep = args.get_usize("keep-checkpoints", 1)?;
+    if keep == 0 {
+        return Err(titan::Error::Config(
+            "--keep-checkpoints must be >= 1".into(),
+        ));
+    }
+    Ok(keep)
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     use std::path::PathBuf;
     use titan::coordinator::session::observers::Checkpoint;
-    use titan::coordinator::snapshot::{load_checkpoint, Loaded};
+    use titan::coordinator::snapshot::{load_vault_checkpoint, Loaded};
+    use titan::coordinator::vault::CheckpointVault;
     use titan::coordinator::StepEvent;
 
+    let keep = keep_checkpoints(args)?;
     // --resume reconstructs the exact config from the snapshot instead of
     // trusting re-typed flags (config flags are ignored on resume; the
-    // fingerprint check would reject any drift anyway)
+    // fingerprint check would reject any drift anyway). The vault walks
+    // generations newest→oldest, so a torn newest frame falls back
+    // instead of aborting the resume.
     let resume_path = args.get("resume").map(PathBuf::from);
-    let (mut cfg, resume_snap) = match &resume_path {
-        Some(path) => match load_checkpoint(path)? {
-            Loaded::Resumable(snap) => (RunConfig::from_json(&snap.config)?, Some(snap)),
-            Loaded::Complete { round, final_accuracy, .. } => {
-                return Err(titan::Error::Config(format!(
-                    "{}: run already complete ({round} rounds, final acc {:.2}%) — \
-                     delete the checkpoint to start over",
-                    path.display(),
-                    final_accuracy * 100.0
-                )));
+    let (mut cfg, resume_snap, recovery) = match &resume_path {
+        Some(path) => {
+            let vault = CheckpointVault::new(path.clone(), keep);
+            let (loaded, telemetry) = load_vault_checkpoint(&vault)?;
+            match loaded {
+                Loaded::Resumable(snap) => {
+                    if telemetry.degraded() {
+                        println!(
+                            "degraded resume: generation {} won ({} frames scanned, \
+                             {} torn, {} checksum failures, {} rounds lost)",
+                            telemetry.generation_used,
+                            telemetry.frames_scanned,
+                            telemetry.torn_frames,
+                            telemetry.crc_failures,
+                            telemetry.rounds_lost
+                        );
+                    }
+                    (
+                        RunConfig::from_json(&snap.config)?,
+                        Some(snap),
+                        telemetry.degraded().then_some(telemetry),
+                    )
+                }
+                Loaded::Complete { round, final_accuracy, .. } => {
+                    return Err(titan::Error::Config(format!(
+                        "{}: run already complete ({round} rounds, final acc {:.2}%) — \
+                         delete the checkpoint to start over",
+                        path.display(),
+                        final_accuracy * 100.0
+                    )));
+                }
             }
-        },
+        }
         None => (
             presets::base(&args.get_str("model", "mlp")).apply_args(args)?,
+            None,
             None,
         ),
     };
@@ -145,7 +195,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     // checkpoint to the explicit --checkpoint path, or keep writing the
     // snapshot a resumed run came from
     if let Some(ck) = args.get("checkpoint").map(PathBuf::from).or(resume_path) {
-        builder = builder.observe(Checkpoint::every(ck, checkpoint_cadence(args)?));
+        builder = builder.observe(Checkpoint::every(ck, checkpoint_cadence(args)?).keep(keep));
     }
     if let Some(snap) = resume_snap {
         println!("resuming at round {}", snap.round);
@@ -173,7 +223,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    let (record, _) = builder.run()?;
+    let (mut record, _) = builder.run()?;
+    // a degraded resume is part of this run's story: stamp the vault
+    // telemetry so the emitted record carries it (clean runs stay
+    // byte-identical — no key at all)
+    record.recovery = recovery;
     println!(
         "finished {} rounds: final_acc={:.2}% device_time={:.1}s host_time={:.1}s",
         record.round_device_ms.len(),
@@ -251,6 +305,30 @@ fn fleet_fault_plan(args: &Args) -> Result<Option<titan::fault::FaultPlan>> {
     plan.straggler_rate = args.get_f64("straggler-rate", 0.0)?;
     plan.brownout_rate = args.get_f64("brownout-rate", 0.0)?;
     plan.corrupt_rate = args.get_f64("corrupt-rate", 0.0)?;
+    plan.torn_rate = args.get_f64("torn-rate", 0.0)?;
+    plan.bitflip_rate = args.get_f64("bitflip-rate", 0.0)?;
+    plan.stale_rate = args.get_f64("stale-rate", 0.0)?;
+    // --fault-script "session:round:kind;..." pins exact fault cells —
+    // the CI chaos legs script, say, a torn write then a crash, so the
+    // recovery path under test is the same on every run
+    if let Some(spec) = args.get("fault-script") {
+        for cell in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            let mut parts = cell.splitn(3, ':');
+            let (Some(s), Some(r), Some(kind)) = (parts.next(), parts.next(), parts.next())
+            else {
+                return Err(titan::Error::Config(format!(
+                    "bad --fault-script cell {cell:?} (want session:round:kind)"
+                )));
+            };
+            let session: usize = s.parse().map_err(|_| {
+                titan::Error::Config(format!("bad session in --fault-script cell {cell:?}"))
+            })?;
+            let round: usize = r.parse().map_err(|_| {
+                titan::Error::Config(format!("bad round in --fault-script cell {cell:?}"))
+            })?;
+            plan = plan.script(session, round, titan::fault::FaultKind::parse(kind)?);
+        }
+    }
     if args.get("fault-seed").is_none() && plan.is_zero() {
         return Ok(None);
     }
@@ -307,6 +385,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         .policy_boxed(policy)
         .supervise(supervise)
         .host_threads(host_threads)
+        // set before members are added: the vault depth is captured per
+        // member at registration time
+        .keep_checkpoints(keep_checkpoints(args)?)
         .observe(FleetProgress::every(10));
     if let Some(plan) = &fault_plan {
         fleet = fleet.fault_plan(plan.clone());
@@ -419,6 +500,13 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             f.restarts,
             f.quarantines,
             f.rounds_recovered
+        );
+    }
+    if let Some(r) = &record.recovery {
+        println!(
+            "recovery: {} frames scanned, {} torn, {} checksum failures, \
+             deepest generation used {}, {} rounds lost",
+            r.frames_scanned, r.torn_frames, r.crc_failures, r.generation_used, r.rounds_lost
         );
     }
     println!(

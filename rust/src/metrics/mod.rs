@@ -67,6 +67,10 @@ pub struct RunRecord {
     /// Cumulative retention-store telemetry — `Some` only when the run
     /// had a storage budget (`--store-bytes > 0`).
     pub retention: Option<RetentionTelemetry>,
+    /// Checkpoint-vault recovery telemetry — `Some` only when the run
+    /// resumed degraded (rejected frames, or an older generation / fresh
+    /// start winning over a corrupt newest artifact).
+    pub recovery: Option<crate::coordinator::vault::RecoveryTelemetry>,
 }
 
 impl RunRecord {
@@ -128,16 +132,23 @@ impl RunRecord {
         if let Some(t) = &self.retention {
             fields.push(("retention", t.to_json()));
         }
+        // likewise only degraded resumes carry the recovery key: a clean
+        // run's record stays byte-identical to pre-vault builds
+        if let Some(t) = &self.recovery {
+            fields.push(("recovery", t.to_json()));
+        }
         Json::obj(fields)
     }
 }
 
-/// Write a JSON value under results/, creating the directory.
+/// Write a JSON value under results/, creating the directory. Results
+/// are regenerable outputs, so they go through the plain (non-fsynced)
+/// durable-io seam rather than the checkpoint vault.
 pub fn write_result(name: &str, value: &Json) -> crate::Result<std::path::PathBuf> {
     let dir = Path::new("results");
     std::fs::create_dir_all(dir)?;
     let path = dir.join(format!("{name}.json"));
-    std::fs::write(&path, value.to_string_pretty())?;
+    crate::util::durable_io::write_plain(&path, value.to_string_pretty().as_bytes())?;
     Ok(path)
 }
 
@@ -146,7 +157,7 @@ pub fn write_csv(name: &str, header: &[&str], rows: &[Vec<String>]) -> crate::Re
     let dir = Path::new("results");
     std::fs::create_dir_all(dir)?;
     let path = dir.join(format!("{name}.csv"));
-    let mut f = std::fs::File::create(&path)?;
+    let mut f = crate::util::durable_io::create_file(&path)?;
     writeln!(f, "{}", header.join(","))?;
     for row in rows {
         writeln!(f, "{}", row.join(","))?;
@@ -229,6 +240,24 @@ mod tests {
         r.retention = Some(RetentionTelemetry { offers: 9, admits: 4, ..Default::default() });
         let j = r.to_json();
         assert_eq!(j.get("retention").unwrap().get("offers").unwrap().as_usize().unwrap(), 9);
+    }
+
+    #[test]
+    fn recovery_key_only_for_recovered_runs() {
+        use crate::coordinator::vault::RecoveryTelemetry;
+        let mut r = record_with_curve();
+        assert!(!r.to_json().to_string_compact().contains("\"recovery\""));
+        r.recovery = Some(RecoveryTelemetry {
+            frames_scanned: 2,
+            torn_frames: 1,
+            generation_used: 1,
+            rounds_lost: 3,
+            ..Default::default()
+        });
+        let j = r.to_json();
+        let rec = j.get("recovery").unwrap();
+        assert_eq!(rec.get("rounds_lost").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(rec.get("generation_used").unwrap().as_usize().unwrap(), 1);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 #![allow(clippy::disallowed_methods)]
 
 use std::hint::black_box as bb;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
@@ -156,7 +157,9 @@ impl Bencher {
         let _ = std::fs::create_dir_all("results");
         let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
         let path = format!("results/bench_{}.json", self.group);
-        if std::fs::write(&path, arr.to_string_pretty()).is_ok() {
+        if crate::util::durable_io::write_plain(Path::new(&path), arr.to_string_pretty().as_bytes())
+            .is_ok()
+        {
             println!("-- results written to {path}");
         }
     }

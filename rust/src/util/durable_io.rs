@@ -1,0 +1,170 @@
+//! The blessed durable-write seam: every byte this crate persists goes
+//! through here (detlint rule R003 flags raw `std::fs::write` /
+//! `File::create` anywhere else under `rust/src/`).
+//!
+//! Two write disciplines:
+//!
+//! - [`write_atomic`]: unique temp file + rename, for state a crash must
+//!   never destroy (checkpoints, vault generations). An interruption
+//!   mid-write leaves the previous file intact; concurrent writers to
+//!   the same destination cannot rename each other's half-written temp
+//!   into place because every temp name is unique per call and process.
+//!   With `TITAN_FSYNC=1` the temp file (and, on Unix, its directory)
+//!   is fsynced before/after the rename so the bytes survive power
+//!   loss, not just process death — see PERF.md for the cost.
+//! - [`write_plain`] / [`create_file`]: ordinary writes for replaceable
+//!   outputs (result JSON, CSV exports, bench reports) that are cheap
+//!   to regenerate and never resumed from.
+//!
+//! [`sweep_stale_tmp`] reclaims temp files a kill orphaned between
+//! write and rename: temp names are unique per incarnation, so nothing
+//! else would ever collect them across crash/resume cycles.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// Distinguishes concurrent writers within one process; the pid in the
+/// temp name handles concurrent processes.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Whether durable writes fsync (`TITAN_FSYNC=1`); read once per
+/// process so the hot snapshot path never touches the environment.
+pub fn fsync_enabled() -> bool {
+    static FSYNC: OnceLock<bool> = OnceLock::new();
+    *FSYNC.get_or_init(|| {
+        std::env::var("TITAN_FSYNC").map(|v| v == "1").unwrap_or(false)
+    })
+}
+
+/// `<path>.<pid>.<seq>.tmp` — unique per call and process, so writers
+/// sharing a destination stem can never race on one temp file.
+pub fn unique_tmp(path: &Path) -> PathBuf {
+    let mut name = path.as_os_str().to_owned();
+    name.push(format!(
+        ".{}.{}.tmp",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    PathBuf::from(name)
+}
+
+/// Remove `<file_name>.*.tmp` siblings left by earlier incarnations.
+/// Best-effort: a survivor is re-swept at the next start.
+pub fn sweep_stale_tmp(path: &Path) {
+    let (Some(dir), Some(stem)) = (path.parent(), path.file_name()) else {
+        return;
+    };
+    let Some(stem) = stem.to_str() else { return };
+    let dir = if dir.as_os_str().is_empty() { Path::new(".") } else { dir };
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if name.len() > stem.len() + 1
+            && name.starts_with(stem)
+            && name.as_bytes()[stem.len()] == b'.'
+            && name.ends_with(".tmp")
+        {
+            // detlint: allow(R002) best-effort orphan sweep; a survivor is re-swept next start
+            let _ = std::fs::remove_file(entry.path());
+        }
+    }
+}
+
+/// Atomic replace: write `bytes` to a unique temp sibling, optionally
+/// fsync it, and rename it over `path`. On any failure the temp file is
+/// removed and the previous `path` contents are untouched.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let tmp = unique_tmp(path);
+    let result = write_and_rename(&tmp, path, bytes);
+    if result.is_err() {
+        // detlint: allow(R002) best-effort temp cleanup after a reported failure
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+fn write_and_rename(tmp: &Path, path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    {
+        let mut f = File::create(tmp)?;
+        f.write_all(bytes)?;
+        if fsync_enabled() {
+            f.sync_all()?;
+        }
+    }
+    std::fs::rename(tmp, path)?;
+    if fsync_enabled() {
+        // persist the rename itself: fsync the containing directory
+        // (no-op on platforms where directories cannot be opened)
+        if let Some(dir) = path.parent() {
+            let dir = if dir.as_os_str().is_empty() { Path::new(".") } else { dir };
+            if let Ok(d) = File::open(dir) {
+                // detlint: allow(R002) some filesystems refuse directory fsync; data fsync already ran
+                let _ = d.sync_all();
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Plain (non-atomic) write for regenerable outputs — results, CSVs,
+/// bench reports. Not for anything a resume path reads back.
+pub fn write_plain(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    std::fs::write(path, bytes)
+}
+
+/// Blessed `File::create` for streaming writers (CSV export). Same
+/// caveat as [`write_plain`]: replaceable outputs only.
+pub fn create_file(path: &Path) -> std::io::Result<File> {
+    File::create(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn temp_names_are_unique_per_call() {
+        let p = Path::new("/tmp/titan_durable_io.json");
+        assert_ne!(unique_tmp(p), unique_tmp(p));
+        assert!(unique_tmp(p).to_str().unwrap().ends_with(".tmp"));
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join("titan_durable_io_atomic");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        write_atomic(&path, b"one").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"one");
+        write_atomic(&path, b"two").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"two");
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_str().unwrap().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files survived: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_tmp_sweep_reclaims_orphans() {
+        let dir = std::env::temp_dir().join("titan_durable_io_sweep");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.json");
+        let orphan = dir.join("ck.json.1234.9.tmp");
+        std::fs::write(&orphan, b"half").unwrap();
+        let unrelated = dir.join("other.json.1.0.tmp");
+        std::fs::write(&unrelated, b"keep").unwrap();
+        sweep_stale_tmp(&path);
+        assert!(!orphan.exists(), "orphan not swept");
+        assert!(unrelated.exists(), "sweep must only touch its own stem");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

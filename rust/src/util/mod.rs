@@ -6,6 +6,7 @@
 pub mod bench;
 pub mod cli;
 pub mod clock;
+pub mod durable_io;
 pub mod json;
 pub mod logging;
 pub mod prop;

@@ -483,7 +483,7 @@ fn zero_rate_fault_plan_is_bit_identical_under_every_supervision() {
     for supervise in [
         SupervisionPolicy::FailFast,
         SupervisionPolicy::Isolate,
-        SupervisionPolicy::Restart { max_retries: 3, backoff_rounds: 1 },
+        SupervisionPolicy::Restart { max_retries: 3, backoff_rounds: 1, backoff_cap: 32 },
     ] {
         let mut fleet = FleetBuilder::new()
             .supervise(supervise)
@@ -567,7 +567,11 @@ fn crashed_member_recovers_identically_under_restart_supervision() {
     // the latest snapshot is round 2, so the restart replays one round
     let plan = FaultPlan::new(2).script(0, 3, FaultKind::Crash);
     let mut fleet = FleetBuilder::new()
-        .supervise(SupervisionPolicy::Restart { max_retries: 3, backoff_rounds: 1 })
+        .supervise(SupervisionPolicy::Restart {
+            max_retries: 3,
+            backoff_rounds: 1,
+            backoff_cap: 32,
+        })
         .fault_plan(plan);
     for i in 0..3 {
         fleet = fleet
@@ -592,6 +596,75 @@ fn crashed_member_recovers_identically_under_restart_supervision() {
     // the replayed round shows up in the fleet's executed-round counts
     assert_eq!(record.session_rounds, vec![7, 4, 5]);
     assert_eq!(record.rounds_executed, 16);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The vault's ISSUE pin: a torn newest generation plus a crash falls
+/// back to the previous generation under restart supervision, replays
+/// the lost rounds, finishes with records identical to the solo runs,
+/// and surfaces the degradation as recovery telemetry on both the
+/// member's record and the fleet aggregate.
+#[test]
+fn torn_checkpoint_falls_back_a_generation_and_recovers() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = std::env::temp_dir().join("titan_fleet_torn");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = |i: usize| dir.join(format!("s{i}.json"));
+
+    let solo: Vec<RunRecord> = (0..3).map(|i| fleet_member(i).run().unwrap().0).collect();
+
+    // member 0 (6 rounds, cadence-2 checkpoints, keep=2): after its round
+    // 4 the vault holds generations g1 (round 2) and g2 (round 4). The
+    // scripted torn write truncates g2; the crash one round later forces
+    // a restart whose vault walk rejects g2 and resumes from g1.
+    let plan = FaultPlan::new(3)
+        .script(0, 4, FaultKind::TornWrite)
+        .script(0, 5, FaultKind::Crash);
+    let mut fleet = FleetBuilder::new()
+        .supervise(SupervisionPolicy::Restart {
+            max_retries: 3,
+            backoff_rounds: 1,
+            backoff_cap: 32,
+        })
+        .fault_plan(plan)
+        .keep_checkpoints(2);
+    for i in 0..3 {
+        fleet = fleet
+            .session_checkpointed_restartable(
+                format!("s{i}"),
+                move || Ok(fleet_member_builder(i)),
+                path(i),
+                2,
+                false,
+            )
+            .unwrap();
+    }
+    let record = fleet.run().unwrap();
+    assert!(record.statuses.iter().all(|s| s.is_finished()), "{:?}", record.statuses);
+    for (f, s) in record.records.iter().zip(&solo) {
+        assert_records_equivalent(f.as_ref().unwrap(), s);
+    }
+    assert_eq!(record.faults.corruptions, 1);
+    assert_eq!(record.faults.crashes, 1);
+    assert_eq!(record.faults.restarts, 1);
+    assert_eq!(record.faults.quarantines, 0);
+    // resumed from the round-2 generation: rounds 3..5 replay
+    assert_eq!(record.faults.rounds_recovered, 3);
+    assert_eq!(record.session_rounds, vec![9, 4, 5]);
+    assert_eq!(record.rounds_executed, 18);
+    // the degraded resume is visible on the member's record...
+    let rec = record.records[0].as_ref().unwrap().recovery.as_ref().unwrap();
+    assert_eq!(rec.frames_scanned, 2);
+    assert_eq!(rec.torn_frames, 1);
+    assert_eq!(rec.crc_failures, 0);
+    assert_eq!(rec.generation_used, 1);
+    // ...and on the fleet aggregate, while untouched members stay clean
+    assert_eq!(record.recovery.as_ref(), Some(rec));
+    assert!(record.records[1].as_ref().unwrap().recovery.is_none());
+    assert!(record.records[2].as_ref().unwrap().recovery.is_none());
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -654,7 +727,11 @@ fn fleet_records_identical_across_host_threads() {
         // restart replays exactly one round, on whichever worker admits it
         let plan = FaultPlan::new(2).script(0, 3, FaultKind::Crash);
         let mut fleet = FleetBuilder::new()
-            .supervise(SupervisionPolicy::Restart { max_retries: 3, backoff_rounds: 1 })
+            .supervise(SupervisionPolicy::Restart {
+                max_retries: 3,
+                backoff_rounds: 1,
+                backoff_cap: 32,
+            })
             .fault_plan(plan)
             .host_threads(threads);
         for i in 0..3 {

@@ -23,11 +23,17 @@
 #      fault seed under restart supervision diff clean on every
 #      deterministic FleetRecord field, telemetry included
 #      (artifact-gated)
-#   9. fleet-scale smoke          the same fleet on --host-threads 1 and
+#   9. recovery smoke             a scripted torn write shreds the newest
+#      checkpoint generation and a crash forces a restart: the vault
+#      must fall back to the previous generation, replay the lost
+#      rounds, and converge to a record that diffs clean (--recovered)
+#      against the uninterrupted reference — recovery telemetry present,
+#      correctness untouched (artifact-gated)
+#  10. fleet-scale smoke          the same fleet on --host-threads 1 and
 #      --host-threads 4: the sharded work-stealing host must produce a
 #      record that diffs clean against the single-thread host on every
 #      deterministic FleetRecord field (artifact-gated)
-#  10. bench smoke                every bench target in fast mode
+#  11. bench smoke                every bench target in fast mode
 #      (TITAN_BENCH_FAST=1 via scripts/bench_smoke.sh; catches bench
 #      bit-rot without paying full measurement windows), then the
 #      speedup regression gate: bench_report.py --check-only fails if
@@ -151,6 +157,32 @@ if [ -f artifacts/mlp/meta.json ]; then
     "$chaos_dir/chaos_a.json" "$chaos_dir/chaos_b.json"
 else
   echo "skipping chaos smoke: no artifacts (run \`make artifacts\`)"
+fi
+
+echo "== recovery smoke =="
+if [ -f artifacts/mlp/meta.json ]; then
+  rec_dir="results/recovery_smoke"
+  rm -rf "$rec_dir"
+  mkdir -p "$rec_dir"
+  rec_flags=(fleet --sessions 3 --rounds 6 --eval-every 2 --test-size 200 \
+    --policy fewest --checkpoint-every 2 --keep-checkpoints 2 \
+    --supervise restart:2:1:8)
+  # uninterrupted reference: same members, same vault config, no faults
+  cargo run --release --quiet -- "${rec_flags[@]}" \
+    --checkpoint-dir "$rec_dir/ck_ref"
+  mv results/fleet.json "$rec_dir/reference.json"
+  # member 0: a torn write shreds its newest generation (g2, round 4)
+  # after round 4, and a crash one round later forces a restart — the
+  # vault must reject the torn frame, resume from the round-2
+  # generation, replay the lost rounds, and converge to the same record
+  cargo run --release --quiet -- "${rec_flags[@]}" \
+    --checkpoint-dir "$rec_dir/ck_chaos" \
+    --fault-seed 11 --fault-script "0:4:torn_write;0:5:crash"
+  mv results/fleet.json "$rec_dir/recovered.json"
+  python3 "$script_dir/diff_records.py" --fleet --recovered \
+    "$rec_dir/reference.json" "$rec_dir/recovered.json"
+else
+  echo "skipping recovery smoke: no artifacts (run \`make artifacts\`)"
 fi
 
 echo "== fleet-scale smoke =="

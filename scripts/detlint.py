@@ -34,6 +34,10 @@ Rules
         The fault-supervision plane turns failures into SessionStatus;
         aborts bypass it.
   R002  `let _ =` silently discarding a value (usually a Result).
+  R003  raw file write (`std::fs::write` / `File::create`) outside the
+        blessed durability seam util/durable_io.rs. A raw write is
+        neither atomic nor torn-write safe; checkpoints go through the
+        vault, everything else through durable_io's helpers.
   C001  narrowing numeric cast (`as f32`, float `as usize`/ints) on a
         record/telemetry path — use a checked conversion or document the
         invariant.
@@ -89,6 +93,7 @@ RULES = {
     "D005": "unscoped thread creation outside the coordinator threading seam",
     "R001": ".unwrap()/.expect()/panic! in non-test library code",
     "R002": "value silently discarded with `let _ =`",
+    "R003": "raw file write outside the blessed durability seam (util::durable_io)",
     "C001": "narrowing numeric cast on a record/telemetry path",
     "P001": "malformed detlint pragma (unknown rule or missing reason)",
 }
@@ -100,6 +105,7 @@ SCOPE = {
     "d004_blessed": ("util/simd.rs", "util/stats.rs"),
     "d005_allowed": ("coordinator/host.rs", "coordinator/pipeline.rs", "coordinator/session.rs"),
     "c001_scope": ("coordinator/", "metrics/", "retention/", "fl/", "fault/"),
+    "r003_blessed": ("util/durable_io.rs",),
 }
 
 
@@ -314,6 +320,7 @@ RE_D005 = re.compile(r"\bthread\s*::\s*(?:spawn\s*\(|Builder\b)")
 #  `expect(b'{')` methods stay unflagged.
 RE_R001 = re.compile(r"\.\s*unwrap\s*\(\s*\)|\.\s*expect\s*\(\s*(?:\"|&?\s*format!)|\bpanic!\s*[(\[{]")
 RE_R002 = re.compile(r"^\s*let\s+_\s*=")
+RE_R003 = re.compile(r"\bfs\s*::\s*write\s*\(|\bFile\s*::\s*create\s*\(")
 RE_C001_F32 = re.compile(r"\bas\s+f32\b")
 RE_C001_INT = re.compile(r"(?:\bf(?:32|64)\b|\d\.\d*)\s+as\s+(?:usize|u(?:8|16|32|64|128)|i(?:8|16|32|64|128))\b")
 
@@ -425,6 +432,8 @@ def scan_file(rel, text):
             hit(i, "R001", RULES["R001"])
         if RE_R002.search(line):
             hit(i, "R002", RULES["R002"])
+        if RE_R003.search(line) and not in_scope(rel, SCOPE["r003_blessed"]):
+            hit(i, "R003", RULES["R003"])
         if in_scope(rel, SCOPE["c001_scope"]) and (RE_C001_F32.search(line) or RE_C001_INT.search(line)):
             hit(i, "C001", RULES["C001"])
 

@@ -13,9 +13,19 @@ per-session status/rounds/record plus the fault telemetry are compared,
 which is what the CI chaos smoke uses to pin that the same fault seed
 reproduces the same fleet outcome, and that a zero-rate fault plan is
 identical to no plan at all (the `fault_plan` key itself is ignored for
-exactly that comparison).
+exactly that comparison). The checkpoint-vault `recovery` telemetry is
+deterministic under a fixed fault script, so it is compared too.
 
-Usage: diff_records.py [--fleet] REFERENCE.json GOT.json
+With --recovered, GOT is a run that survived checkpoint corruption and
+recovered from an older vault generation, while REFERENCE ran
+uninterrupted: the fields a recovery legitimately changes (replayed
+round counts, fault telemetry, the recovery block itself) are skipped,
+GOT must actually carry recovery telemetry, and everything else —
+curves, accuracy, energy, memory — must still match exactly. This is
+the CI corruption-recovery leg's oracle: falling back a generation may
+cost replayed rounds, never correctness.
+
+Usage: diff_records.py [--fleet] [--recovered] REFERENCE.json GOT.json
 Exits 0 when the deterministic fields match exactly, 1 otherwise.
 """
 import json
@@ -33,6 +43,9 @@ DETERMINISTIC_TOP = [
     # cumulative RetentionTelemetry (counts + bytes; absent for
     # unbudgeted runs, and absence must match too)
     "retention",
+    # vault RecoveryTelemetry (absent for clean runs; deterministic
+    # under a fixed fault script, so absence must match too)
+    "recovery",
 ]
 DETERMINISTIC_CURVE = [
     "round",
@@ -51,6 +64,7 @@ DETERMINISTIC_FLEET_TOP = [
     "peak_memory_bytes",
     "faults",
     "retention",
+    "recovery",
 ]
 DETERMINISTIC_SESSION = [
     "name",
@@ -60,11 +74,19 @@ DETERMINISTIC_SESSION = [
     "reason",
 ]
 
+# Fields a degraded-but-correct recovery legitimately changes versus an
+# uninterrupted reference run (--recovered mode).
+RECOVERED_SKIP_TOP = {"recovery"}
+RECOVERED_SKIP_FLEET = {"rounds_executed", "device_ops", "faults", "recovery"}
+RECOVERED_SKIP_SESSION = {"rounds"}
 
-def diff_run_record(ref, got, prefix=""):
+
+def diff_run_record(ref, got, prefix="", skip=frozenset()):
     """Failures on a single RunRecord's deterministic fields."""
     failures = []
     for key in DETERMINISTIC_TOP:
+        if key in skip:
+            continue
         if ref.get(key) != got.get(key):
             failures.append(f"{prefix}{key}: {ref.get(key)!r} != {got.get(key)!r}")
 
@@ -82,13 +104,20 @@ def diff_run_record(ref, got, prefix=""):
     return failures
 
 
-def diff_fleet_record(ref, got):
+def diff_fleet_record(ref, got, recovered=False):
     """Failures on a FleetRecord's deterministic fields (host clocks and
     the serialized fault plan ignored)."""
     failures = []
+    skip_top = RECOVERED_SKIP_FLEET if recovered else frozenset()
+    skip_session = RECOVERED_SKIP_SESSION if recovered else frozenset()
+    skip_record = RECOVERED_SKIP_TOP if recovered else frozenset()
     for key in DETERMINISTIC_FLEET_TOP:
+        if key in skip_top:
+            continue
         if ref.get(key) != got.get(key):
             failures.append(f"{key}: {ref.get(key)!r} != {got.get(key)!r}")
+    if recovered and "recovery" not in got:
+        failures.append("recovery: recovered fleet carries no recovery telemetry")
 
     ref_sessions = ref.get("sessions", [])
     got_sessions = got.get("sessions", [])
@@ -99,6 +128,8 @@ def diff_fleet_record(ref, got):
         return failures
     for i, (a, b) in enumerate(zip(ref_sessions, got_sessions)):
         for key in DETERMINISTIC_SESSION:
+            if key in skip_session:
+                continue
             if a.get(key) != b.get(key):
                 failures.append(
                     f"sessions[{i}].{key}: {a.get(key)!r} != {b.get(key)!r}"
@@ -109,14 +140,17 @@ def diff_fleet_record(ref, got):
                 f"sessions[{i}].record: one present, the other null"
             )
         elif ra is not None:
-            failures.extend(diff_run_record(ra, rb, f"sessions[{i}].record."))
+            failures.extend(
+                diff_run_record(ra, rb, f"sessions[{i}].record.", skip_record)
+            )
     return failures
 
 
 def main():
     argv = sys.argv[1:]
     fleet = "--fleet" in argv
-    argv = [a for a in argv if a != "--fleet"]
+    recovered = "--recovered" in argv
+    argv = [a for a in argv if a not in ("--fleet", "--recovered")]
     if len(argv) != 2:
         sys.exit(__doc__)
     with open(argv[0]) as f:
@@ -125,17 +159,25 @@ def main():
         got = json.load(f)
 
     if fleet:
-        failures = diff_fleet_record(ref, got)
+        failures = diff_fleet_record(ref, got, recovered)
         summary = (
             f"fleet records match on {len(DETERMINISTIC_FLEET_TOP)} scalar "
             f"fields and {len(ref.get('sessions', []))} sessions"
         )
+        if recovered:
+            summary += " (recovered-run fields skipped)"
     else:
-        failures = diff_run_record(ref, got)
+        failures = diff_run_record(
+            ref, got, skip=RECOVERED_SKIP_TOP if recovered else frozenset()
+        )
+        if recovered and "recovery" not in got:
+            failures.append("recovery: recovered run carries no recovery telemetry")
         summary = (
             f"records match on {len(DETERMINISTIC_TOP)} scalar fields and "
             f"{len(ref.get('curve', []))} curve points"
         )
+        if recovered:
+            summary += " (recovered-run fields skipped)"
 
     if failures:
         print("records diverge on deterministic fields:")

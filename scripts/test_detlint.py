@@ -180,6 +180,7 @@ class FixtureCorpusTests(unittest.TestCase):
         "d005.rs": "D005",
         "r001.rs": "R001",
         "r002.rs": "R002",
+        "r003.rs": "R003",
         "coordinator/c001.rs": "C001",
         "p001.rs": "P001",
     }

@@ -1,0 +1,10 @@
+//! Blessed durability seam: the one module where raw file writes are
+//! allowed (R003 scope) — everything else routes through its helpers.
+
+pub fn write_plain(path: &std::path::Path, bytes: &[u8]) -> std::io::Result<()> {
+    std::fs::write(path, bytes)
+}
+
+pub fn create_file(path: &std::path::Path) -> std::io::Result<std::fs::File> {
+    std::fs::File::create(path)
+}

@@ -1,0 +1,9 @@
+//! R003 fixture: raw, non-atomic file writes outside util/durable_io.
+
+pub fn save(path: &str, payload: &str) -> std::io::Result<()> {
+    std::fs::write(path, payload)
+}
+
+pub fn open_fresh(path: &str) -> std::io::Result<std::fs::File> {
+    std::fs::File::create(path)
+}
